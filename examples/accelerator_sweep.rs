@@ -1,0 +1,89 @@
+//! Design-space exploration: how accelerator capacity (`nbop_PE`, i.e. the
+//! group size) and memory trade off against offload duration across layers.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_sweep
+//! ```
+//!
+//! For each preset layer, sweeps the group size, reports δ for every
+//! heuristic plus the polished optimizer, and prints the paper's derived
+//! quantities (K_min, on-chip footprint). This is the “help designers deploy
+//! convolution layers” use-case of §1.3, plus the write-back-policy ablation
+//! from DESIGN.md §8.
+
+use convoffload::config::list_presets;
+use convoffload::optimizer::{grouping_duration, OptimizeOptions, Optimizer};
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::Simulator;
+use convoffload::strategy::{self, WritebackPolicy};
+
+fn main() {
+    let groups = [1usize, 2, 4, 8];
+
+    for preset in list_presets() {
+        let layer = preset.layer;
+        // keep the sweep fast on the big layers
+        if layer.n_patches() > 1000 {
+            continue;
+        }
+        println!("== {} : {layer}", preset.name);
+        println!(
+            "{:>6} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}",
+            "group", "K_min", "s1-baseline", "row-by-row", "zigzag", "hilbert", "opl", "mem(el)"
+        );
+        for &g in &groups {
+            let acc = Accelerator::for_group_size(&layer, g);
+            let base = grouping_duration(&layer, &acc, &strategy::s1_baseline(&layer).groups);
+            let row = grouping_duration(&layer, &acc, &strategy::row_by_row(&layer, g).groups);
+            let zig = grouping_duration(&layer, &acc, &strategy::zigzag(&layer, g).groups);
+            let hil = grouping_duration(&layer, &acc, &strategy::hilbert(&layer, g).groups);
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: g,
+                anneal_iters: 40_000,
+                ..Default::default()
+            });
+            let res = opt.optimize(&layer, &acc);
+            println!(
+                "{:>6} {:>7} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}",
+                g,
+                acc.k_min(&layer),
+                base,
+                row,
+                zig,
+                hil,
+                res.duration,
+                acc.size_mem
+            );
+        }
+
+        // Write-back policy ablation (S1-baseline leaves W_i unspecified;
+        // we quantify both choices on the zigzag strategy, group 4).
+        let g = 4;
+        let acc = Accelerator {
+            // deferred write-back keeps all outputs on chip: size the memory
+            // for the worst case so both policies simulate
+            size_mem: Accelerator::for_group_size(&layer, g).size_mem
+                + (layer.n_patches() * layer.c_out()) as u64,
+            t_w: 1, // charge writes so the policies differ in cost model too
+            ..Accelerator::for_group_size(&layer, g)
+        };
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let mut every = strategy::zigzag(&layer, g);
+        every.writeback = WritebackPolicy::EveryStep;
+        let mut at_end = strategy::zigzag(&layer, g);
+        at_end.writeback = WritebackPolicy::AtEnd;
+        let r1 = sim.run(&every).expect("every-step policy");
+        let r2 = sim.run(&at_end).expect("at-end policy");
+        println!(
+            "   write-back ablation (zigzag g=4, t_w=1): every-step δ={} peak={} | at-end δ={} peak={}",
+            r1.duration, r1.peak_occupancy, r2.duration, r2.peak_occupancy
+        );
+        assert_eq!(
+            r1.duration, r2.duration,
+            "same elements written in total → same δ; only the peak differs"
+        );
+        assert!(r2.peak_occupancy >= r1.peak_occupancy);
+        println!();
+    }
+    println!("accelerator_sweep OK");
+}

@@ -1,0 +1,157 @@
+//! End-to-end driver: offload BOTH LeNet-5 convolution layers step by step
+//! through the full three-layer stack, with the per-step compute running on
+//! the AOT-compiled XLA executables via PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example lenet_pipeline
+//! ```
+//!
+//! This is the repo's end-to-end validation (DESIGN.md §5): for every layer
+//! it (1) picks a strategy per the accelerator's capacity, (2) validates it,
+//! (3) runs the *functional* simulation where every step's MACs execute on
+//! the PJRT CPU client (falling back to the Rust oracle when artifacts are
+//! absent), (4) checks the assembled output against the whole-layer
+//! reference — and also against the whole-layer AOT artifact — and
+//! (5) reports δ, bandwidth and memory, plus wall-clock throughput.
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use convoffload::config::layer_preset;
+use convoffload::conv::reference;
+use convoffload::optimizer::{OptimizeOptions, Optimizer};
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::runtime::{artifacts_available, PjrtBackend, Runtime};
+use convoffload::sim::{ComputeBackend, RustOracleBackend, Simulator};
+use convoffload::strategy;
+
+fn main() {
+    let use_pjrt = artifacts_available();
+    if !use_pjrt {
+        println!("NOTE: artifacts/ missing — compute falls back to the rust oracle.");
+        println!("      run `make artifacts` for the full PJRT path.\n");
+    }
+
+    let mut total_macs = 0u64;
+    let mut total_wall = 0.0f64;
+
+    for (preset_name, group) in [("lenet5-conv1", 4), ("lenet5-conv2", 4)] {
+        let preset = layer_preset(preset_name).expect("preset exists");
+        let layer = preset.layer;
+        let acc = Accelerator::for_group_size(&layer, group);
+        println!("== {preset_name}: {layer}");
+        println!(
+            "   accelerator: nbop_PE={} size_MEM={} → K_min={} steps",
+            acc.nbop_pe,
+            acc.size_mem,
+            acc.k_min(&layer)
+        );
+
+        // Strategy: polished optimizer output for conv2 (small |X|),
+        // zigzag for conv1 (784 patches — heuristic regime, like the paper).
+        let strat = if layer.n_patches() <= 144 {
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: group,
+                anneal_iters: 100_000,
+                ..Default::default()
+            });
+            let res = opt.optimize(&layer, &acc);
+            println!(
+                "   strategy: {} (method {:?}, gain over heuristics {:.1}%)",
+                res.strategy.name,
+                res.method,
+                res.gain_over_heuristics() * 100.0
+            );
+            res.strategy
+        } else {
+            let s = strategy::zigzag(&layer, group);
+            println!("   strategy: {}", s.name);
+            s
+        };
+
+        // Validate against the formalism (reload bound = H_K for scans).
+        let check = strategy::validate(&layer, &acc, &strat, layer.h_k as u32);
+        assert!(check.is_valid(), "strategy must validate: {:?}", check.violations);
+
+        // Synthetic input/weights (deterministic).
+        let input = reference::synth_tensor(layer.input_dims().len(), 42);
+        let kernels = reference::synth_tensor(layer.kernel_elements(), 43);
+
+        // Functional run on the selected backend.
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let t0 = Instant::now();
+        let report = if use_pjrt {
+            let mut backend = PjrtBackend::from_default_dir().expect("runtime");
+            sim.run_functional(&strat, &input, &kernels, &mut backend)
+        } else {
+            let mut backend = RustOracleBackend;
+            sim.run_functional(&strat, &input, &kernels, &mut backend)
+        }
+        .expect("functional simulation");
+        let wall = t0.elapsed().as_secs_f64();
+
+        let err = report.max_abs_error.unwrap();
+        assert!(
+            report.functional_ok(1e-3).unwrap(),
+            "stepwise output must match the reference (err {err:.2e})"
+        );
+        println!(
+            "   δ = {} cycles | loads {} el | peak mem {}/{} el | {} compute steps",
+            report.duration,
+            report.total_loaded(),
+            report.peak_occupancy,
+            acc.size_mem,
+            report.n_compute_steps()
+        );
+        println!(
+            "   functional: max |err| = {err:.2e} vs reference conv ({})",
+            if use_pjrt { "PJRT backend" } else { "rust oracle" }
+        );
+
+        // Cross-check against the whole-layer AOT artifact when available.
+        if use_pjrt {
+            let mut rt = Runtime::from_default_dir().expect("runtime");
+            if let Some(v) = rt
+                .manifest
+                .find_layer(layer.c_in, layer.h_in, layer.w_in, layer.n_kernels, layer.h_k)
+                .cloned()
+            {
+                let out = rt
+                    .execute_f32(
+                        &v.file,
+                        &[
+                            (&input, &[v.c_in, v.h_in, v.w_in]),
+                            (&kernels, &[v.n, v.c_in, v.h_k, v.w_k]),
+                        ],
+                    )
+                    .expect("layer artifact executes");
+                let stepwise = report.output.as_ref().unwrap();
+                let max_err = out
+                    .iter()
+                    .zip(stepwise)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                println!("   whole-layer AOT artifact agreement: max |err| = {max_err:.2e}");
+                assert!(max_err < 1e-3);
+            }
+        }
+
+        let macs = report.totals.total.macs;
+        total_macs += macs;
+        total_wall += wall;
+        println!(
+            "   wall {:.3}s → {:.2} MMAC/s through the {} backend\n",
+            wall,
+            macs as f64 / wall / 1e6,
+            if use_pjrt { "pjrt" } else { "oracle" }
+        );
+    }
+
+    println!(
+        "pipeline total: {:.2} MMACs in {:.3}s ({:.2} MMAC/s)",
+        total_macs as f64 / 1e6,
+        total_wall,
+        total_macs as f64 / total_wall / 1e6
+    );
+    println!("lenet_pipeline OK");
+}

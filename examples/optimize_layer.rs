@@ -1,0 +1,102 @@
+//! Optimize a layer's offloading strategy (the §5 problem, full pipeline).
+//!
+//! ```bash
+//! cargo run --release --example optimize_layer
+//! ```
+//!
+//! Demonstrates the three-engine optimizer on two §7.1 sweep layers:
+//! * a small one, solved **exactly** (specialized branch & bound, and — to
+//!   show the ILP substrate — the verbatim §5 MILP solved with the in-tree
+//!   simplex/B&B, both agreeing);
+//! * a larger one, solved by the heuristic-seeded annealing polish (the
+//!   paper's MIP-start + solution-polishing regime).
+
+use std::time::Duration;
+
+use convoffload::config::presets::paper_sweep_layer;
+use convoffload::optimizer::{
+    build_s1_model, decode_solution, grouping_duration, grouping_loads,
+    model_builder::encode_mip_start, OptimizeOptions, Optimizer,
+};
+use convoffload::platform::Accelerator;
+use convoffload::solver::{solve_milp, BranchBoundOptions};
+use convoffload::strategy;
+
+fn main() {
+    // ---- exact regime: 4×4 input → 4 patches, group 2 → K_min = 2 ----
+    let layer = paper_sweep_layer(4);
+    let group = 2;
+    let acc = Accelerator::for_group_size(&layer, group);
+    println!("== exact regime: {layer}");
+
+    let row = strategy::row_by_row(&layer, group);
+    let zig = strategy::zigzag(&layer, group);
+    println!("row-by-row δ = {}", grouping_duration(&layer, &acc, &row.groups));
+    println!("zigzag     δ = {}", grouping_duration(&layer, &acc, &zig.groups));
+
+    // (a) the verbatim §5 ILP through the generic MILP solver
+    let k = acc.k_min(&layer);
+    let (model, info) = build_s1_model(&layer, &acc, k, 4);
+    println!("ILP model: {}", model.dims());
+    let mip_start = encode_mip_start(&layer, &info, &row.groups, model.n_vars());
+    let sol = solve_milp(
+        &model,
+        &BranchBoundOptions {
+            mip_start: Some(mip_start),
+            time_budget: Duration::from_secs(120),
+            node_budget: 1_000_000,
+            ..Default::default()
+        },
+    );
+    println!("MILP status: {:?} after {} nodes", sol.status, sol.nodes);
+    let ilp_strategy = decode_solution(&info, &sol.assignment);
+    let ilp_loads = grouping_loads(&layer, &ilp_strategy.groups);
+    println!("MILP optimum loads = {ilp_loads}");
+
+    // (b) the optimizer facade (uses the specialized exact engine here)
+    let opt = Optimizer::new(OptimizeOptions { group_size: group, ..Default::default() });
+    let res = opt.optimize(&layer, &acc);
+    println!(
+        "optimizer: method {:?}, δ = {} (heuristic {}), gain {:.1}%",
+        res.method,
+        res.duration,
+        res.mip_start_duration,
+        res.gain_over_heuristics() * 100.0
+    );
+    assert_eq!(
+        grouping_loads(&layer, &res.strategy.groups),
+        ilp_loads,
+        "both exact engines must agree"
+    );
+
+    // ---- polish regime: 12×12 input → 100 patches ----
+    let layer = paper_sweep_layer(12);
+    let group = 4;
+    let acc = Accelerator::for_group_size(&layer, group);
+    println!("\n== polish regime: {layer}");
+    let opt = Optimizer::new(OptimizeOptions {
+        group_size: group,
+        anneal_iters: 150_000,
+        seed: 2026,
+        ..Default::default()
+    });
+    let res = opt.optimize(&layer, &acc);
+    println!(
+        "optimizer: method {:?}, δ = {} (best heuristic {}), gain {:.1}%",
+        res.method,
+        res.duration,
+        res.mip_start_duration,
+        res.gain_over_heuristics() * 100.0
+    );
+
+    // Export the strategy in the simulator's CSV format and read it back.
+    let csv = strategy::strategy_to_csv(&res.strategy);
+    let reread = strategy::strategy_from_csv("opl", &csv).expect("round-trip");
+    assert_eq!(reread.groups, res.strategy.groups);
+    println!(
+        "strategy CSV round-trip OK ({} steps, first row: {})",
+        reread.n_steps(),
+        csv.lines().nth(1).unwrap_or("")
+    );
+    println!("optimize_layer OK");
+}

@@ -1,0 +1,73 @@
+//! Quickstart: model a layer + accelerator, compare offloading strategies.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the public API end to end: define a convolution layer (Example 1 of
+//! the paper), derive the accelerator from a group-size budget, build the
+//! built-in strategies, simulate each, and print the duration/memory report.
+
+use convoffload::prelude::*;
+use convoffload::sim::summary_line;
+use convoffload::strategy;
+
+fn main() {
+    // The layer of the paper's Examples 1–2: 2×5×5 input, two 3×3 kernels.
+    let layer = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).expect("valid layer");
+    println!("layer: {layer}");
+    println!("patches |X| = {}, ops/patch = {}", layer.n_patches(), layer.ops_per_patch());
+
+    // Accelerator able to process 2 patches per step (Example 2's setting),
+    // with the §7.1 memory assumption (kernels + group + outputs fit).
+    let group = 2;
+    let acc = Accelerator::for_group_size(&layer, group);
+    println!(
+        "accelerator: nbop_PE={}, size_MEM={}, t_l={}, t_w={}, t_acc={}",
+        acc.nbop_pe, acc.size_mem, acc.t_l, acc.t_w, acc.t_acc
+    );
+    println!(
+        "K_min = {}, K_max = {}\n",
+        acc.k_min(&layer),
+        acc.k_max(&layer)
+    );
+
+    let sim = Simulator::new(layer, Platform::new(acc));
+
+    // Compare every built-in strategy.
+    let strategies = [
+        strategy::s1_baseline(&layer),
+        strategy::row_by_row(&layer, group),
+        strategy::zigzag(&layer, group),
+        strategy::hilbert(&layer, group),
+        strategy::diagonal(&layer, group),
+    ];
+    for s in &strategies {
+        let report = sim.run(s).expect("strategy must simulate");
+        println!("{}", summary_line(&report, &acc));
+    }
+
+    // Validate a strategy against the §2.3 assumptions.
+    let zig = strategy::zigzag(&layer, group);
+    let check = strategy::validate(&layer, &acc, &zig, layer.h_k as u32);
+    println!(
+        "\nzigzag validation: {} (peak occupancy {} / {} elements)",
+        if check.is_valid() { "OK" } else { "violations found" },
+        check.peak_occupancy,
+        acc.size_mem
+    );
+
+    // Functional check: the stepwise offload computes the true convolution.
+    let input = convoffload::conv::reference::synth_tensor(layer.input_dims().len(), 1);
+    let kernels = convoffload::conv::reference::synth_tensor(layer.kernel_elements(), 2);
+    let mut backend = convoffload::sim::RustOracleBackend;
+    let report = sim
+        .run_functional(&zig, &input, &kernels, &mut backend)
+        .expect("functional run");
+    println!(
+        "functional check (rust oracle): max |err| = {:.2e}",
+        report.max_abs_error.unwrap()
+    );
+    assert_eq!(report.functional_ok(1e-5), Some(true));
+    println!("quickstart OK");
+}

@@ -1,0 +1,66 @@
+//! Reproduce Figure 9: side-by-side step visualisation of the Row-by-Row
+//! and ZigZag strategies on the Example-2 layer.
+//!
+//! ```bash
+//! cargo run --release --example visualize_strategy
+//! ```
+//!
+//! Prints the ASCII grids for both strategies and writes the SVG versions
+//! (`figures/fig9_row.svg`, `figures/fig9_zigzag.svg`). Also dumps the
+//! exact step-2 sets the paper's Example 2 lists, so the correspondence is
+//! visible in the terminal.
+
+use convoffload::conv::ConvLayer;
+use convoffload::strategy;
+use convoffload::viz;
+
+fn main() {
+    let layer = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).expect("example layer");
+    let group = 2;
+
+    std::fs::create_dir_all("figures").expect("mkdir figures");
+
+    for (name, s) in [
+        ("row", strategy::row_by_row(&layer, group)),
+        ("zigzag", strategy::zigzag(&layer, group)),
+    ] {
+        let steps = s.compile(&layer);
+        println!("================ {} ================", s.name);
+        println!("{}", viz::render_strategy_ascii(&layer, &steps));
+
+        let svg = viz::render_strategy_svg(&layer, &steps, &format!("{} (Fig. 9)", s.name));
+        let path = format!("figures/fig9_{name}.svg");
+        std::fs::write(&path, svg).expect("write svg");
+        println!("wrote {path}\n");
+
+        // Example-2 correspondence: the step-2 sets.
+        let s2 = &steps[1];
+        println!(
+            "step 2 sets — |F^inp| = {} px, |I^slice| = {} px, |W| = {} patches",
+            s2.free_inp.len(),
+            s2.load_inp.len(),
+            s2.write.len()
+        );
+        println!("  F_2^inp pixels (spatial ids): {:?}", s2.free_inp.to_vec());
+        println!("  I_2^slice pixels            : {:?}", s2.load_inp.to_vec());
+        println!("  W_2 patches                 : {:?}\n", s2.write.to_vec());
+    }
+
+    // The paper's Example-2 numbers (in elements = pixels × C_in):
+    // Row: M_2^inp = 32; ZigZag: M_2^inp = 24.
+    let sim = convoffload::sim::Simulator::new(
+        layer,
+        convoffload::platform::Platform::new(
+            convoffload::platform::Accelerator::for_group_size(&layer, group),
+        ),
+    );
+    let row = sim.run(&strategy::row_by_row(&layer, group)).unwrap();
+    let zig = sim.run(&strategy::zigzag(&layer, group)).unwrap();
+    println!(
+        "Example 2 check: M_2^inp row = {} el (paper: 32), zigzag = {} el (paper: 24)",
+        row.steps[1].resident_input_elements, zig.steps[1].resident_input_elements
+    );
+    assert_eq!(row.steps[1].resident_input_elements, 32);
+    assert_eq!(zig.steps[1].resident_input_elements, 24);
+    println!("visualize_strategy OK");
+}

@@ -1,0 +1,111 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text** artifacts.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing
+shapes, so the Rust runtime can pick the right executable per layer config.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Step-compute variants: one per (layer family, group capacity) used by the
+# Rust examples and the figure harness. d = C_in*H_K*W_K, n = kernels.
+STEP_VARIANTS = [
+    # paper §7.1 sweep layers: 3x3 kernel, C_in = 1, N = 1
+    {"name": "step_paper_g8", "d": 9, "n": 1, "g_max": 8},
+    {"name": "step_paper_g16", "d": 9, "n": 1, "g_max": 16},
+    # Example 1/2 layer: 2 channels, 3x3, two kernels
+    {"name": "step_example1_g8", "d": 18, "n": 2, "g_max": 8},
+    # LeNet-5 conv1: 1x5x5 kernels, 6 of them
+    {"name": "step_lenet1_g8", "d": 25, "n": 6, "g_max": 8},
+    # LeNet-5 conv2: 6x5x5 kernels, 16 of them
+    {"name": "step_lenet2_g8", "d": 150, "n": 16, "g_max": 8},
+    # ResNet-8 style: 3x3x3 kernels, 16 of them
+    {"name": "step_resnet8_g8", "d": 27, "n": 16, "g_max": 8},
+]
+
+# Whole-layer forwards for the end-to-end example.
+LAYER_VARIANTS = [
+    {
+        "name": "layer_lenet1",
+        "c_in": 1, "h_in": 32, "w_in": 32, "n": 6, "h_k": 5, "w_k": 5,
+        "s_h": 1, "s_w": 1,
+    },
+    {
+        "name": "layer_lenet2",
+        "c_in": 6, "h_in": 14, "w_in": 14, "n": 16, "h_k": 5, "w_k": 5,
+        "s_h": 1, "s_w": 1,
+    },
+    {
+        "name": "layer_example1",
+        "c_in": 2, "h_in": 5, "w_in": 5, "n": 2, "h_k": 3, "w_k": 3,
+        "s_h": 1, "s_w": 1,
+    },
+]
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"step": [], "layer": []}
+
+    for v in STEP_VARIANTS:
+        fn, args = model.step_compute_fn(v["g_max"], v["d"], v["n"])
+        text = to_hlo_text(fn, args)
+        fname = f"{v['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["step"].append({**v, "file": fname})
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    for v in LAYER_VARIANTS:
+        fn, args = model.layer_forward_fn(
+            v["c_in"], v["h_in"], v["w_in"], v["n"], v["h_k"], v["w_k"],
+            v["s_h"], v["s_w"],
+        )
+        text = to_hlo_text(fn, args)
+        fname = f"{v['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        h_out = (v["h_in"] - v["h_k"]) // v["s_h"] + 1
+        w_out = (v["w_in"] - v["w_k"]) // v["s_w"] + 1
+        manifest["layer"].append(
+            {**v, "file": fname, "h_out": h_out, "w_out": w_out}
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest.json ({len(manifest['step'])} step, "
+          f"{len(manifest['layer'])} layer variants)")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Everything here is straight ``jax.numpy`` / ``lax`` — no Pallas — and serves
+as the ground truth the kernels are tested against (pytest + hypothesis in
+``python/tests/``) and the reference the Rust oracle mirrors.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def step_gemm_ref(patches, kernel_matrix):
+    """Reference for the per-step compute of strategy S1.
+
+    ``patches``       — f32[G, D]  im2col rows of the step's patch group
+                        (D = C_in * H_K * W_K, channel-major)
+    ``kernel_matrix`` — f32[D, N]  all kernels, flattened channel-major
+
+    Returns f32[G, N]: all output channels of every patch in the group
+    (Property 1: a step computes the full C_out for its patches).
+    """
+    return jnp.dot(patches, kernel_matrix, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(inp, kernels, s_h=1, s_w=1):
+    """Whole-layer 2D convolution (cross-correlation, pre-padded input).
+
+    ``inp``     — f32[C_in, H_in, W_in]
+    ``kernels`` — f32[N, C_in, H_K, W_K]
+
+    Returns f32[N, H_out, W_out] per Definition 8.
+    """
+    out = lax.conv_general_dilated(
+        inp[None],  # NCHW with batch 1
+        kernels,
+        window_strides=(s_h, s_w),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def im2col_ref(inp, h_k, w_k, s_h=1, s_w=1):
+    """im2col: f32[C_in, H_in, W_in] → f32[H_out*W_out, C_in*H_K*W_K].
+
+    Row r = patch (i, j) with r = i * W_out + j (row-major, Remark 4);
+    columns are channel-major (Remark 5), matching the Rust
+    ``conv::reference::im2col_row`` layout.
+    """
+    c_in, h_in, w_in = inp.shape
+    h_out = (h_in - h_k) // s_h + 1
+    w_out = (w_in - w_k) // s_w + 1
+    rows = []
+    for i in range(h_out):
+        for j in range(w_out):
+            patch = inp[:, i * s_h : i * s_h + h_k, j * s_w : j * s_w + w_k]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows)
+
+
+def kernel_matrix_ref(kernels):
+    """Flatten kernels f32[N, C_in, H_K, W_K] → f32[D, N] (column per kernel)."""
+    n = kernels.shape[0]
+    return kernels.reshape(n, -1).T

@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: the per-step patch-group × kernels GEMM.
+
+The accelerator's compute action ``a_6`` multiplies the im2col matrix of the
+step's patch group, f32[G, D], by the resident kernel matrix, f32[D, N]
+(D = C_in·H_K·W_K). This is the MAC hot-spot the paper's ``nbop_PE`` models.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+  * the group's working set (patches + kernels + outputs) is one step's
+    on-chip footprint → it must fit VMEM, which is exactly the paper's
+    Eq. 12 capacity constraint;
+  * the GEMM itself targets the MXU; G is tiled by the grid so each grid
+    step streams one patch-row tile HBM→VMEM — the BlockSpec realizes the
+    ``I_slice`` load of the formalism;
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls, so lowering stays in plain HLO (numerics identical).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _step_gemm_kernel(patches_ref, kernels_ref, out_ref):
+    """One grid step: out tile [TG, N] = patch tile [TG, D] @ kernels [D, N]."""
+    out_ref[...] = jnp.dot(
+        patches_ref[...],
+        kernels_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_g",))
+def step_gemm(patches, kernel_matrix, tile_g=8):
+    """Pallas-backed per-step compute. Shapes: [G, D] @ [D, N] → [G, N].
+
+    G is tiled by ``tile_g`` (padded if needed); D and N stay whole — per-step
+    groups are small by construction (``nb_patches_max_S1``), so one kernel
+    tile and one patch tile fit VMEM comfortably (see DESIGN.md §Perf for the
+    footprint arithmetic).
+    """
+    g, d = patches.shape
+    d2, n = kernel_matrix.shape
+    assert d == d2, f"contraction mismatch: {d} vs {d2}"
+    tile = min(tile_g, g)
+    pad = (-g) % tile
+    padded = jnp.pad(patches, ((0, pad), (0, 0))) if pad else patches
+    gp = padded.shape[0]
+
+    out = pl.pallas_call(
+        _step_gemm_kernel,
+        grid=(gp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, n), jnp.float32),
+        interpret=True,
+    )(padded, kernel_matrix)
+    return out[:g]
+
+
+def _layer_gemm_kernel(cols_ref, kernels_ref, out_ref):
+    out_ref[...] = jnp.dot(
+        cols_ref[...],
+        kernels_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("h_k", "w_k", "s_h", "s_w", "tile_g"))
+def conv2d_im2col(inp, kernels, h_k, w_k, s_h=1, s_w=1, tile_g=8):
+    """Whole-layer conv as im2col + the Pallas GEMM (the L2 path's hot-spot).
+
+    ``inp`` f32[C_in, H_in, W_in]; ``kernels`` f32[N, C_in, H_K, W_K].
+    Returns f32[N, H_out, W_out].
+    """
+    c_in, h_in, w_in = inp.shape
+    n = kernels.shape[0]
+    h_out = (h_in - h_k) // s_h + 1
+    w_out = (w_in - w_k) // s_w + 1
+
+    # Patch extraction via gather of strided windows (XLA fuses this).
+    i_idx = jnp.arange(h_out) * s_h
+    j_idx = jnp.arange(w_out) * s_w
+    # windows[i, j, c, kh, kw] = inp[c, i*s_h + kh, j*s_w + kw]
+    windows = jax.vmap(
+        lambda i: jax.vmap(
+            lambda j: jax.lax.dynamic_slice(inp, (0, i, j), (c_in, h_k, w_k))
+        )(j_idx)
+    )(i_idx)
+    cols = windows.reshape(h_out * w_out, c_in * h_k * w_k)
+    kmat = kernels.reshape(n, -1).T
+    out = step_gemm(cols, kmat, tile_g=tile_g)  # [H_out*W_out, N]
+    return out.T.reshape(n, h_out, w_out)

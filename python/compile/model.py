@@ -1,0 +1,57 @@
+"""Layer-2 JAX model: the compute graphs the Rust coordinator executes.
+
+Two graph families, both calling the Layer-1 Pallas kernel
+(:mod:`compile.kernels.step_conv`) so it lowers into the same HLO:
+
+* ``step_compute_fn`` — the accelerator's per-step action ``a_6``: one patch
+  group (padded to a static ``g_max``) against all kernels. The Rust
+  simulator's functional mode executes this artifact per step via PJRT.
+* ``layer_forward_fn`` — the whole-layer convolution (im2col + the same
+  GEMM kernel), used by the end-to-end example as the on-accelerator
+  reference output.
+
+Python runs only at build time: :mod:`compile.aot` lowers these ``jit``-ted
+functions once to HLO text under ``artifacts/``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import step_conv
+
+
+def step_compute_fn(g_max, d, n, tile_g=8):
+    """Return a jit-able fn of (patches f32[g_max, d], kernels f32[d, n]).
+
+    The group dimension is static (= ``g_max``); the coordinator zero-pads
+    smaller groups and ignores the padded rows. Returns a 1-tuple, matching
+    the rust loader's ``to_tuple1`` unwrap.
+    """
+
+    def fn(patches, kernel_matrix):
+        return (step_conv.step_gemm(patches, kernel_matrix, tile_g=tile_g),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((g_max, d), jnp.float32),
+        jax.ShapeDtypeStruct((d, n), jnp.float32),
+    )
+
+
+def layer_forward_fn(c_in, h_in, w_in, n, h_k, w_k, s_h=1, s_w=1, tile_g=8):
+    """Return a jit-able whole-layer forward and its example arguments.
+
+    Signature: (input f32[C_in, H_in, W_in], kernels f32[N, C_in, H_K, W_K])
+    → (output f32[N, H_out, W_out],)
+    """
+
+    def fn(inp, kernels):
+        return (
+            step_conv.conv2d_im2col(
+                inp, kernels, h_k=h_k, w_k=w_k, s_h=s_h, s_w=s_w, tile_g=tile_g
+            ),
+        )
+
+    return fn, (
+        jax.ShapeDtypeStruct((c_in, h_in, w_in), jnp.float32),
+        jax.ShapeDtypeStruct((n, c_in, h_k, w_k), jnp.float32),
+    )

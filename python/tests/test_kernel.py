@@ -1,0 +1,133 @@
+"""Layer-1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+This is the core build-time correctness signal: if these pass, the HLO the
+Rust runtime executes computes exactly the reference GEMM/convolution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, step_conv
+
+
+def rand(shape, seed):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed), shape, dtype=jnp.float32, minval=-1.0, maxval=1.0
+    )
+
+
+class TestStepGemm:
+    @pytest.mark.parametrize("g,d,n", [
+        (1, 9, 1),
+        (2, 18, 2),
+        (4, 25, 6),
+        (8, 150, 16),
+        (5, 27, 16),   # g not divisible by tile
+        (3, 7, 3),     # odd everything
+    ])
+    def test_matches_ref(self, g, d, n):
+        patches = rand((g, d), seed=g * 100 + d)
+        kmat = rand((d, n), seed=n)
+        got = step_conv.step_gemm(patches, kmat)
+        want = ref.step_gemm_ref(patches, kmat)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        g=st.integers(min_value=1, max_value=17),
+        d=st.integers(min_value=1, max_value=64),
+        n=st.integers(min_value=1, max_value=20),
+        tile=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, g, d, n, tile, seed):
+        patches = rand((g, d), seed=seed)
+        kmat = rand((d, n), seed=seed + 1)
+        got = step_conv.step_gemm(patches, kmat, tile_g=tile)
+        want = ref.step_gemm_ref(patches, kmat)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_zero_padding_rows_are_dropped(self):
+        # g=3 with tile 8 pads to 8; result must still be [3, n]
+        patches = rand((3, 9), seed=1)
+        kmat = rand((9, 2), seed=2)
+        out = step_conv.step_gemm(patches, kmat, tile_g=8)
+        assert out.shape == (3, 2)
+
+    def test_dtype_f32(self):
+        patches = rand((4, 9), seed=3)
+        kmat = rand((9, 1), seed=4)
+        assert step_conv.step_gemm(patches, kmat).dtype == jnp.float32
+
+    def test_bf16_inputs_accumulate_f32(self):
+        # MXU-style usage: bf16 operands with f32 accumulation stays close
+        # to the f32 oracle for small D.
+        patches = rand((4, 9), seed=5).astype(jnp.bfloat16)
+        kmat = rand((9, 2), seed=6).astype(jnp.bfloat16)
+        got = step_conv.step_gemm(
+            patches.astype(jnp.float32), kmat.astype(jnp.float32)
+        )
+        want = ref.step_gemm_ref(
+            patches.astype(jnp.float32), kmat.astype(jnp.float32)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestIm2colRefInternal:
+    """Shape/layout checks for the reference im2col itself."""
+
+    def test_rows_are_row_major_patches(self):
+        inp = jnp.arange(2 * 4 * 4, dtype=jnp.float32).reshape(2, 4, 4)
+        cols = ref.im2col_ref(inp, 3, 3)
+        assert cols.shape == (4, 18)
+        # patch (0,0), channel-major: channel 0 window then channel 1 window
+        first = inp[0, :3, :3].reshape(-1)
+        second = inp[1, :3, :3].reshape(-1)
+        np.testing.assert_array_equal(cols[0], jnp.concatenate([first, second]))
+
+    def test_strided(self):
+        inp = rand((1, 7, 7), seed=9)
+        cols = ref.im2col_ref(inp, 3, 3, s_h=2, s_w=2)
+        assert cols.shape == (9, 9)
+
+
+class TestConvIm2col:
+    @pytest.mark.parametrize("c_in,h_in,w_in,n,k,s", [
+        (1, 6, 6, 1, 3, 1),
+        (2, 5, 5, 2, 3, 1),
+        (1, 32, 32, 6, 5, 1),   # LeNet conv1
+        (3, 9, 9, 4, 3, 2),     # strided
+        (6, 14, 14, 16, 5, 1),  # LeNet conv2
+    ])
+    def test_matches_lax_conv(self, c_in, h_in, w_in, n, k, s):
+        inp = rand((c_in, h_in, w_in), seed=c_in + h_in)
+        kernels = rand((n, c_in, k, k), seed=n + k)
+        got = step_conv.conv2d_im2col(inp, kernels, h_k=k, w_k=k, s_h=s, s_w=s)
+        want = ref.conv2d_ref(inp, kernels, s_h=s, s_w=s)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        c_in=st.integers(min_value=1, max_value=4),
+        h_extra=st.integers(min_value=0, max_value=6),
+        n=st.integers(min_value=1, max_value=8),
+        k=st.sampled_from([1, 3, 5]),
+        s=st.sampled_from([1, 2]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_layers(self, c_in, h_extra, n, k, s, seed):
+        h_in = k + h_extra  # always >= kernel
+        inp = rand((c_in, h_in, h_in), seed=seed)
+        kernels = rand((n, c_in, k, k), seed=seed + 1)
+        got = step_conv.conv2d_im2col(inp, kernels, h_k=k, w_k=k, s_h=s, s_w=s)
+        want = ref.conv2d_ref(inp, kernels, s_h=s, s_w=s)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_ref_matches_definition8_shapes(self):
+        inp = rand((2, 10, 8), seed=1)
+        kernels = rand((3, 2, 3, 3), seed=2)
+        out = ref.conv2d_ref(inp, kernels, s_h=2, s_w=1)
+        assert out.shape == (3, 4, 6)

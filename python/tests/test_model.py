@@ -1,0 +1,89 @@
+"""Layer-2 checks: model graph shapes and AOT lowering round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed), shape, dtype=jnp.float32, minval=-1.0, maxval=1.0
+    )
+
+
+class TestStepComputeFn:
+    def test_shapes_and_values(self):
+        fn, args = model.step_compute_fn(g_max=8, d=18, n=2)
+        patches = rand((8, 18), seed=1)
+        kmat = rand((18, 2), seed=2)
+        (out,) = fn(patches, kmat)
+        assert out.shape == (8, 2)
+        np.testing.assert_allclose(
+            out, ref.step_gemm_ref(patches, kmat), rtol=1e-5, atol=1e-5
+        )
+        assert [a.shape for a in args] == [(8, 18), (18, 2)]
+
+    def test_padded_rows_pass_through_as_zero(self):
+        # the coordinator pads groups with zero rows; their outputs are zero
+        fn, _ = model.step_compute_fn(g_max=4, d=9, n=3)
+        patches = jnp.zeros((4, 9), dtype=jnp.float32).at[0].set(1.0)
+        kmat = rand((9, 3), seed=3)
+        (out,) = fn(patches, kmat)
+        np.testing.assert_allclose(out[1:], np.zeros((3, 3)), atol=1e-7)
+
+
+class TestLayerForwardFn:
+    def test_matches_lax_conv(self):
+        fn, args = model.layer_forward_fn(2, 5, 5, 2, 3, 3)
+        inp = rand((2, 5, 5), seed=4)
+        kernels = rand((2, 2, 3, 3), seed=5)
+        (out,) = fn(inp, kernels)
+        np.testing.assert_allclose(
+            out, ref.conv2d_ref(inp, kernels), rtol=1e-4, atol=1e-4
+        )
+        assert [a.shape for a in args] == [(2, 5, 5), (2, 2, 3, 3)]
+
+
+class TestAotLowering:
+    @pytest.mark.parametrize("variant", aot.STEP_VARIANTS[:3])
+    def test_step_variants_lower_to_hlo_text(self, variant):
+        fn, args = model.step_compute_fn(
+            variant["g_max"], variant["d"], variant["n"]
+        )
+        text = aot.to_hlo_text(fn, args)
+        assert "HloModule" in text
+        # static shapes present in the module signature
+        assert f"f32[{variant['g_max']},{variant['d']}]" in text
+
+    def test_layer_variant_lowers(self):
+        v = aot.LAYER_VARIANTS[2]  # example1 (small)
+        fn, args = model.layer_forward_fn(
+            v["c_in"], v["h_in"], v["w_in"], v["n"], v["h_k"], v["w_k"]
+        )
+        text = aot.to_hlo_text(fn, args)
+        assert "HloModule" in text
+
+    def test_lowered_hlo_contains_single_fused_dot(self):
+        # §Perf L2 target: the step compute lowers to one dot per tile, no
+        # redundant transposes of the kernel operand.
+        fn, args = model.step_compute_fn(8, 9, 1)
+        text = aot.to_hlo_text(fn, args)
+        assert text.count("dot(") >= 1
+
+    def test_build_all_writes_manifest(self, tmp_path, monkeypatch):
+        # Build only the two smallest variants to keep the test quick.
+        monkeypatch.setattr(aot, "STEP_VARIANTS", aot.STEP_VARIANTS[:1])
+        monkeypatch.setattr(aot, "LAYER_VARIANTS", aot.LAYER_VARIANTS[2:])
+        aot.build_all(str(tmp_path))
+        manifest = (tmp_path / "manifest.json").read_text()
+        import json
+
+        m = json.loads(manifest)
+        assert len(m["step"]) == 1
+        assert len(m["layer"]) == 1
+        for entry in m["step"] + m["layer"]:
+            assert (tmp_path / entry["file"]).exists()

@@ -1,0 +1,148 @@
+//! Ablation benches for the design choices DESIGN.md §8 calls out:
+//! kernel-split multi-pass vs single-pass S1, direct-S1 vs GeMM-im2col
+//! offload, write-back policies, and ordering heuristics head-to-head.
+//!
+//! Unlike the perf benches these also *print the modelled costs* (δ, traffic,
+//! peak memory), so `cargo bench ablation` doubles as the ablation table
+//! generator referenced in EXPERIMENTS.md.
+
+use convoffload::conv::{gemm_offload, ConvLayer};
+use convoffload::optimizer::grouping_duration;
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::Simulator;
+use convoffload::strategy::{self, MultiPassStrategy, WritebackPolicy};
+use convoffload::util::bench::BenchSuite;
+
+fn main() {
+    print_ablation_tables();
+
+    let mut suite = BenchSuite::new("ablation");
+
+    // Multi-pass execution cost (simulation of P passes).
+    {
+        let layer = ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap();
+        let sub = {
+            let mut s = layer;
+            s.n_kernels = 4;
+            s
+        };
+        let acc = Accelerator::for_group_size(&sub, 4);
+        let mp = MultiPassStrategy::new(&layer, 4, strategy::zigzag(&sub, 4)).unwrap();
+        suite.bench("multipass_4x_lenet2_sim", move || {
+            mp.run(&layer, &acc).unwrap().duration
+        });
+    }
+
+    // GeMM tiling search.
+    {
+        let layer = ConvLayer::new(1, 12, 12, 3, 3, 4, 1, 1).unwrap();
+        let acc = Accelerator::for_group_size(&layer, 4);
+        suite.bench("gemm_best_tiling_12x12", move || {
+            gemm_offload::best_tiling(&layer, &acc).unwrap().1.steps
+        });
+    }
+
+    // Ordering heuristics on one mid-size layer.
+    {
+        let layer = ConvLayer::square(1, 12, 3, 1);
+        let acc = Accelerator::for_group_size(&layer, 4);
+        suite.bench("orderings_head_to_head_12x12", move || {
+            let mut acc_sum = 0u64;
+            for o in strategy::Ordering::all() {
+                let s = strategy::order_to_groups(&layer, &o.order(&layer), 4);
+                acc_sum += grouping_duration(&layer, &acc, &s.groups);
+            }
+            acc_sum
+        });
+    }
+
+    suite.run();
+}
+
+fn print_ablation_tables() {
+    println!("### Ablation 1 — kernel-split multi-pass (LeNet-5 conv2, zigzag g=4)");
+    println!("kernels/pass | passes | δ | input loads (el) | peak mem (el) | kernel-mem saved");
+    let layer = ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap();
+    for kpp in [16usize, 8, 4, 2] {
+        let sub = {
+            let mut s = layer;
+            s.n_kernels = kpp;
+            s
+        };
+        let acc = Accelerator::for_group_size(&sub, 4);
+        let mp = MultiPassStrategy::new(&layer, kpp, strategy::zigzag(&sub, 4)).unwrap();
+        let r = mp.run(&layer, &acc).unwrap();
+        println!(
+            "{kpp:>12} | {:>6} | {:>6} | {:>16} | {:>13} | {:>16}",
+            mp.n_passes(),
+            r.duration,
+            r.totals.total.loaded_elements,
+            r.peak_occupancy,
+            mp.kernel_memory_saving(&layer),
+        );
+    }
+
+    println!("\n### Ablation 2 — direct S1 vs GeMM-im2col offload (same machine)");
+    println!("layer | S1 δ | GeMM δ | im2col input-traffic ratio");
+    for (name, layer, g) in [
+        ("12x12/3x3/N4", ConvLayer::new(1, 12, 12, 3, 3, 4, 1, 1).unwrap(), 4),
+        ("lenet2", ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap(), 4),
+    ] {
+        let acc = Accelerator::for_group_size(&layer, g);
+        let s1 = strategy::zigzag(&layer, g);
+        if let Some((gemm_dur, s1_dur, ratio)) =
+            gemm_offload::compare_with_s1(&layer, &acc, &s1)
+        {
+            println!("{name} | {s1_dur} | {gemm_dur} | {ratio:.2}x");
+        } else {
+            println!("{name} | - | no feasible GeMM tiling | -");
+        }
+    }
+
+    println!("\n### Ablation 3 — write-back policy (zigzag g=4, t_w=1)");
+    println!("layer | policy | δ | peak mem (el)");
+    for (name, layer) in [
+        ("paper-12", ConvLayer::square(1, 12, 3, 1)),
+        ("example1", ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()),
+    ] {
+        let base = Accelerator::for_group_size(&layer, 4);
+        let acc = Accelerator {
+            t_w: 1,
+            size_mem: base.size_mem + (layer.n_patches() * layer.c_out()) as u64,
+            ..base
+        };
+        let sim = Simulator::new(layer, Platform::new(acc));
+        for policy in [WritebackPolicy::EveryStep, WritebackPolicy::AtEnd] {
+            let mut s = strategy::zigzag(&layer, 4);
+            s.writeback = policy;
+            let r = sim.run(&s).unwrap();
+            println!(
+                "{name} | {} | {} | {}",
+                policy.as_str(),
+                r.duration,
+                r.peak_occupancy
+            );
+        }
+    }
+
+    println!("\n### Ablation 4 — ordering heuristics (g=4, δ per layer)");
+    println!("layer | row-by-row | zigzag | hilbert | diagonal");
+    for (name, layer) in [
+        ("8x8", ConvLayer::square(1, 8, 3, 1)),
+        ("12x12", ConvLayer::square(1, 12, 3, 1)),
+        ("lenet1", ConvLayer::new(1, 32, 32, 5, 5, 6, 1, 1).unwrap()),
+    ] {
+        let acc = Accelerator::for_group_size(&layer, 4);
+        let d = |s: &convoffload::strategy::GroupedStrategy| {
+            grouping_duration(&layer, &acc, &s.groups)
+        };
+        println!(
+            "{name} | {} | {} | {} | {}",
+            d(&strategy::row_by_row(&layer, 4)),
+            d(&strategy::zigzag(&layer, 4)),
+            d(&strategy::hilbert(&layer, 4)),
+            d(&strategy::diagonal(&layer, 4)),
+        );
+    }
+    println!();
+}

@@ -1,0 +1,52 @@
+//! One bench per paper table/figure: end-to-end regeneration cost.
+//!
+//! These wrap the same generators the `convoffload figures` CLI uses, on
+//! reduced grids so a bench iteration stays sub-second; the full grids run
+//! in the CLI (see EXPERIMENTS.md for the recorded outputs).
+
+use convoffload::bench_harness as bh;
+use convoffload::config::layer_preset;
+use convoffload::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("figures");
+
+    // Fig. 11: LeNet-5 conv1, ZigZag vs Row-by-Row over group sizes.
+    {
+        let layer = layer_preset("lenet5-conv1").unwrap().layer;
+        suite.bench("fig11_lenet1_g1_to_12", move || {
+            let sizes: Vec<usize> = (1..=12).collect();
+            let rows = bh::fig11(&layer, &sizes);
+            rows.iter().map(|r| r.zigzag + r.row_by_row).sum()
+        });
+    }
+
+    // Fig. 12: duration vs input size at group 4 (reduced grid 4..=6).
+    suite.bench("fig12_inputs_4_to_6_g4", || {
+        let rows = bh::fig12(&[4, 5, 6], 4, 1);
+        rows.iter().map(|r| r.opl).sum()
+    });
+
+    // Fig. 13: gain heatmap (reduced 2x2 grid).
+    suite.bench("fig13_grid_2x2", || {
+        let cells = bh::fig13(&[4, 6], &[2, 4], 1);
+        cells.iter().map(|c| c.opl).sum()
+    });
+
+    // Example 2 (Fig. 9) reproduction: simulate both strategies & compare.
+    {
+        let layer = convoffload::conv::ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let acc = convoffload::platform::Accelerator::for_group_size(&layer, 2);
+        let sim = convoffload::sim::Simulator::new(
+            layer,
+            convoffload::platform::Platform::new(acc),
+        );
+        suite.bench("example2_row_vs_zigzag", move || {
+            let row = sim.run(&convoffload::strategy::row_by_row(&layer, 2)).unwrap();
+            let zig = sim.run(&convoffload::strategy::zigzag(&layer, 2)).unwrap();
+            row.steps[1].resident_input_elements + zig.steps[1].resident_input_elements
+        });
+    }
+
+    suite.run();
+}

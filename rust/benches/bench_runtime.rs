@@ -1,0 +1,72 @@
+//! PJRT runtime benchmarks: artifact execution latency on the request path.
+//!
+//! §Perf L3 target: the coordinator (gather + dispatch) must not dominate
+//! the XLA executable's own compute time. Skipped (with a message) when
+//! `make artifacts` has not produced the artifacts yet.
+
+use convoffload::conv::{reference, ConvLayer};
+use convoffload::runtime::{artifacts_available, PjrtBackend, Runtime};
+use convoffload::sim::ComputeBackend;
+use convoffload::util::bench::BenchSuite;
+
+fn main() {
+    if !artifacts_available() {
+        println!("## bench suite: runtime");
+        println!("skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut suite = BenchSuite::new("runtime");
+
+    // Raw executable dispatch: the paper-sweep step kernel [8,9]@[9,1].
+    {
+        let mut rt = Runtime::from_default_dir().expect("runtime");
+        let v = rt.manifest.find_step(9, 1, 8).expect("variant").clone();
+        let patches: Vec<f32> = (0..8 * 9).map(|i| i as f32).collect();
+        let kernels = vec![1f32; 9];
+        // warm the compile cache outside the measurement
+        rt.execute_f32(&v.file, &[(&patches, &[8, 9]), (&kernels, &[9, 1])])
+            .unwrap();
+        suite.bench("pjrt_execute_step_paper_g8", move || {
+            rt.execute_f32(&v.file, &[(&patches, &[8, 9]), (&kernels, &[9, 1])])
+                .unwrap()
+                .len() as u64
+        });
+    }
+
+    // Backend-level step compute (includes padding/chunking logic).
+    {
+        let layer = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let input = reference::synth_tensor(layer.input_dims().len(), 1);
+        let kernels = reference::synth_tensor(layer.kernel_elements(), 2);
+        let km = reference::kernel_matrix(&layer, &kernels);
+        let group: Vec<u32> = vec![0, 1];
+        let pm = reference::im2col_group(&layer, &input, &group);
+        let mut backend = PjrtBackend::from_default_dir().expect("backend");
+        // warm-up
+        backend.step_compute(&layer, &pm, &km, 2).unwrap();
+        suite.bench("pjrt_backend_step_example1_g2", move || {
+            backend.step_compute(&layer, &pm, &km, 2).unwrap().len() as u64
+        });
+    }
+
+    // Functional end-to-end simulation through PJRT (the e2e example body).
+    {
+        let layer = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let acc = convoffload::platform::Accelerator::for_group_size(&layer, 2);
+        let sim = convoffload::sim::Simulator::new(
+            layer,
+            convoffload::platform::Platform::new(acc),
+        );
+        let s = convoffload::strategy::zigzag(&layer, 2);
+        let input = reference::synth_tensor(layer.input_dims().len(), 1);
+        let kernels = reference::synth_tensor(layer.kernel_elements(), 2);
+        let mut backend = PjrtBackend::from_default_dir().expect("backend");
+        suite.bench("pjrt_functional_example1_g2", move || {
+            sim.run_functional(&s, &input, &kernels, &mut backend)
+                .unwrap()
+                .duration
+        });
+    }
+
+    suite.run();
+}

@@ -1,0 +1,78 @@
+//! Simulator benchmarks: step-transaction throughput on the paper's layers.
+//!
+//! These are the §Perf L3 tracking benches — the simulator's `run` is the
+//! inner loop of every figure sweep and of the optimizer's objective, so its
+//! throughput bounds the whole harness.
+
+use convoffload::config::layer_preset;
+use convoffload::optimizer::grouping_duration;
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::{RustOracleBackend, Simulator};
+use convoffload::strategy;
+use convoffload::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("sim");
+
+    // Logical simulation of the Example-2 layer (small).
+    {
+        let layer = layer_preset("example1").unwrap().layer;
+        let acc = Accelerator::for_group_size(&layer, 2);
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let s = strategy::zigzag(&layer, 2);
+        suite.bench("sim_logical_example1_g2", move || {
+            sim.run(&s).unwrap().duration
+        });
+    }
+
+    // Logical simulation of LeNet-5 conv1 (784 patches → 196 steps).
+    {
+        let layer = layer_preset("lenet5-conv1").unwrap().layer;
+        let acc = Accelerator::for_group_size(&layer, 4);
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let s = strategy::zigzag(&layer, 4);
+        suite.bench("sim_logical_lenet1_g4", move || {
+            sim.run(&s).unwrap().duration
+        });
+    }
+
+    // Strategy compile alone (set construction).
+    {
+        let layer = layer_preset("lenet5-conv1").unwrap().layer;
+        let s = strategy::zigzag(&layer, 4);
+        suite.bench("strategy_compile_lenet1_g4", move || {
+            s.compile(&layer).len() as u64
+        });
+    }
+
+    // The optimizer's fast objective (what annealing calls per move-batch).
+    {
+        let layer = layer_preset("lenet5-conv1").unwrap().layer;
+        let acc = Accelerator::for_group_size(&layer, 4);
+        let s = strategy::zigzag(&layer, 4);
+        suite.bench("objective_eval_lenet1_g4", move || {
+            grouping_duration(&layer, &acc, &s.groups)
+        });
+    }
+
+    // Functional simulation with the Rust oracle (values move through the
+    // modelled memories).
+    {
+        let layer = layer_preset("example1").unwrap().layer;
+        let acc = Accelerator::for_group_size(&layer, 2);
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let s = strategy::zigzag(&layer, 2);
+        let input =
+            convoffload::conv::reference::synth_tensor(layer.input_dims().len(), 1);
+        let kernels =
+            convoffload::conv::reference::synth_tensor(layer.kernel_elements(), 2);
+        suite.bench("sim_functional_oracle_example1", move || {
+            let mut b = RustOracleBackend;
+            sim.run_functional(&s, &input, &kernels, &mut b)
+                .unwrap()
+                .duration
+        });
+    }
+
+    suite.run();
+}

@@ -1,0 +1,102 @@
+//! Solver benchmarks: the §5 pipeline's three engines.
+//!
+//! The paper's solve budget was 0.5–5 h per point on a 24-core Xeon; these
+//! benches document how far under that budget the reproduction runs.
+
+use std::time::Duration;
+
+use convoffload::config::presets::paper_sweep_layer;
+use convoffload::ilp::{Cmp, LinExpr, Model};
+use convoffload::optimizer::{build_s1_model, exact, search, OptimizeOptions, Optimizer};
+use convoffload::platform::Accelerator;
+use convoffload::solver::{solve_lp, solve_milp, BranchBoundOptions};
+use convoffload::strategy;
+use convoffload::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("solver");
+
+    // LP relaxation of the §5 model for the 4x4 layer.
+    {
+        let layer = paper_sweep_layer(4);
+        let acc = Accelerator::for_group_size(&layer, 2);
+        let (model, _info) = build_s1_model(&layer, &acc, 2, 4);
+        suite.bench("lp_relaxation_s1_4x4", move || {
+            match solve_lp(&model, &[]) {
+                convoffload::solver::LpOutcome::Optimal { objective, .. } => {
+                    objective as u64
+                }
+                _ => 0,
+            }
+        });
+    }
+
+    // Full MILP solve (exact §5) for the 4x4 layer.
+    {
+        let layer = paper_sweep_layer(4);
+        let acc = Accelerator::for_group_size(&layer, 2);
+        suite.bench("milp_s1_4x4_g2", move || {
+            let (model, _) = build_s1_model(&layer, &acc, 2, 4);
+            let sol = solve_milp(&model, &BranchBoundOptions::default());
+            sol.nodes
+        });
+    }
+
+    // Generic MILP on a knapsack (solver substrate sanity / regression).
+    {
+        suite.bench("milp_knapsack_12", || {
+            let values = [4., 2., 10., 1., 2., 7., 8., 3., 6., 5., 9., 4.];
+            let weights = [3., 1., 6., 1., 2., 5., 4., 2., 3., 4., 5., 3.];
+            let mut m = Model::minimize();
+            let vars: Vec<_> =
+                (0..12).map(|i| m.bool_var(&format!("x{i}"))).collect();
+            let mut w = LinExpr::new();
+            let mut obj = LinExpr::new();
+            for (i, v) in vars.iter().enumerate() {
+                w.add(v.0, weights[i]);
+                obj.add(v.0, -values[i]);
+            }
+            m.constrain(w, Cmp::Le, 15.0);
+            m.set_objective(obj);
+            solve_milp(&m, &BranchBoundOptions::default()).nodes
+        });
+    }
+
+    // Specialized exact engine on the 5x5 layer (9 patches).
+    {
+        let layer = paper_sweep_layer(5);
+        suite.bench("exact_dfs_5x5_g2", move || {
+            let groups =
+                exact::solve_exact(&layer, 2, 5, Duration::from_secs(60), None)
+                    .expect("finishes");
+            groups.len() as u64
+        });
+    }
+
+    // Annealing polish on the 12x12 layer (100 patches), fixed iteration
+    // count so the measurement is the per-iteration cost.
+    {
+        let layer = paper_sweep_layer(12);
+        let start = strategy::zigzag(&layer, 4).groups;
+        suite.bench("anneal_10k_iters_12x12_g4", move || {
+            let groups = search::anneal(&layer, 4, 25, &start, 10_000, 99);
+            groups.len() as u64
+        });
+    }
+
+    // Whole-pipeline optimize call (what a Fig. 13 cell costs).
+    {
+        let layer = paper_sweep_layer(8);
+        let acc = Accelerator::for_group_size(&layer, 4);
+        suite.bench("optimize_fig13_cell_8x8_g4", move || {
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: 4,
+                anneal_iters: 50_000,
+                ..Default::default()
+            });
+            opt.optimize(&layer, &acc).duration
+        });
+    }
+
+    suite.run();
+}

@@ -1,0 +1,122 @@
+//! Figure 11: ZigZag vs Row-by-Row duration across group sizes.
+//!
+//! Paper claims reproduced here (§7.2):
+//! * both curves share the same overall shape;
+//! * ZigZag wins for small group sizes, Row-by-Row after a crossover;
+//! * the two are identical when the group size is a multiple of `W_out`.
+
+use crate::conv::ConvLayer;
+use crate::optimizer::grouping_duration;
+use crate::platform::Accelerator;
+use crate::strategy;
+use crate::util::csv;
+
+/// One sweep point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fig11Row {
+    pub group_size: usize,
+    pub zigzag: u64,
+    pub row_by_row: u64,
+}
+
+/// Sweep group sizes on a layer (default: LeNet-5 conv1, like the paper).
+pub fn fig11(layer: &ConvLayer, group_sizes: &[usize]) -> Vec<Fig11Row> {
+    group_sizes
+        .iter()
+        .map(|&g| {
+            let acc = Accelerator::for_group_size(layer, g);
+            let zig = strategy::zigzag(layer, g);
+            let row = strategy::row_by_row(layer, g);
+            Fig11Row {
+                group_size: g,
+                zigzag: grouping_duration(layer, &acc, &zig.groups),
+                row_by_row: grouping_duration(layer, &acc, &row.groups),
+            }
+        })
+        .collect()
+}
+
+/// CSV serialization (`group_size,zigzag,row_by_row`).
+pub fn to_csv(rows: &[Fig11Row]) -> String {
+    let mut out = vec![vec![
+        "group_size".to_string(),
+        "zigzag".to_string(),
+        "row_by_row".to_string(),
+    ]];
+    for r in rows {
+        out.push(vec![
+            r.group_size.to_string(),
+            r.zigzag.to_string(),
+            r.row_by_row.to_string(),
+        ]);
+    }
+    csv::write(&out)
+}
+
+/// ASCII rendering.
+pub fn to_ascii(layer: &ConvLayer, rows: &[Fig11Row]) -> String {
+    let xs: Vec<u64> = rows.iter().map(|r| r.group_size as u64).collect();
+    let series = vec![
+        ("zigzag", rows.iter().map(|r| r.zigzag).collect::<Vec<_>>()),
+        ("row-by-row", rows.iter().map(|r| r.row_by_row).collect()),
+    ];
+    crate::bench_harness::plot::line_chart(
+        &format!("Fig 11 — duration δ vs group size ({layer})"),
+        "group size",
+        &xs,
+        &series,
+        16,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    /// The paper's qualitative claims on the LeNet-5 first layer.
+    #[test]
+    fn lenet1_shape_claims() {
+        let layer = presets::layer_preset("lenet5-conv1").unwrap().layer;
+        let w_out = layer.w_out(); // 28
+        let sizes: Vec<usize> = (1..=w_out + 4).collect();
+        let rows = fig11(&layer, &sizes);
+
+        // (1) ZigZag strictly better somewhere in the small-group regime.
+        assert!(
+            rows.iter()
+                .take(w_out / 2)
+                .any(|r| r.zigzag < r.row_by_row),
+            "zigzag should win for small groups"
+        );
+        // (2) identical whenever group size is a multiple of W_out
+        for r in &rows {
+            if r.group_size % w_out == 0 {
+                assert_eq!(r.zigzag, r.row_by_row, "g={}", r.group_size);
+            }
+        }
+        // (3) monotonically *decreasing overall trend* as groups grow
+        // (larger groups load fewer redundant halos): compare endpoints.
+        assert!(rows.last().unwrap().zigzag < rows[0].zigzag);
+        assert!(rows.last().unwrap().row_by_row < rows[0].row_by_row);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let layer = ConvLayer::square(1, 6, 3, 1);
+        let rows = fig11(&layer, &[1, 2, 4]);
+        let text = to_csv(&rows);
+        let parsed = crate::util::csv::parse(&text).unwrap();
+        assert_eq!(parsed.len(), 4); // header + 3
+        assert_eq!(parsed[0][0], "group_size");
+    }
+
+    #[test]
+    fn ascii_contains_series() {
+        let layer = ConvLayer::square(1, 6, 3, 1);
+        let rows = fig11(&layer, &[1, 2, 3, 4]);
+        let text = to_ascii(&layer, &rows);
+        assert!(text.contains("zigzag"));
+        assert!(text.contains("row-by-row"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Figure 12: duration vs input size (group size 4) for the OPL strategy,
+//! ZigZag, Row-by-Row and S1-baseline.
+//!
+//! Paper claim reproduced: the solver's strategy minimizes δ at least as
+//! well as every heuristic at every input size, and S1-baseline (one patch
+//! per step) is far worse than all grouped strategies.
+
+use crate::config::presets::paper_sweep_layer;
+use crate::optimizer::{grouping_duration, OptimizeOptions, Optimizer};
+use crate::platform::Accelerator;
+use crate::strategy;
+use crate::util::csv;
+
+/// One sweep point (all durations in cycles, §7.1 cost model).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fig12Row {
+    pub h_in: usize,
+    pub s1_baseline: u64,
+    pub row_by_row: u64,
+    pub zigzag: u64,
+    pub opl: u64,
+}
+
+/// Sweep the §7.1 square layers (`H_in = W_in ∈ input_sizes`) at a fixed
+/// group size (the paper's Fig. 12 uses 4). Points run in parallel.
+pub fn fig12(input_sizes: &[usize], group: usize, seed: u64) -> Vec<Fig12Row> {
+    crate::util::pool::parallel_map(
+        input_sizes,
+        crate::util::pool::default_threads(),
+        |&h| {
+            let layer = paper_sweep_layer(h);
+            let acc = Accelerator::for_group_size(&layer, group);
+            let baseline = strategy::s1_baseline(&layer);
+            let row = strategy::row_by_row(&layer, group);
+            let zig = strategy::zigzag(&layer, group);
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: group,
+                seed,
+                ..Default::default()
+            });
+            let res = opt.optimize(&layer, &acc);
+            Fig12Row {
+                h_in: h,
+                s1_baseline: grouping_duration(&layer, &acc, &baseline.groups),
+                row_by_row: grouping_duration(&layer, &acc, &row.groups),
+                zigzag: grouping_duration(&layer, &acc, &zig.groups),
+                opl: res.duration,
+            }
+        },
+    )
+}
+
+/// CSV serialization.
+pub fn to_csv(rows: &[Fig12Row]) -> String {
+    let mut out = vec![vec![
+        "h_in".to_string(),
+        "s1_baseline".to_string(),
+        "row_by_row".to_string(),
+        "zigzag".to_string(),
+        "opl".to_string(),
+    ]];
+    for r in rows {
+        out.push(vec![
+            r.h_in.to_string(),
+            r.s1_baseline.to_string(),
+            r.row_by_row.to_string(),
+            r.zigzag.to_string(),
+            r.opl.to_string(),
+        ]);
+    }
+    csv::write(&out)
+}
+
+/// ASCII rendering.
+pub fn to_ascii(group: usize, rows: &[Fig12Row]) -> String {
+    let xs: Vec<u64> = rows.iter().map(|r| r.h_in as u64).collect();
+    let series = vec![
+        ("s1-baseline", rows.iter().map(|r| r.s1_baseline).collect::<Vec<_>>()),
+        ("row-by-row", rows.iter().map(|r| r.row_by_row).collect()),
+        ("zigzag", rows.iter().map(|r| r.zigzag).collect()),
+        ("opl", rows.iter().map(|r| r.opl).collect()),
+    ];
+    crate::bench_harness::plot::line_chart(
+        &format!("Fig 12 — duration δ vs input size (group size {group})"),
+        "H_in = W_in",
+        &xs,
+        &series,
+        16,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opl_dominates_heuristics_and_baseline() {
+        // small slice of the paper grid to keep test time in check
+        let rows = fig12(&[4, 5, 6, 7], 4, 1);
+        for r in &rows {
+            assert!(r.opl <= r.row_by_row, "h={}: {:?}", r.h_in, r);
+            assert!(r.opl <= r.zigzag, "h={}: {:?}", r.h_in, r);
+            assert!(
+                r.s1_baseline > r.opl,
+                "baseline must be worst, h={}: {:?}",
+                r.h_in,
+                r
+            );
+        }
+        // durations grow with input size for every series
+        for w in rows.windows(2) {
+            assert!(w[1].opl >= w[0].opl);
+            assert!(w[1].s1_baseline > w[0].s1_baseline);
+        }
+    }
+
+    #[test]
+    fn csv_has_all_series() {
+        let rows = fig12(&[4, 5], 4, 1);
+        let text = to_csv(&rows);
+        let parsed = crate::util::csv::parse(&text).unwrap();
+        assert_eq!(parsed[0].len(), 5);
+        assert_eq!(parsed.len(), 3);
+    }
+}

@@ -1,0 +1,145 @@
+//! Figure 13: performance gain of the OPL strategy over the best of
+//! ZigZag/Row-by-Row, across the (input size × group size) grid.
+//!
+//! Paper claims reproduced:
+//! * upper-right region (group size ≥ patches per image) → 0 % gain, the
+//!   heuristics are already optimal because one/few groups hold everything;
+//! * lower-left region → positive gains, up to ≈ 30 %.
+
+use crate::config::presets::paper_sweep_layer;
+use crate::optimizer::{OptimizeOptions, Optimizer};
+use crate::platform::Accelerator;
+use crate::util::csv;
+
+/// One grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fig13Cell {
+    pub h_in: usize,
+    pub group: usize,
+    pub best_heuristic: u64,
+    pub opl: u64,
+    /// Gain in percent: `(best_heuristic − opl) / best_heuristic · 100`.
+    pub gain_pct: f64,
+}
+
+/// Sweep the paper grid: `H_in ∈ input_sizes`, group ∈ `groups`.
+/// Grid cells are independent and run in parallel.
+pub fn fig13(input_sizes: &[usize], groups: &[usize], seed: u64) -> Vec<Fig13Cell> {
+    let grid: Vec<(usize, usize)> = input_sizes
+        .iter()
+        .flat_map(|&h| groups.iter().map(move |&g| (h, g)))
+        .collect();
+    crate::util::pool::parallel_map(
+        &grid,
+        crate::util::pool::default_threads(),
+        |&(h, g)| {
+            let layer = paper_sweep_layer(h);
+            let acc = Accelerator::for_group_size(&layer, g);
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: g,
+                seed,
+                ..Default::default()
+            });
+            let res = opt.optimize(&layer, &acc);
+            Fig13Cell {
+                h_in: h,
+                group: g,
+                best_heuristic: res.mip_start_duration,
+                opl: res.duration,
+                gain_pct: res.gain_over_heuristics() * 100.0,
+            }
+        },
+    )
+}
+
+/// CSV serialization (long form).
+pub fn to_csv(cells: &[Fig13Cell]) -> String {
+    let mut out = vec![vec![
+        "h_in".to_string(),
+        "group_size".to_string(),
+        "best_heuristic".to_string(),
+        "opl".to_string(),
+        "gain_pct".to_string(),
+    ]];
+    for c in cells {
+        out.push(vec![
+            c.h_in.to_string(),
+            c.group.to_string(),
+            c.best_heuristic.to_string(),
+            c.opl.to_string(),
+            format!("{:.2}", c.gain_pct),
+        ]);
+    }
+    csv::write(&out)
+}
+
+/// ASCII heatmap (rows = input size, cols = group size).
+pub fn to_ascii(input_sizes: &[usize], groups: &[usize], cells: &[Fig13Cell]) -> String {
+    let values: Vec<Vec<f64>> = input_sizes
+        .iter()
+        .map(|&h| {
+            groups
+                .iter()
+                .map(|&g| {
+                    cells
+                        .iter()
+                        .find(|c| c.h_in == h && c.group == g)
+                        .map(|c| c.gain_pct)
+                        .unwrap_or(f64::NAN)
+                })
+                .collect()
+        })
+        .collect();
+    crate::bench_harness::plot::heatmap(
+        "Fig 13 — OPL gain over best heuristic (%)",
+        "H_in",
+        "group size",
+        &input_sizes.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        &groups.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        &values,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gains_nonnegative_and_regions_match_paper() {
+        // Sub-grid for test speed; the full grid runs via the CLI.
+        let inputs = [4usize, 6, 8];
+        let groups = [2usize, 4, 8];
+        let cells = fig13(&inputs, &groups, 3);
+        assert_eq!(cells.len(), 9);
+        for c in &cells {
+            assert!(c.gain_pct >= 0.0, "{c:?}");
+            assert!(c.opl <= c.best_heuristic);
+        }
+        // upper-right: group 8 on a 4x4 input (4 patches) → single group →
+        // heuristics already optimal → 0 gain
+        let ur = cells
+            .iter()
+            .find(|c| c.h_in == 4 && c.group == 8)
+            .unwrap();
+        assert_eq!(ur.gain_pct, 0.0);
+        // lower-left: small groups on the bigger input should find gains
+        let ll = cells
+            .iter()
+            .find(|c| c.h_in == 8 && c.group == 2)
+            .unwrap();
+        assert!(
+            ll.gain_pct > 0.0,
+            "expected positive gain in the lower-left region: {ll:?}"
+        );
+    }
+
+    #[test]
+    fn ascii_heatmap_renders_grid() {
+        let inputs = [4usize, 5];
+        let groups = [2usize, 3];
+        let cells = fig13(&inputs, &groups, 3);
+        let text = to_ascii(&inputs, &groups, &cells);
+        assert!(text.contains("Fig 13"));
+        assert!(text.lines().count() >= 6);
+    }
+}

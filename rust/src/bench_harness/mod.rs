@@ -1,0 +1,35 @@
+//! Experiment harness: regenerates every figure of the paper's evaluation
+//! (§7) as CSV series + ASCII plots under `figures/`.
+//!
+//! | Paper artefact | Generator | Output |
+//! |---|---|---|
+//! | Fig. 11 — ZigZag vs Row-by-Row duration vs group size (LeNet-5 conv1) | [`fig11`] | `figures/fig11.csv`, `.txt` |
+//! | Fig. 12 — duration vs input size, group 4: OPL / ZigZag / Row / S1-baseline | [`fig12`] | `figures/fig12.csv`, `.txt` |
+//! | Fig. 13 — OPL gain over best heuristic across (input × group) grid | [`fig13`] | `figures/fig13.csv`, `.txt` |
+//!
+//! Durations use the paper's §7.1 cost model: `t_l = t_acc = 1`, writes
+//! uncharged, kernels preloaded — `δ = Σ|I_slice| + n`.
+
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod plot;
+
+pub use fig11::{fig11, Fig11Row};
+pub use fig12::{fig12, Fig12Row};
+pub use fig13::{fig13, Fig13Cell};
+
+use std::path::Path;
+
+/// Write a CSV + companion ASCII plot into `dir`, creating it if needed.
+pub fn write_outputs(
+    dir: &Path,
+    stem: &str,
+    csv_text: &str,
+    ascii: &str,
+) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{stem}.csv")), csv_text)?;
+    std::fs::write(dir.join(format!("{stem}.txt")), ascii)?;
+    Ok(())
+}

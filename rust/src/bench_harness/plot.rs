@@ -1,0 +1,131 @@
+//! Tiny ASCII plotting: line series and heatmaps for the figure outputs.
+
+/// Render multiple y-series over a shared x-axis as an ASCII chart.
+///
+/// `series` = (label, ys); all series must be as long as `xs`.
+pub fn line_chart(
+    title: &str,
+    x_label: &str,
+    xs: &[u64],
+    series: &[(&str, Vec<u64>)],
+    height: usize,
+) -> String {
+    assert!(!xs.is_empty());
+    for (label, ys) in series {
+        assert_eq!(ys.len(), xs.len(), "series '{label}' length mismatch");
+    }
+    let y_max = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let y_min = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .min()
+        .unwrap_or(0);
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+
+    let width = xs.len();
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let glyph = glyphs[si % glyphs.len()];
+        for (xi, &y) in ys.iter().enumerate() {
+            let span = (y_max - y_min).max(1) as f64;
+            let frac = (y - y_min) as f64 / span;
+            let row = ((height - 1) as f64 * frac).round() as usize;
+            let cell = &mut grid[height - 1 - row][xi];
+            // overlapping points show the later series' glyph + a marker
+            *cell = if *cell == ' ' { glyph } else { '●' };
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", glyphs[si % glyphs.len()], label));
+    }
+    out.push_str(&format!("   ● overlapping points\n y: {y_min}..{y_max}\n"));
+    for row in grid {
+        out.push_str(" |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(" +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "  {x_label}: {}..{} ({} points)\n",
+        xs[0],
+        xs[xs.len() - 1],
+        xs.len()
+    ));
+    out
+}
+
+/// Render a percentage heatmap (rows × cols) with labels.
+pub fn heatmap(
+    title: &str,
+    row_label: &str,
+    col_label: &str,
+    row_keys: &[u64],
+    col_keys: &[u64],
+    values_pct: &[Vec<f64>],
+) -> String {
+    assert_eq!(values_pct.len(), row_keys.len());
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    out.push_str(&format!("   rows: {row_label}, cols: {col_label}, cell: gain %\n\n"));
+    out.push_str("       ");
+    for c in col_keys {
+        out.push_str(&format!("{c:>6}"));
+    }
+    out.push('\n');
+    for (r, row) in row_keys.iter().zip(values_pct) {
+        assert_eq!(row.len(), col_keys.len());
+        out.push_str(&format!("{r:>6} |"));
+        for v in row {
+            out.push_str(&format!("{v:>5.1} "));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders() {
+        let xs = vec![1, 2, 3, 4];
+        let s = vec![("a", vec![1, 2, 3, 4]), ("b", vec![4, 3, 2, 1])];
+        let chart = line_chart("t", "x", &xs, &s, 5);
+        assert!(chart.contains("## t"));
+        assert!(chart.contains("* a"));
+        assert!(chart.contains("o b"));
+        assert!(chart.lines().count() > 8);
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let h = heatmap(
+            "gain",
+            "input",
+            "group",
+            &[4, 5],
+            &[2, 3],
+            &[vec![0.0, 1.5], vec![30.0, 12.25]],
+        );
+        assert!(h.contains("## gain"));
+        assert!(h.contains(" 30.0"));
+        assert!(h.contains("     4 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn line_chart_validates_lengths() {
+        line_chart("t", "x", &[1, 2], &[("a", vec![1])], 3);
+    }
+}

@@ -1,0 +1,158 @@
+//! Configuration system: layer/accelerator presets and TOML-subset files.
+//!
+//! Presets cover the workloads of the paper's evaluation (§7): the LeNet-5
+//! and ResNet-8 convolution layers, the Example-1/2 layer, and the §7.1
+//! square-sweep family. Experiment files use a TOML subset parsed by
+//! [`toml`] (offline substitute — `[section]`s, `key = value` with strings,
+//! integers, booleans).
+
+pub mod presets;
+pub mod toml;
+
+pub use presets::{layer_preset, list_presets, LayerPreset};
+pub use toml::TomlDoc;
+
+use crate::conv::ConvLayer;
+use crate::platform::Accelerator;
+
+/// A fully described experiment: a layer, an accelerator and the strategy
+/// parameters, loadable from a TOML-subset file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub layer: ConvLayer,
+    pub accelerator: Accelerator,
+    pub group_size: usize,
+    pub nb_data_reload: u32,
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-subset text, e.g.:
+    ///
+    /// ```toml
+    /// name = "lenet1-g4"
+    ///
+    /// [layer]
+    /// preset = "lenet5-conv1"   # or explicit c_in/h_in/w_in/h_k/w_k/n/s_h/s_w
+    ///
+    /// [accelerator]
+    /// group_size = 4            # derives nbop_PE and size_MEM per §7.1
+    /// t_l = 1
+    /// t_acc = 1
+    /// t_w = 0
+    ///
+    /// [strategy]
+    /// nb_data_reload = 2
+    /// ```
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let name = doc
+            .get_str("", "name")
+            .unwrap_or("unnamed-experiment")
+            .to_string();
+
+        let layer = if let Some(preset) = doc.get_str("layer", "preset") {
+            layer_preset(preset)
+                .ok_or_else(|| format!("unknown layer preset '{preset}'"))?
+                .layer
+        } else {
+            let g = |k: &str| -> Result<usize, String> {
+                doc.get_int("layer", k)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| format!("[layer] missing '{k}'"))
+            };
+            ConvLayer::new(
+                g("c_in")?,
+                g("h_in")?,
+                g("w_in")?,
+                g("h_k")?,
+                g("w_k")?,
+                g("n")?,
+                doc.get_int("layer", "s_h").unwrap_or(1) as usize,
+                doc.get_int("layer", "s_w").unwrap_or(1) as usize,
+            )?
+        };
+
+        let group_size = doc
+            .get_int("accelerator", "group_size")
+            .map(|v| v as usize)
+            .unwrap_or(4);
+        let mut accelerator = Accelerator::for_group_size(&layer, group_size);
+        if let Some(v) = doc.get_int("accelerator", "t_l") {
+            accelerator.t_l = v as u64;
+        }
+        if let Some(v) = doc.get_int("accelerator", "t_w") {
+            accelerator.t_w = v as u64;
+        }
+        if let Some(v) = doc.get_int("accelerator", "t_acc") {
+            accelerator.t_acc = v as u64;
+        }
+        if let Some(v) = doc.get_int("accelerator", "nbop_pe") {
+            accelerator.nbop_pe = v as u64;
+        }
+        if let Some(v) = doc.get_int("accelerator", "size_mem") {
+            accelerator.size_mem = v as u64;
+        }
+
+        let nb_data_reload =
+            doc.get_int("strategy", "nb_data_reload").unwrap_or(2) as u32;
+
+        Ok(ExperimentConfig { name, layer, accelerator, group_size, nb_data_reload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_preset_experiment() {
+        let text = r#"
+name = "demo"
+
+[layer]
+preset = "example1"
+
+[accelerator]
+group_size = 2
+t_w = 1
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.name, "demo");
+        assert_eq!(cfg.layer.c_in, 2);
+        assert_eq!(cfg.layer.h_in, 5);
+        assert_eq!(cfg.group_size, 2);
+        assert_eq!(cfg.accelerator.t_w, 1);
+        assert_eq!(cfg.accelerator.max_patches_per_step(&cfg.layer), 2);
+        assert_eq!(cfg.nb_data_reload, 2);
+    }
+
+    #[test]
+    fn parses_explicit_layer() {
+        let text = r#"
+[layer]
+c_in = 3
+h_in = 9
+w_in = 7
+h_k = 3
+w_k = 3
+n = 4
+s_h = 2
+
+[accelerator]
+group_size = 3
+nbop_pe = 999
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.layer.c_in, 3);
+        assert_eq!(cfg.layer.s_h, 2);
+        assert_eq!(cfg.layer.s_w, 1);
+        assert_eq!(cfg.accelerator.nbop_pe, 999);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ExperimentConfig::from_toml("[layer]\npreset = \"nope\"\n").is_err());
+        assert!(ExperimentConfig::from_toml("[layer]\nc_in = 1\n").is_err());
+    }
+}

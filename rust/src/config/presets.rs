@@ -1,0 +1,115 @@
+//! Layer presets: the workloads of the paper's evaluation.
+//!
+//! §7.2 compares strategies “on the convolutional layers of ResNet8 and
+//! LeNet-5”; §7.1 sweeps square layers `H_in = W_in ∈ [4, 12]` with 3×3
+//! kernels. Inputs are pre-padded per Remark 2 (so ResNet-8's same-padded
+//! 3×3 layers get `H_in + 2` here).
+
+use crate::conv::ConvLayer;
+
+/// A named layer preset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPreset {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub layer: ConvLayer,
+    /// Name of the AOT step-artifact family for this layer, if emitted.
+    pub artifact_hint: Option<&'static str>,
+}
+
+fn all() -> Vec<LayerPreset> {
+    vec![
+        LayerPreset {
+            name: "example1",
+            description: "Example 1/2 of the paper: 2x5x5 input, two 3x3 kernels",
+            layer: ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap(),
+            artifact_hint: Some("step_example1_g8"),
+        },
+        LayerPreset {
+            name: "lenet5-conv1",
+            description: "LeNet-5 conv1: 1x32x32 input, six 5x5 kernels (Fig. 11's layer)",
+            layer: ConvLayer::new(1, 32, 32, 5, 5, 6, 1, 1).unwrap(),
+            artifact_hint: Some("step_lenet1_g8"),
+        },
+        LayerPreset {
+            name: "lenet5-conv2",
+            description: "LeNet-5 conv2: 6x14x14 input, sixteen 5x5 kernels",
+            layer: ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap(),
+            artifact_hint: Some("step_lenet2_g8"),
+        },
+        LayerPreset {
+            name: "resnet8-conv1",
+            description: "ResNet-8 first 3x3 stage on 32x32 (pre-padded to 34x34), 16 kernels",
+            layer: ConvLayer::new(3, 34, 34, 3, 3, 16, 1, 1).unwrap(),
+            artifact_hint: None,
+        },
+        LayerPreset {
+            name: "resnet8-conv2",
+            description: "ResNet-8 stage-2 3x3 block on 16x16 (pre-padded to 18x18), 16 kernels",
+            layer: ConvLayer::new(16, 18, 18, 3, 3, 16, 1, 1).unwrap(),
+            artifact_hint: None,
+        },
+        LayerPreset {
+            name: "paper-sweep-8",
+            description: "§7.1 sweep member: 1x8x8 input, one 3x3 kernel",
+            layer: ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap(),
+            artifact_hint: Some("step_paper_g8"),
+        },
+        LayerPreset {
+            name: "paper-sweep-12",
+            description: "§7.1 sweep member: 1x12x12 input, one 3x3 kernel",
+            layer: ConvLayer::new(1, 12, 12, 3, 3, 1, 1, 1).unwrap(),
+            artifact_hint: Some("step_paper_g8"),
+        },
+    ]
+}
+
+/// Look up a preset by name.
+pub fn layer_preset(name: &str) -> Option<LayerPreset> {
+    all().into_iter().find(|p| p.name == name)
+}
+
+/// All presets (for `--layer list` style CLI output).
+pub fn list_presets() -> Vec<LayerPreset> {
+    all()
+}
+
+/// The §7.1 sweep family: square `H_in = W_in ∈ [4, 12]`, one 3×3 kernel,
+/// stride 1 (the paper sets `N = 1` because it “does not affect the
+/// optimization of the S1 strategy”).
+pub fn paper_sweep_layer(h_in: usize) -> ConvLayer {
+    ConvLayer::square(1, h_in, 3, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for p in list_presets() {
+            assert!(p.layer.validate().is_ok(), "{}", p.name);
+            assert_eq!(layer_preset(p.name).as_ref(), Some(&p));
+        }
+        assert!(layer_preset("bogus").is_none());
+    }
+
+    #[test]
+    fn lenet1_dimensions() {
+        let p = layer_preset("lenet5-conv1").unwrap();
+        assert_eq!(p.layer.h_out(), 28);
+        assert_eq!(p.layer.w_out(), 28);
+        assert_eq!(p.layer.n_patches(), 784);
+        assert_eq!(p.layer.ops_per_patch(), 25 * 6);
+    }
+
+    #[test]
+    fn sweep_layers_match_paper_grid() {
+        for h in 4..=12 {
+            let l = paper_sweep_layer(h);
+            assert_eq!(l.h_out(), h - 2);
+            assert_eq!(l.c_in, 1);
+            assert_eq!(l.n_kernels, 1);
+        }
+    }
+}

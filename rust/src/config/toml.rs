@@ -1,0 +1,180 @@
+//! TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports the subset experiment files need: `[section]` headers,
+//! `key = value` pairs with quoted strings, integers, floats and booleans,
+//! `#` comments and blank lines. No arrays, nested tables or multi-line
+//! strings — configs stay flat by design.
+
+use std::collections::BTreeMap;
+
+/// A parsed document: `(section, key) → raw value`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<(String, String), Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(format!("line {}: bad section name", lineno + 1));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(value.trim())
+                .ok_or_else(|| format!("line {}: bad value '{}'", lineno + 1, value.trim()))?;
+            doc.values
+                .insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// All `(section, key)` pairs (for diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.keys().map(|(s, k)| (s.as_str(), k.as_str()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None; // no escapes in the subset
+        }
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Some(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Some(Value::Float(v));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+name = "top"        # a comment
+count = 42
+
+[sec]
+ratio = 1.5
+flag = true
+label = "x # not a comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("top"));
+        assert_eq!(doc.get_int("", "count"), Some(42));
+        assert_eq!(doc.get_float("sec", "ratio"), Some(1.5));
+        assert_eq!(doc.get_bool("sec", "flag"), Some(true));
+        assert_eq!(doc.get_str("sec", "label"), Some("x # not a comment"));
+        assert_eq!(doc.keys().count(), 5);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_float("", "x"), Some(3.0));
+        assert_eq!(doc.get_str("", "x"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("keyonly\n").is_err());
+        assert!(TomlDoc::parse("x = \"unclosed\n").is_err());
+        assert!(TomlDoc::parse("x = what\n").is_err());
+        assert!(TomlDoc::parse(" = 3\n").is_err());
+    }
+
+    #[test]
+    fn later_values_override() {
+        let doc = TomlDoc::parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(doc.get_int("", "x"), Some(2));
+    }
+}

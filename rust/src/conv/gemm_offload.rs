@@ -1,0 +1,235 @@
+//! Convolution-as-GeMM offloading (the TMMA/VTA adaptation of §1.3 and the
+//! §8 im2col discussion).
+//!
+//! GeMM-based accelerators (TMMA, VTA) execute convolutions as
+//! `C = A × B` with `A = im2col(I) ∈ R^{|X| × D}` and
+//! `B = kernels ∈ R^{D × N}` (`D = C_in·H_K·W_K`). The block-GeMM schedule
+//! slices `A` into `m_tile × k_tile` tiles and `B` into `k_tile × n_tile`
+//! tiles, accumulating partial products on chip — each tile pass is a step
+//! of the same formalism (free / write / load / compute).
+//!
+//! The key §8 observation this module quantifies: **im2col duplicates the
+//! overlapping pixels**, so the GeMM path has no inter-step data reuse —
+//! every element of `A` (size `|X|·D ≥ C_in·H_in·W_in`) is loaded at least
+//! once per k-sweep, whereas the direct S1 strategies load each input
+//! element `≤ nb_data_reload` times. [`compare_with_s1`] reports the ratio.
+
+use crate::conv::ConvLayer;
+use crate::platform::Accelerator;
+
+/// Block-GeMM tiling parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTiling {
+    /// Rows of `A` per tile (patches per step).
+    pub m_tile: usize,
+    /// Contraction slice per tile.
+    pub k_tile: usize,
+    /// Columns of `B` per tile (kernels per step).
+    pub n_tile: usize,
+}
+
+/// Cost model of a block-GeMM offload schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmOffloadCost {
+    /// GeMM dimensions `(M, K, N) = (|X|, D, N)`.
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Number of compute steps (tile passes).
+    pub steps: u64,
+    /// Elements of `A` loaded (with duplication!).
+    pub a_loaded: u64,
+    /// Elements of `B` loaded.
+    pub b_loaded: u64,
+    /// Partial-`C` elements written back (one per output per k-sweep chunk
+    /// beyond the first, plus the final write).
+    pub c_written: u64,
+    /// Peak on-chip elements during a step.
+    pub peak_occupancy: u64,
+}
+
+impl GemmOffloadCost {
+    /// Duration under the platform's linear model (Definition 3 applied to
+    /// the tile steps).
+    pub fn duration(&self, acc: &Accelerator) -> u64 {
+        (self.a_loaded + self.b_loaded) * acc.t_l
+            + self.c_written * acc.t_w
+            + self.steps * acc.t_acc
+    }
+
+    /// im2col duplication factor: elements of `A` vs distinct input elements.
+    pub fn duplication_factor(&self, layer: &ConvLayer) -> f64 {
+        (self.m * self.k) as f64 / layer.input_dims().len() as f64
+    }
+}
+
+/// Analyze a block-GeMM schedule for `layer` under `tiling`.
+///
+/// Loop order is the standard output-stationary `for mi / for ni / for ki`:
+/// a `C` tile stays resident across the k-sweep (accumulation), `A` and `B`
+/// tiles stream. `B` tiles are re-loaded once per `mi` (no persistent cache,
+/// matching the BRAM-per-step model of §1.3's TMMA).
+pub fn analyze(layer: &ConvLayer, tiling: GemmTiling) -> Result<GemmOffloadCost, String> {
+    let m = layer.n_patches();
+    let k = layer.ops_per_output_value();
+    let n = layer.n_kernels;
+    if tiling.m_tile == 0 || tiling.k_tile == 0 || tiling.n_tile == 0 {
+        return Err("tile sizes must be ≥ 1".into());
+    }
+    let mi = m.div_ceil(tiling.m_tile) as u64;
+    let ki = k.div_ceil(tiling.k_tile) as u64;
+    let ni = n.div_ceil(tiling.n_tile) as u64;
+
+    // Every (mi, ni, ki) triple is one step.
+    let steps = mi * ni * ki;
+    // A tiles: for each mi, the full k extent streams once per ni.
+    let a_loaded = (m * k) as u64 * ni;
+    // B tiles: full B streams once per mi.
+    let b_loaded = (k * n) as u64 * mi;
+    // C: written back once per (mi, ni) after its k-sweep (partials stay on
+    // chip during the sweep).
+    let c_written = (m * n) as u64;
+    // Peak: one A tile + one B tile + one C tile.
+    let peak = (tiling.m_tile * tiling.k_tile
+        + tiling.k_tile * tiling.n_tile
+        + tiling.m_tile * tiling.n_tile) as u64;
+
+    Ok(GemmOffloadCost {
+        m,
+        k,
+        n,
+        steps,
+        a_loaded,
+        b_loaded,
+        c_written,
+        peak_occupancy: peak,
+    })
+}
+
+/// Pick the duration-minimizing tiling that fits `size_MEM` (exhaustive over
+/// divisor-ish candidates — the spaces are tiny).
+pub fn best_tiling(layer: &ConvLayer, acc: &Accelerator) -> Option<(GemmTiling, GemmOffloadCost)> {
+    let m = layer.n_patches();
+    let k = layer.ops_per_output_value();
+    let n = layer.n_kernels;
+    let mut best: Option<(GemmTiling, GemmOffloadCost, u64)> = None;
+    let candidates = |dim: usize| -> Vec<usize> {
+        let mut v: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 128]
+            .into_iter()
+            .filter(|&x| x <= dim)
+            .collect();
+        if !v.contains(&dim) {
+            v.push(dim);
+        }
+        v
+    };
+    for &mt in &candidates(m) {
+        for &kt in &candidates(k) {
+            for &nt in &candidates(n) {
+                let tiling = GemmTiling { m_tile: mt, k_tile: kt, n_tile: nt };
+                let cost = analyze(layer, tiling).expect("valid tiles");
+                if cost.peak_occupancy > acc.size_mem {
+                    continue;
+                }
+                // respect the MAC bound per step too
+                let macs = (mt * kt * nt) as u64;
+                if macs > acc.nbop_pe {
+                    continue;
+                }
+                let d = cost.duration(acc);
+                if best.as_ref().map_or(true, |&(_, _, bd)| d < bd) {
+                    best = Some((tiling, cost, d));
+                }
+            }
+        }
+    }
+    best.map(|(t, c, _)| (t, c))
+}
+
+/// Compare the best GeMM schedule with a direct-S1 strategy's loads: returns
+/// `(gemm_duration, s1_duration, input_traffic_ratio)`.
+pub fn compare_with_s1(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    s1_strategy: &crate::strategy::GroupedStrategy,
+) -> Option<(u64, u64, f64)> {
+    let (_, gemm) = best_tiling(layer, acc)?;
+    let gemm_dur = gemm.duration(acc);
+    let s1_dur =
+        crate::optimizer::grouping_duration(layer, acc, &s1_strategy.groups);
+    let s1_loads =
+        crate::optimizer::grouping_loads(layer, &s1_strategy.groups) * layer.c_in as u64;
+    let ratio = gemm.a_loaded as f64 / s1_loads.max(1) as f64;
+    Some((gemm_dur, s1_dur, ratio))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new(1, 12, 12, 3, 3, 4, 1, 1).unwrap() // M=100, K=9, N=4
+    }
+
+    #[test]
+    fn analyze_counts_steps_and_traffic() {
+        let l = layer();
+        let t = GemmTiling { m_tile: 10, k_tile: 9, n_tile: 4 };
+        let c = analyze(&l, t).unwrap();
+        assert_eq!((c.m, c.k, c.n), (100, 9, 4));
+        assert_eq!(c.steps, 10); // 10 × 1 × 1
+        assert_eq!(c.a_loaded, 900); // full A once (ni = 1)
+        assert_eq!(c.b_loaded, 36 * 10); // B per mi
+        assert_eq!(c.c_written, 400);
+        assert_eq!(c.peak_occupancy, (90 + 36 + 40) as u64);
+    }
+
+    #[test]
+    fn duplication_factor_reflects_im2col_overhead() {
+        let l = layer();
+        let c = analyze(&l, GemmTiling { m_tile: 100, k_tile: 9, n_tile: 4 }).unwrap();
+        // A = 100×9 = 900 elements vs 144 distinct inputs → 6.25×
+        let f = c.duplication_factor(&l);
+        assert!((f - 6.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_tiling_fits_constraints() {
+        let l = layer();
+        let acc = Accelerator { nbop_pe: 360, t_acc: 1, size_mem: 200, t_l: 1, t_w: 0 };
+        let (t, c) = best_tiling(&l, &acc).expect("some tiling fits");
+        assert!(c.peak_occupancy <= acc.size_mem);
+        assert!((t.m_tile * t.k_tile * t.n_tile) as u64 <= acc.nbop_pe);
+    }
+
+    #[test]
+    fn no_tiling_fits_tiny_memory() {
+        let l = layer();
+        let acc = Accelerator { nbop_pe: 100, t_acc: 1, size_mem: 2, t_l: 1, t_w: 0 };
+        assert!(best_tiling(&l, &acc).is_none());
+    }
+
+    #[test]
+    fn s1_beats_gemm_on_input_traffic() {
+        // The §8 claim: duplicated patches ⇒ no reuse opportunity for GeMM.
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 4);
+        let s1 = strategy::zigzag(&l, 4);
+        let (gemm_dur, s1_dur, ratio) = compare_with_s1(&l, &acc, &s1).unwrap();
+        assert!(
+            ratio > 2.0,
+            "im2col duplication should multiply input traffic (got {ratio:.2})"
+        );
+        assert!(
+            gemm_dur > s1_dur,
+            "direct S1 should beat GeMM under the same machine: {gemm_dur} vs {s1_dur}"
+        );
+    }
+
+    #[test]
+    fn rejects_zero_tiles() {
+        let l = layer();
+        assert!(analyze(&l, GemmTiling { m_tile: 0, k_tile: 1, n_tile: 1 }).is_err());
+    }
+}

@@ -1,0 +1,321 @@
+//! [`ConvLayer`] — the application model of the paper (Definitions 5–8).
+
+use crate::conv::{Patch, PatchId};
+use crate::tensor::{Dims3, PixelSet, Rect};
+
+/// A 2D convolution layer over a (pre-padded, Remark 2) 3D input.
+///
+/// `O[l,i,j] = Σ_c Σ_h Σ_w I[c, i·s_h + h, j·s_w + w] · K^l[c,h,w]`
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Input channels `C_in`.
+    pub c_in: usize,
+    /// Input height `H_in` (after padding).
+    pub h_in: usize,
+    /// Input width `W_in` (after padding).
+    pub w_in: usize,
+    /// Kernel height `H_K`.
+    pub h_k: usize,
+    /// Kernel width `W_K`.
+    pub w_k: usize,
+    /// Number of kernels `N = C_out`.
+    pub n_kernels: usize,
+    /// Stride along height `s_h`.
+    pub s_h: usize,
+    /// Stride along width `s_w`.
+    pub s_w: usize,
+}
+
+impl ConvLayer {
+    /// Construct with validation.
+    pub fn new(
+        c_in: usize,
+        h_in: usize,
+        w_in: usize,
+        h_k: usize,
+        w_k: usize,
+        n_kernels: usize,
+        s_h: usize,
+        s_w: usize,
+    ) -> Result<Self, String> {
+        let l = ConvLayer { c_in, h_in, w_in, h_k, w_k, n_kernels, s_h, s_w };
+        l.validate()?;
+        Ok(l)
+    }
+
+    /// Square-image, square-kernel, unit-stride shorthand used throughout the
+    /// paper's evaluation (§7.1).
+    pub fn square(c_in: usize, h_in: usize, h_k: usize, n_kernels: usize) -> Self {
+        ConvLayer::new(c_in, h_in, h_in, h_k, h_k, n_kernels, 1, 1)
+            .expect("square layer parameters must be valid")
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.c_in == 0 || self.h_in == 0 || self.w_in == 0 {
+            return Err("input dimensions must be positive".into());
+        }
+        if self.h_k == 0 || self.w_k == 0 || self.n_kernels == 0 {
+            return Err("kernel dimensions must be positive".into());
+        }
+        if self.s_h == 0 || self.s_w == 0 {
+            return Err("strides must be positive".into());
+        }
+        if self.h_k > self.h_in || self.w_k > self.w_in {
+            return Err(format!(
+                "kernel {}x{} larger than input {}x{}",
+                self.h_k, self.w_k, self.h_in, self.w_in
+            ));
+        }
+        Ok(())
+    }
+
+    /// `H_out = ⌊(H_in − H_K)/s_h⌋ + 1` (input already padded, Definition 8).
+    pub fn h_out(&self) -> usize {
+        (self.h_in - self.h_k) / self.s_h + 1
+    }
+
+    /// `W_out = ⌊(W_in − W_K)/s_w⌋ + 1`.
+    pub fn w_out(&self) -> usize {
+        (self.w_in - self.w_k) / self.s_w + 1
+    }
+
+    /// `C_out = N`.
+    pub fn c_out(&self) -> usize {
+        self.n_kernels
+    }
+
+    pub fn input_dims(&self) -> Dims3 {
+        Dims3::new(self.c_in, self.h_in, self.w_in)
+    }
+
+    pub fn output_dims(&self) -> Dims3 {
+        Dims3::new(self.c_out(), self.h_out(), self.w_out())
+    }
+
+    pub fn kernel_dims(&self) -> Dims3 {
+        Dims3::new(self.c_in, self.h_k, self.w_k)
+    }
+
+    /// Spatial-pixel universe size (`H_in × W_in`, Remark 6).
+    pub fn n_pixels(&self) -> usize {
+        self.h_in * self.w_in
+    }
+
+    /// `|X| = H_out × W_out` — the number of patches (Definition 11).
+    pub fn n_patches(&self) -> usize {
+        self.h_out() * self.w_out()
+    }
+
+    /// Total elements of all kernels: `C_out · C_in · H_K · W_K`.
+    pub fn kernel_elements(&self) -> usize {
+        self.n_kernels * self.c_in * self.h_k * self.w_k
+    }
+
+    /// MACs to produce one output value (Definition 13):
+    /// `nb_op_value = C_in · H_K · W_K`.
+    pub fn ops_per_output_value(&self) -> usize {
+        self.c_in * self.h_k * self.w_k
+    }
+
+    /// MACs for one S1 patch — all `C_out` channels (Property 1).
+    pub fn ops_per_patch(&self) -> usize {
+        self.ops_per_output_value() * self.c_out()
+    }
+
+    /// Patch from its row-major id (Remark 4).
+    pub fn patch(&self, id: PatchId) -> Patch {
+        let w_out = self.w_out();
+        let i = id as usize / w_out;
+        let j = id as usize % w_out;
+        debug_assert!(i < self.h_out(), "patch id out of range");
+        Patch { id, i, j }
+    }
+
+    /// Patch id from output spatial coordinates `(i, j)`.
+    pub fn patch_id(&self, i: usize, j: usize) -> PatchId {
+        debug_assert!(i < self.h_out() && j < self.w_out());
+        (i * self.w_out() + j) as PatchId
+    }
+
+    /// All patch ids in row-major order — the set `X` (Definition 11).
+    pub fn all_patches(&self) -> impl Iterator<Item = PatchId> {
+        0..self.n_patches() as PatchId
+    }
+
+    /// Spatial rectangle of input pixels read by patch `(i, j)`
+    /// (Definition 10: rows `[s_h·i, s_h·i + H_K)`, cols `[s_w·j, s_w·j + W_K)`).
+    pub fn patch_rect(&self, id: PatchId) -> Rect {
+        let p = self.patch(id);
+        Rect::new(
+            self.s_h * p.i,
+            self.s_h * p.i + self.h_k,
+            self.s_w * p.j,
+            self.s_w * p.j + self.w_k,
+        )
+    }
+
+    /// Pixel set of one patch.
+    ///
+    /// Patch rows are contiguous pixel-id ranges, so insertion is word-masked
+    /// (`PixelSet::insert_range`) rather than per-pixel — this is the hot
+    /// path of both the simulator and the optimizer's objective.
+    pub fn patch_pixels(&self, id: PatchId) -> PixelSet {
+        let mut s = PixelSet::empty(self.n_pixels());
+        self.add_patch_pixels(&mut s, id);
+        s
+    }
+
+    /// Union of pixel sets of a group of patches (the group's input
+    /// footprint, Definition 16).
+    pub fn group_pixels(&self, group: &[PatchId]) -> PixelSet {
+        let mut s = PixelSet::empty(self.n_pixels());
+        for &p in group {
+            self.add_patch_pixels(&mut s, p);
+        }
+        s
+    }
+
+    /// Allocation-free variant of [`ConvLayer::group_pixels`]: clears and
+    /// refills an existing buffer (annealer hot path).
+    pub fn group_pixels_into(&self, s: &mut PixelSet, group: &[PatchId]) {
+        debug_assert_eq!(s.universe(), self.n_pixels());
+        s.clear();
+        for &p in group {
+            self.add_patch_pixels(s, p);
+        }
+    }
+
+    #[inline]
+    fn add_patch_pixels(&self, s: &mut PixelSet, id: PatchId) {
+        let rect = self.patch_rect(id);
+        for h in rect.h0..rect.h1 {
+            let row = (h * self.w_in) as u32;
+            s.insert_range(row + rect.w0 as u32, row + rect.w1 as u32);
+        }
+    }
+
+    /// Allocation-free check that a patch's entire footprint is contained in
+    /// `resident` (used by the step semantics on every compute action).
+    pub fn patch_resident(&self, resident: &PixelSet, id: PatchId) -> bool {
+        let rect = self.patch_rect(id);
+        for h in rect.h0..rect.h1 {
+            let row = (h * self.w_in) as u32;
+            if !resident.contains_range(row + rect.w0 as u32, row + rect.w1 as u32) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Spatial overlap (pixel count) between two individual patches.
+    pub fn patch_overlap(&self, a: PatchId, b: PatchId) -> usize {
+        match self.patch_rect(a).intersect(&self.patch_rect(b)) {
+            Some(r) => r.area(),
+            None => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for ConvLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conv(in={}x{}x{}, k={}x{}x{}x{}, s={}x{}) -> {}",
+            self.c_in, self.h_in, self.w_in,
+            self.n_kernels, self.c_in, self.h_k, self.w_k,
+            self.s_h, self.s_w,
+            self.output_dims(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The layer of Example 1: I ∈ R^{2×5×5}, two 3×3 kernels, stride 1.
+    fn example1() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    #[test]
+    fn output_dims_match_definition8() {
+        let l = example1();
+        assert_eq!(l.h_out(), 3);
+        assert_eq!(l.w_out(), 3);
+        assert_eq!(l.c_out(), 2);
+        assert_eq!(l.n_patches(), 9);
+    }
+
+    #[test]
+    fn strided_output_dims() {
+        let l = ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 2).unwrap();
+        assert_eq!(l.h_out(), 3);
+        assert_eq!(l.w_out(), 4);
+    }
+
+    #[test]
+    fn ops_counts_match_definition13_property1() {
+        let l = example1();
+        assert_eq!(l.ops_per_output_value(), 2 * 3 * 3);
+        assert_eq!(l.ops_per_patch(), 2 * 3 * 3 * 2);
+    }
+
+    #[test]
+    fn patch_rects_match_example1_figure7() {
+        let l = example1();
+        // P_{0,0}: top-left 3x3
+        assert_eq!(l.patch_rect(l.patch_id(0, 0)), Rect::new(0, 3, 0, 3));
+        // P_{1,1}: centre
+        assert_eq!(l.patch_rect(l.patch_id(1, 1)), Rect::new(1, 4, 1, 4));
+        // P_{2,2}: bottom-right
+        assert_eq!(l.patch_rect(l.patch_id(2, 2)), Rect::new(2, 5, 2, 5));
+    }
+
+    #[test]
+    fn patch_id_roundtrip() {
+        let l = example1();
+        for id in l.all_patches() {
+            let p = l.patch(id);
+            assert_eq!(l.patch_id(p.i, p.j), id);
+        }
+    }
+
+    #[test]
+    fn patch_pixels_count() {
+        let l = example1();
+        for id in l.all_patches() {
+            assert_eq!(l.patch_pixels(id).len(), 9);
+        }
+    }
+
+    #[test]
+    fn group_pixels_is_union() {
+        let l = example1();
+        let g = [l.patch_id(0, 0), l.patch_id(0, 1)];
+        // adjacent patches overlap in 3x2 = 6 pixels → union = 9+9-6 = 12
+        assert_eq!(l.group_pixels(&g).len(), 12);
+        assert_eq!(l.patch_overlap(g[0], g[1]), 6);
+    }
+
+    #[test]
+    fn overlap_strided() {
+        // stride 3 with 3x3 kernels → adjacent patches are disjoint
+        let l = ConvLayer::new(1, 9, 9, 3, 3, 1, 3, 3).unwrap();
+        assert_eq!(l.patch_overlap(l.patch_id(0, 0), l.patch_id(0, 1)), 0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_layers() {
+        assert!(ConvLayer::new(0, 5, 5, 3, 3, 1, 1, 1).is_err());
+        assert!(ConvLayer::new(1, 5, 5, 6, 3, 1, 1, 1).is_err());
+        assert!(ConvLayer::new(1, 5, 5, 3, 3, 1, 0, 1).is_err());
+        assert!(ConvLayer::new(1, 5, 5, 3, 3, 0, 1, 1).is_err());
+    }
+
+    #[test]
+    fn kernel_elements() {
+        let l = example1();
+        assert_eq!(l.kernel_elements(), 2 * 2 * 3 * 3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Convolution layer model (§3 of the paper).
+//!
+//! * [`ConvLayer`] — Definitions 5–8: dimensions, strides, output shape.
+//!   Inputs are assumed pre-padded (Remark 2).
+//! * [`Patch`] / [`PatchId`] — Definition 10–11: the input slice feeding one
+//!   output spatial position, and the set `X` of all patches.
+//! * [`reference`] — a pure-Rust convolution oracle plus im2col, used by the
+//!   functional simulation (fast path) and to cross-check the PJRT-executed
+//!   AOT kernels.
+
+pub mod gemm_offload;
+mod layer;
+mod patch;
+pub mod reference;
+
+pub use layer::ConvLayer;
+pub use patch::{Patch, PatchId};

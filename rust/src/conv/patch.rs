@@ -1,0 +1,40 @@
+//! Patches (Definition 10) and their identifiers.
+
+/// Row-major patch identifier (Remark 4): `id = i · W_out + j`.
+pub type PatchId = u32;
+
+/// A patch `P_{i,j}` — the input slice feeding output spatial position
+/// `(i, j)` across all output channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Patch {
+    /// Row-major linearized id.
+    pub id: PatchId,
+    /// Output row index `i`.
+    pub i: usize,
+    /// Output column index `j`.
+    pub j: usize,
+}
+
+impl Patch {
+    /// Manhattan distance between patch grid positions (used by ordering
+    /// heuristics to reason about locality).
+    pub fn grid_distance(&self, other: &Patch) -> usize {
+        self.i.abs_diff(other.i) + self.j.abs_diff(other.j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvLayer;
+
+    #[test]
+    fn grid_distance() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let a = l.patch(l.patch_id(0, 0));
+        let b = l.patch(l.patch_id(2, 3));
+        assert_eq!(a.grid_distance(&b), 5);
+        assert_eq!(b.grid_distance(&a), 5);
+        assert_eq!(a.grid_distance(&a), 0);
+    }
+}

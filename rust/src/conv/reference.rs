@@ -1,0 +1,273 @@
+//! Pure-Rust convolution oracle and im2col.
+//!
+//! Serves three roles:
+//! 1. reference output for the *functional simulation* (the simulator checks
+//!    that a strategy's stepwise computation reproduces the whole-layer
+//!    convolution, §6);
+//! 2. the host-side compute backend when PJRT artifacts are not built;
+//! 3. cross-check for the AOT Pallas kernel executed through the runtime.
+//!
+//! Tensors are `f32` in channel-major layout (Remark 5):
+//! input `[C_in, H_in, W_in]`, kernels `[N, C_in, H_K, W_K]`,
+//! output `[C_out, H_out, W_out]`.
+
+use crate::conv::{ConvLayer, PatchId};
+
+/// Full-layer convolution: `O[l,i,j] = Σ_{c,h,w} I[c, i·s_h+h, j·s_w+w] · K^l[c,h,w]`.
+pub fn conv2d(layer: &ConvLayer, input: &[f32], kernels: &[f32]) -> Vec<f32> {
+    assert_eq!(input.len(), layer.input_dims().len(), "input size mismatch");
+    assert_eq!(
+        kernels.len(),
+        layer.kernel_elements(),
+        "kernel size mismatch"
+    );
+    let (h_out, w_out) = (layer.h_out(), layer.w_out());
+    let mut out = vec![0f32; layer.output_dims().len()];
+    for l in 0..layer.c_out() {
+        for i in 0..h_out {
+            for j in 0..w_out {
+                out[(l * h_out + i) * w_out + j] =
+                    dot_patch_kernel(layer, input, kernels, l, i, j);
+            }
+        }
+    }
+    out
+}
+
+/// One output value (Definition 13's `nb_op_value` MACs).
+pub fn output_value(
+    layer: &ConvLayer,
+    input: &[f32],
+    kernels: &[f32],
+    l: usize,
+    i: usize,
+    j: usize,
+) -> f32 {
+    dot_patch_kernel(layer, input, kernels, l, i, j)
+}
+
+#[inline]
+fn dot_patch_kernel(
+    layer: &ConvLayer,
+    input: &[f32],
+    kernels: &[f32],
+    l: usize,
+    i: usize,
+    j: usize,
+) -> f32 {
+    let (h_in, w_in) = (layer.h_in, layer.w_in);
+    let (h_k, w_k) = (layer.h_k, layer.w_k);
+    let mut acc = 0f32;
+    for c in 0..layer.c_in {
+        let in_base = c * h_in * w_in;
+        let k_base = (l * layer.c_in + c) * h_k * w_k;
+        for h in 0..h_k {
+            let row = in_base + (i * layer.s_h + h) * w_in + j * layer.s_w;
+            let krow = k_base + h * w_k;
+            for w in 0..w_k {
+                acc += input[row + w] * kernels[krow + w];
+            }
+        }
+    }
+    acc
+}
+
+/// Gather one patch's values as an im2col row of length `C_in·H_K·W_K`
+/// (channel-major: all of channel 0's window, then channel 1's, …).
+pub fn im2col_row(layer: &ConvLayer, input: &[f32], patch: PatchId, out: &mut [f32]) {
+    let p = layer.patch(patch);
+    let (h_in, w_in) = (layer.h_in, layer.w_in);
+    let mut idx = 0;
+    for c in 0..layer.c_in {
+        let base = c * h_in * w_in;
+        for h in 0..layer.h_k {
+            let row = base + (p.i * layer.s_h + h) * w_in + p.j * layer.s_w;
+            out[idx..idx + layer.w_k].copy_from_slice(&input[row..row + layer.w_k]);
+            idx += layer.w_k;
+        }
+    }
+    debug_assert_eq!(idx, layer.ops_per_output_value());
+}
+
+/// im2col matrix for a group of patches: `[len(group), C_in·H_K·W_K]`
+/// row-major. The GeMM `patches @ kernelsᵀ` then yields `[group, C_out]` —
+/// exactly the per-step compute of strategy S1 (Property 1).
+pub fn im2col_group(layer: &ConvLayer, input: &[f32], group: &[PatchId]) -> Vec<f32> {
+    let d = layer.ops_per_output_value();
+    let mut m = vec![0f32; group.len() * d];
+    for (r, &p) in group.iter().enumerate() {
+        im2col_row(layer, input, p, &mut m[r * d..(r + 1) * d]);
+    }
+    m
+}
+
+/// Kernels flattened to a `[C_in·H_K·W_K, N]` column-major-by-kernel matrix
+/// (i.e. `K_mat[d, l] = K^l[d]` with `d` channel-major) so that
+/// `im2col_group(..) @ kernel_matrix(..)` is a plain row-major GEMM.
+pub fn kernel_matrix(layer: &ConvLayer, kernels: &[f32]) -> Vec<f32> {
+    let d = layer.ops_per_output_value();
+    let n = layer.n_kernels;
+    let mut m = vec![0f32; d * n];
+    for l in 0..n {
+        for e in 0..d {
+            m[e * n + l] = kernels[l * d + e];
+        }
+    }
+    m
+}
+
+/// Row-major GEMM: `a [rows×inner] @ b [inner×cols] → [rows×cols]`.
+pub fn gemm(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * inner);
+    assert_eq!(b.len(), inner * cols);
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        for k in 0..inner {
+            let av = a[r * inner + k];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[k * cols..(k + 1) * cols];
+            let orow = &mut out[r * cols..(r + 1) * cols];
+            for c in 0..cols {
+                orow[c] += av * brow[c];
+            }
+        }
+    }
+    out
+}
+
+/// Per-step compute of S1 as the accelerator performs it: the group's patches
+/// against **all** kernels, returning `[len(group), C_out]` row-major.
+pub fn step_compute(
+    layer: &ConvLayer,
+    input: &[f32],
+    kernels: &[f32],
+    group: &[PatchId],
+) -> Vec<f32> {
+    let d = layer.ops_per_output_value();
+    let pm = im2col_group(layer, input, group);
+    let km = kernel_matrix(layer, kernels);
+    gemm(&pm, &km, group.len(), d, layer.n_kernels)
+}
+
+/// Deterministic pseudo-random tensor fill (for tests / examples): values in
+/// `[-1, 1)` from a seeded generator.
+pub fn synth_tensor(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvLayer;
+
+    fn example1() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    /// Hand-computed identity check: a kernel that is a delta at (0,0,0)
+    /// copies the corresponding input window value.
+    #[test]
+    fn delta_kernel_copies_input() {
+        let l = ConvLayer::new(1, 4, 4, 2, 2, 1, 1, 1).unwrap();
+        let input: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let mut kernels = vec![0f32; 4];
+        kernels[0] = 1.0; // delta at top-left of the window
+        let out = conv2d(&l, &input, &kernels);
+        // O[i,j] = I[i,j]
+        let expect: Vec<f32> = (0..3)
+            .flat_map(|i| (0..3).map(move |j| (i * 4 + j) as f32))
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn ones_kernel_sums_window() {
+        let l = ConvLayer::new(1, 3, 3, 3, 3, 1, 1, 1).unwrap();
+        let input = vec![1f32; 9];
+        let kernels = vec![1f32; 9];
+        assert_eq!(conv2d(&l, &input, &kernels), vec![9.0]);
+    }
+
+    #[test]
+    fn multichannel_accumulates() {
+        let l = ConvLayer::new(2, 3, 3, 3, 3, 1, 1, 1).unwrap();
+        let input = vec![1f32; 18];
+        let kernels = vec![1f32; 18];
+        assert_eq!(conv2d(&l, &input, &kernels), vec![18.0]);
+    }
+
+    #[test]
+    fn strided_conv() {
+        let l = ConvLayer::new(1, 5, 5, 3, 3, 1, 2, 2).unwrap();
+        let input = vec![1f32; 25];
+        let kernels = vec![1f32; 9];
+        assert_eq!(conv2d(&l, &input, &kernels), vec![9.0; 4]);
+    }
+
+    #[test]
+    fn step_compute_matches_conv2d() {
+        let l = example1();
+        let input = synth_tensor(l.input_dims().len(), 1);
+        let kernels = synth_tensor(l.kernel_elements(), 2);
+        let full = conv2d(&l, &input, &kernels);
+        let group: Vec<_> = l.all_patches().collect();
+        let step = step_compute(&l, &input, &kernels, &group);
+        // step rows are per-patch [C_out]; full is [C_out, H_out, W_out]
+        let (h_out, w_out) = (l.h_out(), l.w_out());
+        for (r, &p) in group.iter().enumerate() {
+            let patch = l.patch(p);
+            for ch in 0..l.c_out() {
+                let a = step[r * l.c_out() + ch];
+                let b = full[(ch * h_out + patch.i) * w_out + patch.j];
+                assert!((a - b).abs() < 1e-4, "patch {p} ch {ch}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_compute_partial_groups() {
+        let l = example1();
+        let input = synth_tensor(l.input_dims().len(), 3);
+        let kernels = synth_tensor(l.kernel_elements(), 4);
+        let full = conv2d(&l, &input, &kernels);
+        for group in [vec![0u32], vec![4, 8], vec![2, 6, 7]] {
+            let step = step_compute(&l, &input, &kernels, &group);
+            for (r, &p) in group.iter().enumerate() {
+                let patch = l.patch(p);
+                for ch in 0..l.c_out() {
+                    let a = step[r * l.c_out() + ch];
+                    let b = full[(ch * l.h_out() + patch.i) * l.w_out() + patch.j];
+                    assert!((a - b).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1., 2., 3., 4.];
+        let b = vec![5., 6., 7., 8.];
+        assert_eq!(gemm(&a, &b, 2, 2, 2), vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn im2col_row_layout() {
+        let l = ConvLayer::new(2, 3, 3, 2, 2, 1, 1, 1).unwrap();
+        let input: Vec<f32> = (0..18).map(|x| x as f32).collect();
+        let mut row = vec![0f32; l.ops_per_output_value()];
+        im2col_row(&l, &input, l.patch_id(0, 0), &mut row);
+        // channel 0 window then channel 1 window, each row-major
+        assert_eq!(row, vec![0., 1., 3., 4., 9., 10., 12., 13.]);
+    }
+
+    #[test]
+    fn synth_tensor_deterministic() {
+        assert_eq!(synth_tensor(16, 7), synth_tensor(16, 7));
+        assert_ne!(synth_tensor(16, 7), synth_tensor(16, 8));
+        assert!(synth_tensor(100, 1).iter().all(|x| (-1.0..1.0).contains(x)));
+    }
+}

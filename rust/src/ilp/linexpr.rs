@@ -1,0 +1,105 @@
+//! Sparse linear expressions `Σ c_i · x_i`.
+
+use crate::ilp::model::VarId;
+
+/// A sparse linear expression. Terms are kept sorted by variable id with
+/// coefficients merged, so expressions have a canonical form.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LinExpr {
+    terms: Vec<(VarId, f64)>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        LinExpr { terms: Vec::new() }
+    }
+
+    /// Single-term expression `c · x`.
+    pub fn term(var: VarId, coeff: f64) -> Self {
+        let mut e = LinExpr::new();
+        e.add(var, coeff);
+        e
+    }
+
+    /// Add `coeff · var` (merging with an existing term).
+    pub fn add(&mut self, var: VarId, coeff: f64) -> &mut Self {
+        match self.terms.binary_search_by_key(&var, |t| t.0) {
+            Ok(i) => {
+                self.terms[i].1 += coeff;
+                if self.terms[i].1 == 0.0 {
+                    self.terms.remove(i);
+                }
+            }
+            Err(i) => self.terms.insert(i, (var, coeff)),
+        }
+        self
+    }
+
+    /// Append another expression scaled by `scale`.
+    pub fn add_expr(&mut self, other: &LinExpr, scale: f64) -> &mut Self {
+        for &(v, c) in &other.terms {
+            self.add(v, c * scale);
+        }
+        self
+    }
+
+    pub fn terms(&self) -> &[(VarId, f64)] {
+        &self.terms
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Evaluate under an assignment (indexed by variable id).
+    pub fn eval(&self, assign: &[f64]) -> f64 {
+        self.terms.iter().map(|&(v, c)| c * assign[v.0]).sum()
+    }
+
+    /// Coefficient of a variable (0 if absent).
+    pub fn coeff(&self, var: VarId) -> f64 {
+        match self.terms.binary_search_by_key(&var, |t| t.0) {
+            Ok(i) => self.terms[i].1,
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(i: usize) -> VarId {
+        VarId(i)
+    }
+
+    #[test]
+    fn add_merges_terms() {
+        let mut e = LinExpr::new();
+        e.add(v(2), 1.0).add(v(0), 2.0).add(v(2), 3.0);
+        assert_eq!(e.terms(), &[(v(0), 2.0), (v(2), 4.0)]);
+        assert_eq!(e.coeff(v(2)), 4.0);
+        assert_eq!(e.coeff(v(1)), 0.0);
+    }
+
+    #[test]
+    fn zero_coefficients_vanish() {
+        let mut e = LinExpr::term(v(1), 5.0);
+        e.add(v(1), -5.0);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn eval_and_scale() {
+        let mut a = LinExpr::new();
+        a.add(v(0), 1.0).add(v(1), 2.0);
+        let mut b = LinExpr::term(v(1), 1.0);
+        b.add_expr(&a, 2.0); // b = 2x0 + 5x1
+        assert_eq!(b.eval(&[3.0, 4.0]), 6.0 + 20.0);
+        assert_eq!(b.len(), 2);
+    }
+}

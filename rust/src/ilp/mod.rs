@@ -1,0 +1,154 @@
+//! ILP modeling substrate (offline CPLEX/OPL substitute — the modeling half).
+//!
+//! Provides the linear-model vocabulary §5 needs: bounded continuous/integer
+//! variables, linear expressions, `≤ / ≥ / =` constraints, a minimization
+//! objective, and the standard boolean linearizations (∨, ∧, ∧¬) of
+//! Luenberger & Ye that the paper cites for Eqs. 6–8. The solving half lives
+//! in [`crate::solver`].
+
+mod linexpr;
+mod model;
+
+pub use linexpr::LinExpr;
+pub use model::{BoolVar, Cmp, Constraint, Model, Solution, SolveStatus, VarId, VarKind};
+
+/// Add constraints enforcing `out = v_1 ∨ v_2 ∨ … ∨ v_n` over binaries:
+/// `out ≥ v_i` for all `i`, and `out ≤ Σ v_i`.
+pub fn linearize_or(model: &mut Model, out: BoolVar, inputs: &[BoolVar]) {
+    for &v in inputs {
+        // out - v >= 0
+        let mut e = LinExpr::new();
+        e.add(out.0, 1.0);
+        e.add(v.0, -1.0);
+        model.constrain(e, Cmp::Ge, 0.0);
+    }
+    // out - Σ v_i <= 0
+    let mut e = LinExpr::new();
+    e.add(out.0, 1.0);
+    for &v in inputs {
+        e.add(v.0, -1.0);
+    }
+    model.constrain(e, Cmp::Le, 0.0);
+}
+
+/// Add constraints enforcing `out = a ∧ b`:
+/// `out ≤ a`, `out ≤ b`, `out ≥ a + b − 1`.
+pub fn linearize_and(model: &mut Model, out: BoolVar, a: BoolVar, b: BoolVar) {
+    let mut e1 = LinExpr::new();
+    e1.add(out.0, 1.0);
+    e1.add(a.0, -1.0);
+    model.constrain(e1, Cmp::Le, 0.0);
+
+    let mut e2 = LinExpr::new();
+    e2.add(out.0, 1.0);
+    e2.add(b.0, -1.0);
+    model.constrain(e2, Cmp::Le, 0.0);
+
+    let mut e3 = LinExpr::new();
+    e3.add(out.0, 1.0);
+    e3.add(a.0, -1.0);
+    e3.add(b.0, -1.0);
+    model.constrain(e3, Cmp::Ge, -1.0);
+}
+
+/// Add constraints enforcing `out = a ∧ ¬b` (Eq. 8's shape):
+/// `out ≤ a`, `out ≤ 1 − b`, `out ≥ a − b`.
+pub fn linearize_and_not(model: &mut Model, out: BoolVar, a: BoolVar, b: BoolVar) {
+    let mut e1 = LinExpr::new();
+    e1.add(out.0, 1.0);
+    e1.add(a.0, -1.0);
+    model.constrain(e1, Cmp::Le, 0.0);
+
+    let mut e2 = LinExpr::new();
+    e2.add(out.0, 1.0);
+    e2.add(b.0, 1.0);
+    model.constrain(e2, Cmp::Le, 1.0);
+
+    let mut e3 = LinExpr::new();
+    e3.add(out.0, 1.0);
+    e3.add(a.0, -1.0);
+    e3.add(b.0, 1.0);
+    model.constrain(e3, Cmp::Ge, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Exhaustively check a linearization over all boolean assignments:
+    /// for forced inputs, the only feasible `out` value is the gate value.
+    fn check_gate<F, G>(n_inputs: usize, build: F, gate: G)
+    where
+        F: Fn(&mut Model, BoolVar, &[BoolVar]),
+        G: Fn(&[f64]) -> f64,
+    {
+        for mask in 0..(1u32 << n_inputs) {
+            let mut m = Model::minimize();
+            let inputs: Vec<BoolVar> =
+                (0..n_inputs).map(|i| m.bool_var(&format!("v{i}"))).collect();
+            let out = m.bool_var("out");
+            build(&mut m, out, &inputs);
+            let vals: Vec<f64> = (0..n_inputs)
+                .map(|i| ((mask >> i) & 1) as f64)
+                .collect();
+            let expect = gate(&vals);
+            for out_val in [0.0, 1.0] {
+                let mut assign = vals.clone();
+                assign.push(out_val);
+                let feasible = m.is_feasible(&assign, 1e-9);
+                assert_eq!(
+                    feasible,
+                    (out_val - expect).abs() < 1e-9,
+                    "mask {mask:b}, out {out_val}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn or_gate_exact() {
+        for n in 1..=4 {
+            check_gate(
+                n,
+                |m, out, ins| linearize_or(m, out, ins),
+                |vals| {
+                    if vals.iter().any(|&v| v > 0.5) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn and_gate_exact() {
+        check_gate(
+            2,
+            |m, out, ins| linearize_and(m, out, ins[0], ins[1]),
+            |vals| {
+                if vals[0] > 0.5 && vals[1] > 0.5 {
+                    1.0
+                } else {
+                    0.0
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn and_not_gate_exact() {
+        check_gate(
+            2,
+            |m, out, ins| linearize_and_not(m, out, ins[0], ins[1]),
+            |vals| {
+                if vals[0] > 0.5 && vals[1] < 0.5 {
+                    1.0
+                } else {
+                    0.0
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! The ILP model container.
+
+use crate::ilp::LinExpr;
+
+/// Variable identifier (dense index into the model's variable table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct VarId(pub usize);
+
+/// Typed handle for a `{0,1}` variable (what the §5 model is made of).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoolVar(pub VarId);
+
+/// Variable domain kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VarKind {
+    Continuous,
+    Integer,
+}
+
+/// Comparison operator of a constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// `expr  cmp  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub expr: LinExpr,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn holds(&self, assign: &[f64], tol: f64) -> bool {
+        let lhs = self.expr.eval(assign);
+        match self.cmp {
+            Cmp::Le => lhs <= self.rhs + tol,
+            Cmp::Ge => lhs >= self.rhs - tol,
+            Cmp::Eq => (lhs - self.rhs).abs() <= tol,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct VarDef {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub kind: VarKind,
+}
+
+/// A minimization MILP.
+#[derive(Debug, Clone, Default)]
+pub struct Model {
+    pub(crate) vars: Vec<VarDef>,
+    pub constraints: Vec<Constraint>,
+    pub objective: LinExpr,
+}
+
+impl Model {
+    pub fn minimize() -> Self {
+        Model::default()
+    }
+
+    /// New bounded variable.
+    pub fn var(&mut self, name: &str, lo: f64, hi: f64, kind: VarKind) -> VarId {
+        assert!(lo <= hi, "variable '{name}': lo > hi");
+        self.vars.push(VarDef { name: name.to_string(), lo, hi, kind });
+        VarId(self.vars.len() - 1)
+    }
+
+    /// New `{0,1}` variable.
+    pub fn bool_var(&mut self, name: &str) -> BoolVar {
+        BoolVar(self.var(name, 0.0, 1.0, VarKind::Integer))
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn bounds(&self, v: VarId) -> (f64, f64) {
+        (self.vars[v.0].lo, self.vars[v.0].hi)
+    }
+
+    pub fn kind(&self, v: VarId) -> VarKind {
+        self.vars[v.0].kind
+    }
+
+    pub fn name(&self, v: VarId) -> &str {
+        &self.vars[v.0].name
+    }
+
+    /// Add a constraint `expr cmp rhs`.
+    pub fn constrain(&mut self, expr: LinExpr, cmp: Cmp, rhs: f64) {
+        self.constraints.push(Constraint { expr, cmp, rhs });
+    }
+
+    /// Set the (minimization) objective.
+    pub fn set_objective(&mut self, objective: LinExpr) {
+        self.objective = objective;
+    }
+
+    /// Feasibility of a full assignment: bounds, integrality, constraints.
+    pub fn is_feasible(&self, assign: &[f64], tol: f64) -> bool {
+        if assign.len() != self.vars.len() {
+            return false;
+        }
+        for (i, def) in self.vars.iter().enumerate() {
+            let x = assign[i];
+            if x < def.lo - tol || x > def.hi + tol {
+                return false;
+            }
+            if def.kind == VarKind::Integer && (x - x.round()).abs() > tol {
+                return false;
+            }
+        }
+        self.constraints.iter().all(|c| c.holds(assign, tol))
+    }
+
+    /// Objective value of an assignment.
+    pub fn objective_value(&self, assign: &[f64]) -> f64 {
+        self.objective.eval(assign)
+    }
+
+    /// Summary string (var/constraint counts) for logs.
+    pub fn dims(&self) -> String {
+        let n_int = self
+            .vars
+            .iter()
+            .filter(|v| v.kind == VarKind::Integer)
+            .count();
+        format!(
+            "{} vars ({} integer), {} constraints",
+            self.vars.len(),
+            n_int,
+            self.constraints.len()
+        )
+    }
+}
+
+/// Status of a MILP solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Proven optimal.
+    Optimal,
+    /// Feasible incumbent, search truncated (node/time budget).
+    Feasible,
+    /// Proven infeasible.
+    Infeasible,
+    /// Budget exhausted with no incumbent.
+    Unknown,
+}
+
+/// Result of a MILP solve.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub status: SolveStatus,
+    /// Assignment (empty unless status is Optimal/Feasible).
+    pub assignment: Vec<f64>,
+    pub objective: f64,
+    /// Best LP lower bound proven.
+    pub lower_bound: f64,
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_checks_bounds_and_integrality() {
+        let mut m = Model::minimize();
+        let x = m.var("x", 0.0, 5.0, VarKind::Integer);
+        let y = m.var("y", 0.0, 2.0, VarKind::Continuous);
+        let mut e = LinExpr::new();
+        e.add(x, 1.0).add(y, 1.0);
+        m.constrain(e, Cmp::Le, 4.0);
+
+        assert!(m.is_feasible(&[2.0, 1.5], 1e-9));
+        assert!(!m.is_feasible(&[2.5, 1.0], 1e-9)); // x not integer
+        assert!(!m.is_feasible(&[6.0, 0.0], 1e-9)); // x out of bounds
+        assert!(!m.is_feasible(&[3.0, 1.5], 1e-9)); // constraint violated
+        assert!(!m.is_feasible(&[3.0], 1e-9)); // wrong length
+    }
+
+    #[test]
+    fn constraint_operators() {
+        let mut m = Model::minimize();
+        let x = m.var("x", -10.0, 10.0, VarKind::Continuous);
+        m.constrain(LinExpr::term(x, 1.0), Cmp::Ge, 2.0);
+        m.constrain(LinExpr::term(x, 2.0), Cmp::Eq, 6.0);
+        assert!(m.is_feasible(&[3.0], 1e-9));
+        assert!(!m.is_feasible(&[2.0], 1e-9));
+        assert!(!m.is_feasible(&[4.0], 1e-9));
+    }
+
+    #[test]
+    fn objective_eval() {
+        let mut m = Model::minimize();
+        let x = m.var("x", 0.0, 1.0, VarKind::Continuous);
+        let y = m.var("y", 0.0, 1.0, VarKind::Continuous);
+        let mut obj = LinExpr::new();
+        obj.add(x, 3.0).add(y, -1.0);
+        m.set_objective(obj);
+        assert_eq!(m.objective_value(&[1.0, 1.0]), 2.0);
+    }
+
+    #[test]
+    fn dims_string() {
+        let mut m = Model::minimize();
+        m.bool_var("b");
+        m.var("c", 0.0, 1.0, VarKind::Continuous);
+        assert_eq!(m.dims(), "2 vars (1 integer), 0 constraints");
+    }
+}

@@ -1,0 +1,56 @@
+//! # convoffload
+//!
+//! A production-oriented reproduction of *“Convolutions Predictable Offloading
+//! to an Accelerator: Formalization and Optimization”* (Husson, Belcaid, Carle,
+//! Pagetti — CS.AR 2026).
+//!
+//! The library implements, in Rust, the paper's full system:
+//!
+//! * the **offloading formalism** — steps `s_i = (F_i^inp, F_i^ker, W_i,
+//!   I_i^slice, K_i^sub)`, set-based on-chip-memory semantics, and the linear
+//!   duration model (`step`, `platform`, `tensor`, `conv`);
+//! * the **strategies** — S1-baseline (one patch per step, Siu et al.),
+//!   grouped S1 with Row-by-Row / ZigZag / Hilbert / diagonal orderings, and
+//!   arbitrary user strategies loaded from CSV/JSON (`strategy`);
+//! * the **simulator** — the §6 orchestration loop with per-step metrics,
+//!   trace recording, grid visualisation, and a *functional* mode in which the
+//!   per-step compute runs on an AOT-compiled XLA executable via PJRT
+//!   (`sim`, `viz`, `runtime`);
+//! * the **optimization problem** — the §5 ILP built on an in-tree 0-1 MILP
+//!   substrate (linearized ∧/∨/¬, dense simplex, branch & bound with MIP
+//!   start) plus the structure-aware local-search “solution polishing” used
+//!   for larger instances (`ilp`, `solver`, `optimizer`);
+//! * the **experiment harness** regenerating every figure of the paper's
+//!   evaluation (`bench_harness`), and a config system with LeNet-5 / ResNet-8
+//!   presets (`config`).
+//!
+//! See `DESIGN.md` for the module inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for reproduced-vs-paper results.
+
+pub mod bench_harness;
+pub mod config;
+pub mod conv;
+pub mod ilp;
+pub mod metrics;
+pub mod optimizer;
+pub mod platform;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod step;
+pub mod strategy;
+pub mod tensor;
+pub mod util;
+pub mod viz;
+
+/// Convenience re-exports of the types that form the public API surface.
+pub mod prelude {
+    pub use crate::conv::{ConvLayer, Patch, PatchId};
+    pub use crate::platform::{Accelerator, OnChipMemory, Platform};
+    pub use crate::sim::{FunctionalBackend, SimReport, Simulator};
+    pub use crate::step::{Step, StepCost};
+    pub use crate::strategy::{
+        GroupedStrategy, Ordering, Strategy, WritebackPolicy,
+    };
+    pub use crate::tensor::PixelSet;
+}

@@ -1,0 +1,349 @@
+//! `convoffload` — CLI for the offloading simulator, optimizer and the
+//! paper-figure harness.
+//!
+//! Subcommands:
+//! * `simulate`  — run a strategy on a layer, print the per-step report;
+//! * `optimize`  — find an optimized strategy (exact / polished), export CSV;
+//! * `figures`   — regenerate the paper's Figures 11/12/13 into `figures/`;
+//! * `viz`       — render a strategy's step grids (ASCII or SVG);
+//! * `e2e`       — functional end-to-end run through the PJRT runtime;
+//! * `perf`      — print the L1 kernel VMEM/MXU estimates;
+//! * `presets`   — list layer presets.
+
+use std::process::ExitCode;
+
+use convoffload::config::{layer_preset, list_presets, ExperimentConfig};
+use convoffload::conv::ConvLayer;
+use convoffload::optimizer::{OptimizeOptions, Optimizer};
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
+use convoffload::strategy::{self, GroupedStrategy};
+use convoffload::util::cli::{self, FlagSpec};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "optimize" => cmd_optimize(rest),
+        "figures" => cmd_figures(rest),
+        "viz" => cmd_viz(rest),
+        "e2e" => cmd_e2e(rest),
+        "perf" => cmd_perf(rest),
+        "presets" => cmd_presets(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `convoffload help`)")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "convoffload — predictable offloading of convolutions to an accelerator\n\n\
+         commands:\n\
+         \x20 simulate   run a strategy on a layer and report δ / memory\n\
+         \x20 optimize   search for an optimal strategy (§5 problem)\n\
+         \x20 figures    regenerate the paper's Figures 11/12/13 under figures/\n\
+         \x20 viz        render a strategy step by step (ascii/svg)\n\
+         \x20 e2e        functional end-to-end run (PJRT or rust oracle)\n\
+         \x20 perf       L1 kernel VMEM/MXU estimates for a layer\n\
+         \x20 presets    list built-in layer presets\n\n\
+         run `convoffload <command> --help` for flags"
+    );
+}
+
+// ---------------------------------------------------------------- shared
+
+fn layer_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "layer", help: "layer preset name", takes_value: true, default: Some("example1") },
+        FlagSpec { name: "config", help: "TOML experiment file (overrides --layer)", takes_value: true, default: None },
+        FlagSpec { name: "group", help: "group size (nb_patches_max_S1)", takes_value: true, default: Some("2") },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ]
+}
+
+struct Setup {
+    layer: ConvLayer,
+    acc: Accelerator,
+    group: usize,
+}
+
+fn setup_from(args: &cli::Args) -> Result<Setup, String> {
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let cfg = ExperimentConfig::from_toml(&text)?;
+        return Ok(Setup { layer: cfg.layer, acc: cfg.accelerator, group: cfg.group_size });
+    }
+    let name = args.get("layer").unwrap_or("example1");
+    let preset = layer_preset(name)
+        .ok_or_else(|| format!("unknown preset '{name}' (see `convoffload presets`)"))?;
+    let group = args.get_usize("group")?.unwrap_or(2).max(1);
+    let acc = Accelerator::for_group_size(&preset.layer, group);
+    Ok(Setup { layer: preset.layer, acc, group })
+}
+
+fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<GroupedStrategy, String> {
+    match name {
+        "s1-baseline" => Ok(strategy::s1_baseline(layer)),
+        "row-by-row" | "row" => Ok(strategy::row_by_row(layer, group)),
+        "zigzag" => Ok(strategy::zigzag(layer, group)),
+        "hilbert" => Ok(strategy::hilbert(layer, group)),
+        "diagonal" => Ok(strategy::diagonal(layer, group)),
+        path if path.ends_with(".csv") => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            strategy::strategy_from_csv(path, &text)
+        }
+        path if path.ends_with(".json") => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            strategy::strategy_from_json(&text)
+        }
+        other => Err(format!(
+            "unknown strategy '{other}' (builtin: s1-baseline, row-by-row, zigzag, hilbert, diagonal; or a .csv/.json file)"
+        )),
+    }
+}
+
+// ---------------------------------------------------------------- simulate
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let mut specs = layer_flags();
+    specs.push(FlagSpec { name: "strategy", help: "strategy name or CSV/JSON file", takes_value: true, default: Some("zigzag") });
+    specs.push(FlagSpec { name: "steps", help: "print the per-step table", takes_value: false, default: None });
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("simulate", "run a strategy on a layer", &specs));
+        return Ok(());
+    }
+    let setup = setup_from(&args)?;
+    let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
+    let report = Simulator::new(setup.layer, Platform::new(setup.acc))
+        .run(&s)
+        .map_err(|e| e.to_string())?;
+    println!("layer: {}", setup.layer);
+    println!("accelerator: {:?}", setup.acc);
+    println!("{}", convoffload::sim::summary_line(&report, &setup.acc));
+    if args.get_bool("steps") {
+        println!("\n step | loaded | written | macs | duration | occupancy | resident");
+        for st in &report.steps {
+            println!(
+                "{:>5} | {:>6} | {:>7} | {:>4} | {:>8} | {:>9} | {:>8}",
+                st.index + 1,
+                st.cost.loaded_elements,
+                st.cost.written_elements,
+                st.cost.macs,
+                st.duration,
+                st.occupancy,
+                st.resident_input_elements
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- optimize
+
+fn cmd_optimize(argv: &[String]) -> Result<(), String> {
+    let mut specs = layer_flags();
+    specs.push(FlagSpec { name: "seed", help: "polish RNG seed", takes_value: true, default: Some("2026") });
+    specs.push(FlagSpec { name: "iters", help: "polish iterations", takes_value: true, default: Some("200000") });
+    specs.push(FlagSpec { name: "out", help: "write the strategy CSV here", takes_value: true, default: None });
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("optimize", "search for an optimal strategy", &specs));
+        return Ok(());
+    }
+    let setup = setup_from(&args)?;
+    let opt = Optimizer::new(OptimizeOptions {
+        group_size: setup.group,
+        seed: args.get_u64("seed")?.unwrap_or(2026),
+        anneal_iters: args.get_u64("iters")?.unwrap_or(200_000),
+        ..Default::default()
+    });
+    let res = opt.optimize(&setup.layer, &setup.acc);
+    println!("layer: {}", setup.layer);
+    println!("method: {:?}", res.method);
+    println!("best heuristic δ: {}", res.mip_start_duration);
+    println!("optimized      δ: {}", res.duration);
+    println!("gain: {:.2}%", res.gain_over_heuristics() * 100.0);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, strategy::strategy_to_csv(&res.strategy))
+            .map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- figures
+
+fn cmd_figures(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        FlagSpec { name: "fig", help: "which figure: 11, 12, 13 or all", takes_value: true, default: Some("all") },
+        FlagSpec { name: "out-dir", help: "output directory", takes_value: true, default: Some("figures") },
+        FlagSpec { name: "seed", help: "optimizer seed", takes_value: true, default: Some("2026") },
+        FlagSpec { name: "quick", help: "smaller grids (CI mode)", takes_value: false, default: None },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("figures", "regenerate the paper's figures", &specs));
+        return Ok(());
+    }
+    let out_dir = std::path::PathBuf::from(args.get("out-dir").unwrap());
+    let which = args.get("fig").unwrap().to_string();
+    let seed = args.get_u64("seed")?.unwrap_or(2026);
+    let quick = args.get_bool("quick");
+
+    use convoffload::bench_harness as bh;
+    if which == "11" || which == "all" {
+        let layer = layer_preset("lenet5-conv1").unwrap().layer;
+        let max_g = if quick { 12 } else { layer.w_out() + 6 };
+        let sizes: Vec<usize> = (1..=max_g).collect();
+        let rows = bh::fig11(&layer, &sizes);
+        let ascii = bh::fig11::to_ascii(&layer, &rows);
+        bh::write_outputs(&out_dir, "fig11", &bh::fig11::to_csv(&rows), &ascii)
+            .map_err(|e| e.to_string())?;
+        println!("{ascii}");
+        println!("wrote {}/fig11.csv", out_dir.display());
+    }
+    if which == "12" || which == "all" {
+        let inputs: Vec<usize> = if quick { (4..=8).collect() } else { (4..=12).collect() };
+        let rows = bh::fig12(&inputs, 4, seed);
+        let ascii = bh::fig12::to_ascii(4, &rows);
+        bh::write_outputs(&out_dir, "fig12", &bh::fig12::to_csv(&rows), &ascii)
+            .map_err(|e| e.to_string())?;
+        println!("{ascii}");
+        println!("wrote {}/fig12.csv", out_dir.display());
+    }
+    if which == "13" || which == "all" {
+        let inputs: Vec<usize> = if quick { vec![4, 6, 8] } else { (4..=12).collect() };
+        let groups: Vec<usize> = if quick { vec![2, 4, 8] } else { (2..=10).collect() };
+        let cells = bh::fig13(&inputs, &groups, seed);
+        let ascii = bh::fig13::to_ascii(&inputs, &groups, &cells);
+        bh::write_outputs(&out_dir, "fig13", &bh::fig13::to_csv(&cells), &ascii)
+            .map_err(|e| e.to_string())?;
+        println!("{ascii}");
+        println!("wrote {}/fig13.csv", out_dir.display());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- viz
+
+fn cmd_viz(argv: &[String]) -> Result<(), String> {
+    let mut specs = layer_flags();
+    specs.push(FlagSpec { name: "strategy", help: "strategy name or file", takes_value: true, default: Some("zigzag") });
+    specs.push(FlagSpec { name: "svg", help: "write an SVG here instead of ASCII", takes_value: true, default: None });
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("viz", "render a strategy step by step", &specs));
+        return Ok(());
+    }
+    let setup = setup_from(&args)?;
+    let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
+    let steps = s.compile(&setup.layer);
+    match args.get("svg") {
+        Some(path) => {
+            let svg = convoffload::viz::render_strategy_svg(
+                &setup.layer,
+                &steps,
+                &format!("{} on {}", s.name, setup.layer),
+            );
+            std::fs::write(path, svg).map_err(|e| format!("{path}: {e}"))?;
+            println!("wrote {path}");
+        }
+        None => {
+            println!(
+                "{}",
+                convoffload::viz::render_strategy_ascii(&setup.layer, &steps)
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- e2e
+
+fn cmd_e2e(argv: &[String]) -> Result<(), String> {
+    let mut specs = layer_flags();
+    specs.push(FlagSpec { name: "strategy", help: "strategy name or file", takes_value: true, default: Some("zigzag") });
+    specs.push(FlagSpec { name: "backend", help: "rust-oracle or pjrt", takes_value: true, default: Some("pjrt") });
+    specs.push(FlagSpec { name: "seed", help: "tensor seed", takes_value: true, default: Some("7") });
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("e2e", "functional end-to-end run", &specs));
+        return Ok(());
+    }
+    let setup = setup_from(&args)?;
+    let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
+    let seed = args.get_u64("seed")?.unwrap_or(7);
+    let input =
+        convoffload::conv::reference::synth_tensor(setup.layer.input_dims().len(), seed);
+    let kernels =
+        convoffload::conv::reference::synth_tensor(setup.layer.kernel_elements(), seed + 1);
+    let sim = Simulator::new(setup.layer, Platform::new(setup.acc));
+
+    let backend = FunctionalBackend::from_str(args.get("backend").unwrap())?;
+    let report = match backend {
+        FunctionalBackend::RustOracle => {
+            let mut b = RustOracleBackend;
+            sim.run_functional(&s, &input, &kernels, &mut b)
+        }
+        FunctionalBackend::Pjrt => {
+            let mut b = convoffload::runtime::PjrtBackend::from_default_dir()
+                .map_err(|e| e.to_string())?;
+            sim.run_functional(&s, &input, &kernels, &mut b)
+        }
+    }
+    .map_err(|e| e.to_string())?;
+
+    println!("layer: {}", setup.layer);
+    println!("backend: {}", backend.as_str());
+    println!("{}", convoffload::sim::summary_line(&report, &setup.acc));
+    let err = report.max_abs_error.unwrap();
+    let ok = report.functional_ok(1e-4).unwrap();
+    println!("functional check: max |err| = {err:.2e} → {}", if ok { "OK" } else { "FAILED" });
+    if !ok {
+        return Err("functional check failed".into());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- perf
+
+fn cmd_perf(argv: &[String]) -> Result<(), String> {
+    let mut specs = layer_flags();
+    specs.push(FlagSpec { name: "tile", help: "group tile size", takes_value: true, default: Some("8") });
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") {
+        println!("{}", cli::help("perf", "L1 kernel VMEM/MXU estimates", &specs));
+        return Ok(());
+    }
+    let setup = setup_from(&args)?;
+    let tile = args.get_usize("tile")?.unwrap_or(8);
+    let tpu = convoffload::metrics::TpuModel::default();
+    let est = convoffload::metrics::estimate_step_kernel(&setup.layer, tile, &tpu);
+    println!("{}", convoffload::metrics::format_estimate(&setup.layer, tile, &est));
+    Ok(())
+}
+
+// ---------------------------------------------------------------- presets
+
+fn cmd_presets() -> Result<(), String> {
+    for p in list_presets() {
+        println!("{:<16} {}  [{}]", p.name, p.layer, p.description);
+    }
+    Ok(())
+}

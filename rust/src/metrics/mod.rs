@@ -1,0 +1,162 @@
+//! Performance metrics and TPU-mapping estimates (§Perf of DESIGN.md).
+//!
+//! `interpret=True` Pallas gives no hardware wall-clock, so Layer-1
+//! performance on a real TPU is *estimated* from the BlockSpec structure:
+//! VMEM footprint of one grid step, MXU-tile utilization of the GEMM shape,
+//! and the arithmetic-intensity/roofline ratio. These numbers feed
+//! EXPERIMENTS.md §Perf and the `convoffload perf` CLI.
+
+use crate::conv::ConvLayer;
+
+/// TPU-generation parameters used for the estimates (v4-like defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct TpuModel {
+    /// VMEM bytes available per core.
+    pub vmem_bytes: u64,
+    /// MXU systolic tile (lanes × sublanes), f32 elements.
+    pub mxu_tile: usize,
+    /// Peak MACs/cycle of the MXU.
+    pub macs_per_cycle: u64,
+    /// HBM→VMEM bandwidth, bytes per cycle.
+    pub hbm_bytes_per_cycle: f64,
+}
+
+impl Default for TpuModel {
+    fn default() -> Self {
+        TpuModel {
+            vmem_bytes: 16 << 20, // 16 MiB
+            mxu_tile: 128,
+            macs_per_cycle: 128 * 128,
+            hbm_bytes_per_cycle: 600.0,
+        }
+    }
+}
+
+/// Static estimate for one step-compute kernel invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelEstimate {
+    /// `[tile_g, D]` patch tile + `[D, N]` kernels + `[tile_g, N]` out tile.
+    pub vmem_bytes: u64,
+    /// Fraction of the VMEM budget used.
+    pub vmem_fraction: f64,
+    /// MACs of one grid step.
+    pub macs: u64,
+    /// MXU utilization: how full the systolic tiles are, given that the MXU
+    /// processes `mxu_tile × mxu_tile` panels (small D/N waste lanes).
+    pub mxu_utilization: f64,
+    /// Arithmetic intensity: MACs per HBM byte moved (per grid step).
+    pub arithmetic_intensity: f64,
+    /// Roofline-limited efficiency: min(1, AI / (peak MACs/cycle ÷ HBM B/cycle)).
+    pub roofline_efficiency: f64,
+}
+
+/// Estimate the per-grid-step cost of `step_gemm` for a layer with group
+/// tile `tile_g`, following the L1 BlockSpec in
+/// `python/compile/kernels/step_conv.py`.
+pub fn estimate_step_kernel(
+    layer: &ConvLayer,
+    tile_g: usize,
+    tpu: &TpuModel,
+) -> KernelEstimate {
+    let d = layer.ops_per_output_value();
+    let n = layer.n_kernels;
+    let f32b = 4u64;
+    let vmem = f32b * (tile_g * d + d * n + tile_g * n) as u64;
+    let macs = (tile_g * d * n) as u64;
+
+    // The MXU multiplies mxu_tile×mxu_tile panels; a [tile_g, d] × [d, n]
+    // GEMM occupies ceil-padded panels.
+    let t = tpu.mxu_tile;
+    let padded = (tile_g.div_ceil(t) * t) * (d.div_ceil(t) * t) * (n.div_ceil(t) * t);
+    let effective = tile_g * d * n;
+    let mxu_utilization = effective as f64 / padded as f64;
+
+    // Bytes moved per grid step: the patch tile streams in, the out tile
+    // streams back; kernels are resident across the grid.
+    let bytes_moved = f32b as f64 * (tile_g * d + tile_g * n) as f64;
+    let arithmetic_intensity = macs as f64 / bytes_moved;
+    let machine_balance = tpu.macs_per_cycle as f64 / tpu.hbm_bytes_per_cycle;
+    let roofline_efficiency = (arithmetic_intensity / machine_balance).min(1.0);
+
+    KernelEstimate {
+        vmem_bytes: vmem,
+        vmem_fraction: vmem as f64 / tpu.vmem_bytes as f64,
+        macs,
+        mxu_utilization,
+        arithmetic_intensity,
+        roofline_efficiency,
+    }
+}
+
+/// Map the paper's abstract accelerator onto the TPU model: the on-chip
+/// memory constraint (Eq. 12) becomes a VMEM budget check for the largest
+/// step of a strategy.
+pub fn step_fits_vmem(
+    layer: &ConvLayer,
+    peak_occupancy_elements: u64,
+    tpu: &TpuModel,
+) -> bool {
+    let _ = layer;
+    peak_occupancy_elements * 4 <= tpu.vmem_bytes
+}
+
+/// Human-readable report block for EXPERIMENTS.md / the CLI.
+pub fn format_estimate(layer: &ConvLayer, tile_g: usize, est: &KernelEstimate) -> String {
+    format!(
+        "kernel step_gemm {layer} tile_g={tile_g}\n\
+         \x20 VMEM/step      : {} B ({:.3}% of budget)\n\
+         \x20 MACs/step      : {}\n\
+         \x20 MXU utilization: {:.4}\n\
+         \x20 arith intensity: {:.2} MAC/B\n\
+         \x20 roofline eff   : {:.4}\n",
+        est.vmem_bytes,
+        est.vmem_fraction * 100.0,
+        est.macs,
+        est.mxu_utilization,
+        est.arithmetic_intensity,
+        est.roofline_efficiency,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_conv2_estimate_is_sane() {
+        let l = ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap();
+        let est = estimate_step_kernel(&l, 8, &TpuModel::default());
+        // 8x150 + 150x16 + 8x16 floats = (1200 + 2400 + 128)*4
+        assert_eq!(est.vmem_bytes, 4 * (8 * 150 + 150 * 16 + 8 * 16) as u64);
+        assert!(est.vmem_fraction < 0.01, "tiny step fits easily");
+        assert_eq!(est.macs, (8 * 150 * 16) as u64);
+        assert!(est.mxu_utilization > 0.0 && est.mxu_utilization <= 1.0);
+        assert!(est.roofline_efficiency > 0.0 && est.roofline_efficiency <= 1.0);
+    }
+
+    #[test]
+    fn bigger_tiles_improve_utilization() {
+        let l = ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap();
+        let small = estimate_step_kernel(&l, 1, &TpuModel::default());
+        let big = estimate_step_kernel(&l, 128, &TpuModel::default());
+        assert!(big.mxu_utilization > small.mxu_utilization);
+        assert!(big.arithmetic_intensity >= small.arithmetic_intensity);
+    }
+
+    #[test]
+    fn vmem_budget_check() {
+        let l = ConvLayer::square(1, 8, 3, 1);
+        let tpu = TpuModel::default();
+        assert!(step_fits_vmem(&l, 100, &tpu));
+        assert!(!step_fits_vmem(&l, tpu.vmem_bytes, &tpu));
+    }
+
+    #[test]
+    fn report_formats() {
+        let l = ConvLayer::square(1, 8, 3, 1);
+        let est = estimate_step_kernel(&l, 8, &TpuModel::default());
+        let text = format_estimate(&l, 8, &est);
+        assert!(text.contains("VMEM/step"));
+        assert!(text.contains("MXU utilization"));
+    }
+}

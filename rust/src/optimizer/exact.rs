@@ -1,0 +1,381 @@
+//! Specialized exact branch & bound over ordered patch partitions.
+//!
+//! Searches the space of ordered partitions of `X` into `k` groups of ≤ `g`
+//! patches, minimizing the Eq. 15 load total
+//! `Σ_k |pix(g_k) ∖ pix(g_{k−1})|`. Pruning:
+//!
+//! * **incumbent** — seeded by the heuristic MIP start;
+//! * **admissible lower bound** — every pixel used by a still-unassigned
+//!   patch and not resident in the group under construction must be loaded
+//!   at least once more: `bound = cost + |pix(unassigned) ∖ pix(current)|`;
+//! * **within-group symmetry** — group members are chosen in increasing
+//!   patch id (group contents are a set);
+//! * **reversal symmetry** — a grouping and its reverse have the same cost,
+//!   so the first group is required to contain a patch id no larger than the
+//!   smallest id in the last group. (Enforced cheaply: patch 0 must appear
+//!   in the first half of the groups.)
+
+use std::time::{Duration, Instant};
+
+use crate::conv::{ConvLayer, PatchId};
+use crate::tensor::PixelSet;
+
+/// Exact solve. Returns `None` if the wall-clock budget is exhausted before
+/// the search completes (caller falls back to polish).
+pub fn solve_exact(
+    layer: &ConvLayer,
+    g: usize,
+    k: usize,
+    budget: Duration,
+    mip_start: Option<&[Vec<PatchId>]>,
+) -> Option<Vec<Vec<PatchId>>> {
+    let n = layer.n_patches();
+    if k * g < n || k > n {
+        return None;
+    }
+    let patch_pixels: Vec<PixelSet> =
+        (0..n as u32).map(|p| layer.patch_pixels(p)).collect();
+
+    // Incumbent from MIP start.
+    let mut best_cost = usize::MAX;
+    let mut best: Option<Vec<Vec<PatchId>>> = None;
+    if let Some(start) = mip_start {
+        let start = crate::optimizer::search::normalize(start, g, k);
+        let cost = grouping_cost(&patch_pixels, layer.n_pixels(), &start);
+        best_cost = cost;
+        best = Some(start);
+    }
+
+    let mut dfs = Dfs {
+        layer_pixels: layer.n_pixels(),
+        patch_pixels,
+        g,
+        k,
+        best_cost,
+        best: best.clone(),
+        deadline: Instant::now() + budget,
+        timed_out: false,
+        nodes: 0,
+    };
+
+    let unassigned_all = PixelSet::full(n); // over patch ids
+    let mut union_unassigned = PixelSet::empty(layer.n_pixels());
+    for p in 0..n as u32 {
+        union_unassigned.union_with(&dfs.patch_pixels[p as usize]);
+    }
+    let mut groups: Vec<Vec<PatchId>> = Vec::with_capacity(k);
+    let empty = PixelSet::empty(layer.n_pixels());
+    dfs.recurse(
+        &mut groups,
+        unassigned_all,
+        union_unassigned,
+        empty.clone(),
+        empty,
+        0,
+        0,
+    );
+
+    if dfs.timed_out {
+        return None;
+    }
+    dfs.best
+}
+
+/// Cost of a complete grouping (duplicated from `objective` on raw sets to
+/// keep this module self-contained for testing).
+fn grouping_cost(
+    patch_pixels: &[PixelSet],
+    n_pixels: usize,
+    groups: &[Vec<PatchId>],
+) -> usize {
+    let mut prev = PixelSet::empty(n_pixels);
+    let mut cost = 0;
+    for g in groups {
+        let mut fp = PixelSet::empty(n_pixels);
+        for &p in g {
+            fp.union_with(&patch_pixels[p as usize]);
+        }
+        cost += fp.difference_len(&prev);
+        prev = fp;
+    }
+    cost
+}
+
+struct Dfs {
+    layer_pixels: usize,
+    patch_pixels: Vec<PixelSet>,
+    g: usize,
+    k: usize,
+    best_cost: usize,
+    best: Option<Vec<Vec<PatchId>>>,
+    deadline: Instant,
+    timed_out: bool,
+    nodes: u64,
+}
+
+impl Dfs {
+    /// Extend the partial grouping.
+    ///
+    /// * `groups` — closed groups so far;
+    /// * `unassigned` — patch-id set not yet placed;
+    /// * `union_unassigned` — pixel union of unassigned patches;
+    /// * `prev_fp` — footprint of the last *closed* group;
+    /// * `cur_fp` — footprint of the group under construction (`groups` does
+    ///   NOT yet contain it; members are in `cur_members`-by-recursion);
+    /// * `cost` — loads committed so far (closed groups + current partial).
+    #[allow(clippy::too_many_arguments)]
+    fn recurse(
+        &mut self,
+        groups: &mut Vec<Vec<PatchId>>,
+        unassigned: PixelSet,
+        union_unassigned: PixelSet,
+        prev_fp: PixelSet,
+        cur_fp: PixelSet,
+        cur_cost: usize,
+        cur_len: usize,
+    ) {
+        self.nodes += 1;
+        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
+            self.timed_out = true;
+        }
+        if self.timed_out {
+            return;
+        }
+
+        // `groups` includes the group under construction when cur_len > 0.
+        if unassigned.is_empty() {
+            // Complete iff exactly k non-empty groups were formed.
+            if groups.len() == self.k && cur_cost < self.best_cost {
+                self.best_cost = cur_cost;
+                self.best = Some(groups.clone());
+            }
+            return;
+        }
+
+        // Admissible bound: every unassigned-patch pixel that is neither in
+        // the open group's footprint nor reusable from the previous group's
+        // (`I_k = pix(g_k) ∖ pix(g_{k−1})`) must be loaded at least once.
+        let mut free = cur_fp.clone();
+        free.union_with(&prev_fp);
+        let remaining = union_unassigned.difference_len(&free);
+        if cur_cost + remaining >= self.best_cost {
+            return;
+        }
+
+        // Groups still to be opened after this point.
+        let to_open = self.k - groups.len();
+        let slots_left = to_open * self.g
+            + if cur_len > 0 { self.g - cur_len } else { 0 };
+        let un_count = unassigned.len();
+        if un_count > slots_left || un_count < to_open {
+            return; // cannot place everything / cannot fill every group
+        }
+
+        // Option A: close the current group (a later Option-B call opens the
+        // next one). Requires at least one group left to open.
+        if cur_len > 0 && to_open >= 1 {
+            debug_assert_eq!(groups.last().map(Vec::len), Some(cur_len));
+            self.recurse(
+                groups,
+                unassigned.clone(),
+                union_unassigned.clone(),
+                cur_fp.clone(),
+                PixelSet::empty(self.layer_pixels),
+                cur_cost,
+                0,
+            );
+        }
+
+        // Option B: extend the current group (or open a new one when
+        // cur_len == 0, allowed only while groups remain to open).
+        if cur_len < self.g && (cur_len > 0 || to_open >= 1) {
+            // Within-group symmetry: only ids greater than the last member.
+            let min_id = if cur_len > 0 {
+                groups.last().unwrap().last().copied().unwrap() + 1
+            } else {
+                0
+            };
+            let candidates: Vec<PatchId> = unassigned
+                .iter()
+                .filter(|&p| p >= min_id)
+                .collect();
+            for p in candidates {
+                // Reversal symmetry: patch 0 must be placed within the first
+                // ⌈k/2⌉ groups.
+                if p == 0 {
+                    let group_idx = if cur_len > 0 { groups.len() - 1 } else { groups.len() };
+                    if group_idx > (self.k - 1) / 2 {
+                        continue;
+                    }
+                }
+                let pp = &self.patch_pixels[p as usize];
+                // Load increment: pixels of p not in current footprint and
+                // not reused from the previous group's footprint.
+                let mut new_pixels = pp.clone();
+                new_pixels.subtract(&cur_fp);
+                let mut loaded = new_pixels.clone();
+                if cur_len == 0 {
+                    // First member: reuse comes from the previous group.
+                    loaded.subtract(&prev_fp);
+                } else {
+                    // Group footprint grows; pixels shared with prev_fp were
+                    // already discounted when the first members joined only
+                    // if they were in cur_fp; discount prev_fp overlap for
+                    // the new pixels as well.
+                    loaded.subtract(&prev_fp);
+                }
+                let inc = loaded.len();
+
+                let mut next_unassigned = unassigned.clone();
+                next_unassigned.remove(p);
+                let mut next_union = PixelSet::empty(self.layer_pixels);
+                for q in next_unassigned.iter() {
+                    next_union.union_with(&self.patch_pixels[q as usize]);
+                }
+                let mut next_fp = cur_fp.clone();
+                next_fp.union_with(pp);
+
+                if cur_len == 0 {
+                    groups.push(vec![p]);
+                } else {
+                    groups.last_mut().unwrap().push(p);
+                }
+                self.recurse(
+                    groups,
+                    next_unassigned,
+                    next_union,
+                    prev_fp.clone(),
+                    next_fp,
+                    cur_cost + inc,
+                    cur_len + 1,
+                );
+                if cur_len == 0 {
+                    groups.pop();
+                } else {
+                    groups.last_mut().unwrap().pop();
+                }
+                if self.timed_out {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::objective::grouping_loads;
+    use crate::strategy;
+
+    fn brute_force(layer: &ConvLayer, g: usize, k: usize) -> usize {
+        // Enumerate all ordered partitions via permutations + chunkings.
+        // Feasible only for tiny n; used to validate the DFS pruning.
+        fn perms(items: &[u32]) -> Vec<Vec<u32>> {
+            if items.len() <= 1 {
+                return vec![items.to_vec()];
+            }
+            let mut out = Vec::new();
+            for (i, &x) in items.iter().enumerate() {
+                let mut rest = items.to_vec();
+                rest.remove(i);
+                for mut p in perms(&rest) {
+                    p.insert(0, x);
+                    out.push(p);
+                }
+            }
+            out
+        }
+        fn chunkings(order: &[u32], g: usize, k: usize) -> Vec<Vec<Vec<u32>>> {
+            // all ways to split `order` into k contiguous non-empty chunks ≤ g
+            fn rec(rest: &[u32], g: usize, k: usize) -> Vec<Vec<Vec<u32>>> {
+                if k == 0 {
+                    return if rest.is_empty() { vec![vec![]] } else { vec![] };
+                }
+                let mut out = Vec::new();
+                for take in 1..=g.min(rest.len()) {
+                    let (head, tail) = rest.split_at(take);
+                    for mut rec_split in rec(tail, g, k - 1) {
+                        rec_split.insert(0, head.to_vec());
+                        out.push(rec_split);
+                    }
+                }
+                out
+            }
+            rec(order, g, k)
+        }
+        let ids: Vec<u32> = layer.all_patches().collect();
+        let mut best = usize::MAX;
+        for perm in perms(&ids) {
+            for split in chunkings(&perm, g, k) {
+                best = best.min(grouping_loads(layer, &split) as usize);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn exact_matches_brute_force_tiny() {
+        // 4x4 input, 3x3 kernel → 2x2 out = 4 patches
+        let l = ConvLayer::square(1, 4, 3, 1);
+        for (g, k) in [(1usize, 4usize), (2, 2), (2, 3)] {
+            if k * g < l.n_patches() {
+                continue;
+            }
+            let bf = brute_force(&l, g, k);
+            let got = solve_exact(&l, g, k, Duration::from_secs(30), None)
+                .expect("must finish");
+            assert_eq!(
+                grouping_loads(&l, &got) as usize,
+                bf,
+                "g={g} k={k}: {got:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_matches_brute_force_5x5_g2() {
+        // 5x5 input → 9 patches; brute force on g=3,k=3 would be huge, use
+        // a 5x4 rectangle → 3x2 = 6 patches with g=3,k=2 (6!·splits ≈ small)
+        let l = ConvLayer::new(1, 5, 4, 3, 3, 1, 1, 1).unwrap();
+        assert_eq!(l.n_patches(), 6);
+        let bf = brute_force(&l, 3, 2);
+        let got = solve_exact(&l, 3, 2, Duration::from_secs(30), None).unwrap();
+        assert_eq!(grouping_loads(&l, &got) as usize, bf);
+    }
+
+    #[test]
+    fn exact_beats_or_matches_heuristics() {
+        let l = ConvLayer::square(1, 5, 3, 1); // 9 patches
+        for g in [2usize, 3] {
+            let k = l.n_patches().div_ceil(g);
+            let start = strategy::row_by_row(&l, g).groups;
+            let got = solve_exact(&l, g, k, Duration::from_secs(30), Some(&start))
+                .expect("should finish");
+            let zig = grouping_loads(&l, &strategy::zigzag(&l, g).groups);
+            let row = grouping_loads(&l, &start);
+            let opt = grouping_loads(&l, &got);
+            assert!(opt <= zig.min(row), "g={g}: {opt} vs {} {}", row, zig);
+            // structure checks
+            assert_eq!(got.len(), k);
+            assert!(got.iter().all(|gr| !gr.is_empty() && gr.len() <= g));
+            let mut all: Vec<u32> = got.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, l.all_patches().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn infeasible_parameters_rejected() {
+        let l = ConvLayer::square(1, 5, 3, 1);
+        assert!(solve_exact(&l, 2, 2, Duration::from_secs(1), None).is_none()); // 4 < 9
+        assert!(solve_exact(&l, 1, 10, Duration::from_secs(1), None).is_none()); // k > n
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let l = ConvLayer::square(1, 8, 3, 1); // 36 patches — way too big
+        let got = solve_exact(&l, 4, 9, Duration::from_millis(10), None);
+        assert!(got.is_none());
+    }
+}

@@ -1,0 +1,235 @@
+//! The §5 optimization problem and its solvers.
+//!
+//! Three cooperating engines, mirroring the paper's CPLEX pipeline:
+//!
+//! * [`model_builder`] — builds the **exact §5 ILP** (Eqs. 2–15, with the
+//!   Table-1 variables `P_g`, `pxl_g`, `pxl_ovlp`, `pxl_I`) over the generic
+//!   [`crate::ilp`] substrate, and decodes a MILP solution back into a
+//!   [`GroupedStrategy`]. Solvable exactly for small layers; used to validate
+//!   the encodings and the search engines against proven optima.
+//! * [`exact`] — a specialized branch & bound over ordered patch partitions
+//!   with an admissible load-lower-bound; exact for mid-size instances
+//!   (≈ ≤ 16 patches) at a fraction of the generic solver's cost.
+//! * [`search`] — simulated-annealing local search over groupings, seeded
+//!   with the best heuristic (the paper's *MIP start*) and playing the role
+//!   of CPLEX's *solution polishing* genetic phase for large instances.
+//!
+//! [`Optimizer`] is the facade the CLI/figure harness uses: it picks the
+//! strongest engine the instance size affords, exactly like the paper's
+//! timeout-guarded OPL runs.
+
+pub mod exact;
+pub mod model_builder;
+pub mod objective;
+pub mod search;
+
+pub use model_builder::{build_s1_model, decode_solution, S1ModelInfo};
+pub use objective::{grouping_duration, grouping_loads, GroupingEval};
+
+use std::time::Duration;
+
+use crate::conv::ConvLayer;
+use crate::platform::Accelerator;
+use crate::strategy::{self, GroupedStrategy};
+
+/// Which engine produced the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Generic MILP on the §5 model, proven optimal.
+    IlpOptimal,
+    /// Generic MILP, incumbent only (budget hit).
+    IlpFeasible,
+    /// Specialized exact branch & bound, proven optimal.
+    Exact,
+    /// Annealing polish from the heuristic MIP start.
+    Polished,
+}
+
+/// Options for [`Optimizer`].
+#[derive(Debug, Clone)]
+pub struct OptimizeOptions {
+    /// Group-size bound `nb_patches_max_S1`.
+    pub group_size: usize,
+    /// Number of groups; `None` = `K_min` (the paper's §7.1 choice).
+    pub k_groups: Option<usize>,
+    /// RNG seed for the polish phase (results are deterministic per seed).
+    pub seed: u64,
+    /// Annealing iteration budget.
+    pub anneal_iters: u64,
+    /// Use the specialized exact engine when `|X|` is at most this.
+    pub exact_max_patches: usize,
+    /// Wall-clock budget for the exact engine (falls back to polish).
+    pub exact_budget: Duration,
+}
+
+impl Default for OptimizeOptions {
+    fn default() -> Self {
+        OptimizeOptions {
+            group_size: 4,
+            k_groups: None,
+            seed: 0xA11CE,
+            anneal_iters: 200_000,
+            exact_max_patches: 12,
+            exact_budget: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Result of an optimization run.
+#[derive(Debug, Clone)]
+pub struct OptimizeResult {
+    pub strategy: GroupedStrategy,
+    /// Strategy duration in cycles under the §7.1 cost model.
+    pub duration: u64,
+    pub method: Method,
+    /// Duration of the best heuristic MIP start, for gain reporting.
+    pub mip_start_duration: u64,
+}
+
+impl OptimizeResult {
+    /// Performance gain over the best heuristic (Fig. 13's metric):
+    /// `(best_heuristic − ours) / best_heuristic`.
+    pub fn gain_over_heuristics(&self) -> f64 {
+        if self.mip_start_duration == 0 {
+            return 0.0;
+        }
+        (self.mip_start_duration as f64 - self.duration as f64)
+            / self.mip_start_duration as f64
+    }
+}
+
+/// Facade: optimal-strategy search for a layer on an accelerator.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub options: OptimizeOptions,
+}
+
+impl Optimizer {
+    pub fn new(options: OptimizeOptions) -> Self {
+        Optimizer { options }
+    }
+
+    /// Run the pipeline: heuristics → (exact | polish).
+    pub fn optimize(&self, layer: &ConvLayer, acc: &Accelerator) -> OptimizeResult {
+        let o = &self.options;
+        let g = o.group_size.max(1);
+        let k = o
+            .k_groups
+            .unwrap_or_else(|| layer.n_patches().div_ceil(g))
+            .clamp(layer.n_patches().div_ceil(g), layer.n_patches());
+
+        // MIP start: best of the built-in heuristics (the paper injects
+        // "either the ZigZag or Row-by-Row strategy, depending on which was
+        // best for the given convolution parameters").
+        let candidates = [
+            strategy::row_by_row(layer, g),
+            strategy::zigzag(layer, g),
+        ];
+        let (mip_start, mip_dur) = candidates
+            .into_iter()
+            .map(|s| {
+                let d = grouping_duration(layer, acc, &s.groups);
+                (s, d)
+            })
+            .min_by_key(|&(_, d)| d)
+            .expect("at least one heuristic");
+
+        // Seed pool for the polish phase: best of *all* in-tree heuristics
+        // (the extension orderings + greedy construction can only improve
+        // the optimized strategy; the Fig.-13 gain denominator stays the
+        // paper-faithful `mip_dur` above).
+        let extra = [
+            strategy::hilbert(layer, g),
+            strategy::diagonal(layer, g),
+            GroupedStrategy::new("greedy", search::greedy(layer, g, k)),
+        ];
+        let (seed, _) = std::iter::once((mip_start.clone(), mip_dur))
+            .chain(extra.into_iter().map(|s| {
+                let d = grouping_duration(layer, acc, &s.groups);
+                (s, d)
+            }))
+            .min_by_key(|&(_, d)| d)
+            .expect("at least one seed");
+
+        // Exact engine for small instances.
+        if layer.n_patches() <= o.exact_max_patches {
+            if let Some(groups) =
+                exact::solve_exact(layer, g, k, o.exact_budget, Some(&seed.groups))
+            {
+                let duration = grouping_duration(layer, acc, &groups);
+                let mut strategy = GroupedStrategy::new("opl-exact", groups);
+                strategy.writeback = mip_start.writeback;
+                return OptimizeResult {
+                    duration,
+                    strategy,
+                    method: Method::Exact,
+                    mip_start_duration: mip_dur,
+                };
+            }
+        }
+
+        // Polish phase (the paper's solution-polishing analogue).
+        let groups = search::anneal(layer, g, k, &seed.groups, o.anneal_iters, o.seed);
+        let duration = grouping_duration(layer, acc, &groups);
+        let mut strategy = GroupedStrategy::new("opl-polished", groups);
+        strategy.writeback = mip_start.writeback;
+        // Never return something worse than the best seed / MIP start.
+        let seed_dur = grouping_duration(layer, acc, &seed.groups);
+        if duration > seed_dur.min(mip_dur) {
+            let (best, best_dur) =
+                if seed_dur <= mip_dur { (seed, seed_dur) } else { (mip_start, mip_dur) };
+            return OptimizeResult {
+                strategy: best,
+                duration: best_dur,
+                method: Method::Polished,
+                mip_start_duration: mip_dur,
+            };
+        }
+        OptimizeResult {
+            duration,
+            strategy,
+            method: Method::Polished,
+            mip_start_duration: mip_dur,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimizer_never_worse_than_heuristics() {
+        for h in [6usize, 8] {
+            let l = ConvLayer::square(1, h, 3, 1);
+            for g in [2usize, 3, 4] {
+                let acc = Accelerator::for_group_size(&l, g);
+                let opt = Optimizer::new(OptimizeOptions {
+                    group_size: g,
+                    anneal_iters: 20_000,
+                    ..Default::default()
+                });
+                let res = opt.optimize(&l, &acc);
+                assert!(res.gain_over_heuristics() >= 0.0);
+                assert!(res.duration <= res.mip_start_duration);
+                // strategy covers all patches exactly once
+                let mut all: Vec<u32> =
+                    res.strategy.groups.iter().flatten().copied().collect();
+                all.sort();
+                assert_eq!(all, l.all_patches().collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn exact_engine_used_for_small_instances() {
+        let l = ConvLayer::square(1, 5, 3, 1); // 9 patches
+        let acc = Accelerator::for_group_size(&l, 2);
+        let opt = Optimizer::new(OptimizeOptions {
+            group_size: 2,
+            ..Default::default()
+        });
+        let res = opt.optimize(&l, &acc);
+        assert_eq!(res.method, Method::Exact);
+    }
+}

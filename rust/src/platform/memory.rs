@@ -1,0 +1,134 @@
+//! On-chip memory state `M_i = [M_i^inp, M_i^ker, M_i^out]` (Definition 2).
+//!
+//! Granularities follow the paper:
+//! * **input** — spatial pixels (Remark 6); element count = pixels × `C_in`;
+//! * **kernels** — whole kernels (S1 never splits a kernel); element count =
+//!   kernels × `C_in·H_K·W_K`;
+//! * **output** — per-patch output columns (a step computes all `C_out`
+//!   channels of each patch, Property 1); element count = patches × `C_out`.
+
+use crate::conv::ConvLayer;
+use crate::tensor::PixelSet;
+
+/// Set of kernel indices `⊆ Λ` held on chip (bitset over `[0, N)`).
+pub type KernelSet = PixelSet;
+
+/// Set of *computed, not yet written back* output patches (bitset over
+/// `[0, |X|)`; each member stands for the `C_out` values `O[·, i, j]`).
+pub type OutputSet = PixelSet;
+
+/// The on-chip memory contents at a step boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryState {
+    pub inp: PixelSet,
+    pub ker: KernelSet,
+    pub out: OutputSet,
+}
+
+impl MemoryState {
+    /// `M_0 = [∅, ∅, ∅]` — the memory is initially empty (Definition 2).
+    pub fn initial(layer: &ConvLayer) -> Self {
+        MemoryState {
+            inp: PixelSet::empty(layer.n_pixels()),
+            ker: KernelSet::empty(layer.n_kernels),
+            out: OutputSet::empty(layer.n_patches()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inp.is_empty() && self.ker.is_empty() && self.out.is_empty()
+    }
+
+    /// Occupied elements: inputs + kernels + outputs.
+    pub fn occupied_elements(&self, layer: &ConvLayer) -> u64 {
+        (self.inp.len() * layer.c_in
+            + self.ker.len() * layer.kernel_dims().len()
+            + self.out.len() * layer.c_out()) as u64
+    }
+}
+
+/// On-chip memory with capacity accounting.
+///
+/// Tracks the running state plus the *peak* element occupancy seen, which is
+/// what the capacity constraint (Eq. 12) bounds:
+/// `size_i^step = |M^inp ∪ I^slice| + |M^ker ∪ K^sub| + |M^out ∪ Out_i|`.
+#[derive(Debug, Clone)]
+pub struct OnChipMemory {
+    pub state: MemoryState,
+    capacity: u64,
+    peak: u64,
+}
+
+impl OnChipMemory {
+    pub fn new(layer: &ConvLayer, capacity: u64) -> Self {
+        OnChipMemory { state: MemoryState::initial(layer), capacity, peak: 0 }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Highest element occupancy observed so far.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Record the current occupancy into the peak tracker and check capacity.
+    ///
+    /// Returns `Err` with the overflowing size if the occupancy exceeds
+    /// `size_MEM`.
+    pub fn note_occupancy(&mut self, layer: &ConvLayer) -> Result<u64, u64> {
+        let occ = self.state.occupied_elements(layer);
+        self.peak = self.peak.max(occ);
+        if occ > self.capacity {
+            Err(occ)
+        } else {
+            Ok(occ)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    #[test]
+    fn initial_state_empty() {
+        let l = layer();
+        let m = MemoryState::initial(&l);
+        assert!(m.is_empty());
+        assert_eq!(m.occupied_elements(&l), 0);
+        assert_eq!(m.inp.universe(), 25);
+        assert_eq!(m.ker.universe(), 2);
+        assert_eq!(m.out.universe(), 9);
+    }
+
+    #[test]
+    fn occupancy_counts_elements_not_pixels() {
+        let l = layer();
+        let mut m = MemoryState::initial(&l);
+        m.inp = l.patch_pixels(0); // 9 pixels × 2 channels = 18 elements
+        m.ker.insert(0); // 1 kernel × 18 = 18 elements
+        m.out.insert(0); // 1 patch × C_out=2 = 2 elements
+        assert_eq!(m.occupied_elements(&l), 18 + 18 + 2);
+    }
+
+    #[test]
+    fn peak_tracking_and_overflow() {
+        let l = layer();
+        let mut mem = OnChipMemory::new(&l, 20);
+        mem.state.inp = l.patch_pixels(0); // 18 elements
+        assert_eq!(mem.note_occupancy(&l), Ok(18));
+        mem.state.ker.insert(0); // +18 → 36 > 20
+        assert_eq!(mem.note_occupancy(&l), Err(36));
+        assert_eq!(mem.peak(), 36);
+        // freeing brings occupancy down, peak stays
+        mem.state.ker.clear();
+        assert_eq!(mem.note_occupancy(&l), Ok(18));
+        assert_eq!(mem.peak(), 36);
+    }
+}

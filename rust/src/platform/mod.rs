@@ -1,0 +1,7 @@
+//! Platform model (§2.1): accelerator, DRAM and the on-chip memory state.
+
+mod accelerator;
+mod memory;
+
+pub use accelerator::{Accelerator, Platform};
+pub use memory::{KernelSet, MemoryState, OnChipMemory, OutputSet};

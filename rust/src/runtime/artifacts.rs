@@ -1,0 +1,183 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// A step-compute executable variant: `[g_max, d] @ [d, n] → [g_max, n]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepVariant {
+    pub name: String,
+    pub file: String,
+    pub d: usize,
+    pub n: usize,
+    pub g_max: usize,
+}
+
+/// A whole-layer forward executable variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerVariant {
+    pub name: String,
+    pub file: String,
+    pub c_in: usize,
+    pub h_in: usize,
+    pub w_in: usize,
+    pub n: usize,
+    pub h_k: usize,
+    pub w_k: usize,
+    pub s_h: usize,
+    pub s_w: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub steps: Vec<StepVariant>,
+    pub layers: Vec<LayerVariant>,
+}
+
+impl ArtifactManifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let mut m = ArtifactManifest { dir: dir.to_path_buf(), ..Default::default() };
+
+        let get = |o: &Json, k: &str| -> Result<usize, String> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .ok_or(format!("manifest entry missing '{k}'"))
+        };
+        let get_str = |o: &Json, k: &str| -> Result<String, String> {
+            Ok(o.get(k)
+                .and_then(Json::as_str)
+                .ok_or(format!("manifest entry missing '{k}'"))?
+                .to_string())
+        };
+
+        for e in v.get("step").and_then(Json::as_arr).unwrap_or(&[]) {
+            m.steps.push(StepVariant {
+                name: get_str(e, "name")?,
+                file: get_str(e, "file")?,
+                d: get(e, "d")?,
+                n: get(e, "n")?,
+                g_max: get(e, "g_max")?,
+            });
+        }
+        for e in v.get("layer").and_then(Json::as_arr).unwrap_or(&[]) {
+            m.layers.push(LayerVariant {
+                name: get_str(e, "name")?,
+                file: get_str(e, "file")?,
+                c_in: get(e, "c_in")?,
+                h_in: get(e, "h_in")?,
+                w_in: get(e, "w_in")?,
+                n: get(e, "n")?,
+                h_k: get(e, "h_k")?,
+                w_k: get(e, "w_k")?,
+                s_h: get(e, "s_h")?,
+                s_w: get(e, "s_w")?,
+            });
+        }
+        Ok(m)
+    }
+
+    /// Find a step variant able to run groups for a layer with `d`-long
+    /// im2col rows, `n` kernels and groups of at most `group` patches.
+    pub fn find_step(&self, d: usize, n: usize, group: usize) -> Option<&StepVariant> {
+        self.steps
+            .iter()
+            .filter(|s| s.d == d && s.n == n && s.g_max >= group)
+            .min_by_key(|s| s.g_max)
+    }
+
+    /// Find a whole-layer variant by exact dimensions.
+    pub fn find_layer(
+        &self,
+        c_in: usize,
+        h_in: usize,
+        w_in: usize,
+        n: usize,
+        h_k: usize,
+    ) -> Option<&LayerVariant> {
+        self.layers.iter().find(|l| {
+            l.c_in == c_in && l.h_in == h_in && l.w_in == w_in && l.n == n && l.h_k == h_k
+        })
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "step": [
+        {"name": "s1", "file": "s1.hlo.txt", "d": 9, "n": 1, "g_max": 8},
+        {"name": "s2", "file": "s2.hlo.txt", "d": 9, "n": 1, "g_max": 16}
+      ],
+      "layer": [
+        {"name": "l1", "file": "l1.hlo.txt", "c_in": 1, "h_in": 6, "w_in": 6,
+         "n": 1, "h_k": 3, "w_k": 3, "s_h": 1, "s_w": 1, "h_out": 4, "w_out": 4}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.steps.len(), 2);
+        assert_eq!(m.layers.len(), 1);
+        assert_eq!(m.steps[0].g_max, 8);
+        assert_eq!(m.layers[0].h_in, 6);
+        assert_eq!(m.path_of("s1.hlo.txt"), PathBuf::from("/tmp/a/s1.hlo.txt"));
+    }
+
+    #[test]
+    fn find_step_picks_smallest_sufficient() {
+        let m = ArtifactManifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert_eq!(m.find_step(9, 1, 4).unwrap().name, "s1");
+        assert_eq!(m.find_step(9, 1, 12).unwrap().name, "s2");
+        assert!(m.find_step(9, 1, 32).is_none());
+        assert!(m.find_step(10, 1, 4).is_none());
+    }
+
+    #[test]
+    fn find_layer_exact_match() {
+        let m = ArtifactManifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(m.find_layer(1, 6, 6, 1, 3).is_some());
+        assert!(m.find_layer(1, 6, 6, 1, 5).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse(Path::new("."), "{").is_err());
+        assert!(ArtifactManifest::parse(
+            Path::new("."),
+            r#"{"step": [{"name": "x"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(!m.steps.is_empty());
+            assert!(!m.layers.is_empty());
+            for s in &m.steps {
+                assert!(dir.join(&s.file).exists(), "{} missing", s.file);
+            }
+        }
+    }
+}

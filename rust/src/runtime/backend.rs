@@ -1,0 +1,140 @@
+//! [`PjrtBackend`] — the functional-simulation compute backend that runs
+//! each step's `a_6` on the AOT-compiled XLA executable.
+
+use crate::conv::ConvLayer;
+use crate::runtime::{Runtime, RuntimeError};
+use crate::sim::ComputeBackend;
+
+/// Executes step computes through PJRT. Groups larger than the artifact's
+/// static `g_max` are processed in chunks; smaller groups are zero-padded
+/// (padded rows produce zero outputs that are discarded).
+pub struct PjrtBackend {
+    runtime: Runtime,
+    name: String,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> Self {
+        let name = format!("pjrt({})", runtime.platform());
+        PjrtBackend { runtime, name }
+    }
+
+    /// Convenience: open the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self, RuntimeError> {
+        Ok(Self::new(Runtime::from_default_dir()?))
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.runtime
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn step_compute(
+        &mut self,
+        layer: &ConvLayer,
+        patches: &[f32],
+        kernel_matrix: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, String> {
+        let d = layer.ops_per_output_value();
+        let n = layer.n_kernels;
+        if patches.len() != rows * d {
+            return Err(format!("patch matrix {} != {rows}x{d}", patches.len()));
+        }
+        if kernel_matrix.len() != d * n {
+            return Err(format!("kernel matrix {} != {d}x{n}", kernel_matrix.len()));
+        }
+        let variant = self
+            .runtime
+            .manifest
+            .find_step(d, n, rows.min(usize::MAX))
+            .or_else(|| self.runtime.manifest.find_step(d, n, 1))
+            .ok_or_else(|| format!("no step artifact for d={d} n={n}"))?
+            .clone();
+        let g_max = variant.g_max;
+
+        let mut out = Vec::with_capacity(rows * n);
+        let mut row = 0;
+        while row < rows {
+            let take = (rows - row).min(g_max);
+            // Zero-pad the chunk to the static [g_max, d] shape.
+            let mut buf = vec![0f32; g_max * d];
+            buf[..take * d].copy_from_slice(&patches[row * d..(row + take) * d]);
+            let result = self
+                .runtime
+                .execute_f32(
+                    &variant.file,
+                    &[(&buf, &[g_max, d]), (kernel_matrix, &[d, n])],
+                )
+                .map_err(|e| e.to_string())?;
+            out.extend_from_slice(&result[..take * n]);
+            row += take;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference;
+    use crate::runtime::artifacts_available;
+
+    fn backend() -> Option<PjrtBackend> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtBackend::from_default_dir().unwrap())
+    }
+
+    #[test]
+    fn matches_rust_oracle_padded_and_chunked() {
+        let Some(mut b) = backend() else { return };
+        let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap(); // d=18, n=2
+        let input = reference::synth_tensor(l.input_dims().len(), 21);
+        let kernels = reference::synth_tensor(l.kernel_elements(), 22);
+        let km = reference::kernel_matrix(&l, &kernels);
+        // group sizes: 1 (padded), 8 (exact), 9 (chunked: 8 + 1)
+        for group_len in [1usize, 8, 9] {
+            let group: Vec<u32> =
+                (0..group_len as u32).map(|p| p % l.n_patches() as u32).collect();
+            // avoid duplicate patches for im2col only (values identical anyway)
+            let pm = reference::im2col_group(&l, &input, &group);
+            let got = b.step_compute(&l, &pm, &km, group.len()).unwrap();
+            let mut oracle = crate::sim::RustOracleBackend;
+            let want = oracle.step_compute(&l, &pm, &km, group.len()).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, c) in got.iter().zip(&want) {
+                assert!((a - c).abs() < 1e-4, "g={group_len}: {a} vs {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn functional_simulation_through_pjrt() {
+        let Some(mut b) = backend() else { return };
+        let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let acc = crate::platform::Accelerator::for_group_size(&l, 2);
+        let sim = crate::sim::Simulator::new(l, crate::platform::Platform::new(acc));
+        let input = reference::synth_tensor(l.input_dims().len(), 31);
+        let kernels = reference::synth_tensor(l.kernel_elements(), 32);
+        let s = crate::strategy::zigzag(&l, 2);
+        let report = sim.run_functional(&s, &input, &kernels, &mut b).unwrap();
+        assert_eq!(report.functional_ok(1e-4), Some(true));
+    }
+
+    #[test]
+    fn missing_variant_is_an_error() {
+        let Some(mut b) = backend() else { return };
+        let l = ConvLayer::new(7, 9, 9, 3, 3, 5, 1, 1).unwrap(); // d=63,n=5: no artifact
+        let pm = vec![0f32; 63];
+        let km = vec![0f32; 63 * 5];
+        assert!(b.step_compute(&l, &pm, &km, 1).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The PJRT client wrapper: compile-once, execute-many.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::runtime::ArtifactManifest;
+
+/// Runtime failure.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// PJRT / XLA error from the `xla` crate.
+    Xla(String),
+    /// No artifact variant matches the requested shapes.
+    NoVariant { what: String },
+    /// Manifest missing or malformed.
+    Manifest(String),
+    /// Bad input sizes for an executable.
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::NoVariant { what } => {
+                write!(f, "no AOT artifact variant for {what} (re-run `make artifacts`?)")
+            }
+            RuntimeError::Manifest(e) => write!(f, "manifest error: {e}"),
+            RuntimeError::Shape(e) => write!(f, "shape error: {e}"),
+        }
+    }
+}
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled executable plus its I/O shape signature.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    /// Flattened input lengths, in argument order.
+    input_lens: Vec<usize>,
+}
+
+/// The runtime: a PJRT CPU client with a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: HashMap<String, LoadedExe>,
+}
+
+impl Runtime {
+    /// Create from an artifacts directory (must contain `manifest.json`).
+    pub fn new(dir: &Path) -> Result<Self, RuntimeError> {
+        let manifest = ArtifactManifest::load(dir).map_err(RuntimeError::Manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Create from the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self, RuntimeError> {
+        Self::new(&crate::runtime::artifacts_dir())
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact `file` with the given
+    /// flattened input lengths.
+    fn load(&mut self, file: &str, input_lens: Vec<usize>) -> Result<&LoadedExe, RuntimeError> {
+        if !self.cache.contains_key(file) {
+            let path = self.manifest.path_of(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(file.to_string(), LoadedExe { exe, input_lens });
+        }
+        Ok(&self.cache[file])
+    }
+
+    /// Execute an artifact on f32 buffers with static shapes.
+    ///
+    /// `inputs` are (data, dims) pairs; the single tuple output is returned
+    /// flattened.
+    pub fn execute_f32(
+        &mut self,
+        file: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>, RuntimeError> {
+        let lens: Vec<usize> = inputs.iter().map(|(d, _)| d.len()).collect();
+        let loaded = self.load(file, lens)?;
+        for ((data, dims), expect) in inputs.iter().zip(&loaded.input_lens) {
+            let n: usize = dims.iter().product();
+            if n != data.len() || data.len() != *expect {
+                return Err(RuntimeError::Shape(format!(
+                    "input length {} does not match dims {:?} (expect {expect})",
+                    data.len(),
+                    dims
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims_i64)
+            })
+            .collect::<Result<_, _>>()?;
+        let result = loaded.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    /// End-to-end PJRT smoke test against the real artifacts (skipped until
+    /// `make artifacts` has produced them).
+    #[test]
+    fn executes_step_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let v = rt.manifest.find_step(9, 1, 8).expect("paper step variant").clone();
+        // patches = identity-ish rows, kernels = ones → row sums
+        let g = v.g_max;
+        let patches: Vec<f32> = (0..g * 9).map(|i| (i % 7) as f32).collect();
+        let kernels = vec![1f32; 9];
+        let out = rt
+            .execute_f32(&v.file, &[(&patches, &[g, 9]), (&kernels, &[9, 1])])
+            .unwrap();
+        assert_eq!(out.len(), g);
+        for (r, o) in out.iter().enumerate() {
+            let want: f32 = patches[r * 9..(r + 1) * 9].iter().sum();
+            assert!((o - want).abs() < 1e-4, "row {r}: {o} vs {want}");
+        }
+        // compile cache: second call must not recompile
+        let _ = rt
+            .execute_f32(&v.file, &[(&patches, &[g, 9]), (&kernels, &[9, 1])])
+            .unwrap();
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn layer_artifact_matches_rust_oracle() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let v = rt.manifest.find_layer(2, 5, 5, 2, 3).expect("example1 layer").clone();
+        let layer = crate::conv::ConvLayer::new(
+            v.c_in, v.h_in, v.w_in, v.h_k, v.w_k, v.n, v.s_h, v.s_w,
+        )
+        .unwrap();
+        let input = crate::conv::reference::synth_tensor(layer.input_dims().len(), 11);
+        let kernels = crate::conv::reference::synth_tensor(layer.kernel_elements(), 12);
+        let out = rt
+            .execute_f32(
+                &v.file,
+                &[
+                    (&input, &[v.c_in, v.h_in, v.w_in]),
+                    (&kernels, &[v.n, v.c_in, v.h_k, v.w_k]),
+                ],
+            )
+            .unwrap();
+        let want = crate::conv::reference::conv2d(&layer, &input, &kernels);
+        assert_eq!(out.len(), want.len());
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors() {
+        match Runtime::new(Path::new("/nonexistent-dir-xyz")) {
+            Err(RuntimeError::Manifest(_)) => {}
+            Err(other) => panic!("expected manifest error, got {other}"),
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+}

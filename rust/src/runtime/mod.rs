@@ -1,0 +1,29 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): each `artifacts/*.hlo.txt`
+//! is parsed from **HLO text** (the interchange format — serialized protos
+//! from jax ≥ 0.5 use 64-bit ids that xla_extension 0.5.1 rejects), compiled
+//! once, and cached per shape variant. Python never runs at simulation time:
+//! the Rust request path calls straight into the compiled executables.
+
+mod artifacts;
+mod backend;
+mod client;
+
+pub use artifacts::{ArtifactManifest, LayerVariant, StepVariant};
+pub use backend::PjrtBackend;
+pub use client::{Runtime, RuntimeError};
+
+/// Default artifacts directory, overridable via `CONVOFFLOAD_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    match std::env::var("CONVOFFLOAD_ARTIFACTS") {
+        Ok(dir) => dir.into(),
+        Err(_) => std::path::PathBuf::from("artifacts"),
+    }
+}
+
+/// True when the artifacts directory (with a manifest) exists — used by
+/// tests and examples to skip PJRT paths before `make artifacts` has run.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

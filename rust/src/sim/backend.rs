@@ -1,0 +1,124 @@
+//! Compute backends for the functional simulation.
+//!
+//! The accelerator's `a_6` action — “compute the group of patches against all
+//! kernels” — is abstracted behind [`ComputeBackend`] so the simulator can
+//! run it either on the in-process Rust oracle or on the AOT-compiled XLA
+//! executable through PJRT ([`crate::runtime::PjrtBackend`]). Both receive
+//! the *im2col-gathered on-chip data only*, so a backend cannot cheat by
+//! peeking at input values the strategy failed to load.
+
+use crate::conv::ConvLayer;
+
+/// A per-step compute engine.
+pub trait ComputeBackend {
+    /// Multiply `patches [rows, C_in·H_K·W_K]` (row-major) by
+    /// `kernels [C_in·H_K·W_K, N]` (row-major), returning `[rows, N]`.
+    ///
+    /// `rows` is the group size of the step being executed.
+    fn step_compute(
+        &mut self,
+        layer: &ConvLayer,
+        patches: &[f32],
+        kernel_matrix: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, String>;
+
+    /// Identifier for reports.
+    fn name(&self) -> &str;
+}
+
+/// Backend selector used by CLI / examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FunctionalBackend {
+    /// Pure-Rust GEMM oracle (always available).
+    RustOracle,
+    /// AOT XLA executable via the PJRT CPU client (requires artifacts).
+    Pjrt,
+}
+
+impl FunctionalBackend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FunctionalBackend::RustOracle => "rust-oracle",
+            FunctionalBackend::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "rust-oracle" | "rust" | "oracle" => Ok(FunctionalBackend::RustOracle),
+            "pjrt" | "xla" => Ok(FunctionalBackend::Pjrt),
+            other => Err(format!("unknown backend '{other}'")),
+        }
+    }
+}
+
+/// The in-process oracle: plain row-major GEMM.
+#[derive(Debug, Default)]
+pub struct RustOracleBackend;
+
+impl ComputeBackend for RustOracleBackend {
+    fn step_compute(
+        &mut self,
+        layer: &ConvLayer,
+        patches: &[f32],
+        kernel_matrix: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>, String> {
+        let d = layer.ops_per_output_value();
+        let n = layer.n_kernels;
+        if patches.len() != rows * d {
+            return Err(format!(
+                "patch matrix size {} != rows {rows} × D {d}",
+                patches.len()
+            ));
+        }
+        if kernel_matrix.len() != d * n {
+            return Err(format!(
+                "kernel matrix size {} != D {d} × N {n}",
+                kernel_matrix.len()
+            ));
+        }
+        Ok(crate::conv::reference::gemm(patches, kernel_matrix, rows, d, n))
+    }
+
+    fn name(&self) -> &str {
+        "rust-oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::reference;
+
+    #[test]
+    fn oracle_matches_reference_conv() {
+        let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let input = reference::synth_tensor(l.input_dims().len(), 1);
+        let kernels = reference::synth_tensor(l.kernel_elements(), 2);
+        let group: Vec<u32> = vec![0, 4, 8];
+        let pm = reference::im2col_group(&l, &input, &group);
+        let km = reference::kernel_matrix(&l, &kernels);
+        let mut b = RustOracleBackend;
+        let got = b.step_compute(&l, &pm, &km, group.len()).unwrap();
+        let want = reference::step_compute(&l, &input, &kernels, &group);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn oracle_rejects_bad_shapes() {
+        let l = ConvLayer::new(1, 4, 4, 2, 2, 1, 1, 1).unwrap();
+        let mut b = RustOracleBackend;
+        assert!(b.step_compute(&l, &[0.0; 3], &[0.0; 4], 1).is_err());
+        assert!(b.step_compute(&l, &[0.0; 4], &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn backend_name_roundtrip() {
+        for b in [FunctionalBackend::RustOracle, FunctionalBackend::Pjrt] {
+            assert_eq!(FunctionalBackend::from_str(b.as_str()), Ok(b));
+        }
+        assert!(FunctionalBackend::from_str("bogus").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The simulator (§6): step-by-step execution of a strategy on the platform
+//! model, with metrics, trace recording and functional simulation.
+//!
+//! The engine follows the paper's orchestration loop exactly: at each step it
+//! 1) reads the step from the strategy, 2) frees the unnecessary elements,
+//! 3) writes results to DRAM, 4) loads elements from DRAM, 5) triggers the
+//! accelerator compute, 6) loops. The *logical* simulation tracks sets and
+//! costs only; the *functional* simulation additionally moves real `f32`
+//! values through the modelled memories and checks the stepwise result
+//! against the whole-layer reference convolution.
+
+mod backend;
+mod engine;
+pub mod network;
+mod report;
+
+pub use backend::{ComputeBackend, FunctionalBackend, RustOracleBackend};
+pub use engine::{SimError, Simulator};
+pub use network::{Network, NetworkReport, Stage};
+pub use report::{summary_line, SimReport, StepRecord};

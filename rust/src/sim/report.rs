@@ -1,0 +1,167 @@
+//! Simulation reports: per-step records and strategy-level aggregates.
+
+use crate::platform::Accelerator;
+use crate::step::{StepCost, StrategyCost};
+use crate::util::json::Json;
+
+/// Metrics for one executed step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    /// Step index (0-based; the terminal flush is the last record).
+    pub index: usize,
+    /// Elements loaded / written and MACs performed.
+    pub cost: StepCost,
+    /// Step duration in cycles.
+    pub duration: u64,
+    /// `size_i^step` — element occupancy after loads + compute.
+    pub occupancy: u64,
+    /// Input elements resident at the end of the step (`|M_i^inp|·C_in`).
+    pub resident_input_elements: u64,
+    /// Patches computed this step.
+    pub group_len: usize,
+}
+
+/// Result of simulating a full strategy.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub strategy_name: String,
+    pub steps: Vec<StepRecord>,
+    pub totals: StrategyCost,
+    /// Total duration δ in cycles.
+    pub duration: u64,
+    /// Peak element occupancy across steps.
+    pub peak_occupancy: u64,
+    /// Output of the functional simulation (present in functional mode).
+    pub output: Option<Vec<f32>>,
+    /// Max |output - reference| from the functional check (if run).
+    pub max_abs_error: Option<f32>,
+}
+
+impl SimReport {
+    pub fn new(strategy_name: String) -> Self {
+        SimReport {
+            strategy_name,
+            steps: Vec::new(),
+            totals: StrategyCost::default(),
+            duration: 0,
+            peak_occupancy: 0,
+            output: None,
+            max_abs_error: None,
+        }
+    }
+
+    pub fn push_step(&mut self, rec: StepRecord) {
+        self.totals.push(&rec.cost);
+        self.duration += rec.duration;
+        self.peak_occupancy = self.peak_occupancy.max(rec.occupancy);
+        self.steps.push(rec);
+    }
+
+    /// Number of compute steps `n` (flush and housekeeping excluded).
+    pub fn n_compute_steps(&self) -> u64 {
+        self.totals.n_compute_steps
+    }
+
+    /// `Σ |I_i^slice|` in elements — the bandwidth term of Eq. 15.
+    pub fn total_loaded(&self) -> u64 {
+        self.totals.total.loaded_elements
+    }
+
+    /// Did the functional check pass within `tol`?
+    pub fn functional_ok(&self, tol: f32) -> Option<bool> {
+        self.max_abs_error.map(|e| e <= tol)
+    }
+
+    /// Serialize (without the raw output tensor) for trace files.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("strategy", self.strategy_name.as_str())
+            .set("duration", self.duration)
+            .set("loaded_elements", self.total_loaded())
+            .set("written_elements", self.totals.total.written_elements)
+            .set("macs", self.totals.total.macs)
+            .set("n_steps", self.totals.n_steps)
+            .set("n_compute_steps", self.totals.n_compute_steps)
+            .set("peak_occupancy", self.peak_occupancy);
+        if let Some(err) = self.max_abs_error {
+            o.set("max_abs_error", err as f64);
+        }
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut so = Json::obj();
+                so.set("index", s.index)
+                    .set("loaded", s.cost.loaded_elements)
+                    .set("written", s.cost.written_elements)
+                    .set("macs", s.cost.macs)
+                    .set("duration", s.duration)
+                    .set("occupancy", s.occupancy)
+                    .set("resident_input", s.resident_input_elements)
+                    .set("group_len", s.group_len);
+                so
+            })
+            .collect();
+        o.set("steps", Json::Arr(steps));
+        o
+    }
+}
+
+/// Compact one-line summary used by the CLI and examples.
+pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
+    format!(
+        "{:<24} δ={:>8} cycles  (loads {:>7} el × t_l={} | writes {:>6} el × t_w={} | {:>5} steps × t_acc={})  peak mem {:>7} el",
+        report.strategy_name,
+        report.duration,
+        report.total_loaded(),
+        acc.t_l,
+        report.totals.total.written_elements,
+        acc.t_w,
+        report.n_compute_steps(),
+        acc.t_acc,
+        report.peak_occupancy,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_accumulate() {
+        let mut r = SimReport::new("test".into());
+        r.push_step(StepRecord {
+            index: 0,
+            cost: StepCost { loaded_elements: 10, written_elements: 0, computed: true, macs: 5 },
+            duration: 11,
+            occupancy: 30,
+            resident_input_elements: 10,
+            group_len: 2,
+        });
+        r.push_step(StepRecord {
+            index: 1,
+            cost: StepCost { loaded_elements: 4, written_elements: 2, computed: true, macs: 5 },
+            duration: 5,
+            occupancy: 40,
+            resident_input_elements: 8,
+            group_len: 2,
+        });
+        assert_eq!(r.duration, 16);
+        assert_eq!(r.total_loaded(), 14);
+        assert_eq!(r.peak_occupancy, 40);
+        assert_eq!(r.n_compute_steps(), 2);
+        let j = r.to_json();
+        assert_eq!(j.get("duration").unwrap().as_u64(), Some(16));
+        assert_eq!(j.get("steps").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn functional_ok_requires_error_bound() {
+        let mut r = SimReport::new("f".into());
+        assert_eq!(r.functional_ok(1e-5), None);
+        r.max_abs_error = Some(1e-6);
+        assert_eq!(r.functional_ok(1e-5), Some(true));
+        r.max_abs_error = Some(1e-3);
+        assert_eq!(r.functional_ok(1e-5), Some(false));
+    }
+}

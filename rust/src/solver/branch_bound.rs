@@ -1,0 +1,301 @@
+//! 0-1 branch & bound over the LP relaxation, with MIP start and budgets —
+//! the exact phase of the paper's solve pipeline (§7.1).
+
+use std::time::{Duration, Instant};
+
+use crate::ilp::{Model, Solution, SolveStatus, VarKind};
+use crate::solver::{solve_lp, LpOutcome};
+
+/// Solve options mirroring the paper's OPL setup: a time budget (the paper
+/// used 0.5–5 h), a node budget, and a MIP start injected from the best
+/// heuristic strategy.
+#[derive(Debug, Clone)]
+pub struct BranchBoundOptions {
+    pub time_budget: Duration,
+    pub node_budget: u64,
+    /// Feasible starting assignment (full, over all model vars).
+    pub mip_start: Option<Vec<f64>>,
+    /// Absolute optimality gap below which search stops.
+    pub gap_tolerance: f64,
+}
+
+impl Default for BranchBoundOptions {
+    fn default() -> Self {
+        BranchBoundOptions {
+            time_budget: Duration::from_secs(30),
+            node_budget: 200_000,
+            mip_start: None,
+            gap_tolerance: 1e-6,
+        }
+    }
+}
+
+struct Node {
+    /// Bound overrides per var (None = free).
+    fixes: Vec<Option<(f64, f64)>>,
+    /// LP bound of the parent (priority).
+    bound: f64,
+}
+
+/// Best-first 0-1 branch & bound.
+///
+/// Integer variables must be binaries (all the §5 models are); general
+/// integers would need rounding-direction branching which this substrate
+/// does not implement.
+pub fn solve_milp(model: &Model, opts: &BranchBoundOptions) -> Solution {
+    let n = model.n_vars();
+    let start = Instant::now();
+
+    // Incumbent from the MIP start, if valid.
+    let mut best_obj = f64::INFINITY;
+    let mut best_assign: Option<Vec<f64>> = None;
+    if let Some(ref s) = opts.mip_start {
+        if model.is_feasible(s, 1e-6) {
+            best_obj = model.objective_value(s);
+            best_assign = Some(s.clone());
+        }
+    }
+
+    // Priority queue ordered by LP bound (best-first).
+    let mut heap: Vec<Node> = vec![Node { fixes: vec![None; n], bound: f64::NEG_INFINITY }];
+    let mut nodes = 0u64;
+    let mut proven_lower = f64::NEG_INFINITY;
+    let mut exhausted = true;
+
+    while let Some(pos) = pop_best(&heap) {
+        let node = heap.swap_remove(pos);
+        if nodes >= opts.node_budget || start.elapsed() > opts.time_budget {
+            exhausted = false;
+            break;
+        }
+        nodes += 1;
+
+        if node.bound >= best_obj - opts.gap_tolerance {
+            continue; // pruned by bound
+        }
+
+        let lp = solve_lp(model, &node.fixes);
+        let (assignment, lp_obj) = match lp {
+            LpOutcome::Optimal { assignment, objective } => (assignment, objective),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => {
+                // Binary models are always bounded; treat as failure to bound.
+                (vec![], f64::NEG_INFINITY)
+            }
+        };
+        if assignment.is_empty() {
+            exhausted = false;
+            continue;
+        }
+        if lp_obj >= best_obj - opts.gap_tolerance {
+            continue;
+        }
+
+        // Most-fractional branching among integer vars (closest to 0.5).
+        let mut branch_var = usize::MAX;
+        let mut best_dist = f64::INFINITY;
+        for i in 0..n {
+            if model.kind(crate::ilp::VarId(i)) != VarKind::Integer {
+                continue;
+            }
+            let f = (assignment[i] - assignment[i].round()).abs();
+            if f > 1e-6 {
+                let dist = (f - 0.5).abs();
+                if dist < best_dist {
+                    best_dist = dist;
+                    branch_var = i;
+                }
+            }
+        }
+
+        if branch_var == usize::MAX {
+            // LP solution is integral → candidate incumbent.
+            if model.is_feasible(&assignment, 1e-6) && lp_obj < best_obj {
+                best_obj = lp_obj;
+                best_assign = Some(assignment);
+            }
+            continue;
+        }
+
+        // Branch down (fix 0) and up (fix 1).
+        for &(flo, fhi) in &[(0.0, 0.0), (1.0, 1.0)] {
+            let mut fixes = node.fixes.clone();
+            fixes[branch_var] = Some((flo, fhi));
+            heap.push(Node { fixes, bound: lp_obj });
+        }
+    }
+
+    if exhausted {
+        proven_lower = best_obj;
+    } else if let Some(min_open) = heap
+        .iter()
+        .map(|nd| nd.bound)
+        .fold(None::<f64>, |acc, b| Some(acc.map_or(b, |a| a.min(b))))
+    {
+        proven_lower = min_open.max(proven_lower);
+    }
+
+    match best_assign {
+        Some(assignment) => Solution {
+            status: if exhausted { SolveStatus::Optimal } else { SolveStatus::Feasible },
+            objective: best_obj,
+            lower_bound: proven_lower,
+            assignment,
+            nodes,
+        },
+        None => Solution {
+            status: if exhausted { SolveStatus::Infeasible } else { SolveStatus::Unknown },
+            objective: f64::INFINITY,
+            lower_bound: proven_lower,
+            assignment: vec![],
+            nodes,
+        },
+    }
+}
+
+fn pop_best(heap: &[Node]) -> Option<usize> {
+    if heap.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for (i, n) in heap.iter().enumerate() {
+        if n.bound < heap[best].bound {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{Cmp, LinExpr, Model};
+
+    /// 0-1 knapsack: max Σ v_i x_i s.t. Σ w_i x_i ≤ W.
+    fn knapsack(values: &[f64], weights: &[f64], cap: f64) -> (Model, Vec<crate::ilp::BoolVar>) {
+        let mut m = Model::minimize();
+        let vars: Vec<_> = (0..values.len())
+            .map(|i| m.bool_var(&format!("x{i}")))
+            .collect();
+        let mut w = LinExpr::new();
+        let mut obj = LinExpr::new();
+        for (i, v) in vars.iter().enumerate() {
+            w.add(v.0, weights[i]);
+            obj.add(v.0, -values[i]); // maximize → minimize negative
+        }
+        m.constrain(w, Cmp::Le, cap);
+        m.set_objective(obj);
+        (m, vars)
+    }
+
+    #[test]
+    fn knapsack_optimal() {
+        // values 10,13,7,8; weights 5,6,4,3; cap 10 → best = {1,3} = 21
+        let (m, _) = knapsack(&[10., 13., 7., 8.], &[5., 6., 4., 3.], 10.0);
+        let sol = solve_milp(&m, &BranchBoundOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective + 21.0).abs() < 1e-6, "{}", sol.objective);
+        assert_eq!(sol.assignment.iter().map(|&x| x.round() as u32).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn knapsack_larger_matches_dp() {
+        // Cross-check a 12-item instance against an exhaustive search.
+        let values: Vec<f64> = vec![4., 2., 10., 1., 2., 7., 8., 3., 6., 5., 9., 4.];
+        let weights: Vec<f64> = vec![3., 1., 6., 1., 2., 5., 4., 2., 3., 4., 5., 3.];
+        let cap = 15.0;
+        let mut best = 0f64;
+        for mask in 0u32..(1 << 12) {
+            let (mut v, mut w) = (0f64, 0f64);
+            for i in 0..12 {
+                if mask >> i & 1 == 1 {
+                    v += values[i];
+                    w += weights[i];
+                }
+            }
+            if w <= cap {
+                best = best.max(v);
+            }
+        }
+        let (m, _) = knapsack(&values, &weights, cap);
+        let sol = solve_milp(&m, &BranchBoundOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective + best).abs() < 1e-6, "got {} want {}", -sol.objective, best);
+    }
+
+    #[test]
+    fn assignment_problem_exact() {
+        // 3x3 assignment: min Σ c_ij x_ij, rows/cols sum to 1.
+        let costs = [[4., 1., 3.], [2., 0., 5.], [3., 2., 2.]];
+        let mut m = Model::minimize();
+        let mut vars = [[None; 3]; 3];
+        for (i, row) in costs.iter().enumerate() {
+            for j in 0..row.len() {
+                vars[i][j] = Some(m.bool_var(&format!("x{i}{j}")));
+            }
+        }
+        let mut obj = LinExpr::new();
+        for i in 0..3 {
+            let mut rs = LinExpr::new();
+            let mut cs = LinExpr::new();
+            for j in 0..3 {
+                rs.add(vars[i][j].unwrap().0, 1.0);
+                cs.add(vars[j][i].unwrap().0, 1.0);
+                obj.add(vars[i][j].unwrap().0, costs[i][j]);
+            }
+            m.constrain(rs, Cmp::Eq, 1.0);
+            m.constrain(cs, Cmp::Eq, 1.0);
+        }
+        m.set_objective(obj);
+        let sol = solve_milp(&m, &BranchBoundOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        // optimal: (0,1)=1, (1,0)=2, (2,2)=2 → 5
+        assert!((sol.objective - 5.0).abs() < 1e-6, "{}", sol.objective);
+    }
+
+    #[test]
+    fn infeasible_model_detected() {
+        let mut m = Model::minimize();
+        let x = m.bool_var("x");
+        m.constrain(LinExpr::term(x.0, 1.0), Cmp::Ge, 2.0);
+        let sol = solve_milp(&m, &BranchBoundOptions::default());
+        assert_eq!(sol.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn mip_start_bounds_search() {
+        // MIP start gives the solver an incumbent immediately; with a zero
+        // node budget the incumbent must be returned as Feasible.
+        let (m, _) = knapsack(&[10., 13., 7., 8.], &[5., 6., 4., 3.], 10.0);
+        let start = vec![1.0, 0.0, 0.0, 1.0]; // value 18, feasible
+        let opts = BranchBoundOptions {
+            node_budget: 0,
+            mip_start: Some(start.clone()),
+            ..Default::default()
+        };
+        let sol = solve_milp(&m, &opts);
+        assert_eq!(sol.status, SolveStatus::Feasible);
+        assert!((sol.objective + 18.0).abs() < 1e-6);
+        assert_eq!(sol.assignment, start);
+    }
+
+    #[test]
+    fn invalid_mip_start_is_ignored() {
+        let (m, _) = knapsack(&[10., 13.], &[5., 6.], 10.0);
+        let opts = BranchBoundOptions {
+            mip_start: Some(vec![1.0, 1.0]), // weight 11 > 10: infeasible
+            ..Default::default()
+        };
+        let sol = solve_milp(&m, &opts);
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective + 13.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn optimal_proves_bound() {
+        let (m, _) = knapsack(&[5., 4.], &[2., 3.], 4.0);
+        let sol = solve_milp(&m, &BranchBoundOptions::default());
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.lower_bound - sol.objective).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,23 @@
+//! MILP solving substrate (offline CPLEX substitute — the solving half).
+//!
+//! Mirrors the paper's CPLEX workflow (§7.1):
+//!
+//! * [`simplex`] — a dense two-phase primal simplex used as the LP
+//!   relaxation;
+//! * [`branch_bound`] — 0-1 branch & bound with **MIP start** (the paper
+//!   seeds CPLEX with the best heuristic strategy) and node/time budgets;
+//! * the paper's **solution polishing** (CPLEX switches to a genetic
+//!   algorithm after 60 s) is realized by the structure-aware annealing in
+//!   [`crate::optimizer::search`], which operates directly on patch
+//!   groupings rather than on the linearized model.
+//!
+//! The dense simplex targets the *small* instances the exact phase is used
+//! for (it validates the §5 encoding and cross-checks the specialized
+//! search); large instances go through the polishing path, exactly as the
+//! paper's own large instances effectively did.
+
+mod branch_bound;
+mod simplex;
+
+pub use branch_bound::{solve_milp, BranchBoundOptions};
+pub use simplex::{solve_lp, LpOutcome};

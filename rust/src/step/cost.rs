@@ -1,0 +1,106 @@
+//! Step duration (Definition 3) and its decomposition.
+
+use crate::platform::Accelerator;
+
+/// Cost of one step, broken into the terms of Definition 3:
+/// `δ(s_i) = (|I^slice| + |K^sub|)·t_l + |W|·t_w + t_acc`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepCost {
+    /// Elements loaded (inputs + kernels), i.e. `|I^slice| + |K^sub|`.
+    pub loaded_elements: u64,
+    /// Elements written back, i.e. `|W|`.
+    pub written_elements: u64,
+    /// Whether a compute action ran (charges `t_acc`).
+    pub computed: bool,
+    /// MAC operations performed by `a_6`.
+    pub macs: u64,
+}
+
+impl StepCost {
+    /// Duration in cycles under the given accelerator parameters.
+    pub fn duration(&self, acc: &Accelerator) -> u64 {
+        self.loaded_elements * acc.t_l
+            + self.written_elements * acc.t_w
+            + if self.computed { acc.t_acc } else { 0 }
+    }
+
+    /// Accumulate another step's cost (for strategy totals).
+    pub fn add(&mut self, other: &StepCost) {
+        self.loaded_elements += other.loaded_elements;
+        self.written_elements += other.written_elements;
+        self.macs += other.macs;
+        // `computed` is per-step; totals track it via `n_compute_steps`
+        // in the strategy-level report instead.
+    }
+}
+
+/// Aggregate over a full n-step strategy:
+/// `δ = Σ δ(s_i)` (Definition 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StrategyCost {
+    pub total: StepCost,
+    pub n_steps: u64,
+    pub n_compute_steps: u64,
+}
+
+impl StrategyCost {
+    pub fn push(&mut self, step: &StepCost) {
+        self.total.add(step);
+        self.n_steps += 1;
+        if step.computed {
+            self.n_compute_steps += 1;
+        }
+    }
+
+    /// Total duration: load/write terms plus `t_acc` per compute step.
+    pub fn duration(&self, acc: &Accelerator) -> u64 {
+        self.total.loaded_elements * acc.t_l
+            + self.total.written_elements * acc.t_w
+            + self.n_compute_steps * acc.t_acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc() -> Accelerator {
+        Accelerator { nbop_pe: 100, t_acc: 3, size_mem: 1000, t_l: 2, t_w: 5 }
+    }
+
+    #[test]
+    fn duration_formula() {
+        let c = StepCost { loaded_elements: 10, written_elements: 4, computed: true, macs: 99 };
+        assert_eq!(c.duration(&acc()), 10 * 2 + 4 * 5 + 3);
+    }
+
+    #[test]
+    fn no_compute_no_tacc() {
+        let c = StepCost { loaded_elements: 1, written_elements: 0, computed: false, macs: 0 };
+        assert_eq!(c.duration(&acc()), 2);
+    }
+
+    #[test]
+    fn strategy_cost_sums() {
+        let mut total = StrategyCost::default();
+        total.push(&StepCost { loaded_elements: 5, written_elements: 1, computed: true, macs: 10 });
+        total.push(&StepCost { loaded_elements: 3, written_elements: 2, computed: true, macs: 10 });
+        total.push(&StepCost { loaded_elements: 0, written_elements: 7, computed: false, macs: 0 });
+        assert_eq!(total.n_steps, 3);
+        assert_eq!(total.n_compute_steps, 2);
+        // (5+3)·2 + (1+2+7)·5 + 2·3
+        assert_eq!(total.duration(&acc()), 16 + 50 + 6);
+        assert_eq!(total.total.macs, 20);
+    }
+
+    #[test]
+    fn paper_eval_costs_ignore_writes() {
+        // §7.1: t_l = t_acc = 1, writes not charged → δ = Σ|I| + n
+        let acc = Accelerator::paper_eval(120, 1000);
+        let mut total = StrategyCost::default();
+        for _ in 0..4 {
+            total.push(&StepCost { loaded_elements: 6, written_elements: 4, computed: true, macs: 1 });
+        }
+        assert_eq!(total.duration(&acc), 4 * 6 + 4);
+    }
+}

@@ -1,0 +1,76 @@
+//! Steps and their semantics (Definitions 1–3).
+//!
+//! A step `s_i = (F_i^inp, F_i^ker, W_i, I_i^slice, K_i^sub)` executes the
+//! action sequence `a_1..a_6`:
+//!
+//! 1. `a_1` free input pixels `F^inp`;
+//! 2. `a_2` free kernels `F^ker`;
+//! 3. `a_3` write back outputs `W`;
+//! 4. `a_4` load input slice `I^slice`;
+//! 5. `a_5` load kernels `K^sub`;
+//! 6. `a_6` compute the group's outputs `Out_i`.
+//!
+//! [`apply`] implements exactly that sequence on a [`MemoryState`], checking
+//! the §2.3 assumptions as it goes, and returns the step's cost (Definition
+//! 3) plus its peak occupancy (`size_i^step`).
+
+mod cost;
+mod semantics;
+
+pub use cost::{StepCost, StrategyCost};
+pub use semantics::{apply, StepError, StepOutcome};
+
+use crate::conv::PatchId;
+use crate::platform::{KernelSet, OutputSet};
+use crate::tensor::PixelSet;
+
+/// One offloading step.
+///
+/// Sets are spatial-pixel / kernel-id / patch-id bitsets; see
+/// [`crate::platform::MemoryState`] for the granularity conventions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Step {
+    /// `F_i^inp` — input pixels freed by `a_1`.
+    pub free_inp: PixelSet,
+    /// `F_i^ker` — kernels freed by `a_2`.
+    pub free_ker: KernelSet,
+    /// `W_i` — output patches written back by `a_3`.
+    pub write: OutputSet,
+    /// `I_i^slice` — input pixels loaded by `a_4`.
+    pub load_inp: PixelSet,
+    /// `K_i^sub` — kernels loaded by `a_5`.
+    pub load_ker: KernelSet,
+    /// `g_i` — the patch group computed by `a_6` (empty for pure
+    /// housekeeping steps such as a final flush).
+    pub group: Vec<PatchId>,
+}
+
+impl Step {
+    /// A step that does nothing (useful as a builder base).
+    pub fn noop(n_pixels: usize, n_kernels: usize, n_patches: usize) -> Self {
+        Step {
+            free_inp: PixelSet::empty(n_pixels),
+            free_ker: KernelSet::empty(n_kernels),
+            write: OutputSet::empty(n_patches),
+            load_inp: PixelSet::empty(n_pixels),
+            load_ker: KernelSet::empty(n_kernels),
+            group: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_is_empty() {
+        let s = Step::noop(25, 2, 9);
+        assert!(s.free_inp.is_empty());
+        assert!(s.free_ker.is_empty());
+        assert!(s.write.is_empty());
+        assert!(s.load_inp.is_empty());
+        assert!(s.load_ker.is_empty());
+        assert!(s.group.is_empty());
+    }
+}

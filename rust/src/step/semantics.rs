@@ -1,0 +1,324 @@
+//! Operational semantics of a step (Definition 2) with §2.3 assumption checks.
+
+use crate::conv::ConvLayer;
+use crate::platform::{Accelerator, MemoryState};
+use crate::step::{Step, StepCost};
+
+/// Why a step is invalid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepError {
+    /// `F^inp ⊄ M^inp`: freeing input pixels that are not resident.
+    FreeInputNotResident,
+    /// `F^ker ⊄ M^ker`.
+    FreeKernelNotResident,
+    /// `W ⊄ M^out`: writing back outputs that were never computed/held.
+    WriteNotResident,
+    /// `I^slice ∩ M^inp ≠ ∅` after a1: reloading data already on chip
+    /// (wasted bandwidth — the formalism defines `I^slice` as the *missing*
+    /// part, Definition 16).
+    ReloadingResidentInput,
+    /// `K^sub ∩ M^ker ≠ ∅` after a2.
+    ReloadingResidentKernel,
+    /// A patch in the group lacks input pixels on chip at compute time.
+    GroupInputMissing { patch: u32 },
+    /// A compute step ran without all kernels resident (S1 requires Λ).
+    KernelsMissing,
+    /// The group exceeds the accelerator's capacity:
+    /// `ops > nbop_PE` (§2.3 third assumption).
+    TooManyOps { ops: u64, nbop_pe: u64 },
+    /// §2.3 second assumption: loaded data must be directly processed —
+    /// `I^slice` must be within the group's footprint.
+    LoadedDataNotProcessed,
+    /// Peak occupancy exceeded `size_MEM` (Eq. 12 violated).
+    MemoryOverflow { occupancy: u64, capacity: u64 },
+    /// A patch was computed more than once across the strategy.
+    PatchRecomputed { patch: u32 },
+    /// Output patch already resident when recomputed into `M^out`.
+    OutputCollision { patch: u32 },
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for StepError {}
+
+/// Result of applying one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutcome {
+    pub cost: StepCost,
+    /// `size_i^step` — peak element occupancy during the step (the paper
+    /// measures it after loads, with the step's output included).
+    pub occupancy: u64,
+}
+
+/// Apply `step` to `mem` in action order `a_1..a_6`, mutating the memory
+/// state, and return its cost and occupancy.
+///
+/// `strict` enables the full §2.3 assumption checking (recommended); with
+/// `strict = false` only physical impossibilities (freeing or writing absent
+/// data, overflowing memory) are errors, which allows exploring deliberately
+/// wasteful strategies in the simulator.
+pub fn apply(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    mem: &mut MemoryState,
+    step: &Step,
+    strict: bool,
+) -> Result<StepOutcome, StepError> {
+    // a_1: Mt^inp = M^inp ∖ F^inp
+    if !step.free_inp.is_subset_of(&mem.inp) {
+        return Err(StepError::FreeInputNotResident);
+    }
+    mem.inp.subtract(&step.free_inp);
+
+    // a_2: Mt^ker = M^ker ∖ F^ker
+    if !step.free_ker.is_subset_of(&mem.ker) {
+        return Err(StepError::FreeKernelNotResident);
+    }
+    mem.ker.subtract(&step.free_ker);
+
+    // a_3: Mt^out = M^out ∖ W
+    if !step.write.is_subset_of(&mem.out) {
+        return Err(StepError::WriteNotResident);
+    }
+    mem.out.subtract(&step.write);
+
+    // a_4: M^inp = Mt^inp ∪ I^slice
+    if strict && !step.load_inp.is_disjoint_from(&mem.inp) {
+        return Err(StepError::ReloadingResidentInput);
+    }
+    mem.inp.union_with(&step.load_inp);
+
+    // a_5: M^ker = Mt^ker ∪ K^sub
+    if strict && !step.load_ker.is_disjoint_from(&mem.ker) {
+        return Err(StepError::ReloadingResidentKernel);
+    }
+    mem.ker.union_with(&step.load_ker);
+
+    // a_6: compute the group; Out_i joins M^out.
+    let mut macs = 0u64;
+    if !step.group.is_empty() {
+        // All kernels must be resident (S1 assumption / Property 1).
+        if mem.ker.len() != layer.n_kernels {
+            return Err(StepError::KernelsMissing);
+        }
+        // Each group patch must have its full input footprint resident
+        // (allocation-free word-masked range checks — hot path).
+        for &p in &step.group {
+            if !layer.patch_resident(&mem.inp, p) {
+                return Err(StepError::GroupInputMissing { patch: p });
+            }
+        }
+        macs = (step.group.len() * layer.ops_per_patch()) as u64;
+        if strict && macs > acc.nbop_pe {
+            return Err(StepError::TooManyOps { ops: macs, nbop_pe: acc.nbop_pe });
+        }
+        // §2.3: loaded data must be directly processed in this step.
+        if strict {
+            let footprint = layer.group_pixels(&step.group);
+            if !step.load_inp.is_subset_of(&footprint) {
+                return Err(StepError::LoadedDataNotProcessed);
+            }
+        }
+        for &p in &step.group {
+            if mem.out.contains(p) {
+                return Err(StepError::OutputCollision { patch: p });
+            }
+            mem.out.insert(p);
+        }
+    }
+
+    // Occupancy after loads + compute = size_i^step (§2.2).
+    let occupancy = mem.occupied_elements(layer);
+    if occupancy > acc.size_mem {
+        return Err(StepError::MemoryOverflow { occupancy, capacity: acc.size_mem });
+    }
+
+    let cost = StepCost {
+        loaded_elements: (step.load_inp.len() * layer.c_in
+            + step.load_ker.len() * layer.kernel_dims().len()) as u64,
+        written_elements: (step.write.len() * layer.c_out()) as u64,
+        computed: !step.group.is_empty(),
+        macs,
+    };
+    Ok(StepOutcome { cost, occupancy })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::MemoryState;
+    use crate::tensor::PixelSet;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    fn acc() -> Accelerator {
+        Accelerator { nbop_pe: 200, t_acc: 1, size_mem: 10_000, t_l: 1, t_w: 1 }
+    }
+
+    fn load_all_kernels(l: &ConvLayer) -> crate::platform::KernelSet {
+        PixelSet::full(l.n_kernels)
+    }
+
+    #[test]
+    fn first_step_loads_and_computes() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_inp = l.patch_pixels(0);
+        s.load_ker = load_all_kernels(&l);
+        s.group = vec![0];
+        let out = apply(&l, &acc(), &mut mem, &s, true).unwrap();
+        // loads: 9 px × 2 ch + 2 kernels × 18 = 18 + 36
+        assert_eq!(out.cost.loaded_elements, 54);
+        assert_eq!(out.cost.macs, 36);
+        assert!(out.cost.computed);
+        // occupancy: inputs 18 + kernels 36 + outputs 1×2
+        assert_eq!(out.occupancy, 56);
+        assert!(mem.out.contains(0));
+    }
+
+    #[test]
+    fn free_nonresident_fails() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.free_inp.insert(3);
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s, true),
+            Err(StepError::FreeInputNotResident)
+        );
+    }
+
+    #[test]
+    fn write_nonresident_fails() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.write.insert(0);
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s, true),
+            Err(StepError::WriteNotResident)
+        );
+    }
+
+    #[test]
+    fn compute_without_kernels_fails() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_inp = l.patch_pixels(0);
+        s.group = vec![0];
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s, true),
+            Err(StepError::KernelsMissing)
+        );
+    }
+
+    #[test]
+    fn compute_with_missing_input_fails() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_ker = load_all_kernels(&l);
+        s.load_inp = l.patch_pixels(0);
+        s.group = vec![0, 1]; // patch 1's pixels not loaded
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s, true),
+            Err(StepError::GroupInputMissing { patch: 1 })
+        );
+    }
+
+    #[test]
+    fn too_many_ops_fails_strict_only() {
+        let l = layer();
+        let small = Accelerator { nbop_pe: 36, ..acc() }; // one patch worth
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_ker = load_all_kernels(&l);
+        s.load_inp = l.group_pixels(&[0, 1]);
+        s.group = vec![0, 1];
+        let mut mem = MemoryState::initial(&l);
+        assert_eq!(
+            apply(&l, &small, &mut mem, &s, true),
+            Err(StepError::TooManyOps { ops: 72, nbop_pe: 36 })
+        );
+        let mut mem2 = MemoryState::initial(&l);
+        assert!(apply(&l, &small, &mut mem2, &s, false).is_ok());
+    }
+
+    #[test]
+    fn reload_resident_fails_strict_only() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        mem.inp = l.patch_pixels(0);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_inp = l.patch_pixels(0);
+        s.load_ker = load_all_kernels(&l);
+        s.group = vec![0];
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s.clone(), true),
+            Err(StepError::ReloadingResidentInput)
+        );
+        let mut mem2 = MemoryState::initial(&l);
+        mem2.inp = l.patch_pixels(0);
+        assert!(apply(&l, &acc(), &mut mem2, &s, false).is_ok());
+    }
+
+    #[test]
+    fn loaded_data_must_be_processed() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_ker = load_all_kernels(&l);
+        s.load_inp = l.patch_pixels(0).union(&l.patch_pixels(8)); // extra data
+        s.group = vec![0];
+        assert_eq!(
+            apply(&l, &acc(), &mut mem, &s, true),
+            Err(StepError::LoadedDataNotProcessed)
+        );
+    }
+
+    #[test]
+    fn memory_overflow_detected() {
+        let l = layer();
+        let tiny = Accelerator { size_mem: 40, ..acc() };
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_ker = load_all_kernels(&l); // 36 elements
+        s.load_inp = l.patch_pixels(0); // +18 = 54 > 40
+        s.group = vec![0];
+        match apply(&l, &tiny, &mut mem, &s, true) {
+            Err(StepError::MemoryOverflow { occupancy, capacity }) => {
+                assert_eq!(capacity, 40);
+                assert!(occupancy > 40);
+            }
+            other => panic!("expected overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_back_removes_outputs() {
+        let l = layer();
+        let mut mem = MemoryState::initial(&l);
+        // step 1: compute patch 0
+        let mut s1 = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s1.load_inp = l.patch_pixels(0);
+        s1.load_ker = load_all_kernels(&l);
+        s1.group = vec![0];
+        apply(&l, &acc(), &mut mem, &s1, true).unwrap();
+        // step 2: write it back (2 output elements), free everything
+        let mut s2 = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s2.write.insert(0);
+        s2.free_inp = mem.inp.clone();
+        s2.free_ker = mem.ker.clone();
+        let out = apply(&l, &acc(), &mut mem, &s2, true).unwrap();
+        assert_eq!(out.cost.written_elements, 2);
+        assert!(!out.cost.computed);
+        assert!(mem.is_empty());
+    }
+}

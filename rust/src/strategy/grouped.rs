@@ -1,0 +1,219 @@
+//! [`GroupedStrategy`] — the n-step strategy of S1 (Definition 16) as data,
+//! and its lowering to concrete steps.
+
+use crate::conv::{ConvLayer, PatchId};
+use crate::step::Step;
+use crate::tensor::PixelSet;
+
+/// When computed outputs are written back to DRAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritebackPolicy {
+    /// Outputs of step `i` are written back at step `i+1` (the Example-2 /
+    /// §7.1 assumption: “each output result is written back at the next
+    /// step”), with remaining outputs flushed after the last step.
+    EveryStep,
+    /// All outputs stay on chip and are written back only by the final
+    /// flush. Uses more on-chip memory; fewer but larger write bursts.
+    AtEnd,
+}
+
+impl WritebackPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WritebackPolicy::EveryStep => "every_step",
+            WritebackPolicy::AtEnd => "at_end",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "every_step" => Ok(WritebackPolicy::EveryStep),
+            "at_end" => Ok(WritebackPolicy::AtEnd),
+            other => Err(format!("unknown writeback policy '{other}'")),
+        }
+    }
+}
+
+/// An S1-family strategy: an ordered partition of `X` into groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupedStrategy {
+    pub name: String,
+    /// `g_1 .. g_n` — each group is the patch set computed by one step.
+    pub groups: Vec<Vec<PatchId>>,
+    pub writeback: WritebackPolicy,
+}
+
+impl GroupedStrategy {
+    pub fn new(name: impl Into<String>, groups: Vec<Vec<PatchId>>) -> Self {
+        GroupedStrategy {
+            name: name.into(),
+            groups,
+            writeback: WritebackPolicy::EveryStep,
+        }
+    }
+
+    /// Number of compute steps `n`.
+    pub fn n_steps(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Largest group cardinality.
+    pub fn max_group_len(&self) -> usize {
+        self.groups.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Lower to concrete steps per Definition 16:
+    ///
+    /// * `I_1^slice = pix(g_1)`, `K_1^sub = Λ`;
+    /// * for `i > 1`: `I_i^slice = pix(g_i) ∖ M_{i-1}^inp`,
+    ///   `F_i^inp = M_{i-1}^inp ∖ pix(g_i)`;
+    /// * kernels stay resident until the end;
+    /// * `W_i` follows the write-back policy;
+    /// * a terminal flush step (no compute) frees all inputs + kernels and
+    ///   writes the remaining outputs, realizing “after the very last step
+    ///   the on-chip memory has to be empty and the results written back”.
+    ///   (The paper's `F_n^ker = Λ` cannot precede the step-n compute under
+    ///   the a1..a6 action order, so the flush carries it.)
+    pub fn compile(&self, layer: &ConvLayer) -> Vec<Step> {
+        let n_px = layer.n_pixels();
+        let n_k = layer.n_kernels;
+        let n_p = layer.n_patches();
+        let mut steps = Vec::with_capacity(self.groups.len() + 1);
+
+        // Rolling state mirrors of M^inp and M^out.
+        let mut resident = PixelSet::empty(n_px);
+        let mut pending_out = PixelSet::empty(n_p);
+
+        for (i, group) in self.groups.iter().enumerate() {
+            let mut step = Step::noop(n_px, n_k, n_p);
+            let footprint = layer.group_pixels(group);
+
+            // a_1: free whatever the new group does not reuse.
+            step.free_inp = resident.difference(&footprint);
+            // a_3: write back per policy.
+            if self.writeback == WritebackPolicy::EveryStep {
+                step.write = pending_out.clone();
+                pending_out.clear();
+            }
+            // a_4: load the missing part of the footprint.
+            step.load_inp = footprint.difference(&resident);
+            // a_5: all kernels on the first step only.
+            if i == 0 {
+                step.load_ker = PixelSet::full(n_k);
+            }
+            // a_6: compute.
+            step.group = group.clone();
+            for &p in group {
+                pending_out.insert(p);
+            }
+            resident = footprint;
+            steps.push(step);
+        }
+
+        // Terminal flush.
+        let mut flush = Step::noop(n_px, n_k, n_p);
+        flush.free_inp = resident;
+        flush.free_ker = PixelSet::full(n_k);
+        flush.write = pending_out;
+        steps.push(flush);
+        steps
+    }
+
+    /// Flat patch order (concatenation of groups) — the inverse of
+    /// [`crate::strategy::order_to_groups`].
+    pub fn flat_order(&self) -> Vec<PatchId> {
+        self.groups.iter().flatten().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    #[test]
+    fn compile_shape() {
+        let l = layer();
+        let s = crate::strategy::row_by_row(&l, 2);
+        let steps = s.compile(&l);
+        assert_eq!(steps.len(), s.n_steps() + 1); // + flush
+        // first step loads kernels, later steps don't
+        assert_eq!(steps[0].load_ker.len(), l.n_kernels);
+        assert!(steps[1..].iter().all(|st| st.load_ker.is_empty()));
+        // flush has no compute and frees all kernels
+        let flush = steps.last().unwrap();
+        assert!(flush.group.is_empty());
+        assert_eq!(flush.free_ker.len(), l.n_kernels);
+    }
+
+    #[test]
+    fn first_step_loads_entire_footprint() {
+        let l = layer();
+        let s = crate::strategy::row_by_row(&l, 2);
+        let steps = s.compile(&l);
+        assert_eq!(steps[0].load_inp, l.group_pixels(&s.groups[0]));
+        assert!(steps[0].free_inp.is_empty());
+        assert!(steps[0].write.is_empty());
+    }
+
+    #[test]
+    fn consecutive_steps_reuse_overlap() {
+        let l = layer();
+        let s = crate::strategy::row_by_row(&l, 2);
+        let steps = s.compile(&l);
+        let g0 = l.group_pixels(&s.groups[0]);
+        let g1 = l.group_pixels(&s.groups[1]);
+        // I_2 = pix(g_2) \ pix(g_1); F_2 = pix(g_1) \ pix(g_2)
+        assert_eq!(steps[1].load_inp, g1.difference(&g0));
+        assert_eq!(steps[1].free_inp, g0.difference(&g1));
+    }
+
+    #[test]
+    fn every_step_policy_writes_previous_outputs() {
+        let l = layer();
+        let s = crate::strategy::row_by_row(&l, 2);
+        let steps = s.compile(&l);
+        // step 2 writes exactly step 1's group
+        assert_eq!(
+            steps[1].write.to_vec(),
+            s.groups[0].iter().copied().collect::<Vec<_>>()
+        );
+        // flush writes the final group
+        let flush = steps.last().unwrap();
+        assert_eq!(
+            flush.write.to_vec(),
+            s.groups.last().unwrap().iter().copied().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn at_end_policy_defers_all_writes() {
+        let l = layer();
+        let mut s = crate::strategy::row_by_row(&l, 2);
+        s.writeback = WritebackPolicy::AtEnd;
+        let steps = s.compile(&l);
+        for st in &steps[..steps.len() - 1] {
+            assert!(st.write.is_empty());
+        }
+        assert_eq!(steps.last().unwrap().write.len(), l.n_patches());
+    }
+
+    #[test]
+    fn flat_order_roundtrip() {
+        let l = layer();
+        let s = crate::strategy::zigzag(&l, 2);
+        let order = s.flat_order();
+        assert_eq!(order.len(), l.n_patches());
+    }
+
+    #[test]
+    fn writeback_policy_str_roundtrip() {
+        for p in [WritebackPolicy::EveryStep, WritebackPolicy::AtEnd] {
+            assert_eq!(WritebackPolicy::from_str(p.as_str()), Ok(p));
+        }
+        assert!(WritebackPolicy::from_str("bogus").is_err());
+    }
+}

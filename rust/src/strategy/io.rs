@@ -1,0 +1,190 @@
+//! Strategy serialization: the CSV format accepted by the paper's simulator
+//! (“user defined or from an ILP solver CSV file”, §6) and a JSON form.
+//!
+//! CSV schema (header required):
+//! ```text
+//! step,patches,writeback
+//! 1,0;1,every_step
+//! 2,2;3,
+//! ```
+//! `patches` is `;`-separated patch ids; `writeback` is only read from the
+//! first row (blank = every_step).
+
+use crate::conv::PatchId;
+use crate::strategy::{GroupedStrategy, WritebackPolicy};
+use crate::util::{csv, json::Json};
+
+/// Serialize to CSV.
+pub fn strategy_to_csv(s: &GroupedStrategy) -> String {
+    let mut rows = vec![vec![
+        "step".to_string(),
+        "patches".to_string(),
+        "writeback".to_string(),
+    ]];
+    for (i, g) in s.groups.iter().enumerate() {
+        rows.push(vec![
+            (i + 1).to_string(),
+            g.iter()
+                .map(|p| p.to_string())
+                .collect::<Vec<_>>()
+                .join(";"),
+            if i == 0 { s.writeback.as_str().to_string() } else { String::new() },
+        ]);
+    }
+    csv::write(&rows)
+}
+
+/// Parse from CSV (inverse of [`strategy_to_csv`]).
+pub fn strategy_from_csv(name: &str, text: &str) -> Result<GroupedStrategy, String> {
+    let rows = csv::parse(text)?;
+    if rows.is_empty() {
+        return Err("empty strategy CSV".into());
+    }
+    let header = &rows[0];
+    if header.len() < 2 || header[0] != "step" || header[1] != "patches" {
+        return Err("strategy CSV must start with 'step,patches[,writeback]'".into());
+    }
+    let mut groups = Vec::new();
+    let mut writeback = WritebackPolicy::EveryStep;
+    for (ridx, row) in rows[1..].iter().enumerate() {
+        if row.len() < 2 {
+            return Err(format!("row {}: expected at least 2 fields", ridx + 2));
+        }
+        let expect_step: usize = ridx + 1;
+        let step: usize = row[0]
+            .parse()
+            .map_err(|_| format!("row {}: bad step index '{}'", ridx + 2, row[0]))?;
+        if step != expect_step {
+            return Err(format!(
+                "row {}: steps must be consecutive from 1 (got {step}, expected {expect_step})",
+                ridx + 2
+            ));
+        }
+        let mut group = Vec::new();
+        for tok in row[1].split(';').filter(|t| !t.is_empty()) {
+            let p: PatchId = tok
+                .parse()
+                .map_err(|_| format!("row {}: bad patch id '{tok}'", ridx + 2))?;
+            group.push(p);
+        }
+        if group.is_empty() {
+            return Err(format!("row {}: empty group", ridx + 2));
+        }
+        if ridx == 0 && row.len() >= 3 && !row[2].is_empty() {
+            writeback = WritebackPolicy::from_str(&row[2])?;
+        }
+        groups.push(group);
+    }
+    if groups.is_empty() {
+        return Err("strategy CSV has no steps".into());
+    }
+    let mut s = GroupedStrategy::new(name, groups);
+    s.writeback = writeback;
+    Ok(s)
+}
+
+/// Serialize to JSON.
+pub fn strategy_to_json(s: &GroupedStrategy) -> String {
+    let mut o = Json::obj();
+    o.set("name", s.name.as_str())
+        .set("writeback", s.writeback.as_str())
+        .set(
+            "groups",
+            Json::Arr(
+                s.groups
+                    .iter()
+                    .map(|g| Json::Arr(g.iter().map(|&p| Json::from(p)).collect()))
+                    .collect(),
+            ),
+        );
+    o.to_string_pretty()
+}
+
+/// Parse from JSON (inverse of [`strategy_to_json`]).
+pub fn strategy_from_json(text: &str) -> Result<GroupedStrategy, String> {
+    let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("missing 'name'")?
+        .to_string();
+    let writeback = match v.get("writeback").and_then(Json::as_str) {
+        Some(w) => WritebackPolicy::from_str(w)?,
+        None => WritebackPolicy::EveryStep,
+    };
+    let groups_json = v
+        .get("groups")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'groups' array")?;
+    let mut groups = Vec::with_capacity(groups_json.len());
+    for (i, g) in groups_json.iter().enumerate() {
+        let arr = g.as_arr().ok_or(format!("group {i} is not an array"))?;
+        let mut group = Vec::with_capacity(arr.len());
+        for p in arr {
+            group.push(
+                p.as_u64().ok_or(format!("group {i}: bad patch id"))? as PatchId
+            );
+        }
+        if group.is_empty() {
+            return Err(format!("group {i} is empty"));
+        }
+        groups.push(group);
+    }
+    let mut s = GroupedStrategy::new(name, groups);
+    s.writeback = writeback;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvLayer;
+
+    fn sample() -> GroupedStrategy {
+        let l = ConvLayer::square(1, 5, 3, 1);
+        let mut s = crate::strategy::zigzag(&l, 2);
+        s.writeback = WritebackPolicy::AtEnd;
+        s
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let s = sample();
+        let text = strategy_to_csv(&s);
+        let back = strategy_from_csv(&s.name, &text).unwrap();
+        assert_eq!(back.groups, s.groups);
+        assert_eq!(back.writeback, s.writeback);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = sample();
+        let back = strategy_from_json(&strategy_to_json(&s)).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(strategy_from_csv("x", "").is_err());
+        assert!(strategy_from_csv("x", "bogus,header\n1,0\n").is_err());
+        assert!(strategy_from_csv("x", "step,patches\n2,0\n").is_err());
+        assert!(strategy_from_csv("x", "step,patches\n1,\n").is_err());
+        assert!(strategy_from_csv("x", "step,patches\n1,a;b\n").is_err());
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        assert!(strategy_from_json("{}").is_err());
+        assert!(strategy_from_json(r#"{"name":"x"}"#).is_err());
+        assert!(strategy_from_json(r#"{"name":"x","groups":[[]]}"#).is_err());
+        assert!(strategy_from_json(r#"{"name":"x","groups":[[1.5]]}"#).is_err());
+    }
+
+    #[test]
+    fn csv_default_writeback() {
+        let text = "step,patches\n1,0;1\n2,2\n";
+        let s = strategy_from_csv("t", text).unwrap();
+        assert_eq!(s.writeback, WritebackPolicy::EveryStep);
+        assert_eq!(s.groups, vec![vec![0, 1], vec![2]]);
+    }
+}

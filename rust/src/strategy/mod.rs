@@ -1,0 +1,113 @@
+//! Strategies (§4): S1-baseline, grouped S1 and its orderings, plus
+//! serialization and §2.3 validation.
+//!
+//! A [`GroupedStrategy`] is *data* — an ordered partition of the patch set
+//! `X` into groups `g_1..g_n` plus a write-back policy. Generators
+//! ([`s1_baseline`], [`row_by_row`], [`zigzag`], …) produce that data;
+//! [`GroupedStrategy::compile`] lowers it to concrete [`crate::step::Step`]s
+//! per Definition 16; the simulator executes them; the optimizer emits the
+//! same type, so every strategy in the system is simulatable, checkable and
+//! serializable in exactly one way.
+
+mod grouped;
+mod io;
+pub mod multipass;
+mod orderings;
+mod validate;
+
+pub use grouped::{GroupedStrategy, WritebackPolicy};
+pub use multipass::{MultiPassReport, MultiPassStrategy};
+pub use io::{strategy_from_csv, strategy_from_json, strategy_to_csv, strategy_to_json};
+pub use orderings::{
+    diagonal_order, hilbert_order, order_to_groups, row_major_order, zigzag_order, Ordering,
+};
+pub use validate::{validate, ValidationReport, Violation};
+
+use crate::conv::ConvLayer;
+
+/// Anything that can produce a grouped strategy for a layer.
+///
+/// Implemented by the built-in ordering generators and by the optimizer; lets
+/// callers (CLI, figure harness) treat “a strategy source” uniformly.
+pub trait Strategy {
+    /// Human-readable name used in reports and figures.
+    fn name(&self) -> String;
+    /// Produce the strategy for `layer` with the given group-size bound.
+    fn build(&self, layer: &ConvLayer, group_size: usize) -> GroupedStrategy;
+}
+
+/// S1-baseline (Definition 12, from Siu et al.): one patch per step in
+/// row-major order, all kernels resident throughout.
+pub fn s1_baseline(layer: &ConvLayer) -> GroupedStrategy {
+    let order = row_major_order(layer);
+    let mut s = order_to_groups(layer, &order, 1);
+    s.name = "s1-baseline".to_string();
+    s
+}
+
+/// Row-by-Row (§7.2): group `group_size` consecutive patches left→right,
+/// row after row.
+pub fn row_by_row(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
+    let order = row_major_order(layer);
+    let mut s = order_to_groups(layer, &order, group_size);
+    s.name = format!("row-by-row-g{group_size}");
+    s
+}
+
+/// ZigZag (§7.2): even rows left→right, odd rows right→left.
+pub fn zigzag(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
+    let order = zigzag_order(layer);
+    let mut s = order_to_groups(layer, &order, group_size);
+    s.name = format!("zigzag-g{group_size}");
+    s
+}
+
+/// Hilbert-curve ordering (an extension heuristic; see DESIGN.md §8).
+pub fn hilbert(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
+    let order = hilbert_order(layer);
+    let mut s = order_to_groups(layer, &order, group_size);
+    s.name = format!("hilbert-g{group_size}");
+    s
+}
+
+/// Anti-diagonal ordering (extension heuristic).
+pub fn diagonal(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
+    let order = diagonal_order(layer);
+    let mut s = order_to_groups(layer, &order, group_size);
+    s.name = format!("diagonal-g{group_size}");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s1_baseline_is_one_patch_per_step() {
+        let l = ConvLayer::square(2, 5, 3, 2);
+        let s = s1_baseline(&l);
+        assert_eq!(s.groups.len(), l.n_patches());
+        assert!(s.groups.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn builders_cover_all_patches_once() {
+        let l = ConvLayer::square(1, 8, 3, 1);
+        for s in [
+            s1_baseline(&l),
+            row_by_row(&l, 4),
+            zigzag(&l, 4),
+            hilbert(&l, 4),
+            diagonal(&l, 4),
+        ] {
+            let mut seen: Vec<u32> = s.groups.iter().flatten().copied().collect();
+            seen.sort();
+            assert_eq!(
+                seen,
+                l.all_patches().collect::<Vec<_>>(),
+                "strategy {} must cover X exactly once",
+                s.name
+            );
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Patch orderings: row-major, zigzag (§7.2), Hilbert and anti-diagonal
+//! (extension heuristics), plus the order→groups chunker.
+
+use crate::conv::{ConvLayer, PatchId};
+use crate::strategy::GroupedStrategy;
+
+/// Built-in ordering kinds (CLI / config selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    RowByRow,
+    ZigZag,
+    Hilbert,
+    Diagonal,
+}
+
+impl Ordering {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Ordering::RowByRow => "row-by-row",
+            Ordering::ZigZag => "zigzag",
+            Ordering::Hilbert => "hilbert",
+            Ordering::Diagonal => "diagonal",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "row-by-row" | "row" => Ok(Ordering::RowByRow),
+            "zigzag" => Ok(Ordering::ZigZag),
+            "hilbert" => Ok(Ordering::Hilbert),
+            "diagonal" => Ok(Ordering::Diagonal),
+            other => Err(format!("unknown ordering '{other}'")),
+        }
+    }
+
+    pub fn order(&self, layer: &ConvLayer) -> Vec<PatchId> {
+        match self {
+            Ordering::RowByRow => row_major_order(layer),
+            Ordering::ZigZag => zigzag_order(layer),
+            Ordering::Hilbert => hilbert_order(layer),
+            Ordering::Diagonal => diagonal_order(layer),
+        }
+    }
+
+    pub fn all() -> [Ordering; 4] {
+        [Ordering::RowByRow, Ordering::ZigZag, Ordering::Hilbert, Ordering::Diagonal]
+    }
+}
+
+/// Left→right, top→bottom (the paper's Row-by-Row basis).
+pub fn row_major_order(layer: &ConvLayer) -> Vec<PatchId> {
+    layer.all_patches().collect()
+}
+
+/// Boustrophedon: even output rows left→right, odd rows right→left.
+pub fn zigzag_order(layer: &ConvLayer) -> Vec<PatchId> {
+    let (h_out, w_out) = (layer.h_out(), layer.w_out());
+    let mut order = Vec::with_capacity(h_out * w_out);
+    for i in 0..h_out {
+        if i % 2 == 0 {
+            for j in 0..w_out {
+                order.push(layer.patch_id(i, j));
+            }
+        } else {
+            for j in (0..w_out).rev() {
+                order.push(layer.patch_id(i, j));
+            }
+        }
+    }
+    order
+}
+
+/// Hilbert-curve order over the output grid (locality-preserving extension).
+///
+/// Computed on the enclosing power-of-two square, filtered to the real grid.
+pub fn hilbert_order(layer: &ConvLayer) -> Vec<PatchId> {
+    let (h_out, w_out) = (layer.h_out(), layer.w_out());
+    let side = h_out.max(w_out).next_power_of_two().max(1);
+    let mut order = Vec::with_capacity(h_out * w_out);
+    for d in 0..side * side {
+        let (x, y) = hilbert_d2xy(side, d);
+        if y < h_out && x < w_out {
+            order.push(layer.patch_id(y, x));
+        }
+    }
+    order
+}
+
+/// Convert a Hilbert distance to (x, y) on a `side × side` grid
+/// (standard bit-twiddling construction).
+fn hilbert_d2xy(side: usize, d: usize) -> (usize, usize) {
+    let (mut x, mut y) = (0usize, 0usize);
+    let mut t = d;
+    let mut s = 1usize;
+    while s < side {
+        let rx = 1 & (t / 2);
+        let ry = 1 & (t ^ rx);
+        // rotate quadrant
+        if ry == 0 {
+            if rx == 1 {
+                x = s - 1 - x;
+                y = s - 1 - y;
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        x += s * rx;
+        y += s * ry;
+        t /= 4;
+        s *= 2;
+    }
+    (x, y)
+}
+
+/// Anti-diagonal sweep: patches ordered by `i + j`, then by `i`.
+pub fn diagonal_order(layer: &ConvLayer) -> Vec<PatchId> {
+    let (h_out, w_out) = (layer.h_out(), layer.w_out());
+    let mut order = Vec::with_capacity(h_out * w_out);
+    for d in 0..(h_out + w_out - 1) {
+        for i in 0..h_out {
+            if d >= i && d - i < w_out {
+                order.push(layer.patch_id(i, d - i));
+            }
+        }
+    }
+    order
+}
+
+/// Chunk a patch order into groups of at most `group_size` — the grouped-S1
+/// construction of §4.2 applied to a linear ordering.
+pub fn order_to_groups(
+    layer: &ConvLayer,
+    order: &[PatchId],
+    group_size: usize,
+) -> GroupedStrategy {
+    assert!(group_size >= 1, "group size must be at least 1");
+    debug_assert_eq!(order.len(), layer.n_patches());
+    let groups = order.chunks(group_size).map(<[PatchId]>::to_vec).collect();
+    GroupedStrategy::new("custom-order", groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_permutation(layer: &ConvLayer, order: &[PatchId]) -> bool {
+        let mut v = order.to_vec();
+        v.sort();
+        v == layer.all_patches().collect::<Vec<_>>()
+    }
+
+    #[test]
+    fn all_orderings_are_permutations() {
+        for (h, w) in [(5, 5), (6, 9), (9, 6), (4, 4), (12, 12)] {
+            let l = ConvLayer::new(1, h + 2, w + 2, 3, 3, 1, 1, 1).unwrap();
+            assert_eq!(l.h_out(), h);
+            assert_eq!(l.w_out(), w);
+            for o in Ordering::all() {
+                assert!(
+                    is_permutation(&l, &o.order(&l)),
+                    "{} on {h}x{w}",
+                    o.as_str()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zigzag_reverses_odd_rows() {
+        let l = ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1).unwrap(); // 3x3 out
+        let order = zigzag_order(&l);
+        assert_eq!(
+            order,
+            vec![0, 1, 2, /* row1 reversed */ 5, 4, 3, /* row2 */ 6, 7, 8]
+        );
+    }
+
+    #[test]
+    fn zigzag_equals_row_for_single_row() {
+        let l = ConvLayer::new(1, 3, 12, 3, 3, 1, 1, 1).unwrap(); // 1x10 out
+        assert_eq!(zigzag_order(&l), row_major_order(&l));
+    }
+
+    #[test]
+    fn diagonal_order_small() {
+        let l = ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1).unwrap(); // 3x3 out
+        // anti-diagonals: (0,0) | (0,1),(1,0) | (0,2),(1,1),(2,0) | ...
+        assert_eq!(diagonal_order(&l), vec![0, 1, 3, 2, 4, 6, 5, 7, 8]);
+    }
+
+    #[test]
+    fn hilbert_is_locality_preserving() {
+        let l = ConvLayer::new(1, 10, 10, 3, 3, 1, 1, 1).unwrap(); // 8x8 out
+        let order = hilbert_order(&l);
+        // consecutive patches on a Hilbert curve over a full pow2 grid are
+        // grid neighbours (distance 1)
+        for pair in order.windows(2) {
+            let a = l.patch(pair[0]);
+            let b = l.patch(pair[1]);
+            assert_eq!(a.grid_distance(&b), 1);
+        }
+    }
+
+    #[test]
+    fn order_to_groups_chunks() {
+        let l = ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1).unwrap();
+        let s = order_to_groups(&l, &row_major_order(&l), 4);
+        assert_eq!(s.groups.len(), 3); // 9 patches → 4+4+1
+        assert_eq!(s.groups[2].len(), 1);
+    }
+
+    #[test]
+    fn ordering_str_roundtrip() {
+        for o in Ordering::all() {
+            assert_eq!(Ordering::from_str(o.as_str()), Ok(o));
+        }
+        assert!(Ordering::from_str("nope").is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! Strategy validation against the formalism and the §2.3 assumptions.
+//!
+//! [`validate`] dry-runs the compiled steps through the step semantics and
+//! additionally checks the strategy-level assumptions the per-step semantics
+//! cannot see:
+//!
+//! * every patch of `X` is computed exactly once;
+//! * every pixel is loaded at most `nb_data_reload` times (§2.3, fixed to 2
+//!   in the paper);
+//! * the on-chip memory is empty after the final step and all outputs have
+//!   been written back.
+
+use crate::conv::ConvLayer;
+use crate::platform::{Accelerator, MemoryState};
+use crate::step::{self, StepError};
+use crate::strategy::GroupedStrategy;
+
+/// A violated assumption.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// The step semantics rejected step `index`.
+    Step { index: usize, error: StepError },
+    /// Patch never computed.
+    PatchMissing { patch: u32 },
+    /// Patch computed more than once.
+    PatchDuplicated { patch: u32 },
+    /// Pixel loaded more than the reload bound.
+    PixelReloaded { pixel: u32, loads: u32, bound: u32 },
+    /// Memory not empty after the final step.
+    MemoryNotEmpty,
+    /// Outputs missing from DRAM at the end.
+    OutputsNotWritten { missing: usize },
+    /// A group exceeds the accelerator's patch capacity.
+    GroupTooLarge { step: usize, len: usize, max: usize },
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Outcome of validation.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub violations: Vec<Violation>,
+    /// Per-pixel load counts (diagnostic; index = pixel id).
+    pub pixel_loads: Vec<u32>,
+    /// Peak on-chip occupancy over the whole strategy.
+    pub peak_occupancy: u64,
+}
+
+impl ValidationReport {
+    pub fn is_valid(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Validate `strategy` for `layer` on `acc` with the given reload bound
+/// (`nb_data_reload`; the paper fixes 2).
+pub fn validate(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    strategy: &GroupedStrategy,
+    nb_data_reload: u32,
+) -> ValidationReport {
+    let steps = strategy.compile(layer);
+    let mut violations = Vec::new();
+    let mut mem = MemoryState::initial(layer);
+    let mut pixel_loads = vec![0u32; layer.n_pixels()];
+    let mut computed = vec![0u32; layer.n_patches()];
+    let mut written = vec![false; layer.n_patches()];
+    let mut peak = 0u64;
+
+    let max_group = acc.max_patches_per_step(layer);
+
+    for (i, st) in steps.iter().enumerate() {
+        if !st.group.is_empty() && max_group > 0 && st.group.len() > max_group {
+            violations.push(Violation::GroupTooLarge {
+                step: i,
+                len: st.group.len(),
+                max: max_group,
+            });
+        }
+        for px in st.load_inp.iter() {
+            pixel_loads[px as usize] += 1;
+        }
+        for p in st.write.iter() {
+            written[p as usize] = true;
+        }
+        for &p in &st.group {
+            computed[p as usize] += 1;
+        }
+        match step::apply(layer, acc, &mut mem, st, true) {
+            Ok(out) => peak = peak.max(out.occupancy),
+            Err(e) => {
+                violations.push(Violation::Step { index: i, error: e });
+                // semantics already mutated `mem` partially; stop here — the
+                // remaining trajectory is undefined.
+                break;
+            }
+        }
+    }
+
+    for (p, &c) in computed.iter().enumerate() {
+        if c == 0 {
+            violations.push(Violation::PatchMissing { patch: p as u32 });
+        } else if c > 1 {
+            violations.push(Violation::PatchDuplicated { patch: p as u32 });
+        }
+    }
+    for (px, &loads) in pixel_loads.iter().enumerate() {
+        if loads > nb_data_reload {
+            violations.push(Violation::PixelReloaded {
+                pixel: px as u32,
+                loads,
+                bound: nb_data_reload,
+            });
+        }
+    }
+    if !mem.is_empty() {
+        violations.push(Violation::MemoryNotEmpty);
+    }
+    let missing = written.iter().filter(|&&w| !w).count();
+    if missing > 0 {
+        violations.push(Violation::OutputsNotWritten { missing });
+    }
+
+    ValidationReport { violations, pixel_loads, peak_occupancy: peak }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    #[test]
+    fn builtin_strategies_validate() {
+        // NOTE: the reload bound is H_K, not the paper's 2 — linear-scan
+        // heuristics intrinsically load interior pixels once per kernel row
+        // (see `heuristics_exceed_paper_reload_bound` below).
+        let l = layer();
+        for group in 1..=4usize {
+            let acc = Accelerator::for_group_size(&l, group);
+            for s in [
+                strategy::row_by_row(&l, group),
+                strategy::zigzag(&l, group),
+                strategy::hilbert(&l, group),
+                strategy::diagonal(&l, group),
+            ] {
+                let r = validate(&l, &acc, &s, l.h_k as u32);
+                assert!(
+                    r.is_valid(),
+                    "strategy {} group {group}: {:?}",
+                    s.name,
+                    r.violations
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn s1_baseline_validates() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 1);
+        let r = validate(&l, &acc, &strategy::s1_baseline(&l), l.h_k as u32);
+        assert!(r.is_valid(), "{:?}", r.violations);
+    }
+
+    /// A reproduction finding (recorded in EXPERIMENTS.md): the paper fixes
+    /// `nb_data_reload = 2` (§2.3) but its own Row-by-Row / ZigZag baselines
+    /// load interior pixels once per kernel row — 3 times for 3×3 kernels —
+    /// whenever the group is smaller than an output row. The bound therefore
+    /// only constrains the ILP strategies, not the heuristics.
+    #[test]
+    fn heuristics_exceed_paper_reload_bound() {
+        let l = layer(); // 3x3 kernels
+        let acc = Accelerator::for_group_size(&l, 1);
+        let r = validate(&l, &acc, &strategy::row_by_row(&l, 1), 2);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::PixelReloaded { loads: 3, .. })));
+        // With full-row groups the scan becomes 2-load and satisfies it...
+        let acc3 = Accelerator::for_group_size(&l, 3);
+        let r3 = validate(&l, &acc3, &strategy::row_by_row(&l, 3), 2);
+        assert!(r3.is_valid(), "{:?}", r3.violations);
+    }
+
+    #[test]
+    fn detects_missing_patch() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 2);
+        let mut s = strategy::row_by_row(&l, 2);
+        s.groups.pop(); // drop the last group (patch 8)
+        let r = validate(&l, &acc, &s, 2);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::PatchMissing { patch: 8 })));
+    }
+
+    #[test]
+    fn detects_duplicate_patch() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 2);
+        let mut s = strategy::row_by_row(&l, 2);
+        s.groups.push(vec![0]); // recompute patch 0
+        let r = validate(&l, &acc, &s, 2);
+        // duplicate shows up either as a semantics error (output collision)
+        // or as the strategy-level duplicate count
+        assert!(!r.is_valid());
+    }
+
+    #[test]
+    fn detects_group_too_large() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 2);
+        let s = strategy::row_by_row(&l, 4); // groups of 4 > max 2
+        let r = validate(&l, &acc, &s, 2);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::GroupTooLarge { .. })));
+    }
+
+    #[test]
+    fn detects_reload_bound() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 1);
+        // Pathological order: bounce between far corners so the centre
+        // overlap pixels get reloaded many times.
+        let order: Vec<u32> = vec![0, 8, 1, 7, 2, 6, 3, 5, 4];
+        let s = strategy::order_to_groups(&l, &order, 1);
+        let r = validate(&l, &acc, &s, 1);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, Violation::PixelReloaded { .. })));
+    }
+
+    #[test]
+    fn reports_peak_occupancy() {
+        let l = layer();
+        let acc = Accelerator::for_group_size(&l, 2);
+        let r = validate(&l, &acc, &strategy::row_by_row(&l, 2), 2);
+        assert!(r.is_valid());
+        assert!(r.peak_occupancy > 0);
+        assert!(r.peak_occupancy <= acc.size_mem);
+    }
+}

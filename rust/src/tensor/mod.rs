@@ -1,0 +1,65 @@
+//! Tensor shapes, index linearization and pixel sets.
+//!
+//! The paper manipulates the on-chip memory as a *mathematical set* of data
+//! elements (Assumption 1). Two linearizations are fixed by the paper:
+//! row-major for patches (Remark 4) and channel-major for pixels (Remark 5);
+//! and per Remark 6 the optimization works on **2D (spatial) pixels** because
+//! slicing never cuts the channel dimension. This module provides those
+//! index maps plus [`PixelSet`], the bitset the whole simulator/optimizer hot
+//! path runs on.
+
+mod pixel_set;
+mod shape;
+
+pub use pixel_set::PixelSet;
+pub use shape::{Dims3, Rect, SliceSpec};
+
+/// Spatial pixel identifier: `h * W_in + w` (row-major over the 2D grid).
+pub type PixelId = u32;
+
+/// Linearize a spatial coordinate.
+#[inline]
+pub fn pixel_id(h: usize, w: usize, w_in: usize) -> PixelId {
+    (h * w_in + w) as PixelId
+}
+
+/// Invert [`pixel_id`].
+#[inline]
+pub fn pixel_coords(id: PixelId, w_in: usize) -> (usize, usize) {
+    let id = id as usize;
+    (id / w_in, id % w_in)
+}
+
+/// Channel-major linearization of a full 3D element `(c, h, w)` (Remark 5):
+/// `c * (H_in*W_in) + h * W_in + w`. Used when materializing actual tensor
+/// values for the functional simulation.
+#[inline]
+pub fn element_id(c: usize, h: usize, w: usize, dims: Dims3) -> usize {
+    c * dims.h * dims.w + h * dims.w + w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_id_roundtrip() {
+        let w_in = 7;
+        for h in 0..5 {
+            for w in 0..w_in {
+                let id = pixel_id(h, w, w_in);
+                assert_eq!(pixel_coords(id, w_in), (h, w));
+            }
+        }
+    }
+
+    #[test]
+    fn element_id_is_channel_major() {
+        let d = Dims3 { c: 3, h: 4, w: 5 };
+        // first element of channel 1 comes right after channel 0's block
+        assert_eq!(element_id(1, 0, 0, d), 20);
+        assert_eq!(element_id(0, 1, 0, d), 5);
+        assert_eq!(element_id(0, 0, 1, d), 1);
+        assert_eq!(element_id(2, 3, 4, d), 2 * 20 + 3 * 5 + 4);
+    }
+}

@@ -1,0 +1,379 @@
+//! [`PixelSet`] — the bitset realizing Assumption 1.
+//!
+//! The paper abstracts the on-chip memory as a mathematical set with `∪`,
+//! `∩`, `∖` and `|·|`. Every simulator transaction and every optimizer move
+//! evaluates those operations on pixel sets, so they are the hot path; a
+//! word-parallel bitset gives them `O(n/64)` cost and zero allocation for the
+//! in-place variants.
+
+use crate::tensor::PixelId;
+
+/// A set of spatial pixel ids over a fixed universe `[0, nbits)`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct PixelSet {
+    words: Vec<u64>,
+    nbits: usize,
+}
+
+impl PixelSet {
+    /// Empty set over a universe of `nbits` pixels.
+    pub fn empty(nbits: usize) -> Self {
+        PixelSet { words: vec![0; nbits.div_ceil(64)], nbits }
+    }
+
+    /// Full set over the universe.
+    pub fn full(nbits: usize) -> Self {
+        let mut s = Self::empty(nbits);
+        for i in 0..nbits {
+            s.insert(i as PixelId);
+        }
+        s
+    }
+
+    /// Build from an iterator of ids.
+    pub fn from_iter(nbits: usize, ids: impl IntoIterator<Item = PixelId>) -> Self {
+        let mut s = Self::empty(nbits);
+        for id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    /// Universe size.
+    pub fn universe(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: PixelId) {
+        debug_assert!((id as usize) < self.nbits, "pixel id out of universe");
+        self.words[id as usize / 64] |= 1u64 << (id % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: PixelId) {
+        debug_assert!((id as usize) < self.nbits);
+        self.words[id as usize / 64] &= !(1u64 << (id % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, id: PixelId) -> bool {
+        if (id as usize) >= self.nbits {
+            return false;
+        }
+        self.words[id as usize / 64] >> (id % 64) & 1 == 1
+    }
+
+    /// Insert the contiguous id range `[start, end)` using word-level masks —
+    /// the simulator/optimizer hot path inserts patch *rows*, which are
+    /// contiguous, so this replaces up to 64 single-bit inserts with one
+    /// mask OR per word (§Perf L3 optimization, see EXPERIMENTS.md).
+    #[inline]
+    pub fn insert_range(&mut self, start: u32, end: u32) {
+        debug_assert!(end as usize <= self.nbits && start <= end);
+        if start == end {
+            return;
+        }
+        let (ws, we) = (start as usize / 64, (end as usize - 1) / 64);
+        let lo_mask = !0u64 << (start % 64);
+        let hi_mask = !0u64 >> (63 - ((end - 1) % 64));
+        if ws == we {
+            self.words[ws] |= lo_mask & hi_mask;
+        } else {
+            self.words[ws] |= lo_mask;
+            for w in &mut self.words[ws + 1..we] {
+                *w = !0;
+            }
+            self.words[we] |= hi_mask;
+        }
+    }
+
+    /// True iff every id in `[start, end)` is present (word-masked; the
+    /// allocation-free dual of [`PixelSet::insert_range`]).
+    #[inline]
+    pub fn contains_range(&self, start: u32, end: u32) -> bool {
+        debug_assert!(end as usize <= self.nbits && start <= end);
+        if start == end {
+            return true;
+        }
+        let (ws, we) = (start as usize / 64, (end as usize - 1) / 64);
+        let lo_mask = !0u64 << (start % 64);
+        let hi_mask = !0u64 >> (63 - ((end - 1) % 64));
+        if ws == we {
+            let m = lo_mask & hi_mask;
+            return self.words[ws] & m == m;
+        }
+        if self.words[ws] & lo_mask != lo_mask {
+            return false;
+        }
+        if self.words[we] & hi_mask != hi_mask {
+            return false;
+        }
+        self.words[ws + 1..we].iter().all(|&w| w == !0)
+    }
+
+    /// Cardinality `|·|`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    fn check_same_universe(&self, other: &PixelSet) {
+        debug_assert_eq!(
+            self.nbits, other.nbits,
+            "PixelSet ops require identical universes"
+        );
+    }
+
+    /// In-place union `self ∪= other`.
+    pub fn union_with(&mut self, other: &PixelSet) {
+        self.check_same_universe(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place difference `self ∖= other`.
+    pub fn subtract(&mut self, other: &PixelSet) {
+        self.check_same_universe(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// In-place intersection `self ∩= other`.
+    pub fn intersect_with(&mut self, other: &PixelSet) {
+        self.check_same_universe(other);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// `self ∪ other` (allocating).
+    pub fn union(&self, other: &PixelSet) -> PixelSet {
+        let mut out = self.clone();
+        out.union_with(other);
+        out
+    }
+
+    /// `self ∖ other` (allocating).
+    pub fn difference(&self, other: &PixelSet) -> PixelSet {
+        let mut out = self.clone();
+        out.subtract(other);
+        out
+    }
+
+    /// `self ∩ other` (allocating).
+    pub fn intersection(&self, other: &PixelSet) -> PixelSet {
+        let mut out = self.clone();
+        out.intersect_with(other);
+        out
+    }
+
+    /// `|self ∩ other|` without allocating.
+    #[inline]
+    pub fn intersection_len(&self, other: &PixelSet) -> usize {
+        self.check_same_universe(other);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// `|self ∪ other|` without allocating.
+    #[inline]
+    pub fn union_len(&self, other: &PixelSet) -> usize {
+        self.check_same_universe(other);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a | b).count_ones() as usize)
+            .sum()
+    }
+
+    /// `|self ∖ other|` without allocating.
+    #[inline]
+    pub fn difference_len(&self, other: &PixelSet) -> usize {
+        self.check_same_universe(other);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & !b).count_ones() as usize)
+            .sum()
+    }
+
+    pub fn is_subset_of(&self, other: &PixelSet) -> bool {
+        self.check_same_universe(other);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    pub fn is_disjoint_from(&self, other: &PixelSet) -> bool {
+        self.intersection_len(other) == 0
+    }
+
+    /// Iterate set members in increasing id order.
+    pub fn iter(&self) -> PixelSetIter<'_> {
+        PixelSetIter { set: self, word_idx: 0, current: self.words.first().copied().unwrap_or(0) }
+    }
+
+    /// Members as a vector (convenience for tests / serialization).
+    pub fn to_vec(&self) -> Vec<PixelId> {
+        self.iter().collect()
+    }
+}
+
+impl std::fmt::Debug for PixelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PixelSet{{|{}|: {:?}}}", self.len(), self.to_vec())
+    }
+}
+
+/// Iterator over set bits, word at a time.
+pub struct PixelSetIter<'a> {
+    set: &'a PixelSet,
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for PixelSetIter<'_> {
+    type Item = PixelId;
+
+    #[inline]
+    fn next(&mut self) -> Option<PixelId> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.set.words.len() {
+                return None;
+            }
+            self.current = self.set.words[self.word_idx];
+        }
+        let bit = self.current.trailing_zeros();
+        self.current &= self.current - 1;
+        Some((self.word_idx * 64) as PixelId + bit as PixelId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(nbits: usize, ids: &[u32]) -> PixelSet {
+        PixelSet::from_iter(nbits, ids.iter().copied())
+    }
+
+    #[test]
+    fn insert_contains_remove() {
+        let mut s = PixelSet::empty(130);
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(63);
+        s.insert(64);
+        s.insert(129);
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(0) && s.contains(63) && s.contains(64) && s.contains(129));
+        assert!(!s.contains(1));
+        s.remove(63);
+        assert!(!s.contains(63));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn set_algebra() {
+        let a = set(100, &[1, 2, 3, 64, 65]);
+        let b = set(100, &[2, 3, 4, 65, 99]);
+        assert_eq!(a.union(&b).to_vec(), vec![1, 2, 3, 4, 64, 65, 99]);
+        assert_eq!(a.intersection(&b).to_vec(), vec![2, 3, 65]);
+        assert_eq!(a.difference(&b).to_vec(), vec![1, 64]);
+        assert_eq!(a.union_len(&b), 7);
+        assert_eq!(a.intersection_len(&b), 3);
+        assert_eq!(a.difference_len(&b), 2);
+    }
+
+    #[test]
+    fn in_place_matches_allocating() {
+        let a = set(80, &[0, 10, 20, 70]);
+        let b = set(80, &[10, 30, 70, 79]);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u, a.union(&b));
+        let mut d = a.clone();
+        d.subtract(&b);
+        assert_eq!(d, a.difference(&b));
+        let mut i = a.clone();
+        i.intersect_with(&b);
+        assert_eq!(i, a.intersection(&b));
+    }
+
+    #[test]
+    fn subset_and_disjoint() {
+        let a = set(64, &[1, 2]);
+        let b = set(64, &[1, 2, 3]);
+        let c = set(64, &[10, 11]);
+        assert!(a.is_subset_of(&b));
+        assert!(!b.is_subset_of(&a));
+        assert!(a.is_disjoint_from(&c));
+        assert!(!a.is_disjoint_from(&b));
+    }
+
+    #[test]
+    fn insert_range_matches_per_bit() {
+        // property-style: random ranges against the single-insert reference
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..500 {
+            let nbits = 1 + rng.index(300);
+            let a = rng.index(nbits + 1) as u32;
+            let b = rng.index(nbits + 1) as u32;
+            let (start, end) = (a.min(b), a.max(b));
+            let mut fast = PixelSet::empty(nbits);
+            fast.insert_range(start, end);
+            let mut slow = PixelSet::empty(nbits);
+            for i in start..end {
+                slow.insert(i);
+            }
+            assert_eq!(fast, slow, "nbits={nbits} range {start}..{end}");
+        }
+    }
+
+    #[test]
+    fn insert_range_word_boundaries() {
+        for (start, end) in [(0u32, 64u32), (63, 65), (64, 128), (0, 1), (127, 128), (10, 10)] {
+            let mut fast = PixelSet::empty(128);
+            fast.insert_range(start, end);
+            assert_eq!(fast.len(), (end - start) as usize);
+            for i in start..end {
+                assert!(fast.contains(i));
+            }
+        }
+    }
+
+    #[test]
+    fn full_and_clear() {
+        let mut s = PixelSet::full(70);
+        assert_eq!(s.len(), 70);
+        s.clear();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn iter_order() {
+        let s = set(200, &[199, 0, 64, 128, 5]);
+        assert_eq!(s.to_vec(), vec![0, 5, 64, 128, 199]);
+    }
+
+    #[test]
+    fn iter_empty() {
+        let s = PixelSet::empty(64);
+        assert_eq!(s.iter().count(), 0);
+        let s0 = PixelSet::empty(0);
+        assert_eq!(s0.iter().count(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Shape descriptors for the 3D tensors of Definitions 4–8.
+
+/// Dimensions of a 3D tensor `(channels, height, width)` — Definition 6/8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Dims3 {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Dims3 { c, h, w }
+    }
+
+    /// Number of scalar elements.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of spatial pixels (channel dimension dropped, Remark 6).
+    pub fn spatial(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+impl std::fmt::Display for Dims3 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
+}
+
+/// A half-open spatial rectangle `[h0, h1) × [w0, w1)`.
+///
+/// The spatial footprint of a patch (Definition 10) is a `Rect` of size
+/// `H_K × W_K` anchored at `(s_h·i, s_w·j)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub h0: usize,
+    pub h1: usize,
+    pub w0: usize,
+    pub w1: usize,
+}
+
+impl Rect {
+    pub fn new(h0: usize, h1: usize, w0: usize, w1: usize) -> Self {
+        debug_assert!(h0 <= h1 && w0 <= w1);
+        Rect { h0, h1, w0, w1 }
+    }
+
+    pub fn height(&self) -> usize {
+        self.h1 - self.h0
+    }
+
+    pub fn width(&self) -> usize {
+        self.w1 - self.w0
+    }
+
+    pub fn area(&self) -> usize {
+        self.height() * self.width()
+    }
+
+    pub fn contains(&self, h: usize, w: usize) -> bool {
+        h >= self.h0 && h < self.h1 && w >= self.w0 && w < self.w1
+    }
+
+    /// Intersection (possibly empty).
+    pub fn intersect(&self, other: &Rect) -> Option<Rect> {
+        let h0 = self.h0.max(other.h0);
+        let h1 = self.h1.min(other.h1);
+        let w0 = self.w0.max(other.w0);
+        let w1 = self.w1.min(other.w1);
+        if h0 < h1 && w0 < w1 {
+            Some(Rect::new(h0, h1, w0, w1))
+        } else {
+            None
+        }
+    }
+
+    /// Iterate spatial coordinates in row-major order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (self.h0..self.h1)
+            .flat_map(move |h| (self.w0..self.w1).map(move |w| (h, w)))
+    }
+}
+
+/// A general k-D slice bound (Definition 9) restricted to 3D, kept for
+/// completeness of the formalism: `[a, b]` inclusive per dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SliceSpec {
+    pub c: (usize, usize),
+    pub h: (usize, usize),
+    pub w: (usize, usize),
+}
+
+impl SliceSpec {
+    /// Element count of the slice.
+    pub fn len(&self) -> usize {
+        (self.c.1 - self.c.0 + 1)
+            * (self.h.1 - self.h.0 + 1)
+            * (self.w.1 - self.w.0 + 1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // inclusive bounds always contain at least one element
+    }
+
+    /// Validate against tensor dims.
+    pub fn fits(&self, dims: Dims3) -> bool {
+        self.c.0 <= self.c.1
+            && self.h.0 <= self.h.1
+            && self.w.0 <= self.w.1
+            && self.c.1 < dims.c
+            && self.h.1 < dims.h
+            && self.w.1 < dims.w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_len() {
+        let d = Dims3::new(2, 5, 5);
+        assert_eq!(d.len(), 50);
+        assert_eq!(d.spatial(), 25);
+        assert_eq!(d.to_string(), "2x5x5");
+    }
+
+    #[test]
+    fn rect_basics() {
+        let r = Rect::new(1, 4, 2, 5);
+        assert_eq!(r.area(), 9);
+        assert!(r.contains(1, 2));
+        assert!(!r.contains(4, 2));
+        assert_eq!(r.iter().count(), 9);
+        let first: Vec<_> = r.iter().take(3).collect();
+        assert_eq!(first, vec![(1, 2), (1, 3), (1, 4)]);
+    }
+
+    #[test]
+    fn rect_intersection() {
+        let a = Rect::new(0, 3, 0, 3);
+        let b = Rect::new(1, 4, 2, 6);
+        assert_eq!(a.intersect(&b), Some(Rect::new(1, 3, 2, 3)));
+        let c = Rect::new(3, 5, 0, 3);
+        assert_eq!(a.intersect(&c), None); // touching edges don't overlap
+    }
+
+    #[test]
+    fn slice_spec() {
+        let d = Dims3::new(2, 5, 5);
+        let s = SliceSpec { c: (0, 1), h: (1, 3), w: (2, 4) };
+        assert!(s.fits(d));
+        assert_eq!(s.len(), 2 * 3 * 3);
+        let bad = SliceSpec { c: (0, 2), h: (0, 0), w: (0, 0) };
+        assert!(!bad.fits(d));
+    }
+}

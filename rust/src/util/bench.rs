@@ -1,0 +1,179 @@
+//! Criterion-style measurement harness for `cargo bench` (offline substitute).
+//!
+//! Each bench binary (`rust/benches/*.rs`, `harness = false`) builds a
+//! [`BenchSuite`], registers closures, and calls [`BenchSuite::run`], which
+//! warms up, runs timed batches until a target measurement time is reached,
+//! and reports median / mean / p95 per iteration. A `--bench <filter>`
+//! substring filter and `--quick` mode match the common criterion workflow.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One measurement result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iterations: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} iters {:>9}  median {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iterations,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Re-export of `std::hint::black_box` under the name benches expect.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+type BenchFn = Box<dyn FnMut() -> u64>;
+
+/// A named set of benchmarks.
+pub struct BenchSuite {
+    suite_name: &'static str,
+    warmup: Duration,
+    measure: Duration,
+    benches: Vec<(String, BenchFn)>,
+}
+
+impl BenchSuite {
+    pub fn new(suite_name: &'static str) -> Self {
+        // `cargo bench -- --quick` (or env) shrinks the budget; integration
+        // tests exercising the harness use the env knob.
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("CONVOFFLOAD_BENCH_QUICK").is_ok();
+        let (warmup, measure) = if quick {
+            (Duration::from_millis(20), Duration::from_millis(80))
+        } else {
+            (Duration::from_millis(300), Duration::from_millis(1500))
+        };
+        BenchSuite { suite_name, warmup, measure, benches: Vec::new() }
+    }
+
+    /// Register a benchmark. The closure runs one iteration and returns a
+    /// value-dependent u64 (fed to black_box) so work cannot be elided.
+    pub fn bench<F>(&mut self, name: &str, mut f: F)
+    where
+        F: FnMut() -> u64 + 'static,
+    {
+        self.benches
+            .push((name.to_string(), Box::new(move || black_box(f()))));
+    }
+
+    /// Run all registered benchmarks (honouring `--bench`-style substring
+    /// filters passed on the command line) and print a report.
+    pub fn run(mut self) -> Vec<Measurement> {
+        let filters: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| !a.starts_with("--"))
+            .collect();
+        println!("## bench suite: {}", self.suite_name);
+        let mut out = Vec::new();
+        for (name, f) in self.benches.iter_mut() {
+            if !filters.is_empty()
+                && !filters.iter().any(|flt| name.contains(flt.as_str()))
+            {
+                continue;
+            }
+            let m = measure_one(name, f, self.warmup, self.measure);
+            println!("{}", m.report_line());
+            out.push(m);
+        }
+        out
+    }
+}
+
+fn measure_one(
+    name: &str,
+    f: &mut BenchFn,
+    warmup: Duration,
+    measure: Duration,
+) -> Measurement {
+    // Warm-up and iteration-count calibration.
+    let w0 = Instant::now();
+    let mut warm_iters: u64 = 0;
+    while w0.elapsed() < warmup {
+        black_box(f());
+        warm_iters += 1;
+    }
+    let per_iter = warmup.as_nanos() as f64 / warm_iters.max(1) as f64;
+    // Aim for ~50 samples over the measurement budget.
+    let batch = ((measure.as_nanos() as f64 / 50.0 / per_iter.max(1.0))
+        .ceil() as u64)
+        .max(1);
+
+    let mut samples: Vec<f64> = Vec::new(); // ns per iteration
+    let mut total_iters = 0u64;
+    let m0 = Instant::now();
+    while m0.elapsed() < measure || samples.len() < 10 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+        samples.push(ns);
+        total_iters += batch;
+        if samples.len() > 5000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    Measurement {
+        name: name.to_string(),
+        iterations: total_iters,
+        median: Duration::from_nanos(median as u64),
+        mean: Duration::from_nanos(mean as u64),
+        p95: Duration::from_nanos(p95 as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("CONVOFFLOAD_BENCH_QUICK", "1");
+        let mut suite = BenchSuite::new("selftest");
+        suite.bench("sum", || (0..100u64).sum::<u64>());
+        let results = suite.run();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].iterations > 0);
+        assert!(results[0].median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(500)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

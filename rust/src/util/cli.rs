@@ -1,0 +1,181 @@
+//! Declarative command-line flag parsing (offline clap substitute).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, per-subcommand help text, and typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+/// Description of one flag for parsing + help output.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` if the flag takes a value, `false` for boolean switches.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected a number, got '{s}'")),
+        }
+    }
+}
+
+/// Parse `argv` against `specs`. Unknown `--flags` are errors.
+pub fn parse(
+    argv: &[String],
+    specs: &[FlagSpec],
+) -> Result<Args, String> {
+    let mut args = Args::default();
+    for spec in specs {
+        if let (true, Some(d)) = (spec.takes_value, spec.default) {
+            args.flags.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown flag --{name}"))?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                    }
+                };
+                args.flags.insert(name.to_string(), val);
+            } else {
+                if inline_val.is_some() {
+                    return Err(format!("--{name} takes no value"));
+                }
+                args.bools.insert(name.to_string(), true);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a help block for a command.
+pub fn help(command: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut out = format!("{command} — {about}\n\nFlags:\n");
+    for s in specs {
+        let arg = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        let def = match s.default {
+            Some(d) if s.takes_value => format!(" [default: {d}]"),
+            _ => String::new(),
+        };
+        out.push_str(&format!("  {arg:<24} {}{def}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "layer", help: "layer preset", takes_value: true, default: Some("lenet5-conv1") },
+            FlagSpec { name: "group", help: "group size", takes_value: true, default: None },
+            FlagSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+        ]
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv(&[]), &specs()).unwrap();
+        assert_eq!(a.get("layer"), Some("lenet5-conv1"));
+        assert_eq!(a.get("group"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&argv(&["--group", "4", "--layer=x"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("group").unwrap(), Some(4));
+        assert_eq!(a.get("layer"), Some("x"));
+    }
+
+    #[test]
+    fn bool_and_positional() {
+        let a = parse(&argv(&["--verbose", "pos1", "pos2"]), &specs()).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&argv(&["--nope"]), &specs()).is_err());
+        assert!(parse(&argv(&["--group"]), &specs()).is_err());
+        assert!(parse(&argv(&["--verbose=1"]), &specs()).is_err());
+        let a = parse(&argv(&["--group", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("group").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = help("simulate", "run a strategy", &specs());
+        assert!(h.contains("--layer"));
+        assert!(h.contains("default: lenet5-conv1"));
+    }
+}

@@ -1,0 +1,144 @@
+//! CSV reading and writing (RFC-4180 subset: quoted fields, embedded commas,
+//! quotes and newlines).
+//!
+//! Used for strategy import/export — the paper's simulator accepts “a strategy
+//! that is user defined or from an ILP solver CSV file” (§6) — and for the
+//! figure-series outputs under `figures/`.
+
+/// Write rows to CSV text. Fields are quoted only when necessary.
+pub fn write(rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        for (i, field) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            if field.contains([',', '"', '\n', '\r']) {
+                out.push('"');
+                for c in field.chars() {
+                    if c == '"' {
+                        out.push('"');
+                    }
+                    out.push(c);
+                }
+                out.push('"');
+            } else {
+                out.push_str(field);
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse CSV text into rows of fields. Accepts both `\n` and `\r\n` line ends;
+/// skips a trailing empty line.
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        return Err("quote inside unquoted field".to_string());
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {
+                    if chars.peek() == Some(&'\n') {
+                        chars.next();
+                    }
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".to_string());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(v: &[&[&str]]) -> Vec<Vec<String>> {
+        v.iter()
+            .map(|r| r.iter().map(|s| s.to_string()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn simple_roundtrip() {
+        let r = rows(&[&["a", "b", "c"], &["1", "2", "3"]]);
+        assert_eq!(parse(&write(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let r = rows(&[&["a,b", "c\"d", "e\nf", "plain"]]);
+        assert_eq!(parse(&write(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn crlf_lines() {
+        let parsed = parse("a,b\r\nc,d\r\n").unwrap();
+        assert_eq!(parsed, rows(&[&["a", "b"], &["c", "d"]]));
+    }
+
+    #[test]
+    fn no_trailing_newline() {
+        let parsed = parse("a,b\nc,d").unwrap();
+        assert_eq!(parsed, rows(&[&["a", "b"], &["c", "d"]]));
+    }
+
+    #[test]
+    fn empty_fields() {
+        let parsed = parse("a,,c\n,,\n").unwrap();
+        assert_eq!(parsed, rows(&[&["a", "", "c"], &["", "", ""]]));
+    }
+
+    #[test]
+    fn rejects_bad_quotes() {
+        assert!(parse("ab\"c,d\n").is_err());
+        assert!(parse("\"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(parse("").unwrap(), Vec::<Vec<String>>::new());
+    }
+}

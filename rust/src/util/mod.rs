@@ -1,0 +1,23 @@
+//! In-tree utility substrates.
+//!
+//! The build is fully offline (only the `xla` crate closure is vendored), so
+//! the small generic pieces a project would normally pull from crates.io are
+//! implemented here instead:
+//!
+//! * [`rng`] — deterministic xorshift/SplitMix RNG (rand substitute) used by
+//!   the local-search polisher and the property-test helper;
+//! * [`json`] — minimal JSON value model, writer and parser (serde_json
+//!   substitute) used for traces, manifests and strategy files;
+//! * [`csv`] — CSV reader/writer used for strategy import/export (the paper's
+//!   “ILP solver CSV file”) and the figure outputs;
+//! * [`cli`] — a tiny declarative flag parser (clap substitute);
+//! * [`bench`] — a criterion-style measurement harness for `cargo bench`;
+//! * [`proptest`] — a property-testing helper (generators + shrinking-lite).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,138 @@
+//! Property-testing helper (offline proptest substitute).
+//!
+//! Provides deterministic random-case generation with failure shrinking for
+//! the coordinator-invariant tests (`rust/tests/invariants.rs`): a property
+//! is checked over N generated cases; on failure the harness re-runs the
+//! property on progressively “smaller” cases derived by the caller-supplied
+//! shrinker and reports the smallest failing case.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_rounds: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed overridable for reproduction of CI failures.
+        let seed = std::env::var("CONVOFFLOAD_PT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed, max_shrink_rounds: 200 }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cfg.cases` cases produced by `gen`; on failure, shrink with
+/// `shrink` (which proposes smaller variants; return empty when minimal).
+///
+/// Panics with a readable report if a failing case survives shrinking.
+pub fn check<T, G, S, P>(cfg: &Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T, &mut Rng) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            // Shrink.
+            let mut best = case.clone();
+            let mut best_msg = msg;
+            let mut rounds = 0;
+            'outer: while rounds < cfg.max_shrink_rounds {
+                rounds += 1;
+                let candidates = shrink(&best, &mut rng);
+                if candidates.is_empty() {
+                    break;
+                }
+                for cand in candidates {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break; // no candidate still fails: minimal
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {:#x}):\n  {}\n  \
+                 minimal failing case after {} shrink rounds:\n  {:?}",
+                cfg.seed, best_msg, rounds, best
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    check(cfg, gen, |_, _| Vec::new(), prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        let cfg = Config { cases: 32, seed: 1, max_shrink_rounds: 10 };
+        check_no_shrink(
+            &cfg,
+            |r| r.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        let cfg = Config { cases: 64, seed: 2, max_shrink_rounds: 10 };
+        check_no_shrink(
+            &cfg,
+            |r| r.below(100),
+            |&x| if x < 90 { Ok(()) } else { Err(format!("{x} >= 90")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal failing case")]
+    fn shrinks_towards_zero() {
+        let cfg = Config { cases: 64, seed: 3, max_shrink_rounds: 100 };
+        check(
+            &cfg,
+            |r| r.below(1000) + 500, // all cases fail (>= 500)
+            |&x, _| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |&x| if x < 500 { Ok(()) } else { Err(format!("{x} >= 500")) },
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! ASCII rendering of step views (terminal counterpart of Figure 9).
+
+use crate::conv::ConvLayer;
+use crate::step::Step;
+use crate::viz::{step_views, PixelClass, StepView};
+
+/// Glyphs used per pixel class.
+#[derive(Debug, Clone, Copy)]
+pub struct Legend {
+    pub absent: char,
+    pub freed: char,
+    pub loaded: char,
+    pub kept: char,
+}
+
+impl Default for Legend {
+    fn default() -> Self {
+        // '.' absent, 'x' freed, 'L' newly loaded, 'o' kept/reused
+        Legend { absent: '.', freed: 'x', loaded: 'L', kept: 'o' }
+    }
+}
+
+impl Legend {
+    pub fn glyph(&self, c: PixelClass) -> char {
+        match c {
+            PixelClass::Absent => self.absent,
+            PixelClass::Freed => self.freed,
+            PixelClass::Loaded => self.loaded,
+            PixelClass::Kept => self.kept,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "legend: '{}' absent  '{}' freed (a1)  '{}' loaded (a4)  '{}' kept/reused",
+            self.absent, self.freed, self.loaded, self.kept
+        )
+    }
+}
+
+/// Render one step as an `H_in × W_in` character grid.
+pub fn render_step_ascii(layer: &ConvLayer, view: &StepView, legend: &Legend) -> String {
+    let mut out = String::new();
+    let group_desc: Vec<String> = view
+        .group
+        .iter()
+        .map(|&p| {
+            let patch = layer.patch(p);
+            format!("P({},{})", patch.i, patch.j)
+        })
+        .collect();
+    out.push_str(&format!(
+        "step {} — group {{{}}}\n",
+        view.index + 1,
+        group_desc.join(", ")
+    ));
+    for h in 0..layer.h_in {
+        out.push_str("  ");
+        for w in 0..layer.w_in {
+            let px = crate::tensor::pixel_id(h, w, layer.w_in);
+            out.push(legend.glyph(view.classes[px as usize]));
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the whole strategy (one grid per step) plus the legend.
+pub fn render_strategy_ascii(layer: &ConvLayer, steps: &[Step]) -> String {
+    let legend = Legend::default();
+    let views = step_views(layer, steps);
+    let mut out = String::new();
+    out.push_str(&legend.describe());
+    out.push('\n');
+    for view in &views {
+        out.push('\n');
+        out.push_str(&render_step_ascii(layer, view, &legend));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy;
+
+    #[test]
+    fn renders_grid_of_right_size() {
+        let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let s = strategy::row_by_row(&l, 2);
+        let steps = s.compile(&l);
+        let text = render_strategy_ascii(&l, &steps);
+        // one header + 5 rows per step; 5 compute steps + flush
+        assert!(text.contains("step 1 — group {P(0,0), P(0,1)}"));
+        assert!(text.contains("legend:"));
+        let grids = text.matches("step ").count();
+        assert_eq!(grids, steps.len());
+        // first grid: 12 loaded pixels (footprint of first two patches)
+        let first_grid: String = text
+            .lines()
+            .skip_while(|l| !l.starts_with("step 1"))
+            .skip(1)
+            .take(5)
+            .collect();
+        assert_eq!(first_grid.matches('L').count(), 12);
+    }
+
+    #[test]
+    fn single_step_render_contains_rows() {
+        let l = ConvLayer::new(1, 4, 4, 2, 2, 1, 1, 1).unwrap();
+        let s = strategy::s1_baseline(&l);
+        let steps = s.compile(&l);
+        let views = step_views(&l, &steps);
+        let text = render_step_ascii(&l, &views[0], &Legend::default());
+        assert_eq!(text.lines().count(), 1 + 4);
+    }
+}

@@ -1,0 +1,123 @@
+//! SVG rendering of step views — the report-quality counterpart of Fig. 9.
+
+use crate::conv::ConvLayer;
+use crate::step::Step;
+use crate::viz::{step_views, PixelClass};
+
+const CELL: usize = 18;
+const GAP: usize = 26;
+const MARGIN: usize = 10;
+
+fn class_fill(c: PixelClass) -> &'static str {
+    match c {
+        PixelClass::Absent => "#f2f2f2",
+        PixelClass::Freed => "#e74c3c",
+        PixelClass::Loaded => "#2ecc71",
+        PixelClass::Kept => "#3498db",
+    }
+}
+
+/// Render every step of a compiled strategy side by side into one SVG
+/// document, with per-step captions and a legend.
+pub fn render_strategy_svg(layer: &ConvLayer, steps: &[Step], title: &str) -> String {
+    let views = step_views(layer, steps);
+    let grid_w = layer.w_in * CELL;
+    let grid_h = layer.h_in * CELL;
+    let per_col = grid_w + GAP;
+    let width = MARGIN * 2 + views.len() * per_col;
+    let height = MARGIN * 2 + grid_h + 64;
+
+    let mut svg = String::new();
+    svg.push_str(&format!(
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" viewBox="0 0 {width} {height}">"##
+    ));
+    svg.push('\n');
+    svg.push_str(&format!(
+        r##"<text x="{MARGIN}" y="16" font-family="monospace" font-size="13">{title}</text>"##
+    ));
+    svg.push('\n');
+
+    for (k, view) in views.iter().enumerate() {
+        let ox = MARGIN + k * per_col;
+        let oy = 28;
+        svg.push_str(&format!(
+            r##"<text x="{ox}" y="{}" font-family="monospace" font-size="11">step {}</text>"##,
+            oy - 6,
+            view.index + 1
+        ));
+        svg.push('\n');
+        for h in 0..layer.h_in {
+            for w in 0..layer.w_in {
+                let px = crate::tensor::pixel_id(h, w, layer.w_in);
+                let fill = class_fill(view.classes[px as usize]);
+                svg.push_str(&format!(
+                    r##"<rect x="{}" y="{}" width="{CELL}" height="{CELL}" fill="{fill}" stroke="#999" stroke-width="0.5"/>"##,
+                    ox + w * CELL,
+                    oy + h * CELL,
+                ));
+                svg.push('\n');
+            }
+        }
+        // caption: group patches
+        let caption: Vec<String> = view
+            .group
+            .iter()
+            .map(|&p| {
+                let patch = layer.patch(p);
+                format!("P({},{})", patch.i, patch.j)
+            })
+            .collect();
+        svg.push_str(&format!(
+            r##"<text x="{ox}" y="{}" font-family="monospace" font-size="10">{}</text>"##,
+            oy + grid_h + 14,
+            caption.join(" ")
+        ));
+        svg.push('\n');
+    }
+
+    // legend
+    let ly = 28 + grid_h + 30;
+    for (i, (cls, label)) in [
+        (PixelClass::Loaded, "loaded (a4)"),
+        (PixelClass::Kept, "kept / reused"),
+        (PixelClass::Freed, "freed (a1)"),
+        (PixelClass::Absent, "absent"),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let lx = MARGIN + i * 130;
+        svg.push_str(&format!(
+            r##"<rect x="{lx}" y="{ly}" width="12" height="12" fill="{}" stroke="#999" stroke-width="0.5"/>"##,
+            class_fill(*cls)
+        ));
+        svg.push_str(&format!(
+            r##"<text x="{}" y="{}" font-family="monospace" font-size="10">{label}</text>"##,
+            lx + 16,
+            ly + 10
+        ));
+        svg.push('\n');
+    }
+    svg.push_str("</svg>\n");
+    svg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy;
+
+    #[test]
+    fn svg_is_well_formed_enough() {
+        let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+        let s = strategy::zigzag(&l, 2);
+        let steps = s.compile(&l);
+        let svg = render_strategy_svg(&l, &steps, "zigzag g=2");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        // one rect per pixel per step (+4 legend swatches)
+        let rects = svg.matches("<rect").count();
+        assert_eq!(rects, steps.len() * l.n_pixels() + 4);
+        assert_eq!(svg.matches("<svg").count(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration tests over the figure harness: the qualitative claims of the
+//! paper's evaluation must hold on (reduced) grids, and the emitted CSV must
+//! be machine-readable.
+
+use convoffload::bench_harness as bh;
+use convoffload::config::layer_preset;
+use convoffload::util::csv;
+
+/// Fig. 11 on the real LeNet-5 conv1 layer, full group range.
+#[test]
+fn fig11_full_claims() {
+    let layer = layer_preset("lenet5-conv1").unwrap().layer;
+    let w_out = layer.w_out();
+    let sizes: Vec<usize> = (1..=w_out + 4).collect();
+    let rows = bh::fig11(&layer, &sizes);
+
+    // claim 1: zigzag wins in the small-group regime
+    let small_wins = rows
+        .iter()
+        .filter(|r| r.group_size < w_out / 2)
+        .filter(|r| r.zigzag < r.row_by_row)
+        .count();
+    assert!(small_wins > 5, "zigzag should win most small-group points");
+
+    // claim 2: crossover exists — row-by-row wins somewhere later
+    assert!(
+        rows.iter().any(|r| r.row_by_row < r.zigzag),
+        "row-by-row should win somewhere after the crossover"
+    );
+
+    // claim 3: equality at multiples of W_out
+    for r in &rows {
+        if r.group_size % w_out == 0 {
+            assert_eq!(r.zigzag, r.row_by_row, "g={}", r.group_size);
+        }
+    }
+}
+
+/// The §7.2 claim that the curve shapes repeat on other layers: check the
+/// multiples-of-`W_out` equality and the small-group ZigZag advantage on a
+/// ResNet-8 style layer and on LeNet-5 conv2.
+#[test]
+fn fig11_shape_generalizes_to_other_layers() {
+    for preset in ["lenet5-conv2", "resnet8-conv2"] {
+        let layer = layer_preset(preset).unwrap().layer;
+        let w_out = layer.w_out();
+        let sizes: Vec<usize> = (1..=w_out * 2).collect();
+        let rows = bh::fig11(&layer, &sizes);
+        assert!(
+            rows.iter()
+                .take(w_out / 2)
+                .any(|r| r.zigzag < r.row_by_row),
+            "{preset}: zigzag should win small groups"
+        );
+        for r in &rows {
+            if r.group_size % w_out == 0 {
+                assert_eq!(r.zigzag, r.row_by_row, "{preset} g={}", r.group_size);
+            }
+        }
+    }
+}
+
+/// Fig. 12 (reduced grid): OPL ≤ min(heuristics) < S1-baseline everywhere.
+#[test]
+fn fig12_ordering_claims() {
+    let rows = bh::fig12(&[4, 5, 6, 8], 4, 11);
+    for r in &rows {
+        let best_heur = r.row_by_row.min(r.zigzag);
+        assert!(r.opl <= best_heur, "{r:?}");
+        assert!(r.s1_baseline > best_heur, "{r:?}");
+    }
+    let text = bh::fig12::to_csv(&rows);
+    let parsed = csv::parse(&text).unwrap();
+    assert_eq!(parsed.len(), rows.len() + 1);
+    // numeric columns parse back
+    for row in &parsed[1..] {
+        for field in row {
+            field.parse::<u64>().unwrap();
+        }
+    }
+}
+
+/// Fig. 13 (reduced grid): the two regions + CSV integrity.
+#[test]
+fn fig13_region_claims() {
+    let inputs = [4usize, 8, 10];
+    let groups = [2usize, 6, 10];
+    let cells = bh::fig13(&inputs, &groups, 11);
+    assert_eq!(cells.len(), 9);
+
+    // all gains are non-negative and bounded by 100%
+    for c in &cells {
+        assert!((0.0..=100.0).contains(&c.gain_pct), "{c:?}");
+    }
+    // upper-right corner: 4x4 input (4 patches), group 10 → single group
+    let ur = cells.iter().find(|c| c.h_in == 4 && c.group == 10).unwrap();
+    assert_eq!(ur.gain_pct, 0.0);
+    // lower-left corner: 10x10 input, group 2 → sizable gain (paper: ≤30%)
+    let ll = cells.iter().find(|c| c.h_in == 10 && c.group == 2).unwrap();
+    assert!(ll.gain_pct > 3.0, "lower-left gain too small: {ll:?}");
+
+    // ascii heatmap covers the grid
+    let ascii = bh::fig13::to_ascii(&inputs, &groups, &cells);
+    for h in &inputs {
+        assert!(ascii.contains(&format!("{h:>6} |")));
+    }
+}
+
+/// Output files land where the CLI promises.
+#[test]
+fn write_outputs_creates_files() {
+    let dir = std::env::temp_dir().join("convoffload_fig_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    bh::write_outputs(&dir, "fig11", "a,b\n1,2\n", "chart\n").unwrap();
+    assert!(dir.join("fig11.csv").exists());
+    assert!(dir.join("fig11.txt").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,219 @@
+//! Integration tests over the optimizer stack: the three engines must agree
+//! where their domains overlap, and optimized strategies must simulate
+//! correctly end to end.
+
+use std::time::Duration;
+
+use convoffload::config::presets::paper_sweep_layer;
+use convoffload::optimizer::{
+    build_s1_model, decode_solution, exact, grouping_loads,
+    model_builder::encode_mip_start, OptimizeOptions, Optimizer,
+};
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::{RustOracleBackend, Simulator};
+use convoffload::solver::{solve_milp, BranchBoundOptions};
+use convoffload::strategy;
+
+/// The generic §5 MILP and the specialized exact DFS must find the same
+/// optimum on every tractable (layer, group) pair.
+#[test]
+fn milp_and_exact_dfs_agree_on_small_grid() {
+    // Exact agreement where the generic dense-simplex MILP is tractable…
+    for (h_in, g) in [(4usize, 2usize), (4, 3)] {
+        let layer = paper_sweep_layer(h_in);
+        let acc = Accelerator::for_group_size(&layer, g);
+        let k = acc.k_min(&layer);
+
+        let (model, info) = build_s1_model(&layer, &acc, k, 4);
+        let start = strategy::row_by_row(&layer, g);
+        let x0 = encode_mip_start(&layer, &info, &start.groups, model.n_vars());
+        let sol = solve_milp(
+            &model,
+            &BranchBoundOptions {
+                mip_start: Some(x0),
+                time_budget: Duration::from_secs(180),
+                node_budget: 500_000,
+                ..Default::default()
+            },
+        );
+        assert_eq!(
+            sol.status,
+            convoffload::ilp::SolveStatus::Optimal,
+            "h={h_in} g={g}"
+        );
+        let milp_loads =
+            grouping_loads(&layer, &decode_solution(&info, &sol.assignment).groups);
+
+        let dfs = exact::solve_exact(&layer, g, k, Duration::from_secs(60), None)
+            .expect("exact finishes");
+        let dfs_loads = grouping_loads(&layer, &dfs);
+        assert_eq!(milp_loads, dfs_loads, "h={h_in} g={g}");
+    }
+}
+
+/// Where the generic MILP hits its budget (exactly the regime in which the
+/// paper's CPLEX ran into its 0.5–5 h timeouts), the incumbent must still
+/// bracket correctly: MIP-start ≥ incumbent ≥ exact optimum ≥ LP bound.
+#[test]
+fn milp_incumbent_brackets_on_budget_exhaustion() {
+    let layer = paper_sweep_layer(5); // 9 patches
+    let g = 4;
+    let acc = Accelerator::for_group_size(&layer, g);
+    let k = acc.k_min(&layer);
+
+    let (model, info) = build_s1_model(&layer, &acc, k, 4);
+    let start = strategy::row_by_row(&layer, g);
+    let start_loads = grouping_loads(&layer, &start.groups) as f64;
+    let x0 = encode_mip_start(&layer, &info, &start.groups, model.n_vars());
+    let sol = solve_milp(
+        &model,
+        &BranchBoundOptions {
+            mip_start: Some(x0),
+            time_budget: Duration::from_secs(20),
+            node_budget: 3_000,
+            ..Default::default()
+        },
+    );
+    assert!(
+        matches!(
+            sol.status,
+            convoffload::ilp::SolveStatus::Feasible
+                | convoffload::ilp::SolveStatus::Optimal
+        ),
+        "{:?}",
+        sol.status
+    );
+    let incumbent =
+        grouping_loads(&layer, &decode_solution(&info, &sol.assignment).groups) as f64;
+    let exact_opt = grouping_loads(
+        &layer,
+        &exact::solve_exact(&layer, g, k, Duration::from_secs(60), None).unwrap(),
+    ) as f64;
+    assert!(incumbent <= start_loads + 1e-9);
+    assert!(incumbent >= exact_opt - 1e-9);
+    assert!(sol.lower_bound <= exact_opt + 1e-9);
+}
+
+/// The annealer must reach the proven optimum on instances the exact engine
+/// can certify.
+#[test]
+fn polish_reaches_exact_optimum_on_small_instances() {
+    for (h_in, g) in [(5usize, 2usize), (5, 3), (6, 4)] {
+        let layer = paper_sweep_layer(h_in);
+        let k = layer.n_patches().div_ceil(g);
+        let optimal = exact::solve_exact(&layer, g, k, Duration::from_secs(120), None)
+            .expect("exact finishes");
+        let optimal_loads = grouping_loads(&layer, &optimal);
+
+        let start = strategy::row_by_row(&layer, g).groups;
+        let polished = convoffload::optimizer::search::anneal(
+            &layer, g, k, &start, 300_000, 0xDEAD,
+        );
+        let polished_loads = grouping_loads(&layer, &polished);
+        assert_eq!(
+            polished_loads, optimal_loads,
+            "h={h_in} g={g}: annealer stuck at {polished_loads} vs optimum {optimal_loads}"
+        );
+    }
+}
+
+/// Optimized strategies must pass full simulation (semantics + §2.3 checks
+/// with the run-count bound) and functional correctness.
+#[test]
+fn optimized_strategies_simulate_and_compute_correctly() {
+    for h_in in [6usize, 9] {
+        let layer = paper_sweep_layer(h_in);
+        let g = 4;
+        let acc = Accelerator::for_group_size(&layer, g);
+        let res = Optimizer::new(OptimizeOptions {
+            group_size: g,
+            anneal_iters: 60_000,
+            ..Default::default()
+        })
+        .optimize(&layer, &acc);
+
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let input =
+            convoffload::conv::reference::synth_tensor(layer.input_dims().len(), 7);
+        let kernels =
+            convoffload::conv::reference::synth_tensor(layer.kernel_elements(), 8);
+        let mut backend = RustOracleBackend;
+        let report = sim
+            .run_functional(&res.strategy, &input, &kernels, &mut backend)
+            .expect("optimized strategy must simulate");
+        assert_eq!(report.functional_ok(1e-4), Some(true));
+        // reported duration matches the simulator's (modulo kernel load)
+        let kernel_load = layer.kernel_elements() as u64 * acc.t_l;
+        assert_eq!(report.duration, res.duration + kernel_load);
+    }
+}
+
+/// Gain structure across the Fig. 13 grid corners (paper's two regions).
+#[test]
+fn gain_regions() {
+    // upper-right: group ≥ |X| → everything in one group → no gain possible
+    let layer = paper_sweep_layer(4); // 4 patches
+    let acc = Accelerator::for_group_size(&layer, 4);
+    let res = Optimizer::new(OptimizeOptions { group_size: 4, ..Default::default() })
+        .optimize(&layer, &acc);
+    assert_eq!(res.gain_over_heuristics(), 0.0);
+
+    // lower-left: small groups on a 10x10 → positive gain (paper: up to 30%)
+    let layer = paper_sweep_layer(10);
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let res = Optimizer::new(OptimizeOptions {
+        group_size: 2,
+        anneal_iters: 120_000,
+        ..Default::default()
+    })
+    .optimize(&layer, &acc);
+    assert!(
+        res.gain_over_heuristics() > 0.05,
+        "expected a clear gain, got {:.2}%",
+        res.gain_over_heuristics() * 100.0
+    );
+}
+
+/// `k_groups` override: forcing more groups than K_min costs extra t_acc
+/// (and can never reduce loads below the K_min optimum's).
+#[test]
+fn k_groups_override_respected() {
+    let layer = paper_sweep_layer(5);
+    let g = 3;
+    let acc = Accelerator::for_group_size(&layer, g);
+    let kmin_res = Optimizer::new(OptimizeOptions {
+        group_size: g,
+        ..Default::default()
+    })
+    .optimize(&layer, &acc);
+    let more_groups = Optimizer::new(OptimizeOptions {
+        group_size: g,
+        k_groups: Some(layer.n_patches()), // one patch per group
+        ..Default::default()
+    })
+    .optimize(&layer, &acc);
+    assert_eq!(more_groups.strategy.groups.len(), layer.n_patches());
+    assert!(more_groups.duration >= kmin_res.duration);
+}
+
+/// Reload-bound interaction: the §5 model at `nb_data_reload = 1` forbids
+/// any pixel reload; on a layer whose optimal grouping needs reloads this
+/// must tighten the optimum (or go infeasible), never loosen it.
+#[test]
+fn reload_bound_tightens_the_milp() {
+    let layer = paper_sweep_layer(4);
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let k = acc.k_min(&layer);
+    let (loose_model, _) = build_s1_model(&layer, &acc, k, 4);
+    let (tight_model, _) = build_s1_model(&layer, &acc, k, 1);
+    let loose = solve_milp(&loose_model, &BranchBoundOptions::default());
+    let tight = solve_milp(&tight_model, &BranchBoundOptions::default());
+    assert_eq!(loose.status, convoffload::ilp::SolveStatus::Optimal);
+    match tight.status {
+        convoffload::ilp::SolveStatus::Optimal => {
+            assert!(tight.objective >= loose.objective - 1e-9);
+        }
+        convoffload::ilp::SolveStatus::Infeasible => {} // also acceptable
+        other => panic!("unexpected status {other:?}"),
+    }
+}

@@ -1,0 +1,233 @@
+//! Integration tests over the PJRT runtime path (the three-layer contract):
+//! Rust coordinator → AOT HLO artifacts → XLA CPU executables.
+//!
+//! All tests self-skip (with a note) when `make artifacts` has not run, so
+//! `cargo test` works in a fresh checkout; CI runs `make test` which builds
+//! artifacts first.
+
+use convoffload::config::layer_preset;
+use convoffload::conv::{reference, ConvLayer};
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::runtime::{artifacts_available, PjrtBackend, Runtime};
+use convoffload::sim::{ComputeBackend, RustOracleBackend, Simulator};
+use convoffload::strategy;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn manifest_covers_the_preset_layers() {
+    if skip() {
+        return;
+    }
+    let rt = Runtime::from_default_dir().unwrap();
+    // step artifacts for the preset layers the examples use
+    for (d, n) in [(9usize, 1usize), (18, 2), (25, 6), (150, 16)] {
+        assert!(
+            rt.manifest.find_step(d, n, 8).is_some(),
+            "missing step artifact d={d} n={n}"
+        );
+    }
+    // whole-layer artifacts for the e2e example
+    assert!(rt.manifest.find_layer(1, 32, 32, 6, 5).is_some());
+    assert!(rt.manifest.find_layer(6, 14, 14, 16, 5).is_some());
+}
+
+#[test]
+fn pjrt_matches_oracle_on_every_artifact_family() {
+    if skip() {
+        return;
+    }
+    let mut pjrt = PjrtBackend::from_default_dir().unwrap();
+    let mut oracle = RustOracleBackend;
+    // one layer per artifact family
+    let layers = [
+        ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap(),   // d=9 n=1
+        ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap(),   // d=18 n=2
+        ConvLayer::new(1, 32, 32, 5, 5, 6, 1, 1).unwrap(), // d=25 n=6
+        ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap(),// d=150 n=16
+    ];
+    for layer in layers {
+        let input = reference::synth_tensor(layer.input_dims().len(), 51);
+        let kernels = reference::synth_tensor(layer.kernel_elements(), 52);
+        let km = reference::kernel_matrix(&layer, &kernels);
+        let group: Vec<u32> = (0..4.min(layer.n_patches() as u32)).collect();
+        let pm = reference::im2col_group(&layer, &input, &group);
+        let got = pjrt.step_compute(&layer, &pm, &km, group.len()).unwrap();
+        let want = oracle.step_compute(&layer, &pm, &km, group.len()).unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "layer {layer}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn full_functional_pipeline_on_lenet_conv2() {
+    if skip() {
+        return;
+    }
+    let layer = layer_preset("lenet5-conv2").unwrap().layer;
+    let acc = Accelerator::for_group_size(&layer, 4);
+    let sim = Simulator::new(layer, Platform::new(acc));
+    let input = reference::synth_tensor(layer.input_dims().len(), 61);
+    let kernels = reference::synth_tensor(layer.kernel_elements(), 62);
+    let mut backend = PjrtBackend::from_default_dir().unwrap();
+    let report = sim
+        .run_functional(&strategy::zigzag(&layer, 4), &input, &kernels, &mut backend)
+        .unwrap();
+    assert_eq!(report.functional_ok(1e-3), Some(true));
+    // 100 patches in groups of 4 → 25 compute steps
+    assert_eq!(report.n_compute_steps(), 25);
+}
+
+#[test]
+fn pjrt_and_oracle_produce_identical_strategy_metrics() {
+    if skip() {
+        return;
+    }
+    // metrics (δ, loads, peak) are backend-independent; outputs agree too
+    let layer = layer_preset("example1").unwrap().layer;
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let sim = Simulator::new(layer, Platform::new(acc));
+    let input = reference::synth_tensor(layer.input_dims().len(), 71);
+    let kernels = reference::synth_tensor(layer.kernel_elements(), 72);
+    let s = strategy::diagonal(&layer, 2);
+
+    let mut pjrt = PjrtBackend::from_default_dir().unwrap();
+    let a = sim.run_functional(&s, &input, &kernels, &mut pjrt).unwrap();
+    let mut oracle = RustOracleBackend;
+    let b = sim.run_functional(&s, &input, &kernels, &mut oracle).unwrap();
+
+    assert_eq!(a.duration, b.duration);
+    assert_eq!(a.total_loaded(), b.total_loaded());
+    assert_eq!(a.peak_occupancy, b.peak_occupancy);
+    let (ao, bo) = (a.output.unwrap(), b.output.unwrap());
+    for (x, y) in ao.iter().zip(&bo) {
+        assert!((x - y).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn whole_layer_artifact_agrees_with_rust_reference() {
+    if skip() {
+        return;
+    }
+    let mut rt = Runtime::from_default_dir().unwrap();
+    let v = rt.manifest.find_layer(1, 32, 32, 6, 5).unwrap().clone();
+    let layer =
+        ConvLayer::new(v.c_in, v.h_in, v.w_in, v.h_k, v.w_k, v.n, v.s_h, v.s_w).unwrap();
+    let input = reference::synth_tensor(layer.input_dims().len(), 81);
+    let kernels = reference::synth_tensor(layer.kernel_elements(), 82);
+    let out = rt
+        .execute_f32(
+            &v.file,
+            &[
+                (&input, &[v.c_in, v.h_in, v.w_in]),
+                (&kernels, &[v.n, v.c_in, v.h_k, v.w_k]),
+            ],
+        )
+        .unwrap();
+    let want = reference::conv2d(&layer, &input, &kernels);
+    let max_err = out
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    if skip() {
+        return;
+    }
+    let mut rt = Runtime::from_default_dir().unwrap();
+    let v = rt.manifest.find_step(9, 1, 8).unwrap().clone();
+    let patches = vec![0.5f32; v.g_max * 9];
+    let kernels = vec![1f32; 9];
+    for _ in 0..3 {
+        rt.execute_f32(&v.file, &[(&patches, &[v.g_max, 9]), (&kernels, &[9, 1])])
+            .unwrap();
+    }
+    assert_eq!(rt.cached(), 1);
+}
+
+#[test]
+fn multipass_strategy_through_pjrt() {
+    if skip() {
+        return;
+    }
+    // LeNet-5 conv2 split into 8-kernel passes: each pass is a d=150, n=8
+    // sub-layer… no such artifact exists, so use the 16-kernel layer split
+    // into 16×1? The d=150/n=16 artifact only covers full Λ — use the
+    // example1 layer (d=18, n=2) split into two 1-kernel passes; the
+    // backend falls back to an error if no (d, n) variant exists, so this
+    // also pins the manifest coverage expectations.
+    let layer = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();
+    let sub = {
+        let mut s = layer;
+        s.n_kernels = 1;
+        s
+    };
+    // d=18, n=1 has no artifact → expect a clean error, not a wrong result
+    let mp = convoffload::strategy::MultiPassStrategy::new(
+        &layer,
+        1,
+        convoffload::strategy::zigzag(&sub, 2),
+    )
+    .unwrap();
+    let acc = Accelerator::for_group_size(&sub, 2);
+    let input = reference::synth_tensor(layer.input_dims().len(), 95);
+    let kernels = reference::synth_tensor(layer.kernel_elements(), 96);
+    let mut backend = PjrtBackend::from_default_dir().unwrap();
+    match mp.run_functional(&layer, &acc, &input, &kernels, &mut backend) {
+        Err(convoffload::sim::SimError::Backend(msg)) => {
+            assert!(msg.contains("no step artifact"), "{msg}");
+        }
+        Ok(r) => {
+            // if a d=18/n=1 artifact is added later this must be correct
+            assert!(r.max_abs_error.unwrap() < 1e-3);
+        }
+        Err(other) => panic!("unexpected error {other:?}"),
+    }
+    // single-pass (= S1) through PJRT must work with the existing artifact
+    let mp1 = convoffload::strategy::MultiPassStrategy::new(
+        &layer,
+        2,
+        convoffload::strategy::zigzag(&layer, 2),
+    )
+    .unwrap();
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let r = mp1
+        .run_functional(&layer, &acc, &input, &kernels, &mut backend)
+        .unwrap();
+    assert!(r.max_abs_error.unwrap() < 1e-3);
+}
+
+#[test]
+fn lenet_trunk_functional_through_pjrt() {
+    if skip() {
+        return;
+    }
+    // Full two-stage LeNet trunk with pooling, every step's compute on PJRT.
+    let net = convoffload::sim::network::lenet5_trunk(
+        |l, g| convoffload::strategy::zigzag(l, g),
+        4,
+    );
+    let input = reference::synth_tensor(32 * 32, 7);
+    let k1 = reference::synth_tensor(6 * 1 * 5 * 5, 8);
+    let k2 = reference::synth_tensor(16 * 6 * 5 * 5, 9);
+    let mut backend = PjrtBackend::from_default_dir().unwrap();
+    let r = net
+        .run_functional(&input, &[k1, k2], &mut backend)
+        .unwrap();
+    assert!(r.max_abs_error.unwrap() < 1e-3, "err {:?}", r.max_abs_error);
+    assert_eq!(r.per_stage.len(), 2);
+    // final activation: 16×10×10
+    assert_eq!(r.output.unwrap().len(), 1600);
+}

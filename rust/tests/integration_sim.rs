@@ -1,0 +1,182 @@
+//! Integration tests over the simulator: strategies × layers × policies,
+//! config-driven runs, viz consistency, and failure injection.
+
+use convoffload::config::{layer_preset, ExperimentConfig};
+use convoffload::conv::ConvLayer;
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::{RustOracleBackend, SimError, Simulator};
+use convoffload::strategy::{self, WritebackPolicy};
+
+#[test]
+fn all_builtin_strategies_on_all_small_presets() {
+    for preset in convoffload::config::list_presets() {
+        let layer = preset.layer;
+        if layer.n_patches() > 150 {
+            continue; // keep test time bounded; big layers covered by fig tests
+        }
+        for group in [1usize, 2, 4] {
+            let acc = Accelerator::for_group_size(&layer, group);
+            let sim = Simulator::new(layer, Platform::new(acc));
+            for s in [
+                strategy::row_by_row(&layer, group),
+                strategy::zigzag(&layer, group),
+                strategy::hilbert(&layer, group),
+                strategy::diagonal(&layer, group),
+            ] {
+                let r = sim.run(&s).unwrap_or_else(|e| {
+                    panic!("{} on {} g{group}: {e}", s.name, preset.name)
+                });
+                assert_eq!(r.n_compute_steps() as usize, s.n_steps());
+                assert!(r.peak_occupancy <= acc.size_mem);
+                // every input element is loaded at least once
+                assert!(r.total_loaded() >= layer.input_dims().len() as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn functional_on_strided_and_rectangular_layers() {
+    // strided + non-square cases the examples don't cover
+    for (layer, group) in [
+        (ConvLayer::new(1, 9, 7, 3, 3, 2, 2, 2).unwrap(), 2),
+        (ConvLayer::new(3, 6, 10, 3, 3, 1, 1, 1).unwrap(), 3),
+        (ConvLayer::new(2, 8, 8, 5, 5, 3, 1, 1).unwrap(), 2),
+        (ConvLayer::new(1, 7, 7, 1, 1, 4, 1, 1).unwrap(), 4), // 1x1 kernels
+        (ConvLayer::new(2, 6, 6, 3, 3, 2, 3, 3).unwrap(), 2), // disjoint patches
+    ] {
+        let acc = Accelerator::for_group_size(&layer, group);
+        let sim = Simulator::new(layer, Platform::new(acc));
+        let input = convoffload::conv::reference::synth_tensor(layer.input_dims().len(), 17);
+        let kernels = convoffload::conv::reference::synth_tensor(layer.kernel_elements(), 18);
+        let mut backend = RustOracleBackend;
+        for s in [strategy::zigzag(&layer, group), strategy::diagonal(&layer, group)] {
+            let r = sim
+                .run_functional(&s, &input, &kernels, &mut backend)
+                .unwrap_or_else(|e| panic!("{} on {layer}: {e}", s.name));
+            assert_eq!(r.functional_ok(1e-4), Some(true), "{} on {layer}", s.name);
+        }
+    }
+}
+
+#[test]
+fn writeback_policies_trade_memory_for_nothing_in_duration() {
+    let layer = layer_preset("example1").unwrap().layer;
+    let group = 2;
+    let mut acc = Accelerator::for_group_size(&layer, group);
+    acc.t_w = 3;
+    // at-end keeps all outputs on chip → bigger memory needed
+    acc.size_mem += (layer.n_patches() * layer.c_out()) as u64;
+    let sim = Simulator::new(layer, Platform::new(acc));
+
+    let mut every = strategy::zigzag(&layer, group);
+    every.writeback = WritebackPolicy::EveryStep;
+    let mut at_end = strategy::zigzag(&layer, group);
+    at_end.writeback = WritebackPolicy::AtEnd;
+
+    let r_every = sim.run(&every).unwrap();
+    let r_end = sim.run(&at_end).unwrap();
+    // same total elements written → same duration under the linear model
+    assert_eq!(r_every.duration, r_end.duration);
+    assert_eq!(
+        r_every.totals.total.written_elements,
+        r_end.totals.total.written_elements
+    );
+    // but deferred write-back has a strictly larger peak
+    assert!(r_end.peak_occupancy > r_every.peak_occupancy);
+}
+
+#[test]
+fn undersized_memory_is_rejected() {
+    let layer = layer_preset("example1").unwrap().layer;
+    let mut acc = Accelerator::for_group_size(&layer, 2);
+    acc.size_mem = layer.kernel_elements() as u64; // no room for any patch
+    let sim = Simulator::new(layer, Platform::new(acc));
+    match sim.run(&strategy::zigzag(&layer, 2)) {
+        Err(SimError::Step { .. }) => {}
+        other => panic!("expected step failure, got {other:?}"),
+    }
+}
+
+#[test]
+fn dram_too_small_is_rejected() {
+    let layer = layer_preset("example1").unwrap().layer;
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let mut platform = Platform::new(acc);
+    platform.dram_size = 10;
+    let sim = Simulator::new(layer, platform);
+    match sim.run(&strategy::zigzag(&layer, 2)) {
+        Err(SimError::DramTooSmall) => {}
+        other => panic!("expected DramTooSmall, got {other:?}"),
+    }
+}
+
+#[test]
+fn experiment_config_drives_simulation() {
+    let cfg = ExperimentConfig::from_toml(
+        r#"
+name = "itest"
+
+[layer]
+preset = "paper-sweep-8"
+
+[accelerator]
+group_size = 3
+"#,
+    )
+    .unwrap();
+    let sim = Simulator::new(cfg.layer, Platform::new(cfg.accelerator));
+    let s = strategy::zigzag(&cfg.layer, cfg.group_size);
+    let r = sim.run(&s).unwrap();
+    assert!(r.duration > 0);
+}
+
+#[test]
+fn csv_loaded_strategy_simulates_identically() {
+    let layer = layer_preset("example1").unwrap().layer;
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let sim = Simulator::new(layer, Platform::new(acc));
+    let original = strategy::zigzag(&layer, 2);
+    let reloaded = strategy::strategy_from_csv(
+        "reloaded",
+        &strategy::strategy_to_csv(&original),
+    )
+    .unwrap();
+    let a = sim.run(&original).unwrap();
+    let b = sim.run(&reloaded).unwrap();
+    assert_eq!(a.duration, b.duration);
+    assert_eq!(a.total_loaded(), b.total_loaded());
+    assert_eq!(a.peak_occupancy, b.peak_occupancy);
+}
+
+#[test]
+fn viz_outputs_match_strategy_structure() {
+    let layer = layer_preset("example1").unwrap().layer;
+    let s = strategy::row_by_row(&layer, 2);
+    let steps = s.compile(&layer);
+    let ascii = convoffload::viz::render_strategy_ascii(&layer, &steps);
+    assert_eq!(ascii.matches("step ").count(), steps.len());
+    let svg = convoffload::viz::render_strategy_svg(&layer, &steps, "t");
+    assert_eq!(
+        svg.matches("<rect").count(),
+        steps.len() * layer.n_pixels() + 4 // + legend swatches
+    );
+}
+
+#[test]
+fn trace_json_is_parseable_and_complete() {
+    let layer = layer_preset("paper-sweep-8").unwrap().layer;
+    let acc = Accelerator::for_group_size(&layer, 2);
+    let sim = Simulator::new(layer, Platform::new(acc));
+    let r = sim.run(&strategy::zigzag(&layer, 2)).unwrap();
+    let json_text = r.to_json().to_string_pretty();
+    let parsed = convoffload::util::json::parse(&json_text).unwrap();
+    assert_eq!(
+        parsed.get("n_steps").unwrap().as_u64(),
+        Some(r.totals.n_steps)
+    );
+    assert_eq!(
+        parsed.get("steps").unwrap().as_arr().unwrap().len(),
+        r.steps.len()
+    );
+}

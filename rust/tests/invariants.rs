@@ -1,0 +1,243 @@
+//! Property-based tests over the coordinator invariants.
+//!
+//! Uses the in-tree property-test helper (`util::proptest`): random layers,
+//! accelerators and *random valid groupings* are generated; the invariants
+//! of the formalism must hold for every case:
+//!
+//! 1. the on-chip memory never exceeds `size_MEM`;
+//! 2. every patch is computed exactly once;
+//! 3. the memory is empty after the final step, all outputs written;
+//! 4. the functional simulation reproduces the reference convolution;
+//! 5. simulator duration == fast-objective duration (+ kernel-load term);
+//! 6. strategy CSV/JSON round-trips preserve semantics.
+
+use convoffload::conv::ConvLayer;
+use convoffload::optimizer::grouping_duration;
+use convoffload::platform::{Accelerator, Platform};
+use convoffload::sim::{RustOracleBackend, Simulator};
+use convoffload::strategy::{
+    self, strategy_from_csv, strategy_from_json, strategy_to_csv, strategy_to_json,
+    GroupedStrategy,
+};
+use convoffload::util::proptest::{check, Config};
+use convoffload::util::rng::Rng;
+
+/// A randomly generated scenario.
+#[derive(Debug, Clone)]
+struct Scenario {
+    layer: ConvLayer,
+    group_size: usize,
+    strategy: GroupedStrategy,
+}
+
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    // random layer: kernels 1..3 square, inputs up to 10, channels 1..3,
+    // strides 1..2, kernel count 1..3
+    let h_k = 1 + rng.index(3);
+    let s = 1 + rng.index(2);
+    let h_in = h_k + rng.index(8);
+    let w_in = h_k + rng.index(8);
+    let c_in = 1 + rng.index(3);
+    let n_k = 1 + rng.index(3);
+    let layer = ConvLayer::new(c_in, h_in, w_in, h_k, h_k, n_k, s, s).unwrap();
+
+    let group_size = 1 + rng.index(4);
+    // random permutation of patches chunked into groups ≤ group_size
+    let mut order: Vec<u32> = layer.all_patches().collect();
+    rng.shuffle(&mut order);
+    let mut groups = Vec::new();
+    let mut idx = 0;
+    while idx < order.len() {
+        let take = 1 + rng.index(group_size.min(order.len() - idx));
+        groups.push(order[idx..idx + take].to_vec());
+        idx += take;
+    }
+    Scenario {
+        layer,
+        group_size,
+        strategy: GroupedStrategy::new("random", groups),
+    }
+}
+
+fn shrink_scenario(s: &Scenario, _rng: &mut Rng) -> Vec<Scenario> {
+    // drop the last group + its patches… not semantically valid (patches
+    // must cover X); instead shrink by merging the two smallest groups and
+    // by sorting groups toward row-major (tamer orderings).
+    let mut out = Vec::new();
+    if s.strategy.groups.len() >= 2 {
+        let mut groups = s.strategy.groups.clone();
+        let tail = groups.pop().unwrap();
+        let last = groups.last_mut().unwrap();
+        if last.len() + tail.len() <= s.group_size {
+            last.extend(tail);
+            out.push(Scenario {
+                layer: s.layer,
+                group_size: s.group_size,
+                strategy: GroupedStrategy::new("shrunk-merge", groups),
+            });
+        }
+    }
+    let mut sorted = s.strategy.groups.clone();
+    sorted.sort_by_key(|g| g.iter().min().copied());
+    if sorted != s.strategy.groups {
+        out.push(Scenario {
+            layer: s.layer,
+            group_size: s.group_size,
+            strategy: GroupedStrategy::new("shrunk-sort", sorted),
+        });
+    }
+    out
+}
+
+fn accelerator_for(s: &Scenario) -> Accelerator {
+    // size for the worst group of THIS strategy (groups are ≤ group_size
+    // but arbitrary patches may overlap little)
+    let worst_group = s
+        .strategy
+        .groups
+        .iter()
+        .map(|g| s.layer.group_pixels(g).len())
+        .max()
+        .unwrap_or(0);
+    Accelerator {
+        nbop_pe: (s.group_size * s.layer.ops_per_patch()) as u64,
+        t_acc: 1,
+        size_mem: (worst_group * s.layer.c_in
+            + s.layer.kernel_elements()
+            + s.group_size * s.layer.c_out() * 2) as u64,
+        t_l: 1,
+        t_w: 1,
+    }
+}
+
+#[test]
+fn memory_capacity_and_coverage_invariants() {
+    let cfg = Config { cases: 120, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let acc = accelerator_for(s);
+        let report = Simulator::new(s.layer, Platform::new(acc))
+            .run(&s.strategy)
+            .map_err(|e| format!("simulation failed: {e}"))?;
+        // (1) peak within capacity (the simulator would error otherwise,
+        //     but assert the report agrees)
+        if report.peak_occupancy > acc.size_mem {
+            return Err(format!(
+                "peak {} exceeds capacity {}",
+                report.peak_occupancy, acc.size_mem
+            ));
+        }
+        // (2,3) validation: all patches once, memory empty, outputs written
+        let v = strategy::validate(&s.layer, &acc, &s.strategy, u32::MAX);
+        if !v.is_valid() {
+            return Err(format!("violations: {:?}", v.violations));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn functional_simulation_matches_reference() {
+    let cfg = Config { cases: 60, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let acc = accelerator_for(s);
+        let sim = Simulator::new(s.layer, Platform::new(acc));
+        let input = convoffload::conv::reference::synth_tensor(
+            s.layer.input_dims().len(),
+            0xFEED,
+        );
+        let kernels = convoffload::conv::reference::synth_tensor(
+            s.layer.kernel_elements(),
+            0xBEEF,
+        );
+        let mut backend = RustOracleBackend;
+        let report = sim
+            .run_functional(&s.strategy, &input, &kernels, &mut backend)
+            .map_err(|e| format!("functional failed: {e}"))?;
+        match report.functional_ok(1e-4) {
+            Some(true) => Ok(()),
+            other => Err(format!(
+                "functional mismatch: {other:?}, err={:?}",
+                report.max_abs_error
+            )),
+        }
+    });
+}
+
+#[test]
+fn simulator_duration_equals_fast_objective() {
+    let cfg = Config { cases: 80, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let mut acc = accelerator_for(s);
+        acc.t_w = 0; // the fast objective charges writes as a constant term
+        let report = Simulator::new(s.layer, Platform::new(acc))
+            .run(&s.strategy)
+            .map_err(|e| format!("simulation failed: {e}"))?;
+        let fast = grouping_duration(&s.layer, &acc, &s.strategy.groups);
+        let kernel_load = (s.layer.kernel_elements() as u64) * acc.t_l;
+        if report.duration != fast + kernel_load {
+            return Err(format!(
+                "sim duration {} != objective {} + kernel load {}",
+                report.duration, fast, kernel_load
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serialization_roundtrips_preserve_strategy() {
+    let cfg = Config { cases: 60, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let csv = strategy_to_csv(&s.strategy);
+        let from_csv = strategy_from_csv("rt", &csv).map_err(|e| e.to_string())?;
+        if from_csv.groups != s.strategy.groups {
+            return Err("CSV round-trip changed groups".to_string());
+        }
+        let json = strategy_to_json(&s.strategy);
+        let from_json = strategy_from_json(&json).map_err(|e| e.to_string())?;
+        if from_json.groups != s.strategy.groups
+            || from_json.writeback != s.strategy.writeback
+        {
+            return Err("JSON round-trip changed strategy".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pixel_loads_bounded_by_runs() {
+    // Every pixel's load count equals its number of *runs* of consecutive
+    // groups containing it — the quantity the ILP's pxl_I models (Eq. 8).
+    let cfg = Config { cases: 60, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let acc = accelerator_for(s);
+        let v = strategy::validate(&s.layer, &acc, &s.strategy, u32::MAX);
+        if !v.is_valid() {
+            return Err(format!("violations: {:?}", v.violations));
+        }
+        // recompute runs per pixel from the groups
+        let k = s.strategy.groups.len();
+        let mut in_group = vec![vec![false; k]; s.layer.n_pixels()];
+        for (gi, g) in s.strategy.groups.iter().enumerate() {
+            for px in s.layer.group_pixels(g).iter() {
+                in_group[px as usize][gi] = true;
+            }
+        }
+        for (px, loads) in v.pixel_loads.iter().enumerate() {
+            let mut runs = 0u32;
+            let mut prev = false;
+            for &now in &in_group[px] {
+                if now && !prev {
+                    runs += 1;
+                }
+                prev = now;
+            }
+            if runs != *loads {
+                return Err(format!(
+                    "pixel {px}: {loads} loads but {runs} runs"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
