@@ -1,0 +1,43 @@
+//! Network-level planning demo: plan LeNet-5 and ResNet-8 with the portfolio
+//! race, then re-plan to show the strategy cache taking over.
+//!
+//! Run with: `cargo run --release --example network_plan`
+
+use convoffload::config::network_preset;
+use convoffload::planner::{
+    format_plan_table, AcceleratorSpec, NetworkPlanner, PlanOptions, StrategyCache,
+};
+
+fn main() {
+    let cache_dir = std::env::temp_dir().join(format!(
+        "convoffload-network-plan-example-{}",
+        std::process::id()
+    ));
+    let options = PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 20_000,
+        anneal_starts: 2,
+        threads: 0,
+    };
+    let planner = NetworkPlanner::with_cache(
+        options,
+        StrategyCache::open(&cache_dir).expect("cache dir"),
+    );
+
+    for name in ["lenet5", "resnet8"] {
+        let preset = network_preset(name).expect("preset");
+        let plan = planner.plan(&preset).expect("plan");
+        print!("{}", format_plan_table(&plan));
+        println!();
+    }
+
+    // Second pass: every shape is served from the cache — zero anneal work.
+    let lenet = network_preset("lenet5").unwrap();
+    let again = planner.plan(&lenet).expect("plan");
+    println!(
+        "re-planned {}: {} hits / {} misses, anneal iterations run: {}",
+        again.network, again.cache_hits, again.cache_misses, again.anneal_iters_run
+    );
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}

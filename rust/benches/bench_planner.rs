@@ -1,0 +1,69 @@
+//! Planner benchmarks: portfolio lanes, cold whole-network planning, and the
+//! cached re-planning path (which must be dominated by cache-file reads).
+
+use convoffload::config::network_preset;
+use convoffload::config::presets::paper_sweep_layer;
+use convoffload::planner::{
+    portfolio_entries, run_entry, AcceleratorSpec, NetworkPlanner, PlanOptions,
+    StrategyCache,
+};
+use convoffload::util::bench::BenchSuite;
+
+fn quick_plan_options() -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 2_000,
+        anneal_starts: 1,
+        threads: 0,
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("planner");
+
+    // Single lanes on the 12x12 sweep layer (100 patches, k = 25).
+    {
+        let layer = paper_sweep_layer(12);
+        let entries = portfolio_entries(2026, 5_000, 1);
+        suite.bench("portfolio_lane_zigzag_12x12_g4", move || {
+            run_entry(&layer, 4, 25, &entries[1]).loaded_pixels
+        });
+    }
+    {
+        let layer = paper_sweep_layer(12);
+        let entries = portfolio_entries(2026, 5_000, 1);
+        suite.bench("portfolio_lane_anneal5k_12x12_g4", move || {
+            run_entry(&layer, 4, 25, &entries[5]).loaded_pixels
+        });
+    }
+
+    // Whole-network planning, cold — what one `plan-network lenet5` costs.
+    {
+        let preset = network_preset("lenet5").expect("preset");
+        let planner = NetworkPlanner::new(quick_plan_options());
+        suite.bench("plan_lenet5_cold_anneal2k", move || {
+            planner.plan(&preset).expect("plan").total_duration
+        });
+    }
+
+    // Warm cache: repeated planning of the same network.
+    {
+        let preset = network_preset("lenet5").expect("preset");
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-bench-planner-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let planner = NetworkPlanner::with_cache(
+            quick_plan_options(),
+            StrategyCache::open(&dir).expect("cache"),
+        );
+        planner.plan(&preset).expect("warm-up plan");
+        suite.bench("plan_lenet5_cached", move || {
+            planner.plan(&preset).expect("plan").total_duration
+        });
+    }
+
+    suite.run();
+}

@@ -9,7 +9,10 @@
 pub mod presets;
 pub mod toml;
 
-pub use presets::{layer_preset, list_presets, LayerPreset};
+pub use presets::{
+    layer_preset, list_network_presets, list_presets, network_preset, LayerPreset,
+    NetworkPreset, NetworkStagePreset,
+};
 pub use toml::TomlDoc;
 
 use crate::conv::ConvLayer;

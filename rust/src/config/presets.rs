@@ -81,6 +81,89 @@ pub fn paper_sweep_layer(h_in: usize) -> ConvLayer {
     ConvLayer::square(1, h_in, 3, 1)
 }
 
+// ---------------------------------------------------------------- networks
+
+/// One stage of a network preset: a conv layer plus the inter-stage plumbing
+/// (pooling / re-padding) that connects it to the next stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkStagePreset {
+    pub name: &'static str,
+    pub layer: ConvLayer,
+    /// Apply 2×2 stride-2 mean pooling after this stage (LeNet subsampling).
+    pub pool_after: bool,
+    /// Zero-pad the (pooled) output by this many pixels per spatial side
+    /// before the next stage — the Remark-2 pre-padding for same-padded
+    /// successors (ResNet-8's 3×3 blocks).
+    pub pad_after: usize,
+}
+
+/// A whole-network preset — the §7.2 evaluation targets, expressed as the
+/// layer sequences the network planner optimizes end to end.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkPreset {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub stages: Vec<NetworkStagePreset>,
+}
+
+fn all_networks() -> Vec<NetworkPreset> {
+    vec![
+        NetworkPreset {
+            name: "lenet5",
+            description: "LeNet-5 convolutional trunk: conv1 -> 2x2 pool -> conv2",
+            stages: vec![
+                NetworkStagePreset {
+                    name: "conv1",
+                    layer: ConvLayer::new(1, 32, 32, 5, 5, 6, 1, 1).unwrap(),
+                    pool_after: true,
+                    pad_after: 0,
+                },
+                NetworkStagePreset {
+                    name: "conv2",
+                    layer: ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+            ],
+        },
+        NetworkPreset {
+            name: "resnet8",
+            description:
+                "ResNet-8 3x3 trunk: conv1 -> pool + pad -> stage-2 block (two same-padded convs)",
+            stages: vec![
+                NetworkStagePreset {
+                    name: "conv1",
+                    layer: ConvLayer::new(3, 34, 34, 3, 3, 16, 1, 1).unwrap(),
+                    pool_after: true,
+                    pad_after: 1,
+                },
+                NetworkStagePreset {
+                    name: "conv2a",
+                    layer: ConvLayer::new(16, 18, 18, 3, 3, 16, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 1,
+                },
+                NetworkStagePreset {
+                    name: "conv2b",
+                    layer: ConvLayer::new(16, 18, 18, 3, 3, 16, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+            ],
+        },
+    ]
+}
+
+/// Look up a network preset by name (`lenet5`, `resnet8`).
+pub fn network_preset(name: &str) -> Option<NetworkPreset> {
+    all_networks().into_iter().find(|p| p.name == name)
+}
+
+/// All network presets (for CLI listings).
+pub fn list_network_presets() -> Vec<NetworkPreset> {
+    all_networks()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +193,43 @@ mod tests {
             assert_eq!(l.h_out(), h - 2);
             assert_eq!(l.c_in, 1);
             assert_eq!(l.n_kernels, 1);
+        }
+    }
+
+    #[test]
+    fn network_presets_resolve() {
+        for p in list_network_presets() {
+            assert!(!p.stages.is_empty(), "{}", p.name);
+            assert_eq!(network_preset(p.name).as_ref(), Some(&p));
+            for s in &p.stages {
+                assert!(s.layer.validate().is_ok(), "{}/{}", p.name, s.name);
+            }
+        }
+        assert!(network_preset("bogus").is_none());
+    }
+
+    /// Stage dimensions must chain: next input = previous output, pooled and
+    /// re-padded per the stage's plumbing flags (the same rule
+    /// `sim::network::Network::push` enforces).
+    #[test]
+    fn network_presets_chain_dimensionally() {
+        for p in list_network_presets() {
+            for win in p.stages.windows(2) {
+                let (prev, next) = (&win[0], &win[1]);
+                let dims = crate::sim::network::next_stage_dims(
+                    &prev.layer,
+                    prev.pool_after,
+                    prev.pad_after,
+                );
+                assert_eq!(
+                    (next.layer.c_in, next.layer.h_in, next.layer.w_in),
+                    (dims.c, dims.h, dims.w),
+                    "{}: {} -> {}",
+                    p.name,
+                    prev.name,
+                    next.name
+                );
+            }
         }
     }
 }

@@ -20,9 +20,13 @@
 //!   substrate (linearized ∧/∨/¬, dense simplex, branch & bound with MIP
 //!   start) plus the structure-aware local-search “solution polishing” used
 //!   for larger instances (`ilp`, `solver`, `optimizer`);
+//! * the **network-level planner** — a portfolio race (orderings + greedy +
+//!   seeded annealing, raced on scoped threads) over every layer of a network
+//!   preset, with a content-addressed on-disk strategy cache and an
+//!   end-to-end simulated-duration report (`planner`);
 //! * the **experiment harness** regenerating every figure of the paper's
 //!   evaluation (`bench_harness`), and a config system with LeNet-5 / ResNet-8
-//!   presets (`config`).
+//!   layer *and* network presets (`config`).
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index, and
 //! `EXPERIMENTS.md` for reproduced-vs-paper results.
@@ -33,6 +37,7 @@ pub mod conv;
 pub mod ilp;
 pub mod metrics;
 pub mod optimizer;
+pub mod planner;
 pub mod platform;
 pub mod runtime;
 pub mod sim;
@@ -46,6 +51,9 @@ pub mod viz;
 /// Convenience re-exports of the types that form the public API surface.
 pub mod prelude {
     pub use crate::conv::{ConvLayer, Patch, PatchId};
+    pub use crate::planner::{
+        AcceleratorSpec, NetworkPlan, NetworkPlanner, PlanOptions, StrategyCache,
+    };
     pub use crate::platform::{Accelerator, OnChipMemory, Platform};
     pub use crate::sim::{FunctionalBackend, SimReport, Simulator};
     pub use crate::step::{Step, StepCost};

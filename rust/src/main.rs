@@ -2,19 +2,27 @@
 //! paper-figure harness.
 //!
 //! Subcommands:
-//! * `simulate`  — run a strategy on a layer, print the per-step report;
-//! * `optimize`  — find an optimized strategy (exact / polished), export CSV;
-//! * `figures`   — regenerate the paper's Figures 11/12/13 into `figures/`;
-//! * `viz`       — render a strategy's step grids (ASCII or SVG);
-//! * `e2e`       — functional end-to-end run through the PJRT runtime;
-//! * `perf`      — print the L1 kernel VMEM/MXU estimates;
-//! * `presets`   — list layer presets.
+//! * `simulate`      — run a strategy on a layer, print the per-step report;
+//! * `optimize`      — find an optimized strategy (exact / polished), export CSV;
+//! * `plan-network`  — plan every layer of a network preset (portfolio race
+//!   + strategy cache) and report the end-to-end simulated duration;
+//! * `figures`       — regenerate the paper's Figures 11/12/13 into `figures/`;
+//! * `viz`           — render a strategy's step grids (ASCII or SVG);
+//! * `e2e`           — functional end-to-end run through the PJRT runtime;
+//! * `perf`          — print the L1 kernel VMEM/MXU estimates;
+//! * `presets`       — list layer and network presets.
 
 use std::process::ExitCode;
 
-use convoffload::config::{layer_preset, list_presets, ExperimentConfig};
+use convoffload::config::{
+    layer_preset, list_network_presets, list_presets, network_preset, ExperimentConfig,
+};
 use convoffload::conv::ConvLayer;
 use convoffload::optimizer::{OptimizeOptions, Optimizer};
+use convoffload::planner::{
+    format_plan_table, plan_to_json, AcceleratorSpec, NetworkPlanner, PlanOptions,
+    StrategyCache,
+};
 use convoffload::platform::{Accelerator, Platform};
 use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
 use convoffload::strategy::{self, GroupedStrategy};
@@ -29,6 +37,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(rest),
         "optimize" => cmd_optimize(rest),
+        "plan-network" => cmd_plan_network(rest),
         "figures" => cmd_figures(rest),
         "viz" => cmd_viz(rest),
         "e2e" => cmd_e2e(rest),
@@ -53,13 +62,14 @@ fn print_usage() {
     println!(
         "convoffload — predictable offloading of convolutions to an accelerator\n\n\
          commands:\n\
-         \x20 simulate   run a strategy on a layer and report δ / memory\n\
-         \x20 optimize   search for an optimal strategy (§5 problem)\n\
-         \x20 figures    regenerate the paper's Figures 11/12/13 under figures/\n\
-         \x20 viz        render a strategy step by step (ascii/svg)\n\
-         \x20 e2e        functional end-to-end run (PJRT or rust oracle)\n\
-         \x20 perf       L1 kernel VMEM/MXU estimates for a layer\n\
-         \x20 presets    list built-in layer presets\n\n\
+         \x20 simulate      run a strategy on a layer and report δ / memory\n\
+         \x20 optimize      search for an optimal strategy (§5 problem)\n\
+         \x20 plan-network  plan every layer of a network preset (cached portfolio race)\n\
+         \x20 figures       regenerate the paper's Figures 11/12/13 under figures/\n\
+         \x20 viz           render a strategy step by step (ascii/svg)\n\
+         \x20 e2e           functional end-to-end run (PJRT or rust oracle)\n\
+         \x20 perf          L1 kernel VMEM/MXU estimates for a layer\n\
+         \x20 presets       list built-in layer and network presets\n\n\
          run `convoffload <command> --help` for flags"
     );
 }
@@ -182,6 +192,68 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
         std::fs::write(path, strategy::strategy_to_csv(&res.strategy))
             .map_err(|e| format!("{path}: {e}"))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- plan-network
+
+fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        FlagSpec { name: "group", help: "per-layer group size bound", takes_value: true, default: Some("4") },
+        FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
+        FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
+        FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
+        FlagSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: Some("0") },
+        FlagSpec { name: "cache-dir", help: "strategy cache directory", takes_value: true, default: Some(".strategy-cache") },
+        FlagSpec { name: "no-cache", help: "disable the strategy cache", takes_value: false, default: None },
+        FlagSpec { name: "json", help: "emit the plan as JSON instead of a table", takes_value: false, default: None },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            cli::help(
+                "plan-network <network>",
+                "plan every layer of a network preset and simulate it end to end",
+                &specs
+            )
+        );
+        println!("networks:");
+        for p in list_network_presets() {
+            println!("  {:<10} {} ({} stages)", p.name, p.description, p.stages.len());
+        }
+        return if args.get_bool("help") {
+            Ok(())
+        } else {
+            Err("missing network name (e.g. `plan-network lenet5`)".into())
+        };
+    }
+    let name = &args.positional[0];
+    let preset = network_preset(name).ok_or_else(|| {
+        format!("unknown network '{name}' (see `convoffload plan-network --help`)")
+    })?;
+    let options = PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(
+            args.get_usize("group")?.unwrap_or(4).max(1),
+        ),
+        seed: args.get_u64("seed")?.unwrap_or(2026),
+        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000),
+        anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
+        threads: args.get_usize("threads")?.unwrap_or(0),
+    };
+    let planner = if args.get_bool("no-cache") {
+        NetworkPlanner::new(options)
+    } else {
+        let dir = std::path::Path::new(args.get("cache-dir").unwrap());
+        NetworkPlanner::with_cache(options, StrategyCache::open(dir)?)
+    };
+    let plan = planner.plan(&preset)?;
+    if args.get_bool("json") {
+        println!("{}", plan_to_json(&plan).to_string_pretty());
+    } else {
+        print!("{}", format_plan_table(&plan));
     }
     Ok(())
 }
@@ -342,8 +414,14 @@ fn cmd_perf(argv: &[String]) -> Result<(), String> {
 // ---------------------------------------------------------------- presets
 
 fn cmd_presets() -> Result<(), String> {
+    println!("layers:");
     for p in list_presets() {
-        println!("{:<16} {}  [{}]", p.name, p.layer, p.description);
+        println!("  {:<16} {}  [{}]", p.name, p.layer, p.description);
+    }
+    println!("\nnetworks (for `plan-network`):");
+    for p in list_network_presets() {
+        let stages: Vec<&str> = p.stages.iter().map(|s| s.name).collect();
+        println!("  {:<16} {}  [{}]", p.name, stages.join(" -> "), p.description);
     }
     Ok(())
 }

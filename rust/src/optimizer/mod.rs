@@ -98,6 +98,24 @@ impl OptimizeResult {
     }
 }
 
+/// The in-tree heuristic pool: the four patch orderings plus the greedy
+/// construction, in a fixed order (Row-by-Row, ZigZag, Hilbert, diagonal,
+/// greedy). [`Optimizer::optimize`]'s seed phase draws from it, and the
+/// network planner's portfolio race enumerates the same five candidates as
+/// its heuristic lanes — that equivalence is pinned by
+/// `planner::portfolio`'s `first_lanes_match_the_optimizer_heuristic_pool`
+/// test, so extending or reordering this pool fails loudly rather than
+/// silently diverging the two.
+pub fn heuristic_pool(layer: &ConvLayer, g: usize, k: usize) -> Vec<GroupedStrategy> {
+    vec![
+        strategy::row_by_row(layer, g),
+        strategy::zigzag(layer, g),
+        strategy::hilbert(layer, g),
+        strategy::diagonal(layer, g),
+        GroupedStrategy::new("greedy", search::greedy(layer, g, k)),
+    ]
+}
+
 /// Facade: optimal-strategy search for a layer on an accelerator.
 #[derive(Debug, Clone)]
 pub struct Optimizer {
@@ -118,36 +136,36 @@ impl Optimizer {
             .unwrap_or_else(|| layer.n_patches().div_ceil(g))
             .clamp(layer.n_patches().div_ceil(g), layer.n_patches());
 
-        // MIP start: best of the built-in heuristics (the paper injects
-        // "either the ZigZag or Row-by-Row strategy, depending on which was
-        // best for the given convolution parameters").
-        let candidates = [
-            strategy::row_by_row(layer, g),
-            strategy::zigzag(layer, g),
-        ];
-        let (mip_start, mip_dur) = candidates
+        // The shared heuristic pool: Row-by-Row, ZigZag, Hilbert, diagonal,
+        // greedy (in that order; see `heuristic_pool`).
+        let evaluated: Vec<(GroupedStrategy, u64)> = heuristic_pool(layer, g, k)
             .into_iter()
             .map(|s| {
                 let d = grouping_duration(layer, acc, &s.groups);
                 (s, d)
             })
+            .collect();
+
+        // MIP start: best of Row-by-Row / ZigZag (the paper injects "either
+        // the ZigZag or Row-by-Row strategy, depending on which was best for
+        // the given convolution parameters"). Selected by name so the pool
+        // can grow or reorder without silently changing the paper-faithful
+        // gain denominator.
+        let (mip_start, mip_dur) = evaluated
+            .iter()
+            .filter(|(s, _)| {
+                s.name.starts_with("row-by-row") || s.name.starts_with("zigzag")
+            })
+            .map(|(s, d)| (s.clone(), *d))
             .min_by_key(|&(_, d)| d)
-            .expect("at least one heuristic");
+            .expect("pool contains the paper heuristics");
 
         // Seed pool for the polish phase: best of *all* in-tree heuristics
         // (the extension orderings + greedy construction can only improve
         // the optimized strategy; the Fig.-13 gain denominator stays the
         // paper-faithful `mip_dur` above).
-        let extra = [
-            strategy::hilbert(layer, g),
-            strategy::diagonal(layer, g),
-            GroupedStrategy::new("greedy", search::greedy(layer, g, k)),
-        ];
-        let (seed, _) = std::iter::once((mip_start.clone(), mip_dur))
-            .chain(extra.into_iter().map(|s| {
-                let d = grouping_duration(layer, acc, &s.groups);
-                (s, d)
-            }))
+        let (seed, _) = evaluated
+            .into_iter()
             .min_by_key(|&(_, d)| d)
             .expect("at least one seed");
 

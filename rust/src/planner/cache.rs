@@ -1,0 +1,249 @@
+//! Content-addressed strategy cache.
+//!
+//! A planned strategy depends only on the layer geometry, the accelerator
+//! parameters, the grouping bounds and the portfolio configuration — not on
+//! which network the layer appeared in. The cache therefore keys on exactly
+//! those fields ([`CacheKey`]): planning LeNet-5 then ResNet-8 reuses any
+//! shared shapes, and re-planning the same network is free.
+//!
+//! Entries are one JSON file each under the cache directory, named by the
+//! FNV-1a hash of the canonical key string; the full key is stored inside
+//! the file and verified on read, so a hash collision degrades to a cache
+//! miss rather than a wrong strategy. The payload itself is *not* trusted
+//! either: the planner re-validates every hit structurally against the layer
+//! it is about to drive ([`CachedStrategy::validate_for`]) *and* recomputes
+//! the stored objective, re-racing on any mismatch.
+
+use std::path::{Path, PathBuf};
+
+use crate::conv::{ConvLayer, PatchId};
+use crate::platform::Accelerator;
+use crate::strategy::{self, GroupedStrategy};
+use crate::util::hash::fnv1a64_hex;
+use crate::util::json::{self, Json};
+
+/// Canonical description of one planning problem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheKey {
+    canonical: String,
+}
+
+impl CacheKey {
+    /// Build the key from everything the planned strategy depends on.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        layer: &ConvLayer,
+        acc: &Accelerator,
+        group_size: usize,
+        k: usize,
+        seed: u64,
+        anneal_iters: u64,
+        anneal_starts: usize,
+    ) -> CacheKey {
+        let canonical = format!(
+            "v1|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|acc:{},{},{},{},{}|g:{}|k:{}|anneal:{}x{}@{}",
+            layer.c_in,
+            layer.h_in,
+            layer.w_in,
+            layer.n_kernels,
+            layer.h_k,
+            layer.w_k,
+            layer.s_h,
+            layer.s_w,
+            acc.nbop_pe,
+            acc.t_acc,
+            acc.size_mem,
+            acc.t_l,
+            acc.t_w,
+            group_size,
+            k,
+            anneal_starts,
+            anneal_iters,
+            seed,
+        );
+        CacheKey { canonical }
+    }
+
+    /// The canonical key string (stored in, and verified against, the file).
+    pub fn canonical(&self) -> &str {
+        &self.canonical
+    }
+
+    /// Content-addressed filename for this key.
+    pub fn filename(&self) -> String {
+        format!("{}.json", fnv1a64_hex(self.canonical.as_bytes()))
+    }
+}
+
+/// A cached planning result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedStrategy {
+    pub strategy: GroupedStrategy,
+    /// The race objective the winner achieved.
+    pub loaded_pixels: u64,
+    /// Which portfolio lane won (provenance for reports).
+    pub winner: String,
+}
+
+impl CachedStrategy {
+    /// Structural check before a cache hit is trusted: the strategy must be
+    /// an ordered partition of the layer's patch set into non-empty groups
+    /// within the group bound. A stale or hand-edited file that fails this
+    /// is treated as a miss by the planner.
+    pub fn validate_for(&self, layer: &ConvLayer, group_size: usize) -> bool {
+        if !self
+            .strategy
+            .groups
+            .iter()
+            .all(|g| !g.is_empty() && g.len() <= group_size)
+        {
+            return false;
+        }
+        let mut all: Vec<PatchId> =
+            self.strategy.groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        all == layer.all_patches().collect::<Vec<_>>()
+    }
+}
+
+/// On-disk strategy cache (one JSON file per key).
+#[derive(Debug, Clone)]
+pub struct StrategyCache {
+    dir: PathBuf,
+}
+
+impl StrategyCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: &Path) -> Result<StrategyCache, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("create cache dir {}: {e}", dir.display()))?;
+        Ok(StrategyCache { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up a key. Any malformed / mismatched file reads as a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedStrategy> {
+        let text = std::fs::read_to_string(self.dir.join(key.filename())).ok()?;
+        let v = json::parse(&text).ok()?;
+        if v.get("key").and_then(Json::as_str) != Some(key.canonical()) {
+            return None;
+        }
+        let winner = v.get("winner").and_then(Json::as_str)?.to_string();
+        let loaded_pixels = v.get("loaded_pixels").and_then(Json::as_u64)?;
+        let strategy = strategy::strategy_from_json_value(v.get("strategy")?).ok()?;
+        Some(CachedStrategy { strategy, loaded_pixels, winner })
+    }
+
+    /// Store a planning result under its key (overwrites).
+    pub fn put(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
+        let strategy_json = json::parse(&strategy::strategy_to_json(&entry.strategy))
+            .map_err(|e| format!("serialize strategy: {e}"))?;
+        let mut o = Json::obj();
+        o.set("key", key.canonical())
+            .set("winner", entry.winner.as_str())
+            .set("loaded_pixels", entry.loaded_pixels)
+            .set("strategy", strategy_json);
+        let path = self.dir.join(key.filename());
+        std::fs::write(&path, o.to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-cache-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_key(seed: u64) -> (ConvLayer, CacheKey) {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 2);
+        let key = CacheKey::new(&l, &acc, 2, 8, seed, 1_000, 2);
+        (l, key)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let cache = StrategyCache::open(&dir).unwrap();
+        let (l, key) = sample_key(1);
+        assert!(cache.get(&key).is_none());
+        let entry = CachedStrategy {
+            strategy: strategy::zigzag(&l, 2),
+            loaded_pixels: 57,
+            winner: "zigzag".to_string(),
+        };
+        cache.put(&key, &entry).unwrap();
+        assert_eq!(cache.get(&key), Some(entry));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_mismatch_is_a_miss() {
+        let dir = tmp_dir("mismatch");
+        let cache = StrategyCache::open(&dir).unwrap();
+        let (l, key) = sample_key(2);
+        let entry = CachedStrategy {
+            strategy: strategy::zigzag(&l, 2),
+            loaded_pixels: 57,
+            winner: "zigzag".to_string(),
+        };
+        cache.put(&key, &entry).unwrap();
+        // same filename, different stored key → treated as a miss
+        let text = std::fs::read_to_string(dir.join(key.filename())).unwrap();
+        let tampered = text.replace("v1|", "v0|");
+        std::fs::write(dir.join(key.filename()), tampered).unwrap();
+        assert!(cache.get(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn distinct_problems_get_distinct_files() {
+        let (_, a) = sample_key(1);
+        let (_, b) = sample_key(2);
+        assert_ne!(a.canonical(), b.canonical());
+        assert_ne!(a.filename(), b.filename());
+    }
+
+    #[test]
+    fn validate_for_rejects_broken_payloads() {
+        let l = ConvLayer::square(1, 6, 3, 1); // 16 patches
+        let good = CachedStrategy {
+            strategy: strategy::zigzag(&l, 2),
+            loaded_pixels: 1,
+            winner: "zigzag".to_string(),
+        };
+        assert!(good.validate_for(&l, 2));
+        // group over the bound
+        assert!(!good.validate_for(&l, 1));
+        // out-of-range patch id
+        let mut bad = good.clone();
+        bad.strategy.groups[0][0] = 999_999;
+        assert!(!bad.validate_for(&l, 2));
+        // missing coverage (drop one group)
+        let mut short = good.clone();
+        short.strategy.groups.pop();
+        assert!(!short.validate_for(&l, 2));
+    }
+
+    #[test]
+    fn corrupt_file_is_a_miss() {
+        let dir = tmp_dir("corrupt");
+        let cache = StrategyCache::open(&dir).unwrap();
+        let (_, key) = sample_key(3);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(key.filename()), "not json").unwrap();
+        assert!(cache.get(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

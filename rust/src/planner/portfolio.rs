@@ -1,0 +1,173 @@
+//! The per-layer portfolio race.
+//!
+//! Each layer is optimized by racing a fixed, ordered list of candidate
+//! generators ([`PortfolioEntry`]): the four §4.2 patch orderings, the greedy
+//! construction, and `anneal_starts` simulated-annealing lanes under
+//! consecutive seeds. Every lane is self-contained (no cross-lane data flow),
+//! so lanes can run on any thread in any order; the planner reduces the
+//! results by `(loaded pixels, entry index)` — never by completion order —
+//! which makes the race deterministic under arbitrary scheduling.
+
+use crate::conv::ConvLayer;
+use crate::optimizer::{grouping_loads, search};
+use crate::strategy::{self, GroupedStrategy, Ordering};
+
+/// One lane of the race.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PortfolioEntry {
+    /// One of the built-in patch orderings, chunked to the group bound.
+    Ordering(Ordering),
+    /// The greedy max-overlap construction ([`search::greedy`]).
+    Greedy,
+    /// Annealing polish ([`search::anneal`]) from the best *ordering* start
+    /// (recomputed in-lane so the lane stays independent; the greedy start
+    /// races in its own lane).
+    Anneal { seed: u64, iters: u64 },
+}
+
+impl PortfolioEntry {
+    /// Stable human-readable lane label (used in reports and cache files).
+    pub fn label(&self) -> String {
+        match self {
+            PortfolioEntry::Ordering(o) => o.as_str().to_string(),
+            PortfolioEntry::Greedy => "greedy".to_string(),
+            PortfolioEntry::Anneal { seed, .. } => format!("anneal-s{seed}"),
+        }
+    }
+}
+
+/// The fixed portfolio: Row-by-Row, ZigZag, Hilbert, diagonal, greedy, then
+/// `anneal_starts` annealing lanes seeded `seed`, `seed + 1`, ….
+///
+/// The order is part of the planner's determinism contract: ties in the
+/// race's reduction break toward the lower index in *this* list.
+pub fn portfolio_entries(seed: u64, iters: u64, anneal_starts: usize) -> Vec<PortfolioEntry> {
+    let mut entries: Vec<PortfolioEntry> = Ordering::all()
+        .into_iter()
+        .map(PortfolioEntry::Ordering)
+        .collect();
+    entries.push(PortfolioEntry::Greedy);
+    for i in 0..anneal_starts {
+        entries.push(PortfolioEntry::Anneal { seed: seed + i as u64, iters });
+    }
+    entries
+}
+
+/// Outcome of one lane.
+#[derive(Debug, Clone)]
+pub struct PortfolioResult {
+    pub strategy: GroupedStrategy,
+    /// The race's objective: total spatial input pixels loaded (Eq. 15's
+    /// bandwidth term divided by `t_l · C_in`).
+    pub loaded_pixels: u64,
+    pub label: String,
+    /// Annealing iterations this lane executed (0 for heuristic lanes).
+    pub anneal_iters: u64,
+}
+
+/// Run one lane to completion. Pure function of its arguments — safe to call
+/// from any worker thread.
+pub fn run_entry(
+    layer: &ConvLayer,
+    group_size: usize,
+    k: usize,
+    entry: &PortfolioEntry,
+) -> PortfolioResult {
+    let (strategy, anneal_iters) = match entry {
+        PortfolioEntry::Ordering(o) => (strategy::from_ordering(layer, *o, group_size), 0),
+        PortfolioEntry::Greedy => (
+            GroupedStrategy::new("greedy", search::greedy(layer, group_size, k)),
+            0,
+        ),
+        PortfolioEntry::Anneal { seed, iters } => {
+            let start = Ordering::all()
+                .into_iter()
+                .map(|o| {
+                    let s = strategy::from_ordering(layer, o, group_size);
+                    let d = grouping_loads(layer, &s.groups);
+                    (s, d)
+                })
+                .min_by_key(|&(_, d)| d)
+                .expect("at least one ordering");
+            let groups = search::anneal(layer, group_size, k, &start.0.groups, *iters, *seed);
+            (
+                GroupedStrategy::new(format!("anneal-s{seed}"), groups),
+                *iters,
+            )
+        }
+    };
+    let loaded_pixels = grouping_loads(layer, &strategy.groups);
+    PortfolioResult {
+        strategy,
+        loaded_pixels,
+        label: entry.label(),
+        anneal_iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portfolio_order_is_stable() {
+        let entries = portfolio_entries(100, 10, 2);
+        let labels: Vec<String> = entries.iter().map(PortfolioEntry::label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "row-by-row",
+                "zigzag",
+                "hilbert",
+                "diagonal",
+                "greedy",
+                "anneal-s100",
+                "anneal-s101"
+            ]
+        );
+    }
+
+    #[test]
+    fn every_lane_produces_a_valid_strategy() {
+        let l = ConvLayer::square(1, 7, 3, 1); // 25 patches
+        let g = 3;
+        let k = l.n_patches().div_ceil(g);
+        for entry in portfolio_entries(7, 500, 1) {
+            let r = run_entry(&l, g, k, &entry);
+            let mut all: Vec<u32> = r.strategy.groups.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, l.all_patches().collect::<Vec<_>>(), "{}", r.label);
+            assert!(r.strategy.groups.iter().all(|gr| gr.len() <= g));
+            assert_eq!(r.loaded_pixels, grouping_loads(&l, &r.strategy.groups));
+        }
+    }
+
+    /// The heuristic lanes must stay in lock-step with
+    /// [`crate::optimizer::heuristic_pool`] (same candidates, same order):
+    /// the optimizer's seed phase and the planner's race — and therefore the
+    /// cache keys and the determinism contract — all assume it.
+    #[test]
+    fn first_lanes_match_the_optimizer_heuristic_pool() {
+        let l = ConvLayer::square(1, 7, 3, 1); // 25 patches
+        let (g, k) = (3usize, 9usize);
+        let pool = crate::optimizer::heuristic_pool(&l, g, k);
+        let entries = portfolio_entries(1, 10, 0); // heuristic lanes only
+        assert_eq!(entries.len(), pool.len());
+        for (e, want) in entries.iter().zip(&pool) {
+            assert_eq!(&run_entry(&l, g, k, e).strategy, want, "{}", e.label());
+        }
+    }
+
+    #[test]
+    fn anneal_lane_is_deterministic() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let g = 2;
+        let k = l.n_patches().div_ceil(g);
+        let e = PortfolioEntry::Anneal { seed: 42, iters: 2_000 };
+        let a = run_entry(&l, g, k, &e);
+        let b = run_entry(&l, g, k, &e);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.loaded_pixels, b.loaded_pixels);
+        assert_eq!(a.anneal_iters, 2_000);
+    }
+}

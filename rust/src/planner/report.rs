@@ -1,0 +1,68 @@
+//! Plan rendering: the CLI table and a JSON form for tooling.
+
+use crate::planner::{LayerPlan, NetworkPlan};
+use crate::util::json::Json;
+
+/// Fixed-width per-layer table plus the end-to-end summary — the output of
+/// `convoffload plan-network`.
+pub fn format_plan_table(plan: &NetworkPlan) -> String {
+    let mut out = format!("network: {}\n\n", plan.network);
+    out.push_str(
+        " stage    | layer                                     |  g | steps | winner        | loaded px | duration | cache\n",
+    );
+    out.push_str(
+        "----------+-------------------------------------------+----+-------+---------------+-----------+----------+------\n",
+    );
+    for lp in &plan.layers {
+        let layer = lp.layer.to_string();
+        out.push_str(&format!(
+            " {:<8} | {:<41} | {:>2} | {:>5} | {:<13} | {:>9} | {:>8} | {}\n",
+            lp.stage,
+            layer,
+            lp.group_size,
+            lp.strategy.n_steps(),
+            lp.winner,
+            lp.loaded_pixels,
+            lp.duration,
+            if lp.cache_hit { "hit" } else { "miss" },
+        ));
+    }
+    out.push_str(&format!(
+        "\ntotal simulated duration: {} cycles  (peak on-chip occupancy {} elements)\n",
+        plan.total_duration, plan.peak_occupancy,
+    ));
+    out.push_str(&format!(
+        "cache: {} hits / {} misses  |  anneal iterations run: {}\n",
+        plan.cache_hits, plan.cache_misses, plan.anneal_iters_run,
+    ));
+    out
+}
+
+fn layer_to_json(lp: &LayerPlan) -> Json {
+    let mut o = Json::obj();
+    o.set("stage", lp.stage.as_str())
+        .set("layer", lp.layer.to_string())
+        .set("group_size", lp.group_size)
+        .set("n_steps", lp.strategy.n_steps())
+        .set("winner", lp.winner.as_str())
+        .set("loaded_pixels", lp.loaded_pixels)
+        .set("duration", lp.duration)
+        .set("cache_hit", lp.cache_hit);
+    o
+}
+
+/// Serialize a plan (without the raw group lists) for traces and tooling.
+pub fn plan_to_json(plan: &NetworkPlan) -> Json {
+    let mut o = Json::obj();
+    o.set("network", plan.network.as_str())
+        .set("total_duration", plan.total_duration)
+        .set("peak_occupancy", plan.peak_occupancy)
+        .set("cache_hits", plan.cache_hits)
+        .set("cache_misses", plan.cache_misses)
+        .set("anneal_iters_run", plan.anneal_iters_run)
+        .set(
+            "layers",
+            Json::Arr(plan.layers.iter().map(layer_to_json).collect()),
+        );
+    o
+}

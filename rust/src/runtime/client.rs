@@ -3,6 +3,10 @@
 use std::collections::HashMap;
 use std::path::Path;
 
+// Offline build: resolve `xla::` against the in-tree shim. Swap this alias
+// for the real `xla` crate dependency to restore the PJRT hardware path.
+use crate::runtime::xla_shim as xla;
+
 use crate::runtime::ArtifactManifest;
 
 /// Runtime failure.

@@ -9,6 +9,7 @@
 mod artifacts;
 mod backend;
 mod client;
+mod xla_shim;
 
 pub use artifacts::{ArtifactManifest, LayerVariant, StepVariant};
 pub use backend::PjrtBackend;

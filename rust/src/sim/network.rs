@@ -23,6 +23,10 @@ pub struct Stage {
     /// Apply 2×2 stride-2 mean pooling to this stage's output before the
     /// next stage (LeNet's subsampling).
     pub pool_after: bool,
+    /// Zero-pad the (pooled) output by this many pixels per spatial side
+    /// before the next stage — Remark-2 pre-padding for same-padded
+    /// successors (ResNet-8's 3×3 blocks).
+    pub pad_after: usize,
 }
 
 /// A feed-forward convolutional network to offload stage by stage.
@@ -52,14 +56,29 @@ pub struct StageReport {
     pub n_steps: u64,
 }
 
+/// Input dimensions the stage *after* `layer` sees, given the plumbing
+/// flags: conv output, optionally 2×2-pooled, then re-padded. The single
+/// source of truth for stage chaining (used by [`Network::push`] validation
+/// and the preset chain tests).
+pub fn next_stage_dims(
+    layer: &ConvLayer,
+    pool_after: bool,
+    pad_after: usize,
+) -> crate::tensor::Dims3 {
+    let mut dims = layer.output_dims();
+    if pool_after {
+        dims.h /= 2;
+        dims.w /= 2;
+    }
+    dims.h += 2 * pad_after;
+    dims.w += 2 * pad_after;
+    dims
+}
+
 impl Network {
     pub fn push(&mut self, stage: Stage) -> Result<(), String> {
         if let Some(prev) = self.stages.last() {
-            let mut dims = prev.layer.output_dims();
-            if prev.pool_after {
-                dims.h /= 2;
-                dims.w /= 2;
-            }
+            let dims = next_stage_dims(&prev.layer, prev.pool_after, prev.pad_after);
             let next = &stage.layer;
             if next.c_in != dims.c || next.h_in != dims.h || next.w_in != dims.w {
                 return Err(format!(
@@ -139,8 +158,14 @@ impl Network {
                 n_steps: r.totals.n_steps,
             });
             activation = r.output.expect("functional mode fills output");
+            let mut dims = stage.layer.output_dims();
             if stage.pool_after {
-                activation = mean_pool_2x2(&stage.layer.output_dims(), &activation);
+                activation = mean_pool_2x2(&dims, &activation);
+                dims.h /= 2;
+                dims.w /= 2;
+            }
+            if stage.pad_after > 0 {
+                activation = zero_pad(&dims, &activation, stage.pad_after);
             }
         }
         report.output = Some(activation);
@@ -165,6 +190,25 @@ pub fn mean_pool_2x2(dims: &crate::tensor::Dims3, x: &[f32]) -> Vec<f32> {
     out
 }
 
+/// Zero-pad a `[C, H, W]` tensor by `pad` pixels on each spatial side
+/// (Remark-2 pre-padding applied between stages).
+pub fn zero_pad(dims: &crate::tensor::Dims3, x: &[f32], pad: usize) -> Vec<f32> {
+    if pad == 0 {
+        return x.to_vec();
+    }
+    let (c, h, w) = (dims.c, dims.h, dims.w);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut out = vec![0f32; c * hp * wp];
+    for ci in 0..c {
+        for i in 0..h {
+            let src = (ci * h + i) * w;
+            let dst = (ci * hp + i + pad) * wp + pad;
+            out[dst..dst + w].copy_from_slice(&x[src..src + w]);
+        }
+    }
+    out
+}
+
 /// Build the LeNet-5 convolutional trunk (conv1 → pool → conv2) with the
 /// given per-stage strategies.
 pub fn lenet5_trunk(
@@ -180,6 +224,7 @@ pub fn lenet5_trunk(
         accelerator: Accelerator::for_group_size(&conv1, group),
         strategy: strategy_for(&conv1, group),
         pool_after: true,
+        pad_after: 0,
     })
     .unwrap();
     net.push(Stage {
@@ -188,6 +233,7 @@ pub fn lenet5_trunk(
         accelerator: Accelerator::for_group_size(&conv2, group),
         strategy: strategy_for(&conv2, group),
         pool_after: false,
+        pad_after: 0,
     })
     .unwrap();
     net
@@ -211,6 +257,7 @@ mod tests {
             accelerator: Accelerator::for_group_size(&conv1, 2),
             strategy: strategy::zigzag(&conv1, 2),
             pool_after: false,
+            pad_after: 0,
         })
         .unwrap();
         assert!(net
@@ -220,6 +267,7 @@ mod tests {
                 accelerator: Accelerator::for_group_size(&bad, 2),
                 strategy: strategy::zigzag(&bad, 2),
                 pool_after: false,
+                pad_after: 0,
             })
             .is_err());
     }
@@ -245,6 +293,7 @@ mod tests {
             accelerator: Accelerator::for_group_size(&conv1, 2),
             strategy: strategy::zigzag(&conv1, 2),
             pool_after: true,
+            pad_after: 0,
         })
         .unwrap();
         net.push(Stage {
@@ -253,6 +302,7 @@ mod tests {
             accelerator: Accelerator::for_group_size(&conv2, 1),
             strategy: strategy::s1_baseline(&conv2),
             pool_after: false,
+            pad_after: 0,
         })
         .unwrap();
 
@@ -273,6 +323,99 @@ mod tests {
         let a2 = reference::conv2d(&conv2, &pooled, &k2);
         let got = r.output.unwrap();
         assert!((got[0] - a2[0]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_pad_values() {
+        let dims = crate::tensor::Dims3::new(2, 2, 2);
+        let x: Vec<f32> = (1..=8).map(|v| v as f32).collect();
+        let out = zero_pad(&dims, &x, 1);
+        assert_eq!(out.len(), 2 * 4 * 4);
+        // channel 0: values 1..4 centred in a 4x4 zero frame
+        assert_eq!(out[5], 1.0);
+        assert_eq!(out[6], 2.0);
+        assert_eq!(out[9], 3.0);
+        assert_eq!(out[10], 4.0);
+        // channel 1 offset by 16
+        assert_eq!(out[16 + 5], 5.0);
+        assert_eq!(out[16 + 10], 8.0);
+        // frame stays zero
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[15], 0.0);
+        // pad = 0 is the identity
+        assert_eq!(zero_pad(&dims, &x, 0), x);
+    }
+
+    /// A ResNet-style same-padded chain: conv output is re-padded so the next
+    /// stage sees the same spatial size; the functional result must equal the
+    /// direct reference chain with explicit padding.
+    #[test]
+    fn padded_functional_chain() {
+        // 1x6x6 → conv 3x3 → 1x4x4 → pad 1 → 1x6x6 → conv 3x3 → 1x4x4
+        let conv = ConvLayer::new(1, 6, 6, 3, 3, 1, 1, 1).unwrap();
+        let mut net = Network::default();
+        net.push(Stage {
+            name: "c1".into(),
+            layer: conv,
+            accelerator: Accelerator::for_group_size(&conv, 2),
+            strategy: strategy::zigzag(&conv, 2),
+            pool_after: false,
+            pad_after: 1,
+        })
+        .unwrap();
+        net.push(Stage {
+            name: "c2".into(),
+            layer: conv,
+            accelerator: Accelerator::for_group_size(&conv, 2),
+            strategy: strategy::zigzag(&conv, 2),
+            pool_after: false,
+            pad_after: 0,
+        })
+        .unwrap();
+
+        let input = reference::synth_tensor(36, 5);
+        let k1 = reference::synth_tensor(conv.kernel_elements(), 6);
+        let k2 = reference::synth_tensor(conv.kernel_elements(), 7);
+        let mut backend = RustOracleBackend;
+        let r = net
+            .run_functional(&input, &[k1.clone(), k2.clone()], &mut backend)
+            .unwrap();
+        assert!(r.max_abs_error.unwrap() < 1e-4);
+
+        let a1 = reference::conv2d(&conv, &input, &k1);
+        let padded = zero_pad(&conv.output_dims(), &a1, 1);
+        let a2 = reference::conv2d(&conv, &padded, &k2);
+        let got = r.output.unwrap();
+        assert_eq!(got.len(), a2.len());
+        for (g, w) in got.iter().zip(&a2) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    /// Padding mismatches are caught at push time.
+    #[test]
+    fn pad_mismatch_rejected() {
+        let conv = ConvLayer::new(1, 6, 6, 3, 3, 1, 1, 1).unwrap();
+        let mut net = Network::default();
+        net.push(Stage {
+            name: "c1".into(),
+            layer: conv,
+            accelerator: Accelerator::for_group_size(&conv, 2),
+            strategy: strategy::zigzag(&conv, 2),
+            pool_after: false,
+            pad_after: 0, // produces 4x4, next expects 6x6
+        })
+        .unwrap();
+        assert!(net
+            .push(Stage {
+                name: "c2".into(),
+                layer: conv,
+                accelerator: Accelerator::for_group_size(&conv, 2),
+                strategy: strategy::zigzag(&conv, 2),
+                pool_after: false,
+                pad_after: 0,
+            })
+            .is_err());
     }
 
     #[test]

@@ -100,9 +100,16 @@ pub fn strategy_to_json(s: &GroupedStrategy) -> String {
     o.to_string_pretty()
 }
 
-/// Parse from JSON (inverse of [`strategy_to_json`]).
+/// Parse from JSON text (inverse of [`strategy_to_json`]).
 pub fn strategy_from_json(text: &str) -> Result<GroupedStrategy, String> {
     let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+    strategy_from_json_value(&v)
+}
+
+/// Parse from an already-parsed JSON value — avoids a re-serialize/re-parse
+/// round trip when the strategy is a subtree of a larger document (the
+/// planner's cache files).
+pub fn strategy_from_json_value(v: &Json) -> Result<GroupedStrategy, String> {
     let name = v
         .get("name")
         .and_then(Json::as_str)

@@ -17,7 +17,10 @@ mod validate;
 
 pub use grouped::{GroupedStrategy, WritebackPolicy};
 pub use multipass::{MultiPassReport, MultiPassStrategy};
-pub use io::{strategy_from_csv, strategy_from_json, strategy_to_csv, strategy_to_json};
+pub use io::{
+    strategy_from_csv, strategy_from_json, strategy_from_json_value, strategy_to_csv,
+    strategy_to_json,
+};
 pub use orderings::{
     diagonal_order, hilbert_order, order_to_groups, row_major_order, zigzag_order, Ordering,
 };
@@ -75,6 +78,19 @@ pub fn diagonal(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
     let order = diagonal_order(layer);
     let mut s = order_to_groups(layer, &order, group_size);
     s.name = format!("diagonal-g{group_size}");
+    s
+}
+
+/// Build a grouped strategy from any [`Ordering`] — the uniform entry point
+/// the planner's portfolio race uses to enumerate the ordering heuristics.
+pub fn from_ordering(
+    layer: &ConvLayer,
+    ordering: Ordering,
+    group_size: usize,
+) -> GroupedStrategy {
+    let order = ordering.order(layer);
+    let mut s = order_to_groups(layer, &order, group_size);
+    s.name = format!("{}-g{group_size}", ordering.as_str());
     s
 }
 

@@ -1,0 +1,40 @@
+//! Tiny stable hashing (FNV-1a, 64-bit) for content-addressed filenames.
+//!
+//! `std::hash` offers no stability guarantee across releases or processes;
+//! the strategy cache needs cache keys that survive both, so it hashes its
+//! canonical key strings with this fixed function instead.
+
+/// FNV-1a over a byte slice (64-bit offset basis / prime).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a rendered as a fixed-width lowercase hex string (filename-safe).
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Canonical FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn hex_is_stable_and_fixed_width() {
+        assert_eq!(fnv1a64_hex(b""), "cbf29ce484222325");
+        assert_eq!(fnv1a64_hex(b"a").len(), 16);
+        assert_ne!(fnv1a64_hex(b"key1"), fnv1a64_hex(b"key2"));
+    }
+}

@@ -12,11 +12,13 @@
 //!   “ILP solver CSV file”) and the figure outputs;
 //! * [`cli`] — a tiny declarative flag parser (clap substitute);
 //! * [`bench`] — a criterion-style measurement harness for `cargo bench`;
-//! * [`proptest`] — a property-testing helper (generators + shrinking-lite).
+//! * [`proptest`] — a property-testing helper (generators + shrinking-lite);
+//! * [`hash`] — stable FNV-1a hashing for the strategy cache's filenames.
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod proptest;

@@ -1,0 +1,161 @@
+//! Integration tests for the network-level planner (the three-layer
+//! contract): determinism under arbitrary thread schedules, cache hits with
+//! zero anneal work on re-planning, and the real network presets.
+
+use std::path::PathBuf;
+
+use convoffload::config::network_preset;
+use convoffload::planner::{AcceleratorSpec, NetworkPlanner, PlanOptions, StrategyCache};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convoffload-planner-it-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_options() -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 1_500,
+        anneal_starts: 2,
+        threads: 0,
+    }
+}
+
+/// Same seed ⇒ identical plan, regardless of how the portfolio race is
+/// scheduled over threads.
+#[test]
+fn lenet5_plan_is_deterministic_per_seed() {
+    let preset = network_preset("lenet5").unwrap();
+    let mut opts = quick_options();
+    opts.threads = 1;
+    let a = NetworkPlanner::new(opts.clone()).plan(&preset).unwrap();
+    opts.threads = 8;
+    let b = NetworkPlanner::new(opts).plan(&preset).unwrap();
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(x.winner, y.winner);
+        assert_eq!(x.loaded_pixels, y.loaded_pixels);
+    }
+    assert_eq!(a.total_duration, b.total_duration);
+}
+
+/// The acceptance contract of the strategy cache: a second `plan` call hits
+/// for every layer, performs zero anneal iterations, and returns the
+/// identical plan.
+#[test]
+fn replanning_hits_the_cache_with_zero_anneal_iterations() {
+    let dir = tmp_dir("cache-hit");
+    let preset = network_preset("lenet5").unwrap();
+    let planner =
+        NetworkPlanner::with_cache(quick_options(), StrategyCache::open(&dir).unwrap());
+    let first = planner.plan(&preset).unwrap();
+    assert_eq!(first.cache_misses, 2);
+    assert_eq!(first.cache_hits, 0);
+    assert!(first.anneal_iters_run > 0);
+
+    let second = planner.plan(&preset).unwrap();
+    assert_eq!(second.cache_hits, first.layers.len());
+    assert_eq!(second.cache_misses, 0);
+    assert_eq!(second.anneal_iters_run, 0, "cache hits must skip annealing");
+    for (x, y) in first.layers.iter().zip(&second.layers) {
+        assert_eq!(x.strategy, y.strategy);
+        assert_eq!(x.loaded_pixels, y.loaded_pixels);
+        assert!(y.cache_hit);
+    }
+    assert_eq!(first.total_duration, second.total_duration);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cache is on disk: a fresh planner instance over the same directory
+/// reuses the stored strategies.
+#[test]
+fn cache_persists_across_planner_instances() {
+    let dir = tmp_dir("cache-persist");
+    let preset = network_preset("lenet5").unwrap();
+    let first =
+        NetworkPlanner::with_cache(quick_options(), StrategyCache::open(&dir).unwrap())
+            .plan(&preset)
+            .unwrap();
+    let second =
+        NetworkPlanner::with_cache(quick_options(), StrategyCache::open(&dir).unwrap())
+            .plan(&preset)
+            .unwrap();
+    assert_eq!(second.cache_misses, 0);
+    assert_eq!(second.anneal_iters_run, 0);
+    for (x, y) in first.layers.iter().zip(&second.layers) {
+        assert_eq!(x.strategy, y.strategy);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A cache file whose stored objective no longer matches the recomputed one
+/// (stale writer, hand edit) must be re-raced, not trusted.
+#[test]
+fn stale_objective_in_cache_is_replanned() {
+    let dir = tmp_dir("cache-stale");
+    let preset = network_preset("lenet5").unwrap();
+    let planner =
+        NetworkPlanner::with_cache(quick_options(), StrategyCache::open(&dir).unwrap());
+    let first = planner.plan(&preset).unwrap();
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let p = f.unwrap().path();
+        let text = std::fs::read_to_string(&p).unwrap();
+        // prefix a digit: 2385 -> 92385 etc., keeping the JSON valid
+        let bumped = text.replace("\"loaded_pixels\": ", "\"loaded_pixels\": 9");
+        assert_ne!(bumped, text, "expected a loaded_pixels field in {p:?}");
+        std::fs::write(&p, bumped).unwrap();
+    }
+    let second = planner.plan(&preset).unwrap();
+    assert_eq!(second.cache_misses, 2, "stale objectives must re-race");
+    for (x, y) in first.layers.iter().zip(&second.layers) {
+        assert_eq!(x.strategy, y.strategy, "re-race is deterministic");
+        assert_eq!(x.loaded_pixels, y.loaded_pixels);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The cache key covers the portfolio configuration, so a different seed is
+/// a different problem — never served from a stale entry.
+#[test]
+fn changing_the_seed_misses_the_cache() {
+    let dir = tmp_dir("cache-seed");
+    let preset = network_preset("lenet5").unwrap();
+    let mut opts = quick_options();
+    NetworkPlanner::with_cache(opts.clone(), StrategyCache::open(&dir).unwrap())
+        .plan(&preset)
+        .unwrap();
+    opts.seed += 1;
+    let plan = NetworkPlanner::with_cache(opts, StrategyCache::open(&dir).unwrap())
+        .plan(&preset)
+        .unwrap();
+    assert_eq!(
+        plan.cache_misses, 2,
+        "different portfolio config must be a different key"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ResNet-8's two stage-2 convolutions share one geometry: the planner races
+/// it once and the twin rides the cache even within a single call.
+#[test]
+fn resnet8_shares_the_stage2_shape() {
+    let preset = network_preset("resnet8").unwrap();
+    let plan = NetworkPlanner::new(quick_options()).plan(&preset).unwrap();
+    assert_eq!(plan.layers.len(), 3);
+    assert_eq!(plan.cache_misses, 2);
+    assert_eq!(plan.cache_hits, 1);
+    assert_eq!(plan.layers[1].strategy, plan.layers[2].strategy);
+    assert!(plan.layers[2].cache_hit);
+    assert!(!plan.layers[0].cache_hit);
+    assert!(plan.total_duration > 0);
+    assert_eq!(
+        plan.total_duration,
+        plan.layers.iter().map(|l| l.duration).sum::<u64>()
+    );
+}
