@@ -1,13 +1,33 @@
-//! Planner benchmarks: portfolio lanes, cold whole-network planning, and the
-//! cached re-planning path (which must be dominated by cache-file reads).
+//! Planner benchmarks: portfolio lanes, per-layer anneal iteration
+//! throughput, cold whole-network planning, and the cached re-planning path
+//! (which must be dominated by cache-file reads).
+//!
+//! `--json [path]` (or `CONVOFFLOAD_BENCH_JSON=<path>`) additionally writes
+//! a machine-readable report — default `BENCH_planner.json` — with the raw
+//! measurements plus two derived sections:
+//!
+//! * `"anneal"` — per network layer, annealing iterations/second (the
+//!   delta-evaluation speedup metric tracked since PR 2; the acceptance bar
+//!   was ≥ 3× on the lenet5/conv1 geometry);
+//! * `"plan"`   — end-to-end `plan-network` wall time per network.
+//!
+//! CI runs `cargo bench --bench bench_planner -- --quick --json` and uploads
+//! the file as a workflow artifact, so the repo's perf trajectory is
+//! machine-readable from every commit (EXPERIMENTS.md §Perf).
 
 use convoffload::config::network_preset;
 use convoffload::config::presets::paper_sweep_layer;
+use convoffload::optimizer::search;
 use convoffload::planner::{
     portfolio_entries, run_entry, AcceleratorSpec, NetworkPlanner, PlanOptions,
     StrategyCache,
 };
-use convoffload::util::bench::BenchSuite;
+use convoffload::platform::Accelerator;
+use convoffload::strategy;
+use convoffload::util::bench::{
+    json_output_path, quick_mode, write_json_report, BenchSuite, Measurement,
+};
+use convoffload::util::json::Json;
 
 fn quick_plan_options() -> PlanOptions {
     PlanOptions {
@@ -19,7 +39,58 @@ fn quick_plan_options() -> PlanOptions {
     }
 }
 
+/// One anneal-throughput probe: a fixed-budget `search::anneal` run on a
+/// named layer geometry at group bound 4 (the §7.1 planning convention).
+struct AnnealProbe {
+    /// `network/layer` label as it appears in EXPERIMENTS.md tables.
+    layer_label: &'static str,
+    /// Bench name (also the measurement key in the JSON report).
+    bench_name: &'static str,
+    iters: u64,
+}
+
+fn anneal_probes(quick: bool) -> Vec<AnnealProbe> {
+    // Budgets keep one bench call in the tens-of-milliseconds range; the
+    // iterations/second figure is budget-independent.
+    let iters = if quick { 500 } else { 2_000 };
+    vec![
+        AnnealProbe {
+            layer_label: "lenet5/conv1",
+            bench_name: "anneal_iters_lenet5_conv1_g4",
+            iters,
+        },
+        AnnealProbe {
+            layer_label: "lenet5/conv2",
+            bench_name: "anneal_iters_lenet5_conv2_g4",
+            iters,
+        },
+        AnnealProbe {
+            layer_label: "resnet8/conv1",
+            bench_name: "anneal_iters_resnet8_conv1_g4",
+            iters,
+        },
+        AnnealProbe {
+            layer_label: "resnet8/conv2a",
+            bench_name: "anneal_iters_resnet8_conv2a_g4",
+            iters,
+        },
+    ]
+}
+
+/// Resolve a `network/layer` label to its preset `ConvLayer`.
+fn probe_layer(label: &str) -> convoffload::conv::ConvLayer {
+    let (net, stage) = label.split_once('/').expect("label is network/stage");
+    let preset = network_preset(net).expect("network preset");
+    preset
+        .stages
+        .iter()
+        .find(|s| s.name == stage)
+        .expect("stage in preset")
+        .layer
+}
+
 fn main() {
+    let quick = quick_mode();
     let mut suite = BenchSuite::new("planner");
 
     // Single lanes on the 12x12 sweep layer (100 patches, k = 25).
@@ -38,11 +109,36 @@ fn main() {
         });
     }
 
-    // Whole-network planning, cold — what one `plan-network lenet5` costs.
+    // Anneal iteration throughput on the real network-layer geometries —
+    // the delta-evaluation speedup metric. The MIP start is precomputed so
+    // the closure times the annealing loop itself (plus one eval build).
+    for probe in anneal_probes(quick) {
+        let layer = probe_layer(probe.layer_label);
+        let g = 4usize;
+        let acc = Accelerator::for_group_size(&layer, g);
+        let k = acc.k_min(&layer);
+        let start = strategy::zigzag(&layer, g).groups;
+        let iters = probe.iters;
+        suite.bench(probe.bench_name, move || {
+            search::anneal(&layer, g, k, &start, iters, 2026)
+                .iter()
+                .map(|gr| gr.len() as u64)
+                .sum()
+        });
+    }
+
+    // Whole-network planning, cold — what one `plan-network <net>` costs.
     {
         let preset = network_preset("lenet5").expect("preset");
         let planner = NetworkPlanner::new(quick_plan_options());
         suite.bench("plan_lenet5_cold_anneal2k", move || {
+            planner.plan(&preset).expect("plan").total_duration
+        });
+    }
+    {
+        let preset = network_preset("resnet8").expect("preset");
+        let planner = NetworkPlanner::new(quick_plan_options());
+        suite.bench("plan_resnet8_cold_anneal2k", move || {
             planner.plan(&preset).expect("plan").total_duration
         });
     }
@@ -65,5 +161,56 @@ fn main() {
         });
     }
 
-    suite.run();
+    let results = suite.run();
+
+    if let Some(path) = json_output_path("BENCH_planner.json") {
+        write_report(&path, &results, quick);
+    }
+}
+
+fn find<'a>(results: &'a [Measurement], name: &str) -> Option<&'a Measurement> {
+    results.iter().find(|m| m.name == name)
+}
+
+/// Compose the derived sections and write the JSON report.
+fn write_report(path: &std::path::Path, results: &[Measurement], quick: bool) {
+    let mut anneal_rows: Vec<Json> = Vec::new();
+    for probe in anneal_probes(quick) {
+        let Some(m) = find(results, probe.bench_name) else { continue };
+        let secs = m.median.as_secs_f64();
+        let iters_per_sec =
+            if secs > 0.0 { probe.iters as f64 / secs } else { 0.0 };
+        let layer = probe_layer(probe.layer_label);
+        let mut row = Json::obj();
+        row.set("layer", probe.layer_label)
+            .set("geometry", format!("{layer}"))
+            .set("group", 4u64)
+            .set("iters_per_call", probe.iters)
+            .set("median_ns", m.median.as_nanos() as u64)
+            .set("iters_per_sec", iters_per_sec);
+        anneal_rows.push(row);
+    }
+
+    let mut plan_rows: Vec<Json> = Vec::new();
+    for (net, bench_name) in [
+        ("lenet5", "plan_lenet5_cold_anneal2k"),
+        ("resnet8", "plan_resnet8_cold_anneal2k"),
+        ("lenet5-cached", "plan_lenet5_cached"),
+    ] {
+        let Some(m) = find(results, bench_name) else { continue };
+        let mut row = Json::obj();
+        row.set("network", net)
+            .set("median_ns", m.median.as_nanos() as u64)
+            .set("seconds", m.median.as_secs_f64());
+        plan_rows.push(row);
+    }
+
+    let mut extra = Json::obj();
+    extra
+        .set("anneal", Json::Arr(anneal_rows))
+        .set("plan", Json::Arr(plan_rows));
+    match write_json_report(path, "planner", results, extra) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("error: could not write {}: {e}", path.display()),
+    }
 }

@@ -185,13 +185,29 @@ impl ConvLayer {
         }
     }
 
+    /// Insert one patch's pixels into an existing set (word-masked row
+    /// ranges). Public so the optimizer's delta scoring can build candidate
+    /// footprints in reusable scratch buffers without intermediate sets.
     #[inline]
-    fn add_patch_pixels(&self, s: &mut PixelSet, id: PatchId) {
+    pub fn add_patch_pixels(&self, s: &mut PixelSet, id: PatchId) {
         let rect = self.patch_rect(id);
         for h in rect.h0..rect.h1 {
             let row = (h * self.w_in) as u32;
             s.insert_range(row + rect.w0 as u32, row + rect.w1 as u32);
         }
+    }
+
+    /// `|pix(id) ∩ set|` without materializing the patch's pixel set —
+    /// word-masked popcounts over the patch's row ranges (greedy hot path).
+    #[inline]
+    pub fn patch_pixels_in(&self, set: &PixelSet, id: PatchId) -> usize {
+        let rect = self.patch_rect(id);
+        let mut n = 0;
+        for h in rect.h0..rect.h1 {
+            let row = (h * self.w_in) as u32;
+            n += set.count_range(row + rect.w0 as u32, row + rect.w1 as u32);
+        }
+        n
     }
 
     /// Allocation-free check that a patch's entire footprint is contained in
@@ -296,6 +312,19 @@ mod tests {
         // adjacent patches overlap in 3x2 = 6 pixels → union = 9+9-6 = 12
         assert_eq!(l.group_pixels(&g).len(), 12);
         assert_eq!(l.patch_overlap(g[0], g[1]), 6);
+    }
+
+    #[test]
+    fn patch_pixels_in_matches_intersection() {
+        let l = ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 2).unwrap();
+        let resident = l.group_pixels(&[0, 1, 5]);
+        for id in l.all_patches() {
+            assert_eq!(
+                l.patch_pixels_in(&resident, id),
+                l.patch_pixels(id).intersection_len(&resident),
+                "patch {id}"
+            );
+        }
     }
 
     #[test]

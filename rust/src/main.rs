@@ -169,6 +169,7 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "seed", help: "polish RNG seed", takes_value: true, default: Some("2026") });
     specs.push(FlagSpec { name: "iters", help: "polish iterations", takes_value: true, default: Some("200000") });
+    specs.push(FlagSpec { name: "neighbor-bias", help: "probability of overlap-graph-guided anneal proposals (0 = legacy stream)", takes_value: true, default: Some("0") });
     specs.push(FlagSpec { name: "out", help: "write the strategy CSV here", takes_value: true, default: None });
     let args = cli::parse(argv, &specs)?;
     if args.get_bool("help") {
@@ -180,6 +181,7 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
         group_size: setup.group,
         seed: args.get_u64("seed")?.unwrap_or(2026),
         anneal_iters: args.get_u64("iters")?.unwrap_or(200_000),
+        neighbor_bias: args.get_f64("neighbor-bias")?.unwrap_or(0.0).clamp(0.0, 1.0),
         ..Default::default()
     });
     let res = opt.optimize(&setup.layer, &setup.acc);
@@ -203,6 +205,7 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "group", help: "per-layer group size bound", takes_value: true, default: Some("4") },
         FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
         FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
+        FlagSpec { name: "thorough", help: "3x the anneal budget (delta evaluation makes it ~the old wall time; changes results, opt-in)", takes_value: false, default: None },
         FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
         FlagSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: Some("0") },
         FlagSpec { name: "cache-dir", help: "strategy cache directory", takes_value: true, default: Some(".strategy-cache") },
@@ -234,12 +237,17 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
     let preset = network_preset(name).ok_or_else(|| {
         format!("unknown network '{name}' (see `convoffload plan-network --help`)")
     })?;
+    // `--thorough` spends the delta-evaluation speedup on search quality:
+    // 3× the per-lane budget at roughly the old wall time. It is opt-in
+    // because a different budget is a different (cache-keyed) problem —
+    // default plans stay bit-identical per seed across releases.
+    let budget_scale = if args.get_bool("thorough") { 3 } else { 1 };
     let options = PlanOptions {
         accelerator: AcceleratorSpec::PerLayerGroup(
             args.get_usize("group")?.unwrap_or(4).max(1),
         ),
         seed: args.get_u64("seed")?.unwrap_or(2026),
-        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000),
+        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000) * budget_scale,
         anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
         threads: args.get_usize("threads")?.unwrap_or(0),
     };

@@ -13,6 +13,10 @@
 //! * [`search`] — simulated-annealing local search over groupings, seeded
 //!   with the best heuristic (the paper's *MIP start*) and playing the role
 //!   of CPLEX's *solution polishing* genetic phase for large instances.
+//!   Moves are delta-evaluated through [`objective::GroupingEval`]'s
+//!   propose-score-commit protocol (rejected moves are free), and the
+//!   greedy construction scores candidates over the sparse patch-overlap
+//!   graph ([`overlap`]) instead of full pixel-set intersections.
 //!
 //! [`Optimizer`] is the facade the CLI/figure harness uses: it picks the
 //! strongest engine the instance size affords, exactly like the paper's
@@ -21,10 +25,13 @@
 pub mod exact;
 pub mod model_builder;
 pub mod objective;
+pub mod overlap;
 pub mod search;
 
 pub use model_builder::{build_s1_model, decode_solution, S1ModelInfo};
-pub use objective::{grouping_duration, grouping_loads, GroupingEval};
+pub use objective::{grouping_duration, grouping_loads, GroupEdit, GroupingEval};
+pub use overlap::OverlapGraph;
+pub use search::AnnealOptions;
 
 use std::time::Duration;
 
@@ -60,6 +67,11 @@ pub struct OptimizeOptions {
     pub exact_max_patches: usize,
     /// Wall-clock budget for the exact engine (falls back to polish).
     pub exact_budget: Duration,
+    /// Probability of steering an annealing proposal along the sparse
+    /// patch-overlap graph ([`search::AnnealOptions::neighbor_bias`]).
+    /// Any value > 0 changes the per-seed trajectory; the default 0.0
+    /// keeps results bit-identical to earlier releases.
+    pub neighbor_bias: f64,
 }
 
 impl Default for OptimizeOptions {
@@ -71,6 +83,7 @@ impl Default for OptimizeOptions {
             anneal_iters: 200_000,
             exact_max_patches: 12,
             exact_budget: Duration::from_secs(10),
+            neighbor_bias: 0.0,
         }
     }
 }
@@ -187,7 +200,15 @@ impl Optimizer {
         }
 
         // Polish phase (the paper's solution-polishing analogue).
-        let groups = search::anneal(layer, g, k, &seed.groups, o.anneal_iters, o.seed);
+        let groups = search::anneal_with(
+            layer,
+            g,
+            k,
+            &seed.groups,
+            o.anneal_iters,
+            o.seed,
+            &search::AnnealOptions { neighbor_bias: o.neighbor_bias },
+        );
         let duration = grouping_duration(layer, acc, &groups);
         let mut strategy = GroupedStrategy::new("opl-polished", groups);
         strategy.writeback = mip_start.writeback;

@@ -6,38 +6,174 @@
 //! symmetric, the total is `Σ_k |pix(g_k)| − Σ_k overlap(g_{k−1}, g_k)`:
 //! node weights (group footprints) plus a path over symmetric edge weights
 //! (consecutive-group overlaps). The search engines exploit exactly this
-//! decomposition for O(1)-ish move deltas.
+//! decomposition for O(1)/O(Δ) move deltas.
+//!
+//! # The delta-evaluation contract
+//!
+//! [`GroupingEval`] separates two identities that the old implementation
+//! conflated:
+//!
+//! * a **slot** owns a group's *contents* (its footprint and size) — slots
+//!   never move;
+//! * a **position** is a place in the visit *order* — the permutation
+//!   `order: position → slot` is the only thing order moves touch.
+//!
+//! Footprints depend on contents only, never on order, so the two
+//! order-permuting moves (`swap adjacent`, `segment reverse`) recompute
+//! **zero** footprints — only the 2–4 boundary overlap entries move, served
+//! by a lazy `(slot, slot)` pairwise-overlap cache that is invalidated per
+//! slot by generation counters when contents change. Content moves
+//! (relocate, patch swap) score against candidate footprints built in two
+//! reusable scratch buffers, and the scratch buffers are *swapped into*
+//! the evaluator on commit, so an accepted move never rebuilds what scoring
+//! already built and a rejected move costs nothing beyond its score.
+//!
+//! Every `score_*` method returns the **exact** integer objective delta the
+//! move would cause and stages the recomputed entries in `pending`;
+//! [`GroupingEval::commit`] applies them without recomputation. Scoring a
+//! new move discards the previous pending state, so reject = do nothing.
 
 use crate::conv::{ConvLayer, PatchId};
 use crate::platform::Accelerator;
 use crate::tensor::PixelSet;
 
-/// Cached evaluation state for a grouping.
+/// Pairwise-overlap cache entry: the overlap value together with the content
+/// generations of both slots at compute time (0 = never written).
+#[derive(Debug, Clone, Copy)]
+struct PairEntry {
+    gen_lo: u32,
+    gen_hi: u32,
+    val: u32,
+}
+
+const PAIR_EMPTY: PairEntry = PairEntry { gen_lo: 0, gen_hi: 0, val: 0 };
+
+/// Above this many `k × k` entries the pairwise cache is disabled (overlaps
+/// are recomputed on demand); keeps worst-case memory bounded for huge
+/// layers while every paper-scale instance (k ≤ 1024) stays cached.
+const PAIR_CACHE_MAX_ENTRIES: usize = 1 << 20;
+
+/// A staged (scored but not yet applied) move.
+#[derive(Debug, Clone)]
+enum Pending {
+    /// Nothing staged.
+    None,
+    /// Content edit of the groups at two positions; candidate footprints
+    /// live in the scratch buffers.
+    Edit2 {
+        pos_a: usize,
+        pos_b: usize,
+        new_size_a: usize,
+        new_size_b: usize,
+        /// `(edge position, new overlap value)`, `edges[..n_edges]` valid.
+        edges: [(usize, usize); 4],
+        n_edges: usize,
+        delta: i64,
+    },
+    /// Swap of adjacent positions `i`, `i+1` in the order.
+    SwapAdjacent {
+        i: usize,
+        edges: [(usize, usize); 2],
+        n_edges: usize,
+        delta: i64,
+    },
+    /// Reverse of the position segment `[a ..= b]`.
+    Reverse {
+        a: usize,
+        b: usize,
+        edges: [(usize, usize); 2],
+        n_edges: usize,
+        delta: i64,
+    },
+}
+
+/// An edit of one group's contents, described against its current patch
+/// list: optionally drop the element at `skip`, optionally append `add`.
+/// Relocate = (drop) on the source + (append) on the target; patch swap =
+/// (drop + append) on both. Expressing edits this way lets the evaluator
+/// build candidate footprints without the caller allocating edited lists.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupEdit<'a> {
+    /// The group's *current* patches.
+    pub patches: &'a [PatchId],
+    /// Index into `patches` to leave out, if any.
+    pub skip: Option<usize>,
+    /// Patch to add, if any.
+    pub add: Option<PatchId>,
+}
+
+/// Cached evaluation state for a grouping (see the module docs for the
+/// slot/position split and the delta-evaluation contract).
 #[derive(Debug, Clone)]
 pub struct GroupingEval {
-    /// Per-group spatial footprints.
-    pub footprints: Vec<PixelSet>,
-    /// Per-group footprint sizes (spatial pixels).
-    pub sizes: Vec<usize>,
-    /// `overlaps[k] = |pix(g_{k-1}) ∩ pix(g_k)|` (index 0 unused = 0).
-    pub overlaps: Vec<usize>,
+    /// Per-slot spatial footprints (content identity; order-invariant).
+    footprints: Vec<PixelSet>,
+    /// Per-slot footprint sizes in spatial pixels.
+    sizes: Vec<usize>,
+    /// Permutation: `order[position] = slot`.
+    order: Vec<u32>,
+    /// Inverse permutation: `pos_of[slot] = position`.
+    pos_of: Vec<u32>,
+    /// Position-indexed boundary overlaps:
+    /// `overlaps[p] = |pix(order[p-1]) ∩ pix(order[p])|`; index 0 unused.
+    overlaps: Vec<usize>,
     /// Running `Σ sizes − Σ overlaps`, maintained incrementally so the
     /// annealer's objective read is O(1) (§Perf, EXPERIMENTS.md).
     total: i64,
+    /// Per-slot content generation (starts at 1; bumped on every content
+    /// change) — validates pairwise cache entries.
+    gen: Vec<u32>,
+    /// Flat `k × k` pairwise-overlap cache (empty when disabled).
+    pair_cache: Vec<PairEntry>,
+    /// Scratch footprints for scoring content edits; swapped into
+    /// `footprints` on commit.
+    scratch_a: PixelSet,
+    scratch_b: PixelSet,
+    pending: Pending,
 }
 
 impl GroupingEval {
     pub fn new(layer: &ConvLayer, groups: &[Vec<PatchId>]) -> Self {
+        let k = groups.len();
         let footprints: Vec<PixelSet> =
             groups.iter().map(|g| layer.group_pixels(g)).collect();
         let sizes: Vec<usize> = footprints.iter().map(PixelSet::len).collect();
-        let mut overlaps = vec![0usize; groups.len()];
-        for k in 1..groups.len() {
-            overlaps[k] = footprints[k - 1].intersection_len(&footprints[k]);
+        let mut overlaps = vec![0usize; k];
+        for p in 1..k {
+            overlaps[p] = footprints[p - 1].intersection_len(&footprints[p]);
         }
         let total = sizes.iter().sum::<usize>() as i64
             - overlaps.iter().sum::<usize>() as i64;
-        GroupingEval { footprints, sizes, overlaps, total }
+        let pair_cache = if k * k <= PAIR_CACHE_MAX_ENTRIES {
+            vec![PAIR_EMPTY; k * k]
+        } else {
+            Vec::new()
+        };
+        let mut eval = GroupingEval {
+            footprints,
+            sizes,
+            order: (0..k as u32).collect(),
+            pos_of: (0..k as u32).collect(),
+            overlaps,
+            total,
+            gen: vec![1; k],
+            pair_cache,
+            scratch_a: PixelSet::empty(layer.n_pixels()),
+            scratch_b: PixelSet::empty(layer.n_pixels()),
+            pending: Pending::None,
+        };
+        // Seed the pairwise cache with the consecutive overlaps just
+        // computed (order = identity, so slot pair = position pair).
+        for p in 1..k {
+            let ov = eval.overlaps[p];
+            eval.pair_store(p - 1, p, ov);
+        }
+        eval
+    }
+
+    /// Number of groups.
+    pub fn n_groups(&self) -> usize {
+        self.order.len()
     }
 
     /// Total spatial pixels loaded: `Σ sizes − Σ overlaps` (O(1)).
@@ -50,26 +186,338 @@ impl GroupingEval {
         self.total as usize
     }
 
-    /// Recompute group `k`'s footprint after its contents changed, fixing
-    /// the adjacent overlap entries and the running total. Reuses the
-    /// footprint buffer (allocation-free; annealer hot path).
-    pub fn refresh_group(&mut self, layer: &ConvLayer, groups: &[Vec<PatchId>], k: usize) {
-        layer.group_pixels_into(&mut self.footprints[k], &groups[k]);
-        self.total -= self.sizes[k] as i64;
-        self.sizes[k] = self.footprints[k].len();
-        self.total += self.sizes[k] as i64;
-        if k > 0 {
-            self.total += self.overlaps[k] as i64;
-            self.overlaps[k] =
-                self.footprints[k - 1].intersection_len(&self.footprints[k]);
-            self.total -= self.overlaps[k] as i64;
+    /// Slot occupying `position`.
+    #[inline]
+    pub fn slot_at(&self, position: usize) -> usize {
+        self.order[position] as usize
+    }
+
+    /// Position currently holding `slot`.
+    #[inline]
+    pub fn position_of(&self, slot: usize) -> usize {
+        self.pos_of[slot] as usize
+    }
+
+    /// The permutation `position → slot`.
+    pub fn order(&self) -> &[u32] {
+        &self.order
+    }
+
+    /// Footprint of the group at `position`.
+    pub fn footprint_at(&self, position: usize) -> &PixelSet {
+        &self.footprints[self.order[position] as usize]
+    }
+
+    /// Footprint sizes in visit order (test/report convenience).
+    pub fn sizes_in_order(&self) -> Vec<usize> {
+        self.order.iter().map(|&s| self.sizes[s as usize]).collect()
+    }
+
+    /// Boundary overlaps in visit order (`[0]` unused = 0).
+    pub fn overlaps_in_order(&self) -> &[usize] {
+        &self.overlaps
+    }
+
+    // ------------------------------------------------------ pairwise cache
+
+    #[inline]
+    fn pair_idx(&self, slot_a: usize, slot_b: usize) -> usize {
+        let (lo, hi) = if slot_a <= slot_b { (slot_a, slot_b) } else { (slot_b, slot_a) };
+        lo * self.order.len() + hi
+    }
+
+    fn pair_store(&mut self, slot_a: usize, slot_b: usize, val: usize) {
+        if self.pair_cache.is_empty() {
+            return;
         }
-        if k + 1 < self.footprints.len() {
-            self.total += self.overlaps[k + 1] as i64;
-            self.overlaps[k + 1] =
-                self.footprints[k].intersection_len(&self.footprints[k + 1]);
-            self.total -= self.overlaps[k + 1] as i64;
+        let idx = self.pair_idx(slot_a, slot_b);
+        let (lo, hi) = if slot_a <= slot_b { (slot_a, slot_b) } else { (slot_b, slot_a) };
+        self.pair_cache[idx] = PairEntry {
+            gen_lo: self.gen[lo],
+            gen_hi: self.gen[hi],
+            val: val as u32,
+        };
+    }
+
+    /// `|pix(slot_a) ∩ pix(slot_b)|`, cached until either slot's contents
+    /// change. This is what makes the order-permuting moves footprint-free.
+    fn pair_overlap(&mut self, slot_a: usize, slot_b: usize) -> usize {
+        if !self.pair_cache.is_empty() {
+            let idx = self.pair_idx(slot_a, slot_b);
+            let (lo, hi) =
+                if slot_a <= slot_b { (slot_a, slot_b) } else { (slot_b, slot_a) };
+            let e = self.pair_cache[idx];
+            if e.gen_lo == self.gen[lo] && e.gen_hi == self.gen[hi] {
+                return e.val as usize;
+            }
         }
+        let val = self.footprints[slot_a].intersection_len(&self.footprints[slot_b]);
+        self.pair_store(slot_a, slot_b, val);
+        val
+    }
+
+    // ------------------------------------------------------- move scoring
+
+    /// Footprint a position would have under the staged edit.
+    #[inline]
+    fn staged_footprint(&self, position: usize, pos_a: usize, pos_b: usize) -> &PixelSet {
+        if position == pos_a {
+            &self.scratch_a
+        } else if position == pos_b {
+            &self.scratch_b
+        } else {
+            &self.footprints[self.order[position] as usize]
+        }
+    }
+
+    /// Score a simultaneous content edit of the groups at two distinct
+    /// positions: the exact objective delta, computed **without mutating**
+    /// any state the next reader observes. Commit with
+    /// [`GroupingEval::commit`]; to reject, simply don't.
+    pub fn score_edit2(
+        &mut self,
+        layer: &ConvLayer,
+        pos_a: usize,
+        edit_a: GroupEdit<'_>,
+        pos_b: usize,
+        edit_b: GroupEdit<'_>,
+    ) -> i64 {
+        debug_assert_ne!(pos_a, pos_b, "edit positions must differ");
+        let k = self.order.len();
+        let slot_a = self.order[pos_a] as usize;
+        let slot_b = self.order[pos_b] as usize;
+        build_edited_footprint(
+            layer,
+            &mut self.scratch_a,
+            &self.footprints[slot_a],
+            &edit_a,
+        );
+        build_edited_footprint(
+            layer,
+            &mut self.scratch_b,
+            &self.footprints[slot_b],
+            &edit_b,
+        );
+        let new_size_a = self.scratch_a.len();
+        let new_size_b = self.scratch_b.len();
+        let dsize = new_size_a as i64 - self.sizes[slot_a] as i64
+            + new_size_b as i64
+            - self.sizes[slot_b] as i64;
+
+        // Boundary edges incident to either touched position. Edge `e`
+        // connects positions `e-1` and `e` (valid for 1 ≤ e < k).
+        let mut cand = [pos_a, pos_a + 1, pos_b, pos_b + 1];
+        cand.sort_unstable();
+        let mut edges = [(0usize, 0usize); 4];
+        let mut n_edges = 0usize;
+        let mut dov = 0i64;
+        for (i, &e) in cand.iter().enumerate() {
+            if e == 0 || e >= k || (i > 0 && cand[i - 1] == e) {
+                continue;
+            }
+            let new_ov = self
+                .staged_footprint(e - 1, pos_a, pos_b)
+                .intersection_len(self.staged_footprint(e, pos_a, pos_b));
+            dov += new_ov as i64 - self.overlaps[e] as i64;
+            edges[n_edges] = (e, new_ov);
+            n_edges += 1;
+        }
+        let delta = dsize - dov;
+        self.pending = Pending::Edit2 {
+            pos_a,
+            pos_b,
+            new_size_a,
+            new_size_b,
+            edges,
+            n_edges,
+            delta,
+        };
+        delta
+    }
+
+    /// Score swapping the groups at positions `i` and `i+1`. Footprint-free:
+    /// the middle edge is unchanged (overlap is symmetric) and the ≤ 2 outer
+    /// edges come from the pairwise cache.
+    pub fn score_swap_adjacent(&mut self, i: usize) -> i64 {
+        let k = self.order.len();
+        debug_assert!(i + 1 < k);
+        let slot_l = self.order[i] as usize;
+        let slot_r = self.order[i + 1] as usize;
+        let mut edges = [(0usize, 0usize); 2];
+        let mut n_edges = 0usize;
+        let mut dov = 0i64;
+        if i >= 1 {
+            let outer = self.order[i - 1] as usize;
+            let old_ov = self.overlaps[i];
+            // The current edge value is a known (outer, slot_l) overlap —
+            // seed the cache so the reverse move can reuse it.
+            self.pair_store(outer, slot_l, old_ov);
+            let new_ov = self.pair_overlap(outer, slot_r);
+            dov += new_ov as i64 - old_ov as i64;
+            edges[n_edges] = (i, new_ov);
+            n_edges += 1;
+        }
+        if i + 2 < k {
+            let outer = self.order[i + 2] as usize;
+            let old_ov = self.overlaps[i + 2];
+            self.pair_store(slot_r, outer, old_ov);
+            let new_ov = self.pair_overlap(slot_l, outer);
+            dov += new_ov as i64 - old_ov as i64;
+            edges[n_edges] = (i + 2, new_ov);
+            n_edges += 1;
+        }
+        let delta = -dov; // sizes are untouched by order moves
+        self.pending = Pending::SwapAdjacent { i, edges, n_edges, delta };
+        delta
+    }
+
+    /// Score reversing the position segment `[a ..= b]` (2-opt). Footprint-
+    /// free: interior edges are the same unordered pairs in reverse order,
+    /// so only the ≤ 2 boundary edges are recomputed (cached).
+    pub fn score_reverse(&mut self, a: usize, b: usize) -> i64 {
+        let k = self.order.len();
+        debug_assert!(a < b && b < k);
+        let mut edges = [(0usize, 0usize); 2];
+        let mut n_edges = 0usize;
+        let mut dov = 0i64;
+        if a >= 1 {
+            let outer = self.order[a - 1] as usize;
+            let (slot_front, slot_back) =
+                (self.order[a] as usize, self.order[b] as usize);
+            let old_ov = self.overlaps[a];
+            self.pair_store(outer, slot_front, old_ov);
+            let new_ov = self.pair_overlap(outer, slot_back);
+            dov += new_ov as i64 - old_ov as i64;
+            edges[n_edges] = (a, new_ov);
+            n_edges += 1;
+        }
+        if b + 1 < k {
+            let outer = self.order[b + 1] as usize;
+            let (slot_front, slot_back) =
+                (self.order[a] as usize, self.order[b] as usize);
+            let old_ov = self.overlaps[b + 1];
+            self.pair_store(slot_back, outer, old_ov);
+            let new_ov = self.pair_overlap(slot_front, outer);
+            dov += new_ov as i64 - old_ov as i64;
+            edges[n_edges] = (b + 1, new_ov);
+            n_edges += 1;
+        }
+        let delta = -dov;
+        self.pending = Pending::Reverse { a, b, edges, n_edges, delta };
+        delta
+    }
+
+    /// Apply the staged move. The caller must mirror the same change on its
+    /// own group storage (see `search::State::commit`). Panics when nothing
+    /// is staged.
+    pub fn commit(&mut self) {
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => panic!("GroupingEval::commit without a scored move"),
+            Pending::Edit2 {
+                pos_a,
+                pos_b,
+                new_size_a,
+                new_size_b,
+                edges,
+                n_edges,
+                delta,
+            } => {
+                let slot_a = self.order[pos_a] as usize;
+                let slot_b = self.order[pos_b] as usize;
+                // The candidate footprints become current; the old ones
+                // become scratch for the next score.
+                std::mem::swap(&mut self.scratch_a, &mut self.footprints[slot_a]);
+                std::mem::swap(&mut self.scratch_b, &mut self.footprints[slot_b]);
+                self.sizes[slot_a] = new_size_a;
+                self.sizes[slot_b] = new_size_b;
+                self.gen[slot_a] = self.gen[slot_a].wrapping_add(1);
+                self.gen[slot_b] = self.gen[slot_b].wrapping_add(1);
+                for &(e, ov) in &edges[..n_edges] {
+                    self.overlaps[e] = ov;
+                }
+                self.total += delta;
+            }
+            Pending::SwapAdjacent { i, edges, n_edges, delta } => {
+                self.order.swap(i, i + 1);
+                self.pos_of[self.order[i] as usize] = i as u32;
+                self.pos_of[self.order[i + 1] as usize] = (i + 1) as u32;
+                for &(e, ov) in &edges[..n_edges] {
+                    self.overlaps[e] = ov;
+                }
+                self.total += delta;
+            }
+            Pending::Reverse { a, b, edges, n_edges, delta } => {
+                self.order[a..=b].reverse();
+                for p in a..=b {
+                    self.pos_of[self.order[p] as usize] = p as u32;
+                }
+                // Interior edges are the same unordered pairs visited
+                // backwards: new_overlaps[e] = old_overlaps[a + b + 1 − e].
+                self.overlaps[a + 1..=b].reverse();
+                for &(e, ov) in &edges[..n_edges] {
+                    self.overlaps[e] = ov;
+                }
+                self.total += delta;
+            }
+        }
+    }
+
+    /// Recompute the footprint of the group at `position` after its contents
+    /// changed externally, fixing the adjacent overlap entries and the
+    /// running total. `groups` is the full grouping in **visit order** (the
+    /// legacy protocol; the annealer uses `score_*` + `commit` instead).
+    pub fn refresh_group(
+        &mut self,
+        layer: &ConvLayer,
+        groups: &[Vec<PatchId>],
+        position: usize,
+    ) {
+        self.pending = Pending::None; // anything staged is now stale
+        let slot = self.order[position] as usize;
+        layer.group_pixels_into(&mut self.footprints[slot], &groups[position]);
+        self.gen[slot] = self.gen[slot].wrapping_add(1);
+        self.total -= self.sizes[slot] as i64;
+        self.sizes[slot] = self.footprints[slot].len();
+        self.total += self.sizes[slot] as i64;
+        if position > 0 {
+            let prev = self.order[position - 1] as usize;
+            self.total += self.overlaps[position] as i64;
+            self.overlaps[position] =
+                self.footprints[prev].intersection_len(&self.footprints[slot]);
+            self.total -= self.overlaps[position] as i64;
+        }
+        if position + 1 < self.order.len() {
+            let next = self.order[position + 1] as usize;
+            self.total += self.overlaps[position + 1] as i64;
+            self.overlaps[position + 1] =
+                self.footprints[slot].intersection_len(&self.footprints[next]);
+            self.total -= self.overlaps[position + 1] as i64;
+        }
+    }
+}
+
+/// Build the footprint a group would have under `edit`, into `out`.
+/// Pure additions copy the current footprint and extend it (word copy +
+/// one patch); removals rebuild from the edited patch list.
+fn build_edited_footprint(
+    layer: &ConvLayer,
+    out: &mut PixelSet,
+    current: &PixelSet,
+    edit: &GroupEdit<'_>,
+) {
+    match edit.skip {
+        None => out.copy_from(current),
+        Some(skip) => {
+            out.clear();
+            for (i, &p) in edit.patches.iter().enumerate() {
+                if i != skip {
+                    layer.add_patch_pixels(out, p);
+                }
+            }
+        }
+    }
+    if let Some(p) = edit.add {
+        layer.add_patch_pixels(out, p);
     }
 }
 
@@ -141,6 +589,21 @@ mod tests {
         assert_eq!(dur, px * 2 * acc.t_l + n * acc.t_acc); // t_w = 0
     }
 
+    /// Materialize the eval's current grouping in visit order from a
+    /// slot-indexed group list (what `search::State` stores).
+    fn in_order(eval: &GroupingEval, slots: &[Vec<PatchId>]) -> Vec<Vec<PatchId>> {
+        eval.order().iter().map(|&s| slots[s as usize].clone()).collect()
+    }
+
+    /// Incremental state must match a from-scratch rebuild.
+    fn assert_matches_fresh(layer: &ConvLayer, eval: &GroupingEval, slots: &[Vec<PatchId>]) {
+        let groups = in_order(eval, slots);
+        let fresh = GroupingEval::new(layer, &groups);
+        assert_eq!(eval.sizes_in_order(), fresh.sizes_in_order());
+        assert_eq!(eval.overlaps_in_order(), fresh.overlaps_in_order());
+        assert_eq!(eval.loaded_pixels(), fresh.loaded_pixels());
+    }
+
     #[test]
     fn refresh_group_is_consistent() {
         let l = ConvLayer::square(1, 6, 3, 1);
@@ -153,8 +616,152 @@ mod tests {
         eval.refresh_group(&l, &groups, 0);
         eval.refresh_group(&l, &groups, 3);
         let fresh = GroupingEval::new(&l, &groups);
-        assert_eq!(eval.sizes, fresh.sizes);
-        assert_eq!(eval.overlaps, fresh.overlaps);
+        assert_eq!(eval.sizes_in_order(), fresh.sizes_in_order());
+        assert_eq!(eval.overlaps_in_order(), fresh.overlaps_in_order());
         assert_eq!(eval.loaded_pixels(), fresh.loaded_pixels());
+    }
+
+    /// score → commit must land exactly on the from-scratch state, and the
+    /// returned delta must equal the observed objective change (relocate).
+    #[test]
+    fn score_edit2_relocate_matches_rebuild() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let mut slots = strategy::row_by_row(&l, 2).groups;
+        let mut eval = GroupingEval::new(&l, &slots);
+        let before = eval.loaded_pixels() as i64;
+        // relocate slots[0]'s last patch into slots[5]
+        let p = *slots[0].last().unwrap();
+        let skip = slots[0].len() - 1;
+        let delta = eval.score_edit2(
+            &l,
+            0,
+            GroupEdit { patches: &slots[0], skip: Some(skip), add: None },
+            5,
+            GroupEdit { patches: &slots[5], skip: None, add: Some(p) },
+        );
+        // nothing observable changed before commit
+        assert_eq!(eval.loaded_pixels() as i64, before);
+        eval.commit();
+        slots[0].pop();
+        slots[5].push(p);
+        assert_eq!(eval.loaded_pixels() as i64, before + delta);
+        assert_matches_fresh(&l, &eval, &slots);
+    }
+
+    /// Same contract for a patch swap between adjacent positions (the case
+    /// where both staged footprints meet at one shared edge).
+    #[test]
+    fn score_edit2_swap_between_adjacent_positions() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let mut slots = strategy::zigzag(&l, 2).groups;
+        let mut eval = GroupingEval::new(&l, &slots);
+        let before = eval.loaded_pixels() as i64;
+        let (pa, pb) = (slots[2][0], slots[3][1]);
+        let delta = eval.score_edit2(
+            &l,
+            2,
+            GroupEdit { patches: &slots[2], skip: Some(0), add: Some(pb) },
+            3,
+            GroupEdit { patches: &slots[3], skip: Some(1), add: Some(pa) },
+        );
+        eval.commit();
+        slots[2][0] = pb;
+        slots[3][1] = pa;
+        assert_eq!(eval.loaded_pixels() as i64, before + delta);
+        assert_matches_fresh(&l, &eval, &slots);
+    }
+
+    /// Order moves must be footprint-free *and* exact: swap-adjacent and
+    /// segment-reverse through the permutation layer land on the
+    /// from-scratch state of the permuted grouping.
+    #[test]
+    fn order_moves_match_rebuild() {
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let slots = strategy::row_by_row(&l, 3).groups;
+        let k = slots.len();
+        assert!(k >= 5, "need enough groups to exercise interior segments");
+        let mut eval = GroupingEval::new(&l, &slots);
+
+        let before = eval.loaded_pixels() as i64;
+        let d1 = eval.score_swap_adjacent(0); // boundary at the front
+        eval.commit();
+        assert_eq!(eval.loaded_pixels() as i64, before + d1);
+        assert_matches_fresh(&l, &eval, &slots);
+
+        let before = eval.loaded_pixels() as i64;
+        let d2 = eval.score_swap_adjacent(k - 2); // boundary at the back
+        eval.commit();
+        assert_eq!(eval.loaded_pixels() as i64, before + d2);
+        assert_matches_fresh(&l, &eval, &slots);
+
+        let before = eval.loaded_pixels() as i64;
+        let d3 = eval.score_reverse(1, k - 2); // interior segment
+        eval.commit();
+        assert_eq!(eval.loaded_pixels() as i64, before + d3);
+        assert_matches_fresh(&l, &eval, &slots);
+
+        let before = eval.loaded_pixels() as i64;
+        let d4 = eval.score_reverse(0, k - 1); // whole order
+        eval.commit();
+        assert_eq!(eval.loaded_pixels() as i64, before + d4);
+        assert_matches_fresh(&l, &eval, &slots);
+    }
+
+    /// Scoring without committing is reject-for-free: repeated scored-and-
+    /// dropped moves leave the evaluator bit-identical.
+    #[test]
+    fn uncommitted_scores_do_not_mutate() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let slots = strategy::row_by_row(&l, 2).groups;
+        let mut eval = GroupingEval::new(&l, &slots);
+        let sizes0 = eval.sizes_in_order();
+        let overlaps0 = eval.overlaps_in_order().to_vec();
+        let total0 = eval.loaded_pixels();
+        let p = slots[1][0];
+        for _ in 0..10 {
+            let _ = eval.score_edit2(
+                &l,
+                1,
+                GroupEdit { patches: &slots[1], skip: Some(0), add: None },
+                4,
+                GroupEdit { patches: &slots[4], skip: None, add: Some(p) },
+            );
+            let _ = eval.score_swap_adjacent(2);
+            let _ = eval.score_reverse(0, 3);
+        }
+        assert_eq!(eval.sizes_in_order(), sizes0);
+        assert_eq!(eval.overlaps_in_order(), &overlaps0[..]);
+        assert_eq!(eval.loaded_pixels(), total0);
+        assert_matches_fresh(&l, &eval, &slots);
+    }
+
+    /// The pairwise cache must never serve stale values after a content
+    /// change (generation invalidation).
+    #[test]
+    fn pair_cache_invalidates_on_content_change() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let mut slots = strategy::row_by_row(&l, 2).groups;
+        let mut eval = GroupingEval::new(&l, &slots);
+        // Warm the cache on the (0, 2) pair via a reverse score.
+        let _ = eval.score_reverse(0, 2);
+        // Change slot 2's contents (relocate a patch from 2 into 5)…
+        let p = slots[2][0];
+        let d = eval.score_edit2(
+            &l,
+            2,
+            GroupEdit { patches: &slots[2], skip: Some(0), add: None },
+            5,
+            GroupEdit { patches: &slots[5], skip: None, add: Some(p) },
+        );
+        eval.commit();
+        slots[2].remove(0);
+        slots[5].push(p);
+        let _ = d;
+        // …then a reverse touching slot 2 again must match from-scratch.
+        let before = eval.loaded_pixels() as i64;
+        let d2 = eval.score_reverse(0, 2);
+        eval.commit();
+        assert_eq!(eval.loaded_pixels() as i64, before + d2);
+        assert_matches_fresh(&l, &eval, &slots);
     }
 }

@@ -1,0 +1,192 @@
+//! Sparse patch-overlap graph.
+//!
+//! Two patches share input pixels iff their receptive-field rectangles
+//! intersect, and a patch's rectangle only reaches a bounded neighborhood of
+//! output coordinates: `P_{i,j}` and `P_{i',j'}` overlap exactly when
+//! `|i − i'| · s_h < H_K` and `|j − j'| · s_w < W_K` (Definition 10). The
+//! overlap size is then analytic — `(H_K − |Δi|·s_h) · (W_K − |Δj|·s_w)`
+//! pixels — so the whole graph is O(|X| · deg) to build with **zero** pixel-set
+//! operations, and `deg ≤ (2⌈H_K/s_h⌉ − 1)(2⌈W_K/s_w⌉ − 1) − 1` is a small
+//! constant (24 for the paper's 3×3 stride-1 layers).
+//!
+//! The optimizer uses the graph two ways:
+//! * the greedy construction scores only a new patch's neighbors instead of
+//!   intersecting full `PixelSet`s against every unassigned patch
+//!   (O(n²·pixels/64) → O(n² integer scan + n·deg) — see
+//!   [`crate::optimizer::search::greedy`]);
+//! * the annealer's optional neighbor-biased proposals
+//!   ([`crate::optimizer::search::AnnealOptions`]) draw relocation targets
+//!   from a patch's neighborhood, where moves are most likely to pay off.
+
+use crate::conv::{ConvLayer, PatchId};
+
+/// Compressed-sparse-row adjacency of spatially-overlapping patches with
+/// cached pairwise overlap sizes.
+#[derive(Debug, Clone)]
+pub struct OverlapGraph {
+    /// CSR row offsets, `n_patches + 1` entries.
+    offsets: Vec<u32>,
+    /// Concatenated `(neighbor id, overlap pixels)` rows; each row is sorted
+    /// by neighbor id (the build order is lexicographic in `(Δi, Δj)`, which
+    /// is id-monotone).
+    neighbors: Vec<(PatchId, u32)>,
+}
+
+impl OverlapGraph {
+    /// Build the graph for a layer. `O(|X| · deg)`, no pixel-set operations.
+    pub fn build(layer: &ConvLayer) -> Self {
+        let h_out = layer.h_out();
+        let w_out = layer.w_out();
+        let n = h_out * w_out;
+        // Largest output-coordinate distance at which rectangles still meet.
+        let dh_max = (layer.h_k - 1) / layer.s_h;
+        let dw_max = (layer.w_k - 1) / layer.s_w;
+        let max_deg = (2 * dh_max + 1) * (2 * dw_max + 1) - 1;
+
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut neighbors = Vec::with_capacity(n * max_deg);
+        offsets.push(0u32);
+        for i in 0..h_out {
+            for j in 0..w_out {
+                for di in -(dh_max as isize)..=dh_max as isize {
+                    let ni = i as isize + di;
+                    if ni < 0 || ni as usize >= h_out {
+                        continue;
+                    }
+                    let rows = layer.h_k - di.unsigned_abs() * layer.s_h;
+                    for dj in -(dw_max as isize)..=dw_max as isize {
+                        if di == 0 && dj == 0 {
+                            continue;
+                        }
+                        let nj = j as isize + dj;
+                        if nj < 0 || nj as usize >= w_out {
+                            continue;
+                        }
+                        let cols = layer.w_k - dj.unsigned_abs() * layer.s_w;
+                        let id = (ni as usize * w_out + nj as usize) as PatchId;
+                        neighbors.push((id, (rows * cols) as u32));
+                    }
+                }
+                offsets.push(neighbors.len() as u32);
+            }
+        }
+        OverlapGraph { offsets, neighbors }
+    }
+
+    /// Number of patches (graph nodes).
+    pub fn n_patches(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Neighbors of `p` with their overlap sizes, sorted by neighbor id.
+    #[inline]
+    pub fn neighbors(&self, p: PatchId) -> &[(PatchId, u32)] {
+        let (a, b) = (self.offsets[p as usize], self.offsets[p as usize + 1]);
+        &self.neighbors[a as usize..b as usize]
+    }
+
+    /// Degree of `p`.
+    pub fn degree(&self, p: PatchId) -> usize {
+        self.neighbors(p).len()
+    }
+
+    /// Largest degree in the graph (the `deg` of the complexity bounds).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_patches() as PatchId)
+            .map(|p| self.degree(p))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total directed edge count.
+    pub fn edge_count(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Pairwise overlap in pixels; 0 when the patches are disjoint.
+    /// Binary search in `a`'s sorted row — `O(log deg)`.
+    pub fn overlap(&self, a: PatchId, b: PatchId) -> usize {
+        let row = self.neighbors(a);
+        match row.binary_search_by_key(&b, |&(id, _)| id) {
+            Ok(idx) => row[idx].1 as usize,
+            Err(_) => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_against_rects(layer: &ConvLayer) {
+        let g = OverlapGraph::build(layer);
+        assert_eq!(g.n_patches(), layer.n_patches());
+        for a in layer.all_patches() {
+            // Every listed edge matches the rectangle intersection…
+            let mut prev_id = None;
+            for &(b, size) in g.neighbors(a) {
+                assert_ne!(a, b, "no self loops");
+                assert_eq!(size as usize, layer.patch_overlap(a, b), "{a}-{b}");
+                assert!(size > 0, "{a}-{b} listed but disjoint");
+                if let Some(p) = prev_id {
+                    assert!(p < b, "row of {a} not sorted");
+                }
+                prev_id = Some(b);
+            }
+            // …and every non-listed pair is disjoint.
+            for b in layer.all_patches() {
+                if a != b && g.overlap(a, b) == 0 {
+                    assert_eq!(layer.patch_overlap(a, b), 0, "{a}-{b} missing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_rect_intersection_unit_stride() {
+        check_against_rects(&ConvLayer::square(1, 7, 3, 1));
+        check_against_rects(&ConvLayer::new(2, 5, 8, 3, 3, 2, 1, 1).unwrap());
+        // 5×5 kernels: wider neighborhoods (LeNet family).
+        check_against_rects(&ConvLayer::new(1, 12, 12, 5, 5, 1, 1, 1).unwrap());
+    }
+
+    #[test]
+    fn matches_rect_intersection_strided() {
+        // stride 2: overlap shrinks by 2 pixels per step of distance
+        check_against_rects(&ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap());
+        // stride 3 with 3×3 kernels: fully disjoint patches, empty graph
+        let l = ConvLayer::new(1, 9, 9, 3, 3, 1, 3, 3).unwrap();
+        let g = OverlapGraph::build(&l);
+        assert_eq!(g.edge_count(), 0);
+        check_against_rects(&l);
+        // anisotropic strides
+        check_against_rects(&ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 1).unwrap());
+    }
+
+    #[test]
+    fn degree_is_bounded_and_symmetric() {
+        let l = ConvLayer::square(1, 8, 3, 1); // 6×6 patches, 3×3 stride-1
+        let g = OverlapGraph::build(&l);
+        // interior patch: full 5×5 neighborhood minus itself
+        assert_eq!(g.max_degree(), 24);
+        // corner patch 0: 3×3 neighborhood minus itself
+        assert_eq!(g.degree(0), 8);
+        for a in l.all_patches() {
+            for &(b, size) in g.neighbors(a) {
+                assert_eq!(g.overlap(b, a), size as usize, "symmetry {a}-{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_sizes_decay_with_distance() {
+        let l = ConvLayer::square(1, 10, 3, 1); // 8×8 patches
+        let g = OverlapGraph::build(&l);
+        let center = l.patch_id(4, 4);
+        assert_eq!(g.overlap(center, l.patch_id(4, 5)), 6); // 3×2
+        assert_eq!(g.overlap(center, l.patch_id(5, 5)), 4); // 2×2
+        assert_eq!(g.overlap(center, l.patch_id(4, 6)), 3); // 3×1
+        assert_eq!(g.overlap(center, l.patch_id(6, 6)), 1); // 1×1
+        assert_eq!(g.overlap(center, l.patch_id(4, 7)), 0); // beyond reach
+    }
+}

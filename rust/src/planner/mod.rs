@@ -55,7 +55,11 @@ pub struct PlanOptions {
     pub accelerator: AcceleratorSpec,
     /// Base RNG seed; annealing lane `i` uses `seed + i`.
     pub seed: u64,
-    /// Iteration budget per annealing lane.
+    /// Iteration budget per annealing lane. Since the delta-evaluation
+    /// rewrite an iteration is ≥ 3× cheaper, so this budget can be scaled
+    /// up at equal wall time (`plan-network --thorough`); the default stays
+    /// put because the budget is part of the cache key and the per-seed
+    /// bit-identity contract.
     pub anneal_iters: u64,
     /// Number of annealing lanes in the portfolio.
     pub anneal_starts: usize,

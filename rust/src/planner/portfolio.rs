@@ -7,6 +7,14 @@
 //! so lanes can run on any thread in any order; the planner reduces the
 //! results by `(loaded pixels, entry index)` — never by completion order —
 //! which makes the race deterministic under arbitrary scheduling.
+//!
+//! The greedy and annealing lanes run on the delta-evaluated search engine
+//! (`optimizer::search` propose-score-commit over the order-invariant
+//! [`crate::optimizer::GroupingEval`]): far cheaper per iteration, with RNG
+//! streams and trajectories bit-identical to the pre-delta implementation —
+//! the same `(seed, iters)` still yields the same strategy, so cached plans
+//! and the determinism contract survive the engine swap. Spend the speedup
+//! on search quality by raising `iters` (`plan-network --thorough` = 3×).
 
 use crate::conv::ConvLayer;
 use crate::optimizer::{grouping_loads, search};

@@ -112,6 +112,38 @@ impl PixelSet {
         self.words[ws + 1..we].iter().all(|&w| w == !0)
     }
 
+    /// `|self ∩ [start, end)|` — population count over a contiguous id range,
+    /// word-masked like [`PixelSet::insert_range`]. The optimizer's greedy
+    /// construction uses it to intersect a patch rectangle row against a set
+    /// without materializing the patch's own `PixelSet`.
+    #[inline]
+    pub fn count_range(&self, start: u32, end: u32) -> usize {
+        debug_assert!(end as usize <= self.nbits && start <= end);
+        if start == end {
+            return 0;
+        }
+        let (ws, we) = (start as usize / 64, (end as usize - 1) / 64);
+        let lo_mask = !0u64 << (start % 64);
+        let hi_mask = !0u64 >> (63 - ((end - 1) % 64));
+        if ws == we {
+            return (self.words[ws] & lo_mask & hi_mask).count_ones() as usize;
+        }
+        let mut n = (self.words[ws] & lo_mask).count_ones() as usize;
+        for &w in &self.words[ws + 1..we] {
+            n += w.count_ones() as usize;
+        }
+        n + (self.words[we] & hi_mask).count_ones() as usize
+    }
+
+    /// Allocation-free clone: overwrite `self` with `other`'s contents.
+    /// (`Clone::clone_from` would re-allocate the word vector; the annealer's
+    /// scoring scratch buffers must not.)
+    #[inline]
+    pub fn copy_from(&mut self, other: &PixelSet) {
+        self.check_same_universe(other);
+        self.words.copy_from_slice(&other.words);
+    }
+
     /// Cardinality `|·|`.
     #[inline]
     pub fn len(&self) -> usize {
@@ -353,6 +385,87 @@ mod tests {
                 assert!(fast.contains(i));
             }
         }
+    }
+
+    /// Satellite coverage: every word-boundary shape of `insert_range` —
+    /// `start % 64 == 0`, `end % 64 == 0`, both, single-word interior,
+    /// single-bit, empty at a boundary, and multi-word spans with full
+    /// interior words — checked against the per-bit reference and against
+    /// `count_range`/`contains_range` on the same masks.
+    #[test]
+    fn insert_range_word_boundary_cases() {
+        let cases: &[(u32, u32)] = &[
+            (0, 0),      // empty at word start
+            (64, 64),    // empty at an interior word boundary
+            (192, 192),  // empty at the last word boundary
+            (0, 64),     // exactly one full word (start%64==0, end%64==0)
+            (64, 128),   // full interior word
+            (0, 192),    // several full words
+            (64, 65),    // single bit at a word start
+            (63, 64),    // single bit at a word end (end%64==0)
+            (127, 129),  // straddles a boundary by one bit each side
+            (64, 100),   // start%64==0, end interior
+            (10, 128),   // start interior, end%64==0
+            (65, 127),   // strictly interior to one word
+            (1, 63),     // single-word, touches neither boundary
+            (0, 200),    // whole universe, ragged final word
+        ];
+        for &(start, end) in cases {
+            let mut fast = PixelSet::empty(200);
+            fast.insert_range(start, end);
+            let mut slow = PixelSet::empty(200);
+            for i in start..end {
+                slow.insert(i);
+            }
+            assert_eq!(fast, slow, "insert_range {start}..{end}");
+            assert_eq!(fast.len(), (end - start) as usize, "{start}..{end}");
+            assert!(fast.contains_range(start, end), "{start}..{end}");
+            assert_eq!(
+                fast.count_range(0, 200),
+                (end - start) as usize,
+                "count over universe, range {start}..{end}"
+            );
+        }
+    }
+
+    #[test]
+    fn count_range_matches_per_bit_reference() {
+        let mut rng = crate::util::rng::Rng::new(1234);
+        for _ in 0..500 {
+            let nbits = 1 + rng.index(300);
+            let mut s = PixelSet::empty(nbits);
+            for _ in 0..rng.index(nbits + 1) {
+                s.insert(rng.index(nbits) as u32);
+            }
+            let a = rng.index(nbits + 1) as u32;
+            let b = rng.index(nbits + 1) as u32;
+            let (start, end) = (a.min(b), a.max(b));
+            let slow = (start..end).filter(|&i| s.contains(i)).count();
+            assert_eq!(s.count_range(start, end), slow, "nbits={nbits} {start}..{end}");
+        }
+    }
+
+    #[test]
+    fn count_range_word_boundaries() {
+        let s = set(256, &[0, 63, 64, 127, 128, 191, 192, 255]);
+        assert_eq!(s.count_range(0, 256), 8);
+        assert_eq!(s.count_range(0, 64), 2);
+        assert_eq!(s.count_range(64, 128), 2);
+        assert_eq!(s.count_range(64, 64), 0);
+        assert_eq!(s.count_range(63, 65), 2);
+        assert_eq!(s.count_range(1, 63), 0);
+        assert_eq!(s.count_range(128, 256), 4);
+    }
+
+    #[test]
+    fn copy_from_overwrites_without_universe_change() {
+        let a = set(100, &[1, 64, 99]);
+        let mut b = PixelSet::full(100);
+        b.copy_from(&a);
+        assert_eq!(b, a);
+        let empty = PixelSet::empty(100);
+        b.copy_from(&empty);
+        assert!(b.is_empty());
     }
 
     #[test]

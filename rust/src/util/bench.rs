@@ -4,10 +4,17 @@
 //! [`BenchSuite`], registers closures, and calls [`BenchSuite::run`], which
 //! warms up, runs timed batches until a target measurement time is reached,
 //! and reports median / mean / p95 per iteration. A `--bench <filter>`
-//! substring filter and `--quick` mode match the common criterion workflow.
+//! substring filter and `--quick` mode match the common criterion workflow;
+//! `--json <path>` (or `CONVOFFLOAD_BENCH_JSON=<path>`) selects the
+//! machine-readable output mode — bench binaries combine the returned
+//! [`Measurement`]s with derived metrics and write them via
+//! [`write_json_report`] so CI can track the perf trajectory as an artifact
+//! (`BENCH_planner.json`; see EXPERIMENTS.md §Perf).
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One measurement result.
 #[derive(Debug, Clone)]
@@ -20,6 +27,17 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// JSON form (canonical field order; durations in integer nanoseconds).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iterations", self.iterations)
+            .set("median_ns", self.median.as_nanos() as u64)
+            .set("mean_ns", self.mean.as_nanos() as u64)
+            .set("p95_ns", self.p95.as_nanos() as u64);
+        o
+    }
+
     pub fn report_line(&self) -> String {
         format!(
             "{:<48} iters {:>9}  median {:>12}  mean {:>12}  p95 {:>12}",
@@ -50,6 +68,56 @@ pub fn bb<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Where `--json <path>` (or `CONVOFFLOAD_BENCH_JSON`) asks the bench
+/// binary to write its machine-readable report; `None` = human output only.
+/// A `--json` flag without a following path falls back to `default_path`.
+pub fn json_output_path(default_path: &str) -> Option<std::path::PathBuf> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    for (i, a) in argv.iter().enumerate() {
+        if a == "--json" {
+            let p = argv
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| default_path.to_string());
+            return Some(p.into());
+        }
+    }
+    std::env::var("CONVOFFLOAD_BENCH_JSON").ok().map(Into::into)
+}
+
+/// Write a bench JSON report: `{suite, quick, measurements, ...extra}`.
+/// `extra` lets a bench binary attach derived sections (e.g. the planner's
+/// per-layer anneal iterations/sec) next to the raw measurements.
+pub fn write_json_report(
+    path: &std::path::Path,
+    suite_name: &str,
+    measurements: &[Measurement],
+    extra: Json,
+) -> std::io::Result<()> {
+    let mut doc = match extra {
+        Json::Obj(_) => extra,
+        other => {
+            let mut o = Json::obj();
+            o.set("extra", other);
+            o
+        }
+    };
+    doc.set("suite", suite_name)
+        .set("quick", quick_mode())
+        .set(
+            "measurements",
+            Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+        );
+    std::fs::write(path, doc.to_string_pretty() + "\n")
+}
+
+/// True when `--quick` / `CONVOFFLOAD_BENCH_QUICK` shrinks the budgets.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("CONVOFFLOAD_BENCH_QUICK").is_ok()
+}
+
 type BenchFn = Box<dyn FnMut() -> u64>;
 
 /// A named set of benchmarks.
@@ -64,9 +132,7 @@ impl BenchSuite {
     pub fn new(suite_name: &'static str) -> Self {
         // `cargo bench -- --quick` (or env) shrinks the budget; integration
         // tests exercising the harness use the env knob.
-        let quick = std::env::args().any(|a| a == "--quick")
-            || std::env::var("CONVOFFLOAD_BENCH_QUICK").is_ok();
-        let (warmup, measure) = if quick {
+        let (warmup, measure) = if quick_mode() {
             (Duration::from_millis(20), Duration::from_millis(80))
         } else {
             (Duration::from_millis(300), Duration::from_millis(1500))
@@ -87,10 +153,21 @@ impl BenchSuite {
     /// Run all registered benchmarks (honouring `--bench`-style substring
     /// filters passed on the command line) and print a report.
     pub fn run(mut self) -> Vec<Measurement> {
-        let filters: Vec<String> = std::env::args()
-            .skip(1)
-            .filter(|a| !a.starts_with("--"))
-            .collect();
+        // Positional args are name filters; `--json` consumes its path
+        // value so a report path is never mistaken for a filter.
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut filters: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if argv[i] == "--json" {
+                i += 2;
+                continue;
+            }
+            if !argv[i].starts_with("--") {
+                filters.push(argv[i].clone());
+            }
+            i += 1;
+        }
         println!("## bench suite: {}", self.suite_name);
         let mut out = Vec::new();
         for (name, f) in self.benches.iter_mut() {
@@ -167,6 +244,32 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert!(results[0].iterations > 0);
         assert!(results[0].median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let m = Measurement {
+            name: "x".to_string(),
+            iterations: 10,
+            median: Duration::from_nanos(5),
+            mean: Duration::from_nanos(6),
+            p95: Duration::from_nanos(7),
+        };
+        assert_eq!(m.to_json().get("median_ns").unwrap().as_u64(), Some(5));
+
+        let dir = std::env::temp_dir()
+            .join(format!("convoffload-bench-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.json");
+        let mut extra = Json::obj();
+        extra.set("anneal", Json::Arr(Vec::new()));
+        write_json_report(&path, "selftest", &[m], extra).unwrap();
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("suite").unwrap().as_str(), Some("selftest"));
+        assert_eq!(parsed.get("measurements").unwrap().as_arr().unwrap().len(), 1);
+        assert!(parsed.get("anneal").is_some());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

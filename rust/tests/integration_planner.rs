@@ -141,6 +141,38 @@ fn changing_the_seed_misses_the_cache() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The EXPERIMENTS.md baseline must never regress: the anneal-free
+/// heuristic-portfolio winner is analytic (lenet5 7100 cycles / resnet8
+/// 27644; per-layer loaded pixels 2385+324 and 1988+508+508), the heuristic
+/// lanes always race, and the reduction keeps them on ties — so *any*
+/// planner configuration must do at least this well. This pins the PR-2
+/// acceptance bar (delta-evaluated search must not change what the planner
+/// achieves) in CI, independent of anneal budget.
+#[test]
+fn planner_never_regresses_the_analytic_baseline() {
+    for (net, per_layer_px, total) in [
+        ("lenet5", vec![2385u64, 324], 7100u64),
+        ("resnet8", vec![1988, 508, 508], 27644),
+    ] {
+        let preset = network_preset(net).unwrap();
+        let plan = NetworkPlanner::new(quick_options()).plan(&preset).unwrap();
+        assert_eq!(plan.layers.len(), per_layer_px.len(), "{net}");
+        for (lp, &bound) in plan.layers.iter().zip(&per_layer_px) {
+            assert!(
+                lp.loaded_pixels <= bound,
+                "{net}/{}: {} loaded pixels > analytic baseline {bound}",
+                lp.stage,
+                lp.loaded_pixels
+            );
+        }
+        assert!(
+            plan.total_duration <= total,
+            "{net}: {} cycles > analytic baseline {total}",
+            plan.total_duration
+        );
+    }
+}
+
 /// ResNet-8's two stage-2 convolutions share one geometry: the planner races
 /// it once and the twin rides the cache even within a single call.
 #[test]
