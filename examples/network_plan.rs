@@ -1,5 +1,6 @@
-//! Network-level planning demo: plan LeNet-5 and ResNet-8 with the portfolio
-//! race, then re-plan to show the strategy cache taking over.
+//! Network-level planning demo: plan LeNet-5, ResNet-8 and the
+//! depthwise-separable mobilenet_slim trunk with the portfolio race, then
+//! re-plan to show the strategy cache taking over.
 //!
 //! Run with: `cargo run --release --example network_plan`
 
@@ -25,7 +26,7 @@ fn main() {
         StrategyCache::open(&cache_dir).expect("cache dir"),
     );
 
-    for name in ["lenet5", "resnet8"] {
+    for name in ["lenet5", "resnet8", "mobilenet_slim"] {
         let preset = network_preset(name).expect("preset");
         let plan = planner.plan(&preset).expect("plan");
         print!("{}", format_plan_table(&plan));

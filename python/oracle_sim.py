@@ -1,0 +1,362 @@
+"""Independent Python oracle for the Rust offload simulator.
+
+This module re-implements, from the paper's definitions alone (no shared
+code), everything needed to replay a serialized offload schedule:
+
+* the generalized convolution layer geometry (stride, dilation, channel
+  groups) and its dilated patch footprints;
+* the Definition-16 lowering of a grouped strategy to steps
+  (load = footprint minus resident, free = resident minus footprint,
+  write-back per policy, terminal flush);
+* the Definition-3 duration model (element loads x t_l, write-backs x t_w,
+  t_acc per compute step);
+* the network-level chaining rules (2x2 mean-pool halves spatial dims,
+  re-padding adds 2*pad per axis).
+
+``python/tests/test_differential.py`` replays the JSON cases emitted by
+``rust/tests/differential.rs`` (``target/differential_cases.json``) through
+this oracle and asserts bit-equal durations and loaded-element counts.  The
+module also re-implements the planner's analytic (anneal-free) lanes — the
+four patch orderings and the greedy construction — which is how the
+EXPERIMENTS.md baselines are cross-checked from a second code base.
+
+Pure stdlib; footprints are Python ``set``s of pixel ids (correct and slow,
+which is the point: an oracle should be obviously right, not fast).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+# --------------------------------------------------------------- layer model
+
+
+@dataclass(frozen=True)
+class Layer:
+    c_in: int
+    h_in: int
+    w_in: int
+    h_k: int
+    w_k: int
+    n_kernels: int
+    s_h: int = 1
+    s_w: int = 1
+    d_h: int = 1
+    d_w: int = 1
+    groups: int = 1
+
+    def __post_init__(self):
+        assert self.c_in % self.groups == 0, "groups must divide c_in"
+        assert self.n_kernels % self.groups == 0, "groups must divide n_kernels"
+        assert self.h_span <= self.h_in and self.w_span <= self.w_in
+
+    @property
+    def h_span(self) -> int:
+        return (self.h_k - 1) * self.d_h + 1
+
+    @property
+    def w_span(self) -> int:
+        return (self.w_k - 1) * self.d_w + 1
+
+    @property
+    def h_out(self) -> int:
+        return (self.h_in - self.h_span) // self.s_h + 1
+
+    @property
+    def w_out(self) -> int:
+        return (self.w_in - self.w_span) // self.s_w + 1
+
+    @property
+    def n_patches(self) -> int:
+        return self.h_out * self.w_out
+
+    @property
+    def kernel_dims_len(self) -> int:
+        """Elements of one kernel: (C_in / G) * H_K * W_K."""
+        return (self.c_in // self.groups) * self.h_k * self.w_k
+
+    @property
+    def kernel_elements(self) -> int:
+        return self.n_kernels * self.kernel_dims_len
+
+    def patch_pixels(self, pid: int) -> set:
+        """Dilated tap lattice of patch ``pid`` as a set of pixel ids."""
+        i, j = divmod(pid, self.w_out)
+        px = set()
+        for h in range(self.h_k):
+            row = (i * self.s_h + h * self.d_h) * self.w_in
+            for w in range(self.w_k):
+                px.add(row + j * self.s_w + w * self.d_w)
+        return px
+
+    def group_pixels(self, group) -> set:
+        px = set()
+        for p in group:
+            px |= self.patch_pixels(p)
+        return px
+
+
+def layer_from_json(d: dict) -> Layer:
+    return Layer(
+        c_in=d["c_in"],
+        h_in=d["h_in"],
+        w_in=d["w_in"],
+        h_k=d["h_k"],
+        w_k=d["w_k"],
+        n_kernels=d["n_kernels"],
+        s_h=d["s_h"],
+        s_w=d["s_w"],
+        d_h=d.get("d_h", 1),
+        d_w=d.get("d_w", 1),
+        groups=d.get("groups", 1),
+    )
+
+
+# ------------------------------------------------------------ step semantics
+
+
+@dataclass
+class Accelerator:
+    nbop_pe: int
+    t_acc: int
+    size_mem: int
+    t_l: int
+    t_w: int
+
+
+def accelerator_from_json(d: dict) -> Accelerator:
+    return Accelerator(
+        nbop_pe=d["nbop_pe"],
+        t_acc=d["t_acc"],
+        size_mem=d["size_mem"],
+        t_l=d["t_l"],
+        t_w=d["t_w"],
+    )
+
+
+@dataclass
+class StageResult:
+    duration: int
+    loaded_elements: int
+    n_steps: int  # compute steps + terminal flush
+    loaded_pixels: int  # spatial input pixels loaded (all steps)
+
+
+def simulate_stage(
+    layer: Layer,
+    acc: Accelerator,
+    groups,
+    writeback: str = "every_step",
+) -> StageResult:
+    """Definition-16 lowering + Definition-3 costing of one grouped strategy.
+
+    Mirrors the Rust ``GroupedStrategy::compile`` + ``sim::Simulator::run``
+    contract: kernels load once on step 1, each step loads the missing part
+    of its group's footprint and frees what the new group does not reuse,
+    write-backs follow the policy, and a terminal flush (no compute) writes
+    the remaining outputs.
+    """
+    assert writeback in ("every_step", "at_end")
+    c_out = layer.n_kernels
+    resident: set = set()
+    pending_out = 0  # patches computed, not yet written
+    duration = 0
+    loaded_elements = 0
+    loaded_pixels = 0
+    seen = set()
+
+    for k, group in enumerate(groups):
+        assert group, "empty group in strategy"
+        for p in group:
+            assert p not in seen, f"patch {p} computed twice"
+            seen.add(p)
+        footprint = layer.group_pixels(group)
+        load = footprint - resident
+        # (a_1 frees resident - footprint; frees are cost-free)
+        step_loaded = len(load) * layer.c_in
+        if k == 0:
+            step_loaded += layer.n_kernels * layer.kernel_dims_len
+        written = pending_out * c_out if writeback == "every_step" else 0
+        if writeback == "every_step":
+            pending_out = 0
+        duration += step_loaded * acc.t_l + written * acc.t_w + acc.t_acc
+        loaded_elements += step_loaded
+        loaded_pixels += len(load)
+        pending_out += len(group)
+        resident = footprint
+
+    assert seen == set(range(layer.n_patches)), "strategy must cover X exactly"
+    # Terminal flush: no compute, frees everything, writes what remains.
+    duration += pending_out * c_out * acc.t_w
+    return StageResult(
+        duration=duration,
+        loaded_elements=loaded_elements,
+        n_steps=len(list(groups)) + 1,
+        loaded_pixels=loaded_pixels,
+    )
+
+
+# ------------------------------------------------------------- network level
+
+
+def next_stage_dims(layer: Layer, pool_after: bool, pad_after: int):
+    c, h, w = layer.n_kernels, layer.h_out, layer.w_out
+    if pool_after:
+        h //= 2
+        w //= 2
+    return c, h + 2 * pad_after, w + 2 * pad_after
+
+
+def replay_case(case: dict) -> dict:
+    """Replay one differential case (a serialized fuzz network).
+
+    Returns the oracle's per-stage results plus the chained-dimension check;
+    raises AssertionError on any structural violation.
+    """
+    per_stage = []
+    prev = None
+    for st in case["stages"]:
+        layer = layer_from_json(st["layer"])
+        if prev is not None:
+            expect = next_stage_dims(*prev)
+            got = (layer.c_in, layer.h_in, layer.w_in)
+            assert got == expect, f"stage chaining broken: {got} != {expect}"
+        acc = accelerator_from_json(st["accelerator"])
+        res = simulate_stage(
+            layer, acc, st["strategy_groups"], st.get("writeback", "every_step")
+        )
+        per_stage.append(res)
+        prev = (layer, st["pool_after"], st["pad_after"])
+    return {
+        "per_stage": per_stage,
+        "total_duration": sum(r.duration for r in per_stage),
+    }
+
+
+# ----------------------------------------------- analytic planner lanes
+# Re-implementations of the Rust ordering generators and the greedy
+# construction, used to cross-check the EXPERIMENTS.md planner baselines.
+
+
+def row_major_order(layer: Layer):
+    return list(range(layer.n_patches))
+
+
+def zigzag_order(layer: Layer):
+    order = []
+    for i in range(layer.h_out):
+        js = range(layer.w_out) if i % 2 == 0 else range(layer.w_out - 1, -1, -1)
+        order.extend(i * layer.w_out + j for j in js)
+    return order
+
+
+def _hilbert_d2xy(side: int, d: int):
+    x = y = 0
+    t = d
+    s = 1
+    while s < side:
+        rx = 1 & (t // 2)
+        ry = 1 & (t ^ rx)
+        if ry == 0:
+            if rx == 1:
+                x, y = s - 1 - x, s - 1 - y
+            x, y = y, x
+        x += s * rx
+        y += s * ry
+        t //= 4
+        s *= 2
+    return x, y
+
+
+def hilbert_order(layer: Layer):
+    side = 1
+    while side < max(layer.h_out, layer.w_out):
+        side *= 2
+    order = []
+    for d in range(side * side):
+        x, y = _hilbert_d2xy(side, d)
+        if y < layer.h_out and x < layer.w_out:
+            order.append(y * layer.w_out + x)
+    return order
+
+
+def diagonal_order(layer: Layer):
+    order = []
+    for d in range(layer.h_out + layer.w_out - 1):
+        for i in range(layer.h_out):
+            if d >= i and d - i < layer.w_out:
+                order.append(i * layer.w_out + (d - i))
+    return order
+
+
+ORDERINGS = {
+    "row-by-row": row_major_order,
+    "zigzag": zigzag_order,
+    "hilbert": hilbert_order,
+    "diagonal": diagonal_order,
+}
+
+
+def order_to_groups(order, group_size: int):
+    return [order[i : i + group_size] for i in range(0, len(order), group_size)]
+
+
+def _group_sizes(n: int, k: int):
+    base, extra = divmod(n, k)
+    return [base + (1 if i < extra else 0) for i in range(k)]
+
+
+def greedy_groups(layer: Layer, k: int):
+    """The Rust ``optimizer::search::greedy`` scan, including its tie-break
+    behavior: candidates live in a work list mutated by swap-remove, score =
+    2x overlap with the group under construction + overlap with the previous
+    group, strict improvement keeps the earliest entry."""
+    unassigned = list(range(layer.n_patches))
+    pix = {p: layer.patch_pixels(p) for p in unassigned}
+    groups = []
+    prev: set = set()
+    for size in _group_sizes(layer.n_patches, k):
+        group = []
+        fp: set = set()
+        for _ in range(size):
+            best_idx, best_score = 0, -1
+            for idx, p in enumerate(unassigned):
+                score = 2 * len(pix[p] & fp) + len(pix[p] & prev)
+                if score > best_score:
+                    best_score, best_idx = score, idx
+            # swap_remove: replace with the last element, pop the tail
+            p = unassigned[best_idx]
+            unassigned[best_idx] = unassigned[-1]
+            unassigned.pop()
+            fp |= pix[p]
+            group.append(p)
+        prev = fp
+        groups.append(group)
+    return groups
+
+
+def grouping_loaded_pixels(layer: Layer, groups) -> int:
+    """Total spatial pixels loaded: sum of footprints minus consecutive
+    overlaps (the planner's race objective)."""
+    total = 0
+    resident: set = set()
+    for g in groups:
+        fp = layer.group_pixels(g)
+        total += len(fp - resident)
+        resident = fp
+    return total
+
+
+def analytic_portfolio(layer: Layer, group_size: int):
+    """The planner's anneal-free lanes in portfolio order: the four orderings
+    chunked to ``group_size`` plus greedy over ``k = ceil(|X|/g)`` balanced
+    groups. Returns (winner_label, loaded_pixels, per-lane dict)."""
+    k = -(-layer.n_patches // group_size)
+    lanes = []
+    for name in ("row-by-row", "zigzag", "hilbert", "diagonal"):
+        groups = order_to_groups(ORDERINGS[name](layer), group_size)
+        lanes.append((name, grouping_loaded_pixels(layer, groups)))
+    lanes.append(("greedy", grouping_loaded_pixels(layer, greedy_groups(layer, k))))
+    best = min(lanes, key=lambda t: t[1])  # min is stable: earliest lane wins ties
+    return best[0], best[1], dict(lanes)

@@ -1,0 +1,143 @@
+"""Unit tests for the independent Python oracle (`oracle_sim`).
+
+The oracle must stand on its own: these tests pin it against hand-computed
+values and against the published Rust planner baselines (EXPERIMENTS.md) —
+if the oracle reproduces lenet5's 7100 cycles and resnet8's 27644 cycles
+from nothing but the paper's definitions, the differential comparison in
+``test_differential.py`` is meaningful.
+"""
+
+import oracle_sim as o
+
+
+class TestLayerGeometry:
+    def test_dense_output_dims(self):
+        l = o.Layer(2, 5, 5, 3, 3, 2)
+        assert (l.h_out, l.w_out, l.n_patches) == (3, 3, 9)
+        assert l.kernel_elements == 2 * 2 * 9
+
+    def test_dilated_span_and_dims(self):
+        l = o.Layer(1, 9, 9, 3, 3, 1, d_h=2, d_w=2)
+        assert (l.h_span, l.w_span) == (5, 5)
+        assert (l.h_out, l.w_out) == (5, 5)
+
+    def test_dilated_patch_is_a_lattice(self):
+        l = o.Layer(1, 9, 9, 3, 3, 1, d_h=2, d_w=2)
+        px = l.patch_pixels(0)
+        assert px == {h * 9 + w for h in (0, 2, 4) for w in (0, 2, 4)}
+        # dilation holes: adjacent patches are disjoint at odd offsets
+        assert not (l.patch_pixels(0) & l.patch_pixels(1))
+        assert len(l.patch_pixels(0) & l.patch_pixels(2)) == 6
+
+    def test_grouped_kernel_storage(self):
+        l = o.Layer(4, 6, 6, 3, 3, 8, groups=4)
+        assert l.kernel_dims_len == 9
+        assert l.kernel_elements == 72
+
+
+class TestStageSimulation:
+    def test_single_row_scan_accounting(self):
+        # 1x3x12 input, 3x3 kernel -> a single row of 10 patches; groups of
+        # 2 scan left to right, so every cost is hand-computable:
+        # step 1 loads the 3x4 window of its 2 patches (12 px) + the 9
+        # kernel elements; steps 2..5 each slide 2 columns (6 px) and write
+        # back the previous group (2 patches x 1 ch); the flush writes the
+        # last group.
+        l = o.Layer(1, 3, 12, 3, 3, 1)
+        assert (l.h_out, l.w_out) == (1, 10)
+        acc = o.Accelerator(nbop_pe=18, t_acc=1, size_mem=10_000, t_l=1, t_w=1)
+        groups = o.order_to_groups(o.row_major_order(l), 2)
+        r = o.simulate_stage(l, acc, groups)
+        assert r.loaded_pixels == 12 + 4 * 6
+        assert r.loaded_elements == (12 + 9) + 4 * 6
+        # durations: (12+9)+1 | 4 x (6 load + 2 write + 1) | flush 2 writes
+        assert r.duration == 22 + 4 * 9 + 2
+        assert r.n_steps == 6
+
+    def test_duplicate_patch_rejected(self):
+        l = o.Layer(1, 4, 4, 3, 3, 1)
+        acc = o.Accelerator(9, 1, 1000, 1, 0)
+        try:
+            o.simulate_stage(l, acc, [[0, 1], [1, 2, 3]])
+        except AssertionError:
+            pass
+        else:
+            raise AssertionError("duplicate patch must be rejected")
+
+    def test_missing_patch_rejected(self):
+        l = o.Layer(1, 4, 4, 3, 3, 1)
+        acc = o.Accelerator(9, 1, 1000, 1, 0)
+        try:
+            o.simulate_stage(l, acc, [[0, 1]])
+        except AssertionError:
+            pass
+        else:
+            raise AssertionError("missing patches must be rejected")
+
+    def test_loads_bounded_below_by_distinct_pixels(self):
+        l = o.Layer(1, 8, 8, 3, 3, 1, d_h=2, d_w=2)
+        groups = o.order_to_groups(o.zigzag_order(l), 3)
+        distinct = set()
+        for p in range(l.n_patches):
+            distinct |= l.patch_pixels(p)
+        acc = o.Accelerator(1000, 1, 100000, 1, 0)
+        r = o.simulate_stage(l, acc, groups)
+        assert r.loaded_pixels >= len(distinct)
+
+
+class TestPlannerBaselines:
+    """The oracle must reproduce the Rust planner's analytic (anneal-free)
+    baselines recorded in EXPERIMENTS.md, from an independent code base."""
+
+    @staticmethod
+    def _stage_duration(layer, loaded_px, k):
+        # for_group_size machines: t_l = t_acc = 1, t_w = 0.
+        return loaded_px * layer.c_in + layer.kernel_elements + k
+
+    def _check(self, layers, want_px, want_winners, want_total, group=4):
+        total = 0
+        for layer, px, winner in zip(layers, want_px, want_winners):
+            got_winner, got_px, _ = o.analytic_portfolio(layer, group)
+            assert got_px == px, f"{layer}: {got_px} != {px}"
+            assert got_winner == winner
+            k = -(-layer.n_patches // group)
+            total += self._stage_duration(layer, got_px, k)
+        assert total == want_total
+
+    def test_lenet5(self):
+        self._check(
+            [o.Layer(1, 32, 32, 5, 5, 6), o.Layer(6, 14, 14, 5, 5, 16)],
+            [2385, 324],
+            ["greedy", "hilbert"],
+            7100,
+        )
+
+    def test_resnet8(self):
+        conv2 = o.Layer(16, 18, 18, 3, 3, 16)
+        self._check(
+            [o.Layer(3, 34, 34, 3, 3, 16), conv2, conv2],
+            [1988, 508, 508],
+            ["greedy", "greedy", "greedy"],
+            27644,
+        )
+
+    def test_mobilenet_slim(self):
+        # The generalized-zoo baseline added by this PR (EXPERIMENTS.md):
+        # depthwise 3x3 s2 -> pointwise 1x1 -> dilated 3x3 (d=2).
+        self._check(
+            [
+                o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4),
+                o.Layer(4, 8, 8, 1, 1, 8),
+                o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2),
+            ],
+            [325, 64, 165],
+            ["hilbert", "row-by-row", "greedy"],
+            3568,
+        )
+
+
+class TestNetworkChaining:
+    def test_pool_and_pad_dims(self):
+        l = o.Layer(1, 32, 32, 5, 5, 6)
+        assert o.next_stage_dims(l, True, 0) == (6, 14, 14)
+        assert o.next_stage_dims(l, False, 1) == (6, 30, 30)

@@ -1,0 +1,302 @@
+//! Seeded random-network generation — the scenario fuzzer.
+//!
+//! The ROADMAP's "as many scenarios as you can imagine" axis needs inputs no
+//! preset covers: layer chains mixing stride, dilation, channel groups
+//! (including depthwise), pooling and re-padding. [`random_network`] samples
+//! such a chain deterministically from a seed — valid **by construction**
+//! (every stage is sampled against the previous stage's output dimensions,
+//! the same rule `sim::network::Network::push` enforces) — together with a
+//! concrete per-stage strategy, so one seed pins one end-to-end simulation.
+//!
+//! Consumers:
+//! * the property tests (`rust/tests/invariants.rs`) check the formalism's
+//!   invariants over hundreds of seeds;
+//! * the differential harness (`rust/tests/differential.rs`) simulates a
+//!   fixed seed set and emits `target/differential_cases.json`, which
+//!   `python/tests/test_differential.py` replays through the independent
+//!   Python oracle simulator and compares durations / loaded elements;
+//! * [`network_to_json`] is that interchange format (versioned; layers carry
+//!   dilation + groups explicitly).
+
+use crate::conv::ConvLayer;
+use crate::platform::Accelerator;
+use crate::sim::{Network, Stage};
+use crate::strategy::{self, GroupedStrategy, Ordering};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One sampled pipeline stage: the layer plus its inter-stage plumbing and
+/// the concrete strategy the simulation runs.
+#[derive(Debug, Clone)]
+pub struct FuzzStage {
+    pub name: String,
+    pub layer: ConvLayer,
+    pub pool_after: bool,
+    pub pad_after: usize,
+    pub ordering: Ordering,
+    pub group_size: usize,
+    pub strategy: GroupedStrategy,
+    pub accelerator: Accelerator,
+}
+
+/// A sampled network: a chain of [`FuzzStage`]s, valid by construction.
+#[derive(Debug, Clone)]
+pub struct FuzzNetwork {
+    pub seed: u64,
+    pub stages: Vec<FuzzStage>,
+}
+
+impl FuzzNetwork {
+    /// Materialize as a simulatable [`Network`]. Cannot fail: stage chaining
+    /// is enforced during sampling (`push` re-checks it).
+    pub fn to_network(&self) -> Network {
+        let mut net = Network::default();
+        for s in &self.stages {
+            net.push(Stage {
+                name: s.name.clone(),
+                layer: s.layer,
+                accelerator: s.accelerator,
+                strategy: s.strategy.clone(),
+                pool_after: s.pool_after,
+                pad_after: s.pad_after,
+            })
+            .expect("fuzz stages chain by construction");
+        }
+        net
+    }
+
+    /// Feature summary, used by coverage assertions: (any stride > 1, any
+    /// dilation > 1, any groups > 1, any pooling).
+    pub fn features(&self) -> (bool, bool, bool, bool) {
+        (
+            self.stages.iter().any(|s| s.layer.s_h > 1 || s.layer.s_w > 1),
+            self.stages.iter().any(|s| s.layer.d_h > 1 || s.layer.d_w > 1),
+            self.stages.iter().any(|s| s.layer.groups > 1),
+            self.stages.iter().any(|s| s.pool_after),
+        )
+    }
+}
+
+/// Sample one layer for an input of `c × h × w` — strides {1, 2}, dilation
+/// {1, 2, 3}, groups from the divisors of `c` (including depthwise `c`),
+/// kernels 1–3 per axis; falls back to a 1×1 dense layer when `h`/`w` leave
+/// no room (always valid for positive dims).
+pub fn random_layer(rng: &mut Rng, c: usize, h: usize, w: usize) -> ConvLayer {
+    for _ in 0..32 {
+        let h_k = 1 + rng.index(3);
+        let w_k = 1 + rng.index(3);
+        let s_h = 1 + rng.index(2);
+        let s_w = 1 + rng.index(2);
+        // Dilation only matters for k > 1; keep d = 1 common.
+        let d_h = if h_k > 1 && rng.chance(0.4) { 2 + rng.index(2) } else { 1 };
+        let d_w = if w_k > 1 && rng.chance(0.4) { 2 + rng.index(2) } else { 1 };
+        if (h_k - 1) * d_h + 1 > h || (w_k - 1) * d_w + 1 > w {
+            continue; // dilated span does not fit; resample
+        }
+        let divisors: Vec<usize> = (1..=c).filter(|g| c % g == 0).collect();
+        let groups = if rng.chance(0.5) { *rng.choose(&divisors) } else { 1 };
+        let n_kernels = groups * (1 + rng.index(2));
+        let layer = ConvLayer::new(c, h, w, h_k, w_k, n_kernels, s_h, s_w)
+            .and_then(|l| l.with_dilation(d_h, d_w))
+            .and_then(|l| l.with_groups(groups));
+        if let Ok(l) = layer {
+            return l;
+        }
+    }
+    ConvLayer::new(c, h, w, 1, 1, 1, 1, 1).expect("1x1 layer on positive dims")
+}
+
+/// Deterministically sample a whole network from `seed`: 1–3 stages over a
+/// random initial tensor, each with a random ordering strategy and group
+/// bound, pooling/padding plumbed so the chain stays dimensionally valid.
+pub fn random_network(seed: u64) -> FuzzNetwork {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(seed));
+    let want_stages = 1 + rng.index(3);
+    let mut c = 1 + rng.index(4);
+    let mut h = 8 + rng.index(9);
+    let mut w = 8 + rng.index(9);
+
+    let mut stages = Vec::with_capacity(want_stages);
+    for si in 0..want_stages {
+        let layer = random_layer(&mut rng, c, h, w);
+        let group_size = 1 + rng.index(4);
+        let ordering = *rng.choose(&Ordering::all());
+        let strategy = strategy::from_ordering(&layer, ordering, group_size);
+        let accelerator = Accelerator::for_group_size(&layer, group_size);
+
+        let out = layer.output_dims();
+        let mut pool_after = false;
+        let mut pad_after = 0;
+        let last = si + 1 == want_stages;
+        if !last {
+            pool_after = out.h >= 2 && out.w >= 2 && rng.chance(0.35);
+            pad_after = rng.index(3);
+        }
+        let dims = crate::sim::network::next_stage_dims(&layer, pool_after, pad_after);
+        stages.push(FuzzStage {
+            name: format!("s{si}"),
+            layer,
+            pool_after,
+            pad_after,
+            ordering,
+            group_size,
+            strategy,
+            accelerator,
+        });
+        if last || dims.h < 1 || dims.w < 1 {
+            break;
+        }
+        (c, h, w) = (dims.c, dims.h, dims.w);
+    }
+    FuzzNetwork { seed, stages }
+}
+
+// ------------------------------------------------------------ interchange
+
+/// JSON form of a layer (all geometry fields explicit).
+pub fn layer_to_json(l: &ConvLayer) -> Json {
+    let mut o = Json::obj();
+    o.set("c_in", l.c_in)
+        .set("h_in", l.h_in)
+        .set("w_in", l.w_in)
+        .set("h_k", l.h_k)
+        .set("w_k", l.w_k)
+        .set("n_kernels", l.n_kernels)
+        .set("s_h", l.s_h)
+        .set("s_w", l.s_w)
+        .set("d_h", l.d_h)
+        .set("d_w", l.d_w)
+        .set("groups", l.groups);
+    o
+}
+
+/// JSON form of a whole fuzz network (the differential interchange): every
+/// stage carries its layer, accelerator, explicit strategy groups and
+/// plumbing flags, so an independent simulator needs nothing else.
+pub fn network_to_json(n: &FuzzNetwork) -> Json {
+    let stages: Vec<Json> = n
+        .stages
+        .iter()
+        .map(|s| {
+            let mut acc = Json::obj();
+            acc.set("nbop_pe", s.accelerator.nbop_pe)
+                .set("t_acc", s.accelerator.t_acc)
+                .set("size_mem", s.accelerator.size_mem)
+                .set("t_l", s.accelerator.t_l)
+                .set("t_w", s.accelerator.t_w);
+            let groups: Vec<Json> = s
+                .strategy
+                .groups
+                .iter()
+                .map(|g| Json::Arr(g.iter().map(|&p| Json::from(p)).collect()))
+                .collect();
+            let mut st = Json::obj();
+            st.set("name", s.name.as_str())
+                .set("layer", layer_to_json(&s.layer))
+                .set("accelerator", acc)
+                .set("ordering", s.ordering.as_str())
+                .set("group_size", s.group_size)
+                .set("strategy_groups", Json::Arr(groups))
+                .set("writeback", s.strategy.writeback.as_str())
+                .set("pool_after", s.pool_after)
+                .set("pad_after", s.pad_after);
+            st
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("seed", n.seed).set("stages", Json::Arr(stages));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        for seed in [0u64, 1, 7, 42, 1000] {
+            let a = random_network(seed);
+            let b = random_network(seed);
+            assert_eq!(a.stages.len(), b.stages.len(), "seed {seed}");
+            for (x, y) in a.stages.iter().zip(&b.stages) {
+                assert_eq!(x.layer, y.layer);
+                assert_eq!(x.strategy, y.strategy);
+                assert_eq!(x.accelerator, y.accelerator);
+                assert_eq!((x.pool_after, x.pad_after), (y.pool_after, y.pad_after));
+            }
+        }
+    }
+
+    #[test]
+    fn networks_chain_and_simulate() {
+        for seed in 0..40u64 {
+            let net = random_network(seed);
+            assert!(!net.stages.is_empty(), "seed {seed}");
+            let sim_net = net.to_network(); // push() re-validates chaining
+            let report = sim_net.run().unwrap_or_else(|e| {
+                panic!("seed {seed}: simulation failed: {e}")
+            });
+            assert_eq!(report.per_stage.len(), net.stages.len());
+            assert!(report.total_duration > 0);
+        }
+    }
+
+    #[test]
+    fn strategies_cover_each_layer_exactly_once() {
+        for seed in 0..40u64 {
+            let net = random_network(seed);
+            for s in &net.stages {
+                let mut all: Vec<u32> =
+                    s.strategy.groups.iter().flatten().copied().collect();
+                all.sort_unstable();
+                assert_eq!(
+                    all,
+                    s.layer.all_patches().collect::<Vec<_>>(),
+                    "seed {seed} stage {}",
+                    s.name
+                );
+                assert!(s.strategy.groups.iter().all(|g| g.len() <= s.group_size));
+            }
+        }
+    }
+
+    /// The seed range used by the differential harness must cover every
+    /// feature axis (stride, dilation, groups, pooling) — the acceptance
+    /// bar for scenario diversity.
+    #[test]
+    fn seed_range_covers_all_feature_axes() {
+        let (mut st, mut di, mut gr, mut po) = (false, false, false, false);
+        for seed in 1..=24u64 {
+            let (s, d, g, p) = random_network(seed).features();
+            st |= s;
+            di |= d;
+            gr |= g;
+            po |= p;
+        }
+        assert!(st, "no strided case in the seed range");
+        assert!(di, "no dilated case in the seed range");
+        assert!(gr, "no grouped case in the seed range");
+        assert!(po, "no pooled case in the seed range");
+    }
+
+    #[test]
+    fn json_interchange_is_parseable_and_complete() {
+        let net = random_network(3);
+        let j = network_to_json(&net);
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("seed").and_then(Json::as_u64), Some(3));
+        let stages = back.get("stages").and_then(Json::as_arr).unwrap();
+        assert_eq!(stages.len(), net.stages.len());
+        for (js, s) in stages.iter().zip(&net.stages) {
+            let l = js.get("layer").unwrap();
+            assert_eq!(l.get("d_h").and_then(Json::as_usize), Some(s.layer.d_h));
+            assert_eq!(
+                l.get("groups").and_then(Json::as_usize),
+                Some(s.layer.groups)
+            );
+            let groups = js.get("strategy_groups").and_then(Json::as_arr).unwrap();
+            assert_eq!(groups.len(), s.strategy.groups.len());
+        }
+    }
+}

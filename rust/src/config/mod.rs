@@ -6,6 +6,7 @@
 //! [`toml`] (offline substitute — `[section]`s, `key = value` with strings,
 //! integers, booleans).
 
+pub mod fuzz;
 pub mod presets;
 pub mod toml;
 
@@ -37,6 +38,7 @@ impl ExperimentConfig {
     ///
     /// [layer]
     /// preset = "lenet5-conv1"   # or explicit c_in/h_in/w_in/h_k/w_k/n/s_h/s_w
+    ///                           # (optional: d_h/d_w dilation, groups)
     ///
     /// [accelerator]
     /// group_size = 4            # derives nbop_PE and size_MEM per §7.1
@@ -54,7 +56,7 @@ impl ExperimentConfig {
             .unwrap_or("unnamed-experiment")
             .to_string();
 
-        let layer = if let Some(preset) = doc.get_str("layer", "preset") {
+        let base = if let Some(preset) = doc.get_str("layer", "preset") {
             layer_preset(preset)
                 .ok_or_else(|| format!("unknown layer preset '{preset}'"))?
                 .layer
@@ -75,6 +77,15 @@ impl ExperimentConfig {
                 doc.get_int("layer", "s_w").unwrap_or(1) as usize,
             )?
         };
+        // Optional generalization keys apply to both branches, so
+        // `preset = …` + `groups = …` overrides the preset instead of being
+        // silently ignored (validated against the resulting geometry).
+        let opt = |k: &str, default: usize| -> usize {
+            doc.get_int("layer", k).map(|v| v as usize).unwrap_or(default)
+        };
+        let layer = base
+            .with_dilation(opt("d_h", base.d_h), opt("d_w", base.d_w))?
+            .with_groups(opt("groups", base.groups))?;
 
         let group_size = doc
             .get_int("accelerator", "group_size")
@@ -150,7 +161,47 @@ nbop_pe = 999
         assert_eq!(cfg.layer.c_in, 3);
         assert_eq!(cfg.layer.s_h, 2);
         assert_eq!(cfg.layer.s_w, 1);
+        assert_eq!(cfg.layer.d_h, 1);
+        assert_eq!(cfg.layer.groups, 1);
         assert_eq!(cfg.accelerator.nbop_pe, 999);
+    }
+
+    /// The generalization keys must not be silently ignored when a preset
+    /// supplies the base geometry.
+    #[test]
+    fn preset_accepts_generalization_overrides() {
+        let text = "[layer]\npreset = \"example1\"\ngroups = 2\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.layer.groups, 2);
+        assert_eq!(cfg.layer.c_in, 2); // preset geometry preserved
+        // an invalid override is a loud error, not the dense preset
+        assert!(
+            ExperimentConfig::from_toml("[layer]\npreset = \"example1\"\ngroups = 3\n")
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn parses_dilation_and_groups() {
+        let text = r#"
+[layer]
+c_in = 4
+h_in = 12
+w_in = 12
+h_k = 3
+w_k = 3
+n = 4
+d_h = 2
+d_w = 2
+groups = 4
+"#;
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!((cfg.layer.d_h, cfg.layer.d_w), (2, 2));
+        assert_eq!(cfg.layer.groups, 4);
+        assert_eq!(cfg.layer.h_out(), 8); // span 5 on 12
+        // invalid combinations are rejected through the layer validator
+        let bad = text.replace("groups = 4", "groups = 3");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 
     #[test]

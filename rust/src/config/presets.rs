@@ -50,6 +50,24 @@ fn all() -> Vec<LayerPreset> {
             artifact_hint: None,
         },
         LayerPreset {
+            name: "mobilenet-dw3",
+            description: "MobileNet-style depthwise 3x3 stride-2 stage: 4x18x18, groups = c_in = 4",
+            layer: ConvLayer::new(4, 18, 18, 3, 3, 4, 2, 2)
+                .unwrap()
+                .with_groups(4)
+                .unwrap(),
+            artifact_hint: None,
+        },
+        LayerPreset {
+            name: "dilated-3x3-d2",
+            description: "Dilated 3x3 (d=2, span 5) context stage: 8x12x12, 8 kernels",
+            layer: ConvLayer::new(8, 12, 12, 3, 3, 8, 1, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+            artifact_hint: None,
+        },
+        LayerPreset {
             name: "paper-sweep-8",
             description: "§7.1 sweep member: 1x8x8 input, one 3x3 kernel",
             layer: ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap(),
@@ -151,10 +169,43 @@ fn all_networks() -> Vec<NetworkPreset> {
                 },
             ],
         },
+        NetworkPreset {
+            name: "mobilenet_slim",
+            description:
+                "Depthwise-separable trunk: 3x3 depthwise s2 -> 1x1 pointwise -> 3x3 dilated (d=2)",
+            stages: vec![
+                NetworkStagePreset {
+                    name: "dw3",
+                    layer: ConvLayer::new(4, 18, 18, 3, 3, 4, 2, 2)
+                        .unwrap()
+                        .with_groups(4)
+                        .unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+                NetworkStagePreset {
+                    name: "pw1",
+                    layer: ConvLayer::new(4, 8, 8, 1, 1, 8, 1, 1).unwrap(),
+                    pool_after: false,
+                    // Remark-2 pre-padding for the dilated successor: span 5
+                    // needs 2 pixels per side to keep the 8×8 spatial size.
+                    pad_after: 2,
+                },
+                NetworkStagePreset {
+                    name: "dil3",
+                    layer: ConvLayer::new(8, 12, 12, 3, 3, 8, 1, 1)
+                        .unwrap()
+                        .with_dilation(2, 2)
+                        .unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+            ],
+        },
     ]
 }
 
-/// Look up a network preset by name (`lenet5`, `resnet8`).
+/// Look up a network preset by name (`lenet5`, `resnet8`, `mobilenet_slim`).
 pub fn network_preset(name: &str) -> Option<NetworkPreset> {
     all_networks().into_iter().find(|p| p.name == name)
 }
@@ -206,6 +257,27 @@ mod tests {
             }
         }
         assert!(network_preset("bogus").is_none());
+    }
+
+    #[test]
+    fn mobilenet_slim_stage_geometry() {
+        let p = network_preset("mobilenet_slim").unwrap();
+        assert_eq!(p.stages.len(), 3);
+        let dims = |l: &ConvLayer| {
+            let d = l.output_dims();
+            (d.c, d.h, d.w)
+        };
+        let dw = &p.stages[0].layer;
+        assert_eq!(dw.groups, dw.c_in, "stage 1 is depthwise");
+        assert_eq!((dw.s_h, dw.s_w), (2, 2));
+        assert_eq!(dims(dw), (4, 8, 8));
+        let pw = &p.stages[1].layer;
+        assert_eq!((pw.h_k, pw.w_k), (1, 1), "stage 2 is pointwise");
+        assert_eq!(dims(pw), (8, 8, 8));
+        let dil = &p.stages[2].layer;
+        assert_eq!((dil.d_h, dil.d_w), (2, 2), "stage 3 is dilated");
+        assert_eq!((dil.h_span(), dil.w_span()), (5, 5));
+        assert_eq!(dims(dil), (8, 8, 8));
     }
 
     /// Stage dimensions must chain: next input = previous output, pooled and

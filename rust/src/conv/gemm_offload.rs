@@ -57,9 +57,10 @@ impl GemmOffloadCost {
             + self.steps * acc.t_acc
     }
 
-    /// im2col duplication factor: elements of `A` vs distinct input elements.
+    /// im2col duplication factor: elements of `A` across all `G` group GeMMs
+    /// (`|X| · D_g · G = |X| · C_in·H_K·W_K`) vs distinct input elements.
     pub fn duplication_factor(&self, layer: &ConvLayer) -> f64 {
-        (self.m * self.k) as f64 / layer.input_dims().len() as f64
+        (self.m * self.k * layer.groups) as f64 / layer.input_dims().len() as f64
     }
 }
 
@@ -69,26 +70,34 @@ impl GemmOffloadCost {
 /// a `C` tile stays resident across the k-sweep (accumulation), `A` and `B`
 /// tiles stream. `B` tiles are re-loaded once per `mi` (no persistent cache,
 /// matching the BRAM-per-step model of §1.3's TMMA).
+///
+/// A grouped layer (`G > 1`) is **not** one big GeMM: it is `G` independent
+/// GeMMs of shape `[|X|, D_g] × [D_g, N/G]` with `D_g = C_in/G·H_K·W_K`
+/// (the per-group contraction, i.e. `ops_per_output_value`). The schedule
+/// runs them back to back, so steps and `A`/`B` traffic scale by the
+/// per-group loop counts × `G` — the historical single-GeMM formula silently
+/// assumed `G = 1` ("`c_in`-dense"); see the `grouped_*` regression tests.
 pub fn analyze(layer: &ConvLayer, tiling: GemmTiling) -> Result<GemmOffloadCost, String> {
+    let g = layer.groups as u64;
     let m = layer.n_patches();
-    let k = layer.ops_per_output_value();
-    let n = layer.n_kernels;
+    let k = layer.ops_per_output_value(); // per-group contraction depth D_g
+    let n_g = layer.kernels_per_group(); // columns of one group's GeMM
     if tiling.m_tile == 0 || tiling.k_tile == 0 || tiling.n_tile == 0 {
         return Err("tile sizes must be ≥ 1".into());
     }
     let mi = m.div_ceil(tiling.m_tile) as u64;
     let ki = k.div_ceil(tiling.k_tile) as u64;
-    let ni = n.div_ceil(tiling.n_tile) as u64;
+    let ni = n_g.div_ceil(tiling.n_tile) as u64;
 
-    // Every (mi, ni, ki) triple is one step.
-    let steps = mi * ni * ki;
-    // A tiles: for each mi, the full k extent streams once per ni.
-    let a_loaded = (m * k) as u64 * ni;
-    // B tiles: full B streams once per mi.
-    let b_loaded = (k * n) as u64 * mi;
-    // C: written back once per (mi, ni) after its k-sweep (partials stay on
-    // chip during the sweep).
-    let c_written = (m * n) as u64;
+    // Every (group, mi, ni, ki) tuple is one step.
+    let steps = g * mi * ni * ki;
+    // A tiles: per group, the group's k extent streams once per ni.
+    let a_loaded = g * (m * k) as u64 * ni;
+    // B tiles: per group, the group's B streams once per mi.
+    let b_loaded = g * (k * n_g) as u64 * mi;
+    // C: written back once per (group, mi, ni) after its k-sweep (partials
+    // stay on chip during the sweep) = all outputs once.
+    let c_written = (m * layer.n_kernels) as u64;
     // Peak: one A tile + one B tile + one C tile.
     let peak = (tiling.m_tile * tiling.k_tile
         + tiling.k_tile * tiling.n_tile
@@ -97,7 +106,7 @@ pub fn analyze(layer: &ConvLayer, tiling: GemmTiling) -> Result<GemmOffloadCost,
     Ok(GemmOffloadCost {
         m,
         k,
-        n,
+        n: layer.n_kernels,
         steps,
         a_loaded,
         b_loaded,
@@ -111,7 +120,7 @@ pub fn analyze(layer: &ConvLayer, tiling: GemmTiling) -> Result<GemmOffloadCost,
 pub fn best_tiling(layer: &ConvLayer, acc: &Accelerator) -> Option<(GemmTiling, GemmOffloadCost)> {
     let m = layer.n_patches();
     let k = layer.ops_per_output_value();
-    let n = layer.n_kernels;
+    let n = layer.kernels_per_group(); // one group's GeMM columns
     let mut best: Option<(GemmTiling, GemmOffloadCost, u64)> = None;
     let candidates = |dim: usize| -> Vec<usize> {
         let mut v: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64, 128]
@@ -231,5 +240,42 @@ mod tests {
     fn rejects_zero_tiles() {
         let l = layer();
         assert!(analyze(&l, GemmTiling { m_tile: 0, k_tile: 1, n_tile: 1 }).is_err());
+    }
+
+    /// Regression for the `c_in`-dense assumption: a grouped layer is `G`
+    /// back-to-back GeMMs over the per-group contraction `D_g`, not one
+    /// full-width GeMM.
+    #[test]
+    fn grouped_gemm_counts_per_group_sweeps() {
+        let l = ConvLayer::new(4, 8, 8, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_groups(2)
+            .unwrap(); // M = 36, D_g = 2·9 = 18, N/G = 2
+        let t = GemmTiling { m_tile: 36, k_tile: 18, n_tile: 2 };
+        let c = analyze(&l, t).unwrap();
+        assert_eq!((c.m, c.k, c.n), (36, 18, 4));
+        assert_eq!(c.steps, 2); // one tile pass per group
+        assert_eq!(c.a_loaded, 2 * 36 * 18); // per-group A streams once each
+        assert_eq!(c.b_loaded, 2 * 18 * 2); // per-group B once
+        assert_eq!(c.c_written, 36 * 4); // every output exactly once
+        // duplication counts all G sweeps: 36·18·2 / (4·64)
+        assert!((c.duplication_factor(&l) - 1296.0 / 256.0).abs() < 1e-9);
+    }
+
+    /// Depthwise (G = C_in): per-group contraction collapses to H_K·W_K and
+    /// the best tiling must still satisfy the machine bounds.
+    #[test]
+    fn depthwise_best_tiling_fits() {
+        let l = ConvLayer::new(4, 10, 10, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_groups(4)
+            .unwrap();
+        assert_eq!(l.ops_per_output_value(), 9);
+        let acc = Accelerator { nbop_pe: 576, t_acc: 1, size_mem: 300, t_l: 1, t_w: 0 };
+        let (t, c) = best_tiling(&l, &acc).expect("some tiling fits");
+        assert!(c.peak_occupancy <= acc.size_mem);
+        assert!((t.m_tile * t.k_tile * t.n_tile) as u64 <= acc.nbop_pe);
+        assert!(t.n_tile <= l.kernels_per_group());
+        assert!(t.k_tile <= l.ops_per_output_value());
     }
 }

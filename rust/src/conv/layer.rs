@@ -1,11 +1,28 @@
-//! [`ConvLayer`] — the application model of the paper (Definitions 5–8).
+//! [`ConvLayer`] — the application model of the paper (Definitions 5–8),
+//! generalized with dilation and channel groups.
+//!
+//! The paper's formalism covers the dense, unit-dilation convolution; the
+//! two generalizations here keep every definition intact while changing
+//! *which* input pixels a patch touches (dilation) and *how many* elements
+//! each pixel / kernel carries (groups):
+//!
+//! * **Dilation** `(d_h, d_w)`: kernel taps are spaced `d_h`/`d_w` pixels
+//!   apart, so a patch reads the dilated lattice
+//!   `{(s_h·i + h·d_h, s_w·j + w·d_w) : h < H_K, w < W_K}` inside the
+//!   bounding span `H_span = (H_K − 1)·d_h + 1`. Patch footprints are no
+//!   longer solid rectangles — overlap formulas must honour the holes.
+//! * **Groups** `G` (`G = C_in` ⇒ depthwise): kernel `l` convolves only the
+//!   channel slice of its group, so a kernel stores `C_in/G · H_K · W_K`
+//!   elements and one output value costs `C_in/G · H_K · W_K` MACs. The
+//!   *spatial* footprint of a patch is unchanged — every group has kernels,
+//!   so all `C_in` channels of each footprint pixel are still loaded.
 
 use crate::conv::{Patch, PatchId};
 use crate::tensor::{Dims3, PixelSet, Rect};
 
 /// A 2D convolution layer over a (pre-padded, Remark 2) 3D input.
 ///
-/// `O[l,i,j] = Σ_c Σ_h Σ_w I[c, i·s_h + h, j·s_w + w] · K^l[c,h,w]`
+/// `O[l,i,j] = Σ_{c ∈ grp(l)} Σ_h Σ_w I[c, i·s_h + h·d_h, j·s_w + w·d_w] · K^l[c,h,w]`
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvLayer {
     /// Input channels `C_in`.
@@ -24,10 +41,18 @@ pub struct ConvLayer {
     pub s_h: usize,
     /// Stride along width `s_w`.
     pub s_w: usize,
+    /// Dilation along height `d_h` (1 = dense).
+    pub d_h: usize,
+    /// Dilation along width `d_w` (1 = dense).
+    pub d_w: usize,
+    /// Channel groups `G`: `c_in` and `n_kernels` must both divide by `G`;
+    /// `G = c_in` is a depthwise convolution.
+    pub groups: usize,
 }
 
 impl ConvLayer {
-    /// Construct with validation.
+    /// Construct a dense (dilation 1, single-group) layer with validation —
+    /// the paper's original model.
     pub fn new(
         c_in: usize,
         h_in: usize,
@@ -38,9 +63,37 @@ impl ConvLayer {
         s_h: usize,
         s_w: usize,
     ) -> Result<Self, String> {
-        let l = ConvLayer { c_in, h_in, w_in, h_k, w_k, n_kernels, s_h, s_w };
+        let l = ConvLayer {
+            c_in,
+            h_in,
+            w_in,
+            h_k,
+            w_k,
+            n_kernels,
+            s_h,
+            s_w,
+            d_h: 1,
+            d_w: 1,
+            groups: 1,
+        };
         l.validate()?;
         Ok(l)
+    }
+
+    /// Builder: same layer with dilation `(d_h, d_w)` (re-validated).
+    pub fn with_dilation(mut self, d_h: usize, d_w: usize) -> Result<Self, String> {
+        self.d_h = d_h;
+        self.d_w = d_w;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Builder: same layer with `groups` channel groups (re-validated);
+    /// `groups == c_in` makes the layer depthwise.
+    pub fn with_groups(mut self, groups: usize) -> Result<Self, String> {
+        self.groups = groups;
+        self.validate()?;
+        Ok(self)
     }
 
     /// Square-image, square-kernel, unit-stride shorthand used throughout the
@@ -60,28 +113,75 @@ impl ConvLayer {
         if self.s_h == 0 || self.s_w == 0 {
             return Err("strides must be positive".into());
         }
-        if self.h_k > self.h_in || self.w_k > self.w_in {
+        if self.d_h == 0 || self.d_w == 0 {
+            return Err("dilations must be positive".into());
+        }
+        if self.groups == 0 {
+            return Err("groups must be positive".into());
+        }
+        if self.c_in % self.groups != 0 {
             return Err(format!(
-                "kernel {}x{} larger than input {}x{}",
-                self.h_k, self.w_k, self.h_in, self.w_in
+                "groups {} must divide c_in {}",
+                self.groups, self.c_in
+            ));
+        }
+        if self.n_kernels % self.groups != 0 {
+            return Err(format!(
+                "groups {} must divide n_kernels {}",
+                self.groups, self.n_kernels
+            ));
+        }
+        if self.h_span() > self.h_in || self.w_span() > self.w_in {
+            return Err(format!(
+                "dilated kernel span {}x{} larger than input {}x{}",
+                self.h_span(),
+                self.w_span(),
+                self.h_in,
+                self.w_in
             ));
         }
         Ok(())
     }
 
-    /// `H_out = ⌊(H_in − H_K)/s_h⌋ + 1` (input already padded, Definition 8).
-    pub fn h_out(&self) -> usize {
-        (self.h_in - self.h_k) / self.s_h + 1
+    /// Dilated kernel extent along height: `H_span = (H_K − 1)·d_h + 1`.
+    pub fn h_span(&self) -> usize {
+        (self.h_k - 1) * self.d_h + 1
     }
 
-    /// `W_out = ⌊(W_in − W_K)/s_w⌋ + 1`.
+    /// Dilated kernel extent along width: `W_span = (W_K − 1)·d_w + 1`.
+    pub fn w_span(&self) -> usize {
+        (self.w_k - 1) * self.d_w + 1
+    }
+
+    /// `H_out = ⌊(H_in − H_span)/s_h⌋ + 1` (input already padded,
+    /// Definition 8 with the dilated span).
+    pub fn h_out(&self) -> usize {
+        (self.h_in - self.h_span()) / self.s_h + 1
+    }
+
+    /// `W_out = ⌊(W_in − W_span)/s_w⌋ + 1`.
     pub fn w_out(&self) -> usize {
-        (self.w_in - self.w_k) / self.s_w + 1
+        (self.w_in - self.w_span()) / self.s_w + 1
     }
 
     /// `C_out = N`.
     pub fn c_out(&self) -> usize {
         self.n_kernels
+    }
+
+    /// Input channels per group: `C_in / G`.
+    pub fn channels_per_group(&self) -> usize {
+        self.c_in / self.groups
+    }
+
+    /// Kernels (output channels) per group: `N / G`.
+    pub fn kernels_per_group(&self) -> usize {
+        self.n_kernels / self.groups
+    }
+
+    /// The group kernel `l` belongs to.
+    pub fn group_of_kernel(&self, l: usize) -> usize {
+        l / self.kernels_per_group()
     }
 
     pub fn input_dims(&self) -> Dims3 {
@@ -92,8 +192,9 @@ impl ConvLayer {
         Dims3::new(self.c_out(), self.h_out(), self.w_out())
     }
 
+    /// Per-kernel storage shape: `[C_in/G, H_K, W_K]`.
     pub fn kernel_dims(&self) -> Dims3 {
-        Dims3::new(self.c_in, self.h_k, self.w_k)
+        Dims3::new(self.channels_per_group(), self.h_k, self.w_k)
     }
 
     /// Spatial-pixel universe size (`H_in × W_in`, Remark 6).
@@ -106,20 +207,42 @@ impl ConvLayer {
         self.h_out() * self.w_out()
     }
 
-    /// Total elements of all kernels: `C_out · C_in · H_K · W_K`.
+    /// Total elements of all kernels: `C_out · C_in/G · H_K · W_K`.
     pub fn kernel_elements(&self) -> usize {
-        self.n_kernels * self.c_in * self.h_k * self.w_k
+        self.n_kernels * self.kernel_dims().len()
     }
 
-    /// MACs to produce one output value (Definition 13):
-    /// `nb_op_value = C_in · H_K · W_K`.
+    /// MACs to produce one output value (Definition 13 under groups):
+    /// `nb_op_value = C_in/G · H_K · W_K`.
     pub fn ops_per_output_value(&self) -> usize {
-        self.c_in * self.h_k * self.w_k
+        self.channels_per_group() * self.h_k * self.w_k
     }
 
     /// MACs for one S1 patch — all `C_out` channels (Property 1).
     pub fn ops_per_patch(&self) -> usize {
         self.ops_per_output_value() * self.c_out()
+    }
+
+    /// Width of an im2col row: `C_in · H_K · W_K` — the *gathered* window
+    /// covers all input channels even under groups (each group's kernels
+    /// read their slice of it; the rest multiplies zeros in the
+    /// zero-expanded kernel matrix). Equals `ops_per_output_value · G`.
+    pub fn im2col_width(&self) -> usize {
+        self.c_in * self.h_k * self.w_k
+    }
+
+    /// Spatial pixels one patch touches: `H_K · W_K` (dilation spreads them
+    /// out but does not change the count).
+    pub fn pixels_per_patch(&self) -> usize {
+        self.h_k * self.w_k
+    }
+
+    /// On-chip input elements one patch needs: all `C_in` channels of its
+    /// `H_K·W_K` footprint pixels. Under groups this is *larger* than
+    /// `ops_per_output_value` (which divides by `G`); memory sizing must use
+    /// this, not the MAC count.
+    pub fn input_elements_per_patch(&self) -> usize {
+        self.pixels_per_patch() * self.c_in
     }
 
     /// Patch from its row-major id (Remark 4).
@@ -142,23 +265,28 @@ impl ConvLayer {
         0..self.n_patches() as PatchId
     }
 
-    /// Spatial rectangle of input pixels read by patch `(i, j)`
-    /// (Definition 10: rows `[s_h·i, s_h·i + H_K)`, cols `[s_w·j, s_w·j + W_K)`).
+    /// *Bounding* rectangle of the input pixels read by patch `(i, j)`:
+    /// rows `[s_h·i, s_h·i + H_span)`, cols `[s_w·j, s_w·j + W_span)`.
+    /// For `d = 1` this is exactly the footprint (Definition 10); for
+    /// `d > 1` the footprint is the dilated lattice *inside* this rect —
+    /// use [`ConvLayer::patch_pixels`] / [`ConvLayer::patch_overlap`] for
+    /// hole-accurate sets and counts.
     pub fn patch_rect(&self, id: PatchId) -> Rect {
         let p = self.patch(id);
         Rect::new(
             self.s_h * p.i,
-            self.s_h * p.i + self.h_k,
+            self.s_h * p.i + self.h_span(),
             self.s_w * p.j,
-            self.s_w * p.j + self.w_k,
+            self.s_w * p.j + self.w_span(),
         )
     }
 
     /// Pixel set of one patch.
     ///
-    /// Patch rows are contiguous pixel-id ranges, so insertion is word-masked
-    /// (`PixelSet::insert_range`) rather than per-pixel — this is the hot
-    /// path of both the simulator and the optimizer's objective.
+    /// Dense (`d_w = 1`) patch rows are contiguous pixel-id ranges, so
+    /// insertion is word-masked (`PixelSet::insert_range`) rather than
+    /// per-pixel — this is the hot path of both the simulator and the
+    /// optimizer's objective. Dilated rows fall back to per-tap inserts.
     pub fn patch_pixels(&self, id: PatchId) -> PixelSet {
         let mut s = PixelSet::empty(self.n_pixels());
         self.add_patch_pixels(&mut s, id);
@@ -185,50 +313,82 @@ impl ConvLayer {
         }
     }
 
+    /// Contiguous pixel-id ranges `(start, end)` covering one patch's taps:
+    /// one `w_k`-wide range per kernel row when `d_w = 1` (the word-masked
+    /// fast path), `w_k` single-tap ranges per row otherwise. The single
+    /// source of truth for the dilated footprint walk.
+    #[inline]
+    fn patch_row_ranges(&self, id: PatchId) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let p = self.patch(id);
+        let (row0, col0) = (self.s_h * p.i, self.s_w * p.j);
+        let (runs, run_len, step) =
+            if self.d_w == 1 { (1, self.w_k, 0) } else { (self.w_k, 1, self.d_w) };
+        (0..self.h_k).flat_map(move |h| {
+            let row = ((row0 + h * self.d_h) * self.w_in) as u32;
+            (0..runs).map(move |r| {
+                let start = row + (col0 + r * step) as u32;
+                (start, start + run_len as u32)
+            })
+        })
+    }
+
     /// Insert one patch's pixels into an existing set (word-masked row
-    /// ranges). Public so the optimizer's delta scoring can build candidate
-    /// footprints in reusable scratch buffers without intermediate sets.
+    /// ranges when `d_w = 1`, per-tap inserts otherwise). Public so the
+    /// optimizer's delta scoring can build candidate footprints in reusable
+    /// scratch buffers without intermediate sets.
     #[inline]
     pub fn add_patch_pixels(&self, s: &mut PixelSet, id: PatchId) {
-        let rect = self.patch_rect(id);
-        for h in rect.h0..rect.h1 {
-            let row = (h * self.w_in) as u32;
-            s.insert_range(row + rect.w0 as u32, row + rect.w1 as u32);
+        for (a, b) in self.patch_row_ranges(id) {
+            s.insert_range(a, b);
         }
     }
 
     /// `|pix(id) ∩ set|` without materializing the patch's pixel set —
-    /// word-masked popcounts over the patch's row ranges (greedy hot path).
+    /// word-masked popcounts over the patch's row ranges (greedy hot path);
+    /// per-tap popcounts under width dilation.
     #[inline]
     pub fn patch_pixels_in(&self, set: &PixelSet, id: PatchId) -> usize {
-        let rect = self.patch_rect(id);
-        let mut n = 0;
-        for h in rect.h0..rect.h1 {
-            let row = (h * self.w_in) as u32;
-            n += set.count_range(row + rect.w0 as u32, row + rect.w1 as u32);
-        }
-        n
+        self.patch_row_ranges(id).map(|(a, b)| set.count_range(a, b)).sum()
     }
 
     /// Allocation-free check that a patch's entire footprint is contained in
     /// `resident` (used by the step semantics on every compute action).
     pub fn patch_resident(&self, resident: &PixelSet, id: PatchId) -> bool {
-        let rect = self.patch_rect(id);
-        for h in rect.h0..rect.h1 {
-            let row = (h * self.w_in) as u32;
-            if !resident.contains_range(row + rect.w0 as u32, row + rect.w1 as u32) {
-                return false;
-            }
-        }
-        true
+        self.patch_row_ranges(id).all(|(a, b)| resident.contains_range(a, b))
     }
 
-    /// Spatial overlap (pixel count) between two individual patches.
-    pub fn patch_overlap(&self, a: PatchId, b: PatchId) -> usize {
-        match self.patch_rect(a).intersect(&self.patch_rect(b)) {
-            Some(r) => r.area(),
-            None => 0,
+    /// Number of common taps along one axis between two patches whose output
+    /// coordinates differ by `delta_out`: both tap sets are arithmetic
+    /// progressions with step `d` and length `k`, offset by `δ = |Δ|·s`; they
+    /// share taps iff `d | δ`, and then `k − δ/d` of them (when positive).
+    #[inline]
+    fn axis_overlap(delta_out: usize, s: usize, d: usize, k: usize) -> usize {
+        let off = delta_out * s;
+        if off % d != 0 {
+            return 0;
         }
+        let m = off / d;
+        if m >= k {
+            0
+        } else {
+            k - m
+        }
+    }
+
+    /// Spatial overlap (pixel count) between two individual patches —
+    /// analytic on the dilated lattice, no set materialization:
+    /// `(H_K − δ_h/d_h)·(W_K − δ_w/d_w)` when the dilations divide the
+    /// offsets, else 0 on that axis.
+    pub fn patch_overlap(&self, a: PatchId, b: PatchId) -> usize {
+        let (pa, pb) = (self.patch(a), self.patch(b));
+        let rows =
+            Self::axis_overlap(pa.i.abs_diff(pb.i), self.s_h, self.d_h, self.h_k);
+        if rows == 0 {
+            return 0;
+        }
+        let cols =
+            Self::axis_overlap(pa.j.abs_diff(pb.j), self.s_w, self.d_w, self.w_k);
+        rows * cols
     }
 }
 
@@ -236,12 +396,24 @@ impl std::fmt::Display for ConvLayer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "conv(in={}x{}x{}, k={}x{}x{}x{}, s={}x{}) -> {}",
-            self.c_in, self.h_in, self.w_in,
-            self.n_kernels, self.c_in, self.h_k, self.w_k,
-            self.s_h, self.s_w,
-            self.output_dims(),
-        )
+            "conv(in={}x{}x{}, k={}x{}x{}x{}, s={}x{}",
+            self.c_in,
+            self.h_in,
+            self.w_in,
+            self.n_kernels,
+            self.channels_per_group(),
+            self.h_k,
+            self.w_k,
+            self.s_h,
+            self.s_w,
+        )?;
+        if self.d_h != 1 || self.d_w != 1 {
+            write!(f, ", d={}x{}", self.d_h, self.d_w)?;
+        }
+        if self.groups != 1 {
+            write!(f, ", g={}", self.groups)?;
+        }
+        write!(f, ") -> {}", self.output_dims())
     }
 }
 
@@ -252,6 +424,14 @@ mod tests {
     /// The layer of Example 1: I ∈ R^{2×5×5}, two 3×3 kernels, stride 1.
     fn example1() -> ConvLayer {
         ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    /// 3×3 kernel dilated ×2 on a 9×9 input: span 5, 5×5 output.
+    fn dilated() -> ConvLayer {
+        ConvLayer::new(1, 9, 9, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap()
     }
 
     #[test]
@@ -271,10 +451,49 @@ mod tests {
     }
 
     #[test]
+    fn dilated_output_dims_use_span() {
+        let l = dilated();
+        assert_eq!((l.h_span(), l.w_span()), (5, 5));
+        assert_eq!((l.h_out(), l.w_out()), (5, 5));
+        // anisotropic dilation
+        let l2 = ConvLayer::new(1, 9, 9, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(3, 1)
+            .unwrap();
+        assert_eq!((l2.h_span(), l2.w_span()), (7, 3));
+        assert_eq!((l2.h_out(), l2.w_out()), (3, 7));
+        // dilation composes with stride
+        let l3 = ConvLayer::new(1, 11, 11, 3, 3, 1, 2, 2)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap();
+        assert_eq!((l3.h_out(), l3.w_out()), (4, 4));
+    }
+
+    #[test]
     fn ops_counts_match_definition13_property1() {
         let l = example1();
         assert_eq!(l.ops_per_output_value(), 2 * 3 * 3);
         assert_eq!(l.ops_per_patch(), 2 * 3 * 3 * 2);
+    }
+
+    #[test]
+    fn grouped_ops_and_kernel_storage_shrink() {
+        let l = ConvLayer::new(4, 6, 6, 3, 3, 8, 1, 1)
+            .unwrap()
+            .with_groups(4)
+            .unwrap(); // depthwise-ish: 4 groups of 1 channel, 2 kernels each
+        assert_eq!(l.channels_per_group(), 1);
+        assert_eq!(l.kernels_per_group(), 2);
+        assert_eq!(l.ops_per_output_value(), 9);
+        assert_eq!(l.kernel_dims().len(), 9);
+        assert_eq!(l.kernel_elements(), 8 * 9);
+        assert_eq!(l.im2col_width(), 4 * 9);
+        // memory per patch still carries all channels
+        assert_eq!(l.input_elements_per_patch(), 9 * 4);
+        assert_eq!(l.group_of_kernel(0), 0);
+        assert_eq!(l.group_of_kernel(3), 1);
+        assert_eq!(l.group_of_kernel(7), 3);
     }
 
     #[test]
@@ -306,6 +525,22 @@ mod tests {
     }
 
     #[test]
+    fn dilated_patch_pixels_are_the_lattice() {
+        let l = dilated(); // 9x9 input, 3x3 kernel d=2
+        let px = l.patch_pixels(l.patch_id(0, 0));
+        // taps at rows {0,2,4} × cols {0,2,4}
+        assert_eq!(px.len(), 9);
+        for h in [0usize, 2, 4] {
+            for w in [0usize, 2, 4] {
+                assert!(px.contains((h * 9 + w) as u32), "({h},{w})");
+            }
+        }
+        // holes are absent
+        assert!(!px.contains(1));
+        assert!(!px.contains((1 * 9 + 1) as u32));
+    }
+
+    #[test]
     fn group_pixels_is_union() {
         let l = example1();
         let g = [l.patch_id(0, 0), l.patch_id(0, 1)];
@@ -316,14 +551,37 @@ mod tests {
 
     #[test]
     fn patch_pixels_in_matches_intersection() {
-        let l = ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 2).unwrap();
-        let resident = l.group_pixels(&[0, 1, 5]);
-        for id in l.all_patches() {
-            assert_eq!(
-                l.patch_pixels_in(&resident, id),
-                l.patch_pixels(id).intersection_len(&resident),
-                "patch {id}"
-            );
+        let layers = [
+            ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 2).unwrap(),
+            dilated(),
+            ConvLayer::new(1, 11, 9, 3, 3, 1, 2, 1)
+                .unwrap()
+                .with_dilation(2, 3)
+                .unwrap(),
+        ];
+        for l in layers {
+            let resident = l.group_pixels(&[0, 1, 5]);
+            for id in l.all_patches() {
+                assert_eq!(
+                    l.patch_pixels_in(&resident, id),
+                    l.patch_pixels(id).intersection_len(&resident),
+                    "{l} patch {id}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn patch_resident_matches_subset_check() {
+        for l in [example1(), dilated()] {
+            let resident = l.group_pixels(&[0, 3]);
+            for id in l.all_patches() {
+                assert_eq!(
+                    l.patch_resident(&resident, id),
+                    l.patch_pixels(id).is_subset_of(&resident),
+                    "{l} patch {id}"
+                );
+            }
         }
     }
 
@@ -334,17 +592,112 @@ mod tests {
         assert_eq!(l.patch_overlap(l.patch_id(0, 0), l.patch_id(0, 1)), 0);
     }
 
+    /// Analytic overlap must equal the brute-force pixel-set intersection on
+    /// dilated and stride+dilation layers (where the lattice has holes).
+    #[test]
+    fn overlap_matches_brute_force_on_dilated_layers() {
+        let layers = [
+            dilated(),
+            // stride 2, dilation 2: offsets stay on the lattice
+            ConvLayer::new(1, 11, 11, 3, 3, 1, 2, 2)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+            // stride 1, dilation 2: odd offsets fall into the holes
+            ConvLayer::new(1, 8, 8, 2, 2, 1, 1, 1)
+                .unwrap()
+                .with_dilation(3, 3)
+                .unwrap(),
+            // anisotropic everything
+            ConvLayer::new(1, 12, 10, 3, 2, 1, 2, 1)
+                .unwrap()
+                .with_dilation(1, 3)
+                .unwrap(),
+        ];
+        for l in layers {
+            for a in l.all_patches() {
+                for b in l.all_patches() {
+                    assert_eq!(
+                        l.patch_overlap(a, b),
+                        l.patch_pixels(a).intersection_len(&l.patch_pixels(b)),
+                        "{l}: patches {a},{b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dilation_holes_break_overlap_at_odd_offsets() {
+        let l = dilated(); // d=2, s=1: lattices at odd offsets interleave
+        // Δj = 1: columns {0,2,4} vs {1,3,5} — disjoint
+        assert_eq!(l.patch_overlap(l.patch_id(0, 0), l.patch_id(0, 1)), 0);
+        // Δj = 2: columns {0,2,4} vs {2,4,6} — 2 common cols × 3 rows
+        assert_eq!(l.patch_overlap(l.patch_id(0, 0), l.patch_id(0, 2)), 6);
+        // Δi = Δj = 2: 2×2 common taps
+        assert_eq!(l.patch_overlap(l.patch_id(0, 0), l.patch_id(2, 2)), 4);
+    }
+
     #[test]
     fn validation_rejects_bad_layers() {
         assert!(ConvLayer::new(0, 5, 5, 3, 3, 1, 1, 1).is_err());
         assert!(ConvLayer::new(1, 5, 5, 6, 3, 1, 1, 1).is_err());
         assert!(ConvLayer::new(1, 5, 5, 3, 3, 1, 0, 1).is_err());
         assert!(ConvLayer::new(1, 5, 5, 3, 3, 0, 1, 1).is_err());
+        // dilated span exceeding the input
+        assert!(ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .is_err());
+        assert!(ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(0, 1)
+            .is_err());
+        // groups must divide both channel counts
+        assert!(ConvLayer::new(4, 6, 6, 8, 3, 3, 1, 1).is_err()); // (kernel > input)
+        assert!(ConvLayer::new(4, 6, 6, 3, 3, 8, 1, 1)
+            .unwrap()
+            .with_groups(3)
+            .is_err());
+        assert!(ConvLayer::new(4, 6, 6, 3, 3, 6, 1, 1)
+            .unwrap()
+            .with_groups(4)
+            .is_err());
+        assert!(ConvLayer::new(4, 6, 6, 3, 3, 8, 1, 1)
+            .unwrap()
+            .with_groups(0)
+            .is_err());
     }
 
     #[test]
     fn kernel_elements() {
         let l = example1();
         assert_eq!(l.kernel_elements(), 2 * 2 * 3 * 3);
+    }
+
+    #[test]
+    fn depthwise_is_groups_equal_c_in() {
+        let l = ConvLayer::new(6, 8, 8, 3, 3, 6, 1, 1)
+            .unwrap()
+            .with_groups(6)
+            .unwrap();
+        assert_eq!(l.channels_per_group(), 1);
+        assert_eq!(l.kernels_per_group(), 1);
+        assert_eq!(l.kernel_elements(), 6 * 9);
+        assert_eq!(l.ops_per_output_value(), 9);
+    }
+
+    #[test]
+    fn display_mentions_dilation_and_groups() {
+        let l = ConvLayer::new(4, 12, 12, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap()
+            .with_groups(4)
+            .unwrap();
+        let s = format!("{l}");
+        assert!(s.contains("d=2x2"), "{s}");
+        assert!(s.contains("g=4"), "{s}");
+        assert!(!format!("{}", example1()).contains("d="));
     }
 }

@@ -8,12 +8,20 @@
 //! 3. cross-check for the AOT Pallas kernel executed through the runtime.
 //!
 //! Tensors are `f32` in channel-major layout (Remark 5):
-//! input `[C_in, H_in, W_in]`, kernels `[N, C_in, H_K, W_K]`,
+//! input `[C_in, H_in, W_in]`, kernels `[N, C_in/G, H_K, W_K]`,
 //! output `[C_out, H_out, W_out]`.
+//!
+//! Dilation taps the input at `i·s_h + h·d_h` / `j·s_w + w·d_w`. Grouped
+//! convolutions restrict kernel `l` to its group's channel slice; the im2col
+//! path keeps a *single* GEMM by zero-expanding the kernel matrix to the full
+//! `C_in·H_K·W_K` contraction width ([`kernel_matrix`]), so the step compute
+//! shape is uniform across `G` (the zero rows multiply channels outside the
+//! kernel's group).
 
 use crate::conv::{ConvLayer, PatchId};
 
-/// Full-layer convolution: `O[l,i,j] = Σ_{c,h,w} I[c, i·s_h+h, j·s_w+w] · K^l[c,h,w]`.
+/// Full-layer convolution:
+/// `O[l,i,j] = Σ_{c ∈ grp(l)} Σ_{h,w} I[c, i·s_h+h·d_h, j·s_w+w·d_w] · K^l[c,h,w]`.
 pub fn conv2d(layer: &ConvLayer, input: &[f32], kernels: &[f32]) -> Vec<f32> {
     assert_eq!(input.len(), layer.input_dims().len(), "input size mismatch");
     assert_eq!(
@@ -57,15 +65,17 @@ fn dot_patch_kernel(
 ) -> f32 {
     let (h_in, w_in) = (layer.h_in, layer.w_in);
     let (h_k, w_k) = (layer.h_k, layer.w_k);
+    let cpg = layer.channels_per_group();
+    let c0 = layer.group_of_kernel(l) * cpg; // first input channel of l's group
     let mut acc = 0f32;
-    for c in 0..layer.c_in {
-        let in_base = c * h_in * w_in;
-        let k_base = (l * layer.c_in + c) * h_k * w_k;
+    for ck in 0..cpg {
+        let in_base = (c0 + ck) * h_in * w_in;
+        let k_base = (l * cpg + ck) * h_k * w_k;
         for h in 0..h_k {
-            let row = in_base + (i * layer.s_h + h) * w_in + j * layer.s_w;
+            let row = in_base + (i * layer.s_h + h * layer.d_h) * w_in + j * layer.s_w;
             let krow = k_base + h * w_k;
             for w in 0..w_k {
-                acc += input[row + w] * kernels[krow + w];
+                acc += input[row + w * layer.d_w] * kernels[krow + w];
             }
         }
     }
@@ -73,7 +83,9 @@ fn dot_patch_kernel(
 }
 
 /// Gather one patch's values as an im2col row of length `C_in·H_K·W_K`
-/// (channel-major: all of channel 0's window, then channel 1's, …).
+/// (channel-major: all of channel 0's window, then channel 1's, …). The row
+/// always spans *all* input channels — grouped layers pair it with the
+/// zero-expanded [`kernel_matrix`].
 pub fn im2col_row(layer: &ConvLayer, input: &[f32], patch: PatchId, out: &mut [f32]) {
     let p = layer.patch(patch);
     let (h_in, w_in) = (layer.h_in, layer.w_in);
@@ -81,19 +93,26 @@ pub fn im2col_row(layer: &ConvLayer, input: &[f32], patch: PatchId, out: &mut [f
     for c in 0..layer.c_in {
         let base = c * h_in * w_in;
         for h in 0..layer.h_k {
-            let row = base + (p.i * layer.s_h + h) * w_in + p.j * layer.s_w;
-            out[idx..idx + layer.w_k].copy_from_slice(&input[row..row + layer.w_k]);
-            idx += layer.w_k;
+            let row = base + (p.i * layer.s_h + h * layer.d_h) * w_in + p.j * layer.s_w;
+            if layer.d_w == 1 {
+                out[idx..idx + layer.w_k].copy_from_slice(&input[row..row + layer.w_k]);
+                idx += layer.w_k;
+            } else {
+                for w in 0..layer.w_k {
+                    out[idx] = input[row + w * layer.d_w];
+                    idx += 1;
+                }
+            }
         }
     }
-    debug_assert_eq!(idx, layer.ops_per_output_value());
+    debug_assert_eq!(idx, layer.im2col_width());
 }
 
 /// im2col matrix for a group of patches: `[len(group), C_in·H_K·W_K]`
-/// row-major. The GeMM `patches @ kernelsᵀ` then yields `[group, C_out]` —
-/// exactly the per-step compute of strategy S1 (Property 1).
+/// row-major. The GeMM `patches @ kernel_matrix` then yields `[group, C_out]`
+/// — exactly the per-step compute of strategy S1 (Property 1).
 pub fn im2col_group(layer: &ConvLayer, input: &[f32], group: &[PatchId]) -> Vec<f32> {
-    let d = layer.ops_per_output_value();
+    let d = layer.im2col_width();
     let mut m = vec![0f32; group.len() * d];
     for (r, &p) in group.iter().enumerate() {
         im2col_row(layer, input, p, &mut m[r * d..(r + 1) * d]);
@@ -101,16 +120,23 @@ pub fn im2col_group(layer: &ConvLayer, input: &[f32], group: &[PatchId]) -> Vec<
     m
 }
 
-/// Kernels flattened to a `[C_in·H_K·W_K, N]` column-major-by-kernel matrix
-/// (i.e. `K_mat[d, l] = K^l[d]` with `d` channel-major) so that
-/// `im2col_group(..) @ kernel_matrix(..)` is a plain row-major GEMM.
+/// Kernels expanded to a `[C_in·H_K·W_K, N]` matrix so that
+/// `im2col_group(..) @ kernel_matrix(..)` is a plain row-major GEMM for any
+/// `G`: entry `(e, l)` is kernel `l`'s weight when flat index `e` falls on a
+/// channel of `l`'s group, 0 otherwise (dense layers have no zero rows).
 pub fn kernel_matrix(layer: &ConvLayer, kernels: &[f32]) -> Vec<f32> {
-    let d = layer.ops_per_output_value();
+    let d = layer.im2col_width();
     let n = layer.n_kernels;
+    let cpg = layer.channels_per_group();
+    let khw = layer.h_k * layer.w_k;
     let mut m = vec![0f32; d * n];
     for l in 0..n {
-        for e in 0..d {
-            m[e * n + l] = kernels[l * d + e];
+        let c0 = layer.group_of_kernel(l) * cpg;
+        for ck in 0..cpg {
+            for t in 0..khw {
+                let e = (c0 + ck) * khw + t; // row in the full-width matrix
+                m[e * n + l] = kernels[(l * cpg + ck) * khw + t];
+            }
         }
     }
     m
@@ -145,7 +171,7 @@ pub fn step_compute(
     kernels: &[f32],
     group: &[PatchId],
 ) -> Vec<f32> {
-    let d = layer.ops_per_output_value();
+    let d = layer.im2col_width();
     let pm = im2col_group(layer, input, group);
     let km = kernel_matrix(layer, kernels);
     gemm(&pm, &km, group.len(), d, layer.n_kernels)
@@ -165,6 +191,23 @@ mod tests {
 
     fn example1() -> ConvLayer {
         ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap()
+    }
+
+    fn check_step_matches_conv2d(l: &ConvLayer, seed: u64) {
+        let input = synth_tensor(l.input_dims().len(), seed);
+        let kernels = synth_tensor(l.kernel_elements(), seed + 1);
+        let full = conv2d(l, &input, &kernels);
+        let group: Vec<_> = l.all_patches().collect();
+        let step = step_compute(l, &input, &kernels, &group);
+        let (h_out, w_out) = (l.h_out(), l.w_out());
+        for (r, &p) in group.iter().enumerate() {
+            let patch = l.patch(p);
+            for ch in 0..l.c_out() {
+                let a = step[r * l.c_out() + ch];
+                let b = full[(ch * h_out + patch.i) * w_out + patch.j];
+                assert!((a - b).abs() < 1e-4, "{l} patch {p} ch {ch}: {a} vs {b}");
+            }
+        }
     }
 
     /// Hand-computed identity check: a kernel that is a delta at (0,0,0)
@@ -207,24 +250,121 @@ mod tests {
         assert_eq!(conv2d(&l, &input, &kernels), vec![9.0; 4]);
     }
 
+    /// Dilated delta kernel: a delta at tap (h, w) reads the input at
+    /// `(i + h·d, j + w·d)` — hand check against the raw tensor.
     #[test]
-    fn step_compute_matches_conv2d() {
-        let l = example1();
-        let input = synth_tensor(l.input_dims().len(), 1);
-        let kernels = synth_tensor(l.kernel_elements(), 2);
+    fn dilated_delta_kernel_reads_the_lattice() {
+        let l = ConvLayer::new(1, 5, 5, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap(); // span 5, 1x1 output
+        let input: Vec<f32> = (0..25).map(|x| x as f32).collect();
+        // delta at tap (1, 2) → reads I[0 + 1·2, 0 + 2·2] = I[2, 4] = 14
+        let mut kernels = vec![0f32; 9];
+        kernels[1 * 3 + 2] = 1.0;
+        assert_eq!(conv2d(&l, &input, &kernels), vec![14.0]);
+    }
+
+    #[test]
+    fn dilated_ones_kernel_sums_the_lattice() {
+        let l = ConvLayer::new(1, 5, 5, 2, 2, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap(); // taps {0,2}×{0,2}, 3x3 output
+        let input: Vec<f32> = (0..25).map(|x| x as f32).collect();
+        let kernels = vec![1f32; 4];
+        let out = conv2d(&l, &input, &kernels);
+        // O[0,0] = I[0,0]+I[0,2]+I[2,0]+I[2,2] = 0+2+10+12 = 24
+        assert_eq!(out[0], 24.0);
+        assert_eq!(out.len(), 9);
+    }
+
+    /// A grouped conv must equal the concatenation of G independent dense
+    /// convs over the channel slices.
+    #[test]
+    fn grouped_conv_equals_per_group_dense_convs() {
+        let g = 2usize;
+        let l = ConvLayer::new(4, 6, 6, 3, 3, 6, 1, 1)
+            .unwrap()
+            .with_groups(g)
+            .unwrap();
+        let input = synth_tensor(l.input_dims().len(), 10);
+        let kernels = synth_tensor(l.kernel_elements(), 11);
         let full = conv2d(&l, &input, &kernels);
-        let group: Vec<_> = l.all_patches().collect();
-        let step = step_compute(&l, &input, &kernels, &group);
-        // step rows are per-patch [C_out]; full is [C_out, H_out, W_out]
-        let (h_out, w_out) = (l.h_out(), l.w_out());
-        for (r, &p) in group.iter().enumerate() {
-            let patch = l.patch(p);
-            for ch in 0..l.c_out() {
-                let a = step[r * l.c_out() + ch];
-                let b = full[(ch * h_out + patch.i) * w_out + patch.j];
-                assert!((a - b).abs() < 1e-4, "patch {p} ch {ch}: {a} vs {b}");
+
+        let sub = ConvLayer::new(2, 6, 6, 3, 3, 3, 1, 1).unwrap();
+        let px = 36;
+        for gi in 0..g {
+            let sub_input = &input[gi * 2 * px..(gi + 1) * 2 * px];
+            let sub_kernels =
+                &kernels[gi * 3 * sub.kernel_dims().len()..(gi + 1) * 3 * sub.kernel_dims().len()];
+            let sub_out = conv2d(&sub, sub_input, sub_kernels);
+            let out_len = sub.output_dims().len();
+            let want = &full[gi * out_len..(gi + 1) * out_len];
+            for (a, b) in sub_out.iter().zip(want) {
+                assert!((a - b).abs() < 1e-5, "group {gi}: {a} vs {b}");
             }
         }
+    }
+
+    /// Depthwise: each kernel sees exactly one channel.
+    #[test]
+    fn depthwise_conv_per_channel() {
+        let l = ConvLayer::new(2, 4, 4, 2, 2, 2, 1, 1)
+            .unwrap()
+            .with_groups(2)
+            .unwrap();
+        let input: Vec<f32> = (0..32).map(|x| x as f32).collect();
+        // kernel 0 = ones over channel 0; kernel 1 = delta over channel 1
+        let kernels = vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let out = conv2d(&l, &input, &kernels);
+        // O[0,0,0] = I[0,{0,1,4,5}] summed = 0+1+4+5 = 10
+        assert_eq!(out[0], 10.0);
+        // O[1,0,0] = I[1,0,0] = 16
+        assert_eq!(out[9], 16.0);
+    }
+
+    #[test]
+    fn step_compute_matches_conv2d() {
+        check_step_matches_conv2d(&example1(), 1);
+    }
+
+    #[test]
+    fn step_compute_matches_conv2d_generalized() {
+        // dilated
+        check_step_matches_conv2d(
+            &ConvLayer::new(2, 9, 9, 3, 3, 2, 1, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+            20,
+        );
+        // grouped
+        check_step_matches_conv2d(
+            &ConvLayer::new(4, 6, 6, 3, 3, 4, 1, 1)
+                .unwrap()
+                .with_groups(2)
+                .unwrap(),
+            30,
+        );
+        // depthwise + stride
+        check_step_matches_conv2d(
+            &ConvLayer::new(3, 7, 7, 3, 3, 3, 2, 2)
+                .unwrap()
+                .with_groups(3)
+                .unwrap(),
+            40,
+        );
+        // dilated + grouped + anisotropic stride
+        check_step_matches_conv2d(
+            &ConvLayer::new(4, 9, 8, 3, 2, 8, 2, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap()
+                .with_groups(4)
+                .unwrap(),
+            50,
+        );
     }
 
     #[test]
@@ -258,10 +398,44 @@ mod tests {
     fn im2col_row_layout() {
         let l = ConvLayer::new(2, 3, 3, 2, 2, 1, 1, 1).unwrap();
         let input: Vec<f32> = (0..18).map(|x| x as f32).collect();
-        let mut row = vec![0f32; l.ops_per_output_value()];
+        let mut row = vec![0f32; l.im2col_width()];
         im2col_row(&l, &input, l.patch_id(0, 0), &mut row);
         // channel 0 window then channel 1 window, each row-major
         assert_eq!(row, vec![0., 1., 3., 4., 9., 10., 12., 13.]);
+    }
+
+    #[test]
+    fn im2col_row_dilated_layout() {
+        let l = ConvLayer::new(1, 5, 5, 2, 2, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap();
+        let input: Vec<f32> = (0..25).map(|x| x as f32).collect();
+        let mut row = vec![0f32; l.im2col_width()];
+        im2col_row(&l, &input, l.patch_id(0, 0), &mut row);
+        // taps (0,0) (0,2) (2,0) (2,2)
+        assert_eq!(row, vec![0., 2., 10., 12.]);
+    }
+
+    #[test]
+    fn kernel_matrix_zero_expands_groups() {
+        let l = ConvLayer::new(2, 4, 4, 2, 2, 2, 1, 1)
+            .unwrap()
+            .with_groups(2)
+            .unwrap();
+        let kernels: Vec<f32> = (1..=8).map(|x| x as f32).collect();
+        let m = kernel_matrix(&l, &kernels); // [2·4, 2]
+        assert_eq!(m.len(), 16);
+        // kernel 0 occupies rows 0..4 (channel 0), zero elsewhere
+        for e in 0..4 {
+            assert_eq!(m[e * 2], (e + 1) as f32);
+            assert_eq!(m[(e + 4) * 2], 0.0);
+        }
+        // kernel 1 occupies rows 4..8 (channel 1)
+        for e in 0..4 {
+            assert_eq!(m[(e + 4) * 2 + 1], (e + 5) as f32);
+            assert_eq!(m[e * 2 + 1], 0.0);
+        }
     }
 
     #[test]

@@ -58,7 +58,10 @@ pub fn estimate_step_kernel(
     tile_g: usize,
     tpu: &TpuModel,
 ) -> KernelEstimate {
-    let d = layer.ops_per_output_value();
+    // The executed step GEMM contracts over the full im2col width (grouped
+    // layers use a zero-expanded kernel matrix — see conv::reference), so
+    // the estimate must size the same shape, not the per-group MAC count.
+    let d = layer.im2col_width();
     let n = layer.n_kernels;
     let f32b = 4u64;
     let vmem = f32b * (tile_g * d + d * n + tile_g * n) as u64;

@@ -145,7 +145,7 @@ pub fn build_s1_model(
 
     // Eq. 12: C_in·size_group_k + C_out·C_in·H_K·W_K + C_out·Σ_i P_g[i,k]
     //         ≤ size_MEM   (element counts; Remark 6's channel scaling).
-    let kernel_elems = (layer.c_out() * layer.c_in * layer.h_k * layer.w_k) as f64;
+    let kernel_elems = layer.kernel_elements() as f64;
     for k in 0..kk {
         let mut e = LinExpr::new();
         for pxl_row in pxl_g.iter() {

@@ -578,6 +578,51 @@ mod tests {
         }
     }
 
+    /// Regression for the `c_in`-dense assumption audit: under channel
+    /// groups the kernel-load term shrinks (each kernel stores C_in/G
+    /// channels) but the *input*-load term still scales by the full C_in —
+    /// every group has kernels, so all channels of a footprint pixel load
+    /// together. The fast objective and the simulator must agree on both.
+    #[test]
+    fn grouped_layer_objective_matches_simulator() {
+        let l = ConvLayer::new(4, 7, 7, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_groups(4)
+            .unwrap(); // depthwise
+        let acc = Accelerator::for_group_size(&l, 2);
+        let sim = Simulator::new(l, Platform::new(acc));
+        for s in [strategy::row_by_row(&l, 2), strategy::zigzag(&l, 2)] {
+            let report = sim.run(&s).unwrap();
+            let fast_loads = grouping_loads(&l, &s.groups) * l.c_in as u64;
+            // depthwise kernels: 4 × 1×3×3 = 36 elements, not 4 × 4×3×3
+            let kernel_elements = l.kernel_elements() as u64;
+            assert_eq!(kernel_elements, 36);
+            assert_eq!(report.total_loaded(), fast_loads + kernel_elements, "{}", s.name);
+            let fast = grouping_duration(&l, &acc, &s.groups);
+            assert_eq!(report.duration - kernel_elements, fast, "{}", s.name);
+        }
+    }
+
+    /// Same contract on a dilated layer: footprints are hole-y lattices but
+    /// the objective/simulator agreement is unchanged.
+    #[test]
+    fn dilated_layer_objective_matches_simulator() {
+        let l = ConvLayer::new(2, 9, 9, 3, 3, 2, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap();
+        let acc = Accelerator::for_group_size(&l, 3);
+        let sim = Simulator::new(l, Platform::new(acc));
+        for s in [strategy::row_by_row(&l, 3), strategy::hilbert(&l, 3)] {
+            let report = sim.run(&s).unwrap();
+            let fast_loads = grouping_loads(&l, &s.groups) * l.c_in as u64;
+            let kernel_elements = l.kernel_elements() as u64;
+            assert_eq!(report.total_loaded(), fast_loads + kernel_elements, "{}", s.name);
+            let fast = grouping_duration(&l, &acc, &s.groups);
+            assert_eq!(report.duration - kernel_elements, fast, "{}", s.name);
+        }
+    }
+
     #[test]
     fn multichannel_loads_scale_by_c_in() {
         let l = ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap();

@@ -1,13 +1,24 @@
 //! Sparse patch-overlap graph.
 //!
-//! Two patches share input pixels iff their receptive-field rectangles
-//! intersect, and a patch's rectangle only reaches a bounded neighborhood of
-//! output coordinates: `P_{i,j}` and `P_{i',j'}` overlap exactly when
-//! `|i − i'| · s_h < H_K` and `|j − j'| · s_w < W_K` (Definition 10). The
-//! overlap size is then analytic — `(H_K − |Δi|·s_h) · (W_K − |Δj|·s_w)`
-//! pixels — so the whole graph is O(|X| · deg) to build with **zero** pixel-set
-//! operations, and `deg ≤ (2⌈H_K/s_h⌉ − 1)(2⌈W_K/s_w⌉ − 1) − 1` is a small
-//! constant (24 for the paper's 3×3 stride-1 layers).
+//! Two patches share input pixels iff their dilated tap lattices intersect.
+//! Along one axis, the taps of `P_i` and `P_{i'}` are arithmetic
+//! progressions with step `d` and length `K`, offset by `δ = |i − i'|·s`;
+//! they share taps iff `d | δ` **and** `δ/d < K`, and then exactly
+//! `K − δ/d` of them. With `g = gcd(s, d)`, `t = d/g` and `u = s/g`, the
+//! divisibility condition reads `Δ ≡ 0 (mod t)`, so neighbor offsets along
+//! the axis are the multiples `Δ = m·t` with `|m| ≤ ⌈K/u⌉ − 1` — a closed
+//! form that collapses to the dense rule (`|Δ|·s < K`, overlap `K − |Δ|·s`)
+//! at `d = 1`. The overlap size is the product of the two axis counts, so
+//! the whole graph is O(|X| · deg) to build with **zero** pixel-set
+//! operations, and
+//! `deg ≤ (2⌈H_K/u_h⌉ − 1)(2⌈W_K/u_w⌉ − 1) − 1` with `u = s/gcd(s, d)`
+//! is a small constant (24 for the paper's 3×3 stride-1 dense layers; the
+//! *same* 24 for a dilated 3×3 stride-1 layer, whose lattice holes thin the
+//! offsets but `u_h = 1` admits every multiple of `t_h`).
+//!
+//! Channel groups never appear here: the spatial footprint of a patch is
+//! group-independent (every group has kernels, so all `C_in` channels of a
+//! footprint pixel load together — see [`crate::conv::ConvLayer`]).
 //!
 //! The optimizer uses the graph two ways:
 //! * the greedy construction scores only a new patch's neighbors instead of
@@ -32,37 +43,63 @@ pub struct OverlapGraph {
     neighbors: Vec<(PatchId, u32)>,
 }
 
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Per-axis neighborhood parameters: offsets are `Δ = m·t` for
+/// `|m| ≤ m_max`, with `m` taps of overlap `k − |m|·u`.
+struct Axis {
+    /// Offset step `t = d / gcd(s, d)` — only these `Δ` land on the lattice.
+    t: usize,
+    /// Overlap decrement per step `u = s / gcd(s, d)`.
+    u: usize,
+    /// `⌈K/u⌉ − 1` — the largest `|m|` with a positive overlap.
+    m_max: usize,
+}
+
+impl Axis {
+    fn new(k: usize, s: usize, d: usize) -> Axis {
+        let g = gcd(s, d);
+        let u = s / g;
+        Axis { t: d / g, u, m_max: (k - 1) / u }
+    }
+}
+
 impl OverlapGraph {
     /// Build the graph for a layer. `O(|X| · deg)`, no pixel-set operations.
     pub fn build(layer: &ConvLayer) -> Self {
         let h_out = layer.h_out();
         let w_out = layer.w_out();
         let n = h_out * w_out;
-        // Largest output-coordinate distance at which rectangles still meet.
-        let dh_max = (layer.h_k - 1) / layer.s_h;
-        let dw_max = (layer.w_k - 1) / layer.s_w;
-        let max_deg = (2 * dh_max + 1) * (2 * dw_max + 1) - 1;
+        let ax_h = Axis::new(layer.h_k, layer.s_h, layer.d_h);
+        let ax_w = Axis::new(layer.w_k, layer.s_w, layer.d_w);
+        let max_deg = (2 * ax_h.m_max + 1) * (2 * ax_w.m_max + 1) - 1;
 
         let mut offsets = Vec::with_capacity(n + 1);
         let mut neighbors = Vec::with_capacity(n * max_deg);
         offsets.push(0u32);
         for i in 0..h_out {
             for j in 0..w_out {
-                for di in -(dh_max as isize)..=dh_max as isize {
-                    let ni = i as isize + di;
+                for mi in -(ax_h.m_max as isize)..=ax_h.m_max as isize {
+                    let ni = i as isize + mi * ax_h.t as isize;
                     if ni < 0 || ni as usize >= h_out {
                         continue;
                     }
-                    let rows = layer.h_k - di.unsigned_abs() * layer.s_h;
-                    for dj in -(dw_max as isize)..=dw_max as isize {
-                        if di == 0 && dj == 0 {
+                    let rows = layer.h_k - mi.unsigned_abs() * ax_h.u;
+                    for mj in -(ax_w.m_max as isize)..=ax_w.m_max as isize {
+                        if mi == 0 && mj == 0 {
                             continue;
                         }
-                        let nj = j as isize + dj;
+                        let nj = j as isize + mj * ax_w.t as isize;
                         if nj < 0 || nj as usize >= w_out {
                             continue;
                         }
-                        let cols = layer.w_k - dj.unsigned_abs() * layer.s_w;
+                        let cols = layer.w_k - mj.unsigned_abs() * ax_w.u;
                         let id = (ni as usize * w_out + nj as usize) as PatchId;
                         neighbors.push((id, (rows * cols) as u32));
                     }
@@ -98,6 +135,15 @@ impl OverlapGraph {
             .unwrap_or(0)
     }
 
+    /// The closed-form degree bound
+    /// `(2⌈H_K/u_h⌉ − 1)(2⌈W_K/u_w⌉ − 1) − 1`, `u = s/gcd(s, d)` — what
+    /// [`OverlapGraph::max_degree`] can never exceed.
+    pub fn degree_bound(layer: &ConvLayer) -> usize {
+        let ax_h = Axis::new(layer.h_k, layer.s_h, layer.d_h);
+        let ax_w = Axis::new(layer.w_k, layer.s_w, layer.d_w);
+        (2 * ax_h.m_max + 1) * (2 * ax_w.m_max + 1) - 1
+    }
+
     /// Total directed edge count.
     pub fn edge_count(&self) -> usize {
         self.neighbors.len()
@@ -118,15 +164,25 @@ impl OverlapGraph {
 mod tests {
     use super::*;
 
-    fn check_against_rects(layer: &ConvLayer) {
+    fn check_against_layer(layer: &ConvLayer) {
         let g = OverlapGraph::build(layer);
         assert_eq!(g.n_patches(), layer.n_patches());
+        assert!(
+            g.max_degree() <= OverlapGraph::degree_bound(layer),
+            "degree bound violated for {layer}"
+        );
         for a in layer.all_patches() {
-            // Every listed edge matches the rectangle intersection…
+            // Every listed edge matches the analytic patch overlap **and**
+            // the brute-force pixel-set intersection…
             let mut prev_id = None;
             for &(b, size) in g.neighbors(a) {
                 assert_ne!(a, b, "no self loops");
                 assert_eq!(size as usize, layer.patch_overlap(a, b), "{a}-{b}");
+                assert_eq!(
+                    size as usize,
+                    layer.patch_pixels(a).intersection_len(&layer.patch_pixels(b)),
+                    "{layer}: {a}-{b} vs brute force"
+                );
                 assert!(size > 0, "{a}-{b} listed but disjoint");
                 if let Some(p) = prev_id {
                     assert!(p < b, "row of {a} not sorted");
@@ -136,7 +192,13 @@ mod tests {
             // …and every non-listed pair is disjoint.
             for b in layer.all_patches() {
                 if a != b && g.overlap(a, b) == 0 {
-                    assert_eq!(layer.patch_overlap(a, b), 0, "{a}-{b} missing");
+                    assert_eq!(
+                        layer
+                            .patch_pixels(a)
+                            .intersection_len(&layer.patch_pixels(b)),
+                        0,
+                        "{layer}: {a}-{b} missing"
+                    );
                 }
             }
         }
@@ -144,23 +206,69 @@ mod tests {
 
     #[test]
     fn matches_rect_intersection_unit_stride() {
-        check_against_rects(&ConvLayer::square(1, 7, 3, 1));
-        check_against_rects(&ConvLayer::new(2, 5, 8, 3, 3, 2, 1, 1).unwrap());
+        check_against_layer(&ConvLayer::square(1, 7, 3, 1));
+        check_against_layer(&ConvLayer::new(2, 5, 8, 3, 3, 2, 1, 1).unwrap());
         // 5×5 kernels: wider neighborhoods (LeNet family).
-        check_against_rects(&ConvLayer::new(1, 12, 12, 5, 5, 1, 1, 1).unwrap());
+        check_against_layer(&ConvLayer::new(1, 12, 12, 5, 5, 1, 1, 1).unwrap());
     }
 
     #[test]
     fn matches_rect_intersection_strided() {
         // stride 2: overlap shrinks by 2 pixels per step of distance
-        check_against_rects(&ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap());
+        check_against_layer(&ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap());
         // stride 3 with 3×3 kernels: fully disjoint patches, empty graph
         let l = ConvLayer::new(1, 9, 9, 3, 3, 1, 3, 3).unwrap();
         let g = OverlapGraph::build(&l);
         assert_eq!(g.edge_count(), 0);
-        check_against_rects(&l);
+        check_against_layer(&l);
         // anisotropic strides
-        check_against_rects(&ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 1).unwrap());
+        check_against_layer(&ConvLayer::new(1, 7, 9, 3, 3, 1, 2, 1).unwrap());
+    }
+
+    #[test]
+    fn matches_brute_force_dilated() {
+        // dilation 2, stride 1: offsets must be even to overlap
+        check_against_layer(
+            &ConvLayer::new(1, 9, 9, 3, 3, 1, 1, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+        );
+        // dilation 2, stride 2: every offset lands on the lattice (gcd = 2)
+        check_against_layer(
+            &ConvLayer::new(1, 11, 11, 3, 3, 1, 2, 2)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+        );
+        // dilation 3, stride 2: gcd = 1 — only offsets divisible by 3
+        check_against_layer(
+            &ConvLayer::new(1, 13, 13, 3, 3, 1, 2, 2)
+                .unwrap()
+                .with_dilation(3, 3)
+                .unwrap(),
+        );
+        // anisotropic: height dilated, width strided
+        check_against_layer(
+            &ConvLayer::new(1, 11, 9, 3, 3, 1, 1, 2)
+                .unwrap()
+                .with_dilation(2, 1)
+                .unwrap(),
+        );
+    }
+
+    /// Groups don't change the spatial graph at all.
+    #[test]
+    fn groups_do_not_change_the_graph() {
+        let dense = ConvLayer::new(4, 8, 8, 3, 3, 4, 1, 1).unwrap();
+        let grouped = dense.with_groups(4).unwrap();
+        let a = OverlapGraph::build(&dense);
+        let b = OverlapGraph::build(&grouped);
+        assert_eq!(a.edge_count(), b.edge_count());
+        for p in dense.all_patches() {
+            assert_eq!(a.neighbors(p), b.neighbors(p));
+        }
+        check_against_layer(&grouped);
     }
 
     #[test]
@@ -169,6 +277,7 @@ mod tests {
         let g = OverlapGraph::build(&l);
         // interior patch: full 5×5 neighborhood minus itself
         assert_eq!(g.max_degree(), 24);
+        assert_eq!(OverlapGraph::degree_bound(&l), 24);
         // corner patch 0: 3×3 neighborhood minus itself
         assert_eq!(g.degree(0), 8);
         for a in l.all_patches() {
@@ -176,6 +285,26 @@ mod tests {
                 assert_eq!(g.overlap(b, a), size as usize, "symmetry {a}-{b}");
             }
         }
+    }
+
+    /// Dilated stride-1 3×3: u = 1 so the *count* bound stays 24, but the
+    /// neighborhood is spread over offsets that are multiples of d.
+    #[test]
+    fn dilated_degree_bound() {
+        let l = ConvLayer::new(1, 13, 13, 3, 3, 1, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap(); // 9×9 patches
+        assert_eq!(OverlapGraph::degree_bound(&l), 24);
+        let g = OverlapGraph::build(&l);
+        assert_eq!(g.max_degree(), 24); // interior patches reach ±4 in steps of 2
+        let center = l.patch_id(4, 4);
+        // offset 1 falls in a hole; offset 2 overlaps 2×3 taps
+        assert_eq!(g.overlap(center, l.patch_id(4, 5)), 0);
+        assert_eq!(g.overlap(center, l.patch_id(4, 6)), 6);
+        // offset 4 overlaps 1×3 taps; offset 6 is beyond reach
+        assert_eq!(g.overlap(center, l.patch_id(4, 8)), 3);
+        assert_eq!(g.overlap(center, l.patch_id(4, 2)), 6);
     }
 
     #[test]

@@ -634,6 +634,25 @@ mod tests {
             (ConvLayer::square(1, 8, 3, 1), 4, 9),
             (ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap(), 3, 6), // strided
             (ConvLayer::new(1, 12, 10, 5, 5, 1, 1, 1).unwrap(), 4, 12), // 5×5
+            // dilated: the incremental graph scoring must stay exact when
+            // patch lattices have holes (the mobilenet_slim dil3 shape)
+            (
+                ConvLayer::new(8, 12, 12, 3, 3, 8, 1, 1)
+                    .unwrap()
+                    .with_dilation(2, 2)
+                    .unwrap(),
+                4,
+                16,
+            ),
+            // depthwise + stride (the mobilenet_slim dw3 shape)
+            (
+                ConvLayer::new(4, 18, 18, 3, 3, 4, 2, 2)
+                    .unwrap()
+                    .with_groups(4)
+                    .unwrap(),
+                4,
+                16,
+            ),
         ] {
             assert_eq!(
                 greedy(&l, g, k),
@@ -662,6 +681,14 @@ mod tests {
             (ConvLayer::square(1, 6, 3, 1), 2usize),
             (ConvLayer::square(1, 8, 3, 1), 4),
             (ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap(), 3), // strided
+            // dilated: delta evaluation over hole-y footprints
+            (
+                ConvLayer::new(1, 11, 11, 3, 3, 1, 1, 1)
+                    .unwrap()
+                    .with_dilation(2, 2)
+                    .unwrap(),
+                3,
+            ),
         ] {
             let k = l.n_patches().div_ceil(g);
             let start = normalize(&strategy::row_by_row(&l, g).groups, g, k);

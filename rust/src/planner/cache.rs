@@ -40,8 +40,9 @@ impl CacheKey {
         anneal_iters: u64,
         anneal_starts: usize,
     ) -> CacheKey {
+        // v2: dilation + channel groups joined the layer geometry.
         let canonical = format!(
-            "v1|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|acc:{},{},{},{},{}|g:{}|k:{}|anneal:{}x{}@{}",
+            "v2|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|dil:{}x{}|grp:{}|acc:{},{},{},{},{}|g:{}|k:{}|anneal:{}x{}@{}",
             layer.c_in,
             layer.h_in,
             layer.w_in,
@@ -50,6 +51,9 @@ impl CacheKey {
             layer.w_k,
             layer.s_h,
             layer.s_w,
+            layer.d_h,
+            layer.d_w,
+            layer.groups,
             acc.nbop_pe,
             acc.t_acc,
             acc.size_mem,
@@ -201,7 +205,7 @@ mod tests {
         cache.put(&key, &entry).unwrap();
         // same filename, different stored key → treated as a miss
         let text = std::fs::read_to_string(dir.join(key.filename())).unwrap();
-        let tampered = text.replace("v1|", "v0|");
+        let tampered = text.replace("v2|", "v0|");
         std::fs::write(dir.join(key.filename()), tampered).unwrap();
         assert!(cache.get(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
@@ -213,6 +217,29 @@ mod tests {
         let (_, b) = sample_key(2);
         assert_ne!(a.canonical(), b.canonical());
         assert_ne!(a.filename(), b.filename());
+    }
+
+    /// Dilation and groups are layer geometry: same dense shape with either
+    /// set must be a different planning problem.
+    #[test]
+    fn dilation_and_groups_are_part_of_the_key() {
+        let dense = ConvLayer::new(4, 12, 12, 3, 3, 4, 1, 1).unwrap();
+        let acc = Accelerator::for_group_size(&dense, 2);
+        let base = CacheKey::new(&dense, &acc, 2, 8, 1, 100, 1);
+        let dilated = CacheKey::new(
+            &dense.with_dilation(2, 2).unwrap(),
+            &acc,
+            2,
+            8,
+            1,
+            100,
+            1,
+        );
+        let grouped =
+            CacheKey::new(&dense.with_groups(4).unwrap(), &acc, 2, 8, 1, 100, 1);
+        assert_ne!(base.canonical(), dilated.canonical());
+        assert_ne!(base.canonical(), grouped.canonical());
+        assert_ne!(dilated.canonical(), grouped.canonical());
     }
 
     #[test]

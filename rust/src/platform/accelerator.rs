@@ -42,10 +42,12 @@ impl Accelerator {
     /// `nb_patches_max_S1` directly.
     pub fn for_group_size(layer: &ConvLayer, group: usize) -> Self {
         let nbop = (group * layer.ops_per_patch()) as u64;
-        // On-chip memory sized per the paper's §7.1 memory assumption:
-        // all kernels + `group` worth of input patches + their outputs fit.
+        // On-chip memory sized per the paper's §7.1 memory assumption: all
+        // kernels + `group` worth of input patches + their outputs fit. Input
+        // sizing uses `input_elements_per_patch` (all C_in channels of the
+        // footprint), which exceeds `ops_per_output_value` when groups > 1.
         let mem = layer.kernel_elements() as u64
-            + (group * layer.ops_per_output_value()) as u64
+            + (group * layer.input_elements_per_patch()) as u64
             + (group * layer.c_out()) as u64;
         Accelerator { nbop_pe: nbop, t_acc: 1, size_mem: mem, t_l: 1, t_w: 0 }
     }

@@ -65,7 +65,7 @@ impl ComputeBackend for RustOracleBackend {
         kernel_matrix: &[f32],
         rows: usize,
     ) -> Result<Vec<f32>, String> {
-        let d = layer.ops_per_output_value();
+        let d = layer.im2col_width();
         let n = layer.n_kernels;
         if patches.len() != rows * d {
             return Err(format!(

@@ -219,7 +219,7 @@ impl<'a> FunctionalState<'a> {
         }
         // a_6: compute on the backend from *on-chip* data only.
         if !st.group.is_empty() {
-            let d = layer.ops_per_output_value();
+            let d = layer.im2col_width();
             let mut pm = vec![0f32; st.group.len() * d];
             for (r, &p) in st.group.iter().enumerate() {
                 self.gather_patch(layer, p, &mut pm[r * d..(r + 1) * d])?;
@@ -236,7 +236,9 @@ impl<'a> FunctionalState<'a> {
         Ok(())
     }
 
-    /// im2col gather of one patch from the **on-chip** store.
+    /// im2col gather of one patch from the **on-chip** store (dilated taps
+    /// at `h·d_h` / `w·d_w`; the row spans all `C_in` channels — see
+    /// [`crate::conv::reference::im2col_row`]).
     fn gather_patch(
         &self,
         layer: &ConvLayer,
@@ -250,7 +252,9 @@ impl<'a> FunctionalState<'a> {
         for c in 0..layer.c_in {
             for h in 0..layer.h_k {
                 for w in 0..layer.w_k {
-                    let py = (p.i * layer.s_h + h) * w_in + p.j * layer.s_w + w;
+                    let py = (p.i * layer.s_h + h * layer.d_h) * w_in
+                        + p.j * layer.s_w
+                        + w * layer.d_w;
                     let v = self.onchip_input[c * px_per_ch + py];
                     if v.is_nan() {
                         return Err(SimError::ValueNotResident { pixel: py as u32 });
@@ -310,6 +314,41 @@ mod tests {
             assert_eq!(r.functional_ok(1e-5), Some(true), "{}", s.name);
             // every output value was written (no NaN left)
             assert!(r.output.unwrap().iter().all(|v| !v.is_nan()));
+        }
+    }
+
+    /// The functional simulation must reproduce the reference convolution
+    /// for dilated and grouped layers too (stepwise gather + zero-expanded
+    /// kernel matrix).
+    #[test]
+    fn functional_run_matches_reference_generalized() {
+        let layers = [
+            ConvLayer::new(2, 9, 9, 3, 3, 2, 1, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+            ConvLayer::new(4, 7, 7, 3, 3, 4, 1, 1)
+                .unwrap()
+                .with_groups(4)
+                .unwrap(),
+            ConvLayer::new(4, 9, 9, 3, 3, 8, 2, 2)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap()
+                .with_groups(2)
+                .unwrap(),
+        ];
+        for l in layers {
+            let acc = Accelerator::for_group_size(&l, 2);
+            let sim = Simulator::new(l, Platform::new(acc));
+            let input = reference::synth_tensor(l.input_dims().len(), 5);
+            let kernels = reference::synth_tensor(l.kernel_elements(), 6);
+            let mut backend = RustOracleBackend;
+            let r = sim
+                .run_functional(&strategy::zigzag(&l, 2), &input, &kernels, &mut backend)
+                .unwrap();
+            assert_eq!(r.functional_ok(1e-4), Some(true), "{l}");
+            assert!(r.output.unwrap().iter().all(|v| !v.is_nan()), "{l}");
         }
     }
 

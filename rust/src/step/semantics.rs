@@ -183,6 +183,28 @@ mod tests {
         assert!(mem.out.contains(0));
     }
 
+    /// Grouped layers shrink per-kernel storage: element accounting must use
+    /// `kernel_dims` (C_in/G·H_K·W_K), not the dense C_in·H_K·W_K.
+    #[test]
+    fn grouped_kernel_element_accounting() {
+        let l = ConvLayer::new(4, 5, 5, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_groups(4)
+            .unwrap(); // depthwise: 4 kernels × 9 elements
+        let mut mem = MemoryState::initial(&l);
+        let mut s = Step::noop(l.n_pixels(), l.n_kernels, l.n_patches());
+        s.load_inp = l.patch_pixels(0);
+        s.load_ker = PixelSet::full(l.n_kernels);
+        s.group = vec![0];
+        let out = apply(&l, &acc(), &mut mem, &s, true).unwrap();
+        // loads: 9 px × 4 ch + 4 kernels × 9 = 36 + 36
+        assert_eq!(out.cost.loaded_elements, 72);
+        // MACs: ops_per_patch = (4/4)·9·4
+        assert_eq!(out.cost.macs, 36);
+        // occupancy: inputs 36 + kernels 36 + outputs 1×4
+        assert_eq!(out.occupancy, 76);
+    }
+
     #[test]
     fn free_nonresident_fails() {
         let l = layer();

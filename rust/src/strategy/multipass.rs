@@ -55,6 +55,15 @@ impl MultiPassStrategy {
         if kernels_per_pass == 0 {
             return Err("kernels_per_pass must be ≥ 1".into());
         }
+        // Arbitrary kernel chunks would cut across channel groups and the
+        // pass sub-layer (n_kernels = chunk size) would no longer divide by
+        // `groups`; gate until chunking is made group-aligned.
+        if layer.groups > 1 {
+            return Err(format!(
+                "multi-pass strategies do not support grouped layers yet (groups = {})",
+                layer.groups
+            ));
+        }
         let chunks: Vec<Vec<usize>> = (0..layer.n_kernels)
             .collect::<Vec<_>>()
             .chunks(kernels_per_pass)
@@ -220,6 +229,19 @@ mod tests {
         assert_eq!(mp.pass_layer(&l, 0).n_kernels, 3);
         assert_eq!(mp.pass_layer(&l, 1).n_kernels, 1);
         assert!(MultiPassStrategy::new(&l, 0, strategy::zigzag(&l, 2)).is_err());
+    }
+
+    /// Grouped layers are rejected: a kernel chunk need not align with the
+    /// channel groups, so the pass sub-layer would be invalid.
+    #[test]
+    fn grouped_layers_are_gated() {
+        let l = ConvLayer::new(2, 6, 6, 3, 3, 4, 1, 1)
+            .unwrap()
+            .with_groups(2)
+            .unwrap();
+        let err = MultiPassStrategy::new(&l, 3, strategy::zigzag(&l, 2));
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("grouped"));
     }
 
     #[test]

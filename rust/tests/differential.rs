@@ -1,0 +1,139 @@
+//! The Rust half of the Rust↔Python differential harness.
+//!
+//! Simulates a fixed set of fuzz networks (`config::fuzz::random_network`,
+//! seeds 1..=24 — asserted below to cover stride > 1, dilation > 1,
+//! groups > 1 and pooling) and writes the interchange file
+//! `target/differential_cases.json`: every case carries the full network
+//! spec (layers with dilation/groups, accelerators, explicit strategy
+//! groups, plumbing flags) plus the Rust simulator's results. The Python
+//! oracle (`python/oracle_sim.py`, exercised by
+//! `python/tests/test_differential.py`) replays the specs independently and
+//! asserts bit-equal durations, loaded elements and step counts.
+//!
+//! CI runs this as part of tier-1 `cargo test`, uploads the JSON as an
+//! artifact, and a dependent job replays it under pytest.
+
+use std::path::PathBuf;
+
+use convoffload::config::fuzz::{network_to_json, random_network};
+use convoffload::util::json::Json;
+
+/// Seed range shared with `fuzz::tests::seed_range_covers_all_feature_axes`
+/// and the Python side (which just reads whatever the file contains).
+const SEEDS: std::ops::RangeInclusive<u64> = 1..=24;
+
+/// Workspace `target/` directory: the manifest dir is `<repo>/rust`, the
+/// workspace target sits next to it.
+fn target_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("CARGO_TARGET_DIR") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("target")
+}
+
+#[test]
+fn emit_differential_cases() {
+    let mut cases: Vec<Json> = Vec::new();
+    let (mut st, mut di, mut gr, mut po) = (false, false, false, false);
+
+    for seed in SEEDS {
+        let net = random_network(seed);
+        let (s, d, g, p) = net.features();
+        st |= s;
+        di |= d;
+        gr |= g;
+        po |= p;
+
+        let report = net
+            .to_network()
+            .run()
+            .unwrap_or_else(|e| panic!("seed {seed}: simulation failed: {e}"));
+
+        let mut case = network_to_json(&net);
+        let per_stage: Vec<Json> = report
+            .per_stage
+            .iter()
+            .map(|sr| {
+                let mut o = Json::obj();
+                o.set("name", sr.name.as_str())
+                    .set("duration", sr.duration)
+                    .set("loaded_elements", sr.loaded_elements)
+                    .set("n_steps", sr.n_steps);
+                o
+            })
+            .collect();
+        let mut expected = Json::obj();
+        expected
+            .set("total_duration", report.total_duration)
+            .set("per_stage", Json::Arr(per_stage));
+        case.set("expected", expected);
+        cases.push(case);
+    }
+
+    // The acceptance bar: the emitted set must cover every feature axis.
+    assert!(st, "differential set has no strided case");
+    assert!(di, "differential set has no dilated case");
+    assert!(gr, "differential set has no grouped case");
+    assert!(po, "differential set has no pooled case");
+    assert!(cases.len() >= 20, "need ≥ 20 cases, got {}", cases.len());
+
+    let mut doc = Json::obj();
+    doc.set("version", 1u64)
+        .set("generator", "config::fuzz::random_network")
+        .set("cases", Json::Arr(cases));
+
+    let dir = target_dir();
+    std::fs::create_dir_all(&dir).expect("create target dir");
+    let path = dir.join("differential_cases.json");
+    std::fs::write(&path, doc.to_string_pretty())
+        .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    eprintln!("wrote {} ({} cases)", path.display(), SEEDS.count());
+}
+
+/// The interchange must be loss-free: parse the emitted file back and check
+/// a couple of invariants so a silent serialization regression cannot ship
+/// a file pytest would mis-read.
+#[test]
+fn emitted_file_roundtrips() {
+    // Generate independently of the writer test (tests run in any order).
+    let net = random_network(7);
+    let j = network_to_json(&net);
+    let parsed = convoffload::util::json::parse(&j.to_string_pretty()).unwrap();
+    let stages = parsed.get("stages").and_then(Json::as_arr).unwrap();
+    assert_eq!(stages.len(), net.stages.len());
+    for (js, s) in stages.iter().zip(&net.stages) {
+        let layer = js.get("layer").unwrap();
+        for (key, want) in [
+            ("c_in", s.layer.c_in),
+            ("h_in", s.layer.h_in),
+            ("w_in", s.layer.w_in),
+            ("h_k", s.layer.h_k),
+            ("w_k", s.layer.w_k),
+            ("n_kernels", s.layer.n_kernels),
+            ("s_h", s.layer.s_h),
+            ("s_w", s.layer.s_w),
+            ("d_h", s.layer.d_h),
+            ("d_w", s.layer.d_w),
+            ("groups", s.layer.groups),
+        ] {
+            assert_eq!(
+                layer.get(key).and_then(Json::as_usize),
+                Some(want),
+                "{key} of stage {}",
+                s.name
+            );
+        }
+        let groups = js.get("strategy_groups").and_then(Json::as_arr).unwrap();
+        let flat: Vec<u32> = groups
+            .iter()
+            .flat_map(|g| g.as_arr().unwrap().iter())
+            .map(|v| v.as_u64().unwrap() as u32)
+            .collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, s.layer.all_patches().collect::<Vec<_>>());
+    }
+}

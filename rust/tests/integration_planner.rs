@@ -173,6 +173,38 @@ fn planner_never_regresses_the_analytic_baseline() {
     }
 }
 
+/// The generalized-zoo baseline added with dilation/groups support: the
+/// mobilenet_slim preset (depthwise 3x3 s2 → pointwise 1x1 → dilated 3x3)
+/// must never do worse than the analytic anneal-free portfolio winners.
+/// The numbers are cross-checked from an independent code base by the
+/// Python oracle (python/tests/test_oracle_sim.py::TestPlannerBaselines):
+/// dw3 = 325 loaded px (hilbert), pw1 = 64 (disjoint 1x1 patches),
+/// dil3 = 165 (greedy; the scan orders pay 288 because dilation holes break
+/// adjacent-patch reuse) — total 3568 cycles at group 4.
+#[test]
+fn mobilenet_slim_never_regresses_the_analytic_baseline() {
+    let preset = network_preset("mobilenet_slim").unwrap();
+    let plan = NetworkPlanner::new(quick_options()).plan(&preset).unwrap();
+    let per_layer_px = [325u64, 64, 165];
+    assert_eq!(plan.layers.len(), per_layer_px.len());
+    for (lp, &bound) in plan.layers.iter().zip(&per_layer_px) {
+        assert!(
+            lp.loaded_pixels <= bound,
+            "mobilenet_slim/{}: {} loaded pixels > analytic baseline {bound}",
+            lp.stage,
+            lp.loaded_pixels
+        );
+    }
+    assert!(
+        plan.total_duration <= 3568,
+        "mobilenet_slim: {} cycles > analytic baseline 3568",
+        plan.total_duration
+    );
+    // The pointwise stage has zero patch overlap: 64 loads is optimal, so
+    // the planner must hit it exactly.
+    assert_eq!(plan.layers[1].loaded_pixels, 64);
+}
+
 /// ResNet-8's two stage-2 convolutions share one geometry: the planner races
 /// it once and the twin rides the cache even within a single call.
 #[test]

@@ -11,8 +11,10 @@
 //! 5. simulator duration == fast-objective duration (+ kernel-load term);
 //! 6. strategy CSV/JSON round-trips preserve semantics.
 
+use convoffload::config::fuzz;
 use convoffload::conv::ConvLayer;
-use convoffload::optimizer::grouping_duration;
+use convoffload::optimizer::overlap::OverlapGraph;
+use convoffload::optimizer::{grouping_duration, grouping_loads};
 use convoffload::platform::{Accelerator, Platform};
 use convoffload::sim::{RustOracleBackend, Simulator};
 use convoffload::strategy::{
@@ -30,17 +32,19 @@ struct Scenario {
     strategy: GroupedStrategy,
 }
 
-fn gen_scenario(rng: &mut Rng) -> Scenario {
-    // random layer: kernels 1..3 square, inputs up to 10, channels 1..3,
-    // strides 1..2, kernel count 1..3
-    let h_k = 1 + rng.index(3);
-    let s = 1 + rng.index(2);
-    let h_in = h_k + rng.index(8);
-    let w_in = h_k + rng.index(8);
-    let c_in = 1 + rng.index(3);
-    let n_k = 1 + rng.index(3);
-    let layer = ConvLayer::new(c_in, h_in, w_in, h_k, h_k, n_k, s, s).unwrap();
+/// Random generalized layer: delegates to the fuzzer's sampler
+/// (`config::fuzz::random_layer` — strides, dilation, channel groups incl.
+/// depthwise) over a random small input, so the property tests
+/// automatically cover every feature axis the fuzzer grows.
+fn gen_layer(rng: &mut Rng) -> ConvLayer {
+    let c = 1 + rng.index(4);
+    let h = 4 + rng.index(12);
+    let w = 4 + rng.index(12);
+    fuzz::random_layer(rng, c, h, w)
+}
 
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let layer = gen_layer(rng);
     let group_size = 1 + rng.index(4);
     // random permutation of patches chunked into groups ≤ group_size
     let mut order: Vec<u32> = layer.all_patches().collect();
@@ -202,6 +206,104 @@ fn serialization_roundtrips_preserve_strategy() {
         }
         Ok(())
     });
+}
+
+/// The analytic overlap machinery must agree with brute-force `PixelSet`
+/// intersections on every random generalized layer: `patch_overlap` (the
+/// dilated-lattice closed form), the sparse graph's edge sizes, and the
+/// closed-form degree bound.
+#[test]
+fn analytic_overlaps_match_brute_force() {
+    let cfg = Config { cases: 80, ..Default::default() };
+    check(
+        &cfg,
+        gen_scenario,
+        shrink_scenario,
+        |s| {
+            let l = &s.layer;
+            let graph = OverlapGraph::build(l);
+            if graph.max_degree() > OverlapGraph::degree_bound(l) {
+                return Err(format!(
+                    "degree {} exceeds bound {} on {l}",
+                    graph.max_degree(),
+                    OverlapGraph::degree_bound(l)
+                ));
+            }
+            for a in l.all_patches() {
+                let pa = l.patch_pixels(a);
+                for b in l.all_patches() {
+                    let brute = pa.intersection_len(&l.patch_pixels(b));
+                    if a != b && graph.overlap(a, b) != brute {
+                        return Err(format!(
+                            "graph overlap({a},{b}) = {} but brute force = {brute} on {l}",
+                            graph.overlap(a, b)
+                        ));
+                    }
+                    let analytic = l.patch_overlap(a, b);
+                    if analytic != brute {
+                        return Err(format!(
+                            "patch_overlap({a},{b}) = {analytic} but brute force = {brute} on {l}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Any grouping's total loaded pixels is bounded below by the layer's
+/// distinct-pixel count (every needed pixel loads at least once) and above
+/// by the sum of group footprints (overlap reuse never hurts).
+#[test]
+fn grouping_loads_respect_distinct_pixel_bounds() {
+    let cfg = Config { cases: 80, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let l = &s.layer;
+        let all: Vec<u32> = l.all_patches().collect();
+        let distinct = l.group_pixels(&all).len() as u64;
+        let loads = grouping_loads(l, &s.strategy.groups);
+        if loads < distinct {
+            return Err(format!(
+                "loads {loads} below the distinct-pixel lower bound {distinct} on {l}"
+            ));
+        }
+        let upper: u64 = s
+            .strategy
+            .groups
+            .iter()
+            .map(|g| l.group_pixels(g).len() as u64)
+            .sum();
+        if loads > upper {
+            return Err(format!(
+                "loads {loads} above the footprint-sum upper bound {upper} on {l}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Every strategy the network fuzzer emits passes full §2.3 validation on
+/// its own accelerator — the generator's "valid by construction" contract.
+#[test]
+fn fuzz_network_strategies_validate() {
+    for seed in 0..60u64 {
+        let net = fuzz::random_network(seed);
+        for stage in &net.stages {
+            let report = strategy::validate(
+                &stage.layer,
+                &stage.accelerator,
+                &stage.strategy,
+                u32::MAX,
+            );
+            assert!(
+                report.is_valid(),
+                "seed {seed} stage {}: {:?}",
+                stage.name,
+                report.violations
+            );
+        }
+    }
 }
 
 #[test]
