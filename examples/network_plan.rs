@@ -1,6 +1,7 @@
 //! Network-level planning demo: plan LeNet-5, ResNet-8 and the
 //! depthwise-separable mobilenet_slim trunk with the portfolio race, then
-//! re-plan to show the strategy cache taking over.
+//! re-plan to show the strategy cache taking over, and finally plan LeNet-5
+//! under the double-buffered duration model to show hidden transfer time.
 //!
 //! Run with: `cargo run --release --example network_plan`
 
@@ -8,6 +9,7 @@ use convoffload::config::network_preset;
 use convoffload::planner::{
     format_plan_table, AcceleratorSpec, NetworkPlanner, PlanOptions, StrategyCache,
 };
+use convoffload::platform::OverlapMode;
 
 fn main() {
     let cache_dir = std::env::temp_dir().join(format!(
@@ -20,6 +22,7 @@ fn main() {
         anneal_iters: 20_000,
         anneal_starts: 2,
         threads: 0,
+        overlap: OverlapMode::Sequential,
     };
     let planner = NetworkPlanner::with_cache(
         options,
@@ -39,6 +42,24 @@ fn main() {
     println!(
         "re-planned {}: {} hits / {} misses, anneal iterations run: {}",
         again.network, again.cache_hits, again.cache_misses, again.anneal_iters_run
+    );
+
+    // Overlapped offloading: same network, double-buffered DMA — the race
+    // switches to the makespan objective and the report shows how much
+    // transfer time the timeline hides behind compute.
+    let db = NetworkPlanner::new(PlanOptions {
+        overlap: OverlapMode::DoubleBuffered,
+        anneal_iters: 20_000,
+        anneal_starts: 2,
+        ..PlanOptions::default()
+    })
+    .plan(&lenet)
+    .expect("plan");
+    println!(
+        "\nlenet5 double-buffered: {} cycles (sequential {}, {} hidden)",
+        db.total_duration,
+        db.total_sequential_duration,
+        db.total_sequential_duration - db.total_duration
     );
     let _ = std::fs::remove_dir_all(&cache_dir);
 }

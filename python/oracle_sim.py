@@ -123,6 +123,7 @@ class Accelerator:
     size_mem: int
     t_l: int
     t_w: int
+    overlap: str = "sequential"  # or "double-buffered"
 
 
 def accelerator_from_json(d: dict) -> Accelerator:
@@ -132,6 +133,23 @@ def accelerator_from_json(d: dict) -> Accelerator:
         size_mem=d["size_mem"],
         t_l=d["t_l"],
         t_w=d["t_w"],
+        overlap=d.get("overlap", "sequential"),
+    )
+
+
+def for_group_size(layer: Layer, group: int) -> Accelerator:
+    """The Rust ``Accelerator::for_group_size`` machine: §7.1 costs
+    (t_l = t_acc = 1, writes free) with memory sized for kernels + ``group``
+    input patches (all C_in channels) + their outputs."""
+    ops_per_patch = layer.kernel_dims_len * layer.n_kernels
+    input_elements_per_patch = layer.c_in * layer.h_k * layer.w_k
+    mem = (
+        layer.kernel_elements
+        + group * input_elements_per_patch
+        + group * layer.n_kernels
+    )
+    return Accelerator(
+        nbop_pe=group * ops_per_patch, t_acc=1, size_mem=mem, t_l=1, t_w=0
     )
 
 
@@ -197,6 +215,144 @@ def simulate_stage(
     )
 
 
+# ------------------------------------------------- overlapped timeline (§3.7)
+
+
+@dataclass
+class OverlapResult:
+    makespan: int
+    sequential_duration: int
+    dma_busy: int
+    compute_busy: int
+    n_prefetched: int  # steps whose load overlapped the previous compute
+
+
+class OverlapTimeline:
+    """The two-resource recurrence (one DMA channel, one compute unit).
+
+    Per step, the DMA channel runs the load phase then the write phase and
+    the compute unit runs the compute phase.  A load may start during the
+    previous step's compute only when ``can_prefetch`` (the double-buffer
+    residency condition) held; otherwise it waits for that compute
+    (serialization fallback).  Writes always wait for the compute that
+    produced their values.  Mirrors ``rust/src/step/cost.rs``.
+    """
+
+    def __init__(self):
+        self.dma_free = 0
+        self.comp_end = 0
+        self.dma_busy = 0
+        self.compute_busy = 0
+
+    def push(self, load, write, compute, can_prefetch):
+        load_ready = 0 if can_prefetch else self.comp_end
+        load_start = max(self.dma_free, load_ready)
+        load_end = load_start + load
+        write_end = max(load_end, self.comp_end) + write
+        comp_end = max(load_end, self.comp_end) + compute
+        self.dma_free = write_end
+        self.comp_end = comp_end
+        self.dma_busy += load + write
+        self.compute_busy += compute
+
+    def makespan(self):
+        return max(self.dma_free, self.comp_end)
+
+
+def simulate_stage_overlapped(
+    layer: Layer,
+    acc: Accelerator,
+    groups,
+    writeback: str = "every_step",
+) -> OverlapResult:
+    """Double-buffered replay of one grouped strategy.
+
+    Same Definition-16 lowering as :func:`simulate_stage`; instead of
+    summing step durations, phases are placed on the two-resource timeline.
+    A step may prefetch its loads during the previous compute iff the
+    previous step's on-chip occupancy plus the incoming elements fit in
+    ``size_mem``.
+    """
+    assert writeback in ("every_step", "at_end")
+    c_out = layer.n_kernels
+    resident: set = set()
+    pending_out = 0
+    seen = set()
+    timeline = OverlapTimeline()
+    sequential = 0
+    prev_occ = 0
+    n_prefetched = 0
+
+    for k, group in enumerate(groups):
+        assert group, "empty group in strategy"
+        for p in group:
+            assert p not in seen, f"patch {p} computed twice"
+            seen.add(p)
+        footprint = layer.group_pixels(group)
+        load = footprint - resident
+        loaded_el = len(load) * layer.c_in
+        if k == 0:
+            loaded_el += layer.kernel_elements
+        written = pending_out * c_out if writeback == "every_step" else 0
+        if writeback == "every_step":
+            pending_out = 0
+        can_prefetch = prev_occ + loaded_el <= acc.size_mem
+        n_prefetched += int(can_prefetch and k > 0)
+        timeline.push(
+            loaded_el * acc.t_l, written * acc.t_w, acc.t_acc, can_prefetch
+        )
+        sequential += loaded_el * acc.t_l + written * acc.t_w + acc.t_acc
+        pending_out += len(group)
+        resident = footprint
+        prev_occ = (
+            layer.kernel_elements
+            + len(footprint) * layer.c_in
+            + pending_out * c_out
+        )
+
+    assert seen == set(range(layer.n_patches)), "strategy must cover X exactly"
+    # Terminal flush: no loads, no compute, the remaining write-backs.
+    can_prefetch = prev_occ <= acc.size_mem
+    timeline.push(0, pending_out * c_out * acc.t_w, 0, can_prefetch)
+    sequential += pending_out * c_out * acc.t_w
+    return OverlapResult(
+        makespan=timeline.makespan(),
+        sequential_duration=sequential,
+        dma_busy=timeline.dma_busy,
+        compute_busy=timeline.compute_busy,
+        n_prefetched=n_prefetched,
+    )
+
+
+def analytic_portfolio_overlapped(layer: Layer, group_size: int):
+    """The planner's anneal-free lanes raced under the double-buffered
+    makespan on the ``for_group_size`` machine — winner by
+    (makespan, loaded pixels, lane order), mirroring the Rust reduction.
+    Returns (winner_label, makespan, per-lane dict)."""
+    acc = for_group_size(layer, group_size)
+    k = -(-layer.n_patches // group_size)
+    lanes = []
+    for name in ("row-by-row", "zigzag", "hilbert", "diagonal"):
+        groups = order_to_groups(ORDERINGS[name](layer), group_size)
+        lanes.append(
+            (
+                name,
+                simulate_stage_overlapped(layer, acc, groups).makespan,
+                grouping_loaded_pixels(layer, groups),
+            )
+        )
+    greedy = greedy_groups(layer, k)
+    lanes.append(
+        (
+            "greedy",
+            simulate_stage_overlapped(layer, acc, greedy).makespan,
+            grouping_loaded_pixels(layer, greedy),
+        )
+    )
+    best = min(lanes, key=lambda t: (t[1], t[2]))  # stable: earliest lane wins
+    return best[0], best[1], {name: m for name, m, _ in lanes}
+
+
 # ------------------------------------------------------------- network level
 
 
@@ -211,10 +367,16 @@ def next_stage_dims(layer: Layer, pool_after: bool, pad_after: int):
 def replay_case(case: dict) -> dict:
     """Replay one differential case (a serialized fuzz network).
 
-    Returns the oracle's per-stage results plus the chained-dimension check;
-    raises AssertionError on any structural violation.
+    Returns the oracle's per-stage results — sequential, double-buffered,
+    and double-buffered with a 2x memory ("roomy": most prefetches succeed,
+    so real overlap is exercised) — plus the chained-dimension check; raises
+    AssertionError on any structural violation.
     """
+    from dataclasses import replace
+
     per_stage = []
+    overlapped = []
+    overlapped_roomy = []
     prev = None
     for st in case["stages"]:
         layer = layer_from_json(st["layer"])
@@ -223,14 +385,32 @@ def replay_case(case: dict) -> dict:
             got = (layer.c_in, layer.h_in, layer.w_in)
             assert got == expect, f"stage chaining broken: {got} != {expect}"
         acc = accelerator_from_json(st["accelerator"])
-        res = simulate_stage(
-            layer, acc, st["strategy_groups"], st.get("writeback", "every_step")
+        writeback = st.get("writeback", "every_step")
+        res = simulate_stage(layer, acc, st["strategy_groups"], writeback)
+        ovl = simulate_stage_overlapped(layer, acc, st["strategy_groups"], writeback)
+        roomy = simulate_stage_overlapped(
+            layer,
+            replace(acc, size_mem=acc.size_mem * 2),
+            st["strategy_groups"],
+            writeback,
         )
+        # Internal consistency: the two codepaths must agree on the
+        # sequential duration, and the makespan obeys its analytic bounds.
+        assert ovl.sequential_duration == res.duration
+        for r in (ovl, roomy):
+            assert r.makespan <= res.duration
+            assert r.makespan >= max(r.dma_busy, r.compute_busy)
         per_stage.append(res)
+        overlapped.append(ovl)
+        overlapped_roomy.append(roomy)
         prev = (layer, st["pool_after"], st["pad_after"])
     return {
         "per_stage": per_stage,
         "total_duration": sum(r.duration for r in per_stage),
+        "overlapped": overlapped,
+        "overlapped_total": sum(r.makespan for r in overlapped),
+        "overlapped_roomy": overlapped_roomy,
+        "overlapped_roomy_total": sum(r.makespan for r in overlapped_roomy),
     }
 
 

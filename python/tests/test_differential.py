@@ -39,7 +39,12 @@ def _load_cases():
         )
     with open(path) as f:
         doc = json.load(f)
-    assert doc.get("version") == 1, f"unknown interchange version {doc.get('version')}"
+    # v2 added the overlapped / overlapped_roomy makespan expectations; a
+    # v1 file is a stale artifact from before the overlap PR.
+    assert doc.get("version") == 2, (
+        f"interchange version {doc.get('version')} != 2 - stale "
+        f"{path}; re-run `cargo test` to regenerate it"
+    )
     # Provenance gate: a green differential signal must mean the *Rust
     # simulator* produced the expected values. Any other generator (a stale
     # or hand-built file) is a broken setup, not a pass.
@@ -85,6 +90,55 @@ def test_python_oracle_matches_rust_simulator():
                         f"seed {seed} stage {exp['name']}: {field} {g} != {exp[field]}"
                     )
     assert not mismatches, "\n".join(mismatches)
+
+
+def test_python_oracle_matches_rust_overlapped_makespans():
+    """The §3.7 double-buffered timeline, replayed independently: bit-equal
+    per-stage makespans and resource busy totals on both the case's own
+    accelerator and the 2x-memory "roomy" variant (where most prefetches
+    succeed, so the overlap path itself — not just the serialization
+    fallback — is compared)."""
+    mismatches = []
+    for case in _load_cases():
+        got = o.replay_case(case)
+        want = case["expected"]
+        seed = case["seed"]
+        for key, got_key in (
+            ("overlapped", "overlapped"),
+            ("overlapped_roomy", "overlapped_roomy"),
+        ):
+            exp = want[key]
+            if sum(r.makespan for r in got[got_key]) != exp["total_makespan"]:
+                mismatches.append(
+                    f"seed {seed} {key}: total makespan "
+                    f"{sum(r.makespan for r in got[got_key])} != {exp['total_makespan']}"
+                )
+            for res, stage in zip(got[got_key], exp["per_stage"]):
+                for field, want_field in (
+                    ("makespan", "makespan"),
+                    ("sequential_duration", "sequential_duration"),
+                    ("dma_busy", "dma_busy"),
+                    ("compute_busy", "compute_busy"),
+                ):
+                    g = getattr(res, field)
+                    if g != stage[want_field]:
+                        mismatches.append(
+                            f"seed {seed} {key} stage {stage['name']}: "
+                            f"{field} {g} != {stage[want_field]}"
+                        )
+    assert not mismatches, "\n".join(mismatches)
+
+
+def test_roomy_variant_actually_overlaps_somewhere():
+    """The 2x-memory variant exists to exercise true prefetching: across
+    the whole case set at least one stage must hide transfer time (makespan
+    strictly below the sequential duration), otherwise the overlap path is
+    untested and the gate is vacuous."""
+    hidden = 0
+    for case in _load_cases():
+        for st in case["expected"]["overlapped_roomy"]["per_stage"]:
+            hidden += st["sequential_duration"] - st["makespan"]
+    assert hidden > 0, "no case hid any transfer time - overlap path untested"
 
 
 def test_replay_validates_structure_independently():

@@ -136,6 +136,121 @@ class TestPlannerBaselines:
         )
 
 
+class TestOverlappedTimeline:
+    """The §3.7 double-buffered timeline — the same hand-computed 3-step
+    example the Rust side pins in
+    ``sim::engine::tests::double_buffered_hand_computed_makespan``."""
+
+    def _setup(self):
+        l = o.Layer(1, 3, 12, 3, 3, 1)
+        groups = o.order_to_groups(o.row_major_order(l), 4)
+        return l, groups
+
+    def test_hand_computed_roomy_makespan(self):
+        # Steps load (18+9 kernel, 12, 6) elements, write (0, 4, 4) + flush
+        # 2 at t_w = 1, t_acc = 4; sequential = 31 + 20 + 14 + 2 = 67.
+        # With size_mem = 64 every load prefetches: the makespan is
+        # DMA-bound at 55 cycles — all 12 compute cycles hidden.
+        l, groups = self._setup()
+        acc = o.Accelerator(nbop_pe=36, t_acc=4, size_mem=64, t_l=1, t_w=1)
+        seq = o.simulate_stage(l, acc, groups)
+        assert seq.duration == 67
+        r = o.simulate_stage_overlapped(l, acc, groups)
+        assert r.sequential_duration == 67
+        assert r.makespan == 55
+        assert r.dma_busy == 55
+        assert r.compute_busy == 12
+        assert r.n_prefetched == 2
+
+    def test_hand_computed_serialization_fallback(self):
+        # size_mem = 40: step 2's 12 incoming elements do not fit beside
+        # step 1's 31-element working set -> its load serializes behind
+        # compute 1; makespan 59, still <= sequential.
+        l, groups = self._setup()
+        acc = o.Accelerator(nbop_pe=36, t_acc=4, size_mem=40, t_l=1, t_w=1)
+        r = o.simulate_stage_overlapped(l, acc, groups)
+        assert r.makespan == 59
+        assert r.n_prefetched == 1
+
+    def test_bounds_hold_across_orderings(self):
+        for l in [
+            o.Layer(2, 5, 5, 3, 3, 2),
+            o.Layer(1, 8, 8, 3, 3, 1, d_h=2, d_w=2),
+            o.Layer(4, 7, 7, 3, 3, 4, groups=4),
+        ]:
+            acc = o.for_group_size(l, 3)
+            for name, order_fn in o.ORDERINGS.items():
+                groups = o.order_to_groups(order_fn(l), 3)
+                seq = o.simulate_stage(l, acc, groups)
+                r = o.simulate_stage_overlapped(l, acc, groups)
+                assert r.sequential_duration == seq.duration, name
+                assert r.makespan <= seq.duration, name
+                assert r.makespan >= max(r.dma_busy, r.compute_busy), name
+
+
+class TestOverlappedPlannerBaselines:
+    """The double-buffered analytic baselines pinned (as upper bounds) by
+    ``rust/tests/integration_planner.rs::
+    double_buffered_planner_never_regresses_the_overlap_baseline`` —
+    reproduced here exactly, from the independent code base."""
+
+    def _check(self, layers, want_makespans, want_winners, want_total, group=4):
+        total = 0
+        for layer, makespan, winner in zip(layers, want_makespans, want_winners):
+            got_winner, got_makespan, _ = o.analytic_portfolio_overlapped(layer, group)
+            assert got_makespan == makespan, f"{layer}: {got_makespan} != {makespan}"
+            assert got_winner == winner
+            total += got_makespan
+        assert total == want_total
+
+    def test_lenet5(self):
+        self._check(
+            [o.Layer(1, 32, 32, 5, 5, 6), o.Layer(6, 14, 14, 5, 5, 16)],
+            [2538, 4345],
+            ["greedy", "hilbert"],
+            6883,
+        )
+
+    def test_resnet8(self):
+        conv2 = o.Layer(16, 18, 18, 3, 3, 16)
+        self._check(
+            [o.Layer(3, 34, 34, 3, 3, 16), conv2, conv2],
+            [6402, 10435, 10435],
+            ["greedy", "greedy", "greedy"],
+            27272,
+        )
+
+    def test_mobilenet_slim(self):
+        self._check(
+            [
+                o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4),
+                o.Layer(4, 8, 8, 1, 1, 8),
+                o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2),
+            ],
+            [1352, 304, 1898],
+            ["hilbert", "row-by-row", "greedy"],
+            3554,
+        )
+
+    def test_overlapped_never_exceeds_sequential_baseline(self):
+        # Totals vs the sequential baselines 7100 / 27644 / 3568.
+        for layers, seq_total in [
+            ([o.Layer(1, 32, 32, 5, 5, 6), o.Layer(6, 14, 14, 5, 5, 16)], 7100),
+            (
+                [
+                    o.Layer(3, 34, 34, 3, 3, 16),
+                    o.Layer(16, 18, 18, 3, 3, 16),
+                    o.Layer(16, 18, 18, 3, 3, 16),
+                ],
+                27644,
+            ),
+        ]:
+            total = sum(
+                o.analytic_portfolio_overlapped(l, 4)[1] for l in layers
+            )
+            assert total <= seq_total
+
+
 class TestNetworkChaining:
     def test_pool_and_pad_dims(self):
         l = o.Layer(1, 32, 32, 5, 5, 6)

@@ -36,6 +36,7 @@ fn quick_plan_options() -> PlanOptions {
         anneal_iters: 2_000,
         anneal_starts: 1,
         threads: 0,
+        overlap: convoffload::platform::OverlapMode::Sequential,
     }
 }
 
@@ -96,16 +97,18 @@ fn main() {
     // Single lanes on the 12x12 sweep layer (100 patches, k = 25).
     {
         let layer = paper_sweep_layer(12);
+        let acc = Accelerator::for_group_size(&layer, 4);
         let entries = portfolio_entries(2026, 5_000, 1);
         suite.bench("portfolio_lane_zigzag_12x12_g4", move || {
-            run_entry(&layer, 4, 25, &entries[1]).loaded_pixels
+            run_entry(&layer, &acc, 4, 25, &entries[1]).loaded_pixels
         });
     }
     {
         let layer = paper_sweep_layer(12);
+        let acc = Accelerator::for_group_size(&layer, 4);
         let entries = portfolio_entries(2026, 5_000, 1);
         suite.bench("portfolio_lane_anneal5k_12x12_g4", move || {
-            run_entry(&layer, 4, 25, &entries[5]).loaded_pixels
+            run_entry(&layer, &acc, 4, 25, &entries[5]).loaded_pixels
         });
     }
 

@@ -14,8 +14,11 @@ use crate::util::csv;
 /// One sweep point.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Fig11Row {
+    /// Group size `nb_patches_max_S1` of this row.
     pub group_size: usize,
+    /// Loaded elements under the ZigZag strategy.
     pub zigzag: u64,
+    /// Loaded elements under the Row-by-Row strategy.
     pub row_by_row: u64,
 }
 

@@ -14,10 +14,15 @@ use crate::util::csv;
 /// One sweep point (all durations in cycles, §7.1 cost model).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Fig12Row {
+    /// Square input size `H_in = W_in` of this row.
     pub h_in: usize,
+    /// Duration of the S1 baseline (one patch per step).
     pub s1_baseline: u64,
+    /// Duration of the Row-by-Row strategy.
     pub row_by_row: u64,
+    /// Duration of the ZigZag strategy.
     pub zigzag: u64,
+    /// Duration of the optimized (OPL) strategy.
     pub opl: u64,
 }
 

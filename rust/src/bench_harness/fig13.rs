@@ -14,9 +14,13 @@ use crate::util::csv;
 /// One grid cell.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Fig13Cell {
+    /// Square input size `H_in = W_in` of this cell.
     pub h_in: usize,
+    /// Group size of this cell.
     pub group: usize,
+    /// Best heuristic duration (the gain denominator).
     pub best_heuristic: u64,
+    /// Optimized (OPL) duration.
     pub opl: u64,
     /// Gain in percent: `(best_heuristic − opl) / best_heuristic · 100`.
     pub gain_pct: f64,

@@ -29,20 +29,30 @@ use crate::util::rng::Rng;
 /// the concrete strategy the simulation runs.
 #[derive(Debug, Clone)]
 pub struct FuzzStage {
+    /// Stage name (`s0`, `s1`, …).
     pub name: String,
+    /// The sampled layer.
     pub layer: ConvLayer,
+    /// 2×2 mean pooling after this stage.
     pub pool_after: bool,
+    /// Zero-padding per spatial side before the next stage.
     pub pad_after: usize,
+    /// The ordering the strategy was built from.
     pub ordering: Ordering,
+    /// Group-size bound of the strategy.
     pub group_size: usize,
+    /// The concrete strategy the simulation runs.
     pub strategy: GroupedStrategy,
+    /// The accelerator sized for this stage.
     pub accelerator: Accelerator,
 }
 
 /// A sampled network: a chain of [`FuzzStage`]s, valid by construction.
 #[derive(Debug, Clone)]
 pub struct FuzzNetwork {
+    /// The seed the network was sampled from.
     pub seed: u64,
+    /// The sampled stages, dimensionally chained.
     pub stages: Vec<FuzzStage>,
 }
 

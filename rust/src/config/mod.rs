@@ -23,10 +23,16 @@ use crate::platform::Accelerator;
 /// parameters, loadable from a TOML-subset file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
+    /// Experiment name (reports / trace files).
     pub name: String,
+    /// The convolution layer under test.
     pub layer: ConvLayer,
+    /// The accelerator (overlap mode included; `[accelerator] overlap =
+    /// "double-buffered"` selects the §3.7 timeline).
     pub accelerator: Accelerator,
+    /// Group-size bound `nb_patches_max_S1`.
     pub group_size: usize,
+    /// `nb_data_reload` bound for strategy validation (§2.3).
     pub nb_data_reload: u32,
 }
 
@@ -107,6 +113,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_int("accelerator", "size_mem") {
             accelerator.size_mem = v as u64;
         }
+        if let Some(s) = doc.get_str("accelerator", "overlap") {
+            accelerator.overlap = crate::platform::OverlapMode::from_str(s)?;
+        }
 
         let nb_data_reload =
             doc.get_int("strategy", "nb_data_reload").unwrap_or(2) as u32;
@@ -139,6 +148,21 @@ t_w = 1
         assert_eq!(cfg.accelerator.t_w, 1);
         assert_eq!(cfg.accelerator.max_patches_per_step(&cfg.layer), 2);
         assert_eq!(cfg.nb_data_reload, 2);
+        assert_eq!(cfg.accelerator.overlap, crate::platform::OverlapMode::Sequential);
+    }
+
+    /// `[accelerator] overlap` selects the duration semantics; bad values
+    /// are loud errors.
+    #[test]
+    fn parses_overlap_mode() {
+        let text = "[layer]\npreset = \"example1\"\n[accelerator]\noverlap = \"double-buffered\"\n";
+        let cfg = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.accelerator.overlap,
+            crate::platform::OverlapMode::DoubleBuffered
+        );
+        let bad = text.replace("double-buffered", "triple-buffered");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
     }
 
     #[test]

@@ -10,8 +10,11 @@ use crate::conv::ConvLayer;
 /// A named layer preset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerPreset {
+    /// Preset name (CLI value).
     pub name: &'static str,
+    /// One-line description for listings.
     pub description: &'static str,
+    /// The preset layer.
     pub layer: ConvLayer,
     /// Name of the AOT step-artifact family for this layer, if emitted.
     pub artifact_hint: Option<&'static str>,
@@ -105,7 +108,9 @@ pub fn paper_sweep_layer(h_in: usize) -> ConvLayer {
 /// (pooling / re-padding) that connects it to the next stage.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkStagePreset {
+    /// Stage name within the network.
     pub name: &'static str,
+    /// The stage's layer.
     pub layer: ConvLayer,
     /// Apply 2×2 stride-2 mean pooling after this stage (LeNet subsampling).
     pub pool_after: bool,
@@ -119,8 +124,11 @@ pub struct NetworkStagePreset {
 /// layer sequences the network planner optimizes end to end.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkPreset {
+    /// Preset name (CLI value).
     pub name: &'static str,
+    /// One-line description for listings.
     pub description: &'static str,
+    /// The stages in execution order.
     pub stages: Vec<NetworkStagePreset>,
 }
 

@@ -14,14 +14,20 @@ pub struct TomlDoc {
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed TOML-subset value.
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
 }
 
 impl TomlDoc {
+    /// Parse a document (errors carry 1-based line numbers).
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -56,10 +62,12 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Raw value at `(section, key)`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.values.get(&(section.to_string(), key.to_string()))
     }
 
+    /// String value at `(section, key)`, if present and a string.
     pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
         match self.get(section, key) {
             Some(Value::Str(s)) => Some(s),
@@ -67,6 +75,7 @@ impl TomlDoc {
         }
     }
 
+    /// Integer value at `(section, key)`, if present and an integer.
     pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
         match self.get(section, key) {
             Some(Value::Int(v)) => Some(*v),
@@ -74,6 +83,7 @@ impl TomlDoc {
         }
     }
 
+    /// Float value at `(section, key)` (integers promote).
     pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key) {
             Some(Value::Float(v)) => Some(*v),
@@ -82,6 +92,7 @@ impl TomlDoc {
         }
     }
 
+    /// Boolean value at `(section, key)`, if present and a boolean.
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         match self.get(section, key) {
             Some(Value::Bool(b)) => Some(*b),

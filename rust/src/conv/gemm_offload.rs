@@ -33,7 +33,9 @@ pub struct GemmTiling {
 pub struct GemmOffloadCost {
     /// GeMM dimensions `(M, K, N) = (|X|, D, N)`.
     pub m: usize,
+    /// GeMM reduction depth `K = D` (im2col row width).
     pub k: usize,
+    /// GeMM output width `N` (kernel count).
     pub n: usize,
     /// Number of compute steps (tile passes).
     pub steps: u64,
@@ -206,7 +208,7 @@ mod tests {
     #[test]
     fn best_tiling_fits_constraints() {
         let l = layer();
-        let acc = Accelerator { nbop_pe: 360, t_acc: 1, size_mem: 200, t_l: 1, t_w: 0 };
+        let acc = Accelerator::paper_eval(360, 200);
         let (t, c) = best_tiling(&l, &acc).expect("some tiling fits");
         assert!(c.peak_occupancy <= acc.size_mem);
         assert!((t.m_tile * t.k_tile * t.n_tile) as u64 <= acc.nbop_pe);
@@ -215,7 +217,7 @@ mod tests {
     #[test]
     fn no_tiling_fits_tiny_memory() {
         let l = layer();
-        let acc = Accelerator { nbop_pe: 100, t_acc: 1, size_mem: 2, t_l: 1, t_w: 0 };
+        let acc = Accelerator::paper_eval(100, 2);
         assert!(best_tiling(&l, &acc).is_none());
     }
 
@@ -271,7 +273,7 @@ mod tests {
             .with_groups(4)
             .unwrap();
         assert_eq!(l.ops_per_output_value(), 9);
-        let acc = Accelerator { nbop_pe: 576, t_acc: 1, size_mem: 300, t_l: 1, t_w: 0 };
+        let acc = Accelerator::paper_eval(576, 300);
         let (t, c) = best_tiling(&l, &acc).expect("some tiling fits");
         assert!(c.peak_occupancy <= acc.size_mem);
         assert!((t.m_tile * t.k_tile * t.n_tile) as u64 <= acc.nbop_pe);

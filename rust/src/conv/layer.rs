@@ -103,6 +103,7 @@ impl ConvLayer {
             .expect("square layer parameters must be valid")
     }
 
+    /// Check every §3 well-formedness condition, with a precise error.
     pub fn validate(&self) -> Result<(), String> {
         if self.c_in == 0 || self.h_in == 0 || self.w_in == 0 {
             return Err("input dimensions must be positive".into());
@@ -184,10 +185,12 @@ impl ConvLayer {
         l / self.kernels_per_group()
     }
 
+    /// Input tensor dimensions `C_in × H_in × W_in`.
     pub fn input_dims(&self) -> Dims3 {
         Dims3::new(self.c_in, self.h_in, self.w_in)
     }
 
+    /// Output tensor dimensions `C_out × H_out × W_out` (Definition 8).
     pub fn output_dims(&self) -> Dims3 {
         Dims3::new(self.c_out(), self.h_out(), self.w_out())
     }

@@ -10,6 +10,7 @@ pub struct LinExpr {
 }
 
 impl LinExpr {
+    /// The zero expression.
     pub fn new() -> Self {
         LinExpr { terms: Vec::new() }
     }
@@ -43,14 +44,17 @@ impl LinExpr {
         self
     }
 
+    /// The `(variable, coefficient)` terms.
     pub fn terms(&self) -> &[(VarId, f64)] {
         &self.terms
     }
 
+    /// True when there are no terms.
     pub fn is_empty(&self) -> bool {
         self.terms.is_empty()
     }
 
+    /// Number of terms.
     pub fn len(&self) -> usize {
         self.terms.len()
     }

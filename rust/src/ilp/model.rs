@@ -13,27 +13,36 @@ pub struct BoolVar(pub VarId);
 /// Variable domain kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum VarKind {
+    /// Real-valued variable.
     Continuous,
+    /// Integer variable (the §5 model uses only `{0,1}`).
     Integer,
 }
 
 /// Comparison operator of a constraint.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Cmp {
+    /// `lhs ≤ rhs`.
     Le,
+    /// `lhs ≥ rhs`.
     Ge,
+    /// `lhs = rhs`.
     Eq,
 }
 
 /// `expr  cmp  rhs`.
 #[derive(Debug, Clone)]
 pub struct Constraint {
+    /// Left-hand side.
     pub expr: LinExpr,
+    /// Comparison operator.
     pub cmp: Cmp,
+    /// Right-hand side constant.
     pub rhs: f64,
 }
 
 impl Constraint {
+    /// True when `assign` satisfies the constraint within `tol`.
     pub fn holds(&self, assign: &[f64], tol: f64) -> bool {
         let lhs = self.expr.eval(assign);
         match self.cmp {
@@ -56,11 +65,14 @@ pub(crate) struct VarDef {
 #[derive(Debug, Clone, Default)]
 pub struct Model {
     pub(crate) vars: Vec<VarDef>,
+    /// All constraints, in insertion order.
     pub constraints: Vec<Constraint>,
+    /// The linear objective (minimized).
     pub objective: LinExpr,
 }
 
 impl Model {
+    /// An empty minimization model.
     pub fn minimize() -> Self {
         Model::default()
     }
@@ -77,18 +89,22 @@ impl Model {
         BoolVar(self.var(name, 0.0, 1.0, VarKind::Integer))
     }
 
+    /// Number of variables.
     pub fn n_vars(&self) -> usize {
         self.vars.len()
     }
 
+    /// `(lo, hi)` bounds of a variable.
     pub fn bounds(&self, v: VarId) -> (f64, f64) {
         (self.vars[v.0].lo, self.vars[v.0].hi)
     }
 
+    /// Domain kind of a variable.
     pub fn kind(&self, v: VarId) -> VarKind {
         self.vars[v.0].kind
     }
 
+    /// Name of a variable (diagnostics).
     pub fn name(&self, v: VarId) -> &str {
         &self.vars[v.0].name
     }
@@ -157,9 +173,11 @@ pub enum SolveStatus {
 /// Result of a MILP solve.
 #[derive(Debug, Clone)]
 pub struct Solution {
+    /// Solve status (optimal / feasible / infeasible / budget).
     pub status: SolveStatus,
     /// Assignment (empty unless status is Optimal/Feasible).
     pub assignment: Vec<f64>,
+    /// Objective value of the incumbent, if any.
     pub objective: f64,
     /// Best LP lower bound proven.
     pub lower_bound: f64,

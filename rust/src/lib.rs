@@ -7,8 +7,12 @@
 //! The library implements, in Rust, the paper's full system:
 //!
 //! * the **offloading formalism** — steps `s_i = (F_i^inp, F_i^ker, W_i,
-//!   I_i^slice, K_i^sub)`, set-based on-chip-memory semantics, and the linear
-//!   duration model (`step`, `platform`, `tensor`, `conv`);
+//!   I_i^slice, K_i^sub)` (Definitions 1–3), set-based on-chip-memory
+//!   semantics, and **two duration semantics**: the paper's sequential
+//!   Definition-3 sum and the §3.7 double-buffered two-resource timeline
+//!   ([`platform::OverlapMode`], [`step::OverlapTimeline`]), which hides
+//!   transfer latency behind compute under a residency condition
+//!   (`step`, `platform`, `tensor`, `conv`);
 //! * the **strategies** — S1-baseline (one patch per step, Siu et al.),
 //!   grouped S1 with Row-by-Row / ZigZag / Hilbert / diagonal orderings, and
 //!   arbitrary user strategies loaded from CSV/JSON (`strategy`);
@@ -19,17 +23,57 @@
 //! * the **optimization problem** — the §5 ILP built on an in-tree 0-1 MILP
 //!   substrate (linearized ∧/∨/¬, dense simplex, branch & bound with MIP
 //!   start) plus the structure-aware local-search “solution polishing” used
-//!   for larger instances (`ilp`, `solver`, `optimizer`);
+//!   for larger instances, in either duration domain: loaded pixels
+//!   (Eq. 15, Definition 3) or the overlapped makespan
+//!   ([`optimizer::grouping_makespan`], [`optimizer::MakespanEval`])
+//!   (`ilp`, `solver`, `optimizer`);
 //! * the **network-level planner** — a portfolio race (orderings + greedy +
 //!   seeded annealing, raced on scoped threads) over every layer of a network
 //!   preset, with a content-addressed on-disk strategy cache and an
-//!   end-to-end simulated-duration report (`planner`);
+//!   end-to-end simulated-duration report; under a double-buffered
+//!   accelerator the race optimizes the overlapped makespan (`planner`);
 //! * the **experiment harness** regenerating every figure of the paper's
 //!   evaluation (`bench_harness`), and a config system with LeNet-5 / ResNet-8
 //!   layer *and* network presets (`config`).
 //!
-//! See `DESIGN.md` for the module inventory and the per-experiment index, and
-//! `EXPERIMENTS.md` for reproduced-vs-paper results.
+//! See `DESIGN.md` for the module inventory and the per-experiment index
+//! (the overlapped timeline is §3.7 there), and `EXPERIMENTS.md` for
+//! reproduced-vs-paper results and the overlap baselines.
+//!
+//! ## Example: sequential vs. double-buffered duration
+//!
+//! The paper's Definition-3 model (Def. 3) charges a strategy's loads,
+//! writes and compute back to back; [`platform::OverlapMode::DoubleBuffered`]
+//! schedules the same Definition-16 step stream (Def. 16) on two resources
+//! and reports the critical-path makespan:
+//!
+//! ```
+//! use convoffload::platform::OverlapMode;
+//! use convoffload::prelude::*;
+//! use convoffload::strategy;
+//!
+//! let layer = ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap();
+//! let strategy = strategy::zigzag(&layer, 2);
+//! let acc = Accelerator::for_group_size(&layer, 2);
+//!
+//! let sequential = Simulator::new(layer, Platform::new(acc))
+//!     .run(&strategy)
+//!     .unwrap();
+//! let overlapped = Simulator::new(
+//!     layer,
+//!     Platform::new(acc.with_overlap(OverlapMode::DoubleBuffered)),
+//! )
+//! .run(&strategy)
+//! .unwrap();
+//!
+//! // Hiding transfer behind compute can only help, and never beats the
+//! // busier resource's total:
+//! assert!(overlapped.duration <= sequential.duration);
+//! assert!(overlapped.duration >= overlapped.dma_busy.max(overlapped.compute_busy));
+//! assert_eq!(overlapped.sequential_duration, sequential.duration);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod config;
@@ -54,9 +98,9 @@ pub mod prelude {
     pub use crate::planner::{
         AcceleratorSpec, NetworkPlan, NetworkPlanner, PlanOptions, StrategyCache,
     };
-    pub use crate::platform::{Accelerator, OnChipMemory, Platform};
+    pub use crate::platform::{Accelerator, OnChipMemory, OverlapMode, Platform};
     pub use crate::sim::{FunctionalBackend, SimReport, Simulator};
-    pub use crate::step::{Step, StepCost};
+    pub use crate::step::{OverlapTimeline, Step, StepCost, StepTiming};
     pub use crate::strategy::{
         GroupedStrategy, Ordering, Strategy, WritebackPolicy,
     };

@@ -23,7 +23,7 @@ use convoffload::planner::{
     format_plan_table, plan_to_json, AcceleratorSpec, NetworkPlanner, PlanOptions,
     StrategyCache,
 };
-use convoffload::platform::{Accelerator, Platform};
+use convoffload::platform::{Accelerator, OverlapMode, Platform};
 use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
 use convoffload::strategy::{self, GroupedStrategy};
 use convoffload::util::cli::{self, FlagSpec};
@@ -81,6 +81,7 @@ fn layer_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "layer", help: "layer preset name", takes_value: true, default: Some("example1") },
         FlagSpec { name: "config", help: "TOML experiment file (overrides --layer)", takes_value: true, default: None },
         FlagSpec { name: "group", help: "group size (nb_patches_max_S1)", takes_value: true, default: Some("2") },
+        FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential (default) or double-buffered", takes_value: true, default: None },
         FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -92,16 +93,27 @@ struct Setup {
 }
 
 fn setup_from(args: &cli::Args) -> Result<Setup, String> {
+    // `--overlap` applies on top of either source (preset or TOML); the
+    // TOML file may also set `[accelerator] overlap = "double-buffered"`.
+    let overlap = match args.get("overlap") {
+        Some(s) => Some(OverlapMode::from_str(s)?),
+        None => None,
+    };
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let cfg = ExperimentConfig::from_toml(&text)?;
-        return Ok(Setup { layer: cfg.layer, acc: cfg.accelerator, group: cfg.group_size });
+        let acc = match overlap {
+            Some(o) => cfg.accelerator.with_overlap(o),
+            None => cfg.accelerator,
+        };
+        return Ok(Setup { layer: cfg.layer, acc, group: cfg.group_size });
     }
     let name = args.get("layer").unwrap_or("example1");
     let preset = layer_preset(name)
         .ok_or_else(|| format!("unknown preset '{name}' (see `convoffload presets`)"))?;
     let group = args.get_usize("group")?.unwrap_or(2).max(1);
-    let acc = Accelerator::for_group_size(&preset.layer, group);
+    let acc = Accelerator::for_group_size(&preset.layer, group)
+        .with_overlap(overlap.unwrap_or_default());
     Ok(Setup { layer: preset.layer, acc, group })
 }
 
@@ -177,11 +189,21 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
         return Ok(());
     }
     let setup = setup_from(&args)?;
+    let neighbor_bias = args.get_f64("neighbor-bias")?.unwrap_or(0.0).clamp(0.0, 1.0);
+    // Loud rather than silent: the duration-domain annealer has no
+    // graph-guided proposal path, so the flag would be a no-op.
+    if neighbor_bias > 0.0 && setup.acc.overlap == OverlapMode::DoubleBuffered {
+        return Err(
+            "--neighbor-bias applies to the sequential objective only; \
+             the double-buffered annealer does not support graph-guided proposals"
+                .into(),
+        );
+    }
     let opt = Optimizer::new(OptimizeOptions {
         group_size: setup.group,
         seed: args.get_u64("seed")?.unwrap_or(2026),
         anneal_iters: args.get_u64("iters")?.unwrap_or(200_000),
-        neighbor_bias: args.get_f64("neighbor-bias")?.unwrap_or(0.0).clamp(0.0, 1.0),
+        neighbor_bias,
         ..Default::default()
     });
     let res = opt.optimize(&setup.layer, &setup.acc);
@@ -207,6 +229,7 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
         FlagSpec { name: "thorough", help: "3x the anneal budget (delta evaluation makes it ~the old wall time; changes results, opt-in)", takes_value: false, default: None },
         FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
+        FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered (races the makespan objective)", takes_value: true, default: Some("sequential") },
         FlagSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: Some("0") },
         FlagSpec { name: "cache-dir", help: "strategy cache directory", takes_value: true, default: Some(".strategy-cache") },
         FlagSpec { name: "no-cache", help: "disable the strategy cache", takes_value: false, default: None },
@@ -250,6 +273,7 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         anneal_iters: args.get_u64("iters")?.unwrap_or(50_000) * budget_scale,
         anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
         threads: args.get_usize("threads")?.unwrap_or(0),
+        overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
     };
     let planner = if args.get_bool("no-cache") {
         NetworkPlanner::new(options)

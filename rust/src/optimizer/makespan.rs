@@ -1,0 +1,468 @@
+//! Delta-evaluated duration-domain objective: the §3.7 overlapped makespan
+//! as an annealing objective.
+//!
+//! [`MakespanEval`] mirrors [`crate::optimizer::objective::GroupingEval`]'s
+//! propose-score-commit contract (§3.5) for the two-resource timeline: it
+//! keeps the per-position step parameters (footprint sizes, boundary
+//! overlaps, group lengths — everything the §3.7 recurrence consumes) plus
+//! the timeline state *after every position*, so scoring a move replays the
+//! recurrence only from the first affected position and stops as soon as
+//! both resource frontiers have shifted by one uniform offset — the (max, +)
+//! recurrence is translation-equivariant, so from that point the whole
+//! suffix (and the makespan) shifts by the same offset. Most annealing moves
+//! touch 1–2 boundary entries and converge within a few positions.
+//!
+//! The caller drives both evaluators in lock-step: `GroupingEval` scores the
+//! footprint math and stages its edits; [`MakespanEval::score`] restages the
+//! same edits (via [`StagedEffect`]) on the timeline arrays and returns the
+//! exact makespan delta; on accept both `commit`, on reject neither does —
+//! a rejected move costs one bounded suffix replay and nothing else.
+
+use crate::conv::{ConvLayer, PatchId};
+use crate::optimizer::objective::StagedEffect;
+use crate::platform::Accelerator;
+use crate::step::OverlapTimeline;
+
+/// A staged group-length override (content moves change group sizes).
+#[derive(Debug, Clone, Copy)]
+struct GlenEdit {
+    pos: usize,
+    new_len: u64,
+}
+
+/// A scored-but-uncommitted timeline update.
+#[derive(Debug, Clone)]
+struct PendingTimeline {
+    effect: StagedEffect,
+    glens: [Option<GlenEdit>; 2],
+    /// First recomputed position.
+    first: usize,
+    /// Last recomputed position (inclusive; states live in the scratch).
+    end: usize,
+    /// Uniform shift of every state after `end`.
+    shift: i64,
+    new_makespan: u64,
+}
+
+/// Incremental evaluator of the double-buffered makespan of a grouping
+/// under the Definition-16 / every-step-write-back lowering (the protocol
+/// the planner's strategies use). Bit-equal to
+/// [`crate::optimizer::objective::grouping_makespan`] — and therefore to the
+/// simulator — at every point of an annealing trajectory (pinned by the
+/// 1000-move property test in `optimizer::search`).
+#[derive(Debug, Clone)]
+pub struct MakespanEval {
+    t_l: u64,
+    t_w: u64,
+    t_acc: u64,
+    size_mem: u64,
+    c_in: u64,
+    c_out: u64,
+    kernel_elements: u64,
+    /// Footprint sizes in visit order (spatial pixels).
+    fp: Vec<u64>,
+    /// Boundary overlaps in visit order (`ov[0]` unused = 0).
+    ov: Vec<u64>,
+    /// Group lengths in visit order.
+    glen: Vec<u64>,
+    /// DMA frontier after each position (`dma[k]` = after the flush).
+    dma: Vec<u64>,
+    /// Compute frontier after each position.
+    comp: Vec<u64>,
+    makespan: u64,
+    scratch_dma: Vec<u64>,
+    scratch_comp: Vec<u64>,
+    pending: Option<PendingTimeline>,
+}
+
+impl MakespanEval {
+    /// Build the evaluator for `groups` (in visit order) on `acc`.
+    pub fn new(layer: &ConvLayer, acc: &Accelerator, groups: &[Vec<PatchId>]) -> Self {
+        let k = groups.len();
+        let mut fp = Vec::with_capacity(k);
+        let mut ov = vec![0u64; k];
+        let mut glen = Vec::with_capacity(k);
+        let mut prev: Option<crate::tensor::PixelSet> = None;
+        for (i, g) in groups.iter().enumerate() {
+            let f = layer.group_pixels(g);
+            if let Some(p) = &prev {
+                ov[i] = p.intersection_len(&f) as u64;
+            }
+            fp.push(f.len() as u64);
+            glen.push(g.len() as u64);
+            prev = Some(f);
+        }
+        let mut eval = MakespanEval {
+            t_l: acc.t_l,
+            t_w: acc.t_w,
+            t_acc: acc.t_acc,
+            size_mem: acc.size_mem,
+            c_in: layer.c_in as u64,
+            c_out: layer.c_out() as u64,
+            kernel_elements: layer.kernel_elements() as u64,
+            fp,
+            ov,
+            glen,
+            dma: Vec::with_capacity(k + 1),
+            comp: Vec::with_capacity(k + 1),
+            makespan: 0,
+            scratch_dma: Vec::with_capacity(k + 1),
+            scratch_comp: Vec::with_capacity(k + 1),
+            pending: None,
+        };
+        let (mut d, mut c) = (0u64, 0u64);
+        for p in 0..=k {
+            (d, c) = eval.advance(p, d, c, None, &[None, None]);
+            eval.dma.push(d);
+            eval.comp.push(c);
+        }
+        eval.makespan = d.max(c);
+        eval
+    }
+
+    /// Current makespan of the grouping (O(1)).
+    pub fn makespan(&self) -> u64 {
+        self.makespan
+    }
+
+    /// Number of compute positions `k` (the flush is position `k`).
+    fn k(&self) -> usize {
+        self.fp.len()
+    }
+
+    // -------------------------------------------------- staged-param views
+
+    /// Footprint size at `position` under the staged effect (footprint
+    /// overrides come solely from the effect, never from length edits).
+    fn view_fp(&self, p: usize, effect: Option<&StagedEffect>) -> u64 {
+        match effect {
+            Some(StagedEffect::Edit2 { pos_a, pos_b, new_size_a, new_size_b, .. }) => {
+                if p == *pos_a {
+                    *new_size_a as u64
+                } else if p == *pos_b {
+                    *new_size_b as u64
+                } else {
+                    self.fp[p]
+                }
+            }
+            Some(StagedEffect::SwapAdjacent { i, .. }) => {
+                if p == *i {
+                    self.fp[i + 1]
+                } else if p == i + 1 {
+                    self.fp[*i]
+                } else {
+                    self.fp[p]
+                }
+            }
+            Some(StagedEffect::Reverse { a, b, .. }) => {
+                if p >= *a && p <= *b {
+                    self.fp[a + b - p]
+                } else {
+                    self.fp[p]
+                }
+            }
+            None => self.fp[p],
+        }
+    }
+
+    /// Boundary overlap entering `position` under the staged effect
+    /// (0 at position 0 by definition).
+    fn view_ov(&self, p: usize, effect: Option<&StagedEffect>) -> u64 {
+        if p == 0 {
+            return 0;
+        }
+        let edge_override = |edges: &[(usize, usize)]| {
+            edges.iter().find(|&&(e, _)| e == p).map(|&(_, v)| v as u64)
+        };
+        match effect {
+            Some(StagedEffect::Edit2 { edges, n_edges, .. }) => {
+                edge_override(&edges[..*n_edges]).unwrap_or(self.ov[p])
+            }
+            Some(StagedEffect::SwapAdjacent { edges, n_edges, .. }) => {
+                edge_override(&edges[..*n_edges]).unwrap_or(self.ov[p])
+            }
+            Some(StagedEffect::Reverse { a, b, edges, n_edges }) => {
+                if let Some(v) = edge_override(&edges[..*n_edges]) {
+                    v
+                } else if p >= a + 1 && p <= *b {
+                    // Interior edges are the same unordered pairs backwards.
+                    self.ov[a + b + 1 - p]
+                } else {
+                    self.ov[p]
+                }
+            }
+            None => self.ov[p],
+        }
+    }
+
+    /// Group length at `position` under the staged effect + length edits.
+    fn view_glen(
+        &self,
+        p: usize,
+        effect: Option<&StagedEffect>,
+        glens: &[Option<GlenEdit>; 2],
+    ) -> u64 {
+        for ge in glens.iter().flatten() {
+            if ge.pos == p {
+                return ge.new_len;
+            }
+        }
+        match effect {
+            Some(StagedEffect::SwapAdjacent { i, .. }) => {
+                if p == *i {
+                    self.glen[i + 1]
+                } else if p == i + 1 {
+                    self.glen[*i]
+                } else {
+                    self.glen[p]
+                }
+            }
+            Some(StagedEffect::Reverse { a, b, .. }) => {
+                if p >= *a && p <= *b {
+                    self.glen[a + b - p]
+                } else {
+                    self.glen[p]
+                }
+            }
+            _ => self.glen[p],
+        }
+    }
+
+    /// One step of the §3.7 recurrence: position `p`'s (load, write,
+    /// compute, residency) under the staged view, advanced from the
+    /// `(dma, comp)` frontiers through the shared
+    /// [`OverlapTimeline::place`] rules. Position `k` is the terminal
+    /// flush.
+    fn advance(
+        &self,
+        p: usize,
+        dma: u64,
+        comp: u64,
+        effect: Option<&StagedEffect>,
+        glens: &[Option<GlenEdit>; 2],
+    ) -> (u64, u64) {
+        let k = self.k();
+        let (loaded, written, compute, prev_occ) = if p < k {
+            let load_px = self.view_fp(p, effect).saturating_sub(self.view_ov(p, effect));
+            let mut loaded = load_px * self.c_in;
+            if p == 0 {
+                loaded += self.kernel_elements;
+            }
+            let written =
+                if p == 0 { 0 } else { self.view_glen(p - 1, effect, glens) * self.c_out };
+            let compute =
+                if self.view_glen(p, effect, glens) > 0 { self.t_acc } else { 0 };
+            let prev_occ = if p == 0 {
+                0
+            } else {
+                self.kernel_elements
+                    + self.view_fp(p - 1, effect) * self.c_in
+                    + self.view_glen(p - 1, effect, glens) * self.c_out
+            };
+            (loaded, written, compute, prev_occ)
+        } else {
+            let prev_occ = self.kernel_elements
+                + self.view_fp(k - 1, effect) * self.c_in
+                + self.view_glen(k - 1, effect, glens) * self.c_out;
+            (0, self.view_glen(k - 1, effect, glens) * self.c_out, 0, prev_occ)
+        };
+        let can_prefetch = prev_occ + loaded <= self.size_mem;
+        let t = OverlapTimeline::place(
+            dma,
+            comp,
+            loaded * self.t_l,
+            written * self.t_w,
+            compute,
+            can_prefetch,
+        );
+        (t.write_end, t.compute_end)
+    }
+
+    // ------------------------------------------------------- score / commit
+
+    /// Score the staged move: the exact makespan delta, computed by
+    /// replaying the recurrence from the first affected position with
+    /// uniform-shift early exit. `glen_a` / `glen_b` carry the group-length
+    /// overrides of content moves (`(position, new length)`); order moves
+    /// pass `None`. Nothing observable changes; commit with
+    /// [`MakespanEval::commit`], or score the next move to discard.
+    pub fn score(
+        &mut self,
+        effect: StagedEffect,
+        glen_a: Option<(usize, u64)>,
+        glen_b: Option<(usize, u64)>,
+    ) -> i64 {
+        let k = self.k();
+        let glens = [
+            glen_a.map(|(pos, new_len)| GlenEdit { pos, new_len }),
+            glen_b.map(|(pos, new_len)| GlenEdit { pos, new_len }),
+        ];
+        // Affected position range: a changed size/length at `p` perturbs
+        // steps `p` and `p + 1` (write + residency come from the
+        // predecessor); a changed edge at `e` perturbs step `e`.
+        let (mut lo, mut hi) = match &effect {
+            StagedEffect::Edit2 { pos_a, pos_b, edges, n_edges, .. } => {
+                let mut lo = *pos_a.min(pos_b);
+                let mut hi = *pos_a.max(pos_b) + 1;
+                for &(e, _) in &edges[..*n_edges] {
+                    lo = lo.min(e);
+                    hi = hi.max(e);
+                }
+                (lo, hi)
+            }
+            StagedEffect::SwapAdjacent { i, .. } => (*i, i + 2),
+            StagedEffect::Reverse { a, b, .. } => (*a, b + 1),
+        };
+        for ge in glens.iter().flatten() {
+            lo = lo.min(ge.pos);
+            hi = hi.max(ge.pos + 1);
+        }
+        let hi = hi.min(k);
+
+        let (mut dma, mut comp) =
+            if lo == 0 { (0, 0) } else { (self.dma[lo - 1], self.comp[lo - 1]) };
+        self.scratch_dma.clear();
+        self.scratch_comp.clear();
+        let mut end = k;
+        let mut shift = 0i64;
+        let mut converged = false;
+        for p in lo..=k {
+            (dma, comp) = self.advance(p, dma, comp, Some(&effect), &glens);
+            self.scratch_dma.push(dma);
+            self.scratch_comp.push(comp);
+            if p >= hi && p < k {
+                let sd = dma as i64 - self.dma[p] as i64;
+                let sc = comp as i64 - self.comp[p] as i64;
+                if sd == sc {
+                    end = p;
+                    shift = sd;
+                    converged = true;
+                    break;
+                }
+            }
+        }
+        let new_makespan = if converged {
+            (self.makespan as i64 + shift) as u64
+        } else {
+            dma.max(comp)
+        };
+        let delta = new_makespan as i64 - self.makespan as i64;
+        self.pending = Some(PendingTimeline {
+            effect,
+            glens,
+            first: lo,
+            end,
+            shift,
+            new_makespan,
+        });
+        delta
+    }
+
+    /// Apply the staged move: parameter edits land, the recomputed state
+    /// segment is copied in, and the converged suffix is shifted uniformly.
+    /// Panics when nothing is staged.
+    pub fn commit(&mut self) {
+        let pend = self.pending.take().expect("MakespanEval::commit without a scored move");
+        match pend.effect {
+            StagedEffect::Edit2 {
+                pos_a,
+                pos_b,
+                new_size_a,
+                new_size_b,
+                edges,
+                n_edges,
+            } => {
+                self.fp[pos_a] = new_size_a as u64;
+                self.fp[pos_b] = new_size_b as u64;
+                for &(e, v) in &edges[..n_edges] {
+                    self.ov[e] = v as u64;
+                }
+            }
+            StagedEffect::SwapAdjacent { i, edges, n_edges } => {
+                self.fp.swap(i, i + 1);
+                self.glen.swap(i, i + 1);
+                for &(e, v) in &edges[..n_edges] {
+                    self.ov[e] = v as u64;
+                }
+            }
+            StagedEffect::Reverse { a, b, edges, n_edges } => {
+                self.fp[a..=b].reverse();
+                self.glen[a..=b].reverse();
+                self.ov[a + 1..=b].reverse();
+                for &(e, v) in &edges[..n_edges] {
+                    self.ov[e] = v as u64;
+                }
+            }
+        }
+        for ge in pend.glens.iter().flatten() {
+            self.glen[ge.pos] = ge.new_len;
+        }
+        for (off, p) in (pend.first..=pend.end).enumerate() {
+            self.dma[p] = self.scratch_dma[off];
+            self.comp[p] = self.scratch_comp[off];
+        }
+        if pend.shift != 0 {
+            for p in pend.end + 1..self.dma.len() {
+                self.dma[p] = (self.dma[p] as i64 + pend.shift) as u64;
+                self.comp[p] = (self.comp[p] as i64 + pend.shift) as u64;
+            }
+        }
+        self.makespan = pend.new_makespan;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{OverlapMode, Platform};
+    use crate::sim::Simulator;
+    use crate::strategy;
+
+    fn acc_for(l: &ConvLayer, g: usize) -> Accelerator {
+        Accelerator {
+            t_acc: 4,
+            t_w: 1,
+            ..Accelerator::for_group_size(l, g)
+        }
+    }
+
+    /// From-scratch construction must equal the simulator's double-buffered
+    /// makespan for the same strategy — `MakespanEval` is the single Rust
+    /// implementation of the §3.7 lowering (`grouping_makespan` delegates
+    /// here), so this anchors it against the independent engine codepath.
+    #[test]
+    fn new_matches_the_simulator() {
+        for (l, g) in [
+            (ConvLayer::square(1, 8, 3, 1), 4usize),
+            (ConvLayer::new(2, 9, 9, 3, 3, 2, 1, 1).unwrap().with_dilation(2, 2).unwrap(), 3),
+        ] {
+            let acc = acc_for(&l, g).with_overlap(OverlapMode::DoubleBuffered);
+            let sim = Simulator::new(l, Platform::new(acc));
+            for s in [strategy::row_by_row(&l, g), strategy::zigzag(&l, g)] {
+                let eval = MakespanEval::new(&l, &acc, &s.groups);
+                assert_eq!(
+                    eval.makespan(),
+                    sim.run(&s).unwrap().duration,
+                    "{}",
+                    s.name
+                );
+            }
+        }
+    }
+
+    /// Roomier memory can only help: the makespan is monotone in
+    /// `size_mem` (more prefetches succeed).
+    #[test]
+    fn makespan_is_monotone_in_memory() {
+        let l = ConvLayer::square(1, 8, 3, 1);
+        let base = acc_for(&l, 4);
+        let s = strategy::row_by_row(&l, 4);
+        let mut last = u64::MAX;
+        for extra in [0u64, 8, 32, 128, 100_000] {
+            let acc = Accelerator { size_mem: base.size_mem + extra, ..base };
+            let m = MakespanEval::new(&l, &acc, &s.groups).makespan();
+            assert!(m <= last, "mem+{extra}: {m} > {last}");
+            last = m;
+        }
+    }
+}

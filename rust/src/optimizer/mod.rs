@@ -23,20 +23,25 @@
 //! timeout-guarded OPL runs.
 
 pub mod exact;
+pub mod makespan;
 pub mod model_builder;
 pub mod objective;
 pub mod overlap;
 pub mod search;
 
+pub use makespan::MakespanEval;
 pub use model_builder::{build_s1_model, decode_solution, S1ModelInfo};
-pub use objective::{grouping_duration, grouping_loads, GroupEdit, GroupingEval};
+pub use objective::{
+    grouping_duration, grouping_loads, grouping_makespan, GroupEdit, GroupingEval,
+    StagedEffect,
+};
 pub use overlap::OverlapGraph;
 pub use search::AnnealOptions;
 
 use std::time::Duration;
 
 use crate::conv::ConvLayer;
-use crate::platform::Accelerator;
+use crate::platform::{Accelerator, OverlapMode};
 use crate::strategy::{self, GroupedStrategy};
 
 /// Which engine produced the result.
@@ -70,7 +75,10 @@ pub struct OptimizeOptions {
     /// Probability of steering an annealing proposal along the sparse
     /// patch-overlap graph ([`search::AnnealOptions::neighbor_bias`]).
     /// Any value > 0 changes the per-seed trajectory; the default 0.0
-    /// keeps results bit-identical to earlier releases.
+    /// keeps results bit-identical to earlier releases. **Sequential
+    /// objective only** — [`search::anneal_duration`] has no graph-guided
+    /// proposal path, so the knob is inert under
+    /// [`OverlapMode::DoubleBuffered`] (the CLI rejects the combination).
     pub neighbor_bias: f64,
 }
 
@@ -91,9 +99,11 @@ impl Default for OptimizeOptions {
 /// Result of an optimization run.
 #[derive(Debug, Clone)]
 pub struct OptimizeResult {
+    /// The optimized strategy.
     pub strategy: GroupedStrategy,
     /// Strategy duration in cycles under the §7.1 cost model.
     pub duration: u64,
+    /// Which engine produced it.
     pub method: Method,
     /// Duration of the best heuristic MIP start, for gain reporting.
     pub mip_start_duration: u64,
@@ -132,15 +142,25 @@ pub fn heuristic_pool(layer: &ConvLayer, g: usize, k: usize) -> Vec<GroupedStrat
 /// Facade: optimal-strategy search for a layer on an accelerator.
 #[derive(Debug, Clone)]
 pub struct Optimizer {
+    /// Engine selection and search budgets.
     pub options: OptimizeOptions,
 }
 
 impl Optimizer {
+    /// An optimizer with the given options.
     pub fn new(options: OptimizeOptions) -> Self {
         Optimizer { options }
     }
 
     /// Run the pipeline: heuristics → (exact | polish).
+    ///
+    /// The duration metric follows the accelerator's [`OverlapMode`]:
+    /// sequential machines optimize the Definition-3 sum (Eq. 15's
+    /// objective), double-buffered machines the §3.7 two-resource makespan
+    /// — in the latter case the polish phase runs the duration-domain
+    /// annealer ([`search::anneal_duration`]) and the exact engine is
+    /// skipped (its admissible bound is a loaded-pixels bound, which proves
+    /// nothing about makespans).
     pub fn optimize(&self, layer: &ConvLayer, acc: &Accelerator) -> OptimizeResult {
         let o = &self.options;
         let g = o.group_size.max(1);
@@ -148,13 +168,21 @@ impl Optimizer {
             .k_groups
             .unwrap_or_else(|| layer.n_patches().div_ceil(g))
             .clamp(layer.n_patches().div_ceil(g), layer.n_patches());
+        let overlapped = acc.overlap == OverlapMode::DoubleBuffered;
+        let dur = |groups: &[Vec<crate::conv::PatchId>]| -> u64 {
+            if overlapped {
+                grouping_makespan(layer, acc, groups)
+            } else {
+                grouping_duration(layer, acc, groups)
+            }
+        };
 
         // The shared heuristic pool: Row-by-Row, ZigZag, Hilbert, diagonal,
         // greedy (in that order; see `heuristic_pool`).
         let evaluated: Vec<(GroupedStrategy, u64)> = heuristic_pool(layer, g, k)
             .into_iter()
             .map(|s| {
-                let d = grouping_duration(layer, acc, &s.groups);
+                let d = dur(&s.groups);
                 (s, d)
             })
             .collect();
@@ -182,12 +210,13 @@ impl Optimizer {
             .min_by_key(|&(_, d)| d)
             .expect("at least one seed");
 
-        // Exact engine for small instances.
-        if layer.n_patches() <= o.exact_max_patches {
+        // Exact engine for small instances (sequential objective only —
+        // its lower bound is a loaded-pixels bound).
+        if !overlapped && layer.n_patches() <= o.exact_max_patches {
             if let Some(groups) =
                 exact::solve_exact(layer, g, k, o.exact_budget, Some(&seed.groups))
             {
-                let duration = grouping_duration(layer, acc, &groups);
+                let duration = dur(&groups);
                 let mut strategy = GroupedStrategy::new("opl-exact", groups);
                 strategy.writeback = mip_start.writeback;
                 return OptimizeResult {
@@ -199,21 +228,26 @@ impl Optimizer {
             }
         }
 
-        // Polish phase (the paper's solution-polishing analogue).
-        let groups = search::anneal_with(
-            layer,
-            g,
-            k,
-            &seed.groups,
-            o.anneal_iters,
-            o.seed,
-            &search::AnnealOptions { neighbor_bias: o.neighbor_bias },
-        );
-        let duration = grouping_duration(layer, acc, &groups);
+        // Polish phase (the paper's solution-polishing analogue), in the
+        // metric the accelerator actually executes.
+        let groups = if overlapped {
+            search::anneal_duration(layer, acc, g, k, &seed.groups, o.anneal_iters, o.seed)
+        } else {
+            search::anneal_with(
+                layer,
+                g,
+                k,
+                &seed.groups,
+                o.anneal_iters,
+                o.seed,
+                &search::AnnealOptions { neighbor_bias: o.neighbor_bias },
+            )
+        };
+        let duration = dur(&groups);
         let mut strategy = GroupedStrategy::new("opl-polished", groups);
         strategy.writeback = mip_start.writeback;
         // Never return something worse than the best seed / MIP start.
-        let seed_dur = grouping_duration(layer, acc, &seed.groups);
+        let seed_dur = dur(&seed.groups);
         if duration > seed_dur.min(mip_dur) {
             let (best, best_dur) =
                 if seed_dur <= mip_dur { (seed, seed_dur) } else { (mip_start, mip_dur) };
@@ -257,6 +291,38 @@ mod tests {
                 all.sort();
                 assert_eq!(all, l.all_patches().collect::<Vec<_>>());
             }
+        }
+    }
+
+    /// Double-buffered accelerators switch the optimizer to the makespan
+    /// metric: the result is scored by `grouping_makespan`, never worse
+    /// than the heuristics in that metric, and the exact engine is skipped
+    /// even on small instances (its bound only proves loaded pixels).
+    #[test]
+    fn optimizer_double_buffered_uses_the_makespan_metric() {
+        for l in [ConvLayer::square(1, 5, 3, 1), ConvLayer::square(1, 8, 3, 1)] {
+            let acc = Accelerator {
+                t_acc: 4,
+                ..Accelerator::for_group_size(&l, 2)
+            }
+            .with_overlap(OverlapMode::DoubleBuffered);
+            let opt = Optimizer::new(OptimizeOptions {
+                group_size: 2,
+                anneal_iters: 10_000,
+                ..Default::default()
+            });
+            let res = opt.optimize(&l, &acc);
+            assert_eq!(res.method, Method::Polished, "exact engine must be skipped");
+            assert!(res.duration <= res.mip_start_duration);
+            assert_eq!(
+                res.duration,
+                grouping_makespan(&l, &acc, &res.strategy.groups),
+                "result scored in the makespan metric"
+            );
+            let mut all: Vec<u32> =
+                res.strategy.groups.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, l.all_patches().collect::<Vec<_>>());
         }
     }
 

@@ -26,8 +26,11 @@ use crate::strategy::GroupedStrategy;
 /// Handle mapping model variables back to the problem structure.
 #[derive(Debug, Clone)]
 pub struct S1ModelInfo {
+    /// Number of patches `|X|`.
     pub n_patches: usize,
+    /// Number of spatial input pixels.
     pub n_pixels: usize,
+    /// Number of groups `k` the model schedules.
     pub k_groups: usize,
     /// `P_g[i][k]` variable ids.
     pub p_g: Vec<Vec<BoolVar>>,

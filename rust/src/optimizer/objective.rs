@@ -87,6 +87,53 @@ enum Pending {
     },
 }
 
+/// A scored-but-uncommitted move's observable consequences, in visit-order
+/// terms — what a duration-domain objective layered on top of the pixel
+/// objective (see [`crate::optimizer::makespan::MakespanEval`]) needs to
+/// restage the same move on its own per-position state.
+#[derive(Debug, Clone, Copy)]
+pub enum StagedEffect {
+    /// Content edit at two positions: their new footprint sizes plus the
+    /// recomputed boundary-overlap entries (`edges[..n_edges]` valid,
+    /// `(edge position, new overlap)`).
+    Edit2 {
+        /// First edited position and its candidate footprint size.
+        pos_a: usize,
+        /// Second edited position and its candidate footprint size.
+        pos_b: usize,
+        /// Candidate footprint size of the group at `pos_a`.
+        new_size_a: usize,
+        /// Candidate footprint size of the group at `pos_b`.
+        new_size_b: usize,
+        /// Recomputed boundary-overlap entries.
+        edges: [(usize, usize); 4],
+        /// How many entries of `edges` are valid.
+        n_edges: usize,
+    },
+    /// Swap of adjacent positions `i`, `i + 1` (sizes permute, contents
+    /// don't change).
+    SwapAdjacent {
+        /// Left position of the swapped pair.
+        i: usize,
+        /// Recomputed outer boundary overlaps.
+        edges: [(usize, usize); 2],
+        /// How many entries of `edges` are valid.
+        n_edges: usize,
+    },
+    /// Reverse of the position segment `[a ..= b]` (interior overlaps
+    /// reverse in place, the ≤ 2 boundary overlaps are recomputed).
+    Reverse {
+        /// Segment start position.
+        a: usize,
+        /// Segment end position (inclusive).
+        b: usize,
+        /// Recomputed boundary overlaps.
+        edges: [(usize, usize); 2],
+        /// How many entries of `edges` are valid.
+        n_edges: usize,
+    },
+}
+
 /// An edit of one group's contents, described against its current patch
 /// list: optionally drop the element at `skip`, optionally append `add`.
 /// Relocate = (drop) on the source + (append) on the target; patch swap =
@@ -133,6 +180,7 @@ pub struct GroupingEval {
 }
 
 impl GroupingEval {
+    /// Build the evaluator for `groups` (in visit order) on `layer`.
     pub fn new(layer: &ConvLayer, groups: &[Vec<PatchId>]) -> Self {
         let k = groups.len();
         let footprints: Vec<PixelSet> =
@@ -407,6 +455,38 @@ impl GroupingEval {
         delta
     }
 
+    /// The currently staged move in visit-order terms (`None` when nothing
+    /// is staged). Non-destructive: the move stays staged for
+    /// [`GroupingEval::commit`]. Used by the duration-domain objective to
+    /// restage the identical change on its per-position timeline state.
+    pub fn pending_effect(&self) -> Option<StagedEffect> {
+        match self.pending {
+            Pending::None => None,
+            Pending::Edit2 {
+                pos_a,
+                pos_b,
+                new_size_a,
+                new_size_b,
+                edges,
+                n_edges,
+                ..
+            } => Some(StagedEffect::Edit2 {
+                pos_a,
+                pos_b,
+                new_size_a,
+                new_size_b,
+                edges,
+                n_edges,
+            }),
+            Pending::SwapAdjacent { i, edges, n_edges, .. } => {
+                Some(StagedEffect::SwapAdjacent { i, edges, n_edges })
+            }
+            Pending::Reverse { a, b, edges, n_edges, .. } => {
+                Some(StagedEffect::Reverse { a, b, edges, n_edges })
+            }
+        }
+    }
+
     /// Apply the staged move. The caller must mirror the same change on its
     /// own group storage (see `search::State::commit`). Panics when nothing
     /// is staged.
@@ -540,6 +620,27 @@ pub fn grouping_duration(
     loads * acc.t_l + writes * acc.t_w + n * acc.t_acc
 }
 
+/// Duration of the grouping under the **double-buffered** two-resource
+/// timeline (`DESIGN.md` §3.7): per-step loads/writes/compute are derived
+/// from the Definition-16 lowering (kernels load with step 1, write-backs
+/// follow the every-step policy, terminal flush), each step's prefetch is
+/// gated by the residency condition `occ_{i−1} + |I_i| ≤ size_MEM`, and the
+/// result is the critical-path makespan — bit-equal to what
+/// [`crate::sim::Simulator`] reports for the same strategy on a
+/// [`crate::platform::OverlapMode::DoubleBuffered`] accelerator
+/// (pinned by `objective_matches_simulator_double_buffered`).
+///
+/// Delegates to [`crate::optimizer::makespan::MakespanEval`] so the
+/// Definition-16 lowering exists exactly once on the Rust side (the Python
+/// oracle keeps its independent copy by design).
+pub fn grouping_makespan(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    groups: &[Vec<PatchId>],
+) -> u64 {
+    crate::optimizer::makespan::MakespanEval::new(layer, acc, groups).makespan()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -620,6 +721,69 @@ mod tests {
             assert_eq!(report.total_loaded(), fast_loads + kernel_elements, "{}", s.name);
             let fast = grouping_duration(&l, &acc, &s.groups);
             assert_eq!(report.duration - kernel_elements, fast, "{}", s.name);
+        }
+    }
+
+    /// The analytic makespan must agree **bit-for-bit** with the simulator
+    /// running the same strategy on a double-buffered accelerator — across
+    /// dense, strided, dilated and grouped layers and several memory sizes
+    /// (so both the prefetch and the serialization-fallback branches are
+    /// exercised).
+    #[test]
+    fn objective_matches_simulator_double_buffered() {
+        use crate::platform::OverlapMode;
+        let layers = [
+            (ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap(), 2usize),
+            (ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap(), 4),
+            (
+                ConvLayer::new(2, 9, 9, 3, 3, 2, 1, 1)
+                    .unwrap()
+                    .with_dilation(2, 2)
+                    .unwrap(),
+                3,
+            ),
+            (
+                ConvLayer::new(4, 7, 7, 3, 3, 4, 1, 1)
+                    .unwrap()
+                    .with_groups(4)
+                    .unwrap(),
+                2,
+            ),
+        ];
+        for (l, g) in layers {
+            let base = Accelerator { t_w: 1, t_acc: 3, ..Accelerator::for_group_size(&l, g) };
+            for extra_mem in [0u64, 64, 100_000] {
+                let acc = Accelerator {
+                    size_mem: base.size_mem + extra_mem,
+                    ..base
+                }
+                .with_overlap(OverlapMode::DoubleBuffered);
+                let sim = Simulator::new(l, Platform::new(acc));
+                for s in [strategy::row_by_row(&l, g), strategy::zigzag(&l, g)] {
+                    let report = sim.run(&s).unwrap();
+                    assert_eq!(
+                        report.duration,
+                        grouping_makespan(&l, &acc, &s.groups),
+                        "{} {l} mem+{extra_mem}",
+                        s.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// Bounds of the makespan: never above the sequential Definition-3
+    /// duration (plus the kernel-load term Eq. 15 excludes), never below
+    /// either resource's busy total.
+    #[test]
+    fn makespan_bounds_vs_sequential_objective() {
+        let l = ConvLayer::new(1, 10, 10, 3, 3, 1, 1, 1).unwrap();
+        let acc = Accelerator { t_acc: 5, t_w: 1, ..Accelerator::for_group_size(&l, 4) };
+        for s in [strategy::row_by_row(&l, 4), strategy::hilbert(&l, 4)] {
+            let sequential = grouping_duration(&l, &acc, &s.groups)
+                + l.kernel_elements() as u64 * acc.t_l;
+            let makespan = grouping_makespan(&l, &acc, &s.groups);
+            assert!(makespan <= sequential, "{}", s.name);
         }
     }
 

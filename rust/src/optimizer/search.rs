@@ -28,8 +28,10 @@
 //! per-seed results are unchanged; see EXPERIMENTS.md §Perf.
 
 use crate::conv::{ConvLayer, PatchId};
+use crate::optimizer::makespan::MakespanEval;
 use crate::optimizer::objective::{GroupEdit, GroupingEval};
 use crate::optimizer::overlap::OverlapGraph;
+use crate::platform::Accelerator;
 use crate::util::rng::Rng;
 
 /// Knobs for [`anneal_with`]. The default reproduces [`anneal`] exactly.
@@ -119,6 +121,81 @@ pub fn anneal_with(
             }
         }
         // Rejected: nothing was mutated, nothing to undo.
+    }
+    best
+}
+
+/// Anneal from `start` against the **duration-domain objective**: the §3.7
+/// double-buffered makespan on `acc` instead of loaded pixels. Same solution
+/// space, same four move kinds, deterministic per seed; every move is
+/// scored exactly through the lock-stepped pair of incremental evaluators
+/// ([`GroupingEval`] for the footprint math, [`MakespanEval`] for the
+/// timeline suffix) before anything mutates — the §3.5 contract in the
+/// duration domain. Never worse than the (normalized) start.
+///
+/// This is a *separate* annealer with its own RNG consumption pattern; the
+/// pixel-objective [`anneal`] stream is untouched, so all sequential-mode
+/// planner outputs remain bit-identical per seed.
+pub fn anneal_duration(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    g: usize,
+    k: usize,
+    start: &[Vec<PatchId>],
+    iters: u64,
+    seed: u64,
+) -> Vec<Vec<PatchId>> {
+    let mut state = State::new(layer, normalize(start, g, k));
+    let mut mk = MakespanEval::new(layer, acc, &state.materialize());
+    let mut best = state.materialize();
+    let mut best_cost = mk.makespan();
+
+    let mut rng = Rng::new(seed);
+    // Temperature scale: a typical bad move costs O(one patch footprint) of
+    // load cycles, or one compute slot when t_acc dominates.
+    let t0 = (((layer.h_k * layer.w_k * layer.c_in) as u64 * acc.t_l.max(1))
+        .max(acc.t_acc)
+        .max(1)) as f64;
+    let t_end = 0.05;
+
+    for it in 0..iters {
+        let progress = it as f64 / iters.max(1) as f64;
+        let temp = t0 * (t_end / t0).powf(progress);
+
+        let proposal = match rng.below(4) {
+            0 => state.propose_relocate(layer, &mut rng, g),
+            1 => state.propose_swap_patches(layer, &mut rng),
+            2 => state.propose_swap_groups(&mut rng),
+            _ => state.propose_reverse_segment(&mut rng),
+        };
+        let Some((mv, _pixel_delta)) = proposal else { continue };
+        let effect = state.eval.pending_effect().expect("scored move is staged");
+        // Content moves change group lengths; order moves don't.
+        let (glen_a, glen_b) = match &mv {
+            Move::Relocate { from_slot, to_slot, .. } => (
+                Some((
+                    state.eval.position_of(*from_slot),
+                    state.groups[*from_slot].len() as u64 - 1,
+                )),
+                Some((
+                    state.eval.position_of(*to_slot),
+                    state.groups[*to_slot].len() as u64 + 1,
+                )),
+            ),
+            _ => (None, None),
+        };
+        let delta = mk.score(effect, glen_a, glen_b);
+
+        let keep = delta <= 0 || rng.chance((-(delta as f64) / temp).exp());
+        if keep {
+            state.commit(mv);
+            mk.commit();
+            if mk.makespan() < best_cost {
+                best_cost = mk.makespan();
+                best = state.materialize();
+            }
+        }
+        // Rejected: both evaluators left untouched, nothing to undo.
     }
     best
 }
@@ -667,6 +744,121 @@ mod tests {
     fn greedy_rejects_over_capacity() {
         let l = ConvLayer::square(1, 7, 3, 1); // 25 patches
         let _ = greedy(&l, 2, 12); // 12 × 2 = 24 < 25
+    }
+
+    #[test]
+    fn anneal_duration_is_deterministic_and_never_worse() {
+        use crate::optimizer::objective::grouping_makespan;
+        let l = ConvLayer::square(1, 8, 3, 1); // 36 patches
+        let g = 4;
+        let k = l.n_patches().div_ceil(g);
+        let acc = Accelerator {
+            t_acc: 4,
+            t_w: 1,
+            ..Accelerator::for_group_size(&l, g)
+        };
+        let start = strategy::row_by_row(&l, g).groups;
+        let a = anneal_duration(&l, &acc, g, k, &start, 8_000, 11);
+        let b = anneal_duration(&l, &acc, g, k, &start, 8_000, 11);
+        assert_eq!(a, b, "deterministic per seed");
+        assert!(
+            grouping_makespan(&l, &acc, &a)
+                <= grouping_makespan(&l, &acc, &normalize(&start, g, k)),
+            "never worse than the normalized start"
+        );
+        // structure: exactly k groups, sizes ≤ g, all patches once
+        assert_eq!(a.len(), k);
+        assert!(a.iter().all(|gr| gr.len() <= g && !gr.is_empty()));
+        let mut all: Vec<u32> = a.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, l.all_patches().collect::<Vec<_>>());
+    }
+
+    /// Duration-domain twin of the 1000-move test below: the lock-stepped
+    /// [`MakespanEval`] must equal a from-scratch rebuild (and the analytic
+    /// `grouping_makespan`) after arbitrary accept/reject interleavings of
+    /// all four move kinds, with every accepted delta matching the observed
+    /// makespan change.
+    #[test]
+    fn thousand_random_moves_match_from_scratch_makespan() {
+        use crate::optimizer::objective::grouping_makespan;
+        for (l, g, extra_mem) in [
+            (ConvLayer::square(1, 6, 3, 1), 2usize, 0u64),
+            (ConvLayer::square(1, 8, 3, 1), 4, 40),
+            // strided + roomy memory: the prefetch branch dominates
+            (ConvLayer::new(1, 9, 9, 3, 3, 1, 2, 2).unwrap(), 3, 100_000),
+            // dilated: hole-y footprints through the timeline
+            (
+                ConvLayer::new(1, 11, 11, 3, 3, 1, 1, 1)
+                    .unwrap()
+                    .with_dilation(2, 2)
+                    .unwrap(),
+                3,
+                0,
+            ),
+        ] {
+            let base = Accelerator::for_group_size(&l, g);
+            let acc = Accelerator {
+                t_acc: 3,
+                t_w: 1,
+                size_mem: base.size_mem + extra_mem,
+                ..base
+            };
+            let k = l.n_patches().div_ceil(g);
+            let start = normalize(&strategy::row_by_row(&l, g).groups, g, k);
+            let mut state = State::new(&l, start);
+            let mut mk = MakespanEval::new(&l, &acc, &state.materialize());
+            let mut rng = Rng::new(0x0E17A);
+            let (mut accepted, mut rejected) = (0u32, 0u32);
+            for it in 0..1_000 {
+                let before = mk.makespan();
+                let proposal = match rng.below(4) {
+                    0 => state.propose_relocate(&l, &mut rng, g),
+                    1 => state.propose_swap_patches(&l, &mut rng),
+                    2 => state.propose_swap_groups(&mut rng),
+                    _ => state.propose_reverse_segment(&mut rng),
+                };
+                let Some((mv, _)) = proposal else { continue };
+                let effect = state.eval.pending_effect().unwrap();
+                let (glen_a, glen_b) = match &mv {
+                    Move::Relocate { from_slot, to_slot, .. } => (
+                        Some((
+                            state.eval.position_of(*from_slot),
+                            state.groups[*from_slot].len() as u64 - 1,
+                        )),
+                        Some((
+                            state.eval.position_of(*to_slot),
+                            state.groups[*to_slot].len() as u64 + 1,
+                        )),
+                    ),
+                    _ => (None, None),
+                };
+                let delta = mk.score(effect, glen_a, glen_b);
+                assert_eq!(mk.makespan(), before, "score mutated state at {it}");
+                if rng.chance(0.5) {
+                    state.commit(mv);
+                    mk.commit();
+                    accepted += 1;
+                    assert_eq!(
+                        mk.makespan() as i64,
+                        before as i64 + delta,
+                        "delta mismatch at iteration {it}"
+                    );
+                } else {
+                    rejected += 1;
+                    assert_eq!(mk.makespan(), before);
+                }
+                if it % 97 == 0 {
+                    assert_eq!(
+                        mk.makespan(),
+                        grouping_makespan(&l, &acc, &state.materialize()),
+                        "incremental makespan diverged at {it}"
+                    );
+                }
+            }
+            assert_eq!(mk.makespan(), grouping_makespan(&l, &acc, &state.materialize()));
+            assert!(accepted > 100 && rejected > 100, "both paths exercised");
+        }
     }
 
     /// The delta-consistency property the whole PR rests on: after 1 000

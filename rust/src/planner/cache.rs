@@ -17,7 +17,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::conv::{ConvLayer, PatchId};
-use crate::platform::Accelerator;
+use crate::platform::{Accelerator, OverlapMode};
 use crate::strategy::{self, GroupedStrategy};
 use crate::util::hash::fnv1a64_hex;
 use crate::util::json::{self, Json};
@@ -40,9 +40,12 @@ impl CacheKey {
         anneal_iters: u64,
         anneal_starts: usize,
     ) -> CacheKey {
-        // v2: dilation + channel groups joined the layer geometry.
+        // v3: the accelerator's overlap mode joined the key — a strategy
+        // raced under the makespan objective is a different planning
+        // problem than one raced under loaded pixels (v2 added
+        // dilation + channel groups).
         let canonical = format!(
-            "v2|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|dil:{}x{}|grp:{}|acc:{},{},{},{},{}|g:{}|k:{}|anneal:{}x{}@{}",
+            "v3|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|dil:{}x{}|grp:{}|acc:{},{},{},{},{}|ovl:{}|g:{}|k:{}|anneal:{}x{}@{}",
             layer.c_in,
             layer.h_in,
             layer.w_in,
@@ -59,6 +62,7 @@ impl CacheKey {
             acc.size_mem,
             acc.t_l,
             acc.t_w,
+            acc.overlap.as_str(),
             group_size,
             k,
             anneal_starts,
@@ -82,9 +86,15 @@ impl CacheKey {
 /// A cached planning result.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CachedStrategy {
+    /// The winning strategy.
     pub strategy: GroupedStrategy,
-    /// The race objective the winner achieved.
+    /// The loaded-pixels objective the winner achieved (the race metric in
+    /// sequential mode; recomputed on every hit).
     pub loaded_pixels: u64,
+    /// The §3.7 overlapped makespan the winner achieved — present exactly
+    /// when the key's accelerator was double-buffered (recomputed on hits
+    /// in that mode).
+    pub makespan: Option<u64>,
     /// Which portfolio lane won (provenance for reports).
     pub winner: String,
 }
@@ -124,6 +134,7 @@ impl StrategyCache {
         Ok(StrategyCache { dir: dir.to_path_buf() })
     }
 
+    /// The directory backing this cache.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
@@ -137,8 +148,9 @@ impl StrategyCache {
         }
         let winner = v.get("winner").and_then(Json::as_str)?.to_string();
         let loaded_pixels = v.get("loaded_pixels").and_then(Json::as_u64)?;
+        let makespan = v.get("makespan").and_then(Json::as_u64);
         let strategy = strategy::strategy_from_json_value(v.get("strategy")?).ok()?;
-        Some(CachedStrategy { strategy, loaded_pixels, winner })
+        Some(CachedStrategy { strategy, loaded_pixels, makespan, winner })
     }
 
     /// Store a planning result under its key (overwrites).
@@ -150,6 +162,9 @@ impl StrategyCache {
             .set("winner", entry.winner.as_str())
             .set("loaded_pixels", entry.loaded_pixels)
             .set("strategy", strategy_json);
+        if let Some(m) = entry.makespan {
+            o.set("makespan", m);
+        }
         let path = self.dir.join(key.filename());
         std::fs::write(&path, o.to_string_pretty())
             .map_err(|e| format!("write {}: {e}", path.display()))
@@ -185,10 +200,22 @@ mod tests {
         let entry = CachedStrategy {
             strategy: strategy::zigzag(&l, 2),
             loaded_pixels: 57,
+            makespan: None,
             winner: "zigzag".to_string(),
         };
         cache.put(&key, &entry).unwrap();
         assert_eq!(cache.get(&key), Some(entry));
+        // makespan survives the roundtrip when present (double-buffered
+        // planning problems store their race metric too)
+        let (l2, key2) = sample_key(9);
+        let entry2 = CachedStrategy {
+            strategy: strategy::zigzag(&l2, 2),
+            loaded_pixels: 57,
+            makespan: Some(123),
+            winner: "zigzag".to_string(),
+        };
+        cache.put(&key2, &entry2).unwrap();
+        assert_eq!(cache.get(&key2), Some(entry2));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -200,12 +227,13 @@ mod tests {
         let entry = CachedStrategy {
             strategy: strategy::zigzag(&l, 2),
             loaded_pixels: 57,
+            makespan: None,
             winner: "zigzag".to_string(),
         };
         cache.put(&key, &entry).unwrap();
         // same filename, different stored key → treated as a miss
         let text = std::fs::read_to_string(dir.join(key.filename())).unwrap();
-        let tampered = text.replace("v2|", "v0|");
+        let tampered = text.replace("v3|", "v0|");
         std::fs::write(dir.join(key.filename()), tampered).unwrap();
         assert!(cache.get(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
@@ -242,12 +270,37 @@ mod tests {
         assert_ne!(dilated.canonical(), grouped.canonical());
     }
 
+    /// The overlap mode is part of the planning problem: the same shape on
+    /// the same machine under the other duration semantics must be a
+    /// different key (CacheKey v3).
+    #[test]
+    fn overlap_mode_is_part_of_the_key() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 2);
+        let seq = CacheKey::new(&l, &acc, 2, 8, 1, 100, 1);
+        let db = CacheKey::new(
+            &l,
+            &acc.with_overlap(OverlapMode::DoubleBuffered),
+            2,
+            8,
+            1,
+            100,
+            1,
+        );
+        assert_ne!(seq.canonical(), db.canonical());
+        assert_ne!(seq.filename(), db.filename());
+        assert!(seq.canonical().starts_with("v3|"));
+        assert!(seq.canonical().contains("|ovl:sequential|"));
+        assert!(db.canonical().contains("|ovl:double-buffered|"));
+    }
+
     #[test]
     fn validate_for_rejects_broken_payloads() {
         let l = ConvLayer::square(1, 6, 3, 1); // 16 patches
         let good = CachedStrategy {
             strategy: strategy::zigzag(&l, 2),
             loaded_pixels: 1,
+            makespan: None,
             winner: "zigzag".to_string(),
         };
         assert!(good.validate_for(&l, 2));

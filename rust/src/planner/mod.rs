@@ -32,8 +32,8 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::config::NetworkPreset;
 use crate::conv::ConvLayer;
-use crate::optimizer::grouping_loads;
-use crate::platform::Accelerator;
+use crate::optimizer::{grouping_loads, grouping_makespan};
+use crate::platform::{Accelerator, OverlapMode};
 use crate::sim::{Network, Stage};
 use crate::strategy::GroupedStrategy;
 use crate::util::pool;
@@ -45,13 +45,16 @@ pub enum AcceleratorSpec {
     /// bound via [`Accelerator::for_group_size`].
     PerLayerGroup(usize),
     /// One fixed accelerator shared by every layer; the per-layer group
-    /// bound is its `nb_patches_max_S1` (clamped to ≥ 1).
+    /// bound is its `nb_patches_max_S1` (clamped to ≥ 1). Its overlap mode
+    /// is overridden by [`PlanOptions::overlap`] (the planner-level knob is
+    /// authoritative, so plans and cache keys depend on one source).
     Fixed(Accelerator),
 }
 
 /// Planner configuration.
 #[derive(Debug, Clone)]
 pub struct PlanOptions {
+    /// How per-layer accelerators are derived.
     pub accelerator: AcceleratorSpec,
     /// Base RNG seed; annealing lane `i` uses `seed + i`.
     pub seed: u64,
@@ -65,6 +68,11 @@ pub struct PlanOptions {
     pub anneal_starts: usize,
     /// Worker threads for the race (`0` = [`pool::default_threads`]).
     pub threads: usize,
+    /// Duration semantics every stage accelerator runs under. Sequential
+    /// (the default) races loaded pixels and keeps all historical plans
+    /// bit-stable; double-buffered races the §3.7 overlapped makespan
+    /// (`plan-network --overlap double-buffered`). Part of the cache key.
+    pub overlap: OverlapMode,
 }
 
 impl Default for PlanOptions {
@@ -75,6 +83,7 @@ impl Default for PlanOptions {
             anneal_iters: 50_000,
             anneal_starts: 3,
             threads: 0,
+            overlap: OverlapMode::Sequential,
         }
     }
 }
@@ -82,17 +91,26 @@ impl Default for PlanOptions {
 /// The chosen strategy (plus provenance) for one stage.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
+    /// Stage name within the network preset.
     pub stage: String,
+    /// The layer this plan drives.
     pub layer: ConvLayer,
+    /// The accelerator the stage runs on (overlap mode included).
     pub accelerator: Accelerator,
+    /// Group-size bound `nb_patches_max_S1` the race used.
     pub group_size: usize,
+    /// The winning strategy.
     pub strategy: GroupedStrategy,
     /// Which portfolio lane won.
     pub winner: String,
-    /// The race objective achieved (spatial input pixels loaded).
+    /// The sequential race objective achieved (spatial input pixels loaded).
     pub loaded_pixels: u64,
-    /// Simulated stage duration in cycles (from the network run).
+    /// Simulated stage duration in cycles (from the network run; the
+    /// overlapped makespan when the accelerator is double-buffered).
     pub duration: u64,
+    /// The stage's Definition-3 sequential duration (equals `duration` on
+    /// sequential accelerators).
+    pub sequential_duration: u64,
     /// True when the strategy came from the cache (or a shape already
     /// planned earlier in the same call) rather than a fresh race.
     pub cache_hit: bool,
@@ -101,13 +119,23 @@ pub struct LayerPlan {
 /// A full network plan plus the end-to-end simulation aggregates.
 #[derive(Debug, Clone)]
 pub struct NetworkPlan {
+    /// Network preset name.
     pub network: String,
+    /// Per-stage plans in pipeline order.
     pub layers: Vec<LayerPlan>,
     /// Total simulated duration of the planned network in cycles.
     pub total_duration: u64,
+    /// Total Definition-3 sequential duration — `total_duration` equals it
+    /// on sequential accelerators; the difference is the transfer time the
+    /// double-buffered timeline hides.
+    pub total_sequential_duration: u64,
+    /// The overlap semantics the plan was raced and simulated under.
+    pub overlap: OverlapMode,
     /// Peak on-chip occupancy across all stages (elements).
     pub peak_occupancy: u64,
+    /// Stages served from the strategy cache (or an earlier identical shape).
     pub cache_hits: usize,
+    /// Stages that required a fresh portfolio race.
     pub cache_misses: usize,
     /// Annealing iterations actually executed while planning — 0 when every
     /// layer came from the cache.
@@ -117,6 +145,7 @@ pub struct NetworkPlan {
 /// The planner facade.
 #[derive(Debug, Clone)]
 pub struct NetworkPlanner {
+    /// Planner configuration (accelerator spec, seeds, budgets, overlap).
     pub options: PlanOptions,
     cache: Option<StrategyCache>,
 }
@@ -133,7 +162,7 @@ impl NetworkPlanner {
     }
 
     fn stage_accelerator(&self, layer: &ConvLayer) -> (Accelerator, usize) {
-        match self.options.accelerator {
+        let (acc, group) = match self.options.accelerator {
             AcceleratorSpec::PerLayerGroup(g) => {
                 let g = g.max(1);
                 (Accelerator::for_group_size(layer, g), g)
@@ -141,10 +170,29 @@ impl NetworkPlanner {
             AcceleratorSpec::Fixed(acc) => {
                 (acc, acc.max_patches_per_step(layer).max(1))
             }
-        }
+        };
+        (acc.with_overlap(self.options.overlap), group)
     }
 
     /// Plan every layer of `preset` and simulate the planned network.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use convoffload::config::network_preset;
+    /// use convoffload::planner::{NetworkPlanner, PlanOptions};
+    ///
+    /// let preset = network_preset("lenet5").unwrap();
+    /// let planner = NetworkPlanner::new(PlanOptions {
+    ///     anneal_iters: 200, // tiny budget: doc-test speed
+    ///     anneal_starts: 1,
+    ///     ..PlanOptions::default()
+    /// });
+    /// let plan = planner.plan(&preset).unwrap();
+    /// assert_eq!(plan.layers.len(), 2);
+    /// // the heuristic lanes alone already reach the analytic baseline
+    /// assert!(plan.total_duration <= 7100);
+    /// ```
     pub fn plan(&self, preset: &NetworkPreset) -> Result<NetworkPlan, String> {
         let o = &self.options;
 
@@ -184,13 +232,20 @@ impl NetworkPlanner {
             }
             if let Some(cache) = &self.cache {
                 // A hit must survive structural validation against the layer
-                // it will drive, and its stored objective must match the
-                // recomputed one (cheap next to a race); anything stale
+                // it will drive, and its stored objectives must match the
+                // recomputed ones (cheap next to a race); anything stale
                 // re-races and overwrites.
                 if let Some(hit) = cache.get(&ctx.key).filter(|h| {
                     let layer = &preset.stages[i].layer;
                     h.validate_for(layer, ctx.group)
                         && h.loaded_pixels == grouping_loads(layer, &h.strategy.groups)
+                        && (o.overlap == OverlapMode::Sequential
+                            || h.makespan
+                                == Some(grouping_makespan(
+                                    layer,
+                                    &ctx.acc,
+                                    &h.strategy.groups,
+                                )))
                 }) {
                     resolved.insert(ctx.key.canonical().to_string(), hit);
                     continue;
@@ -213,6 +268,7 @@ impl NetworkPlanner {
             let results = pool::parallel_map(&work, threads, |&(si, ei)| {
                 run_entry(
                     &preset.stages[si].layer,
+                    &ctxs[si].acc,
                     ctxs[si].group,
                     ctxs[si].k,
                     &entries[ei],
@@ -222,10 +278,20 @@ impl NetworkPlanner {
             for (ji, &si) in jobs.iter().enumerate() {
                 let lanes = &results[ji * entries.len()..(ji + 1) * entries.len()];
                 // Deterministic reduction: strictly-less keeps the earliest
-                // lane on ties — (cost, portfolio-entry index) order.
+                // lane on ties. Sequential mode races loaded pixels —
+                // (cost, portfolio-entry index) order, unchanged since PR 1
+                // — while double-buffered mode races the overlapped
+                // makespan with loaded pixels as the tie-break.
                 let mut best = &lanes[0];
                 for lane in &lanes[1..] {
-                    if lane.loaded_pixels < best.loaded_pixels {
+                    let better = match o.overlap {
+                        OverlapMode::Sequential => lane.loaded_pixels < best.loaded_pixels,
+                        OverlapMode::DoubleBuffered => {
+                            (lane.makespan, lane.loaded_pixels)
+                                < (best.makespan, best.loaded_pixels)
+                        }
+                    };
+                    if better {
                         best = lane;
                     }
                 }
@@ -233,6 +299,7 @@ impl NetworkPlanner {
                 let entry = CachedStrategy {
                     strategy: best.strategy.clone(),
                     loaded_pixels: best.loaded_pixels,
+                    makespan: best.makespan,
                     winner: best.label.clone(),
                 };
                 if let Some(cache) = &self.cache {
@@ -274,17 +341,21 @@ impl NetworkPlanner {
                 winner: entry.winner.clone(),
                 loaded_pixels: entry.loaded_pixels,
                 duration: 0, // filled from the simulation below
+                sequential_duration: 0,
                 cache_hit: hit,
             });
         }
         let report = net.run().map_err(|e| e.to_string())?;
         for (lp, sr) in layers.iter_mut().zip(&report.per_stage) {
             lp.duration = sr.duration;
+            lp.sequential_duration = sr.sequential_duration;
         }
         Ok(NetworkPlan {
             network: preset.name.to_string(),
             layers,
             total_duration: report.total_duration,
+            total_sequential_duration: report.total_sequential_duration,
+            overlap: o.overlap,
             peak_occupancy: report.peak_occupancy,
             cache_hits,
             cache_misses,
@@ -329,6 +400,7 @@ mod tests {
             anneal_iters: 1_000,
             anneal_starts: 2,
             threads: 0,
+            overlap: OverlapMode::Sequential,
         }
     }
 
@@ -422,6 +494,70 @@ mod tests {
         assert!(!plan.layers[0].cache_hit);
         assert!(plan.layers[1].cache_hit);
         assert_eq!(plan.layers[0].strategy, plan.layers[1].strategy);
+    }
+
+    /// Double-buffered planning: every stage accelerator carries the mode,
+    /// stage durations are makespans (≤ their own sequential durations),
+    /// and the plan is deterministic across thread counts like the
+    /// sequential one.
+    #[test]
+    fn double_buffered_plan_hides_transfer_time() {
+        let preset = tiny_preset();
+        let seq = NetworkPlanner::new(quick_options()).plan(&preset).unwrap();
+        assert_eq!(seq.overlap, OverlapMode::Sequential);
+        assert_eq!(seq.total_duration, seq.total_sequential_duration);
+
+        let mut opts = quick_options();
+        opts.overlap = OverlapMode::DoubleBuffered;
+        let db = NetworkPlanner::new(opts.clone()).plan(&preset).unwrap();
+        assert_eq!(db.overlap, OverlapMode::DoubleBuffered);
+        assert!(db.total_duration <= db.total_sequential_duration);
+        for lp in &db.layers {
+            assert_eq!(lp.accelerator.overlap, OverlapMode::DoubleBuffered);
+            assert!(lp.duration <= lp.sequential_duration, "{}", lp.stage);
+        }
+        // determinism under any thread schedule, same as sequential
+        for threads in [1usize, 8] {
+            opts.threads = threads;
+            let again = NetworkPlanner::new(opts.clone()).plan(&preset).unwrap();
+            assert_eq!(again.total_duration, db.total_duration, "threads={threads}");
+            for (a, b) in db.layers.iter().zip(&again.layers) {
+                assert_eq!(a.strategy, b.strategy, "threads={threads}");
+                assert_eq!(a.winner, b.winner);
+            }
+        }
+    }
+
+    /// The two modes are distinct cache keys: planning one then the other
+    /// over the same directory must not serve a cross-mode hit.
+    #[test]
+    fn overlap_modes_do_not_share_cache_entries() {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-planner-overlap-cache-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let preset = tiny_preset();
+        let cache = StrategyCache::open(&dir).unwrap();
+        let seq = NetworkPlanner::with_cache(quick_options(), cache.clone())
+            .plan(&preset)
+            .unwrap();
+        assert_eq!(seq.cache_misses, 2);
+        let mut opts = quick_options();
+        opts.overlap = OverlapMode::DoubleBuffered;
+        let db = NetworkPlanner::with_cache(opts.clone(), cache.clone())
+            .plan(&preset)
+            .unwrap();
+        assert_eq!(db.cache_misses, 2, "other mode must not hit");
+        // replanning each mode hits its own entries
+        let seq2 = NetworkPlanner::with_cache(quick_options(), cache.clone())
+            .plan(&preset)
+            .unwrap();
+        assert_eq!(seq2.cache_hits, 2);
+        let db2 = NetworkPlanner::with_cache(opts, cache).plan(&preset).unwrap();
+        assert_eq!(db2.cache_hits, 2);
+        assert_eq!(db2.total_duration, db.total_duration);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //! on search quality by raising `iters` (`plan-network --thorough` = 3×).
 
 use crate::conv::ConvLayer;
-use crate::optimizer::{grouping_loads, search};
+use crate::optimizer::{grouping_loads, grouping_makespan, search};
+use crate::platform::{Accelerator, OverlapMode};
 use crate::strategy::{self, GroupedStrategy, Ordering};
 
 /// One lane of the race.
@@ -64,10 +65,16 @@ pub fn portfolio_entries(seed: u64, iters: u64, anneal_starts: usize) -> Vec<Por
 /// Outcome of one lane.
 #[derive(Debug, Clone)]
 pub struct PortfolioResult {
+    /// The lane's strategy.
     pub strategy: GroupedStrategy,
-    /// The race's objective: total spatial input pixels loaded (Eq. 15's
-    /// bandwidth term divided by `t_l · C_in`).
+    /// The sequential race objective: total spatial input pixels loaded
+    /// (Eq. 15's bandwidth term divided by `t_l · C_in`).
     pub loaded_pixels: u64,
+    /// The §3.7 overlapped makespan of the strategy — computed exactly when
+    /// the accelerator is double-buffered (the primary race metric then,
+    /// with `loaded_pixels` as the tie-break).
+    pub makespan: Option<u64>,
+    /// Stable lane label (provenance for reports and cache files).
     pub label: String,
     /// Annealing iterations this lane executed (0 for heuristic lanes).
     pub anneal_iters: u64,
@@ -75,12 +82,21 @@ pub struct PortfolioResult {
 
 /// Run one lane to completion. Pure function of its arguments — safe to call
 /// from any worker thread.
+///
+/// The accelerator's [`OverlapMode`] selects the lane objective: sequential
+/// machines race loaded pixels (annealing with [`search::anneal`], streams
+/// bit-identical to every earlier release); double-buffered machines race
+/// the overlapped makespan (annealing with [`search::anneal_duration`], the
+/// start picked by makespan too), and `makespan` is filled for the
+/// planner's reduction.
 pub fn run_entry(
     layer: &ConvLayer,
+    acc: &Accelerator,
     group_size: usize,
     k: usize,
     entry: &PortfolioEntry,
 ) -> PortfolioResult {
+    let overlapped = acc.overlap == OverlapMode::DoubleBuffered;
     let (strategy, anneal_iters) = match entry {
         PortfolioEntry::Ordering(o) => (strategy::from_ordering(layer, *o, group_size), 0),
         PortfolioEntry::Greedy => (
@@ -92,12 +108,28 @@ pub fn run_entry(
                 .into_iter()
                 .map(|o| {
                     let s = strategy::from_ordering(layer, o, group_size);
-                    let d = grouping_loads(layer, &s.groups);
+                    let d = if overlapped {
+                        grouping_makespan(layer, acc, &s.groups)
+                    } else {
+                        grouping_loads(layer, &s.groups)
+                    };
                     (s, d)
                 })
                 .min_by_key(|&(_, d)| d)
                 .expect("at least one ordering");
-            let groups = search::anneal(layer, group_size, k, &start.0.groups, *iters, *seed);
+            let groups = if overlapped {
+                search::anneal_duration(
+                    layer,
+                    acc,
+                    group_size,
+                    k,
+                    &start.0.groups,
+                    *iters,
+                    *seed,
+                )
+            } else {
+                search::anneal(layer, group_size, k, &start.0.groups, *iters, *seed)
+            };
             (
                 GroupedStrategy::new(format!("anneal-s{seed}"), groups),
                 *iters,
@@ -105,9 +137,11 @@ pub fn run_entry(
         }
     };
     let loaded_pixels = grouping_loads(layer, &strategy.groups);
+    let makespan = overlapped.then(|| grouping_makespan(layer, acc, &strategy.groups));
     PortfolioResult {
         strategy,
         loaded_pixels,
+        makespan,
         label: entry.label(),
         anneal_iters,
     }
@@ -140,14 +174,46 @@ mod tests {
         let l = ConvLayer::square(1, 7, 3, 1); // 25 patches
         let g = 3;
         let k = l.n_patches().div_ceil(g);
+        let acc = Accelerator::for_group_size(&l, g);
         for entry in portfolio_entries(7, 500, 1) {
-            let r = run_entry(&l, g, k, &entry);
+            let r = run_entry(&l, &acc, g, k, &entry);
             let mut all: Vec<u32> = r.strategy.groups.iter().flatten().copied().collect();
             all.sort();
             assert_eq!(all, l.all_patches().collect::<Vec<_>>(), "{}", r.label);
             assert!(r.strategy.groups.iter().all(|gr| gr.len() <= g));
             assert_eq!(r.loaded_pixels, grouping_loads(&l, &r.strategy.groups));
+            assert_eq!(r.makespan, None, "sequential lanes carry no makespan");
         }
+    }
+
+    /// Double-buffered lanes fill the makespan metric, stay valid, and the
+    /// annealing lane never loses to its own ordering starts in that metric.
+    #[test]
+    fn double_buffered_lanes_race_the_makespan() {
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let g = 3;
+        let k = l.n_patches().div_ceil(g);
+        let acc = Accelerator { t_acc: 4, ..Accelerator::for_group_size(&l, g) }
+            .with_overlap(OverlapMode::DoubleBuffered);
+        let mut ordering_best = u64::MAX;
+        let mut anneal_makespan = u64::MAX;
+        for entry in portfolio_entries(7, 2_000, 1) {
+            let r = run_entry(&l, &acc, g, k, &entry);
+            let m = r.makespan.expect("double-buffered lanes carry a makespan");
+            assert_eq!(m, grouping_makespan(&l, &acc, &r.strategy.groups), "{}", r.label);
+            let mut all: Vec<u32> = r.strategy.groups.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, l.all_patches().collect::<Vec<_>>(), "{}", r.label);
+            match entry {
+                PortfolioEntry::Ordering(_) => ordering_best = ordering_best.min(m),
+                PortfolioEntry::Anneal { .. } => anneal_makespan = m,
+                PortfolioEntry::Greedy => {}
+            }
+        }
+        assert!(
+            anneal_makespan <= ordering_best,
+            "anneal lane ({anneal_makespan}) must not lose to its ordering starts ({ordering_best})"
+        );
     }
 
     /// The heuristic lanes must stay in lock-step with
@@ -158,11 +224,12 @@ mod tests {
     fn first_lanes_match_the_optimizer_heuristic_pool() {
         let l = ConvLayer::square(1, 7, 3, 1); // 25 patches
         let (g, k) = (3usize, 9usize);
+        let acc = Accelerator::for_group_size(&l, g);
         let pool = crate::optimizer::heuristic_pool(&l, g, k);
         let entries = portfolio_entries(1, 10, 0); // heuristic lanes only
         assert_eq!(entries.len(), pool.len());
         for (e, want) in entries.iter().zip(&pool) {
-            assert_eq!(&run_entry(&l, g, k, e).strategy, want, "{}", e.label());
+            assert_eq!(&run_entry(&l, &acc, g, k, e).strategy, want, "{}", e.label());
         }
     }
 
@@ -172,10 +239,16 @@ mod tests {
         let g = 2;
         let k = l.n_patches().div_ceil(g);
         let e = PortfolioEntry::Anneal { seed: 42, iters: 2_000 };
-        let a = run_entry(&l, g, k, &e);
-        let b = run_entry(&l, g, k, &e);
-        assert_eq!(a.strategy, b.strategy);
-        assert_eq!(a.loaded_pixels, b.loaded_pixels);
-        assert_eq!(a.anneal_iters, 2_000);
+        for acc in [
+            Accelerator::for_group_size(&l, g),
+            Accelerator::for_group_size(&l, g).with_overlap(OverlapMode::DoubleBuffered),
+        ] {
+            let a = run_entry(&l, &acc, g, k, &e);
+            let b = run_entry(&l, &acc, g, k, &e);
+            assert_eq!(a.strategy, b.strategy, "{}", acc.overlap.as_str());
+            assert_eq!(a.loaded_pixels, b.loaded_pixels);
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.anneal_iters, 2_000);
+        }
     }
 }

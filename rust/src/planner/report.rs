@@ -1,6 +1,7 @@
 //! Plan rendering: the CLI table and a JSON form for tooling.
 
 use crate::planner::{LayerPlan, NetworkPlan};
+use crate::platform::OverlapMode;
 use crate::util::json::Json;
 
 /// Fixed-width per-layer table plus the end-to-end summary — the output of
@@ -31,6 +32,13 @@ pub fn format_plan_table(plan: &NetworkPlan) -> String {
         "\ntotal simulated duration: {} cycles  (peak on-chip occupancy {} elements)\n",
         plan.total_duration, plan.peak_occupancy,
     ));
+    if plan.overlap == OverlapMode::DoubleBuffered {
+        out.push_str(&format!(
+            "double-buffered: sequential duration {} cycles, {} cycles of transfer hidden behind compute\n",
+            plan.total_sequential_duration,
+            plan.total_sequential_duration - plan.total_duration,
+        ));
+    }
     out.push_str(&format!(
         "cache: {} hits / {} misses  |  anneal iterations run: {}\n",
         plan.cache_hits, plan.cache_misses, plan.anneal_iters_run,
@@ -47,6 +55,7 @@ fn layer_to_json(lp: &LayerPlan) -> Json {
         .set("winner", lp.winner.as_str())
         .set("loaded_pixels", lp.loaded_pixels)
         .set("duration", lp.duration)
+        .set("sequential_duration", lp.sequential_duration)
         .set("cache_hit", lp.cache_hit);
     o
 }
@@ -56,6 +65,8 @@ pub fn plan_to_json(plan: &NetworkPlan) -> Json {
     let mut o = Json::obj();
     o.set("network", plan.network.as_str())
         .set("total_duration", plan.total_duration)
+        .set("total_sequential_duration", plan.total_sequential_duration)
+        .set("overlap", plan.overlap.as_str())
         .set("peak_occupancy", plan.peak_occupancy)
         .set("cache_hits", plan.cache_hits)
         .set("cache_misses", plan.cache_misses)

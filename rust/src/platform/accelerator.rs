@@ -1,12 +1,58 @@
-//! The accelerator parameters of §2.1.
+//! The accelerator parameters of §2.1, plus the execution-overlap mode.
 
 use crate::conv::ConvLayer;
+
+/// How the accelerator's DMA channel and compute unit share time.
+///
+/// The paper's Definition-3 duration model charges every step's loads,
+/// writes and compute back to back ([`OverlapMode::Sequential`]). Real
+/// accelerators hide transfer latency behind compute with double buffering:
+/// step *n*'s input loads stream in while step *n−1* computes, provided the
+/// on-chip memory can hold both working sets at once
+/// ([`OverlapMode::DoubleBuffered`]; see `DESIGN.md` §3.7 for the
+/// two-resource makespan recurrence and the serialization fallback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Definition 3 verbatim: `δ(s_i) = |I|·t_l + |W|·t_w + t_acc`, summed.
+    /// The default — every pre-overlap baseline is bit-stable under it.
+    #[default]
+    Sequential,
+    /// Two-resource timeline (one DMA channel, one compute unit): a step's
+    /// loads may prefetch during the previous step's compute when the
+    /// double-buffer residency condition holds, and the reported duration is
+    /// the critical-path makespan over both resources.
+    DoubleBuffered,
+}
+
+impl OverlapMode {
+    /// Stable CLI / serialization name (`sequential`, `double-buffered`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OverlapMode::Sequential => "sequential",
+            OverlapMode::DoubleBuffered => "double-buffered",
+        }
+    }
+
+    /// Parse a CLI / config value (accepts `db` as shorthand).
+    pub fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "sequential" | "seq" => Ok(OverlapMode::Sequential),
+            "double-buffered" | "double_buffered" | "db" => {
+                Ok(OverlapMode::DoubleBuffered)
+            }
+            other => Err(format!(
+                "unknown overlap mode '{other}' (sequential | double-buffered)"
+            )),
+        }
+    }
+}
 
 /// Accelerator description:
 ///
 /// * performs `nbop_pe` MAC operations per `t_acc` cycles;
 /// * has an on-chip memory of `size_mem` elements;
-/// * loads one element from DRAM in `t_l` cycles, writes one back in `t_w`.
+/// * loads one element from DRAM in `t_l` cycles, writes one back in `t_w`;
+/// * executes steps under an [`OverlapMode`] (sequential by default).
 ///
 /// All sizes are unit-less element counts and all durations are accelerator
 /// cycles, exactly as in the paper.
@@ -22,13 +68,27 @@ pub struct Accelerator {
     pub t_l: u64,
     /// Cycles to write one element on-chip → DRAM (`t_w`).
     pub t_w: u64,
+    /// DMA/compute overlap semantics (`Sequential` reproduces Definition 3).
+    pub overlap: OverlapMode,
 }
 
 impl Accelerator {
     /// The §7.1 experimental configuration: `t_l = t_acc = 1` and writes not
     /// charged (the objective of Eq. 15 counts only input loads + steps).
     pub fn paper_eval(nbop_pe: u64, size_mem: u64) -> Self {
-        Accelerator { nbop_pe, t_acc: 1, size_mem, t_l: 1, t_w: 0 }
+        Accelerator {
+            nbop_pe,
+            t_acc: 1,
+            size_mem,
+            t_l: 1,
+            t_w: 0,
+            overlap: OverlapMode::Sequential,
+        }
+    }
+
+    /// The same machine with a different [`OverlapMode`] (builder-style).
+    pub fn with_overlap(self, overlap: OverlapMode) -> Self {
+        Accelerator { overlap, ..self }
     }
 
     /// Maximum number of S1 patches processable in one step:
@@ -49,7 +109,14 @@ impl Accelerator {
         let mem = layer.kernel_elements() as u64
             + (group * layer.input_elements_per_patch()) as u64
             + (group * layer.c_out()) as u64;
-        Accelerator { nbop_pe: nbop, t_acc: 1, size_mem: mem, t_l: 1, t_w: 0 }
+        Accelerator {
+            nbop_pe: nbop,
+            t_acc: 1,
+            size_mem: mem,
+            t_l: 1,
+            t_w: 0,
+            overlap: OverlapMode::Sequential,
+        }
     }
 
     /// Minimal number of steps `K_min = ⌈|X| / nb_patches_max_S1⌉`
@@ -71,12 +138,14 @@ impl Accelerator {
 /// assumption explicitly: the simulator checks it once against the layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Platform {
+    /// The accelerator.
     pub accelerator: Accelerator,
     /// DRAM capacity in elements; `u64::MAX` means unbounded.
     pub dram_size: u64,
 }
 
 impl Platform {
+    /// A platform with unbounded DRAM around `accelerator`.
     pub fn new(accelerator: Accelerator) -> Self {
         Platform { accelerator, dram_size: u64::MAX }
     }
@@ -130,7 +199,7 @@ mod tests {
     fn k_min_handles_degenerate_pe() {
         let l = example_layer();
         // Accelerator too small for even one patch: treat as group 1.
-        let acc = Accelerator { nbop_pe: 1, t_acc: 1, size_mem: 100, t_l: 1, t_w: 1 };
+        let acc = Accelerator { nbop_pe: 1, t_w: 1, ..Accelerator::paper_eval(1, 100) };
         assert_eq!(acc.max_patches_per_step(&l), 0);
         assert_eq!(acc.k_min(&l), 9);
     }
@@ -142,6 +211,19 @@ mod tests {
         assert!(p.dram_fits(&l));
         p.dram_size = 10;
         assert!(!p.dram_fits(&l));
+    }
+
+    #[test]
+    fn overlap_mode_defaults_and_roundtrips() {
+        assert_eq!(Accelerator::paper_eval(1, 1).overlap, OverlapMode::Sequential);
+        for m in [OverlapMode::Sequential, OverlapMode::DoubleBuffered] {
+            assert_eq!(OverlapMode::from_str(m.as_str()), Ok(m));
+        }
+        assert_eq!(OverlapMode::from_str("db"), Ok(OverlapMode::DoubleBuffered));
+        assert!(OverlapMode::from_str("bogus").is_err());
+        let acc = Accelerator::paper_eval(1, 1).with_overlap(OverlapMode::DoubleBuffered);
+        assert_eq!(acc.overlap, OverlapMode::DoubleBuffered);
+        assert_eq!(acc.t_l, 1);
     }
 
     #[test]

@@ -20,8 +20,11 @@ pub type OutputSet = PixelSet;
 /// The on-chip memory contents at a step boundary.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MemoryState {
+    /// `M^inp` — resident input pixels (spatial).
     pub inp: PixelSet,
+    /// `M^ker` — resident kernels.
     pub ker: KernelSet,
+    /// `M^out` — computed, not-yet-written output patches.
     pub out: OutputSet,
 }
 
@@ -35,6 +38,7 @@ impl MemoryState {
         }
     }
 
+    /// True when all three stores are empty.
     pub fn is_empty(&self) -> bool {
         self.inp.is_empty() && self.ker.is_empty() && self.out.is_empty()
     }
@@ -54,16 +58,19 @@ impl MemoryState {
 /// `size_i^step = |M^inp ∪ I^slice| + |M^ker ∪ K^sub| + |M^out ∪ Out_i|`.
 #[derive(Debug, Clone)]
 pub struct OnChipMemory {
+    /// The current memory contents.
     pub state: MemoryState,
     capacity: u64,
     peak: u64,
 }
 
 impl OnChipMemory {
+    /// Empty on-chip memory with the given element capacity.
     pub fn new(layer: &ConvLayer, capacity: u64) -> Self {
         OnChipMemory { state: MemoryState::initial(layer), capacity, peak: 0 }
     }
 
+    /// Element capacity (`size_MEM`).
     pub fn capacity(&self) -> u64 {
         self.capacity
     }

@@ -3,5 +3,5 @@
 mod accelerator;
 mod memory;
 
-pub use accelerator::{Accelerator, Platform};
+pub use accelerator::{Accelerator, OverlapMode, Platform};
 pub use memory::{KernelSet, MemoryState, OnChipMemory, OutputSet};

@@ -7,33 +7,51 @@ use crate::util::json::{self, Json};
 /// A step-compute executable variant: `[g_max, d] @ [d, n] → [g_max, n]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepVariant {
+    /// Variant name (manifest key).
     pub name: String,
+    /// HLO file name within the artifact directory.
     pub file: String,
+    /// im2col row width `D`.
     pub d: usize,
+    /// Kernel count `N`.
     pub n: usize,
+    /// Maximum patches per step the executable accepts.
     pub g_max: usize,
 }
 
 /// A whole-layer forward executable variant.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerVariant {
+    /// Variant name (manifest key).
     pub name: String,
+    /// HLO file name within the artifact directory.
     pub file: String,
+    /// Input channels.
     pub c_in: usize,
+    /// Input height.
     pub h_in: usize,
+    /// Input width.
     pub w_in: usize,
+    /// Kernel count.
     pub n: usize,
+    /// Kernel height.
     pub h_k: usize,
+    /// Kernel width.
     pub w_k: usize,
+    /// Vertical stride.
     pub s_h: usize,
+    /// Horizontal stride.
     pub s_w: usize,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Debug, Clone, Default)]
 pub struct ArtifactManifest {
+    /// Artifact directory the manifest was read from.
     pub dir: PathBuf,
+    /// Step-compute executables.
     pub steps: Vec<StepVariant>,
+    /// Whole-layer executables.
     pub layers: Vec<LayerVariant>,
 }
 
@@ -112,6 +130,7 @@ impl ArtifactManifest {
         })
     }
 
+    /// Absolute path of a manifest-relative file.
     pub fn path_of(&self, file: &str) -> PathBuf {
         self.dir.join(file)
     }

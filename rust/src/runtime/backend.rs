@@ -14,6 +14,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// A backend over an opened runtime.
     pub fn new(runtime: Runtime) -> Self {
         let name = format!("pjrt({})", runtime.platform());
         PjrtBackend { runtime, name }
@@ -24,6 +25,7 @@ impl PjrtBackend {
         Ok(Self::new(Runtime::from_default_dir()?))
     }
 
+    /// Mutable access to the underlying runtime (artifact cache).
     pub fn runtime_mut(&mut self) -> &mut Runtime {
         &mut self.runtime
     }

@@ -52,6 +52,7 @@ struct LoadedExe {
 /// The runtime: a PJRT CPU client with a cache of compiled artifacts.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest.
     pub manifest: ArtifactManifest,
     cache: HashMap<String, LoadedExe>,
 }

@@ -38,14 +38,17 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Always fails in the shim (no PJRT compiled in).
     pub fn cpu() -> Result<PjRtClient, Error> {
         Err(unavailable())
     }
 
+    /// `"unavailable"` in the shim.
     pub fn platform_name(&self) -> String {
         "unavailable".to_string()
     }
 
+    /// Always fails in the shim.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         Err(unavailable())
     }
@@ -57,6 +60,7 @@ pub struct HloModuleProto {
 }
 
 impl HloModuleProto {
+    /// Always fails in the shim.
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         Err(unavailable())
     }
@@ -68,6 +72,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a proto (inert in the shim).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { _private: () }
     }
@@ -79,6 +84,7 @@ pub struct PjRtLoadedExecutable {
 }
 
 impl PjRtLoadedExecutable {
+    /// Always fails in the shim.
     pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         Err(unavailable())
     }
@@ -90,6 +96,7 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Always fails in the shim.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(unavailable())
     }
@@ -101,18 +108,22 @@ pub struct Literal {
 }
 
 impl Literal {
+    /// Wrap host data (inert in the shim).
     pub fn vec1(_data: &[f32]) -> Literal {
         Literal { _private: () }
     }
 
+    /// Always fails in the shim.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the shim.
     pub fn to_tuple1(&self) -> Result<Literal, Error> {
         Err(unavailable())
     }
 
+    /// Always fails in the shim.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         Err(unavailable())
     }

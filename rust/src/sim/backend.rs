@@ -37,6 +37,7 @@ pub enum FunctionalBackend {
 }
 
 impl FunctionalBackend {
+    /// Stable backend name (`rust-oracle`, `pjrt`).
     pub fn as_str(&self) -> &'static str {
         match self {
             FunctionalBackend::RustOracle => "rust-oracle",
@@ -44,6 +45,7 @@ impl FunctionalBackend {
         }
     }
 
+    /// Parse a backend name (accepts `rust`, `oracle`, `xla` aliases).
     pub fn from_str(s: &str) -> Result<Self, String> {
         match s {
             "rust-oracle" | "rust" | "oracle" => Ok(FunctionalBackend::RustOracle),

@@ -1,9 +1,9 @@
 //! The simulation engine: §6's orchestration loop.
 
 use crate::conv::{ConvLayer, PatchId};
-use crate::platform::{MemoryState, Platform};
+use crate::platform::{MemoryState, OverlapMode, Platform};
 use crate::sim::{ComputeBackend, SimReport, StepRecord};
-use crate::step::{self, Step, StepError};
+use crate::step::{self, OverlapTimeline, Step, StepError};
 use crate::strategy::GroupedStrategy;
 
 /// Simulation failure.
@@ -32,13 +32,16 @@ impl std::error::Error for SimError {}
 /// The simulator: a layer bound to a platform.
 #[derive(Debug, Clone)]
 pub struct Simulator {
+    /// The layer being offloaded.
     pub layer: ConvLayer,
+    /// The platform (accelerator + DRAM) executing it.
     pub platform: Platform,
     /// Enforce the §2.3 assumptions during stepping (default true).
     pub strict: bool,
 }
 
 impl Simulator {
+    /// A strict-mode simulator for `layer` on `platform`.
     pub fn new(layer: ConvLayer, platform: Platform) -> Self {
         Simulator { layer, platform, strict: true }
     }
@@ -46,6 +49,27 @@ impl Simulator {
     /// Logical simulation: execute the strategy, tracking sets and costs
     /// only. Runs at millions of steps per second; used by the optimizer's
     /// objective evaluation and the figure sweeps.
+    ///
+    /// The report's `duration` follows the accelerator's
+    /// [`crate::platform::OverlapMode`]: the Definition-3 sum when
+    /// sequential, the §3.7 critical-path makespan when double-buffered
+    /// (with per-step [`crate::step::StepTiming`] records attached).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use convoffload::prelude::*;
+    /// use convoffload::strategy;
+    ///
+    /// let layer = ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap();
+    /// let acc = Accelerator::for_group_size(&layer, 2);
+    /// let report = Simulator::new(layer, Platform::new(acc))
+    ///     .run(&strategy::zigzag(&layer, 2))
+    ///     .unwrap();
+    /// // every distinct input pixel loads at least once
+    /// assert!(report.total_loaded() >= 64);
+    /// assert_eq!(report.duration, report.sequential_duration);
+    /// ```
     pub fn run(&self, strategy: &GroupedStrategy) -> Result<SimReport, SimError> {
         if !self.platform.dram_fits(&self.layer) {
             return Err(SimError::DramTooSmall);
@@ -115,6 +139,14 @@ impl Simulator {
         mut functional: Option<(&mut FunctionalState, &mut dyn ComputeBackend)>,
     ) -> Result<(), SimError> {
         let acc = &self.platform.accelerator;
+        report.overlap = acc.overlap;
+        // Two-resource schedule, built alongside the sequential accounting
+        // when the accelerator overlaps DMA with compute.
+        let mut timeline =
+            (acc.overlap == OverlapMode::DoubleBuffered).then(OverlapTimeline::new);
+        // Occupancy at the end of the previous step — the left-hand side of
+        // the §3.7 double-buffer residency condition.
+        let mut prev_occupancy = 0u64;
         for (i, st) in steps.iter().enumerate() {
             // Value movement must mirror the action order: frees/writes
             // before loads, compute last. Writes need the *pre-step* values.
@@ -123,6 +155,20 @@ impl Simulator {
             }
             let outcome = step::apply(&self.layer, acc, mem, st, self.strict)
                 .map_err(|error| SimError::Step { index: i, error })?;
+            let timing = timeline.as_mut().map(|t| {
+                // Residency condition: this step's incoming elements must
+                // fit alongside the previous step's still-live working set,
+                // or the load serializes behind the previous compute.
+                let can_prefetch =
+                    prev_occupancy + outcome.cost.loaded_elements <= acc.size_mem;
+                t.push(
+                    outcome.cost.loaded_elements * acc.t_l,
+                    outcome.cost.written_elements * acc.t_w,
+                    outcome.cost.compute_cycles(acc),
+                    can_prefetch,
+                )
+            });
+            prev_occupancy = outcome.occupancy;
             report.push_step(StepRecord {
                 index: i,
                 duration: outcome.cost.duration(acc),
@@ -130,7 +176,17 @@ impl Simulator {
                 occupancy: outcome.occupancy,
                 resident_input_elements: (mem.inp.len() * self.layer.c_in) as u64,
                 group_len: st.group.len(),
+                timing,
             });
+        }
+        // Resource busy totals hold in either mode; the double-buffered
+        // duration is the critical-path makespan instead of the sum.
+        report.dma_busy = report.totals.total.dma_cycles(acc);
+        report.compute_busy = report.totals.n_compute_steps * acc.t_acc;
+        if let Some(t) = timeline {
+            debug_assert_eq!(t.dma_busy(), report.dma_busy);
+            debug_assert_eq!(t.compute_busy(), report.compute_busy);
+            report.duration = t.makespan();
         }
         Ok(())
     }
@@ -374,6 +430,101 @@ mod tests {
         match sim.run(&s) {
             Err(SimError::Step { .. }) => {}
             other => panic!("expected step error, got {other:?}"),
+        }
+    }
+
+    /// The hand-computed overlap regression (mirrored in the Python oracle,
+    /// `test_oracle_sim.py::TestOverlappedTimeline`): a single-row scan
+    /// whose three steps have fully hand-checkable phase placements.
+    ///
+    /// Layer 1×3×12, 3×3 kernel → one row of 10 patches; groups of 4 give
+    /// steps of (18, 12, 6) loaded pixels + 9 kernel elements at step 1,
+    /// write-backs of (0, 4, 4) + flush 2 at `t_w = 1`, `t_acc = 4`.
+    /// Sequential δ = 31 + 20 + 14 + 2 = 67.
+    #[test]
+    fn double_buffered_hand_computed_makespan() {
+        let l = ConvLayer::new(1, 3, 12, 3, 3, 1, 1, 1).unwrap();
+        let s = strategy::row_by_row(&l, 4);
+        let base = Accelerator {
+            t_acc: 4,
+            t_w: 1,
+            ..Accelerator::paper_eval(36, 64)
+        };
+
+        // Sequential reference.
+        let seq = Simulator::new(l, Platform::new(base)).run(&s).unwrap();
+        assert_eq!(seq.duration, 67);
+        assert_eq!(seq.sequential_duration, 67);
+        assert_eq!(seq.hidden_cycles(), 0);
+        assert!(seq.steps.iter().all(|st| st.timing.is_none()));
+
+        // Roomy double buffer (size_mem 64): every load prefetches; the
+        // makespan is DMA-bound at 55 cycles — all 12 compute cycles hidden.
+        let db = base.with_overlap(OverlapMode::DoubleBuffered);
+        let r = Simulator::new(l, Platform::new(db)).run(&s).unwrap();
+        assert_eq!(r.sequential_duration, 67);
+        assert_eq!(r.duration, 55);
+        assert_eq!(r.hidden_cycles(), 12);
+        assert_eq!(r.dma_busy, 55);
+        assert_eq!(r.compute_busy, 12);
+        let t1 = r.steps[0].timing.unwrap();
+        assert_eq!((t1.load_start, t1.load_end), (0, 27));
+        assert_eq!((t1.compute_start, t1.compute_end), (27, 31));
+        let t2 = r.steps[1].timing.unwrap();
+        assert!(t2.prefetched);
+        assert_eq!((t2.load_start, t2.load_end), (27, 39));
+        assert_eq!((t2.write_start, t2.write_end), (39, 43));
+        assert_eq!((t2.compute_start, t2.compute_end), (39, 43));
+        let t3 = r.steps[2].timing.unwrap();
+        assert_eq!((t3.load_start, t3.load_end), (43, 49));
+        assert_eq!((t3.compute_start, t3.compute_end), (49, 53));
+        let tf = r.steps[3].timing.unwrap();
+        assert_eq!((tf.write_start, tf.write_end), (53, 55));
+
+        // Tight double buffer (size_mem 40): step 2's incoming 12 elements
+        // do not fit beside step 1's 31-element working set, so its load
+        // serializes behind compute 1 — makespan 59, still ≤ sequential.
+        let tight = Accelerator { size_mem: 40, ..db };
+        let r = Simulator::new(l, Platform::new(tight)).run(&s).unwrap();
+        assert_eq!(r.duration, 59);
+        assert_eq!(r.hidden_cycles(), 8);
+        let t2 = r.steps[1].timing.unwrap();
+        assert!(!t2.prefetched);
+        assert_eq!((t2.load_start, t2.load_end), (31, 43));
+        let t3 = r.steps[2].timing.unwrap();
+        assert!(t3.prefetched, "step 3's smaller load fits again");
+    }
+
+    /// On every preset-sized setup the overlapped makespan obeys its two
+    /// analytic bounds against the sequential run.
+    #[test]
+    fn double_buffered_bounds_vs_sequential() {
+        for (l, g) in [
+            (ConvLayer::new(2, 5, 5, 3, 3, 2, 1, 1).unwrap(), 2usize),
+            (ConvLayer::new(1, 8, 8, 3, 3, 1, 1, 1).unwrap(), 4),
+            (
+                ConvLayer::new(4, 9, 9, 3, 3, 8, 2, 2)
+                    .unwrap()
+                    .with_dilation(2, 2)
+                    .unwrap()
+                    .with_groups(2)
+                    .unwrap(),
+                2,
+            ),
+        ] {
+            let base = Accelerator { t_w: 1, ..Accelerator::for_group_size(&l, g) };
+            for s in [strategy::row_by_row(&l, g), strategy::zigzag(&l, g)] {
+                let seq = Simulator::new(l, Platform::new(base)).run(&s).unwrap();
+                let db = base.with_overlap(OverlapMode::DoubleBuffered);
+                let ovl = Simulator::new(l, Platform::new(db)).run(&s).unwrap();
+                assert_eq!(ovl.sequential_duration, seq.duration, "{} {l}", s.name);
+                assert!(ovl.duration <= seq.duration, "{} {l}", s.name);
+                assert!(
+                    ovl.duration >= ovl.dma_busy.max(ovl.compute_busy),
+                    "{} {l}",
+                    s.name
+                );
+            }
         }
     }
 

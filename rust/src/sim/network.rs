@@ -16,9 +16,13 @@ use crate::strategy::GroupedStrategy;
 /// One pipeline stage.
 #[derive(Debug, Clone)]
 pub struct Stage {
+    /// Stage name (reports).
     pub name: String,
+    /// The stage's convolution layer.
     pub layer: ConvLayer,
+    /// The accelerator executing this stage.
     pub accelerator: Accelerator,
+    /// The offload strategy this stage runs.
     pub strategy: GroupedStrategy,
     /// Apply 2×2 stride-2 mean pooling to this stage's output before the
     /// next stage (LeNet's subsampling).
@@ -32,14 +36,23 @@ pub struct Stage {
 /// A feed-forward convolutional network to offload stage by stage.
 #[derive(Debug, Clone, Default)]
 pub struct Network {
+    /// Pipeline stages in execution order.
     pub stages: Vec<Stage>,
 }
 
 /// Per-stage + aggregate results.
 #[derive(Debug, Clone)]
 pub struct NetworkReport {
+    /// One report per pipeline stage, in execution order.
     pub per_stage: Vec<StageReport>,
+    /// Sum of the per-stage durations (stage makespans under a
+    /// double-buffered accelerator; stages themselves run back to back —
+    /// kernels change between layers, so cross-stage overlap is not
+    /// modelled).
     pub total_duration: u64,
+    /// Sum of the per-stage Definition-3 sequential durations.
+    pub total_sequential_duration: u64,
+    /// Largest on-chip occupancy over all stages (elements).
     pub peak_occupancy: u64,
     /// Final activation tensor (functional mode).
     pub output: Option<Vec<f32>>,
@@ -47,12 +60,21 @@ pub struct NetworkReport {
     pub max_abs_error: Option<f32>,
 }
 
+/// Aggregates of one simulated pipeline stage.
 #[derive(Debug, Clone)]
 pub struct StageReport {
+    /// Stage name (from the [`Stage`]).
     pub name: String,
+    /// Stage duration under the stage accelerator's overlap mode.
     pub duration: u64,
+    /// The Definition-3 sequential duration of the same stage (equals
+    /// `duration` for sequential accelerators).
+    pub sequential_duration: u64,
+    /// Elements loaded from DRAM across all steps.
     pub loaded_elements: u64,
+    /// Peak on-chip occupancy of the stage (elements).
     pub peak_occupancy: u64,
+    /// Steps executed (compute steps + terminal flush).
     pub n_steps: u64,
 }
 
@@ -76,6 +98,7 @@ pub fn next_stage_dims(
 }
 
 impl Network {
+    /// Append a stage, validating dimension chaining against the last.
     pub fn push(&mut self, stage: Stage) -> Result<(), String> {
         if let Some(prev) = self.stages.last() {
             let dims = next_stage_dims(&prev.layer, prev.pool_after, prev.pad_after);
@@ -96,6 +119,7 @@ impl Network {
         let mut report = NetworkReport {
             per_stage: Vec::new(),
             total_duration: 0,
+            total_sequential_duration: 0,
             peak_occupancy: 0,
             output: None,
             max_abs_error: None,
@@ -105,10 +129,12 @@ impl Network {
                 Simulator::new(stage.layer, Platform::new(stage.accelerator));
             let r = sim.run(&stage.strategy)?;
             report.total_duration += r.duration;
+            report.total_sequential_duration += r.sequential_duration;
             report.peak_occupancy = report.peak_occupancy.max(r.peak_occupancy);
             report.per_stage.push(StageReport {
                 name: stage.name.clone(),
                 duration: r.duration,
+                sequential_duration: r.sequential_duration,
                 loaded_elements: r.total_loaded(),
                 peak_occupancy: r.peak_occupancy,
                 n_steps: r.totals.n_steps,
@@ -136,6 +162,7 @@ impl Network {
         let mut report = NetworkReport {
             per_stage: Vec::new(),
             total_duration: 0,
+            total_sequential_duration: 0,
             peak_occupancy: 0,
             output: None,
             max_abs_error: Some(0.0),
@@ -149,10 +176,12 @@ impl Network {
             report.max_abs_error =
                 Some(report.max_abs_error.unwrap().max(err));
             report.total_duration += r.duration;
+            report.total_sequential_duration += r.sequential_duration;
             report.peak_occupancy = report.peak_occupancy.max(r.peak_occupancy);
             report.per_stage.push(StageReport {
                 name: stage.name.clone(),
                 duration: r.duration,
+                sequential_duration: r.sequential_duration,
                 loaded_elements: r.total_loaded(),
                 peak_occupancy: r.peak_occupancy,
                 n_steps: r.totals.n_steps,
@@ -416,6 +445,34 @@ mod tests {
                 pad_after: 0,
             })
             .is_err());
+    }
+
+    /// Double-buffered stage accelerators lower (never raise) the pipeline
+    /// duration, and the sequential totals stay equal either way.
+    #[test]
+    fn double_buffered_stages_reduce_the_pipeline_duration() {
+        use crate::platform::OverlapMode;
+        let run_with = |overlap: OverlapMode| {
+            let base = lenet5_trunk(|l, g| strategy::zigzag(l, g), 4);
+            let mut net = Network::default();
+            for s in base.stages {
+                net.push(Stage { accelerator: s.accelerator.with_overlap(overlap), ..s })
+                    .unwrap();
+            }
+            net.run().unwrap()
+        };
+        let seq = run_with(OverlapMode::Sequential);
+        let db = run_with(OverlapMode::DoubleBuffered);
+        assert_eq!(seq.total_duration, seq.total_sequential_duration);
+        assert_eq!(db.total_sequential_duration, seq.total_duration);
+        assert!(db.total_duration <= seq.total_duration);
+        assert_eq!(
+            db.total_duration,
+            db.per_stage.iter().map(|s| s.duration).sum::<u64>()
+        );
+        for s in &db.per_stage {
+            assert!(s.duration <= s.sequential_duration, "{}", s.name);
+        }
     }
 
     #[test]

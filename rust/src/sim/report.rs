@@ -1,7 +1,7 @@
 //! Simulation reports: per-step records and strategy-level aggregates.
 
-use crate::platform::Accelerator;
-use crate::step::{StepCost, StrategyCost};
+use crate::platform::{Accelerator, OverlapMode};
+use crate::step::{StepCost, StepTiming, StrategyCost};
 use crate::util::json::Json;
 
 /// Metrics for one executed step.
@@ -19,16 +19,34 @@ pub struct StepRecord {
     pub resident_input_elements: u64,
     /// Patches computed this step.
     pub group_len: usize,
+    /// Phase placement on the two-resource timeline — present only under
+    /// [`OverlapMode::DoubleBuffered`].
+    pub timing: Option<StepTiming>,
 }
 
 /// Result of simulating a full strategy.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Name of the simulated strategy (as reported by its generator).
     pub strategy_name: String,
+    /// Per-step records in execution order (terminal flush included).
     pub steps: Vec<StepRecord>,
+    /// Aggregated loads / writes / MACs over all steps.
     pub totals: StrategyCost,
-    /// Total duration δ in cycles.
+    /// Total duration in cycles under the simulated [`OverlapMode`]: the
+    /// Definition-3 sum when sequential, the two-resource critical-path
+    /// makespan when double-buffered.
     pub duration: u64,
+    /// The Definition-3 sequential duration `δ = Σ δ(s_i)` — always
+    /// recorded, so the hidden transfer time `sequential_duration −
+    /// duration` is available in any mode.
+    pub sequential_duration: u64,
+    /// Which overlap semantics produced `duration`.
+    pub overlap: OverlapMode,
+    /// Total cycles the DMA channel was busy (loads + writes).
+    pub dma_busy: u64,
+    /// Total cycles the compute unit was busy.
+    pub compute_busy: u64,
     /// Peak element occupancy across steps.
     pub peak_occupancy: u64,
     /// Output of the functional simulation (present in functional mode).
@@ -38,23 +56,39 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// An empty report for a named strategy (sequential until the engine
+    /// says otherwise).
     pub fn new(strategy_name: String) -> Self {
         SimReport {
             strategy_name,
             steps: Vec::new(),
             totals: StrategyCost::default(),
             duration: 0,
+            sequential_duration: 0,
+            overlap: OverlapMode::Sequential,
+            dma_busy: 0,
+            compute_busy: 0,
             peak_occupancy: 0,
             output: None,
             max_abs_error: None,
         }
     }
 
+    /// Append one step's record, keeping the sequential aggregates in sync
+    /// (the engine overrides `duration` with the makespan in
+    /// double-buffered mode).
     pub fn push_step(&mut self, rec: StepRecord) {
         self.totals.push(&rec.cost);
         self.duration += rec.duration;
+        self.sequential_duration += rec.duration;
         self.peak_occupancy = self.peak_occupancy.max(rec.occupancy);
         self.steps.push(rec);
+    }
+
+    /// Transfer cycles hidden behind compute by the overlapped timeline
+    /// (0 in sequential mode by construction).
+    pub fn hidden_cycles(&self) -> u64 {
+        self.sequential_duration - self.duration
     }
 
     /// Number of compute steps `n` (flush and housekeeping excluded).
@@ -77,6 +111,10 @@ impl SimReport {
         let mut o = Json::obj();
         o.set("strategy", self.strategy_name.as_str())
             .set("duration", self.duration)
+            .set("sequential_duration", self.sequential_duration)
+            .set("overlap", self.overlap.as_str())
+            .set("dma_busy", self.dma_busy)
+            .set("compute_busy", self.compute_busy)
             .set("loaded_elements", self.total_loaded())
             .set("written_elements", self.totals.total.written_elements)
             .set("macs", self.totals.total.macs)
@@ -107,9 +145,11 @@ impl SimReport {
     }
 }
 
-/// Compact one-line summary used by the CLI and examples.
+/// Compact one-line summary used by the CLI and examples. In
+/// double-buffered mode it reports the makespan plus the transfer cycles
+/// hidden behind compute.
 pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
-    format!(
+    let mut line = format!(
         "{:<24} δ={:>8} cycles  (loads {:>7} el × t_l={} | writes {:>6} el × t_w={} | {:>5} steps × t_acc={})  peak mem {:>7} el",
         report.strategy_name,
         report.duration,
@@ -120,7 +160,17 @@ pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
         report.n_compute_steps(),
         acc.t_acc,
         report.peak_occupancy,
-    )
+    );
+    if report.overlap == OverlapMode::DoubleBuffered {
+        line.push_str(&format!(
+            "  [double-buffered: sequential δ={} | hidden {} cycles | dma busy {} | compute busy {}]",
+            report.sequential_duration,
+            report.hidden_cycles(),
+            report.dma_busy,
+            report.compute_busy,
+        ));
+    }
+    line
 }
 
 #[cfg(test)]
@@ -137,6 +187,7 @@ mod tests {
             occupancy: 30,
             resident_input_elements: 10,
             group_len: 2,
+            timing: None,
         });
         r.push_step(StepRecord {
             index: 1,
@@ -145,8 +196,11 @@ mod tests {
             occupancy: 40,
             resident_input_elements: 8,
             group_len: 2,
+            timing: None,
         });
         assert_eq!(r.duration, 16);
+        assert_eq!(r.sequential_duration, 16);
+        assert_eq!(r.hidden_cycles(), 0);
         assert_eq!(r.total_loaded(), 14);
         assert_eq!(r.peak_occupancy, 40);
         assert_eq!(r.n_compute_steps(), 2);

@@ -11,7 +11,9 @@ use crate::solver::{solve_lp, LpOutcome};
 /// heuristic strategy.
 #[derive(Debug, Clone)]
 pub struct BranchBoundOptions {
+    /// Wall-clock budget (the search returns its incumbent on expiry).
     pub time_budget: Duration,
+    /// Maximum number of explored B&B nodes.
     pub node_budget: u64,
     /// Feasible starting assignment (full, over all model vars).
     pub mip_start: Option<Vec<f64>>,

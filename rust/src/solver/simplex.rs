@@ -18,6 +18,7 @@ pub enum LpOutcome {
     /// Optimal solution for the relaxation (assignment over the *original*
     /// model variables) and its objective value.
     Optimal { assignment: Vec<f64>, objective: f64 },
+    /// No feasible assignment exists.
     Infeasible,
     /// The relaxation is unbounded below.
     Unbounded,

@@ -1,4 +1,6 @@
-//! Step duration (Definition 3) and its decomposition.
+//! Step duration (Definition 3), its decomposition, and the two-resource
+//! overlapped timeline ([`OverlapTimeline`]) behind
+//! [`crate::platform::OverlapMode::DoubleBuffered`].
 
 use crate::platform::Accelerator;
 
@@ -19,9 +21,17 @@ pub struct StepCost {
 impl StepCost {
     /// Duration in cycles under the given accelerator parameters.
     pub fn duration(&self, acc: &Accelerator) -> u64 {
-        self.loaded_elements * acc.t_l
-            + self.written_elements * acc.t_w
-            + if self.computed { acc.t_acc } else { 0 }
+        self.dma_cycles(acc) + self.compute_cycles(acc)
+    }
+
+    /// Cycles this step occupies the DMA channel: `|I|·t_l + |W|·t_w`.
+    pub fn dma_cycles(&self, acc: &Accelerator) -> u64 {
+        self.loaded_elements * acc.t_l + self.written_elements * acc.t_w
+    }
+
+    /// Cycles this step occupies the compute unit (`t_acc` or 0).
+    pub fn compute_cycles(&self, acc: &Accelerator) -> u64 {
+        if self.computed { acc.t_acc } else { 0 }
     }
 
     /// Accumulate another step's cost (for strategy totals).
@@ -38,12 +48,16 @@ impl StepCost {
 /// `δ = Σ δ(s_i)` (Definition 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct StrategyCost {
+    /// Element-level totals summed over all steps.
     pub total: StepCost,
+    /// Steps executed (flush included).
     pub n_steps: u64,
+    /// Steps that ran a compute action.
     pub n_compute_steps: u64,
 }
 
 impl StrategyCost {
+    /// Accumulate one step.
     pub fn push(&mut self, step: &StepCost) {
         self.total.add(step);
         self.n_steps += 1;
@@ -60,12 +74,143 @@ impl StrategyCost {
     }
 }
 
+/// Start/end instants of one step's phases on the two-resource timeline
+/// (cycles since the start of the strategy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepTiming {
+    /// DMA: input/kernel load phase.
+    pub load_start: u64,
+    /// End of the load phase (`load_start + |I|·t_l`).
+    pub load_end: u64,
+    /// DMA: write-back phase (drains after the producing compute).
+    pub write_start: u64,
+    /// End of the write phase (`write_start + |W|·t_w`).
+    pub write_end: u64,
+    /// Compute phase start (after this step's loads and the previous
+    /// step's compute).
+    pub compute_start: u64,
+    /// Compute phase end (`compute_start + t_acc` for compute steps).
+    pub compute_end: u64,
+    /// Whether the load phase was allowed to prefetch during the previous
+    /// step's compute (the double-buffer residency condition held).
+    pub prefetched: bool,
+}
+
+/// The §3.7 two-resource timeline: one DMA channel, one compute unit, steps
+/// issued in order on both.
+///
+/// Per step, the DMA channel runs the load phase then the write phase; the
+/// compute unit runs the compute phase. Dependencies:
+///
+/// * **load** waits for the channel; when the double-buffer residency
+///   condition fails (`can_prefetch = false`) it additionally waits for the
+///   previous step's compute (serialization fallback — the previous working
+///   set must be released before the new inputs can be staged);
+/// * **write** waits for the channel after the load phase *and* for the
+///   previous step's compute (it drains outputs that compute produced);
+/// * **compute** waits for this step's loads and the previous compute.
+///
+/// The makespan is the later of the two resource frontiers. It is always
+/// ≤ the sequential (Definition 3) duration and ≥ `max(dma_busy,
+/// compute_busy)` — both bounds are pinned by tests here, by the fuzz
+/// property suite and by the Python oracle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OverlapTimeline {
+    dma_free: u64,
+    comp_end: u64,
+    dma_busy: u64,
+    compute_busy: u64,
+}
+
+impl OverlapTimeline {
+    /// An empty timeline (both resources free at cycle 0).
+    pub fn new() -> Self {
+        OverlapTimeline::default()
+    }
+
+    /// One step of the §3.7 recurrence as a **pure function** of the two
+    /// resource frontiers — the single implementation of the dependency
+    /// rules, shared by [`OverlapTimeline::push`] (simulator side) and the
+    /// incremental duration objective
+    /// ([`crate::optimizer::MakespanEval`]).
+    pub fn place(
+        dma_free: u64,
+        comp_end: u64,
+        load_cycles: u64,
+        write_cycles: u64,
+        compute_cycles: u64,
+        can_prefetch: bool,
+    ) -> StepTiming {
+        let load_ready = if can_prefetch { 0 } else { comp_end };
+        let load_start = dma_free.max(load_ready);
+        let load_end = load_start + load_cycles;
+        let write_start = load_end.max(comp_end);
+        let write_end = write_start + write_cycles;
+        let compute_start = load_end.max(comp_end);
+        let compute_end = compute_start + compute_cycles;
+        StepTiming {
+            load_start,
+            load_end,
+            write_start,
+            write_end,
+            compute_start,
+            compute_end,
+            prefetched: can_prefetch,
+        }
+    }
+
+    /// Schedule one step given its phase durations in cycles and the
+    /// double-buffer residency verdict; returns the placed phases.
+    pub fn push(
+        &mut self,
+        load_cycles: u64,
+        write_cycles: u64,
+        compute_cycles: u64,
+        can_prefetch: bool,
+    ) -> StepTiming {
+        let t = Self::place(
+            self.dma_free,
+            self.comp_end,
+            load_cycles,
+            write_cycles,
+            compute_cycles,
+            can_prefetch,
+        );
+        self.dma_free = t.write_end;
+        self.comp_end = t.compute_end;
+        self.dma_busy += load_cycles + write_cycles;
+        self.compute_busy += compute_cycles;
+        t
+    }
+
+    /// Critical-path makespan so far: the later resource frontier.
+    pub fn makespan(&self) -> u64 {
+        self.dma_free.max(self.comp_end)
+    }
+
+    /// Total cycles the DMA channel was busy (loads + writes).
+    pub fn dma_busy(&self) -> u64 {
+        self.dma_busy
+    }
+
+    /// Total cycles the compute unit was busy.
+    pub fn compute_busy(&self) -> u64 {
+        self.compute_busy
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn acc() -> Accelerator {
-        Accelerator { nbop_pe: 100, t_acc: 3, size_mem: 1000, t_l: 2, t_w: 5 }
+        Accelerator {
+            nbop_pe: 100,
+            t_acc: 3,
+            t_l: 2,
+            t_w: 5,
+            ..Accelerator::paper_eval(100, 1000)
+        }
     }
 
     #[test]
@@ -91,6 +236,64 @@ mod tests {
         // (5+3)·2 + (1+2+7)·5 + 2·3
         assert_eq!(total.duration(&acc()), 16 + 50 + 6);
         assert_eq!(total.total.macs, 20);
+    }
+
+    /// Hand-computed three-step overlapped chain (all prefetches allowed,
+    /// one denied): every phase instant is checked, plus the two bounds the
+    /// property suite asserts in bulk.
+    #[test]
+    fn overlap_timeline_hand_computed_chain() {
+        let mut t = OverlapTimeline::new();
+        // (L, W, C, prefetch)
+        let s1 = t.push(10, 0, 5, true);
+        assert_eq!((s1.load_start, s1.load_end), (0, 10));
+        assert_eq!((s1.compute_start, s1.compute_end), (10, 15));
+        let s2 = t.push(6, 2, 5, true);
+        // load prefetches during step 1's compute: starts at DMA-free = 10
+        assert_eq!((s2.load_start, s2.load_end), (10, 16));
+        assert_eq!((s2.write_start, s2.write_end), (16, 18));
+        assert_eq!((s2.compute_start, s2.compute_end), (16, 21));
+        let s3 = t.push(6, 2, 5, false);
+        // serialization fallback: load waits for step 2's compute (21)
+        assert_eq!((s3.load_start, s3.load_end), (21, 27));
+        assert_eq!((s3.write_start, s3.write_end), (27, 29));
+        assert_eq!((s3.compute_start, s3.compute_end), (27, 32));
+        let flush = t.push(0, 2, 0, true);
+        assert_eq!((flush.write_start, flush.write_end), (32, 34));
+        assert!(!s3.prefetched && flush.prefetched);
+
+        assert_eq!(t.makespan(), 34);
+        assert_eq!(t.dma_busy(), 28);
+        assert_eq!(t.compute_busy(), 15);
+        // overlapped ≤ sequential; ≥ per-resource lower bound
+        let sequential = 15 + 13 + 13 + 2;
+        assert!(t.makespan() <= sequential);
+        assert!(t.makespan() >= t.dma_busy().max(t.compute_busy()));
+    }
+
+    /// With every prefetch denied the timeline degrades gracefully but a
+    /// write can still drain during the next compute — the makespan never
+    /// exceeds the sequential sum.
+    #[test]
+    fn overlap_timeline_serialized_never_exceeds_sequential() {
+        let steps = [(10u64, 4u64, 3u64), (7, 4, 3), (5, 4, 3), (0, 4, 0)];
+        let mut t = OverlapTimeline::new();
+        let mut sequential = 0;
+        for &(l, w, c) in &steps {
+            t.push(l, w, c, false);
+            sequential += l + w + c;
+        }
+        assert!(t.makespan() <= sequential);
+        assert!(t.makespan() >= t.dma_busy().max(t.compute_busy()));
+    }
+
+    #[test]
+    fn step_cost_resource_split_sums_to_duration() {
+        let c = StepCost { loaded_elements: 10, written_elements: 4, computed: true, macs: 9 };
+        let a = acc();
+        assert_eq!(c.dma_cycles(&a), 10 * 2 + 4 * 5);
+        assert_eq!(c.compute_cycles(&a), 3);
+        assert_eq!(c.duration(&a), c.dma_cycles(&a) + c.compute_cycles(&a));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 mod cost;
 mod semantics;
 
-pub use cost::{StepCost, StrategyCost};
+pub use cost::{OverlapTimeline, StepCost, StepTiming, StrategyCost};
 pub use semantics::{apply, StepError, StepOutcome};
 
 use crate::conv::PatchId;

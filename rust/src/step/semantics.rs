@@ -48,6 +48,7 @@ impl std::error::Error for StepError {}
 /// Result of applying one step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StepOutcome {
+    /// The step's Definition-3 cost decomposition.
     pub cost: StepCost,
     /// `size_i^step` — peak element occupancy during the step (the paper
     /// measures it after loads, with the step's output included).
@@ -158,7 +159,7 @@ mod tests {
     }
 
     fn acc() -> Accelerator {
-        Accelerator { nbop_pe: 200, t_acc: 1, size_mem: 10_000, t_l: 1, t_w: 1 }
+        Accelerator { t_w: 1, ..Accelerator::paper_eval(200, 10_000) }
     }
 
     fn load_all_kernels(l: &ConvLayer) -> crate::platform::KernelSet {

@@ -18,6 +18,7 @@ pub enum WritebackPolicy {
 }
 
 impl WritebackPolicy {
+    /// Stable serialization name (`every_step`, `at_end`).
     pub fn as_str(&self) -> &'static str {
         match self {
             WritebackPolicy::EveryStep => "every_step",
@@ -25,6 +26,7 @@ impl WritebackPolicy {
         }
     }
 
+    /// Parse a serialized policy name.
     pub fn from_str(s: &str) -> Result<Self, String> {
         match s {
             "every_step" => Ok(WritebackPolicy::EveryStep),
@@ -37,13 +39,16 @@ impl WritebackPolicy {
 /// An S1-family strategy: an ordered partition of `X` into groups.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GroupedStrategy {
+    /// Strategy name used in reports and figures.
     pub name: String,
     /// `g_1 .. g_n` — each group is the patch set computed by one step.
     pub groups: Vec<Vec<PatchId>>,
+    /// When computed outputs are written back to DRAM.
     pub writeback: WritebackPolicy,
 }
 
 impl GroupedStrategy {
+    /// A named strategy over `groups` with the every-step write-back policy.
     pub fn new(name: impl Into<String>, groups: Vec<Vec<PatchId>>) -> Self {
         GroupedStrategy {
             name: name.into(),

@@ -83,6 +83,19 @@ pub fn diagonal(layer: &ConvLayer, group_size: usize) -> GroupedStrategy {
 
 /// Build a grouped strategy from any [`Ordering`] — the uniform entry point
 /// the planner's portfolio race uses to enumerate the ordering heuristics.
+///
+/// # Examples
+///
+/// ```
+/// use convoffload::conv::ConvLayer;
+/// use convoffload::strategy::{self, Ordering};
+///
+/// let layer = ConvLayer::new(1, 6, 6, 3, 3, 1, 1, 1).unwrap();
+/// let s = strategy::from_ordering(&layer, Ordering::ZigZag, 2);
+/// assert_eq!(s.n_steps(), 8); // 16 patches in groups of 2
+/// let steps = s.compile(&layer);
+/// assert_eq!(steps.len(), s.n_steps() + 1); // + terminal flush
+/// ```
 pub fn from_ordering(
     layer: &ConvLayer,
     ordering: Ordering,

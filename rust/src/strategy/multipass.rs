@@ -25,6 +25,7 @@ use crate::strategy::GroupedStrategy;
 /// A multi-pass plan: one grouped strategy per kernel chunk.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MultiPassStrategy {
+    /// Plan name used in reports.
     pub name: String,
     /// Kernel ids per pass (a partition of `0..N`).
     pub kernel_chunks: Vec<Vec<usize>>,
@@ -35,12 +36,17 @@ pub struct MultiPassStrategy {
 /// Aggregate report over all passes.
 #[derive(Debug, Clone)]
 pub struct MultiPassReport {
+    /// Duration of each pass in cycles.
     pub per_pass_duration: Vec<u64>,
+    /// Total duration over all passes in cycles.
     pub duration: u64,
+    /// Peak on-chip occupancy across passes (elements).
     pub peak_occupancy: u64,
+    /// Aggregated loads / writes / MACs over all passes.
     pub totals: StrategyCost,
     /// Functional output `[C_out, H_out, W_out]` (functional mode only).
     pub output: Option<Vec<f32>>,
+    /// Worst |output − reference| across passes (functional mode).
     pub max_abs_error: Option<f32>,
 }
 
@@ -76,6 +82,7 @@ impl MultiPassStrategy {
         })
     }
 
+    /// Number of kernel-chunk passes.
     pub fn n_passes(&self) -> usize {
         self.kernel_chunks.len()
     }

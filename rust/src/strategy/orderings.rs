@@ -7,13 +7,18 @@ use crate::strategy::GroupedStrategy;
 /// Built-in ordering kinds (CLI / config selectable).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Ordering {
+    /// Left→right, row after row (§7.2).
     RowByRow,
+    /// Even rows left→right, odd rows right→left (§7.2).
     ZigZag,
+    /// Hilbert space-filling curve (extension heuristic).
     Hilbert,
+    /// Anti-diagonal sweep (extension heuristic).
     Diagonal,
 }
 
 impl Ordering {
+    /// Stable ordering name (CLI values, cache files, reports).
     pub fn as_str(&self) -> &'static str {
         match self {
             Ordering::RowByRow => "row-by-row",
@@ -23,6 +28,7 @@ impl Ordering {
         }
     }
 
+    /// Parse an ordering name.
     pub fn from_str(s: &str) -> Result<Self, String> {
         match s {
             "row-by-row" | "row" => Ok(Ordering::RowByRow),
@@ -33,6 +39,7 @@ impl Ordering {
         }
     }
 
+    /// The patch visit order this ordering induces on `layer`.
     pub fn order(&self, layer: &ConvLayer) -> Vec<PatchId> {
         match self {
             Ordering::RowByRow => row_major_order(layer),
@@ -42,6 +49,7 @@ impl Ordering {
         }
     }
 
+    /// Every built-in ordering, in the fixed portfolio order.
     pub fn all() -> [Ordering; 4] {
         [Ordering::RowByRow, Ordering::ZigZag, Ordering::Hilbert, Ordering::Diagonal]
     }

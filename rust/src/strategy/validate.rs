@@ -43,6 +43,7 @@ impl std::fmt::Display for Violation {
 /// Outcome of validation.
 #[derive(Debug, Clone)]
 pub struct ValidationReport {
+    /// Every violation found (empty means the strategy is valid).
     pub violations: Vec<Violation>,
     /// Per-pixel load counts (diagnostic; index = pixel id).
     pub pixel_loads: Vec<u32>,
@@ -51,6 +52,7 @@ pub struct ValidationReport {
 }
 
 impl ValidationReport {
+    /// True when no violation was found.
     pub fn is_valid(&self) -> bool {
         self.violations.is_empty()
     }

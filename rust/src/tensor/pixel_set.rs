@@ -45,18 +45,21 @@ impl PixelSet {
     }
 
     #[inline]
+    /// Add `index` to the set.
     pub fn insert(&mut self, id: PixelId) {
         debug_assert!((id as usize) < self.nbits, "pixel id out of universe");
         self.words[id as usize / 64] |= 1u64 << (id % 64);
     }
 
     #[inline]
+    /// Remove `index` from the set.
     pub fn remove(&mut self, id: PixelId) {
         debug_assert!((id as usize) < self.nbits);
         self.words[id as usize / 64] &= !(1u64 << (id % 64));
     }
 
     #[inline]
+    /// True when `index` is in the set.
     pub fn contains(&self, id: PixelId) -> bool {
         if (id as usize) >= self.nbits {
             return false;
@@ -150,10 +153,12 @@ impl PixelSet {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// True when no bit is set.
     pub fn is_empty(&self) -> bool {
         self.words.iter().all(|&w| w == 0)
     }
 
+    /// Remove every element (universe size unchanged).
     pub fn clear(&mut self) {
         self.words.fill(0);
     }
@@ -243,11 +248,13 @@ impl PixelSet {
             .sum()
     }
 
+    /// `self ⊆ other`.
     pub fn is_subset_of(&self, other: &PixelSet) -> bool {
         self.check_same_universe(other);
         self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
     }
 
+    /// `self ∩ other = ∅`.
     pub fn is_disjoint_from(&self, other: &PixelSet) -> bool {
         self.intersection_len(other) == 0
     }

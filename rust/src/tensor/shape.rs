@@ -3,12 +3,16 @@
 /// Dimensions of a 3D tensor `(channels, height, width)` — Definition 6/8.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Dims3 {
+    /// Channels.
     pub c: usize,
+    /// Height (rows).
     pub h: usize,
+    /// Width (columns).
     pub w: usize,
 }
 
 impl Dims3 {
+    /// Dimensions `c × h × w`.
     pub fn new(c: usize, h: usize, w: usize) -> Self {
         Dims3 { c, h, w }
     }
@@ -18,6 +22,7 @@ impl Dims3 {
         self.c * self.h * self.w
     }
 
+    /// True when any dimension is zero.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -40,30 +45,39 @@ impl std::fmt::Display for Dims3 {
 /// `H_K × W_K` anchored at `(s_h·i, s_w·j)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Rect {
+    /// First row (inclusive).
     pub h0: usize,
+    /// Past-the-end row (exclusive).
     pub h1: usize,
+    /// First column (inclusive).
     pub w0: usize,
+    /// Past-the-end column (exclusive).
     pub w1: usize,
 }
 
 impl Rect {
+    /// The rectangle `[h0, h1) × [w0, w1)` (bounds must be ordered).
     pub fn new(h0: usize, h1: usize, w0: usize, w1: usize) -> Self {
         debug_assert!(h0 <= h1 && w0 <= w1);
         Rect { h0, h1, w0, w1 }
     }
 
+    /// Row count.
     pub fn height(&self) -> usize {
         self.h1 - self.h0
     }
 
+    /// Column count.
     pub fn width(&self) -> usize {
         self.w1 - self.w0
     }
 
+    /// Pixel count (`height × width`).
     pub fn area(&self) -> usize {
         self.height() * self.width()
     }
 
+    /// True when `(h, w)` lies inside the rectangle.
     pub fn contains(&self, h: usize, w: usize) -> bool {
         h >= self.h0 && h < self.h1 && w >= self.w0 && w < self.w1
     }
@@ -92,8 +106,11 @@ impl Rect {
 /// completeness of the formalism: `[a, b]` inclusive per dimension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SliceSpec {
+    /// Channel bounds `[a, b]` (inclusive).
     pub c: (usize, usize),
+    /// Row bounds `[a, b]` (inclusive).
     pub h: (usize, usize),
+    /// Column bounds `[a, b]` (inclusive).
     pub w: (usize, usize),
 }
 
@@ -105,6 +122,7 @@ impl SliceSpec {
             * (self.w.1 - self.w.0 + 1)
     }
 
+    /// Always false: inclusive bounds hold at least one element.
     pub fn is_empty(&self) -> bool {
         false // inclusive bounds always contain at least one element
     }

@@ -19,10 +19,15 @@ use crate::util::json::Json;
 /// One measurement result.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Bench name (also the JSON report key).
     pub name: String,
+    /// Iterations measured.
     pub iterations: u64,
+    /// Median wall time per iteration.
     pub median: Duration,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// 95th-percentile wall time per iteration.
     pub p95: Duration,
 }
 
@@ -38,6 +43,7 @@ impl Measurement {
         o
     }
 
+    /// One aligned line for the textual report.
     pub fn report_line(&self) -> String {
         format!(
             "{:<48} iters {:>9}  median {:>12}  mean {:>12}  p95 {:>12}",
@@ -129,6 +135,7 @@ pub struct BenchSuite {
 }
 
 impl BenchSuite {
+    /// A new, empty suite with the given name.
     pub fn new(suite_name: &'static str) -> Self {
         // `cargo bench -- --quick` (or env) shrinks the budget; integration
         // tests exercising the harness use the env knob.

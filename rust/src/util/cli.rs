@@ -8,10 +8,13 @@ use std::collections::BTreeMap;
 /// Description of one flag for parsing + help output.
 #[derive(Debug, Clone)]
 pub struct FlagSpec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// `true` if the flag takes a value, `false` for boolean switches.
     pub takes_value: bool,
+    /// Default value, if any (only meaningful for value flags).
     pub default: Option<&'static str>,
 }
 
@@ -20,18 +23,22 @@ pub struct FlagSpec {
 pub struct Args {
     flags: BTreeMap<String, String>,
     bools: BTreeMap<String, bool>,
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// Value of a value flag, if present (defaults pre-applied).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// True when the boolean switch was passed.
     pub fn get_bool(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
     }
 
+    /// Parse a flag's value as `usize` (malformed input is an error).
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -42,6 +49,7 @@ impl Args {
         }
     }
 
+    /// Parse a flag's value as `u64` (malformed input is an error).
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -52,6 +60,7 @@ impl Args {
         }
     }
 
+    /// Parse a flag's value as `f64` (malformed input is an error).
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
             None => Ok(None),

@@ -11,15 +11,22 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) so output is canonical.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (stored as `f64`, like JSON itself).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (ordered keys → canonical output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty JSON object (builder entry point for [`Json::set`]).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -35,6 +42,7 @@ impl Json {
         self
     }
 
+    /// Member of an object by key (`None` on non-objects / absent keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -49,6 +58,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if this is a whole number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -59,10 +69,12 @@ impl Json {
         })
     }
 
+    /// [`Json::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|x| x as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -70,6 +82,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +90,7 @@ impl Json {
         }
     }
 
+    /// Array items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -223,7 +237,9 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset the parse failed at.
     pub offset: usize,
+    /// What went wrong.
     pub message: String,
 }
 

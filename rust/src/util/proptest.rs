@@ -11,8 +11,11 @@ use crate::util::rng::Rng;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Number of random cases to generate.
     pub cases: usize,
+    /// Base RNG seed (case `i` derives from it).
     pub seed: u64,
+    /// Cap on shrink iterations after a failure.
     pub max_shrink_rounds: usize,
 }
 

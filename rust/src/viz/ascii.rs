@@ -7,9 +7,13 @@ use crate::viz::{step_views, PixelClass, StepView};
 /// Glyphs used per pixel class.
 #[derive(Debug, Clone, Copy)]
 pub struct Legend {
+    /// Glyph for pixels not on chip.
     pub absent: char,
+    /// Glyph for pixels freed this step (`a_1`).
     pub freed: char,
+    /// Glyph for pixels loaded this step (`a_4`).
     pub loaded: char,
+    /// Glyph for pixels kept from the previous step (reuse).
     pub kept: char,
 }
 
@@ -21,6 +25,7 @@ impl Default for Legend {
 }
 
 impl Legend {
+    /// The glyph for a pixel class.
     pub fn glyph(&self, c: PixelClass) -> char {
         match c {
             PixelClass::Absent => self.absent,
@@ -30,6 +35,7 @@ impl Legend {
         }
     }
 
+    /// Human-readable legend line.
     pub fn describe(&self) -> String {
         format!(
             "legend: '{}' absent  '{}' freed (a1)  '{}' loaded (a4)  '{}' kept/reused",

@@ -30,7 +30,9 @@ pub enum PixelClass {
 /// Per-step view used by the renderers.
 #[derive(Debug, Clone)]
 pub struct StepView {
+    /// Step index (0-based).
     pub index: usize,
+    /// Per-pixel classification, row-major over the input grid.
     pub classes: Vec<PixelClass>,
     /// Patch ids computed this step.
     pub group: Vec<u32>,

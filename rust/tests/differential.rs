@@ -3,19 +3,25 @@
 //! Simulates a fixed set of fuzz networks (`config::fuzz::random_network`,
 //! seeds 1..=24 — asserted below to cover stride > 1, dilation > 1,
 //! groups > 1 and pooling) and writes the interchange file
-//! `target/differential_cases.json`: every case carries the full network
-//! spec (layers with dilation/groups, accelerators, explicit strategy
-//! groups, plumbing flags) plus the Rust simulator's results. The Python
-//! oracle (`python/oracle_sim.py`, exercised by
-//! `python/tests/test_differential.py`) replays the specs independently and
-//! asserts bit-equal durations, loaded elements and step counts.
+//! `target/differential_cases.json` (version 2): every case carries the
+//! full network spec (layers with dilation/groups, accelerators, explicit
+//! strategy groups, plumbing flags) plus the Rust simulator's results under
+//! **both** duration semantics — the sequential Definition-3 sums and the
+//! §3.7 double-buffered makespans (on the case's own accelerator *and* on a
+//! 2× memory "roomy" variant, where most residency checks pass so real
+//! overlap is exercised). The Python oracle (`python/oracle_sim.py`,
+//! exercised by `python/tests/test_differential.py`) replays the specs
+//! independently and asserts bit-equal durations, loaded elements, step
+//! counts and makespans.
 //!
 //! CI runs this as part of tier-1 `cargo test`, uploads the JSON as an
 //! artifact, and a dependent job replays it under pytest.
 
 use std::path::PathBuf;
 
-use convoffload::config::fuzz::{network_to_json, random_network};
+use convoffload::config::fuzz::{network_to_json, random_network, FuzzNetwork};
+use convoffload::platform::{Accelerator, OverlapMode, Platform};
+use convoffload::sim::Simulator;
 use convoffload::util::json::Json;
 
 /// Seed range shared with `fuzz::tests::seed_range_covers_all_feature_axes`
@@ -32,6 +38,49 @@ fn target_dir() -> PathBuf {
         .parent()
         .expect("manifest dir has a parent")
         .join("target")
+}
+
+/// Per-stage double-buffered replay of a fuzz network: the stage's own
+/// accelerator switched to `DoubleBuffered`, with `extra_mem_factor`
+/// scaling `size_mem` (1 = as sampled, 2 = the "roomy" variant).
+fn overlapped_expectations(net: &FuzzNetwork, mem_factor: u64) -> Json {
+    let mut per_stage: Vec<Json> = Vec::new();
+    let mut total = 0u64;
+    for s in &net.stages {
+        let acc = Accelerator {
+            size_mem: s.accelerator.size_mem * mem_factor,
+            ..s.accelerator
+        }
+        .with_overlap(OverlapMode::DoubleBuffered);
+        let r = Simulator::new(s.layer, Platform::new(acc))
+            .run(&s.strategy)
+            .unwrap_or_else(|e| {
+                panic!("seed {} stage {}: overlapped sim failed: {e}", net.seed, s.name)
+            });
+        assert!(
+            r.duration <= r.sequential_duration,
+            "seed {} stage {}: makespan above sequential",
+            net.seed,
+            s.name
+        );
+        assert!(
+            r.duration >= r.dma_busy.max(r.compute_busy),
+            "seed {} stage {}: makespan below the resource floor",
+            net.seed,
+            s.name
+        );
+        total += r.duration;
+        let mut o = Json::obj();
+        o.set("name", s.name.as_str())
+            .set("makespan", r.duration)
+            .set("sequential_duration", r.sequential_duration)
+            .set("dma_busy", r.dma_busy)
+            .set("compute_busy", r.compute_busy);
+        per_stage.push(o);
+    }
+    let mut o = Json::obj();
+    o.set("total_makespan", total).set("per_stage", Json::Arr(per_stage));
+    o
 }
 
 #[test]
@@ -68,7 +117,9 @@ fn emit_differential_cases() {
         let mut expected = Json::obj();
         expected
             .set("total_duration", report.total_duration)
-            .set("per_stage", Json::Arr(per_stage));
+            .set("per_stage", Json::Arr(per_stage))
+            .set("overlapped", overlapped_expectations(&net, 1))
+            .set("overlapped_roomy", overlapped_expectations(&net, 2));
         case.set("expected", expected);
         cases.push(case);
     }
@@ -81,7 +132,8 @@ fn emit_differential_cases() {
     assert!(cases.len() >= 20, "need ≥ 20 cases, got {}", cases.len());
 
     let mut doc = Json::obj();
-    doc.set("version", 1u64)
+    // v2: per-case overlapped + overlapped_roomy makespan expectations.
+    doc.set("version", 2u64)
         .set("generator", "config::fuzz::random_network")
         .set("cases", Json::Arr(cases));
 

@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use convoffload::config::network_preset;
 use convoffload::planner::{AcceleratorSpec, NetworkPlanner, PlanOptions, StrategyCache};
+use convoffload::platform::OverlapMode;
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!(
@@ -23,6 +24,7 @@ fn quick_options() -> PlanOptions {
         anneal_iters: 1_500,
         anneal_starts: 2,
         threads: 0,
+        overlap: OverlapMode::Sequential,
     }
 }
 
@@ -203,6 +205,57 @@ fn mobilenet_slim_never_regresses_the_analytic_baseline() {
     // The pointwise stage has zero patch overlap: 64 loads is optimal, so
     // the planner must hit it exactly.
     assert_eq!(plan.layers[1].loaded_pixels, 64);
+}
+
+/// The overlapped-offload baseline (PR 5): racing the same presets under
+/// `OverlapMode::DoubleBuffered` must do at least as well as the analytic
+/// anneal-free portfolio winner in the makespan metric. The numbers are
+/// produced and cross-checked bit-exactly from an independent code base by
+/// the Python oracle
+/// (`python/tests/test_oracle_sim.py::TestOverlappedPlannerBaselines`):
+/// per-stage winner makespans lenet5 = [2538 (greedy), 4345 (hilbert)],
+/// resnet8 = [6402, 10435, 10435] (greedy), mobilenet_slim = [1352
+/// (hilbert), 304 (row-by-row), 1898 (greedy)] — totals 6883 / 27272 /
+/// 3554 cycles vs the sequential 7100 / 27644 / 3568. Sequential-mode
+/// plans are untouched (pinned by the baselines above).
+#[test]
+fn double_buffered_planner_never_regresses_the_overlap_baseline() {
+    for (net, per_stage_makespan, total, sequential_total) in [
+        ("lenet5", vec![2538u64, 4345], 6883u64, 7100u64),
+        ("resnet8", vec![6402, 10435, 10435], 27272, 27644),
+        ("mobilenet_slim", vec![1352, 304, 1898], 3554, 3568),
+    ] {
+        let preset = network_preset(net).unwrap();
+        let mut opts = quick_options();
+        opts.overlap = OverlapMode::DoubleBuffered;
+        let plan = NetworkPlanner::new(opts).plan(&preset).unwrap();
+        assert_eq!(plan.layers.len(), per_stage_makespan.len(), "{net}");
+        for (lp, &bound) in plan.layers.iter().zip(&per_stage_makespan) {
+            assert!(
+                lp.duration <= bound,
+                "{net}/{}: makespan {} > analytic overlap baseline {bound}",
+                lp.stage,
+                lp.duration
+            );
+            assert!(
+                lp.duration <= lp.sequential_duration,
+                "{net}/{}: overlapped above sequential",
+                lp.stage
+            );
+        }
+        assert!(
+            plan.total_duration <= total,
+            "{net}: {} cycles > analytic overlap baseline {total}",
+            plan.total_duration
+        );
+        // The overlapped plan must beat (or match) the pinned *sequential*
+        // baseline too: hiding transfer time can only help.
+        assert!(
+            plan.total_duration <= sequential_total,
+            "{net}: overlapped {} > sequential baseline {sequential_total}",
+            plan.total_duration
+        );
+    }
 }
 
 /// ResNet-8's two stage-2 convolutions share one geometry: the planner races

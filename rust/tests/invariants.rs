@@ -15,7 +15,7 @@ use convoffload::config::fuzz;
 use convoffload::conv::ConvLayer;
 use convoffload::optimizer::overlap::OverlapGraph;
 use convoffload::optimizer::{grouping_duration, grouping_loads};
-use convoffload::platform::{Accelerator, Platform};
+use convoffload::platform::{Accelerator, OverlapMode, Platform};
 use convoffload::sim::{RustOracleBackend, Simulator};
 use convoffload::strategy::{
     self, strategy_from_csv, strategy_from_json, strategy_to_csv, strategy_to_json,
@@ -111,6 +111,88 @@ fn accelerator_for(s: &Scenario) -> Accelerator {
             + s.group_size * s.layer.c_out() * 2) as u64,
         t_l: 1,
         t_w: 1,
+        overlap: OverlapMode::Sequential,
+    }
+}
+
+/// §3.7 property: for every generated scenario (and a 2× memory variant
+/// that lets prefetches through), the double-buffered makespan is bounded
+/// above by the sequential Definition-3 duration and below by the busier
+/// resource: `max(dma_busy, compute_busy) ≤ makespan ≤ δ_sequential`.
+/// The fuzz networks (`config::fuzz`) are covered by the same property in
+/// `overlapped_fuzz_networks_respect_the_bounds`.
+#[test]
+fn overlapped_makespan_bounds_invariant() {
+    let cfg = Config { cases: 120, ..Default::default() };
+    check(&cfg, gen_scenario, shrink_scenario, |s| {
+        let base = accelerator_for(s);
+        let seq = Simulator::new(s.layer, Platform::new(base))
+            .run(&s.strategy)
+            .map_err(|e| format!("sequential simulation failed: {e}"))?;
+        for mem_factor in [1u64, 2] {
+            let acc = Accelerator { size_mem: base.size_mem * mem_factor, ..base }
+                .with_overlap(OverlapMode::DoubleBuffered);
+            let ovl = Simulator::new(s.layer, Platform::new(acc))
+                .run(&s.strategy)
+                .map_err(|e| format!("overlapped simulation failed: {e}"))?;
+            if ovl.sequential_duration != seq.duration {
+                return Err(format!(
+                    "sequential accounting diverged: {} != {}",
+                    ovl.sequential_duration, seq.duration
+                ));
+            }
+            if ovl.duration > seq.duration {
+                return Err(format!(
+                    "makespan {} above sequential {} (mem x{mem_factor})",
+                    ovl.duration, seq.duration
+                ));
+            }
+            let floor = ovl.dma_busy.max(ovl.compute_busy);
+            if ovl.duration < floor {
+                return Err(format!(
+                    "makespan {} below resource floor {floor} (mem x{mem_factor})",
+                    ovl.duration
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The same §3.7 bounds over the seeded fuzz networks — every stage of
+/// every differential seed, in both the tight and the roomy memory
+/// configuration.
+#[test]
+fn overlapped_fuzz_networks_respect_the_bounds() {
+    for seed in 1..=24u64 {
+        let net = fuzz::random_network(seed);
+        for stage in &net.stages {
+            let seq = Simulator::new(stage.layer, Platform::new(stage.accelerator))
+                .run(&stage.strategy)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            for mem_factor in [1u64, 2] {
+                let acc = Accelerator {
+                    size_mem: stage.accelerator.size_mem * mem_factor,
+                    ..stage.accelerator
+                }
+                .with_overlap(OverlapMode::DoubleBuffered);
+                let ovl = Simulator::new(stage.layer, Platform::new(acc))
+                    .run(&stage.strategy)
+                    .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert!(
+                    ovl.duration <= seq.duration,
+                    "seed {seed} stage {}: makespan {} > sequential {}",
+                    stage.name,
+                    ovl.duration,
+                    seq.duration
+                );
+                assert!(
+                    ovl.duration >= ovl.dma_busy.max(ovl.compute_busy),
+                    "seed {seed} stage {}: makespan below the resource floor",
+                    stage.name
+                );
+            }
+        }
     }
 }
 
