@@ -540,3 +540,75 @@ def analytic_portfolio(layer: Layer, group_size: int):
     lanes.append(("greedy", grouping_loaded_pixels(layer, greedy_groups(layer, k))))
     best = min(lanes, key=lambda t: t[1])  # min is stable: earliest lane wins ties
     return best[0], best[1], dict(lanes)
+
+
+# ------------------------------------------------------------ batch planning
+
+
+def cache_key(
+    layer: Layer,
+    acc: Accelerator,
+    group_size: int,
+    k: int,
+    seed: int,
+    anneal_iters: int,
+    anneal_starts: int,
+) -> str:
+    """Mirror of the Rust planner's ``CacheKey`` v3 canonical string
+    (``rust/src/planner/cache.rs``): everything a planned strategy depends
+    on — layer geometry, accelerator parameters, overlap mode, grouping
+    bounds and the portfolio configuration. The differential suite uses it
+    to reproduce the batch planner's cross-network dedup accounting from an
+    independent code base."""
+    return (
+        f"v3|in:{layer.c_in}x{layer.h_in}x{layer.w_in}"
+        f"|ker:{layer.n_kernels}x{layer.h_k}x{layer.w_k}"
+        f"|stride:{layer.s_h}x{layer.s_w}"
+        f"|dil:{layer.d_h}x{layer.d_w}"
+        f"|grp:{layer.groups}"
+        f"|acc:{acc.nbop_pe},{acc.t_acc},{acc.size_mem},{acc.t_l},{acc.t_w}"
+        f"|ovl:{acc.overlap}"
+        f"|g:{group_size}"
+        f"|k:{k}"
+        f"|anneal:{anneal_starts}x{anneal_iters}@{seed}"
+    )
+
+
+def batch_dedup(
+    networks,
+    group_size: int,
+    seed: int = 2026,
+    anneal_iters: int = 50_000,
+    anneal_starts: int = 3,
+    overlap: str = "sequential",
+) -> dict:
+    """Mirror of the Rust ``BatchPlanner`` dedup accounting: canonicalize
+    every stage of every network (a list of ``Layer`` lists) to its cache
+    key on the ``for_group_size`` machine, then count, in batch order, the
+    stages whose problem was already seen (``dedup_hits``) and the subset
+    first seen in a *different* network (``cross_network_dedup_hits``)."""
+    first_net: dict = {}
+    stages_total = 0
+    dedup_hits = 0
+    cross_network_dedup_hits = 0
+    for ni, layers in enumerate(networks):
+        for layer in layers:
+            stages_total += 1
+            acc = for_group_size(layer, group_size)
+            acc.overlap = overlap
+            k = -(-layer.n_patches // group_size)
+            key = cache_key(
+                layer, acc, group_size, k, seed, anneal_iters, anneal_starts
+            )
+            if key in first_net:
+                dedup_hits += 1
+                if first_net[key] != ni:
+                    cross_network_dedup_hits += 1
+            else:
+                first_net[key] = ni
+    return {
+        "stages_total": stages_total,
+        "unique_problems": stages_total - dedup_hits,
+        "dedup_hits": dedup_hits,
+        "cross_network_dedup_hits": cross_network_dedup_hits,
+    }

@@ -256,3 +256,69 @@ class TestNetworkChaining:
         l = o.Layer(1, 32, 32, 5, 5, 6)
         assert o.next_stage_dims(l, True, 0) == (6, 14, 14)
         assert o.next_stage_dims(l, False, 1) == (6, 30, 30)
+
+
+class TestBatchPlanner:
+    """The batch planner's cross-network dedup accounting, reproduced from
+    the independent code base via the ``CacheKey`` v3 mirror. Pins the Rust
+    acceptance batch ``[lenet5, lenet5, resnet8, mobilenet_slim]``:
+    10 stages -> 7 unique planning problems, 3 dedup hits of which 2 are
+    cross-network (``rust/tests/integration_batch.rs``)."""
+
+    @staticmethod
+    def _zoo():
+        lenet5 = [o.Layer(1, 32, 32, 5, 5, 6), o.Layer(6, 14, 14, 5, 5, 16)]
+        conv2 = o.Layer(16, 18, 18, 3, 3, 16)
+        resnet8 = [o.Layer(3, 34, 34, 3, 3, 16), conv2, conv2]
+        mobilenet_slim = [
+            o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4),
+            o.Layer(4, 8, 8, 1, 1, 8),
+            o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2),
+        ]
+        return [lenet5, lenet5, resnet8, mobilenet_slim]
+
+    def test_zoo_batch_dedup_accounting(self):
+        for overlap in ("sequential", "double-buffered"):
+            stats = o.batch_dedup(self._zoo(), 4, overlap=overlap)
+            assert stats == {
+                "stages_total": 10,
+                "unique_problems": 7,
+                "dedup_hits": 3,
+                "cross_network_dedup_hits": 2,
+            }, overlap
+
+    def test_key_covers_geometry_platform_and_mode(self):
+        layer = o.Layer(4, 12, 12, 3, 3, 4)
+        acc = o.for_group_size(layer, 4)
+        k = -(-layer.n_patches // 4)
+        base = o.cache_key(layer, acc, 4, k, 2026, 50_000, 3)
+        assert base.startswith("v3|") and "|ovl:sequential|" in base
+        # overlap mode is part of the planning problem
+        db = o.Accelerator(acc.nbop_pe, acc.t_acc, acc.size_mem, acc.t_l,
+                           acc.t_w, overlap="double-buffered")
+        assert o.cache_key(layer, db, 4, k, 2026, 50_000, 3) != base
+        # dilation and channel groups are layer geometry
+        dil = o.Layer(4, 12, 12, 3, 3, 4, d_h=2, d_w=2)
+        grp = o.Layer(4, 12, 12, 3, 3, 4, groups=4)
+        assert o.cache_key(dil, acc, 4, k, 2026, 50_000, 3) != base
+        assert o.cache_key(grp, acc, 4, k, 2026, 50_000, 3) != base
+        # and so is the portfolio configuration
+        assert o.cache_key(layer, acc, 4, k, 2027, 50_000, 3) != base
+
+    def test_dedup_counts_repeats_within_one_network(self):
+        conv2 = o.Layer(16, 18, 18, 3, 3, 16)
+        stats = o.batch_dedup([[conv2, conv2, conv2]], 4)
+        assert stats["unique_problems"] == 1
+        assert stats["dedup_hits"] == 2
+        assert stats["cross_network_dedup_hits"] == 0
+
+    def test_different_group_bounds_never_dedupe(self):
+        layer = o.Layer(1, 8, 8, 3, 3, 1)
+        a = o.batch_dedup([[layer], [layer]], 2)
+        assert a["cross_network_dedup_hits"] == 1
+        keys = set()
+        for g in (2, 4):
+            acc = o.for_group_size(layer, g)
+            k = -(-layer.n_patches // g)
+            keys.add(o.cache_key(layer, acc, g, k, 2026, 50_000, 3))
+        assert len(keys) == 2

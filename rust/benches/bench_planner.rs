@@ -9,18 +9,20 @@
 //! * `"anneal"` — per network layer, annealing iterations/second (the
 //!   delta-evaluation speedup metric tracked since PR 2; the acceptance bar
 //!   was ≥ 3× on the lenet5/conv1 geometry);
-//! * `"plan"`   — end-to-end `plan-network` wall time per network.
+//! * `"plan"`   — end-to-end `plan-network` wall time per network;
+//! * `"batch"`  — the `plan-batch` zoo (lenet5 ×2, resnet8, mobilenet_slim):
+//!   cold vs warm-cache wall time plus the cross-network dedup ratio.
 //!
 //! CI runs `cargo bench --bench bench_planner -- --quick --json` and uploads
 //! the file as a workflow artifact, so the repo's perf trajectory is
 //! machine-readable from every commit (EXPERIMENTS.md §Perf).
 
-use convoffload::config::network_preset;
 use convoffload::config::presets::paper_sweep_layer;
+use convoffload::config::{network_preset, NetworkPreset};
 use convoffload::optimizer::search;
 use convoffload::planner::{
-    portfolio_entries, run_entry, AcceleratorSpec, NetworkPlanner, PlanOptions,
-    StrategyCache,
+    portfolio_entries, run_entry, AcceleratorSpec, BatchPlanner, BatchStats,
+    NetworkPlanner, PlanOptions, ShardedStrategyCache, StrategyCache,
 };
 use convoffload::platform::Accelerator;
 use convoffload::strategy;
@@ -76,6 +78,15 @@ fn anneal_probes(quick: bool) -> Vec<AnnealProbe> {
             iters,
         },
     ]
+}
+
+/// The batch-bench workload: the EXPERIMENTS.md zoo, with lenet5 twice so
+/// the cold pass exercises cross-network dedup.
+fn zoo() -> Vec<NetworkPreset> {
+    ["lenet5", "lenet5", "resnet8", "mobilenet_slim"]
+        .iter()
+        .map(|n| network_preset(n).expect("zoo preset"))
+        .collect()
 }
 
 /// Resolve a `network/layer` label to its preset `ConvLayer`.
@@ -164,10 +175,53 @@ fn main() {
         });
     }
 
+    // Batch planning, cold — the zoo through `plan-batch` with no cache, so
+    // the only reuse is in-batch dedup (10 stages -> 7 unique problems).
+    {
+        let presets = zoo();
+        let planner = BatchPlanner::new(quick_plan_options());
+        suite.bench("plan_batch_zoo_cold_anneal2k", move || {
+            let report = planner.plan_batch(&presets).expect("batch plan");
+            report.plans.iter().map(|p| p.total_duration).sum::<u64>()
+        });
+    }
+
+    // Batch planning, warm — same zoo against a pre-warmed sharded cache;
+    // every stage must resolve as a store hit with zero anneal iterations.
+    {
+        let presets = zoo();
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-bench-batch-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let planner = BatchPlanner::with_cache(
+            quick_plan_options(),
+            ShardedStrategyCache::open(&dir).expect("sharded cache"),
+        );
+        planner.plan_batch(&presets).expect("warm-up batch");
+        suite.bench("plan_batch_zoo_warm_cache", move || {
+            let report = planner.plan_batch(&presets).expect("batch plan");
+            assert_eq!(report.stats.anneal_iters_run, 0);
+            report.plans.iter().map(|p| p.total_duration).sum::<u64>()
+        });
+    }
+
+    // Dedup accounting is budget-independent, so probe it once with a tiny
+    // anneal budget rather than timing it.
+    let batch_stats = {
+        let planner = BatchPlanner::new(PlanOptions {
+            anneal_iters: 50,
+            anneal_starts: 1,
+            ..quick_plan_options()
+        });
+        planner.plan_batch(&zoo()).expect("stats probe").stats
+    };
+
     let results = suite.run();
 
     if let Some(path) = json_output_path("BENCH_planner.json") {
-        write_report(&path, &results, quick);
+        write_report(&path, &results, quick, &batch_stats);
     }
 }
 
@@ -176,7 +230,12 @@ fn find<'a>(results: &'a [Measurement], name: &str) -> Option<&'a Measurement> {
 }
 
 /// Compose the derived sections and write the JSON report.
-fn write_report(path: &std::path::Path, results: &[Measurement], quick: bool) {
+fn write_report(
+    path: &std::path::Path,
+    results: &[Measurement],
+    quick: bool,
+    batch_stats: &BatchStats,
+) {
     let mut anneal_rows: Vec<Json> = Vec::new();
     for probe in anneal_probes(quick) {
         let Some(m) = find(results, probe.bench_name) else { continue };
@@ -208,10 +267,50 @@ fn write_report(path: &std::path::Path, results: &[Measurement], quick: bool) {
         plan_rows.push(row);
     }
 
+    // The plan-batch trajectory: cold vs warm-cache wall time plus the
+    // (budget-independent) dedup accounting for the zoo workload.
+    let mut batch = Json::obj();
+    batch
+        .set("networks", batch_stats.networks)
+        .set("stages_total", batch_stats.stages_total)
+        .set("unique_problems", batch_stats.unique_problems)
+        .set("dedup_hits", batch_stats.dedup_hits)
+        .set(
+            "cross_network_dedup_hits",
+            batch_stats.cross_network_dedup_hits,
+        )
+        .set(
+            "dedup_ratio",
+            if batch_stats.stages_total > 0 {
+                batch_stats.dedup_hits as f64 / batch_stats.stages_total as f64
+            } else {
+                0.0
+            },
+        );
+    if let Some(m) = find(results, "plan_batch_zoo_cold_anneal2k") {
+        batch.set("cold_median_ns", m.median.as_nanos() as u64);
+    }
+    if let Some(m) = find(results, "plan_batch_zoo_warm_cache") {
+        batch.set("warm_cache_median_ns", m.median.as_nanos() as u64);
+    }
+    if let (Some(cold), Some(warm)) = (
+        find(results, "plan_batch_zoo_cold_anneal2k"),
+        find(results, "plan_batch_zoo_warm_cache"),
+    ) {
+        let warm_ns = warm.median.as_nanos() as f64;
+        if warm_ns > 0.0 {
+            batch.set(
+                "cold_over_warm_speedup",
+                cold.median.as_nanos() as f64 / warm_ns,
+            );
+        }
+    }
+
     let mut extra = Json::obj();
     extra
         .set("anneal", Json::Arr(anneal_rows))
-        .set("plan", Json::Arr(plan_rows));
+        .set("plan", Json::Arr(plan_rows))
+        .set("batch", batch);
     match write_json_report(path, "planner", results, extra) {
         Ok(()) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("error: could not write {}: {e}", path.display()),

@@ -109,7 +109,7 @@ pub fn paper_sweep_layer(h_in: usize) -> ConvLayer {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkStagePreset {
     /// Stage name within the network.
-    pub name: &'static str,
+    pub name: String,
     /// The stage's layer.
     pub layer: ConvLayer,
     /// Apply 2×2 stride-2 mean pooling after this stage (LeNet subsampling).
@@ -124,10 +124,12 @@ pub struct NetworkStagePreset {
 /// layer sequences the network planner optimizes end to end.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkPreset {
-    /// Preset name (CLI value).
-    pub name: &'static str,
+    /// Preset name (CLI value). Owned, because networks also arrive from
+    /// TOML files at runtime (`plan-batch` wraps single-layer experiment
+    /// configs as one-stage networks), not only from the static table here.
+    pub name: String,
     /// One-line description for listings.
-    pub description: &'static str,
+    pub description: String,
     /// The stages in execution order.
     pub stages: Vec<NetworkStagePreset>,
 }
@@ -135,17 +137,17 @@ pub struct NetworkPreset {
 fn all_networks() -> Vec<NetworkPreset> {
     vec![
         NetworkPreset {
-            name: "lenet5",
-            description: "LeNet-5 convolutional trunk: conv1 -> 2x2 pool -> conv2",
+            name: "lenet5".into(),
+            description: "LeNet-5 convolutional trunk: conv1 -> 2x2 pool -> conv2".into(),
             stages: vec![
                 NetworkStagePreset {
-                    name: "conv1",
+                    name: "conv1".into(),
                     layer: ConvLayer::new(1, 32, 32, 5, 5, 6, 1, 1).unwrap(),
                     pool_after: true,
                     pad_after: 0,
                 },
                 NetworkStagePreset {
-                    name: "conv2",
+                    name: "conv2".into(),
                     layer: ConvLayer::new(6, 14, 14, 5, 5, 16, 1, 1).unwrap(),
                     pool_after: false,
                     pad_after: 0,
@@ -153,24 +155,25 @@ fn all_networks() -> Vec<NetworkPreset> {
             ],
         },
         NetworkPreset {
-            name: "resnet8",
+            name: "resnet8".into(),
             description:
-                "ResNet-8 3x3 trunk: conv1 -> pool + pad -> stage-2 block (two same-padded convs)",
+                "ResNet-8 3x3 trunk: conv1 -> pool + pad -> stage-2 block (two same-padded convs)"
+                    .into(),
             stages: vec![
                 NetworkStagePreset {
-                    name: "conv1",
+                    name: "conv1".into(),
                     layer: ConvLayer::new(3, 34, 34, 3, 3, 16, 1, 1).unwrap(),
                     pool_after: true,
                     pad_after: 1,
                 },
                 NetworkStagePreset {
-                    name: "conv2a",
+                    name: "conv2a".into(),
                     layer: ConvLayer::new(16, 18, 18, 3, 3, 16, 1, 1).unwrap(),
                     pool_after: false,
                     pad_after: 1,
                 },
                 NetworkStagePreset {
-                    name: "conv2b",
+                    name: "conv2b".into(),
                     layer: ConvLayer::new(16, 18, 18, 3, 3, 16, 1, 1).unwrap(),
                     pool_after: false,
                     pad_after: 0,
@@ -178,12 +181,13 @@ fn all_networks() -> Vec<NetworkPreset> {
             ],
         },
         NetworkPreset {
-            name: "mobilenet_slim",
+            name: "mobilenet_slim".into(),
             description:
-                "Depthwise-separable trunk: 3x3 depthwise s2 -> 1x1 pointwise -> 3x3 dilated (d=2)",
+                "Depthwise-separable trunk: 3x3 depthwise s2 -> 1x1 pointwise -> 3x3 dilated (d=2)"
+                    .into(),
             stages: vec![
                 NetworkStagePreset {
-                    name: "dw3",
+                    name: "dw3".into(),
                     layer: ConvLayer::new(4, 18, 18, 3, 3, 4, 2, 2)
                         .unwrap()
                         .with_groups(4)
@@ -192,7 +196,7 @@ fn all_networks() -> Vec<NetworkPreset> {
                     pad_after: 0,
                 },
                 NetworkStagePreset {
-                    name: "pw1",
+                    name: "pw1".into(),
                     layer: ConvLayer::new(4, 8, 8, 1, 1, 8, 1, 1).unwrap(),
                     pool_after: false,
                     // Remark-2 pre-padding for the dilated successor: span 5
@@ -200,7 +204,7 @@ fn all_networks() -> Vec<NetworkPreset> {
                     pad_after: 2,
                 },
                 NetworkStagePreset {
-                    name: "dil3",
+                    name: "dil3".into(),
                     layer: ConvLayer::new(8, 12, 12, 3, 3, 8, 1, 1)
                         .unwrap()
                         .with_dilation(2, 2)
@@ -259,7 +263,7 @@ mod tests {
     fn network_presets_resolve() {
         for p in list_network_presets() {
             assert!(!p.stages.is_empty(), "{}", p.name);
-            assert_eq!(network_preset(p.name).as_ref(), Some(&p));
+            assert_eq!(network_preset(&p.name).as_ref(), Some(&p));
             for s in &p.stages {
                 assert!(s.layer.validate().is_ok(), "{}/{}", p.name, s.name);
             }

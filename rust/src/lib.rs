@@ -32,6 +32,13 @@
 //!   preset, with a content-addressed on-disk strategy cache and an
 //!   end-to-end simulated-duration report; under a double-buffered
 //!   accelerator the race optimizes the overlapped makespan (`planner`);
+//! * the **batch planning service** — [`planner::BatchPlanner`] plans many
+//!   networks in one call: identical (geometry, platform, overlap-mode)
+//!   problems dedupe *across* requests before any search, the residual
+//!   portfolio set races on one shared worker pool, and results persist in a
+//!   sharded, lock-striped, crash-tolerant strategy cache
+//!   ([`planner::ShardedStrategyCache`]) whose hit/miss/dedup/eviction
+//!   counters surface through [`planner::BatchReport`] (`plan-batch`);
 //! * the **experiment harness** regenerating every figure of the paper's
 //!   evaluation (`bench_harness`), and a config system with LeNet-5 / ResNet-8
 //!   layer *and* network presets (`config`).
@@ -96,7 +103,8 @@ pub mod viz;
 pub mod prelude {
     pub use crate::conv::{ConvLayer, Patch, PatchId};
     pub use crate::planner::{
-        AcceleratorSpec, NetworkPlan, NetworkPlanner, PlanOptions, StrategyCache,
+        AcceleratorSpec, BatchPlanner, BatchReport, BatchStats, NetworkPlan,
+        NetworkPlanner, PlanOptions, ShardedStrategyCache, StrategyCache, StrategyStore,
     };
     pub use crate::platform::{Accelerator, OnChipMemory, OverlapMode, Platform};
     pub use crate::sim::{FunctionalBackend, SimReport, Simulator};

@@ -6,6 +6,9 @@
 //! * `optimize`      — find an optimized strategy (exact / polished), export CSV;
 //! * `plan-network`  — plan every layer of a network preset (portfolio race
 //!   + strategy cache) and report the end-to-end simulated duration;
+//! * `plan-batch`    — plan several networks (presets and/or TOML layer
+//!   files) in one call: cross-network dedup, one shared race pool, sharded
+//!   persistent strategy cache;
 //! * `figures`       — regenerate the paper's Figures 11/12/13 into `figures/`;
 //! * `viz`           — render a strategy's step grids (ASCII or SVG);
 //! * `e2e`           — functional end-to-end run through the PJRT runtime;
@@ -16,12 +19,13 @@ use std::process::ExitCode;
 
 use convoffload::config::{
     layer_preset, list_network_presets, list_presets, network_preset, ExperimentConfig,
+    NetworkPreset, NetworkStagePreset,
 };
 use convoffload::conv::ConvLayer;
 use convoffload::optimizer::{OptimizeOptions, Optimizer};
 use convoffload::planner::{
-    format_plan_table, plan_to_json, AcceleratorSpec, NetworkPlanner, PlanOptions,
-    StrategyCache,
+    batch_to_json, format_batch_table, format_plan_table, plan_to_json, AcceleratorSpec,
+    BatchPlanner, NetworkPlanner, PlanOptions, ShardedStrategyCache, StrategyCache,
 };
 use convoffload::platform::{Accelerator, OverlapMode, Platform};
 use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
@@ -38,6 +42,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(rest),
         "optimize" => cmd_optimize(rest),
         "plan-network" => cmd_plan_network(rest),
+        "plan-batch" => cmd_plan_batch(rest),
         "figures" => cmd_figures(rest),
         "viz" => cmd_viz(rest),
         "e2e" => cmd_e2e(rest),
@@ -65,6 +70,7 @@ fn print_usage() {
          \x20 simulate      run a strategy on a layer and report δ / memory\n\
          \x20 optimize      search for an optimal strategy (§5 problem)\n\
          \x20 plan-network  plan every layer of a network preset (cached portfolio race)\n\
+         \x20 plan-batch    plan several networks at once (dedup + sharded strategy cache)\n\
          \x20 figures       regenerate the paper's Figures 11/12/13 under figures/\n\
          \x20 viz           render a strategy step by step (ascii/svg)\n\
          \x20 e2e           functional end-to-end run (PJRT or rust oracle)\n\
@@ -290,6 +296,108 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+// ---------------------------------------------------------------- plan-batch
+
+/// Resolve one `plan-batch` request: a network preset name, or a path to a
+/// single-layer TOML experiment file (wrapped as a one-stage network — the
+/// geometry comes from the file; the platform derivation stays batch-wide so
+/// every request shares one cache-key convention).
+fn batch_request(arg: &str) -> Result<NetworkPreset, String> {
+    if arg.ends_with(".toml") {
+        let text = std::fs::read_to_string(arg).map_err(|e| format!("{arg}: {e}"))?;
+        let cfg = ExperimentConfig::from_toml(&text)?;
+        let stem = std::path::Path::new(arg)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| arg.to_string());
+        return Ok(NetworkPreset {
+            name: stem,
+            description: format!("single-layer TOML experiment ({arg})"),
+            stages: vec![NetworkStagePreset {
+                name: "conv".into(),
+                layer: cfg.layer,
+                pool_after: false,
+                pad_after: 0,
+            }],
+        });
+    }
+    network_preset(arg).ok_or_else(|| {
+        format!("unknown network '{arg}' (preset name or a .toml file; see `convoffload presets`)")
+    })
+}
+
+fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
+    let specs = vec![
+        FlagSpec { name: "group", help: "per-layer group size bound (batch-wide)", takes_value: true, default: Some("4") },
+        FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
+        FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
+        FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
+        FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered", takes_value: true, default: Some("sequential") },
+        FlagSpec { name: "threads", help: "worker threads shared by the whole batch (0 = auto)", takes_value: true, default: Some("0") },
+        FlagSpec { name: "cache-dir", help: "sharded strategy cache directory", takes_value: true, default: Some(".strategy-cache-sharded") },
+        FlagSpec { name: "shards", help: "lock stripes / shard files (existing dirs keep their count)", takes_value: true, default: Some("16") },
+        FlagSpec { name: "no-cache", help: "disable persistence (cross-network dedup still applies)", takes_value: false, default: None },
+        FlagSpec { name: "json", help: "emit the batch report as JSON instead of tables", takes_value: false, default: None },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = cli::parse(argv, &specs)?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            cli::help(
+                "plan-batch <network|file.toml>...",
+                "plan several networks in one call: cross-network dedup, one shared race pool, sharded persistent cache",
+                &specs
+            )
+        );
+        println!("networks:");
+        for p in list_network_presets() {
+            println!("  {:<14} {} ({} stages)", p.name, p.description, p.stages.len());
+        }
+        return if args.get_bool("help") {
+            Ok(())
+        } else {
+            Err("missing requests (e.g. `plan-batch lenet5 lenet5 resnet8`)".into())
+        };
+    }
+    let presets = args
+        .positional
+        .iter()
+        .map(|a| batch_request(a))
+        .collect::<Result<Vec<_>, _>>()?;
+    let options = PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(
+            args.get_usize("group")?.unwrap_or(4).max(1),
+        ),
+        seed: args.get_u64("seed")?.unwrap_or(2026),
+        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000),
+        anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
+        threads: args.get_usize("threads")?.unwrap_or(0),
+        overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
+    };
+    let planner = if args.get_bool("no-cache") {
+        BatchPlanner::new(options)
+    } else {
+        let dir = std::path::Path::new(args.get("cache-dir").unwrap());
+        let shards = args.get_usize("shards")?.unwrap_or(16).max(1);
+        BatchPlanner::with_cache(
+            options,
+            ShardedStrategyCache::open_with(
+                dir,
+                shards,
+                convoffload::planner::DEFAULT_SHARD_CAPACITY,
+            )?,
+        )
+    };
+    let report = planner.plan_batch(&presets)?;
+    if args.get_bool("json") {
+        println!("{}", batch_to_json(&report).to_string_pretty());
+    } else {
+        print!("{}", format_batch_table(&report));
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------- figures
 
 fn cmd_figures(argv: &[String]) -> Result<(), String> {
@@ -452,7 +560,7 @@ fn cmd_presets() -> Result<(), String> {
     }
     println!("\nnetworks (for `plan-network`):");
     for p in list_network_presets() {
-        let stages: Vec<&str> = p.stages.iter().map(|s| s.name).collect();
+        let stages: Vec<&str> = p.stages.iter().map(|s| s.name.as_str()).collect();
         println!("  {:<16} {}  [{}]", p.name, stages.join(" -> "), p.description);
     }
     Ok(())

@@ -1,0 +1,119 @@
+//! Shared atomic counters for the planning service surfaces.
+//!
+//! The sharded strategy cache and the batch planner account their traffic
+//! here so every surface — the `plan-batch` CLI table, `BatchReport` JSON,
+//! and future service endpoints — reads one set of numbers. Counters are
+//! plain relaxed `AtomicU64`s: they are monotonic tallies, never used for
+//! synchronization, so relaxed ordering is sufficient and keeps the cache
+//! hot path free of fences.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Live hit/miss/eviction tallies of one strategy-cache instance.
+///
+/// Shared across planner threads behind an `Arc`; snapshot with
+/// [`CacheCounters::snapshot`] for reporting.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    /// Lookups answered from a shard's entry map.
+    pub hits: AtomicU64,
+    /// Lookups that found no (valid) entry.
+    pub misses: AtomicU64,
+    /// Entries dropped because a shard exceeded its capacity.
+    pub evictions: AtomicU64,
+    /// Shard files that failed to load and were treated as empty.
+    pub corrupt_shards: AtomicU64,
+}
+
+impl CacheCounters {
+    /// A fresh zeroed counter set.
+    pub fn new() -> Self {
+        CacheCounters::default()
+    }
+
+    /// Consistent-enough point-in-time copy for reports (individual loads
+    /// are relaxed; the counters are independent tallies).
+    pub fn snapshot(&self) -> CacheCounterSnapshot {
+        CacheCounterSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            corrupt_shards: self.corrupt_shards.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`CacheCounters`], embedded in batch reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheCounterSnapshot {
+    /// Lookups answered from a shard's entry map.
+    pub hits: u64,
+    /// Lookups that found no (valid) entry.
+    pub misses: u64,
+    /// Entries dropped because a shard exceeded its capacity.
+    pub evictions: u64,
+    /// Shard files that failed to load and were treated as empty.
+    pub corrupt_shards: u64,
+}
+
+impl CacheCounterSnapshot {
+    /// JSON form (canonical field order) for `BatchReport` / bench exports.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("evictions", self.evictions)
+            .set("corrupt_shards", self.corrupt_shards);
+        o
+    }
+
+    /// One-line human form for CLI summaries.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "cache counters: {} hits / {} misses / {} evictions / {} corrupt shards",
+            self.hits, self.misses, self.evictions, self.corrupt_shards
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_increments() {
+        let c = CacheCounters::new();
+        c.hits.fetch_add(3, Ordering::Relaxed);
+        c.misses.fetch_add(2, Ordering::Relaxed);
+        c.evictions.fetch_add(1, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.evictions, s.corrupt_shards), (3, 2, 1, 0));
+    }
+
+    #[test]
+    fn json_and_summary_forms() {
+        let s = CacheCounterSnapshot { hits: 7, misses: 1, evictions: 0, corrupt_shards: 2 };
+        let j = s.to_json();
+        assert_eq!(j.get("hits").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("corrupt_shards").unwrap().as_u64(), Some(2));
+        assert!(s.summary_line().contains("7 hits / 1 misses"));
+    }
+
+    #[test]
+    fn concurrent_increments_are_lossless() {
+        let c = std::sync::Arc::new(CacheCounters::new());
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let c = std::sync::Arc::clone(&c);
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot().hits, 8_000);
+    }
+}

@@ -5,6 +5,14 @@
 //! VMEM footprint of one grid step, MXU-tile utilization of the GEMM shape,
 //! and the arithmetic-intensity/roofline ratio. These numbers feed
 //! EXPERIMENTS.md §Perf and the `convoffload perf` CLI.
+//!
+//! The [`counters`] submodule holds the service-side observability pieces:
+//! the atomic hit/miss/eviction tallies the sharded strategy cache and the
+//! batch planner report through (`plan-batch`, `BatchReport`).
+
+pub mod counters;
+
+pub use counters::{CacheCounterSnapshot, CacheCounters};
 
 use crate::conv::ConvLayer;
 

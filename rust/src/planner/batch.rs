@@ -1,0 +1,627 @@
+//! Concurrent multi-network planning — `plan-batch` / [`BatchPlanner`].
+//!
+//! A planning service receives many networks at once (a compiler planning a
+//! model zoo, CI re-planning every preset). Planning them one
+//! [`NetworkPlanner::plan`](super::NetworkPlanner::plan) call at a time
+//! wastes work twice over: identical planning problems recur *across*
+//! networks (two LeNets share every shape; ResNet-8's twin 3×3 blocks share
+//! one), and each call spins its own worker pool while the others idle.
+//!
+//! This module fixes both. [`BatchPlanner::plan_batch`] canonicalizes every
+//! stage of every request to its [`CacheKey`] — (geometry, platform,
+//! overlap-mode) — **dedupes identical problems across the whole batch
+//! before any search**, consults the backing [`StrategyStore`] once per
+//! unique problem, and races the entire residual portfolio set on **one**
+//! shared pool ([`pool::parallel_map`]'s scoped threads pull (problem, lane)
+//! pairs off a single atomic work cursor, so workers that finish one
+//! network's lanes immediately steal the next network's). Determinism is
+//! inherited from the per-layer race: lanes are pure and the reduction is by
+//! `(objective, lane index)`, never completion order, so a batch plans
+//! bit-identically under any thread schedule — and identically to planning
+//! each network alone with the same options.
+//!
+//! The single-network planner is a thin wrapper over the same machinery
+//! ([`stage_contexts`] → [`resolve`] → [`assemble_network`]), so the two
+//! paths cannot drift.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::NetworkPreset;
+use crate::conv::ConvLayer;
+use crate::metrics::CacheCounterSnapshot;
+use crate::optimizer::{grouping_loads, grouping_makespan};
+use crate::platform::{Accelerator, OverlapMode};
+use crate::sim::{Network, Stage};
+use crate::util::pool;
+
+use super::cache::{CacheKey, CachedStrategy, StrategyStore};
+use super::portfolio::{portfolio_entries, run_entry};
+use super::shard::ShardedStrategyCache;
+use super::{LayerPlan, NetworkPlan, PlanOptions};
+
+/// Everything the resolver needs to know about one stage of one request:
+/// its place in the batch plus the canonical planning problem it poses.
+#[derive(Debug, Clone)]
+pub(crate) struct StageCtx {
+    /// Index of the request (network) within the batch.
+    pub net: usize,
+    /// Index of the stage within its network.
+    pub stage: usize,
+    /// The accelerator the stage runs on (overlap mode applied).
+    pub acc: Accelerator,
+    /// Group-size bound `nb_patches_max_S1` for the race.
+    pub group: usize,
+    /// Steps bound for the race.
+    pub k: usize,
+    /// Canonical (geometry, platform, overlap, portfolio-config) key.
+    pub key: CacheKey,
+}
+
+/// Derive the per-layer accelerator and group bound from the options (the
+/// single source shared by the single-network and batch paths).
+pub(crate) fn stage_accelerator(
+    o: &PlanOptions,
+    layer: &ConvLayer,
+) -> (Accelerator, usize) {
+    let (acc, group) = match o.accelerator {
+        super::AcceleratorSpec::PerLayerGroup(g) => {
+            let g = g.max(1);
+            (Accelerator::for_group_size(layer, g), g)
+        }
+        super::AcceleratorSpec::Fixed(acc) => {
+            (acc, acc.max_patches_per_step(layer).max(1))
+        }
+    };
+    (acc.with_overlap(o.overlap), group)
+}
+
+/// Canonicalize every stage of every request into a flat, batch-ordered
+/// context list.
+pub(crate) fn stage_contexts(
+    o: &PlanOptions,
+    presets: &[&NetworkPreset],
+) -> Vec<StageCtx> {
+    let mut ctxs = Vec::new();
+    for (net, preset) in presets.iter().enumerate() {
+        for (stage, s) in preset.stages.iter().enumerate() {
+            let (acc, group) = stage_accelerator(o, &s.layer);
+            let k = acc.k_min(&s.layer);
+            let key = CacheKey::new(
+                &s.layer,
+                &acc,
+                group,
+                k,
+                o.seed,
+                o.anneal_iters,
+                o.anneal_starts,
+            );
+            ctxs.push(StageCtx { net, stage, acc, group, k, key });
+        }
+    }
+    ctxs
+}
+
+/// The outcome of resolving a batch's planning problems.
+#[derive(Debug)]
+pub(crate) struct Resolution {
+    /// Canonical key → planning result, covering every stage in the batch.
+    pub resolved: BTreeMap<String, CachedStrategy>,
+    /// Context indices that represented a fresh race (the first occurrence
+    /// of a key that the store could not serve).
+    pub raced: BTreeSet<usize>,
+    /// Unique problems served by the persistent store (validated hits).
+    pub store_hits: usize,
+    /// Stages whose problem was already planned (or queued) earlier in the
+    /// batch — intra-batch deduplication, any network.
+    pub dedup_hits: usize,
+    /// The subset of `dedup_hits` whose first occurrence was in a
+    /// *different* network of the batch.
+    pub cross_network_dedup_hits: usize,
+    /// Annealing iterations executed, attributed to the network whose stage
+    /// represented the race.
+    pub anneal_per_net: Vec<u64>,
+}
+
+/// Resolve every distinct planning problem in the batch: dedupe by canonical
+/// key across all requests, consult the store once per unique problem, then
+/// race the residual (problem × portfolio-lane) set on one shared pool.
+pub(crate) fn resolve(
+    presets: &[&NetworkPreset],
+    ctxs: &[StageCtx],
+    o: &PlanOptions,
+    store: Option<&dyn StrategyStore>,
+) -> Result<Resolution, String> {
+    let mut resolved: BTreeMap<String, CachedStrategy> = BTreeMap::new();
+    let mut jobs: Vec<usize> = Vec::new(); // ctx index of each racing representative
+    let mut first_net: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut store_hits = 0usize;
+    let mut dedup_hits = 0usize;
+    let mut cross_network_dedup_hits = 0usize;
+
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if let Some(&net0) = first_net.get(ctx.key.canonical()) {
+            // Problem already planned (or queued) this batch.
+            dedup_hits += 1;
+            if net0 != ctx.net {
+                cross_network_dedup_hits += 1;
+            }
+            continue;
+        }
+        first_net.insert(ctx.key.canonical(), ctx.net);
+        if let Some(store) = store {
+            // A hit must survive structural validation against the layer it
+            // will drive, and its stored objectives must match the
+            // recomputed ones (cheap next to a race); anything stale
+            // re-races and overwrites.
+            let layer = &presets[ctx.net].stages[ctx.stage].layer;
+            if let Some(hit) = store.load(&ctx.key).filter(|h| {
+                h.validate_for(layer, ctx.group)
+                    && h.loaded_pixels == grouping_loads(layer, &h.strategy.groups)
+                    && (o.overlap == OverlapMode::Sequential
+                        || h.makespan
+                            == Some(grouping_makespan(layer, &ctx.acc, &h.strategy.groups)))
+            }) {
+                resolved.insert(ctx.key.canonical().to_string(), hit);
+                store_hits += 1;
+                continue;
+            }
+        }
+        jobs.push(ci);
+    }
+
+    // The shared race: every (unique problem, lane) pair across the whole
+    // batch goes onto one work list served by one scoped-thread pool —
+    // workers drain an atomic cursor, so a thread finishing one network's
+    // lanes immediately picks up the next network's. Results come back in
+    // work-list order, so the reduction below is independent of scheduling.
+    let entries = portfolio_entries(o.seed, o.anneal_iters, o.anneal_starts);
+    let mut anneal_per_net = vec![0u64; presets.len()];
+    if !jobs.is_empty() {
+        let work: Vec<(usize, usize)> = jobs
+            .iter()
+            .flat_map(|&ci| (0..entries.len()).map(move |ei| (ci, ei)))
+            .collect();
+        let threads = if o.threads == 0 { pool::default_threads() } else { o.threads };
+        let results = pool::parallel_map(&work, threads, |&(ci, ei)| {
+            let ctx = &ctxs[ci];
+            run_entry(
+                &presets[ctx.net].stages[ctx.stage].layer,
+                &ctx.acc,
+                ctx.group,
+                ctx.k,
+                &entries[ei],
+            )
+        });
+
+        for (ji, &ci) in jobs.iter().enumerate() {
+            let ctx = &ctxs[ci];
+            let lanes = &results[ji * entries.len()..(ji + 1) * entries.len()];
+            // Deterministic reduction: strictly-less keeps the earliest lane
+            // on ties. Sequential mode races loaded pixels; double-buffered
+            // races the overlapped makespan with loaded pixels as tie-break.
+            let mut best = &lanes[0];
+            for lane in &lanes[1..] {
+                let better = match o.overlap {
+                    OverlapMode::Sequential => lane.loaded_pixels < best.loaded_pixels,
+                    OverlapMode::DoubleBuffered => {
+                        (lane.makespan, lane.loaded_pixels)
+                            < (best.makespan, best.loaded_pixels)
+                    }
+                };
+                if better {
+                    best = lane;
+                }
+            }
+            anneal_per_net[ctx.net] +=
+                lanes.iter().map(|l| l.anneal_iters).sum::<u64>();
+            let entry = CachedStrategy {
+                strategy: best.strategy.clone(),
+                loaded_pixels: best.loaded_pixels,
+                makespan: best.makespan,
+                winner: best.label.clone(),
+            };
+            if let Some(store) = store {
+                store.store(&ctx.key, &entry)?;
+            }
+            resolved.insert(ctx.key.canonical().to_string(), entry);
+        }
+    }
+
+    Ok(Resolution {
+        resolved,
+        raced: jobs.into_iter().collect(),
+        store_hits,
+        dedup_hits,
+        cross_network_dedup_hits,
+        anneal_per_net,
+    })
+}
+
+/// Assemble one network's plan from the batch resolution: push every stage
+/// into the simulator, mark hit/miss provenance, and fill simulated
+/// durations.
+///
+/// A stage counts as a cache **miss** exactly when it was the racing
+/// representative of its problem; dedup'd repeats and store hits both count
+/// as hits — identical to the single-network planner's historical
+/// semantics.
+pub(crate) fn assemble_network(
+    preset: &NetworkPreset,
+    net: usize,
+    ctxs: &[StageCtx],
+    res: &Resolution,
+    overlap: OverlapMode,
+) -> Result<NetworkPlan, String> {
+    let mut network = Network::default();
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(preset.stages.len());
+    let mut cache_hits = 0usize;
+    let mut cache_misses = 0usize;
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if ctx.net != net {
+            continue;
+        }
+        let sp = &preset.stages[ctx.stage];
+        let entry = res
+            .resolved
+            .get(ctx.key.canonical())
+            .expect("every stage key resolved");
+        let hit = !res.raced.contains(&ci);
+        if hit {
+            cache_hits += 1;
+        } else {
+            cache_misses += 1;
+        }
+        network.push(Stage {
+            name: sp.name.to_string(),
+            layer: sp.layer,
+            accelerator: ctx.acc,
+            strategy: entry.strategy.clone(),
+            pool_after: sp.pool_after,
+            pad_after: sp.pad_after,
+        })?;
+        layers.push(LayerPlan {
+            stage: sp.name.to_string(),
+            layer: sp.layer,
+            accelerator: ctx.acc,
+            group_size: ctx.group,
+            strategy: entry.strategy.clone(),
+            winner: entry.winner.clone(),
+            loaded_pixels: entry.loaded_pixels,
+            duration: 0, // filled from the simulation below
+            sequential_duration: 0,
+            cache_hit: hit,
+        });
+    }
+    let report = network.run().map_err(|e| e.to_string())?;
+    for (lp, sr) in layers.iter_mut().zip(&report.per_stage) {
+        lp.duration = sr.duration;
+        lp.sequential_duration = sr.sequential_duration;
+    }
+    Ok(NetworkPlan {
+        network: preset.name.to_string(),
+        layers,
+        total_duration: report.total_duration,
+        total_sequential_duration: report.total_sequential_duration,
+        overlap,
+        peak_occupancy: report.peak_occupancy,
+        cache_hits,
+        cache_misses,
+        anneal_iters_run: res.anneal_per_net[net],
+    })
+}
+
+/// Batch-level accounting surfaced by `plan-batch` and the bench suite.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests (networks) in the batch.
+    pub networks: usize,
+    /// Stages across all requests.
+    pub stages_total: usize,
+    /// Distinct planning problems after cross-network deduplication.
+    pub unique_problems: usize,
+    /// Stages whose problem was already planned (or queued) earlier in the
+    /// batch — any network.
+    pub dedup_hits: usize,
+    /// The subset of `dedup_hits` first seen in a *different* network.
+    pub cross_network_dedup_hits: usize,
+    /// Unique problems served by the persistent store (validated hits).
+    pub store_hits: usize,
+    /// Unique problems that required a fresh portfolio race.
+    pub store_misses: usize,
+    /// Annealing iterations executed across the whole batch — 0 when every
+    /// problem came from the store.
+    pub anneal_iters_run: u64,
+    /// Raw counters of the backing sharded cache (zeros when the planner
+    /// runs without persistence).
+    pub cache: CacheCounterSnapshot,
+    /// Shard count of the backing cache (0 without persistence).
+    pub shard_count: usize,
+}
+
+/// The result of one batch: per-request plans (input order) plus the
+/// batch-level accounting.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// One plan per request, in input order.
+    pub plans: Vec<NetworkPlan>,
+    /// Batch-level dedup / cache / effort accounting.
+    pub stats: BatchStats,
+}
+
+/// The batch planning facade: [`NetworkPlanner`](super::NetworkPlanner) for
+/// many networks at once, with cross-network deduplication and a shared
+/// race pool, optionally backed by a [`ShardedStrategyCache`].
+#[derive(Debug, Clone)]
+pub struct BatchPlanner {
+    /// Planner configuration shared by every request in a batch (the
+    /// overlap mode and portfolio budgets are part of every cache key).
+    pub options: PlanOptions,
+    cache: Option<ShardedStrategyCache>,
+}
+
+impl BatchPlanner {
+    /// Batch planner without persistence (cross-network dedup still works;
+    /// every unique problem races once per call).
+    pub fn new(options: PlanOptions) -> Self {
+        BatchPlanner { options, cache: None }
+    }
+
+    /// Batch planner backed by a sharded on-disk strategy cache.
+    pub fn with_cache(options: PlanOptions, cache: ShardedStrategyCache) -> Self {
+        BatchPlanner { options, cache: Some(cache) }
+    }
+
+    /// The backing sharded cache, if any.
+    pub fn cache(&self) -> Option<&ShardedStrategyCache> {
+        self.cache.as_ref()
+    }
+
+    /// Plan every network of the batch.
+    ///
+    /// Identical problems are planned **once** for the whole batch; the
+    /// plans are bit-identical to planning each network alone with the same
+    /// options (determinism is by construction: pure lanes, order-fixed
+    /// reduction).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use convoffload::config::network_preset;
+    /// use convoffload::planner::{BatchPlanner, PlanOptions};
+    ///
+    /// let lenet = network_preset("lenet5").unwrap();
+    /// let planner = BatchPlanner::new(PlanOptions {
+    ///     anneal_iters: 200, // tiny budget: doc-test speed
+    ///     anneal_starts: 1,
+    ///     ..PlanOptions::default()
+    /// });
+    /// let report = planner.plan_batch(&[lenet.clone(), lenet]).unwrap();
+    /// assert_eq!(report.plans.len(), 2);
+    /// // the twin network re-used every shape of the first
+    /// assert_eq!(report.stats.unique_problems, 2);
+    /// assert_eq!(report.stats.cross_network_dedup_hits, 2);
+    /// ```
+    pub fn plan_batch(&self, presets: &[NetworkPreset]) -> Result<BatchReport, String> {
+        let o = &self.options;
+        let refs: Vec<&NetworkPreset> = presets.iter().collect();
+        let ctxs = stage_contexts(o, &refs);
+        let store = self.cache.as_ref().map(|c| c as &dyn StrategyStore);
+        let res = resolve(&refs, &ctxs, o, store)?;
+
+        let mut plans = Vec::with_capacity(presets.len());
+        for (net, preset) in presets.iter().enumerate() {
+            plans.push(assemble_network(preset, net, &ctxs, &res, o.overlap)?);
+        }
+        let unique_problems = ctxs.len() - res.dedup_hits;
+        let stats = BatchStats {
+            networks: presets.len(),
+            stages_total: ctxs.len(),
+            unique_problems,
+            dedup_hits: res.dedup_hits,
+            cross_network_dedup_hits: res.cross_network_dedup_hits,
+            store_hits: res.store_hits,
+            store_misses: res.raced.len(),
+            anneal_iters_run: res.anneal_per_net.iter().sum(),
+            cache: self
+                .cache
+                .as_ref()
+                .map(|c| c.stats())
+                .unwrap_or_default(),
+            shard_count: self.cache.as_ref().map_or(0, |c| c.shard_count()),
+        };
+        Ok(BatchReport { plans, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkStagePreset;
+    use crate::planner::{AcceleratorSpec, NetworkPlanner};
+
+    fn tiny(name: &str) -> NetworkPreset {
+        NetworkPreset {
+            name: name.to_string(),
+            description: "1x8x8 conv -> pool -> 2x3x3 conv".into(),
+            stages: vec![
+                NetworkStagePreset {
+                    name: "c1".into(),
+                    layer: ConvLayer::new(1, 8, 8, 3, 3, 2, 1, 1).unwrap(),
+                    pool_after: true,
+                    pad_after: 0,
+                },
+                NetworkStagePreset {
+                    name: "c2".into(),
+                    layer: ConvLayer::new(2, 3, 3, 3, 3, 1, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+            ],
+        }
+    }
+
+    fn other() -> NetworkPreset {
+        NetworkPreset {
+            name: "other".into(),
+            description: "one distinct stage".into(),
+            stages: vec![NetworkStagePreset {
+                name: "c1".into(),
+                layer: ConvLayer::new(1, 6, 6, 3, 3, 1, 1, 1).unwrap(),
+                pool_after: false,
+                pad_after: 0,
+            }],
+        }
+    }
+
+    fn quick_options() -> PlanOptions {
+        PlanOptions {
+            accelerator: AcceleratorSpec::PerLayerGroup(2),
+            seed: 7,
+            anneal_iters: 1_000,
+            anneal_starts: 2,
+            threads: 0,
+            overlap: OverlapMode::Sequential,
+        }
+    }
+
+    /// The batch plans match planning each network alone with the same
+    /// options — the batch machinery changes scheduling, never results.
+    #[test]
+    fn batch_matches_solo_plans() {
+        let nets = [tiny("a"), other()];
+        let report = BatchPlanner::new(quick_options())
+            .plan_batch(&nets)
+            .unwrap();
+        for (preset, plan) in nets.iter().zip(&report.plans) {
+            let solo = NetworkPlanner::new(quick_options()).plan(preset).unwrap();
+            assert_eq!(plan.total_duration, solo.total_duration, "{}", preset.name);
+            assert_eq!(plan.network, solo.network);
+            for (a, b) in plan.layers.iter().zip(&solo.layers) {
+                assert_eq!(a.strategy, b.strategy);
+                assert_eq!(a.winner, b.winner);
+                assert_eq!(a.loaded_pixels, b.loaded_pixels);
+                assert_eq!(a.duration, b.duration);
+            }
+        }
+    }
+
+    /// Twin networks dedupe across the batch: every shape of the second is
+    /// a cross-network dedup hit and races zero extra iterations.
+    #[test]
+    fn twin_networks_dedupe_across_the_batch() {
+        let report = BatchPlanner::new(quick_options())
+            .plan_batch(&[tiny("a"), tiny("b")])
+            .unwrap();
+        let s = &report.stats;
+        assert_eq!(s.networks, 2);
+        assert_eq!(s.stages_total, 4);
+        assert_eq!(s.unique_problems, 2);
+        assert_eq!(s.dedup_hits, 2);
+        assert_eq!(s.cross_network_dedup_hits, 2);
+        assert_eq!(s.store_misses, 2, "no persistence: every unique problem races");
+        assert_eq!(s.store_hits, 0);
+        // the first network raced, the twin rode the results
+        assert_eq!(report.plans[0].cache_misses, 2);
+        assert_eq!(report.plans[1].cache_hits, 2);
+        assert_eq!(report.plans[1].anneal_iters_run, 0);
+        assert_eq!(
+            report.plans[0].total_duration,
+            report.plans[1].total_duration
+        );
+    }
+
+    /// Batch determinism: same options, any thread count, same everything.
+    #[test]
+    fn same_seed_same_batch_any_thread_count() {
+        let nets = [tiny("a"), other(), tiny("c")];
+        let mut opts = quick_options();
+        let base = BatchPlanner::new(opts.clone()).plan_batch(&nets).unwrap();
+        for threads in [1usize, 2, 8] {
+            opts.threads = threads;
+            let again = BatchPlanner::new(opts.clone()).plan_batch(&nets).unwrap();
+            assert_eq!(again.stats, base.stats, "threads={threads}");
+            for (a, b) in base.plans.iter().zip(&again.plans) {
+                assert_eq!(a.total_duration, b.total_duration, "threads={threads}");
+                for (la, lb) in a.layers.iter().zip(&b.layers) {
+                    assert_eq!(la.strategy, lb.strategy, "threads={threads}");
+                    assert_eq!(la.winner, lb.winner);
+                }
+            }
+        }
+    }
+
+    /// Warm path: a second identical batch over the same sharded cache is
+    /// all store hits and performs zero annealing iterations.
+    #[test]
+    fn second_identical_batch_runs_zero_anneal_iterations() {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-batch-warm-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nets = [tiny("a"), tiny("b"), other()];
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let planner = BatchPlanner::with_cache(quick_options(), cache);
+
+        let cold = planner.plan_batch(&nets).unwrap();
+        assert_eq!(cold.stats.unique_problems, 3);
+        assert_eq!(cold.stats.store_misses, 3);
+        assert_eq!(cold.stats.store_hits, 0);
+        assert!(cold.stats.anneal_iters_run > 0);
+        assert_eq!(cold.stats.shard_count, super::super::shard::DEFAULT_SHARDS);
+
+        let warm = planner.plan_batch(&nets).unwrap();
+        assert_eq!(warm.stats.store_hits, 3, "all unique problems served warm");
+        assert_eq!(warm.stats.store_misses, 0);
+        assert_eq!(warm.stats.anneal_iters_run, 0, "warm batch must not anneal");
+        for plan in &warm.plans {
+            assert_eq!(plan.cache_misses, 0);
+            assert_eq!(plan.anneal_iters_run, 0);
+        }
+        // and the results did not drift
+        for (a, b) in cold.plans.iter().zip(&warm.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+        }
+        // cache counters flowed into the stats (≥ 3 hits from the warm pass)
+        assert!(warm.stats.cache.hits >= 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Overlap modes stay isolated under batch planning: a sequential batch
+    /// then a double-buffered batch over one cache directory never serve
+    /// each other's entries.
+    #[test]
+    fn batch_overlap_modes_do_not_share_entries() {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-batch-modes-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nets = [tiny("a"), other()];
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let seq = BatchPlanner::with_cache(quick_options(), cache.clone())
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(seq.stats.store_misses, 3);
+        let mut opts = quick_options();
+        opts.overlap = OverlapMode::DoubleBuffered;
+        let db = BatchPlanner::with_cache(opts, cache)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(db.stats.store_misses, 3, "other mode must not hit");
+        assert_eq!(db.stats.store_hits, 0);
+        for plan in &db.plans {
+            assert!(plan.total_duration <= plan.total_sequential_duration);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An empty batch is a valid no-op, not an error.
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let report = BatchPlanner::new(quick_options()).plan_batch(&[]).unwrap();
+        assert!(report.plans.is_empty());
+        assert_eq!(report.stats.stages_total, 0);
+        assert_eq!(report.stats.unique_problems, 0);
+    }
+}

@@ -19,8 +19,25 @@ use std::path::{Path, PathBuf};
 use crate::conv::{ConvLayer, PatchId};
 use crate::platform::{Accelerator, OverlapMode};
 use crate::strategy::{self, GroupedStrategy};
+use crate::util::fsio::atomic_write;
 use crate::util::hash::fnv1a64_hex;
 use crate::util::json::{self, Json};
+
+/// The persistence interface the planner races against: both the one-file-
+/// per-key [`StrategyCache`] and the sharded
+/// [`crate::planner::ShardedStrategyCache`] implement it, so the batch
+/// resolution machinery is backend-agnostic.
+///
+/// Implementations must treat any malformed, truncated or mismatched stored
+/// state as a miss — never an error, never a panic — because the planner
+/// re-races misses and overwrites; a poisoned store would otherwise take the
+/// whole service down over one bad file.
+pub trait StrategyStore {
+    /// Look up a key; `None` for both "absent" and "unreadable".
+    fn load(&self, key: &CacheKey) -> Option<CachedStrategy>;
+    /// Persist a planning result under its key (overwrites).
+    fn store(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String>;
+}
 
 /// Canonical description of one planning problem.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -143,32 +160,61 @@ impl StrategyCache {
     pub fn get(&self, key: &CacheKey) -> Option<CachedStrategy> {
         let text = std::fs::read_to_string(self.dir.join(key.filename())).ok()?;
         let v = json::parse(&text).ok()?;
-        if v.get("key").and_then(Json::as_str) != Some(key.canonical()) {
+        let (stored_key, entry) = entry_from_json(&v)?;
+        if stored_key != key.canonical() {
             return None;
         }
-        let winner = v.get("winner").and_then(Json::as_str)?.to_string();
-        let loaded_pixels = v.get("loaded_pixels").and_then(Json::as_u64)?;
-        let makespan = v.get("makespan").and_then(Json::as_u64);
-        let strategy = strategy::strategy_from_json_value(v.get("strategy")?).ok()?;
-        Some(CachedStrategy { strategy, loaded_pixels, makespan, winner })
+        Some(entry)
     }
 
-    /// Store a planning result under its key (overwrites).
+    /// Store a planning result under its key (overwrites). The write goes
+    /// through temp-file + atomic rename ([`atomic_write`]): a crash
+    /// mid-write leaves the previous complete file, never a truncated one.
     pub fn put(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
-        let strategy_json = json::parse(&strategy::strategy_to_json(&entry.strategy))
-            .map_err(|e| format!("serialize strategy: {e}"))?;
-        let mut o = Json::obj();
-        o.set("key", key.canonical())
-            .set("winner", entry.winner.as_str())
-            .set("loaded_pixels", entry.loaded_pixels)
-            .set("strategy", strategy_json);
-        if let Some(m) = entry.makespan {
-            o.set("makespan", m);
-        }
-        let path = self.dir.join(key.filename());
-        std::fs::write(&path, o.to_string_pretty())
-            .map_err(|e| format!("write {}: {e}", path.display()))
+        let o = entry_to_json(key.canonical(), entry)?;
+        atomic_write(&self.dir.join(key.filename()), &o.to_string_pretty())
     }
+}
+
+impl StrategyStore for StrategyCache {
+    fn load(&self, key: &CacheKey) -> Option<CachedStrategy> {
+        self.get(key)
+    }
+
+    fn store(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
+        self.put(key, entry)
+    }
+}
+
+/// Serialize one cache entry (the canonical key travels inside the record so
+/// every reader can verify it). Shared by the per-key files here and the
+/// sharded cache's entry arrays.
+pub(crate) fn entry_to_json(
+    canonical_key: &str,
+    entry: &CachedStrategy,
+) -> Result<Json, String> {
+    let strategy_json = json::parse(&strategy::strategy_to_json(&entry.strategy))
+        .map_err(|e| format!("serialize strategy: {e}"))?;
+    let mut o = Json::obj();
+    o.set("key", canonical_key)
+        .set("winner", entry.winner.as_str())
+        .set("loaded_pixels", entry.loaded_pixels)
+        .set("strategy", strategy_json);
+    if let Some(m) = entry.makespan {
+        o.set("makespan", m);
+    }
+    Ok(o)
+}
+
+/// Parse one cache entry; `None` on any structural problem (the callers all
+/// degrade to a miss).
+pub(crate) fn entry_from_json(v: &Json) -> Option<(String, CachedStrategy)> {
+    let key = v.get("key").and_then(Json::as_str)?.to_string();
+    let winner = v.get("winner").and_then(Json::as_str)?.to_string();
+    let loaded_pixels = v.get("loaded_pixels").and_then(Json::as_u64)?;
+    let makespan = v.get("makespan").and_then(Json::as_u64);
+    let strategy = strategy::strategy_from_json_value(v.get("strategy")?).ok()?;
+    Some((key, CachedStrategy { strategy, loaded_pixels, makespan, winner }))
 }
 
 #[cfg(test)]
@@ -314,6 +360,40 @@ mod tests {
         let mut short = good.clone();
         short.strategy.groups.pop();
         assert!(!short.validate_for(&l, 2));
+    }
+
+    /// Regression for the in-place-write bug: a partial write (here: a
+    /// truncated file, as a crashed `std::fs::write` would leave) must read
+    /// as a miss, and a subsequent `put` must atomically restore a complete
+    /// entry without leaving temp files behind.
+    #[test]
+    fn partial_write_reads_as_miss_and_put_recovers_atomically() {
+        let dir = tmp_dir("partial");
+        let cache = StrategyCache::open(&dir).unwrap();
+        let (l, key) = sample_key(5);
+        let entry = CachedStrategy {
+            strategy: strategy::zigzag(&l, 2),
+            loaded_pixels: 57,
+            makespan: None,
+            winner: "zigzag".to_string(),
+        };
+        cache.put(&key, &entry).unwrap();
+        // Simulate a crash mid-write of a non-atomic writer: truncate the
+        // entry file to a prefix.
+        let path = dir.join(key.filename());
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(cache.get(&key).is_none(), "truncated entry must be a miss");
+        // Re-planning overwrites through the atomic path and recovers.
+        cache.put(&key, &entry).unwrap();
+        assert_eq!(cache.get(&key), Some(entry));
+        let stray: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp-"))
+            .collect();
+        assert!(stray.is_empty(), "temp residue: {stray:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

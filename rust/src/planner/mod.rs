@@ -6,7 +6,7 @@
 //! [`NetworkPlanner`] finds a strategy for **every** layer and reports the
 //! end-to-end simulated duration through [`crate::sim::Network`].
 //!
-//! Per layer it runs a **portfolio race** ([`portfolio`]): the four §4.2
+//! Per layer it runs a **portfolio race** (`portfolio`): the four §4.2
 //! orderings, the greedy construction and several seeded annealing lanes all
 //! run concurrently (scoped threads via [`crate::util::pool::parallel_map`]),
 //! and the strategy with the fewest loaded pixels wins. The race is
@@ -16,27 +16,34 @@
 //! any thread schedule.
 //!
 //! Results land in a content-addressed [`StrategyCache`] keyed by layer
-//! geometry + accelerator parameters + portfolio configuration ([`cache`]),
+//! geometry + accelerator parameters + portfolio configuration (`cache`),
 //! so repeated planning of shared shapes (within one network, across
 //! networks, or across processes) is free.
+//!
+//! The level above a single network is the `batch` module: a
+//! [`BatchPlanner`] plans many networks in one call, deduplicating identical
+//! planning problems *across* requests before any search and racing the
+//! residual set on one shared pool, optionally backed by the lock-striped,
+//! persistent [`ShardedStrategyCache`] (`shard`). The single-network
+//! planner here is a thin wrapper over the same machinery, so the two paths
+//! cannot drift.
 
+mod batch;
 mod cache;
 mod portfolio;
 mod report;
+mod shard;
 
-pub use cache::{CacheKey, CachedStrategy, StrategyCache};
+pub use batch::{BatchPlanner, BatchReport, BatchStats};
+pub use cache::{CacheKey, CachedStrategy, StrategyCache, StrategyStore};
 pub use portfolio::{portfolio_entries, run_entry, PortfolioEntry, PortfolioResult};
-pub use report::{format_plan_table, plan_to_json};
-
-use std::collections::{BTreeMap, BTreeSet};
+pub use report::{batch_to_json, format_batch_table, format_plan_table, plan_to_json};
+pub use shard::{ShardedStrategyCache, DEFAULT_SHARDS, DEFAULT_SHARD_CAPACITY};
 
 use crate::config::NetworkPreset;
 use crate::conv::ConvLayer;
-use crate::optimizer::{grouping_loads, grouping_makespan};
 use crate::platform::{Accelerator, OverlapMode};
-use crate::sim::{Network, Stage};
 use crate::strategy::GroupedStrategy;
-use crate::util::pool;
 
 /// How per-layer accelerators are derived from the planner's input.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,7 +73,7 @@ pub struct PlanOptions {
     pub anneal_iters: u64,
     /// Number of annealing lanes in the portfolio.
     pub anneal_starts: usize,
-    /// Worker threads for the race (`0` = [`pool::default_threads`]).
+    /// Worker threads for the race (`0` = [`crate::util::pool::default_threads`]).
     pub threads: usize,
     /// Duration semantics every stage accelerator runs under. Sequential
     /// (the default) races loaded pixels and keeps all historical plans
@@ -161,19 +168,6 @@ impl NetworkPlanner {
         NetworkPlanner { options, cache: Some(cache) }
     }
 
-    fn stage_accelerator(&self, layer: &ConvLayer) -> (Accelerator, usize) {
-        let (acc, group) = match self.options.accelerator {
-            AcceleratorSpec::PerLayerGroup(g) => {
-                let g = g.max(1);
-                (Accelerator::for_group_size(layer, g), g)
-            }
-            AcceleratorSpec::Fixed(acc) => {
-                (acc, acc.max_patches_per_step(layer).max(1))
-            }
-        };
-        (acc.with_overlap(self.options.overlap), group)
-    }
-
     /// Plan every layer of `preset` and simulate the planned network.
     ///
     /// # Examples
@@ -194,173 +188,16 @@ impl NetworkPlanner {
     /// assert!(plan.total_duration <= 7100);
     /// ```
     pub fn plan(&self, preset: &NetworkPreset) -> Result<NetworkPlan, String> {
-        let o = &self.options;
-
-        struct StageCtx {
-            acc: Accelerator,
-            group: usize,
-            k: usize,
-            key: CacheKey,
-        }
-        let ctxs: Vec<StageCtx> = preset
-            .stages
-            .iter()
-            .map(|s| {
-                let (acc, group) = self.stage_accelerator(&s.layer);
-                let k = acc.k_min(&s.layer);
-                let key = CacheKey::new(
-                    &s.layer,
-                    &acc,
-                    group,
-                    k,
-                    o.seed,
-                    o.anneal_iters,
-                    o.anneal_starts,
-                );
-                StageCtx { acc, group, k, key }
-            })
-            .collect();
-
-        // Resolve each distinct planning problem: the persistent cache
-        // first, then one portfolio race per remaining key.
-        let mut resolved: BTreeMap<String, CachedStrategy> = BTreeMap::new();
-        let mut jobs: Vec<usize> = Vec::new(); // stage index of first occurrence
-        let mut seen = BTreeSet::new();
-        for (i, ctx) in ctxs.iter().enumerate() {
-            if !seen.insert(ctx.key.canonical().to_string()) {
-                continue; // shape already planned (or queued) this call
-            }
-            if let Some(cache) = &self.cache {
-                // A hit must survive structural validation against the layer
-                // it will drive, and its stored objectives must match the
-                // recomputed ones (cheap next to a race); anything stale
-                // re-races and overwrites.
-                if let Some(hit) = cache.get(&ctx.key).filter(|h| {
-                    let layer = &preset.stages[i].layer;
-                    h.validate_for(layer, ctx.group)
-                        && h.loaded_pixels == grouping_loads(layer, &h.strategy.groups)
-                        && (o.overlap == OverlapMode::Sequential
-                            || h.makespan
-                                == Some(grouping_makespan(
-                                    layer,
-                                    &ctx.acc,
-                                    &h.strategy.groups,
-                                )))
-                }) {
-                    resolved.insert(ctx.key.canonical().to_string(), hit);
-                    continue;
-                }
-            }
-            jobs.push(i);
-        }
-
-        // The race: every (layer, lane) pair runs concurrently; results come
-        // back in work-list order, so the reduction below is independent of
-        // thread scheduling.
-        let entries = portfolio_entries(o.seed, o.anneal_iters, o.anneal_starts);
-        let mut anneal_iters_run = 0u64;
-        if !jobs.is_empty() {
-            let work: Vec<(usize, usize)> = jobs
-                .iter()
-                .flat_map(|&si| (0..entries.len()).map(move |ei| (si, ei)))
-                .collect();
-            let threads = if o.threads == 0 { pool::default_threads() } else { o.threads };
-            let results = pool::parallel_map(&work, threads, |&(si, ei)| {
-                run_entry(
-                    &preset.stages[si].layer,
-                    &ctxs[si].acc,
-                    ctxs[si].group,
-                    ctxs[si].k,
-                    &entries[ei],
-                )
-            });
-
-            for (ji, &si) in jobs.iter().enumerate() {
-                let lanes = &results[ji * entries.len()..(ji + 1) * entries.len()];
-                // Deterministic reduction: strictly-less keeps the earliest
-                // lane on ties. Sequential mode races loaded pixels —
-                // (cost, portfolio-entry index) order, unchanged since PR 1
-                // — while double-buffered mode races the overlapped
-                // makespan with loaded pixels as the tie-break.
-                let mut best = &lanes[0];
-                for lane in &lanes[1..] {
-                    let better = match o.overlap {
-                        OverlapMode::Sequential => lane.loaded_pixels < best.loaded_pixels,
-                        OverlapMode::DoubleBuffered => {
-                            (lane.makespan, lane.loaded_pixels)
-                                < (best.makespan, best.loaded_pixels)
-                        }
-                    };
-                    if better {
-                        best = lane;
-                    }
-                }
-                anneal_iters_run += lanes.iter().map(|l| l.anneal_iters).sum::<u64>();
-                let entry = CachedStrategy {
-                    strategy: best.strategy.clone(),
-                    loaded_pixels: best.loaded_pixels,
-                    makespan: best.makespan,
-                    winner: best.label.clone(),
-                };
-                if let Some(cache) = &self.cache {
-                    cache.put(&ctxs[si].key, &entry)?;
-                }
-                resolved.insert(ctxs[si].key.canonical().to_string(), entry);
-            }
-        }
-
-        // Assemble the network and simulate it end to end.
-        let mut net = Network::default();
-        let mut layers: Vec<LayerPlan> = Vec::with_capacity(preset.stages.len());
-        let mut cache_hits = 0usize;
-        let mut cache_misses = 0usize;
-        for (i, (sp, ctx)) in preset.stages.iter().zip(&ctxs).enumerate() {
-            let entry = resolved
-                .get(ctx.key.canonical())
-                .expect("every stage key resolved");
-            let hit = !jobs.contains(&i);
-            if hit {
-                cache_hits += 1;
-            } else {
-                cache_misses += 1;
-            }
-            net.push(Stage {
-                name: sp.name.to_string(),
-                layer: sp.layer,
-                accelerator: ctx.acc,
-                strategy: entry.strategy.clone(),
-                pool_after: sp.pool_after,
-                pad_after: sp.pad_after,
-            })?;
-            layers.push(LayerPlan {
-                stage: sp.name.to_string(),
-                layer: sp.layer,
-                accelerator: ctx.acc,
-                group_size: ctx.group,
-                strategy: entry.strategy.clone(),
-                winner: entry.winner.clone(),
-                loaded_pixels: entry.loaded_pixels,
-                duration: 0, // filled from the simulation below
-                sequential_duration: 0,
-                cache_hit: hit,
-            });
-        }
-        let report = net.run().map_err(|e| e.to_string())?;
-        for (lp, sr) in layers.iter_mut().zip(&report.per_stage) {
-            lp.duration = sr.duration;
-            lp.sequential_duration = sr.sequential_duration;
-        }
-        Ok(NetworkPlan {
-            network: preset.name.to_string(),
-            layers,
-            total_duration: report.total_duration,
-            total_sequential_duration: report.total_sequential_duration,
-            overlap: o.overlap,
-            peak_occupancy: report.peak_occupancy,
-            cache_hits,
-            cache_misses,
-            anneal_iters_run,
-        })
+        // One-network batch through the shared machinery: canonicalize,
+        // resolve (persistent cache first, then one shared race over the
+        // remaining problems), assemble + simulate. Hit/miss semantics are
+        // the historical ones: a stage is a miss exactly when it was the
+        // racing representative of its problem.
+        let refs = [preset];
+        let ctxs = batch::stage_contexts(&self.options, &refs);
+        let store = self.cache.as_ref().map(|c| c as &dyn StrategyStore);
+        let res = batch::resolve(&refs, &ctxs, &self.options, store)?;
+        batch::assemble_network(preset, 0, &ctxs, &res, self.options.overlap)
     }
 }
 
@@ -374,17 +211,17 @@ mod tests {
     /// tests and the CLI.
     fn tiny_preset() -> NetworkPreset {
         NetworkPreset {
-            name: "tiny",
-            description: "1x8x8 conv -> pool -> 2x3x3 conv",
+            name: "tiny".into(),
+            description: "1x8x8 conv -> pool -> 2x3x3 conv".into(),
             stages: vec![
                 NetworkStagePreset {
-                    name: "c1",
+                    name: "c1".into(),
                     layer: ConvLayer::new(1, 8, 8, 3, 3, 2, 1, 1).unwrap(),
                     pool_after: true,
                     pad_after: 0,
                 },
                 NetworkStagePreset {
-                    name: "c2",
+                    name: "c2".into(),
                     layer: ConvLayer::new(2, 3, 3, 3, 3, 1, 1, 1).unwrap(),
                     pool_after: false,
                     pad_after: 0,
@@ -471,17 +308,17 @@ mod tests {
         // second must ride the first's result even without a disk cache.
         let conv = ConvLayer::new(1, 6, 6, 3, 3, 1, 1, 1).unwrap();
         let preset = NetworkPreset {
-            name: "twins",
-            description: "same-padded twin stages",
+            name: "twins".into(),
+            description: "same-padded twin stages".into(),
             stages: vec![
                 NetworkStagePreset {
-                    name: "a",
+                    name: "a".into(),
                     layer: conv,
                     pool_after: false,
                     pad_after: 1,
                 },
                 NetworkStagePreset {
-                    name: "b",
+                    name: "b".into(),
                     layer: conv,
                     pool_after: false,
                     pad_after: 0,
@@ -571,10 +408,10 @@ mod tests {
             ..PlanOptions::default()
         };
         let preset = NetworkPreset {
-            name: "single",
-            description: "one stage",
+            name: "single".into(),
+            description: "one stage".into(),
             stages: vec![NetworkStagePreset {
-                name: "c1",
+                name: "c1".into(),
                 layer: conv,
                 pool_after: false,
                 pad_after: 0,

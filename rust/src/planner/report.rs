@@ -1,6 +1,7 @@
-//! Plan rendering: the CLI table and a JSON form for tooling.
+//! Plan rendering: the CLI tables and JSON forms for tooling — single
+//! network (`plan-network`) and batch (`plan-batch`).
 
-use crate::planner::{LayerPlan, NetworkPlan};
+use crate::planner::{BatchReport, LayerPlan, NetworkPlan};
 use crate::platform::OverlapMode;
 use crate::util::json::Json;
 
@@ -76,4 +77,93 @@ pub fn plan_to_json(plan: &NetworkPlan) -> Json {
             Json::Arr(plan.layers.iter().map(layer_to_json).collect()),
         );
     o
+}
+
+/// The `plan-batch` output: every per-network table followed by the
+/// batch-level dedup / cache accounting.
+pub fn format_batch_table(report: &BatchReport) -> String {
+    let mut out = String::new();
+    for plan in &report.plans {
+        out.push_str(&format_plan_table(plan));
+        out.push('\n');
+    }
+    let s = &report.stats;
+    out.push_str(&format!(
+        "batch: {} networks, {} stages -> {} unique planning problems\n",
+        s.networks, s.stages_total, s.unique_problems,
+    ));
+    out.push_str(&format!(
+        "dedup: {} hits ({} cross-network)  |  store: {} hits / {} misses\n",
+        s.dedup_hits, s.cross_network_dedup_hits, s.store_hits, s.store_misses,
+    ));
+    out.push_str(&format!(
+        "anneal iterations run: {}\n",
+        s.anneal_iters_run,
+    ));
+    if s.shard_count > 0 {
+        out.push_str(&format!(
+            "{} ({} shards)\n",
+            s.cache.summary_line(),
+            s.shard_count,
+        ));
+    }
+    out
+}
+
+/// Serialize a batch report (plans plus accounting) for tooling and the
+/// bench artifacts.
+pub fn batch_to_json(report: &BatchReport) -> Json {
+    let s = &report.stats;
+    let mut stats = Json::obj();
+    stats
+        .set("networks", s.networks)
+        .set("stages_total", s.stages_total)
+        .set("unique_problems", s.unique_problems)
+        .set("dedup_hits", s.dedup_hits)
+        .set("cross_network_dedup_hits", s.cross_network_dedup_hits)
+        .set("store_hits", s.store_hits)
+        .set("store_misses", s.store_misses)
+        .set("anneal_iters_run", s.anneal_iters_run)
+        .set("shard_count", s.shard_count)
+        .set("cache", s.cache.to_json());
+    let mut o = Json::obj();
+    o.set(
+        "plans",
+        Json::Arr(report.plans.iter().map(plan_to_json).collect()),
+    )
+    .set("stats", stats);
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::network_preset;
+    use crate::planner::{AcceleratorSpec, BatchPlanner, PlanOptions};
+
+    #[test]
+    fn batch_report_renders_both_forms() {
+        let lenet = network_preset("lenet5").unwrap();
+        let report = BatchPlanner::new(PlanOptions {
+            accelerator: AcceleratorSpec::PerLayerGroup(2),
+            anneal_iters: 200,
+            anneal_starts: 1,
+            ..PlanOptions::default()
+        })
+        .plan_batch(&[lenet.clone(), lenet])
+        .unwrap();
+
+        let table = format_batch_table(&report);
+        assert!(table.contains("batch: 2 networks, 4 stages -> 2 unique planning problems"));
+        assert!(table.contains("dedup: 2 hits (2 cross-network)"));
+
+        let j = batch_to_json(&report);
+        let stats = j.get("stats").unwrap();
+        assert_eq!(stats.get("unique_problems").unwrap().as_u64(), Some(2));
+        assert_eq!(
+            stats.get("cross_network_dedup_hits").unwrap().as_u64(),
+            Some(2)
+        );
+        assert_eq!(j.get("plans").unwrap().as_arr().unwrap().len(), 2);
+    }
 }

@@ -1,0 +1,509 @@
+//! Sharded, lock-striped, persistent strategy cache — the service-grade
+//! backend behind [`crate::planner::BatchPlanner`].
+//!
+//! The one-file-per-key [`StrategyCache`](super::StrategyCache) is fine for
+//! one CLI process, but a batch/service workload hammers the cache from many
+//! worker threads at once. This cache stripes the key space over `N` shards
+//! (FNV-1a of the canonical key, modulo `N`): each shard is one `Mutex`
+//! around an in-memory entry map plus one JSON file on disk, so concurrent
+//! lookups of *different* shards never contend and a write locks 1/N of the
+//! key space instead of all of it.
+//!
+//! **Locking discipline.** Exactly one shard mutex is ever held at a time —
+//! there is no operation spanning two shards, so lock ordering (and with it
+//! deadlock) cannot arise by construction. The hit/miss/eviction counters
+//! ([`CacheCounters`]) are relaxed atomics updated outside any lock; the
+//! meta file is written once under `open`'s directory-creation path only.
+//!
+//! **Persistence.** Every `put` rewrites its shard file through temp-file +
+//! atomic rename ([`atomic_write`]), so a crash mid-write leaves the
+//! previous complete shard, never a truncated one. Loads are
+//! corruption-tolerant at two granularities: an unreadable shard *file*
+//! degrades to an empty shard (counted in `corrupt_shards`) without touching
+//! any other shard, and a malformed *entry* inside an otherwise readable
+//! shard is skipped while its neighbours survive.
+//!
+//! **Shard count.** Default 16: enough stripes that the portfolio pool's
+//! default ≤ 16 workers rarely collide on one mutex, while keeping the
+//! directory at a glanceable file count and each shard file large enough to
+//! amortize the rewrite-on-put. The count is recorded in `cache-meta.json`
+//! and re-read on open, so a directory keeps its geometry even when later
+//! callers ask for a different one (re-routing keys across a different
+//! modulus would orphan every existing entry).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::{CacheCounterSnapshot, CacheCounters};
+use crate::util::fsio::atomic_write;
+use crate::util::hash::fnv1a64;
+use crate::util::json::{self, Json};
+
+use super::cache::{entry_from_json, entry_to_json, CacheKey, CachedStrategy, StrategyStore};
+
+/// Default number of lock stripes / shard files.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Default per-shard entry capacity (FIFO eviction beyond it). 512 entries ×
+/// 16 shards comfortably covers every preset zoo and fuzz corpus in-tree;
+/// a service deployment can raise it via [`ShardedStrategyCache::open_with`].
+pub const DEFAULT_SHARD_CAPACITY: usize = 512;
+
+/// One stored entry plus its insertion sequence (FIFO eviction order).
+#[derive(Debug, Clone)]
+struct Stored {
+    entry: CachedStrategy,
+    seq: u64,
+}
+
+/// The state behind one shard's mutex.
+#[derive(Debug, Default)]
+struct ShardState {
+    /// Canonical key → stored entry. Loaded lazily from the shard file on
+    /// first access.
+    entries: BTreeMap<String, Stored>,
+    /// Monotonic insertion counter feeding `Stored::seq`.
+    next_seq: u64,
+    /// Whether the shard file has been read (or found absent/corrupt).
+    loaded: bool,
+}
+
+#[derive(Debug)]
+struct Inner {
+    dir: PathBuf,
+    shards: Vec<Mutex<ShardState>>,
+    capacity: usize,
+    counters: Arc<CacheCounters>,
+}
+
+/// Sharded, lock-striped strategy cache with per-shard file persistence.
+///
+/// Cloning is cheap and shares the stripes *and* the counters — hand clones
+/// to every planner/worker that should see one coherent cache.
+#[derive(Debug, Clone)]
+pub struct ShardedStrategyCache {
+    inner: Arc<Inner>,
+}
+
+impl ShardedStrategyCache {
+    /// Open (creating if needed) a sharded cache directory with the default
+    /// geometry ([`DEFAULT_SHARDS`] × [`DEFAULT_SHARD_CAPACITY`]).
+    pub fn open(dir: &Path) -> Result<ShardedStrategyCache, String> {
+        Self::open_with(dir, DEFAULT_SHARDS, DEFAULT_SHARD_CAPACITY)
+    }
+
+    /// Open with an explicit shard count (clamped to 1..=256) and per-shard
+    /// capacity (≥ 1). If the directory already carries a `cache-meta.json`,
+    /// its recorded shard count wins — the on-disk layout is authoritative,
+    /// because re-routing keys under a different modulus would orphan every
+    /// existing entry.
+    pub fn open_with(
+        dir: &Path,
+        shards: usize,
+        capacity: usize,
+    ) -> Result<ShardedStrategyCache, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("create cache dir {}: {e}", dir.display()))?;
+        let requested = shards.clamp(1, 256);
+        let meta_path = dir.join("cache-meta.json");
+        let n = match std::fs::read_to_string(&meta_path)
+            .ok()
+            .and_then(|t| json::parse(&t).ok())
+            .and_then(|v| v.get("shards").and_then(Json::as_usize))
+        {
+            Some(existing) => existing.clamp(1, 256),
+            None => {
+                let mut meta = Json::obj();
+                meta.set("version", "sharded-cache-v1").set("shards", requested);
+                atomic_write(&meta_path, &meta.to_string_pretty())?;
+                requested
+            }
+        };
+        let inner = Inner {
+            dir: dir.to_path_buf(),
+            shards: (0..n).map(|_| Mutex::new(ShardState::default())).collect(),
+            capacity: capacity.max(1),
+            counters: Arc::new(CacheCounters::new()),
+        };
+        Ok(ShardedStrategyCache { inner: Arc::new(inner) })
+    }
+
+    /// The directory backing this cache.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// Number of lock stripes / shard files.
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Live counters (shared by all clones of this cache).
+    pub fn counters(&self) -> Arc<CacheCounters> {
+        Arc::clone(&self.inner.counters)
+    }
+
+    /// Point-in-time counter snapshot for reports.
+    pub fn stats(&self) -> CacheCounterSnapshot {
+        self.inner.counters.snapshot()
+    }
+
+    /// Total entries currently resident (forces every shard to load).
+    pub fn len(&self) -> usize {
+        (0..self.shard_count())
+            .map(|i| {
+                let mut s = self.inner.shards[i].lock().unwrap();
+                self.ensure_loaded(i, &mut s);
+                s.entries.len()
+            })
+            .sum()
+    }
+
+    /// True when no shard holds an entry.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn shard_index(&self, key: &CacheKey) -> usize {
+        (fnv1a64(key.canonical().as_bytes()) % self.shard_count() as u64) as usize
+    }
+
+    fn shard_path(&self, index: usize) -> PathBuf {
+        self.inner.dir.join(format!("shard-{index:03}.json"))
+    }
+
+    /// Load the shard file into `state` if not yet done. An unreadable file
+    /// (missing is fine and silent; malformed counts as corrupt) yields an
+    /// empty shard; a malformed entry inside a readable file is skipped.
+    fn ensure_loaded(&self, index: usize, state: &mut ShardState) {
+        if state.loaded {
+            return;
+        }
+        state.loaded = true;
+        let path = self.shard_path(index);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => return, // absent: a fresh shard, not corruption
+        };
+        let parsed = json::parse(&text).ok().filter(|v| {
+            v.get("version").and_then(Json::as_str) == Some("sharded-cache-v1")
+        });
+        let Some(doc) = parsed else {
+            self.inner.counters.corrupt_shards.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let Some(arr) = doc.get("entries").and_then(Json::as_arr) else {
+            self.inner.counters.corrupt_shards.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        for item in arr {
+            // Per-entry tolerance: skip what does not parse, keep the rest.
+            if let Some((key, entry)) = entry_from_json(item) {
+                let seq = state.next_seq;
+                state.next_seq += 1;
+                state.entries.insert(key, Stored { entry, seq });
+            }
+        }
+    }
+
+    /// Serialize `state` (entries in insertion order, so FIFO age survives a
+    /// round-trip) and persist it atomically.
+    fn persist(&self, index: usize, state: &ShardState) -> Result<(), String> {
+        let mut ordered: Vec<(&String, &Stored)> = state.entries.iter().collect();
+        ordered.sort_by_key(|(_, s)| s.seq);
+        let mut rows = Vec::with_capacity(ordered.len());
+        for (key, stored) in ordered {
+            rows.push(entry_to_json(key, &stored.entry)?);
+        }
+        let mut doc = Json::obj();
+        doc.set("version", "sharded-cache-v1")
+            .set("shard", index)
+            .set("entries", Json::Arr(rows));
+        atomic_write(&self.shard_path(index), &doc.to_string_pretty())
+    }
+
+    /// Look up a key; any unreadable state degrades to a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedStrategy> {
+        let i = self.shard_index(key);
+        let mut state = self.inner.shards[i].lock().unwrap();
+        self.ensure_loaded(i, &mut state);
+        match state.entries.get(key.canonical()) {
+            Some(stored) => {
+                self.inner.counters.hits.fetch_add(1, Ordering::Relaxed);
+                Some(stored.entry.clone())
+            }
+            None => {
+                self.inner.counters.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or overwrite) an entry and persist its shard atomically.
+    /// Concurrent writers to the same key converge: the shard mutex
+    /// serializes them and the last insertion wins with a complete file.
+    pub fn put(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
+        let i = self.shard_index(key);
+        let mut state = self.inner.shards[i].lock().unwrap();
+        self.ensure_loaded(i, &mut state);
+        let seq = state.next_seq;
+        state.next_seq += 1;
+        state
+            .entries
+            .insert(key.canonical().to_string(), Stored { entry: entry.clone(), seq });
+        while state.entries.len() > self.inner.capacity {
+            // FIFO eviction: drop the oldest insertion.
+            let oldest = state
+                .entries
+                .iter()
+                .min_by_key(|(_, s)| s.seq)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty shard over capacity");
+            state.entries.remove(&oldest);
+            self.inner.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.persist(i, &state)
+    }
+}
+
+impl StrategyStore for ShardedStrategyCache {
+    fn load(&self, key: &CacheKey) -> Option<CachedStrategy> {
+        self.get(key)
+    }
+
+    fn store(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
+        self.put(key, entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvLayer;
+    use crate::platform::{Accelerator, OverlapMode};
+    use crate::strategy;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-shard-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample(seed: u64) -> (ConvLayer, CacheKey, CachedStrategy) {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 2);
+        let key = CacheKey::new(&l, &acc, 2, 8, seed, 1_000, 2);
+        let entry = CachedStrategy {
+            strategy: strategy::zigzag(&l, 2),
+            loaded_pixels: 57,
+            makespan: None,
+            winner: "zigzag".to_string(),
+        };
+        (l, key, entry)
+    }
+
+    #[test]
+    fn roundtrip_within_and_across_opens() {
+        let dir = tmp_dir("roundtrip");
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let (_, key, entry) = sample(1);
+        assert!(cache.get(&key).is_none());
+        cache.put(&key, &entry).unwrap();
+        assert_eq!(cache.get(&key), Some(entry.clone()));
+        // A fresh open over the same directory reads the persisted shard.
+        let reopened = ShardedStrategyCache::open(&dir).unwrap();
+        assert_eq!(reopened.get(&key), Some(entry));
+        assert_eq!(reopened.stats().hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keys_spread_over_multiple_shards() {
+        let dir = tmp_dir("spread");
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        for seed in 0..64 {
+            let (_, key, entry) = sample(seed);
+            cache.put(&key, &entry).unwrap();
+        }
+        assert_eq!(cache.len(), 64);
+        let shard_files = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .starts_with("shard-")
+            })
+            .count();
+        assert!(shard_files > 1, "64 keys must stripe over > 1 shard file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_pins_the_shard_count_across_opens() {
+        let dir = tmp_dir("meta");
+        let a = ShardedStrategyCache::open_with(&dir, 4, 64).unwrap();
+        assert_eq!(a.shard_count(), 4);
+        let (_, key, entry) = sample(3);
+        a.put(&key, &entry).unwrap();
+        // Asking for a different count later must not re-route keys.
+        let b = ShardedStrategyCache::open_with(&dir, 32, 64).unwrap();
+        assert_eq!(b.shard_count(), 4, "meta file wins over the request");
+        assert_eq!(b.get(&key), Some(entry));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A truncated / corrupted shard file loads as a miss — never a panic —
+    /// and never poisons the other shards.
+    #[test]
+    fn corrupt_shard_degrades_to_empty_without_poisoning_others() {
+        let dir = tmp_dir("corrupt");
+        {
+            let cache = ShardedStrategyCache::open_with(&dir, 4, 64).unwrap();
+            for seed in 0..32 {
+                let (_, key, entry) = sample(seed);
+                cache.put(&key, &entry).unwrap();
+            }
+        }
+        // Truncate exactly one shard file (simulated partial write).
+        let (_, victim_key, _) = sample(0);
+        let victim_cache = ShardedStrategyCache::open_with(&dir, 4, 64).unwrap();
+        let victim_shard = victim_cache.shard_index(&victim_key);
+        let victim_path = victim_cache.shard_path(victim_shard);
+        let full = std::fs::read_to_string(&victim_path).unwrap();
+        std::fs::write(&victim_path, &full[..full.len() / 3]).unwrap();
+
+        let cache = ShardedStrategyCache::open_with(&dir, 4, 64).unwrap();
+        let mut hits = 0;
+        let mut misses = 0;
+        for seed in 0..32 {
+            let (_, key, _) = sample(seed);
+            match cache.get(&key) {
+                Some(_) => hits += 1,
+                None => misses += 1,
+            }
+        }
+        assert!(cache.get(&victim_key).is_none(), "victim shard reads as a miss");
+        assert!(misses > 0, "victim shard lost its entries");
+        assert!(
+            hits >= 32 - misses && hits > 0,
+            "other shards survive the corruption ({hits} hits, {misses} misses)"
+        );
+        assert_eq!(cache.stats().corrupt_shards, 1, "exactly one shard was corrupt");
+        // A put into the corrupt shard rewrites it whole and recovers.
+        let (_, key0, entry0) = sample(0);
+        cache.put(&key0, &entry0).unwrap();
+        assert_eq!(cache.get(&key0), Some(entry0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_is_fifo_and_counted() {
+        let dir = tmp_dir("evict");
+        // 1 shard, capacity 4: the 5th insert evicts the 1st.
+        let cache = ShardedStrategyCache::open_with(&dir, 1, 4).unwrap();
+        let keys: Vec<CacheKey> = (0..5).map(|s| sample(s).1).collect();
+        for seed in 0..5 {
+            let (_, key, entry) = sample(seed);
+            cache.put(&key, &entry).unwrap();
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&keys[0]).is_none(), "oldest entry was evicted");
+        assert!(cache.get(&keys[4]).is_some(), "newest entry survives");
+        // FIFO age survives persistence: reopen and push one more.
+        let reopened = ShardedStrategyCache::open_with(&dir, 1, 4).unwrap();
+        let (_, k5, e5) = sample(5);
+        reopened.put(&k5, &e5).unwrap();
+        assert!(reopened.get(&keys[1]).is_none(), "next-oldest evicted after reopen");
+        assert!(reopened.get(&keys[2]).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Concurrent writers to the same key converge on one complete entry;
+    /// concurrent writers to different keys in one shard all land.
+    #[test]
+    fn concurrent_writers_converge() {
+        let dir = tmp_dir("concurrent");
+        let cache = ShardedStrategyCache::open_with(&dir, 2, 256).unwrap();
+        let (_, shared_key, shared_entry) = sample(7);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let cache = cache.clone();
+                let shared_key = shared_key.clone();
+                let shared_entry = shared_entry.clone();
+                scope.spawn(move || {
+                    for i in 0..8 {
+                        cache.put(&shared_key, &shared_entry).unwrap();
+                        let (_, own_key, own_entry) = sample(100 + t * 10 + i);
+                        cache.put(&own_key, &own_entry).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.get(&shared_key), Some(shared_entry.clone()));
+        for t in 0..8u64 {
+            for i in 0..8 {
+                let (_, key, entry) = sample(100 + t * 10 + i);
+                assert_eq!(cache.get(&key), Some(entry));
+            }
+        }
+        // And the files on disk are complete: a cold open sees the same.
+        let reopened = ShardedStrategyCache::open_with(&dir, 2, 256).unwrap();
+        assert_eq!(reopened.get(&shared_key), Some(shared_entry));
+        assert_eq!(reopened.len(), 1 + 64);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sequential and double-buffered keys for the same geometry live in
+    /// (potentially) different shards and never alias.
+    #[test]
+    fn overlap_modes_are_isolated() {
+        let dir = tmp_dir("modes");
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 2);
+        let seq_key = CacheKey::new(&l, &acc, 2, 8, 1, 100, 1);
+        let db_key = CacheKey::new(
+            &l,
+            &acc.with_overlap(OverlapMode::DoubleBuffered),
+            2,
+            8,
+            1,
+            100,
+            1,
+        );
+        let (_, _, mut entry) = sample(1);
+        cache.put(&seq_key, &entry).unwrap();
+        assert!(cache.get(&db_key).is_none(), "cross-mode lookup must miss");
+        entry.makespan = Some(99);
+        cache.put(&db_key, &entry).unwrap();
+        let seq_hit = cache.get(&seq_key).unwrap();
+        assert_eq!(seq_hit.makespan, None, "sequential entry untouched");
+        assert_eq!(cache.get(&db_key).unwrap().makespan, Some(99));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn counters_tally_hits_and_misses() {
+        let dir = tmp_dir("counters");
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let (_, key, entry) = sample(1);
+        assert!(cache.get(&key).is_none());
+        cache.put(&key, &entry).unwrap();
+        cache.get(&key).unwrap();
+        cache.get(&key).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (2, 1, 0));
+        // Clones share counters.
+        cache.clone().get(&key).unwrap();
+        assert_eq!(cache.stats().hits, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,134 @@
+//! Crash-tolerant file writes (temp file + atomic rename).
+//!
+//! The strategy caches persist planning results across processes; a plain
+//! `std::fs::write` that dies mid-call leaves a truncated file behind, which
+//! the next reader would see as corruption. [`atomic_write`] writes the full
+//! contents to a sibling temporary file first and only then renames it over
+//! the destination — on POSIX, `rename(2)` within one directory is atomic,
+//! so readers observe either the old complete file or the new complete file,
+//! never a prefix.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counter so concurrent writers to the *same* destination use
+/// distinct temp names (two threads racing `put` on one cache shard must not
+/// truncate each other's temp file mid-write).
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `contents` to `path` atomically: full contents land in
+/// `<path>.tmp-<pid>-<seq>` (same directory, so the rename cannot cross a
+/// filesystem boundary), the file is flushed, then renamed over `path`.
+///
+/// Concurrent callers on the same path are safe: each uses a unique temp
+/// file, and the last rename wins with a complete file either way.
+pub fn atomic_write(path: &Path, contents: &str) -> Result<(), String> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| format!("atomic write target has no file name: {}", path.display()))?;
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp_name = format!(
+        ".{}.tmp-{}-{}",
+        file_name.to_string_lossy(),
+        std::process::id(),
+        seq
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+
+    let write_res = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        // The rename only guarantees atomic *visibility*; sync_all makes the
+        // data durable before the new name can point at it.
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write_res {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(format!("write {}: {e}", tmp.display()));
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("rename {} -> {}: {e}", tmp.display(), path.display())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("convoffload-fsio-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let dir = tmp_dir("roundtrip");
+        let path = dir.join("x.json");
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, "second, longer contents").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "second, longer contents"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let dir = tmp_dir("no-temps");
+        let path = dir.join("x.json");
+        for i in 0..10 {
+            atomic_write(&path, &format!("gen {i}")).unwrap();
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["x.json".to_string()], "stray files: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_end_with_a_complete_file() {
+        let dir = tmp_dir("concurrent");
+        let path = dir.join("shared.json");
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let path = &path;
+                scope.spawn(move || {
+                    for i in 0..25 {
+                        let body = format!("writer-{t}-gen-{i}-{}", "y".repeat(64));
+                        atomic_write(path, &body).unwrap();
+                    }
+                });
+            }
+        });
+        // Whatever writer won, the file is one complete record — never a
+        // truncated prefix or an interleaving.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("writer-"));
+        assert!(text.ends_with(&"y".repeat(64)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_is_an_error_not_a_panic() {
+        let path = std::env::temp_dir()
+            .join(format!("convoffload-fsio-missing-{}", std::process::id()))
+            .join("nope")
+            .join("x.json");
+        assert!(atomic_write(&path, "x").is_err());
+    }
+}

@@ -11,6 +11,8 @@
 //! * [`csv`] — CSV reader/writer used for strategy import/export (the paper's
 //!   “ILP solver CSV file”) and the figure outputs;
 //! * [`cli`] — a tiny declarative flag parser (clap substitute);
+//! * [`fsio`] — crash-tolerant file writes (temp file + atomic rename) for
+//!   the persistent strategy caches;
 //! * [`bench`] — a criterion-style measurement harness for `cargo bench`;
 //! * [`proptest`] — a property-testing helper (generators + shrinking-lite);
 //! * [`hash`] — stable FNV-1a hashing for the strategy cache's filenames.
@@ -18,6 +20,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fsio;
 pub mod hash;
 pub mod json;
 pub mod pool;

@@ -1,0 +1,335 @@
+//! Integration tests for the batch planning service: the pinned model-zoo
+//! batch with exact dedup/cache counters, warm-path zero-anneal replay,
+//! shard corruption tolerance, concurrent batch clients, and overlap-mode
+//! isolation under the sharded cache.
+
+use std::path::PathBuf;
+
+use convoffload::config::network_preset;
+use convoffload::planner::{
+    AcceleratorSpec, BatchPlanner, NetworkPlanner, PlanOptions, ShardedStrategyCache,
+};
+use convoffload::platform::OverlapMode;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convoffload-batch-it-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_options() -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 1_500,
+        anneal_starts: 2,
+        threads: 0,
+        overlap: OverlapMode::Sequential,
+    }
+}
+
+/// The model-zoo batch of EXPERIMENTS.md: two LeNets, ResNet-8 and the
+/// depthwise/dilated trunk.
+fn zoo() -> Vec<convoffload::config::NetworkPreset> {
+    vec![
+        network_preset("lenet5").unwrap(),
+        network_preset("lenet5").unwrap(),
+        network_preset("resnet8").unwrap(),
+        network_preset("mobilenet_slim").unwrap(),
+    ]
+}
+
+/// The acceptance batch: `[lenet5, lenet5, resnet8, mobilenet_slim]` has 10
+/// stages but only 7 distinct planning problems — the second LeNet dedupes
+/// both stages cross-network, and ResNet-8's twin stage-2 block dedupes one
+/// stage intra-network. Counters are pinned *exactly*; the per-network plans
+/// must reproduce the pinned sequential baselines (7100 / 27644 / 3568) and
+/// match planning each network alone.
+#[test]
+fn zoo_batch_dedupes_and_reproduces_the_pinned_baselines() {
+    let nets = zoo();
+    let report = BatchPlanner::new(quick_options()).plan_batch(&nets).unwrap();
+    let s = &report.stats;
+    assert_eq!(s.networks, 4);
+    assert_eq!(s.stages_total, 10);
+    assert_eq!(s.unique_problems, 7);
+    assert_eq!(s.dedup_hits, 3);
+    assert_eq!(s.cross_network_dedup_hits, 2, "second lenet5 dedupes both stages");
+    assert_eq!(s.store_misses, 7, "no persistence: every unique problem races");
+    assert_eq!(s.store_hits, 0);
+    assert!(s.anneal_iters_run > 0);
+
+    // Pinned sequential baselines, same bounds as the solo planner tests.
+    let totals = [7100u64, 7100, 27644, 3568];
+    for (plan, &total) in report.plans.iter().zip(&totals) {
+        assert!(
+            plan.total_duration <= total,
+            "{}: {} cycles > pinned baseline {total}",
+            plan.network,
+            plan.total_duration
+        );
+    }
+    // The twin LeNet rode the first one's races entirely.
+    assert_eq!(report.plans[0].cache_misses, 2);
+    assert_eq!(report.plans[1].cache_hits, 2);
+    assert_eq!(report.plans[1].cache_misses, 0);
+    assert_eq!(report.plans[1].anneal_iters_run, 0);
+    assert_eq!(
+        report.plans[0].total_duration,
+        report.plans[1].total_duration
+    );
+    // ResNet-8's intra-network twin still dedupes inside the batch.
+    assert_eq!(report.plans[2].cache_misses, 2);
+    assert_eq!(report.plans[2].cache_hits, 1);
+
+    // Batch results are bit-identical to planning each network alone.
+    for (preset, plan) in nets.iter().zip(&report.plans) {
+        let solo = NetworkPlanner::new(quick_options()).plan(preset).unwrap();
+        assert_eq!(plan.total_duration, solo.total_duration, "{}", preset.name);
+        for (a, b) in plan.layers.iter().zip(&solo.layers) {
+            assert_eq!(a.strategy, b.strategy, "{}/{}", preset.name, a.stage);
+            assert_eq!(a.winner, b.winner);
+            assert_eq!(a.loaded_pixels, b.loaded_pixels);
+        }
+    }
+}
+
+/// The same zoo batch under the double-buffered objective reproduces the
+/// pinned overlapped baselines (6883 / 27272 / 3554) with the same dedup
+/// accounting.
+#[test]
+fn zoo_batch_reproduces_the_overlapped_baselines() {
+    let mut opts = quick_options();
+    opts.overlap = OverlapMode::DoubleBuffered;
+    let report = BatchPlanner::new(opts).plan_batch(&zoo()).unwrap();
+    assert_eq!(report.stats.unique_problems, 7);
+    assert_eq!(report.stats.cross_network_dedup_hits, 2);
+    let totals = [6883u64, 6883, 27272, 3554];
+    for (plan, &total) in report.plans.iter().zip(&totals) {
+        assert!(
+            plan.total_duration <= total,
+            "{}: overlapped {} cycles > pinned baseline {total}",
+            plan.network,
+            plan.total_duration
+        );
+        assert!(plan.total_duration <= plan.total_sequential_duration);
+    }
+}
+
+/// Batch determinism across thread counts: the shared race pool changes
+/// scheduling, never results or counters.
+#[test]
+fn zoo_batch_is_deterministic_across_thread_counts() {
+    let nets = zoo();
+    let mut opts = quick_options();
+    let base = BatchPlanner::new(opts.clone()).plan_batch(&nets).unwrap();
+    for threads in [1usize, 2, 8] {
+        opts.threads = threads;
+        let again = BatchPlanner::new(opts.clone()).plan_batch(&nets).unwrap();
+        assert_eq!(again.stats, base.stats, "threads={threads}");
+        for (a, b) in base.plans.iter().zip(&again.plans) {
+            assert_eq!(a.total_duration, b.total_duration, "threads={threads}");
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy, "threads={threads}");
+                assert_eq!(la.winner, lb.winner, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// The warm-path acceptance contract: a second identical batch over the same
+/// sharded cache directory serves every unique problem from the store and
+/// performs **zero** annealing iterations; counters are asserted exactly.
+#[test]
+fn second_identical_zoo_batch_is_all_hits_and_zero_anneal() {
+    let dir = tmp_dir("warm");
+    let nets = zoo();
+    let cache = ShardedStrategyCache::open(&dir).unwrap();
+    let planner = BatchPlanner::with_cache(quick_options(), cache);
+
+    let cold = planner.plan_batch(&nets).unwrap();
+    assert_eq!(cold.stats.unique_problems, 7);
+    assert_eq!(cold.stats.store_misses, 7);
+    assert_eq!(cold.stats.store_hits, 0);
+    assert!(cold.stats.anneal_iters_run > 0);
+    // Every unique problem was a (counted) miss on its first store lookup.
+    assert_eq!(cold.stats.cache.misses, 7);
+    assert_eq!(cold.stats.cache.hits, 0);
+    assert_eq!(cold.stats.cache.evictions, 0);
+    assert_eq!(cold.stats.cache.corrupt_shards, 0);
+
+    let warm = planner.plan_batch(&nets).unwrap();
+    assert_eq!(warm.stats.store_hits, 7, "all unique problems served warm");
+    assert_eq!(warm.stats.store_misses, 0);
+    assert_eq!(warm.stats.anneal_iters_run, 0, "warm batch must not anneal");
+    // Counters accumulate across the two calls on the shared cache.
+    assert_eq!(warm.stats.cache.hits, 7);
+    assert_eq!(warm.stats.cache.misses, 7);
+    for (a, b) in cold.plans.iter().zip(&warm.plans) {
+        assert_eq!(a.total_duration, b.total_duration);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.strategy, lb.strategy);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The warm path survives a fresh process: a new cache instance over the
+/// same directory (cold in-memory state, warm disk) still serves everything.
+#[test]
+fn warm_batch_survives_a_fresh_cache_instance() {
+    let dir = tmp_dir("reopen");
+    let nets = zoo();
+    BatchPlanner::with_cache(quick_options(), ShardedStrategyCache::open(&dir).unwrap())
+        .plan_batch(&nets)
+        .unwrap();
+    let warm = BatchPlanner::with_cache(
+        quick_options(),
+        ShardedStrategyCache::open(&dir).unwrap(),
+    )
+    .plan_batch(&nets)
+    .unwrap();
+    assert_eq!(warm.stats.store_hits, 7);
+    assert_eq!(warm.stats.anneal_iters_run, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A truncated shard file (simulated partial write / crash) loads as misses
+/// for its keys only: the batch silently re-races those problems, the other
+/// shards keep serving hits, and the re-planned batch repairs the shard.
+#[test]
+fn corrupted_shard_is_tolerated_and_repaired_by_the_next_batch() {
+    let dir = tmp_dir("corrupt");
+    let nets = zoo();
+    BatchPlanner::with_cache(quick_options(), ShardedStrategyCache::open(&dir).unwrap())
+        .plan_batch(&nets)
+        .unwrap();
+
+    // Truncate every populated shard file's tail — worse than any single
+    // crash would do — leaving valid JSON in none of them.
+    let mut truncated = 0;
+    for f in std::fs::read_dir(&dir).unwrap() {
+        let p = f.unwrap().path();
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        if !name.starts_with("shard-") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, &text[..text.len() / 3]).unwrap();
+        truncated += 1;
+    }
+    assert!(truncated > 0, "expected populated shard files");
+
+    let cache = ShardedStrategyCache::open(&dir).unwrap();
+    let planner = BatchPlanner::with_cache(quick_options(), cache);
+    let replanned = planner.plan_batch(&nets).unwrap();
+    assert_eq!(
+        replanned.stats.store_misses, 7,
+        "all entries lost -> all unique problems re-race (never a panic)"
+    );
+    assert_eq!(replanned.stats.cache.corrupt_shards as usize, truncated);
+    // The re-planned batch rewrote complete shards: a fresh instance is warm.
+    let warm = BatchPlanner::with_cache(
+        quick_options(),
+        ShardedStrategyCache::open(&dir).unwrap(),
+    )
+    .plan_batch(&nets)
+    .unwrap();
+    assert_eq!(warm.stats.store_hits, 7, "corruption was repaired");
+    assert_eq!(warm.stats.cache.corrupt_shards, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Concurrent batch clients over one shared cache converge: every thread
+/// gets the same plans, and the directory ends warm and complete. (Writers
+/// racing on the same keys are serialized per shard; files are written via
+/// temp + atomic rename, so no interleaving can surface a torn file.)
+#[test]
+fn concurrent_batch_clients_over_one_cache_converge() {
+    let dir = tmp_dir("concurrent");
+    let nets = zoo();
+    let cache = ShardedStrategyCache::open(&dir).unwrap();
+    let mut opts = quick_options();
+    opts.threads = 2; // keep 4 clients x 2 workers bounded
+
+    let totals: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = cache.clone();
+                let opts = opts.clone();
+                let nets = &nets;
+                scope.spawn(move || {
+                    let report = BatchPlanner::with_cache(opts, cache)
+                        .plan_batch(nets)
+                        .unwrap();
+                    report.plans.iter().map(|p| p.total_duration).collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for t in &totals[1..] {
+        assert_eq!(t, &totals[0], "all clients must converge on one answer");
+    }
+    // The directory is complete: a fresh instance runs fully warm.
+    let warm = BatchPlanner::with_cache(
+        quick_options(),
+        ShardedStrategyCache::open(&dir).unwrap(),
+    )
+    .plan_batch(&nets)
+    .unwrap();
+    assert_eq!(warm.stats.store_hits, 7);
+    assert_eq!(warm.stats.anneal_iters_run, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Overlap modes are distinct planning problems even under concurrent batch
+/// load on one directory: a sequential and a double-buffered client never
+/// serve each other's entries, and both end with their own warm set.
+#[test]
+fn overlap_modes_stay_isolated_under_concurrent_batches() {
+    let dir = tmp_dir("modes");
+    let nets = zoo();
+    let cache = ShardedStrategyCache::open(&dir).unwrap();
+    let mut seq_opts = quick_options();
+    seq_opts.threads = 2;
+    let mut db_opts = seq_opts.clone();
+    db_opts.overlap = OverlapMode::DoubleBuffered;
+
+    std::thread::scope(|scope| {
+        let c1 = cache.clone();
+        let n1 = &nets;
+        let o1 = seq_opts.clone();
+        let seq = scope.spawn(move || {
+            BatchPlanner::with_cache(o1, c1).plan_batch(n1).unwrap()
+        });
+        let c2 = cache.clone();
+        let o2 = db_opts.clone();
+        let n2 = &nets;
+        let db = scope.spawn(move || {
+            BatchPlanner::with_cache(o2, c2).plan_batch(n2).unwrap()
+        });
+        let seq = seq.join().unwrap();
+        let db = db.join().unwrap();
+        assert_eq!(seq.stats.store_misses, 7, "nothing cross-served");
+        assert_eq!(db.stats.store_misses, 7, "nothing cross-served");
+        for plan in &db.plans {
+            assert!(plan.total_duration <= plan.total_sequential_duration);
+        }
+    });
+    // Both modes are now warm in one directory (14 distinct entries).
+    for opts in [seq_opts, db_opts] {
+        let warm = BatchPlanner::with_cache(
+            opts,
+            ShardedStrategyCache::open(&dir).unwrap(),
+        )
+        .plan_batch(&nets)
+        .unwrap();
+        assert_eq!(warm.stats.store_hits, 7);
+        assert_eq!(warm.stats.anneal_iters_run, 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
