@@ -612,3 +612,360 @@ def batch_dedup(
         "dedup_hits": dedup_hits,
         "cross_network_dedup_hits": cross_network_dedup_hits,
     }
+
+
+# ------------------------------------------------------ fault injection (§3.9)
+#
+# A bit-exact mirror of the Rust fault subsystem (`rust/src/util/rng.rs`,
+# `rust/src/platform/fault.rs`, the fault arms of `rust/src/sim/engine.rs`
+# and `rust/src/step/cost.rs`). The RNG is xoshiro256** seeded through
+# SplitMix64; every step of a run draws its faults from a *stateless*
+# per-step stream (`seed ^ index * GOLDEN`), so the cross-language contract
+# is: same seed, same step shapes -> the same retries, jitters and shrink
+# events, to the bit.
+
+_M64 = (1 << 64) - 1
+
+#: SplitMix64's increment, also the per-step stream spreader (Rust GOLDEN).
+GOLDEN = 0x9E3779B97F4A7C15
+
+
+def splitmix64(state: int):
+    """One SplitMix64 step; returns ``(next_state, output)``."""
+    state = (state + GOLDEN) & _M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & _M64
+
+
+class Rng:
+    """xoshiro256** with SplitMix64 seeding — the Rust ``util::rng::Rng``."""
+
+    def __init__(self, seed: int):
+        s = seed & _M64
+        self.s = []
+        for _ in range(4):
+            s, out = splitmix64(s)
+            self.s.append(out)
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & _M64, 7) * 9) & _M64
+        t = (s[1] << 17) & _M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, bound: int) -> int:
+        """Uniform in [0, bound) via Lemire multiply-shift rejection."""
+        assert bound > 0
+        threshold = (_M64 - bound + 1) % bound
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & _M64
+            if lo >= bound or lo >= threshold:
+                return (m >> 64) & _M64
+
+    def f64(self) -> float:
+        # Exact: a 53-bit integer scaled by 2^-53 is one FP multiply with no
+        # rounding, so Rust and CPython produce the identical double.
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p: float) -> bool:
+        return self.f64() < p
+
+
+@dataclass
+class StepFaults:
+    """Faults drawn for one step (mirror of ``platform::StepFaults``)."""
+
+    load_retries: int = 0
+    dma_jitter: int = 0
+    compute_jitter: int = 0
+    shrink: bool = False
+
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Mirror of ``platform::FaultModel`` (field-for-field)."""
+
+    seed: int = 0
+    dma_fail_rate: float = 0.0
+    max_retries: int = 0
+    retry_penalty: int = 0
+    dma_jitter: int = 0
+    t_acc_jitter: int = 0
+    shrink_rate: float = 0.0
+    shrink_elements: int = 0
+
+    def is_active(self) -> bool:
+        return (
+            (self.dma_fail_rate > 0.0 and self.max_retries > 0)
+            or self.dma_jitter > 0
+            or self.t_acc_jitter > 0
+            or (self.shrink_rate > 0.0 and self.shrink_elements > 0)
+        )
+
+    def step_faults(
+        self, index: int, loaded_elements: int, written_elements: int, computed: bool
+    ) -> StepFaults:
+        """The cross-language draw order: retries (while the load keeps
+        failing, capped), DMA jitter (steps that load or write), compute
+        jitter (compute steps), then the shrink event — each draw gated on
+        the step's shape so empty phases consume nothing."""
+        f = StepFaults()
+        if not self.is_active():
+            return f
+        rng = Rng(self.seed ^ ((index * GOLDEN) & _M64))
+        if self.dma_fail_rate > 0.0 and loaded_elements > 0:
+            for _ in range(self.max_retries):
+                if rng.chance(self.dma_fail_rate):
+                    f.load_retries += 1
+                else:
+                    break
+        if self.dma_jitter > 0 and (loaded_elements > 0 or written_elements > 0):
+            f.dma_jitter = rng.below(self.dma_jitter + 1)
+        if self.t_acc_jitter > 0 and computed:
+            f.compute_jitter = rng.below(self.t_acc_jitter + 1)
+        if self.shrink_rate > 0.0 and self.shrink_elements > 0:
+            f.shrink = rng.chance(self.shrink_rate)
+        return f
+
+    def makespan_under_k_faults(
+        self,
+        fault_free_duration: int,
+        n_steps: int,
+        n_compute_steps: int,
+        max_load_cycles: int,
+        k: int,
+    ) -> int:
+        """The analytic worst case: the fault-free sum plus every jitter at
+        its cap plus ``k`` replays of the largest load (each with the retry
+        penalty). Monotone in ``k``; dominates every trace with <= k retries
+        under both overlap modes."""
+        return (
+            fault_free_duration
+            + n_steps * self.dma_jitter
+            + n_compute_steps * self.t_acc_jitter
+            + k * (max_load_cycles + self.retry_penalty)
+        )
+
+
+def fault_model_from_json(d: dict) -> FaultModel:
+    """Read the interchange form (field names = the `[faults]` TOML keys)."""
+    return FaultModel(
+        seed=d["seed"],
+        dma_fail_rate=d["dma_fail_rate"],
+        max_retries=d["max_retries"],
+        retry_penalty=d["retry_penalty"],
+        dma_jitter=d["dma_jitter"],
+        t_acc_jitter=d["t_acc_jitter"],
+        shrink_rate=d["shrink_rate"],
+        shrink_elements=d["shrink_elements"],
+    )
+
+
+def _stage_step_shapes(layer: Layer, groups, writeback: str):
+    """The Definition-16 step stream of one grouped strategy, reduced to the
+    shapes fault draws and costs depend on: per step
+    ``(loaded_elements, written_elements, computed, occupancy_after)`` —
+    compute steps in order, then the terminal flush. The occupancy is the
+    post-step on-chip total (kernels + resident inputs + pending outputs),
+    the left side of the §3.7 residency condition for the *next* step."""
+    assert writeback in ("every_step", "at_end")
+    c_out = layer.n_kernels
+    resident: set = set()
+    pending_out = 0
+    seen = set()
+    shapes = []
+    for k, group in enumerate(groups):
+        assert group, "empty group in strategy"
+        for p in group:
+            assert p not in seen, f"patch {p} computed twice"
+            seen.add(p)
+        footprint = layer.group_pixels(group)
+        load = footprint - resident
+        loaded_el = len(load) * layer.c_in
+        if k == 0:
+            loaded_el += layer.kernel_elements
+        written = pending_out * c_out if writeback == "every_step" else 0
+        if writeback == "every_step":
+            pending_out = 0
+        pending_out += len(group)
+        resident = footprint
+        occupancy = (
+            layer.kernel_elements + len(footprint) * layer.c_in + pending_out * c_out
+        )
+        shapes.append((loaded_el, written, True, occupancy))
+    assert seen == set(range(layer.n_patches)), "strategy must cover X exactly"
+    shapes.append((0, pending_out * c_out, False, 0))
+    return shapes
+
+
+@dataclass
+class FaultedStageResult:
+    duration: int  # faulted Definition-3 sum (sequential mode)
+    fault_retries: int
+    mem_shrink_events: int
+    wcet_bound: int
+    n_steps: int
+
+
+def simulate_stage_faulted(
+    layer: Layer,
+    acc: Accelerator,
+    groups,
+    model: FaultModel,
+    writeback: str = "every_step",
+) -> FaultedStageResult:
+    """Sequential replay under fault injection (mirror of the fault arm of
+    ``sim::engine::execute_steps``): per step, the load phase pays each
+    retry a full replay plus the penalty and the drawn DMA jitter, the
+    compute phase pays its jitter, writes are never jittered. An inactive
+    model reproduces :func:`simulate_stage` bit-exactly."""
+    shapes = _stage_step_shapes(layer, groups, writeback)
+    duration = 0
+    clean = 0
+    retries = 0
+    shrinks = 0
+    max_load_cycles = 0
+    for i, (loaded, written, computed, _occ) in enumerate(shapes):
+        fx = model.step_faults(i, loaded, written, computed)
+        if fx.shrink:
+            shrinks += 1
+        retries += fx.load_retries
+        load_cycles = loaded * acc.t_l
+        max_load_cycles = max(max_load_cycles, load_cycles)
+        compute = acc.t_acc if computed else 0
+        clean += load_cycles + written * acc.t_w + compute
+        duration += (
+            load_cycles
+            + fx.load_retries * (load_cycles + model.retry_penalty)
+            + fx.dma_jitter
+            + written * acc.t_w
+            + compute
+            + fx.compute_jitter
+        )
+    n_compute = sum(1 for s in shapes if s[2])
+    wcet = model.makespan_under_k_faults(
+        clean, len(shapes), n_compute, max_load_cycles, retries
+    )
+    assert wcet >= duration, "WCET bound below a simulated sequential trace"
+    return FaultedStageResult(
+        duration=duration,
+        fault_retries=retries,
+        mem_shrink_events=shrinks,
+        wcet_bound=wcet,
+        n_steps=len(shapes),
+    )
+
+
+@dataclass
+class FaultedOverlapResult:
+    makespan: int
+    sequential_duration: int  # the faulted Definition-3 sum
+    fault_retries: int
+    mem_shrink_events: int
+    wcet_bound: int
+    dma_busy: int
+    compute_busy: int
+
+
+def simulate_stage_overlapped_faulted(
+    layer: Layer,
+    acc: Accelerator,
+    groups,
+    model: FaultModel,
+    writeback: str = "every_step",
+) -> FaultedOverlapResult:
+    """Double-buffered replay under fault injection: the same faulted phase
+    durations placed on the two-resource timeline, with the §3.7 residency
+    condition checked against the *effective* memory budget — which shrinks
+    stickily as ``MemoryShrink`` events fire (before the same step's own
+    residency check, as in the Rust engine)."""
+    shapes = _stage_step_shapes(layer, groups, writeback)
+    timeline = OverlapTimeline()
+    effective_mem = acc.size_mem
+    prev_occ = 0
+    sequential = 0
+    clean = 0
+    retries = 0
+    shrinks = 0
+    max_load_cycles = 0
+    for i, (loaded, written, computed, occ) in enumerate(shapes):
+        fx = model.step_faults(i, loaded, written, computed)
+        if fx.shrink:
+            shrinks += 1
+            effective_mem = max(0, effective_mem - model.shrink_elements)
+        retries += fx.load_retries
+        load_cycles = loaded * acc.t_l
+        max_load_cycles = max(max_load_cycles, load_cycles)
+        faulted_load = (
+            load_cycles
+            + fx.load_retries * (load_cycles + model.retry_penalty)
+            + fx.dma_jitter
+        )
+        write_cycles = written * acc.t_w
+        compute = acc.t_acc if computed else 0
+        faulted_compute = compute + fx.compute_jitter
+        can_prefetch = prev_occ + loaded <= effective_mem
+        timeline.push(faulted_load, write_cycles, faulted_compute, can_prefetch)
+        prev_occ = occ
+        clean += load_cycles + write_cycles + compute
+        sequential += faulted_load + write_cycles + faulted_compute
+    n_compute = sum(1 for s in shapes if s[2])
+    wcet = model.makespan_under_k_faults(
+        clean, len(shapes), n_compute, max_load_cycles, retries
+    )
+    makespan = timeline.makespan()
+    assert makespan <= sequential, "timeline above the faulted sum"
+    assert wcet >= makespan, "WCET bound below a simulated overlapped trace"
+    return FaultedOverlapResult(
+        makespan=makespan,
+        sequential_duration=sequential,
+        fault_retries=retries,
+        mem_shrink_events=shrinks,
+        wcet_bound=wcet,
+        dma_busy=timeline.dma_busy,
+        compute_busy=timeline.compute_busy,
+    )
+
+
+def replay_case_faulted(case: dict, model: FaultModel) -> dict:
+    """Replay one differential case under fault injection: every stage of
+    the network sequentially (the per-stage fault streams restart at step 0,
+    as in ``Network::run_with_faults``) and double-buffered on its own
+    accelerator. Returns the per-stage results plus network totals."""
+    per_stage = []
+    overlapped = []
+    for st in case["stages"]:
+        layer = layer_from_json(st["layer"])
+        acc = accelerator_from_json(st["accelerator"])
+        writeback = st.get("writeback", "every_step")
+        per_stage.append(
+            simulate_stage_faulted(layer, acc, st["strategy_groups"], model, writeback)
+        )
+        overlapped.append(
+            simulate_stage_overlapped_faulted(
+                layer, acc, st["strategy_groups"], model, writeback
+            )
+        )
+    return {
+        "per_stage": per_stage,
+        "total_duration": sum(r.duration for r in per_stage),
+        "fault_retries": sum(r.fault_retries for r in per_stage),
+        "mem_shrink_events": sum(r.mem_shrink_events for r in per_stage),
+        "wcet_bound": sum(r.wcet_bound for r in per_stage),
+        "overlapped": overlapped,
+        "overlapped_total": sum(r.makespan for r in overlapped),
+    }

@@ -39,10 +39,11 @@ def _load_cases():
         )
     with open(path) as f:
         doc = json.load(f)
-    # v2 added the overlapped / overlapped_roomy makespan expectations; a
-    # v1 file is a stale artifact from before the overlap PR.
-    assert doc.get("version") == 2, (
-        f"interchange version {doc.get('version')} != 2 - stale "
+    # v3 added the fault-injected expectations (seeded fault model, retry /
+    # shrink accounting, WCET bounds) on top of v2's overlapped makespans; an
+    # older file is a stale artifact from before the fault-injection PR.
+    assert doc.get("version") == 3, (
+        f"interchange version {doc.get('version')} != 3 - stale "
         f"{path}; re-run `cargo test` to regenerate it"
     )
     # Provenance gate: a green differential signal must mean the *Rust
@@ -127,6 +128,73 @@ def test_python_oracle_matches_rust_overlapped_makespans():
                             f"{field} {g} != {stage[want_field]}"
                         )
     assert not mismatches, "\n".join(mismatches)
+
+
+def test_python_oracle_matches_rust_fault_injection():
+    """The v3 gate: the oracle replays each case's seeded fault streams
+    through its own xoshiro256** port and must land on bit-equal faulted
+    durations, retry and shrink counts, and WCET bounds — in both duration
+    semantics. This is the cross-language contract for the whole fault
+    subsystem (RNG, per-step draw order, retry/jitter cost recurrences, the
+    sticky memory-shrink residency fallback, the analytic bound)."""
+    mismatches = []
+    for case in _load_cases():
+        want = case["expected"]["faulted"]
+        seed = case["seed"]
+        model = o.fault_model_from_json(want["model"])
+        assert model.is_active(), f"seed {seed}: differential model inert"
+        got = o.replay_case_faulted(case, model)
+
+        wseq = want["sequential"]
+        for field in ("total_duration", "fault_retries", "mem_shrink_events", "wcet_bound"):
+            if got[field] != wseq[field]:
+                mismatches.append(
+                    f"seed {seed} sequential: {field} {got[field]} != {wseq[field]}"
+                )
+        for res, exp in zip(got["per_stage"], wseq["per_stage"]):
+            for field in ("duration", "fault_retries", "mem_shrink_events", "wcet_bound"):
+                g = getattr(res, field)
+                if g != exp[field]:
+                    mismatches.append(
+                        f"seed {seed} sequential stage {exp['name']}: "
+                        f"{field} {g} != {exp[field]}"
+                    )
+
+        wovl = want["overlapped"]
+        if got["overlapped_total"] != wovl["total_makespan"]:
+            mismatches.append(
+                f"seed {seed} overlapped: total {got['overlapped_total']} != "
+                f"{wovl['total_makespan']}"
+            )
+        for res, exp in zip(got["overlapped"], wovl["per_stage"]):
+            for field, want_field in (
+                ("makespan", "makespan"),
+                ("sequential_duration", "sequential_duration"),
+                ("fault_retries", "fault_retries"),
+                ("mem_shrink_events", "mem_shrink_events"),
+                ("wcet_bound", "wcet_bound"),
+            ):
+                g = getattr(res, field)
+                if g != exp[want_field]:
+                    mismatches.append(
+                        f"seed {seed} overlapped stage {exp['name']}: "
+                        f"{field} {g} != {exp[want_field]}"
+                    )
+    assert not mismatches, "\n".join(mismatches)
+
+
+def test_fault_injection_actually_fires_somewhere():
+    """The faulted gate must not be vacuous: across the case set the models
+    must inject retries, shrink events and a real duration inflation."""
+    retries = shrinks = inflated = 0
+    for case in _load_cases():
+        want = case["expected"]["faulted"]["sequential"]
+        retries += want["fault_retries"]
+        shrinks += want["mem_shrink_events"]
+        inflated += want["total_duration"] - case["expected"]["total_duration"]
+    assert retries > 0, "no case drew a DMA retry - fault path untested"
+    assert shrinks > 0, "no case drew a shrink event - shrink path untested"
+    assert inflated > 0, "fault injection never inflated a duration"
 
 
 def test_roomy_variant_actually_overlaps_somewhere():

@@ -1,0 +1,243 @@
+"""Unit tests for the oracle's fault-injection mirror.
+
+The fault subsystem is a cross-language contract: the Rust side pins the
+same RNG constants (`rust/src/platform/fault.rs`,
+``rng_cross_language_pins``), so if both language's generators agree on
+these values and both sides follow the documented per-step draw order, the
+differential gate (`test_differential.py`) compares like with like. The
+rest of the file checks the oracle's own fault properties — zero-fault
+bit-identity, stream determinism, WCET dominance — independently of any
+Rust artifact, so a Python-only dev loop still exercises the model.
+"""
+
+import oracle_sim as o
+
+M64 = (1 << 64) - 1
+
+
+def storm(seed):
+    """A model with every fault axis live (the differential harness's)."""
+    return o.FaultModel(
+        seed=seed,
+        dma_fail_rate=0.35,
+        max_retries=3,
+        retry_penalty=9,
+        dma_jitter=4,
+        t_acc_jitter=3,
+        shrink_rate=0.15,
+        shrink_elements=32,
+    )
+
+
+def sample_problems():
+    """A small zoo of (layer, accelerator, groups) triples covering dense,
+    strided/dilated and grouped layers under several orderings."""
+    problems = []
+    for layer, g in (
+        (o.Layer(1, 8, 8, 3, 3, 1), 2),
+        (o.Layer(2, 10, 10, 3, 3, 4, s_h=2, s_w=2), 3),
+        (o.Layer(3, 12, 12, 3, 3, 3, d_h=2, d_w=2, groups=3), 4),
+        (o.Layer(4, 9, 9, 2, 2, 8, groups=2), 5),
+    ):
+        for name in ("row-by-row", "zigzag", "greedy"):
+            if name == "greedy":
+                k = -(-layer.n_patches // g)
+                groups = o.greedy_groups(layer, k)
+            else:
+                groups = o.order_to_groups(o.ORDERINGS[name](layer), g)
+            acc = o.for_group_size(layer, g)
+            acc.t_acc = 3
+            acc.t_w = 1
+            problems.append((layer, acc, groups))
+    return problems
+
+
+class TestRngCrossLanguagePins:
+    """Bit-identical to `util::rng::Rng` — same constants as the Rust test."""
+
+    def test_next_u64_stream(self):
+        r = o.Rng(42)
+        assert [r.next_u64() for _ in range(5)] == [
+            1546998764402558742,
+            6990951692964543102,
+            12544586762248559009,
+            17057574109182124193,
+            18295552978065317476,
+        ]
+
+    def test_zero_seed_stream(self):
+        r = o.Rng(0)
+        assert [r.next_u64() for _ in range(3)] == [
+            11091344671253066420,
+            13793997310169335082,
+            1900383378846508768,
+        ]
+
+    def test_lemire_below(self):
+        r = o.Rng(7)
+        assert [r.below(100) for _ in range(8)] == [70, 27, 83, 98, 99, 87, 6, 10]
+
+    def test_bernoulli_chance(self):
+        r = o.Rng(2026)
+        got = [r.chance(0.3) for _ in range(12)]
+        want = [False, True] + [False] * 7 + [True, False, False]
+        assert got == want
+
+    def test_per_step_stream_seeds(self):
+        """The stateless per-step streams (`seed ^ index * GOLDEN`) used by
+        `FaultModel.step_faults` — pinned for steps 0, 1 and 5 of seed 13."""
+        for index, want in (
+            (0, [4469561385778016610, 14440143515961338743]),
+            (1, [13543073186684114632, 8432558809597263448]),
+            (5, [7099007645392894103, 7628968799164756082]),
+        ):
+            r = o.Rng(13 ^ ((index * o.GOLDEN) & M64))
+            assert [r.next_u64() for _ in range(2)] == want, f"step {index}"
+
+
+class TestZeroFaultIdentity:
+    def test_inactive_model_is_bit_identical_sequentially(self):
+        inert = o.FaultModel(seed=99)
+        assert not inert.is_active()
+        for layer, acc, groups in sample_problems():
+            clean = o.simulate_stage(layer, acc, groups)
+            faulted = o.simulate_stage_faulted(layer, acc, groups, inert)
+            assert faulted.duration == clean.duration
+            assert faulted.fault_retries == 0
+            assert faulted.mem_shrink_events == 0
+            assert faulted.n_steps == clean.n_steps
+            # With nothing injected the bound collapses onto the clean sum.
+            assert faulted.wcet_bound == clean.duration
+
+    def test_inactive_model_is_bit_identical_overlapped(self):
+        inert = o.FaultModel(seed=31)
+        for layer, acc, groups in sample_problems():
+            clean = o.simulate_stage_overlapped(layer, acc, groups)
+            faulted = o.simulate_stage_overlapped_faulted(layer, acc, groups, inert)
+            assert faulted.makespan == clean.makespan
+            assert faulted.sequential_duration == clean.sequential_duration
+            assert faulted.dma_busy == clean.dma_busy
+            assert faulted.compute_busy == clean.compute_busy
+
+    def test_zero_rate_axes_draw_nothing(self):
+        """Gating: a retries-only model must consume no draws on a step that
+        loads nothing, keeping the stream stable across step shapes."""
+        m = o.FaultModel(seed=5, dma_fail_rate=0.9, max_retries=3)
+        fx = m.step_faults(0, 0, 128, False)  # flush: writes only
+        assert (fx.load_retries, fx.dma_jitter, fx.compute_jitter) == (0, 0, 0)
+        fx = m.step_faults(0, 64, 0, True)
+        assert fx.load_retries > 0  # rate 0.9: first draw almost surely fails
+
+
+class TestFaultDeterminism:
+    def test_same_seed_same_trace(self):
+        for layer, acc, groups in sample_problems():
+            a = o.simulate_stage_faulted(layer, acc, groups, storm(13))
+            b = o.simulate_stage_faulted(layer, acc, groups, storm(13))
+            assert a == b
+            x = o.simulate_stage_overlapped_faulted(layer, acc, groups, storm(13))
+            y = o.simulate_stage_overlapped_faulted(layer, acc, groups, storm(13))
+            assert x == y
+
+    def test_distinct_seeds_vary_the_trace(self):
+        varied = False
+        for layer, acc, groups in sample_problems():
+            a = o.simulate_stage_faulted(layer, acc, groups, storm(1))
+            b = o.simulate_stage_faulted(layer, acc, groups, storm(2))
+            varied |= a.duration != b.duration
+        assert varied, "distinct fault seeds never changed any trace"
+
+    def test_retry_stream_is_mode_agnostic(self):
+        """Retries and shrinks depend on step shapes only, so the sequential
+        and overlapped replays of one strategy draw identical streams."""
+        for layer, acc, groups in sample_problems():
+            seq = o.simulate_stage_faulted(layer, acc, groups, storm(77))
+            ovl = o.simulate_stage_overlapped_faulted(layer, acc, groups, storm(77))
+            assert seq.fault_retries == ovl.fault_retries
+            assert seq.mem_shrink_events == ovl.mem_shrink_events
+            assert ovl.sequential_duration == seq.duration
+            assert ovl.makespan <= seq.duration
+
+
+class TestWcetBound:
+    def test_monotone_in_k(self):
+        m = storm(0)
+        prev = 0
+        for k in range(64):
+            w = m.makespan_under_k_faults(10_000, 50, 40, 120, k)
+            assert w >= prev
+            prev = w
+
+    def test_dominates_hundreds_of_simulated_traces(self):
+        traces = 0
+        for layer, acc, groups in sample_problems():
+            for fault_seed in range(10):
+                m = storm(fault_seed * 1_000 + 17)
+                seq = o.simulate_stage_faulted(layer, acc, groups, m)
+                assert seq.wcet_bound >= seq.duration
+                ovl = o.simulate_stage_overlapped_faulted(layer, acc, groups, m)
+                assert ovl.wcet_bound >= ovl.makespan
+                traces += 2
+        assert traces >= 200, f"expected hundreds of traces, got {traces}"
+
+    def test_bound_is_tight_at_the_caps(self):
+        """Hand-computed: base 1000 cycles over 10 steps (9 compute),
+        max load 40, penalty 5, jitters 3/2 — the same pin as the Rust
+        `wcet_bound_is_monotone_in_k` test."""
+        m = o.FaultModel(
+            seed=0,
+            dma_fail_rate=0.5,
+            max_retries=3,
+            retry_penalty=5,
+            dma_jitter=3,
+            t_acc_jitter=2,
+        )
+        assert m.makespan_under_k_faults(1000, 10, 9, 40, 0) == 1048
+        assert m.makespan_under_k_faults(1000, 10, 9, 40, 2) == 1138
+
+
+class TestShrinkSemantics:
+    def test_shrink_only_storm_leaves_the_sequential_sum_alone(self):
+        from dataclasses import replace
+
+        m = o.FaultModel(seed=3, shrink_rate=1.0, shrink_elements=64)
+        fired = stretched = 0
+        for layer, acc, groups in sample_problems():
+            # Roomy memory so the clean timeline genuinely prefetches and
+            # the shrink has real overlap to destroy (the exact-fit
+            # `for_group_size` machines mostly serialize anyway).
+            acc = replace(acc, size_mem=acc.size_mem * 2)
+            clean = o.simulate_stage(layer, acc, groups)
+            seq = o.simulate_stage_faulted(layer, acc, groups, m)
+            assert seq.duration == clean.duration
+            assert seq.fault_retries == 0
+            fired += seq.mem_shrink_events
+
+            clean_ovl = o.simulate_stage_overlapped(layer, acc, groups)
+            ovl = o.simulate_stage_overlapped_faulted(layer, acc, groups, m)
+            assert ovl.makespan >= clean_ovl.makespan
+            assert ovl.makespan <= seq.duration
+            stretched += ovl.makespan - clean_ovl.makespan
+        assert fired > 0, "rate-1.0 shrink storm never fired"
+        assert stretched > 0, "shrink storm never forced a serialization"
+
+    def test_shrink_is_sticky_and_applies_before_the_residency_check(self):
+        """Hand-computed, on the engine's 1x3x12 example (loads 27/12/6,
+        writes 4/4/2, t_acc = 4, t_w = 1; clean sequential sum 67): a
+        rate-1.0 storm that shrinks the whole budget fires on step 0
+        *before* step 0's own residency check, so every step — including
+        the first, which would otherwise prefetch into an empty memory —
+        serializes behind the previous compute. The serialized recurrence
+        advances by `load + max(write, compute)` per step: 31 + 16 + 10 + 2
+        = 59 cycles (the same figure as the engine's tight-memory pin,
+        where size 40 also forces full serialization)."""
+        layer = o.Layer(1, 3, 12, 3, 3, 1)
+        acc = o.for_group_size(layer, 4)
+        acc.t_acc = 4
+        acc.t_w = 1
+        groups = o.order_to_groups(o.row_major_order(layer), 4)
+        m = o.FaultModel(seed=1, shrink_rate=1.0, shrink_elements=acc.size_mem)
+        ovl = o.simulate_stage_overlapped_faulted(layer, acc, groups, m)
+        assert ovl.mem_shrink_events == len(groups) + 1
+        assert ovl.sequential_duration == 67
+        assert ovl.makespan == 59

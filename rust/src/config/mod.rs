@@ -17,7 +17,7 @@ pub use presets::{
 pub use toml::TomlDoc;
 
 use crate::conv::ConvLayer;
-use crate::platform::Accelerator;
+use crate::platform::{Accelerator, FaultModel};
 
 /// A fully described experiment: a layer, an accelerator and the strategy
 /// parameters, loadable from a TOML-subset file.
@@ -34,6 +34,66 @@ pub struct ExperimentConfig {
     pub group_size: usize,
     /// `nb_data_reload` bound for strategy validation (§2.3).
     pub nb_data_reload: u32,
+    /// Fault-injection model from the `[faults]` section (`None` when the
+    /// section is absent; a present-but-all-zero section is `Some` but
+    /// inactive).
+    pub faults: Option<FaultModel>,
+}
+
+/// Parse a `[faults]` section into a [`FaultModel`] (`Ok(None)` when the
+/// document has no such section). Flat keys mirror the struct fields:
+/// `seed`, `dma_fail_rate`, `max_retries`, `retry_penalty`, `dma_jitter`,
+/// `t_acc_jitter`, `shrink_rate`, `shrink_elements`. Rates must lie in
+/// `[0, 1]`; `max_retries` defaults to 3 so `dma_fail_rate` alone is a live
+/// model, matching the CLI spec syntax.
+pub fn fault_model_from_doc(doc: &TomlDoc) -> Result<Option<FaultModel>, String> {
+    const KEYS: [&str; 8] = [
+        "seed",
+        "dma_fail_rate",
+        "max_retries",
+        "retry_penalty",
+        "dma_jitter",
+        "t_acc_jitter",
+        "shrink_rate",
+        "shrink_elements",
+    ];
+    let mut present = false;
+    for (section, key) in doc.keys() {
+        if section != "faults" {
+            continue;
+        }
+        if !KEYS.contains(&key) {
+            return Err(format!("[faults]: unknown key '{key}'"));
+        }
+        present = true;
+    }
+    if !present {
+        return Ok(None);
+    }
+    let int = |key: &str, default: u64| -> Result<u64, String> {
+        match doc.get_int("faults", key) {
+            Some(v) if v >= 0 => Ok(v as u64),
+            Some(v) => Err(format!("[faults] {key}: negative value {v}")),
+            None => Ok(default),
+        }
+    };
+    let rate = |key: &str| -> Result<f64, String> {
+        match doc.get_float("faults", key) {
+            Some(r) if (0.0..=1.0).contains(&r) => Ok(r),
+            Some(r) => Err(format!("[faults] {key}: rate {r} outside [0, 1]")),
+            None => Ok(0.0),
+        }
+    };
+    Ok(Some(FaultModel {
+        seed: int("seed", 0)?,
+        dma_fail_rate: rate("dma_fail_rate")?,
+        max_retries: int("max_retries", 3)? as u32,
+        retry_penalty: int("retry_penalty", 0)?,
+        dma_jitter: int("dma_jitter", 0)?,
+        t_acc_jitter: int("t_acc_jitter", 0)?,
+        shrink_rate: rate("shrink_rate")?,
+        shrink_elements: int("shrink_elements", 0)?,
+    }))
 }
 
 impl ExperimentConfig {
@@ -120,7 +180,16 @@ impl ExperimentConfig {
         let nb_data_reload =
             doc.get_int("strategy", "nb_data_reload").unwrap_or(2) as u32;
 
-        Ok(ExperimentConfig { name, layer, accelerator, group_size, nb_data_reload })
+        let faults = fault_model_from_doc(&doc)?;
+
+        Ok(ExperimentConfig {
+            name,
+            layer,
+            accelerator,
+            group_size,
+            nb_data_reload,
+            faults,
+        })
     }
 }
 
@@ -232,5 +301,41 @@ groups = 4
     fn rejects_bad_configs() {
         assert!(ExperimentConfig::from_toml("[layer]\npreset = \"nope\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[layer]\nc_in = 1\n").is_err());
+    }
+
+    /// `[faults]` parses into a live model; absence means `None`; bad keys
+    /// and out-of-range rates are loud errors.
+    #[test]
+    fn parses_faults_section() {
+        let base = "[layer]\npreset = \"example1\"\n";
+        assert_eq!(ExperimentConfig::from_toml(base).unwrap().faults, None);
+
+        let text = format!(
+            "{base}[faults]\nseed = 9\ndma_fail_rate = 0.1\nretry_penalty = 4\n\
+             dma_jitter = 2\nt_acc_jitter = 1\nshrink_rate = 0.05\nshrink_elements = 16\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        let m = cfg.faults.unwrap();
+        assert_eq!(m.seed, 9);
+        assert_eq!(m.dma_fail_rate, 0.1);
+        assert_eq!(m.max_retries, 3, "defaulted so a bare rate is live");
+        assert_eq!(m.retry_penalty, 4);
+        assert_eq!((m.dma_jitter, m.t_acc_jitter), (2, 1));
+        assert_eq!(m.shrink_rate, 0.05);
+        assert_eq!(m.shrink_elements, 16);
+        assert!(m.is_active());
+
+        assert!(ExperimentConfig::from_toml(&format!(
+            "{base}[faults]\ndma_fail_rate = 1.5\n"
+        ))
+        .is_err());
+        assert!(ExperimentConfig::from_toml(&format!(
+            "{base}[faults]\nbogus = 1\n"
+        ))
+        .is_err());
+        assert!(ExperimentConfig::from_toml(&format!(
+            "{base}[faults]\nmax_retries = -2\n"
+        ))
+        .is_err());
     }
 }

@@ -39,6 +39,15 @@
 //!   sharded, lock-striped, crash-tolerant strategy cache
 //!   ([`planner::ShardedStrategyCache`]) whose hit/miss/dedup/eviction
 //!   counters surface through [`planner::BatchReport`] (`plan-batch`);
+//! * **fault-tolerant offloading** — a seeded, replayable fault model
+//!   ([`platform::FaultModel`]: transient DMA retries, bounded timing
+//!   jitter, sticky `MemoryShrink` events) threaded through both duration
+//!   semantics, an analytic k-fault WCET bound
+//!   ([`platform::FaultModel::makespan_under_k_faults`]) that dominates
+//!   every simulated trace, and degraded-mode replanning in the batch
+//!   planner (panic-tolerant portfolio races, quarantined cache shards,
+//!   shrink-driven re-grouping/re-racing) — `--faults` on `simulate` and
+//!   `plan-batch`, `[faults]` in experiment TOML;
 //! * the **experiment harness** regenerating every figure of the paper's
 //!   evaluation (`bench_harness`), and a config system with LeNet-5 / ResNet-8
 //!   layer *and* network presets (`config`).
@@ -103,10 +112,13 @@ pub mod viz;
 pub mod prelude {
     pub use crate::conv::{ConvLayer, Patch, PatchId};
     pub use crate::planner::{
-        AcceleratorSpec, BatchPlanner, BatchReport, BatchStats, NetworkPlan,
-        NetworkPlanner, PlanOptions, ShardedStrategyCache, StrategyCache, StrategyStore,
+        AcceleratorSpec, BatchPlanner, BatchReport, BatchStats, ChaosSpec,
+        NetworkPlan, NetworkPlanner, PlanOptions, ShardedStrategyCache,
+        StrategyCache, StrategyStore,
     };
-    pub use crate::platform::{Accelerator, OnChipMemory, OverlapMode, Platform};
+    pub use crate::platform::{
+        Accelerator, FaultModel, OnChipMemory, OverlapMode, Platform, StepFaults,
+    };
     pub use crate::sim::{FunctionalBackend, SimReport, Simulator};
     pub use crate::step::{OverlapTimeline, Step, StepCost, StepTiming};
     pub use crate::strategy::{

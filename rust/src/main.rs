@@ -27,7 +27,8 @@ use convoffload::planner::{
     batch_to_json, format_batch_table, format_plan_table, plan_to_json, AcceleratorSpec,
     BatchPlanner, NetworkPlanner, PlanOptions, ShardedStrategyCache, StrategyCache,
 };
-use convoffload::platform::{Accelerator, OverlapMode, Platform};
+use convoffload::planner::ChaosSpec;
+use convoffload::platform::{Accelerator, FaultModel, OverlapMode, Platform};
 use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
 use convoffload::strategy::{self, GroupedStrategy};
 use convoffload::util::cli::{self, FlagSpec};
@@ -96,6 +97,32 @@ struct Setup {
     layer: ConvLayer,
     acc: Accelerator,
     group: usize,
+    faults: Option<FaultModel>,
+}
+
+/// The two fault flags shared by `simulate` and `plan-batch`.
+fn fault_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "faults", help: "fault spec: dma=RATE,retries=N,penalty=CYC,jitter=CYC,acc-jitter=CYC,shrink=RATE,shrink-el=N,seed=S", takes_value: true, default: None },
+        FlagSpec { name: "fault-seed", help: "override the fault stream seed (applies on --faults or a [faults] config section)", takes_value: true, default: None },
+    ]
+}
+
+/// Merge the CLI fault flags on top of whatever the config file supplied:
+/// `--faults` replaces the model, `--fault-seed` re-seeds it.
+fn faults_from_args(
+    args: &cli::Args,
+    base: Option<FaultModel>,
+) -> Result<Option<FaultModel>, String> {
+    let mut faults = base;
+    if let Some(spec) = args.get("faults") {
+        faults = Some(FaultModel::from_spec(spec)?);
+    }
+    if let Some(seed) = args.get_u64("fault-seed")? {
+        let m = faults.unwrap_or_else(|| FaultModel { max_retries: 3, ..FaultModel::none() });
+        faults = Some(m.with_seed(seed));
+    }
+    Ok(faults)
 }
 
 fn setup_from(args: &cli::Args) -> Result<Setup, String> {
@@ -112,7 +139,12 @@ fn setup_from(args: &cli::Args) -> Result<Setup, String> {
             Some(o) => cfg.accelerator.with_overlap(o),
             None => cfg.accelerator,
         };
-        return Ok(Setup { layer: cfg.layer, acc, group: cfg.group_size });
+        return Ok(Setup {
+            layer: cfg.layer,
+            acc,
+            group: cfg.group_size,
+            faults: cfg.faults,
+        });
     }
     let name = args.get("layer").unwrap_or("example1");
     let preset = layer_preset(name)
@@ -120,7 +152,7 @@ fn setup_from(args: &cli::Args) -> Result<Setup, String> {
     let group = args.get_usize("group")?.unwrap_or(2).max(1);
     let acc = Accelerator::for_group_size(&preset.layer, group)
         .with_overlap(overlap.unwrap_or_default());
-    Ok(Setup { layer: preset.layer, acc, group })
+    Ok(Setup { layer: preset.layer, acc, group, faults: None })
 }
 
 fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<GroupedStrategy, String> {
@@ -150,6 +182,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "strategy", help: "strategy name or CSV/JSON file", takes_value: true, default: Some("zigzag") });
     specs.push(FlagSpec { name: "steps", help: "print the per-step table", takes_value: false, default: None });
+    specs.extend(fault_flags());
     let args = cli::parse(argv, &specs)?;
     if args.get_bool("help") {
         println!("{}", cli::help("simulate", "run a strategy on a layer", &specs));
@@ -157,11 +190,17 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     }
     let setup = setup_from(&args)?;
     let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
-    let report = Simulator::new(setup.layer, Platform::new(setup.acc))
-        .run(&s)
-        .map_err(|e| e.to_string())?;
+    let faults = faults_from_args(&args, setup.faults)?;
+    let mut sim = Simulator::new(setup.layer, Platform::new(setup.acc));
+    if let Some(m) = faults {
+        sim = sim.with_faults(m);
+    }
+    let report = sim.run(&s).map_err(|e| e.to_string())?;
     println!("layer: {}", setup.layer);
     println!("accelerator: {:?}", setup.acc);
+    if let Some(m) = faults.filter(FaultModel::is_active) {
+        println!("faults: {}", m.to_spec());
+    }
     println!("{}", convoffload::sim::summary_line(&report, &setup.acc));
     if args.get_bool("steps") {
         println!("\n step | loaded | written | macs | duration | occupancy | resident");
@@ -338,8 +377,11 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "shards", help: "lock stripes / shard files (existing dirs keep their count)", takes_value: true, default: Some("16") },
         FlagSpec { name: "no-cache", help: "disable persistence (cross-network dedup still applies)", takes_value: false, default: None },
         FlagSpec { name: "json", help: "emit the batch report as JSON instead of tables", takes_value: false, default: None },
+        FlagSpec { name: "chaos-lane", help: "crash this portfolio lane in every race (resilience drill; e.g. greedy)", takes_value: true, default: None },
         FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
+    let mut specs = specs;
+    specs.extend(fault_flags());
     let args = cli::parse(argv, &specs)?;
     if args.get_bool("help") || args.positional.is_empty() {
         println!(
@@ -375,7 +417,7 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         threads: args.get_usize("threads")?.unwrap_or(0),
         overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
     };
-    let planner = if args.get_bool("no-cache") {
+    let mut planner = if args.get_bool("no-cache") {
         BatchPlanner::new(options)
     } else {
         let dir = std::path::Path::new(args.get("cache-dir").unwrap());
@@ -389,7 +431,17 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
             )?,
         )
     };
+    let faults = faults_from_args(&args, None)?;
+    if let Some(m) = faults {
+        planner = planner.with_faults(m);
+    }
+    if let Some(lane) = args.get("chaos-lane") {
+        planner = planner.with_chaos(ChaosSpec { panic_lane: Some(lane.to_string()) });
+    }
     let report = planner.plan_batch(&presets)?;
+    if let Some(m) = faults.filter(FaultModel::is_active) {
+        eprintln!("faults: {}", m.to_spec());
+    }
     if args.get_bool("json") {
         println!("{}", batch_to_json(&report).to_string_pretty());
     } else {

@@ -25,6 +25,9 @@ pub struct CacheCounters {
     pub evictions: AtomicU64,
     /// Shard files that failed to load and were treated as empty.
     pub corrupt_shards: AtomicU64,
+    /// Shard mutexes found poisoned (a holder panicked) whose in-memory
+    /// state was discarded and rebuilt from disk on next access.
+    pub quarantined_shards: AtomicU64,
 }
 
 impl CacheCounters {
@@ -41,6 +44,7 @@ impl CacheCounters {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             corrupt_shards: self.corrupt_shards.load(Ordering::Relaxed),
+            quarantined_shards: self.quarantined_shards.load(Ordering::Relaxed),
         }
     }
 }
@@ -56,6 +60,9 @@ pub struct CacheCounterSnapshot {
     pub evictions: u64,
     /// Shard files that failed to load and were treated as empty.
     pub corrupt_shards: u64,
+    /// Shard mutexes recovered from lock poisoning (state discarded and
+    /// reloaded from the persisted shard file).
+    pub quarantined_shards: u64,
 }
 
 impl CacheCounterSnapshot {
@@ -65,16 +72,21 @@ impl CacheCounterSnapshot {
         o.set("hits", self.hits)
             .set("misses", self.misses)
             .set("evictions", self.evictions)
-            .set("corrupt_shards", self.corrupt_shards);
+            .set("corrupt_shards", self.corrupt_shards)
+            .set("quarantined_shards", self.quarantined_shards);
         o
     }
 
     /// One-line human form for CLI summaries.
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "cache counters: {} hits / {} misses / {} evictions / {} corrupt shards",
             self.hits, self.misses, self.evictions, self.corrupt_shards
-        )
+        );
+        if self.quarantined_shards > 0 {
+            line.push_str(&format!(" / {} quarantined shards", self.quarantined_shards));
+        }
+        line
     }
 }
 
@@ -90,15 +102,26 @@ mod tests {
         c.evictions.fetch_add(1, Ordering::Relaxed);
         let s = c.snapshot();
         assert_eq!((s.hits, s.misses, s.evictions, s.corrupt_shards), (3, 2, 1, 0));
+        assert_eq!(s.quarantined_shards, 0);
     }
 
     #[test]
     fn json_and_summary_forms() {
-        let s = CacheCounterSnapshot { hits: 7, misses: 1, evictions: 0, corrupt_shards: 2 };
+        let s = CacheCounterSnapshot {
+            hits: 7,
+            misses: 1,
+            evictions: 0,
+            corrupt_shards: 2,
+            quarantined_shards: 0,
+        };
         let j = s.to_json();
         assert_eq!(j.get("hits").unwrap().as_u64(), Some(7));
         assert_eq!(j.get("corrupt_shards").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("quarantined_shards").unwrap().as_u64(), Some(0));
         assert!(s.summary_line().contains("7 hits / 1 misses"));
+        assert!(!s.summary_line().contains("quarantined"), "quiet when zero");
+        let q = CacheCounterSnapshot { quarantined_shards: 3, ..s };
+        assert!(q.summary_line().contains("3 quarantined shards"));
     }
 
     #[test]

@@ -44,6 +44,25 @@ use crate::conv::ConvLayer;
 use crate::platform::{Accelerator, OverlapMode};
 use crate::strategy::{self, GroupedStrategy};
 
+/// The robust-objective hook: the accelerator a plan must survive on after
+/// a `MemoryShrink` fault removed `shrink_elements` elements of `size_MEM`.
+///
+/// The budget is floored at the §7.1 working set of a **single-patch** step
+/// (`Accelerator::for_group_size(layer, 1).size_mem`): below that no
+/// strategy for the layer is executable at all, so degraded-mode replanning
+/// would be vacuous — the platform, not the plan, is broken.
+pub fn degraded_accelerator(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    shrink_elements: u64,
+) -> Accelerator {
+    let floor = Accelerator::for_group_size(layer, 1).size_mem;
+    Accelerator {
+        size_mem: acc.size_mem.saturating_sub(shrink_elements).max(floor),
+        ..*acc
+    }
+}
+
 /// Which engine produced the result.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
@@ -270,6 +289,25 @@ impl Optimizer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The degraded accelerator shrinks only `size_MEM`, saturates instead
+    /// of wrapping, and never drops below the single-patch working set.
+    #[test]
+    fn degraded_accelerator_shrinks_and_floors() {
+        let l = ConvLayer::square(2, 6, 3, 2);
+        let acc = Accelerator::for_group_size(&l, 4);
+        let floor = Accelerator::for_group_size(&l, 1).size_mem;
+        let d = degraded_accelerator(&l, &acc, 10);
+        assert_eq!(d.size_mem, acc.size_mem - 10);
+        assert_eq!(
+            (d.nbop_pe, d.t_acc, d.t_l, d.t_w, d.overlap),
+            (acc.nbop_pe, acc.t_acc, acc.t_l, acc.t_w, acc.overlap),
+            "only the memory budget degrades"
+        );
+        assert_eq!(degraded_accelerator(&l, &acc, 0).size_mem, acc.size_mem);
+        assert_eq!(degraded_accelerator(&l, &acc, u64::MAX).size_mem, floor);
+        assert!(degraded_accelerator(&l, &acc, acc.size_mem).size_mem >= floor);
+    }
 
     #[test]
     fn optimizer_never_worse_than_heuristics() {

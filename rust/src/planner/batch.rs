@@ -29,13 +29,14 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::config::NetworkPreset;
 use crate::conv::ConvLayer;
 use crate::metrics::CacheCounterSnapshot;
-use crate::optimizer::{grouping_loads, grouping_makespan};
-use crate::platform::{Accelerator, OverlapMode};
+use crate::optimizer::{degraded_accelerator, grouping_loads, grouping_makespan};
+use crate::platform::{Accelerator, FaultModel, OverlapMode};
 use crate::sim::{Network, Stage};
 use crate::util::pool;
 
 use super::cache::{CacheKey, CachedStrategy, StrategyStore};
 use super::portfolio::{portfolio_entries, run_entry};
+use super::recovery::{degrade_for_shrink, ChaosSpec, DegradeOutcome};
 use super::shard::ShardedStrategyCache;
 use super::{LayerPlan, NetworkPlan, PlanOptions};
 
@@ -120,16 +121,35 @@ pub(crate) struct Resolution {
     /// Annealing iterations executed, attributed to the network whose stage
     /// represented the race.
     pub anneal_per_net: Vec<u64>,
+    /// Portfolio lanes that panicked during the race (each lost exactly its
+    /// own result; the reduction skipped them).
+    pub panicked_lanes: usize,
 }
 
-/// Resolve every distinct planning problem in the batch: dedupe by canonical
-/// key across all requests, consult the store once per unique problem, then
-/// race the residual (problem × portfolio-lane) set on one shared pool.
+/// [`resolve_chaos`] without chaos — the production path.
 pub(crate) fn resolve(
     presets: &[&NetworkPreset],
     ctxs: &[StageCtx],
     o: &PlanOptions,
     store: Option<&dyn StrategyStore>,
+) -> Result<Resolution, String> {
+    resolve_chaos(presets, ctxs, o, store, &ChaosSpec::default())
+}
+
+/// Resolve every distinct planning problem in the batch: dedupe by canonical
+/// key across all requests, consult the store once per unique problem, then
+/// race the residual (problem × portfolio-lane) set on one shared pool.
+///
+/// The race is panic-tolerant: a lane that panics (a crashed worker, or a
+/// [`ChaosSpec`] injection) loses exactly its own result; the deterministic
+/// reduction runs over the surviving lanes. Only when **every** lane of a
+/// problem is lost does the batch fail.
+pub(crate) fn resolve_chaos(
+    presets: &[&NetworkPreset],
+    ctxs: &[StageCtx],
+    o: &PlanOptions,
+    store: Option<&dyn StrategyStore>,
+    chaos: &ChaosSpec,
 ) -> Result<Resolution, String> {
     let mut resolved: BTreeMap<String, CachedStrategy> = BTreeMap::new();
     let mut jobs: Vec<usize> = Vec::new(); // ctx index of each racing representative
@@ -176,44 +196,62 @@ pub(crate) fn resolve(
     // work-list order, so the reduction below is independent of scheduling.
     let entries = portfolio_entries(o.seed, o.anneal_iters, o.anneal_starts);
     let mut anneal_per_net = vec![0u64; presets.len()];
+    let mut panicked_lanes = 0usize;
     if !jobs.is_empty() {
         let work: Vec<(usize, usize)> = jobs
             .iter()
             .flat_map(|&ci| (0..entries.len()).map(move |ei| (ci, ei)))
             .collect();
         let threads = if o.threads == 0 { pool::default_threads() } else { o.threads };
-        let results = pool::parallel_map(&work, threads, |&(ci, ei)| {
+        let (results, panics) = pool::parallel_map_catch(&work, threads, |&(ci, ei)| {
             let ctx = &ctxs[ci];
+            let entry = &entries[ei];
+            if chaos.panic_lane.as_deref() == Some(entry.label().as_str()) {
+                panic!("chaos: portfolio lane {} crashed", entry.label());
+            }
             run_entry(
                 &presets[ctx.net].stages[ctx.stage].layer,
                 &ctx.acc,
                 ctx.group,
                 ctx.k,
-                &entries[ei],
+                entry,
             )
         });
+        panicked_lanes = panics.len();
 
         for (ji, &ci) in jobs.iter().enumerate() {
             let ctx = &ctxs[ci];
             let lanes = &results[ji * entries.len()..(ji + 1) * entries.len()];
-            // Deterministic reduction: strictly-less keeps the earliest lane
-            // on ties. Sequential mode races loaded pixels; double-buffered
-            // races the overlapped makespan with loaded pixels as tie-break.
-            let mut best = &lanes[0];
-            for lane in &lanes[1..] {
-                let better = match o.overlap {
-                    OverlapMode::Sequential => lane.loaded_pixels < best.loaded_pixels,
-                    OverlapMode::DoubleBuffered => {
-                        (lane.makespan, lane.loaded_pixels)
-                            < (best.makespan, best.loaded_pixels)
-                    }
+            // Deterministic reduction over the *surviving* lanes:
+            // strictly-less keeps the earliest lane on ties. Sequential mode
+            // races loaded pixels; double-buffered races the overlapped
+            // makespan with loaded pixels as tie-break. Panicked lanes are
+            // `None` slots and simply don't compete — losing a lane can cost
+            // plan quality, never determinism (survivor order is fixed).
+            let mut best: Option<&_> = None;
+            for lane in lanes.iter().flatten() {
+                let better = match &best {
+                    None => true,
+                    Some(b) => match o.overlap {
+                        OverlapMode::Sequential => lane.loaded_pixels < b.loaded_pixels,
+                        OverlapMode::DoubleBuffered => {
+                            (lane.makespan, lane.loaded_pixels)
+                                < (b.makespan, b.loaded_pixels)
+                        }
+                    },
                 };
                 if better {
-                    best = lane;
+                    best = Some(lane);
                 }
             }
+            let best = best.ok_or_else(|| {
+                format!(
+                    "all portfolio lanes failed for problem {}",
+                    ctx.key.canonical()
+                )
+            })?;
             anneal_per_net[ctx.net] +=
-                lanes.iter().map(|l| l.anneal_iters).sum::<u64>();
+                lanes.iter().flatten().map(|l| l.anneal_iters).sum::<u64>();
             let entry = CachedStrategy {
                 strategy: best.strategy.clone(),
                 loaded_pixels: best.loaded_pixels,
@@ -234,6 +272,7 @@ pub(crate) fn resolve(
         dedup_hits,
         cross_network_dedup_hits,
         anneal_per_net,
+        panicked_lanes,
     })
 }
 
@@ -310,6 +349,128 @@ pub(crate) fn assemble_network(
     })
 }
 
+/// [`assemble_network`] under an active fault model: degraded-mode
+/// replanning.
+///
+/// The resolved (fault-free) strategies are simulated once under the fault
+/// stream; any stage that saw a `MemoryShrink` verdict gets its plan
+/// re-validated against the reduced budget via
+/// [`degrade_for_shrink`] (local re-grouping first, inline re-race second).
+/// Degraded plans drive a second faulted simulation for the reported
+/// durations. Degraded entries are **never** written back to the store —
+/// the shrink is a property of this run's fault stream, not of the
+/// planning problem.
+///
+/// The zero-fault path never enters this function, so its plans stay
+/// bit-identical to [`assemble_network`]'s.
+pub(crate) fn assemble_network_faulted(
+    preset: &NetworkPreset,
+    net: usize,
+    ctxs: &[StageCtx],
+    res: &Resolution,
+    o: &PlanOptions,
+    faults: &FaultModel,
+) -> Result<(NetworkPlan, usize), String> {
+    // Gather this network's stages with their resolved entries.
+    let mut stages: Vec<(&StageCtx, CachedStrategy, bool)> = Vec::new();
+    for (ci, ctx) in ctxs.iter().enumerate() {
+        if ctx.net != net {
+            continue;
+        }
+        let entry = res
+            .resolved
+            .get(ctx.key.canonical())
+            .expect("every stage key resolved")
+            .clone();
+        stages.push((ctx, entry, !res.raced.contains(&ci)));
+    }
+
+    let build = |stages: &[(&StageCtx, CachedStrategy, bool)]| -> Result<Network, String> {
+        let mut network = Network::default();
+        for (ctx, entry, _) in stages {
+            let sp = &preset.stages[ctx.stage];
+            network.push(Stage {
+                name: sp.name.to_string(),
+                layer: sp.layer,
+                accelerator: ctx.acc,
+                strategy: entry.strategy.clone(),
+                pool_after: sp.pool_after,
+                pad_after: sp.pad_after,
+            })?;
+        }
+        Ok(network)
+    };
+
+    // Pass 1: simulate the fault-free plans under the fault stream and
+    // collect per-stage shrink verdicts.
+    let mut report = build(&stages)?
+        .run_with_faults(Some(faults))
+        .map_err(|e| e.to_string())?;
+    let mut degraded_stages = 0usize;
+    for (i, (ctx, entry, _)) in stages.iter_mut().enumerate() {
+        let events = report.per_stage[i].mem_shrink_events;
+        if events == 0 {
+            continue;
+        }
+        let sp = &preset.stages[ctx.stage];
+        let shrunk = events.saturating_mul(faults.shrink_elements);
+        let degraded = degraded_accelerator(&sp.layer, &ctx.acc, shrunk);
+        let (replanned, outcome) =
+            degrade_for_shrink(&sp.layer, &degraded, ctx.group, entry, o);
+        if outcome != DegradeOutcome::Unchanged {
+            *entry = replanned;
+            degraded_stages += 1;
+        }
+    }
+
+    // Pass 2: only when something degraded — re-run the degraded plans on
+    // the *original* accelerators under the same fault stream for the final
+    // reported durations (the shrink re-applies deterministically).
+    if degraded_stages > 0 {
+        report = build(&stages)?
+            .run_with_faults(Some(faults))
+            .map_err(|e| e.to_string())?;
+    }
+
+    let mut layers: Vec<LayerPlan> = Vec::with_capacity(stages.len());
+    let mut cache_hits = 0usize;
+    let mut cache_misses = 0usize;
+    for ((ctx, entry, hit), sr) in stages.iter().zip(&report.per_stage) {
+        let sp = &preset.stages[ctx.stage];
+        if *hit {
+            cache_hits += 1;
+        } else {
+            cache_misses += 1;
+        }
+        layers.push(LayerPlan {
+            stage: sp.name.to_string(),
+            layer: sp.layer,
+            accelerator: ctx.acc,
+            group_size: ctx.group,
+            strategy: entry.strategy.clone(),
+            winner: entry.winner.clone(),
+            loaded_pixels: entry.loaded_pixels,
+            duration: sr.duration,
+            sequential_duration: sr.sequential_duration,
+            cache_hit: *hit,
+        });
+    }
+    Ok((
+        NetworkPlan {
+            network: preset.name.to_string(),
+            layers,
+            total_duration: report.total_duration,
+            total_sequential_duration: report.total_sequential_duration,
+            overlap: o.overlap,
+            peak_occupancy: report.peak_occupancy,
+            cache_hits,
+            cache_misses,
+            anneal_iters_run: res.anneal_per_net[net],
+        },
+        degraded_stages,
+    ))
+}
+
 /// Batch-level accounting surfaced by `plan-batch` and the bench suite.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchStats {
@@ -336,6 +497,13 @@ pub struct BatchStats {
     pub cache: CacheCounterSnapshot,
     /// Shard count of the backing cache (0 without persistence).
     pub shard_count: usize,
+    /// Portfolio lanes lost to worker panics during the shared race (each
+    /// lost exactly its own result; the batch completed on the survivors).
+    pub panicked_lanes: usize,
+    /// Stages whose plan was degraded (re-grouped or re-raced) after a
+    /// `MemoryShrink` fault verdict — always 0 without an active fault
+    /// model.
+    pub degraded_stages: usize,
 }
 
 /// The result of one batch: per-request plans (input order) plus the
@@ -357,18 +525,41 @@ pub struct BatchPlanner {
     /// overlap mode and portfolio budgets are part of every cache key).
     pub options: PlanOptions,
     cache: Option<ShardedStrategyCache>,
+    faults: Option<FaultModel>,
+    chaos: ChaosSpec,
 }
 
 impl BatchPlanner {
     /// Batch planner without persistence (cross-network dedup still works;
     /// every unique problem races once per call).
     pub fn new(options: PlanOptions) -> Self {
-        BatchPlanner { options, cache: None }
+        BatchPlanner {
+            options,
+            cache: None,
+            faults: None,
+            chaos: ChaosSpec::default(),
+        }
     }
 
     /// Batch planner backed by a sharded on-disk strategy cache.
     pub fn with_cache(options: PlanOptions, cache: ShardedStrategyCache) -> Self {
-        BatchPlanner { options, cache: Some(cache) }
+        BatchPlanner { cache: Some(cache), ..BatchPlanner::new(options) }
+    }
+
+    /// Simulate every planned network under `faults` and replan degraded
+    /// stages (see [`assemble_network_faulted`]). An inactive model is
+    /// ignored: the zero-fault path stays bit-identical to the default.
+    /// The fault model never enters cache keys — planning problems are
+    /// fault-free by definition; only execution is faulted.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Inject deterministic chaos into the shared race (test / drill hook).
+    pub fn with_chaos(mut self, chaos: ChaosSpec) -> Self {
+        self.chaos = chaos;
+        self
     }
 
     /// The backing sharded cache, if any.
@@ -406,11 +597,23 @@ impl BatchPlanner {
         let refs: Vec<&NetworkPreset> = presets.iter().collect();
         let ctxs = stage_contexts(o, &refs);
         let store = self.cache.as_ref().map(|c| c as &dyn StrategyStore);
-        let res = resolve(&refs, &ctxs, o, store)?;
+        let res = resolve_chaos(&refs, &ctxs, o, store, &self.chaos)?;
 
+        let faults = self.faults.as_ref().filter(|f| f.is_active());
         let mut plans = Vec::with_capacity(presets.len());
+        let mut degraded_stages = 0usize;
         for (net, preset) in presets.iter().enumerate() {
-            plans.push(assemble_network(preset, net, &ctxs, &res, o.overlap)?);
+            match faults {
+                // The zero-fault path goes through the historical assembly
+                // untouched, so its plans stay bit-identical.
+                None => plans.push(assemble_network(preset, net, &ctxs, &res, o.overlap)?),
+                Some(m) => {
+                    let (plan, degraded) =
+                        assemble_network_faulted(preset, net, &ctxs, &res, o, m)?;
+                    degraded_stages += degraded;
+                    plans.push(plan);
+                }
+            }
         }
         let unique_problems = ctxs.len() - res.dedup_hits;
         let stats = BatchStats {
@@ -428,6 +631,8 @@ impl BatchPlanner {
                 .map(|c| c.stats())
                 .unwrap_or_default(),
             shard_count: self.cache.as_ref().map_or(0, |c| c.shard_count()),
+            panicked_lanes: res.panicked_lanes,
+            degraded_stages,
         };
         Ok(BatchReport { plans, stats })
     }
@@ -623,5 +828,128 @@ mod tests {
         assert!(report.plans.is_empty());
         assert_eq!(report.stats.stages_total, 0);
         assert_eq!(report.stats.unique_problems, 0);
+    }
+
+    /// A portfolio lane that panics loses exactly its own result: the batch
+    /// completes on the surviving lanes, counts the losses, and stays
+    /// deterministic.
+    #[test]
+    fn crashed_lane_loses_one_lane_not_the_batch() {
+        let nets = [tiny("a"), other()];
+        let chaos = ChaosSpec { panic_lane: Some("greedy".into()) };
+        let report = BatchPlanner::new(quick_options())
+            .with_chaos(chaos.clone())
+            .plan_batch(&nets)
+            .unwrap();
+        // 3 unique problems × 1 crashed lane each
+        assert_eq!(report.stats.panicked_lanes, 3);
+        assert_eq!(report.plans.len(), 2, "every network still planned");
+        for plan in &report.plans {
+            assert!(!plan.layers.is_empty());
+            for lp in &plan.layers {
+                assert_ne!(lp.winner, "greedy", "crashed lane cannot win");
+            }
+        }
+        // chaos is deterministic: same spec, same results
+        let again = BatchPlanner::new(quick_options())
+            .with_chaos(chaos)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(again.stats, report.stats);
+        for (a, b) in report.plans.iter().zip(&again.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+        }
+    }
+
+    /// An *inactive* fault model leaves the batch bit-identical to the
+    /// default path, and an active one surfaces its accounting without
+    /// losing any stage.
+    #[test]
+    fn faulted_batch_covers_every_stage() {
+        let nets = [tiny("a"), other()];
+        let base = BatchPlanner::new(quick_options()).plan_batch(&nets).unwrap();
+
+        let inert = BatchPlanner::new(quick_options())
+            .with_faults(FaultModel::none())
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(inert.stats, base.stats);
+        for (a, b) in base.plans.iter().zip(&inert.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+            assert_eq!(a.layers.len(), b.layers.len());
+        }
+
+        let model = FaultModel {
+            dma_fail_rate: 0.5,
+            max_retries: 3,
+            retry_penalty: 4,
+            dma_jitter: 2,
+            ..FaultModel::none().with_seed(13)
+        };
+        let faulted = BatchPlanner::new(quick_options())
+            .with_faults(model)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(faulted.plans.len(), 2);
+        for (plan, preset) in faulted.plans.iter().zip(&nets) {
+            assert_eq!(plan.layers.len(), preset.stages.len());
+        }
+        // retries only ever lengthen the timeline
+        for (a, b) in base.plans.iter().zip(&faulted.plans) {
+            assert!(b.total_duration >= a.total_duration);
+        }
+        // strategies are planned fault-free; the fault model only affects
+        // execution, so winners match the baseline (no shrink configured)
+        assert_eq!(faulted.stats.degraded_stages, 0);
+        for (a, b) in base.plans.iter().zip(&faulted.plans) {
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy);
+            }
+        }
+    }
+
+    /// A shrink-heavy fault stream forces degraded-mode replanning: the
+    /// batch still returns a plan for every stage, counts the degradations,
+    /// and marks the replanned winners' provenance.
+    #[test]
+    fn shrink_faults_degrade_and_still_plan() {
+        let nets = [tiny("a"), other()];
+        let model = FaultModel {
+            shrink_rate: 1.0, // every step shrinks: the budget collapses fast
+            shrink_elements: 8,
+            ..FaultModel::none().with_seed(7)
+        };
+        let report = BatchPlanner::new(quick_options())
+            .with_faults(model)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(report.plans.len(), 2);
+        assert!(report.stats.degraded_stages > 0, "shrink must bite");
+        let mut saw_degraded_winner = false;
+        for (plan, preset) in report.plans.iter().zip(&nets) {
+            assert_eq!(plan.layers.len(), preset.stages.len(), "no stage lost");
+            for lp in &plan.layers {
+                if lp.winner.contains("+regroup")
+                    || lp.winner.contains("+rerace")
+                    || lp.winner.contains("+serialize")
+                {
+                    saw_degraded_winner = true;
+                }
+            }
+        }
+        assert!(saw_degraded_winner, "degraded plans carry their provenance");
+        // deterministic: same model, same degraded batch
+        let again = BatchPlanner::new(quick_options())
+            .with_faults(model)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(again.stats, report.stats);
+        for (a, b) in report.plans.iter().zip(&again.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy);
+                assert_eq!(la.winner, lb.winner);
+            }
+        }
     }
 }

@@ -1,0 +1,373 @@
+//! The planner's recovery layer: bounded-retry I/O, deterministic chaos
+//! hooks, and degraded-mode replanning after `MemoryShrink` faults.
+//!
+//! Three failure domains, three disciplines:
+//!
+//! * **Crashed portfolio lanes.** The batch race runs every lane under
+//!   [`crate::util::pool::parallel_map_catch`]; a panicking lane loses
+//!   exactly its own result and is skipped by the (still deterministic)
+//!   reduction. [`ChaosSpec`] injects such a crash on purpose — by lane
+//!   label, so the failure is replayable — for the recovery tests and the
+//!   CI chaos job.
+//! * **Transient cache I/O failures.** [`retry_io`] wraps shard persistence
+//!   in a bounded retry with exponential backoff; a persistently failing
+//!   disk still surfaces the final error.
+//! * **Mid-execution memory shrink.** When a fault-injected simulation
+//!   reports `MemoryShrink` events, the planned strategy may no longer fit
+//!   the reduced `size_MEM`. [`degrade_for_shrink`] re-validates against
+//!   the shrunk budget ([`crate::optimizer::degraded_accelerator`]) and
+//!   degrades in two deterministic stages: a local **re-grouping** (split
+//!   each visit-order group into chunks that fit — cheap, preserves the
+//!   winner's ordering structure), then a full inline **re-race** of the
+//!   portfolio under the reduced budget. Degraded entries are *never*
+//!   written back to the strategy store: the cache key describes the
+//!   healthy platform, and the shrink is a per-run event.
+
+use std::time::Duration;
+
+use crate::conv::ConvLayer;
+use crate::optimizer::{grouping_loads, grouping_makespan};
+use crate::platform::{Accelerator, OverlapMode, Platform};
+use crate::sim::Simulator;
+use crate::strategy::GroupedStrategy;
+
+use super::cache::CachedStrategy;
+use super::portfolio::{portfolio_entries, run_entry, PortfolioResult};
+use super::PlanOptions;
+
+/// Deterministic chaos injection for [`super::BatchPlanner`] — replayable
+/// failures for the recovery tests and the CI chaos job. Inactive by
+/// default; production paths never construct an active spec.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosSpec {
+    /// Portfolio lane label (e.g. `"greedy"`, `"anneal-s7"`) whose worker
+    /// panics mid-race. Every racing problem loses that one lane; the
+    /// survivors still produce a plan for every network.
+    pub panic_lane: Option<String>,
+}
+
+impl ChaosSpec {
+    /// Is any chaos configured?
+    pub fn is_active(&self) -> bool {
+        self.panic_lane.is_some()
+    }
+}
+
+/// What [`degrade_for_shrink`] had to do to keep a plan executable under a
+/// reduced memory budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DegradeOutcome {
+    /// The planned strategy still fits the shrunk budget as-is.
+    Unchanged,
+    /// Groups were split into chunks of at most the new bound; the winner's
+    /// visit order survived.
+    Regrouped,
+    /// The portfolio re-raced from scratch under the reduced budget.
+    Reraced,
+}
+
+impl DegradeOutcome {
+    /// Stable report label.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DegradeOutcome::Unchanged => "unchanged",
+            DegradeOutcome::Regrouped => "regrouped",
+            DegradeOutcome::Reraced => "reraced",
+        }
+    }
+}
+
+/// Run `op` up to `attempts` times, sleeping `base_delay · 2^i` between
+/// failures (exponential backoff). Returns the first success or the last
+/// error. `attempts` is clamped to ≥ 1.
+pub fn retry_io<T>(
+    attempts: u32,
+    base_delay: Duration,
+    mut op: impl FnMut() -> Result<T, String>,
+) -> Result<T, String> {
+    let attempts = attempts.max(1);
+    let mut delay = base_delay;
+    let mut last_err = String::new();
+    for attempt in 0..attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => last_err = e,
+        }
+        if attempt + 1 < attempts && !delay.is_zero() {
+            std::thread::sleep(delay);
+            delay = delay.saturating_mul(2);
+        }
+    }
+    Err(format!("after {attempts} attempts: {last_err}"))
+}
+
+/// Would `strategy` execute on `acc` under the strict step semantics
+/// (including the `MemoryOverflow` check)? Errors — not just overflow —
+/// all read as "does not fit"; the caller degrades further.
+fn feasible(layer: &ConvLayer, acc: &Accelerator, strategy: &GroupedStrategy) -> bool {
+    Simulator::new(*layer, Platform::new(*acc)).run(strategy).is_ok()
+}
+
+/// Largest group bound whose §7.1 working set (kernels + `g` input patches
+/// + `g` outputs) fits `acc.size_mem`, additionally capped by the compute
+/// bound `nb_patches_max_S1`; at least 1.
+pub fn memory_group_bound(layer: &ConvLayer, acc: &Accelerator) -> usize {
+    let per_patch = (layer.input_elements_per_patch() + layer.c_out()) as u64;
+    let spare = acc.size_mem.saturating_sub(layer.kernel_elements() as u64);
+    let by_mem = (spare / per_patch.max(1)) as usize;
+    by_mem.min(acc.max_patches_per_step(layer)).max(1)
+}
+
+/// Re-validate a planned strategy against a **shrunk** accelerator and
+/// degrade as little as possible (see the module docs for the ladder).
+/// Deterministic: same inputs, same outcome, no RNG beyond the portfolio's
+/// own seeded lanes.
+///
+/// `degraded` is the reduced-budget accelerator (from
+/// [`crate::optimizer::degraded_accelerator`]); `group` is the original
+/// race's group bound; `opts` supplies the portfolio configuration for the
+/// re-race stage.
+pub fn degrade_for_shrink(
+    layer: &ConvLayer,
+    degraded: &Accelerator,
+    group: usize,
+    entry: &CachedStrategy,
+    opts: &PlanOptions,
+) -> (CachedStrategy, DegradeOutcome) {
+    // Stage 0: the plan may survive the shrink untouched (slack memory).
+    if feasible(layer, degraded, &entry.strategy) {
+        return (entry.clone(), DegradeOutcome::Unchanged);
+    }
+
+    let overlapped = degraded.overlap == OverlapMode::DoubleBuffered;
+    let bound = memory_group_bound(layer, degraded).min(group.max(1));
+
+    // Stage 1: local re-grouping — split every visit-order group into
+    // chunks of at most the reduced bound. Keeps the winner's ordering
+    // structure (and most of its overlap savings) at zero search cost.
+    let mut chunks: Vec<Vec<_>> = Vec::new();
+    for g in &entry.strategy.groups {
+        for c in g.chunks(bound) {
+            chunks.push(c.to_vec());
+        }
+    }
+    let regrouped =
+        GroupedStrategy::new(format!("{}+regroup", entry.strategy.name), chunks);
+    if feasible(layer, degraded, &regrouped) {
+        let loaded_pixels = grouping_loads(layer, &regrouped.groups);
+        let makespan =
+            overlapped.then(|| grouping_makespan(layer, degraded, &regrouped.groups));
+        let winner = format!("{}+regroup", entry.winner);
+        return (
+            CachedStrategy { strategy: regrouped, loaded_pixels, makespan, winner },
+            DegradeOutcome::Regrouped,
+        );
+    }
+
+    // Stage 2: full inline re-race under the reduced budget. Same portfolio,
+    // same deterministic strictly-less reduction as the batch resolver;
+    // lanes that still don't fit the shrunk memory are skipped.
+    let entries = portfolio_entries(opts.seed, opts.anneal_iters, opts.anneal_starts);
+    let k = layer.n_patches().div_ceil(bound);
+    let mut best: Option<PortfolioResult> = None;
+    for e in &entries {
+        let r = run_entry(layer, degraded, bound, k, e);
+        if !feasible(layer, degraded, &r.strategy) {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                if overlapped {
+                    (r.makespan, r.loaded_pixels) < (b.makespan, b.loaded_pixels)
+                } else {
+                    r.loaded_pixels < b.loaded_pixels
+                }
+            }
+        };
+        if better {
+            best = Some(r);
+        }
+    }
+    match best {
+        Some(b) => {
+            let winner = format!("{}+rerace", b.label);
+            (
+                CachedStrategy {
+                    strategy: b.strategy,
+                    loaded_pixels: b.loaded_pixels,
+                    makespan: b.makespan,
+                    winner,
+                },
+                DegradeOutcome::Reraced,
+            )
+        }
+        // Every lane infeasible: the budget floor guarantees a single-patch
+        // step fits, so fall back to the regrouped plan (bound 1 chunks of
+        // the winner) rather than failing the batch.
+        None => {
+            let mut singles: Vec<Vec<_>> = Vec::new();
+            for g in &entry.strategy.groups {
+                for c in g.chunks(1) {
+                    singles.push(c.to_vec());
+                }
+            }
+            let strategy =
+                GroupedStrategy::new(format!("{}+serialize", entry.strategy.name), singles);
+            let loaded_pixels = grouping_loads(layer, &strategy.groups);
+            let makespan =
+                overlapped.then(|| grouping_makespan(layer, degraded, &strategy.groups));
+            let winner = format!("{}+serialize", entry.winner);
+            (
+                CachedStrategy { strategy, loaded_pixels, makespan, winner },
+                DegradeOutcome::Reraced,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::degraded_accelerator;
+    use crate::strategy;
+
+    #[test]
+    fn retry_io_returns_first_success() {
+        let mut calls = 0;
+        let r = retry_io(5, Duration::ZERO, || {
+            calls += 1;
+            if calls < 3 { Err(format!("transient {calls}")) } else { Ok(calls) }
+        });
+        assert_eq!(r, Ok(3));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_io_surfaces_the_last_error() {
+        let mut calls = 0;
+        let r: Result<(), String> = retry_io(3, Duration::ZERO, || {
+            calls += 1;
+            Err(format!("fail {calls}"))
+        });
+        assert_eq!(calls, 3);
+        let msg = r.unwrap_err();
+        assert!(msg.contains("after 3 attempts"), "{msg}");
+        assert!(msg.contains("fail 3"), "{msg}");
+    }
+
+    #[test]
+    fn retry_io_clamps_zero_attempts_to_one() {
+        let mut calls = 0;
+        let _: Result<(), String> = retry_io(0, Duration::ZERO, || {
+            calls += 1;
+            Err("x".into())
+        });
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn chaos_spec_defaults_inactive() {
+        assert!(!ChaosSpec::default().is_active());
+        let c = ChaosSpec { panic_lane: Some("greedy".into()) };
+        assert!(c.is_active());
+    }
+
+    fn sample_entry(layer: &ConvLayer, group: usize) -> CachedStrategy {
+        let s = strategy::zigzag(layer, group);
+        let loaded_pixels = grouping_loads(layer, &s.groups);
+        CachedStrategy {
+            strategy: s,
+            loaded_pixels,
+            makespan: None,
+            winner: "zigzag".to_string(),
+        }
+    }
+
+    /// No shrink (or slack memory): the plan is returned untouched.
+    #[test]
+    fn slack_memory_keeps_the_plan_unchanged() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator {
+            size_mem: Accelerator::for_group_size(&l, 2).size_mem + 100,
+            ..Accelerator::for_group_size(&l, 2)
+        };
+        let entry = sample_entry(&l, 2);
+        let degraded = degraded_accelerator(&l, &acc, 50); // still ≥ the g=2 set
+        let (out, outcome) = degrade_for_shrink(&l, &degraded, 2, &entry, &quick_opts());
+        assert_eq!(outcome, DegradeOutcome::Unchanged);
+        assert_eq!(out, entry);
+    }
+
+    fn quick_opts() -> PlanOptions {
+        PlanOptions {
+            anneal_iters: 200,
+            anneal_starts: 1,
+            ..PlanOptions::default()
+        }
+    }
+
+    /// A shrink below the planned working set degrades deterministically to
+    /// a feasible strategy covering every patch, and never writes back.
+    #[test]
+    fn shrink_below_working_set_degrades_to_a_feasible_plan() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 4); // sized exactly for g=4
+        let entry = sample_entry(&l, 4);
+        assert!(feasible(&l, &acc, &entry.strategy), "healthy plan runs");
+        // Shrink by two patches' worth: g=4 groups no longer fit.
+        let shrink = 2 * (l.input_elements_per_patch() + l.c_out()) as u64;
+        let degraded = degraded_accelerator(&l, &acc, shrink);
+        assert!(!feasible(&l, &degraded, &entry.strategy), "shrink must bite");
+        let (out, outcome) = degrade_for_shrink(&l, &degraded, 4, &entry, &quick_opts());
+        assert_ne!(outcome, DegradeOutcome::Unchanged);
+        assert!(feasible(&l, &degraded, &out.strategy), "degraded plan fits");
+        let mut all: Vec<u32> = out.strategy.groups.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, l.all_patches().collect::<Vec<_>>(), "coverage survives");
+        assert_eq!(out.loaded_pixels, grouping_loads(&l, &out.strategy.groups));
+        assert!(
+            out.winner.contains("+regroup") || out.winner.contains("+rerace") ||
+            out.winner.contains("+serialize"),
+            "provenance records the degrade: {}",
+            out.winner
+        );
+        // Determinism: the degrade ladder is a pure function of its inputs.
+        let (again, outcome2) = degrade_for_shrink(&l, &degraded, 4, &entry, &quick_opts());
+        assert_eq!(out, again);
+        assert_eq!(outcome, outcome2);
+    }
+
+    /// A worst-case shrink (budget at the single-patch floor) still yields
+    /// an executable plan.
+    #[test]
+    fn shrink_to_the_floor_still_plans() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 4);
+        let entry = sample_entry(&l, 4);
+        let degraded = degraded_accelerator(&l, &acc, u64::MAX);
+        assert_eq!(degraded.size_mem, Accelerator::for_group_size(&l, 1).size_mem);
+        let (out, outcome) = degrade_for_shrink(&l, &degraded, 4, &entry, &quick_opts());
+        assert_ne!(outcome, DegradeOutcome::Unchanged);
+        assert!(feasible(&l, &degraded, &out.strategy), "floor plan executes");
+        assert!(out.strategy.groups.iter().all(|g| g.len() == 1));
+    }
+
+    /// The memory bound honours both the memory and the compute cap.
+    #[test]
+    fn memory_group_bound_is_capped_by_both_resources() {
+        let l = ConvLayer::square(1, 6, 3, 1);
+        let acc = Accelerator::for_group_size(&l, 4);
+        assert_eq!(memory_group_bound(&l, &acc), 4);
+        // Double the memory: still capped by nbop_PE at 4.
+        let roomy = Accelerator { size_mem: acc.size_mem * 2, ..acc };
+        assert_eq!(memory_group_bound(&l, &roomy), 4);
+        // Shrink one patch's worth: memory caps it at 3.
+        let per = (l.input_elements_per_patch() + l.c_out()) as u64;
+        let tight = Accelerator { size_mem: acc.size_mem - per, ..acc };
+        assert_eq!(memory_group_bound(&l, &tight), 3);
+        // Pathologically tiny memory: floored at 1.
+        let tiny = Accelerator { size_mem: 1, ..acc };
+        assert_eq!(memory_group_bound(&l, &tiny), 1);
+    }
+}

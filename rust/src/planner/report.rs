@@ -107,6 +107,12 @@ pub fn format_batch_table(report: &BatchReport) -> String {
             s.shard_count,
         ));
     }
+    if s.panicked_lanes > 0 || s.degraded_stages > 0 {
+        out.push_str(&format!(
+            "resilience: {} portfolio lanes lost to panics, {} stages replanned after memory shrink\n",
+            s.panicked_lanes, s.degraded_stages,
+        ));
+    }
     out
 }
 
@@ -125,6 +131,8 @@ pub fn batch_to_json(report: &BatchReport) -> Json {
         .set("store_misses", s.store_misses)
         .set("anneal_iters_run", s.anneal_iters_run)
         .set("shard_count", s.shard_count)
+        .set("panicked_lanes", s.panicked_lanes)
+        .set("degraded_stages", s.degraded_stages)
         .set("cache", s.cache.to_json());
     let mut o = Json::obj();
     o.set(
@@ -156,6 +164,10 @@ mod tests {
         let table = format_batch_table(&report);
         assert!(table.contains("batch: 2 networks, 4 stages -> 2 unique planning problems"));
         assert!(table.contains("dedup: 2 hits (2 cross-network)"));
+        assert!(
+            !table.contains("resilience:"),
+            "clean batches stay quiet about resilience"
+        );
 
         let j = batch_to_json(&report);
         let stats = j.get("stats").unwrap();
@@ -164,6 +176,27 @@ mod tests {
             stats.get("cross_network_dedup_hits").unwrap().as_u64(),
             Some(2)
         );
+        assert_eq!(stats.get("panicked_lanes").unwrap().as_u64(), Some(0));
+        assert_eq!(stats.get("degraded_stages").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("plans").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chaotic_batch_surfaces_its_resilience_line() {
+        use crate::planner::ChaosSpec;
+        let lenet = network_preset("lenet5").unwrap();
+        let report = BatchPlanner::new(PlanOptions {
+            accelerator: AcceleratorSpec::PerLayerGroup(2),
+            anneal_iters: 200,
+            anneal_starts: 1,
+            ..PlanOptions::default()
+        })
+        .with_chaos(ChaosSpec { panic_lane: Some("greedy".into()) })
+        .plan_batch(&[lenet])
+        .unwrap();
+        assert!(report.stats.panicked_lanes > 0);
+        let table = format_batch_table(&report);
+        assert!(table.contains("resilience:"));
+        assert!(table.contains("portfolio lanes lost to panics"));
     }
 }

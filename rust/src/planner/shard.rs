@@ -37,11 +37,12 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::metrics::{CacheCounterSnapshot, CacheCounters};
-use crate::util::fsio::atomic_write;
+use crate::util::fsio::{atomic_write, sweep_orphan_temps};
 use crate::util::hash::fnv1a64;
 use crate::util::json::{self, Json};
 
 use super::cache::{entry_from_json, entry_to_json, CacheKey, CachedStrategy, StrategyStore};
+use super::recovery::retry_io;
 
 /// Default number of lock stripes / shard files.
 pub const DEFAULT_SHARDS: usize = 16;
@@ -106,6 +107,10 @@ impl ShardedStrategyCache {
     ) -> Result<ShardedStrategyCache, String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("create cache dir {}: {e}", dir.display()))?;
+        // Writers killed between temp-create and rename leave
+        // `.shard-NNN.json.tmp-*` orphans behind; sweep the dead ones so the
+        // directory stays one-file-per-shard across crashes.
+        sweep_orphan_temps(dir);
         let requested = shards.clamp(1, 256);
         let meta_path = dir.join("cache-meta.json");
         let n = match std::fs::read_to_string(&meta_path)
@@ -154,7 +159,7 @@ impl ShardedStrategyCache {
     pub fn len(&self) -> usize {
         (0..self.shard_count())
             .map(|i| {
-                let mut s = self.inner.shards[i].lock().unwrap();
+                let mut s = self.lock_shard(i);
                 self.ensure_loaded(i, &mut s);
                 s.entries.len()
             })
@@ -172,6 +177,45 @@ impl ShardedStrategyCache {
 
     fn shard_path(&self, index: usize) -> PathBuf {
         self.inner.dir.join(format!("shard-{index:03}.json"))
+    }
+
+    /// Lock shard `index`, recovering from lock poisoning. A poisoned mutex
+    /// means some holder panicked mid-mutation, so its in-memory map may be
+    /// half-updated: quarantine it — discard the state and mark the shard
+    /// unloaded so the next access rebuilds it from the persisted file
+    /// (which is always a complete generation thanks to [`atomic_write`]).
+    /// The event is tallied in `quarantined_shards`.
+    fn lock_shard(&self, index: usize) -> std::sync::MutexGuard<'_, ShardState> {
+        match self.inner.shards[index].lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let mut guard = poisoned.into_inner();
+                *guard = ShardState::default();
+                self.inner.shards[index].clear_poison();
+                self.inner
+                    .counters
+                    .quarantined_shards
+                    .fetch_add(1, Ordering::Relaxed);
+                guard
+            }
+        }
+    }
+
+    /// Chaos hook: poison shard `index`'s mutex exactly the way a crashed
+    /// planner worker would — a helper thread takes the lock and panics
+    /// while holding it. Used by the recovery tests and the CI chaos job;
+    /// harmless in production (the next [`Self::lock_shard`] quarantines
+    /// and reloads the shard).
+    pub fn chaos_poison_shard(&self, index: usize) {
+        let index = index % self.shard_count();
+        let cache = self.clone();
+        let handle = std::thread::spawn(move || {
+            let _guard = cache.inner.shards[index]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            panic!("chaos: poisoning shard {index}");
+        });
+        let _ = handle.join();
     }
 
     /// Load the shard file into `state` if not yet done. An unreadable file
@@ -209,7 +253,9 @@ impl ShardedStrategyCache {
     }
 
     /// Serialize `state` (entries in insertion order, so FIFO age survives a
-    /// round-trip) and persist it atomically.
+    /// round-trip) and persist it atomically. The write is retried with
+    /// bounded backoff ([`retry_io`]) — shard files sit on real filesystems
+    /// where transient `EAGAIN`-class failures are a fact of life.
     fn persist(&self, index: usize, state: &ShardState) -> Result<(), String> {
         let mut ordered: Vec<(&String, &Stored)> = state.entries.iter().collect();
         ordered.sort_by_key(|(_, s)| s.seq);
@@ -221,13 +267,17 @@ impl ShardedStrategyCache {
         doc.set("version", "sharded-cache-v1")
             .set("shard", index)
             .set("entries", Json::Arr(rows));
-        atomic_write(&self.shard_path(index), &doc.to_string_pretty())
+        let text = doc.to_string_pretty();
+        let path = self.shard_path(index);
+        retry_io(3, std::time::Duration::from_millis(2), || {
+            atomic_write(&path, &text)
+        })
     }
 
     /// Look up a key; any unreadable state degrades to a miss.
     pub fn get(&self, key: &CacheKey) -> Option<CachedStrategy> {
         let i = self.shard_index(key);
-        let mut state = self.inner.shards[i].lock().unwrap();
+        let mut state = self.lock_shard(i);
         self.ensure_loaded(i, &mut state);
         match state.entries.get(key.canonical()) {
             Some(stored) => {
@@ -246,7 +296,7 @@ impl ShardedStrategyCache {
     /// serializes them and the last insertion wins with a complete file.
     pub fn put(&self, key: &CacheKey, entry: &CachedStrategy) -> Result<(), String> {
         let i = self.shard_index(key);
-        let mut state = self.inner.shards[i].lock().unwrap();
+        let mut state = self.lock_shard(i);
         self.ensure_loaded(i, &mut state);
         let seq = state.next_seq;
         state.next_seq += 1;
@@ -487,6 +537,41 @@ mod tests {
         let seq_hit = cache.get(&seq_key).unwrap();
         assert_eq!(seq_hit.makespan, None, "sequential entry untouched");
         assert_eq!(cache.get(&db_key).unwrap().makespan, Some(99));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A poisoned shard mutex is quarantined (counter tick) and its state
+    /// rebuilt from the persisted file — no panic, no lost entries.
+    #[test]
+    fn poisoned_shard_is_quarantined_and_rebuilt_from_disk() {
+        let dir = tmp_dir("poison");
+        let cache = ShardedStrategyCache::open_with(&dir, 2, 64).unwrap();
+        let (_, key, entry) = sample(11);
+        cache.put(&key, &entry).unwrap();
+        let victim = cache.shard_index(&key);
+        cache.chaos_poison_shard(victim);
+        // First post-poison access recovers: entry reloads from disk.
+        assert_eq!(cache.get(&key), Some(entry.clone()));
+        assert_eq!(cache.stats().quarantined_shards, 1);
+        // The mutex is healthy again: no further quarantines.
+        assert_eq!(cache.get(&key), Some(entry.clone()));
+        cache.put(&key, &entry).unwrap();
+        assert_eq!(cache.stats().quarantined_shards, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression: a stale temp planted by a dead writer is swept on open.
+    #[test]
+    fn open_sweeps_crash_orphaned_temps() {
+        let dir = tmp_dir("orphan");
+        std::fs::create_dir_all(&dir).unwrap();
+        let stale = dir.join(".shard-000.json.tmp-4099998-3");
+        std::fs::write(&stale, "{trunc").unwrap();
+        let cache = ShardedStrategyCache::open_with(&dir, 2, 64).unwrap();
+        assert!(!stale.exists(), "dead writer's temp swept on open");
+        let (_, key, entry) = sample(1);
+        cache.put(&key, &entry).unwrap();
+        assert_eq!(cache.get(&key), Some(entry));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,398 @@
+//! Deterministic fault injection for the offload timeline models.
+//!
+//! The paper's platform is fault-free; real deployments are not. This module
+//! models three fault classes a predictable-offloading planner must survive
+//! *and bound*:
+//!
+//! * **transient DMA failures** — a step's input load fails and replays at
+//!   its full cost plus a fixed retry penalty (bounded retries per step);
+//! * **timing jitter** — bounded per-step noise on the DMA phase and on
+//!   `t_acc` (bus contention, DVFS wobble);
+//! * **memory shrink** — an event that permanently reduces the *effective*
+//!   `size_MEM` (e.g. a co-tenant claims SRAM). Functional execution is
+//!   unaffected (the strategy was validated against the full budget); what
+//!   shrink degrades is the §3.7 double-buffer residency condition, forcing
+//!   prefetches back to the serialization fallback, and the planner's cached
+//!   strategies, which [`crate::planner`] re-validates and degrades.
+//!
+//! Faults are drawn from a **stateless per-step stream**: step `i` seeds its
+//! own [`Rng`] as `seed ^ i·GOLDEN`, so the fault sequence is a pure function
+//! of `(fault seed, step index, step shape)` — independent of thread count,
+//! replay order, or how many steps were simulated before. The Python oracle
+//! (`python/oracle_sim.py`) mirrors the construction bit-exactly.
+//!
+//! The zero model ([`FaultModel::none`]) is the *structural identity*: every
+//! injected quantity is zero and every timeline recurrence reduces to the
+//! fault-free one, so zero-fault runs are bit-identical to the pinned
+//! baselines by construction, not by luck.
+
+use crate::util::rng::Rng;
+
+/// The SplitMix64 golden-ratio increment; decorrelates per-step seeds.
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// A seeded, replayable fault stream (see the module docs).
+///
+/// All-zero rates/jitters ([`FaultModel::none`], the `Default`) inject
+/// nothing and reproduce fault-free timelines bit-exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    /// Stream seed: same seed ⇒ same faults, everywhere, forever.
+    pub seed: u64,
+    /// Per-attempt probability that a step's input load fails and replays.
+    pub dma_fail_rate: f64,
+    /// Retry budget per step (attempts beyond the first); caps the replay
+    /// count so the worst case stays bounded.
+    pub max_retries: u32,
+    /// Fixed extra cycles charged per replay (bus re-arbitration etc.).
+    pub retry_penalty: u64,
+    /// Max extra cycles of jitter on a step's DMA phase (uniform in
+    /// `0..=dma_jitter`, drawn only for steps that move data).
+    pub dma_jitter: u64,
+    /// Max extra cycles of jitter on `t_acc` (uniform in `0..=t_acc_jitter`,
+    /// drawn only for compute steps).
+    pub t_acc_jitter: u64,
+    /// Per-step probability of a `MemoryShrink` event.
+    pub shrink_rate: f64,
+    /// Elements removed from the effective `size_MEM` per shrink event
+    /// (sticky: shrinks accumulate for the rest of the run).
+    pub shrink_elements: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel::none()
+    }
+}
+
+/// The faults injected into one step, as drawn by
+/// [`FaultModel::step_faults`]. Default = no faults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepFaults {
+    /// Failed load attempts: the load phase replays this many times.
+    pub load_retries: u32,
+    /// Extra cycles added to the step's DMA phase.
+    pub dma_jitter: u64,
+    /// Extra cycles added to the step's compute phase.
+    pub compute_jitter: u64,
+    /// Whether a `MemoryShrink` event fires at this step.
+    pub shrink: bool,
+}
+
+impl StepFaults {
+    /// True when this step is fault-free.
+    pub fn is_clean(&self) -> bool {
+        *self == StepFaults::default()
+    }
+}
+
+impl FaultModel {
+    /// The zero model: nothing fails, nothing jitters, nothing shrinks.
+    pub fn none() -> Self {
+        FaultModel {
+            seed: 0,
+            dma_fail_rate: 0.0,
+            max_retries: 0,
+            retry_penalty: 0,
+            dma_jitter: 0,
+            t_acc_jitter: 0,
+            shrink_rate: 0.0,
+            shrink_elements: 0,
+        }
+    }
+
+    /// The same stream under a different seed (builder-style; what
+    /// `--fault-seed` applies on top of `--faults`).
+    pub fn with_seed(self, seed: u64) -> Self {
+        FaultModel { seed, ..self }
+    }
+
+    /// True when this model can inject anything at all.
+    pub fn is_active(&self) -> bool {
+        (self.dma_fail_rate > 0.0 && self.max_retries > 0)
+            || self.dma_jitter > 0
+            || self.t_acc_jitter > 0
+            || (self.shrink_rate > 0.0 && self.shrink_elements > 0)
+    }
+
+    /// Draw the faults for step `index` of a run.
+    ///
+    /// The draw order is a cross-language contract (the Python oracle
+    /// replays it verbatim): retries while the load keeps failing (capped at
+    /// `max_retries`), then DMA jitter (only for steps that load or write),
+    /// then compute jitter (only for compute steps), then the shrink event.
+    /// Gating draws on the step shape keeps the stream stable when a
+    /// neighbouring phase is empty (a flush step consumes no compute draw).
+    pub fn step_faults(
+        &self,
+        index: u64,
+        loaded_elements: u64,
+        written_elements: u64,
+        computed: bool,
+    ) -> StepFaults {
+        let mut f = StepFaults::default();
+        if !self.is_active() {
+            return f;
+        }
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(GOLDEN));
+        if self.dma_fail_rate > 0.0 && loaded_elements > 0 {
+            for _ in 0..self.max_retries {
+                if rng.chance(self.dma_fail_rate) {
+                    f.load_retries += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        if self.dma_jitter > 0 && (loaded_elements > 0 || written_elements > 0) {
+            f.dma_jitter = rng.below(self.dma_jitter + 1);
+        }
+        if self.t_acc_jitter > 0 && computed {
+            f.compute_jitter = rng.below(self.t_acc_jitter + 1);
+        }
+        if self.shrink_rate > 0.0 && self.shrink_elements > 0 {
+            f.shrink = rng.chance(self.shrink_rate);
+        }
+        f
+    }
+
+    /// Analytic worst-case makespan under at most `k` DMA faults.
+    ///
+    /// `fault_free_duration` is the Definition-3 sequential sum of the
+    /// strategy, `n_steps`/`n_compute_steps` its step counts, and
+    /// `max_load_cycles` the largest single-step load phase (cycles). The
+    /// bound dominates **every** simulated trace with ≤ `k` retries, under
+    /// both overlap modes:
+    ///
+    /// * the double-buffered makespan never exceeds the faulted sequential
+    ///   sum (the §3.7 timeline property holds for arbitrary phase durations
+    ///   and prefetch flags, so shrink-forced serialization is covered);
+    /// * the faulted sequential sum is the fault-free sum plus per-step
+    ///   jitters (each ≤ its `*_jitter` cap) plus replays (each ≤
+    ///   `max_load_cycles + retry_penalty`, at most `k` of them).
+    ///
+    /// Monotone in `k` by construction. See `DESIGN.md` §3.9 for the proof
+    /// sketch and `rust/tests/integration_faults.rs` for the empirical check
+    /// against random traces.
+    pub fn makespan_under_k_faults(
+        &self,
+        fault_free_duration: u64,
+        n_steps: u64,
+        n_compute_steps: u64,
+        max_load_cycles: u64,
+        k: u64,
+    ) -> u64 {
+        fault_free_duration
+            + n_steps.saturating_mul(self.dma_jitter)
+            + n_compute_steps.saturating_mul(self.t_acc_jitter)
+            + k.saturating_mul(max_load_cycles + self.retry_penalty)
+    }
+
+    /// Parse a CLI fault spec: comma-separated `key=value` pairs.
+    ///
+    /// Keys: `dma` (fail rate), `retries`, `penalty`, `jitter` (DMA),
+    /// `acc-jitter`, `shrink` (rate), `shrink-el` (elements per event),
+    /// `seed`. Unset keys keep their defaults (`retries` defaults to 3 so
+    /// `--faults dma=0.1` alone is already a live model). Rates must lie in
+    /// `[0, 1]`.
+    pub fn from_spec(spec: &str) -> Result<FaultModel, String> {
+        let mut m = FaultModel { max_retries: 3, ..FaultModel::none() };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec '{part}': expected key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let rate = |v: &str| -> Result<f64, String> {
+                let r: f64 = v
+                    .parse()
+                    .map_err(|_| format!("fault spec {key}: bad rate '{v}'"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    return Err(format!("fault spec {key}: rate {r} outside [0, 1]"));
+                }
+                Ok(r)
+            };
+            let int = |v: &str| -> Result<u64, String> {
+                v.parse()
+                    .map_err(|_| format!("fault spec {key}: bad integer '{v}'"))
+            };
+            match key {
+                "dma" => m.dma_fail_rate = rate(value)?,
+                "retries" => m.max_retries = int(value)? as u32,
+                "penalty" => m.retry_penalty = int(value)?,
+                "jitter" => m.dma_jitter = int(value)?,
+                "acc-jitter" | "acc_jitter" => m.t_acc_jitter = int(value)?,
+                "shrink" => m.shrink_rate = rate(value)?,
+                "shrink-el" | "shrink_el" => m.shrink_elements = int(value)?,
+                "seed" => m.seed = int(value)?,
+                other => {
+                    return Err(format!(
+                        "fault spec: unknown key '{other}' \
+                         (dma|retries|penalty|jitter|acc-jitter|shrink|shrink-el|seed)"
+                    ))
+                }
+            }
+        }
+        Ok(m)
+    }
+
+    /// Stable spec round-trip (the inverse of [`FaultModel::from_spec`]) —
+    /// used by reports so a run's fault configuration is reproducible from
+    /// its artifacts alone.
+    pub fn to_spec(&self) -> String {
+        format!(
+            "dma={},retries={},penalty={},jitter={},acc-jitter={},shrink={},shrink-el={},seed={}",
+            self.dma_fail_rate,
+            self.max_retries,
+            self.retry_penalty,
+            self.dma_jitter,
+            self.t_acc_jitter,
+            self.shrink_rate,
+            self.shrink_elements,
+            self.seed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_is_inactive_and_clean() {
+        let m = FaultModel::none();
+        assert!(!m.is_active());
+        for i in 0..50 {
+            assert!(m.step_faults(i, 100, 10, true).is_clean());
+        }
+        // A rate with no retry budget, or a shrink rate with no elements,
+        // cannot inject anything either.
+        assert!(!FaultModel { dma_fail_rate: 0.5, ..FaultModel::none() }.is_active());
+        assert!(!FaultModel { shrink_rate: 0.5, ..FaultModel::none() }.is_active());
+    }
+
+    #[test]
+    fn per_step_streams_are_stateless_and_order_free() {
+        let m = FaultModel {
+            seed: 13,
+            dma_fail_rate: 0.4,
+            max_retries: 4,
+            retry_penalty: 3,
+            dma_jitter: 7,
+            t_acc_jitter: 5,
+            shrink_rate: 0.1,
+            shrink_elements: 8,
+        };
+        let forward: Vec<StepFaults> =
+            (0..32).map(|i| m.step_faults(i, 50, 5, true)).collect();
+        let backward: Vec<StepFaults> =
+            (0..32).rev().map(|i| m.step_faults(i, 50, 5, true)).collect();
+        let reversed: Vec<StepFaults> = backward.into_iter().rev().collect();
+        assert_eq!(forward, reversed, "step streams must not share state");
+        // And some step actually draws something at these rates.
+        assert!(forward.iter().any(|f| !f.is_clean()));
+    }
+
+    #[test]
+    fn draws_are_gated_on_the_step_shape() {
+        let m = FaultModel {
+            seed: 99,
+            dma_fail_rate: 1.0,
+            max_retries: 2,
+            dma_jitter: 10,
+            t_acc_jitter: 10,
+            ..FaultModel::none()
+        };
+        // A flush step (no loads, no compute) draws neither retries nor
+        // compute jitter; with writes it still draws DMA jitter.
+        let flush = m.step_faults(3, 0, 4, false);
+        assert_eq!(flush.load_retries, 0);
+        assert_eq!(flush.compute_jitter, 0);
+        // A pure compute step consumes no DMA draws.
+        let compute_only = m.step_faults(3, 0, 0, true);
+        assert_eq!(compute_only.dma_jitter, 0);
+        // Retries max out at the cap under rate 1.
+        let loaded = m.step_faults(3, 10, 0, true);
+        assert_eq!(loaded.load_retries, 2);
+    }
+
+    /// Cross-language pin: these exact values are asserted by the Python
+    /// oracle's RNG mirror (`python/tests/test_fault_oracle.py`). If this
+    /// test and the Python one both pass, the two implementations of
+    /// xoshiro256** + SplitMix64 + Lemire rejection are bit-identical.
+    #[test]
+    fn rng_cross_language_pins() {
+        let mut r = Rng::new(42);
+        assert_eq!(
+            [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            [
+                1546998764402558742,
+                6990951692964543102,
+                12544586762248559009,
+                17057574109182124193,
+                18295552978065317476,
+            ]
+        );
+        let mut r = Rng::new(7);
+        let below: Vec<u64> = (0..8).map(|_| r.below(100)).collect();
+        assert_eq!(below, vec![70, 27, 83, 98, 99, 87, 6, 10]);
+        let mut r = Rng::new(2026);
+        let chances: Vec<bool> = (0..12).map(|_| r.chance(0.3)).collect();
+        assert_eq!(
+            chances,
+            vec![
+                false, true, false, false, false, false, false, false, false, true,
+                false, false
+            ]
+        );
+        // Derived per-step seeds, exactly as step_faults() builds them.
+        let mut r = Rng::new(13 ^ 1u64.wrapping_mul(GOLDEN));
+        assert_eq!(r.next_u64(), 13543073186684114632);
+        assert_eq!(r.next_u64(), 8432558809597263448);
+    }
+
+    #[test]
+    fn spec_round_trips_and_validates() {
+        let m = FaultModel::from_spec(
+            "dma=0.1,retries=5,penalty=4,jitter=2,acc-jitter=1,shrink=0.05,shrink-el=16,seed=9",
+        )
+        .unwrap();
+        assert_eq!(m.dma_fail_rate, 0.1);
+        assert_eq!(m.max_retries, 5);
+        assert_eq!(m.retry_penalty, 4);
+        assert_eq!(m.dma_jitter, 2);
+        assert_eq!(m.t_acc_jitter, 1);
+        assert_eq!(m.shrink_rate, 0.05);
+        assert_eq!(m.shrink_elements, 16);
+        assert_eq!(m.seed, 9);
+        assert_eq!(FaultModel::from_spec(&m.to_spec()).unwrap(), m);
+        // Defaults: retries pre-set so a bare rate is live.
+        let bare = FaultModel::from_spec("dma=0.2").unwrap();
+        assert_eq!(bare.max_retries, 3);
+        assert!(bare.is_active());
+        assert!(FaultModel::from_spec("dma=1.5").is_err());
+        assert!(FaultModel::from_spec("dma").is_err());
+        assert!(FaultModel::from_spec("bogus=1").is_err());
+    }
+
+    #[test]
+    fn wcet_bound_is_monotone_in_k() {
+        let m = FaultModel {
+            retry_penalty: 5,
+            dma_jitter: 3,
+            t_acc_jitter: 2,
+            ..FaultModel::none()
+        };
+        let mut prev = 0;
+        for k in 0..20 {
+            let b = m.makespan_under_k_faults(1000, 10, 9, 40, k);
+            assert!(b >= prev);
+            prev = b;
+        }
+        assert_eq!(m.makespan_under_k_faults(1000, 10, 9, 40, 0), 1000 + 30 + 18);
+        assert_eq!(m.makespan_under_k_faults(1000, 10, 9, 40, 2), 1000 + 30 + 18 + 90);
+    }
+}

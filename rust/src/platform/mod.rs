@@ -1,7 +1,10 @@
-//! Platform model (§2.1): accelerator, DRAM and the on-chip memory state.
+//! Platform model (§2.1): accelerator, DRAM and the on-chip memory state —
+//! plus the deterministic fault-injection layer ([`FaultModel`]).
 
 mod accelerator;
+mod fault;
 mod memory;
 
 pub use accelerator::{Accelerator, OverlapMode, Platform};
+pub use fault::{FaultModel, StepFaults};
 pub use memory::{KernelSet, MemoryState, OnChipMemory, OutputSet};

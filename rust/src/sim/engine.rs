@@ -1,7 +1,7 @@
 //! The simulation engine: §6's orchestration loop.
 
 use crate::conv::{ConvLayer, PatchId};
-use crate::platform::{MemoryState, OverlapMode, Platform};
+use crate::platform::{FaultModel, MemoryState, OverlapMode, Platform};
 use crate::sim::{ComputeBackend, SimReport, StepRecord};
 use crate::step::{self, OverlapTimeline, Step, StepError};
 use crate::strategy::GroupedStrategy;
@@ -38,12 +38,25 @@ pub struct Simulator {
     pub platform: Platform,
     /// Enforce the §2.3 assumptions during stepping (default true).
     pub strict: bool,
+    /// Optional deterministic fault injection (None = fault-free; an
+    /// inactive model is treated identically to None).
+    pub faults: Option<FaultModel>,
 }
 
 impl Simulator {
-    /// A strict-mode simulator for `layer` on `platform`.
+    /// A strict-mode, fault-free simulator for `layer` on `platform`.
     pub fn new(layer: ConvLayer, platform: Platform) -> Self {
-        Simulator { layer, platform, strict: true }
+        Simulator { layer, platform, strict: true, faults: None }
+    }
+
+    /// The same simulator with a [`FaultModel`] injected (builder-style).
+    /// Faults perturb *timing only* — retries, jitter, and the shrink-driven
+    /// prefetch fallback; the functional semantics and the strict §2.3
+    /// checks are unchanged, because a shrunk memory degrades performance,
+    /// not correctness, for a strategy validated against the full budget.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = Some(faults);
+        self
     }
 
     /// Logical simulation: execute the strategy, tracking sets and costs
@@ -147,6 +160,20 @@ impl Simulator {
         // Occupancy at the end of the previous step — the left-hand side of
         // the §3.7 double-buffer residency condition.
         let mut prev_occupancy = 0u64;
+        // Fault state: the effective memory budget shrinks (stickily) as
+        // MemoryShrink events fire; an inactive model injects nothing.
+        let fm = self.faults.filter(FaultModel::is_active);
+        let retry_penalty = fm.map_or(0, |m| m.retry_penalty);
+        let mut effective_mem = acc.size_mem;
+        let mut total_retries = 0u64;
+        let mut shrink_events = 0u64;
+        let mut max_load_cycles = 0u64;
+        // Busy totals accumulate the *effective* (post-fault) phases so the
+        // resource floor `duration ≥ max(dma_busy, compute_busy)` stays a
+        // theorem under injection; with no faults these sums are bit-equal
+        // to the totals-derived values used before fault support.
+        let mut dma_busy = 0u64;
+        let mut compute_busy = 0u64;
         for (i, st) in steps.iter().enumerate() {
             // Value movement must mirror the action order: frees/writes
             // before loads, compute last. Writes need the *pre-step* values.
@@ -155,23 +182,41 @@ impl Simulator {
             }
             let outcome = step::apply(&self.layer, acc, mem, st, self.strict)
                 .map_err(|error| SimError::Step { index: i, error })?;
+            let fx = fm
+                .map(|m| {
+                    m.step_faults(
+                        i as u64,
+                        outcome.cost.loaded_elements,
+                        outcome.cost.written_elements,
+                        outcome.cost.computed,
+                    )
+                })
+                .unwrap_or_default();
+            if fx.shrink {
+                shrink_events += 1;
+                effective_mem =
+                    effective_mem.saturating_sub(fm.expect("shrink implies model").shrink_elements);
+            }
+            total_retries += fx.load_retries as u64;
+            max_load_cycles = max_load_cycles.max(outcome.cost.load_cycles(acc));
+            let load_cycles = outcome.cost.faulted_load_cycles(acc, &fx, retry_penalty);
+            let write_cycles = outcome.cost.written_elements * acc.t_w;
+            let compute_cycles = outcome.cost.faulted_compute_cycles(acc, &fx);
+            dma_busy += load_cycles + write_cycles;
+            compute_busy += compute_cycles;
             let timing = timeline.as_mut().map(|t| {
-                // Residency condition: this step's incoming elements must
-                // fit alongside the previous step's still-live working set,
-                // or the load serializes behind the previous compute.
+                // Residency condition against the *effective* (shrunk)
+                // budget: this step's incoming elements must fit alongside
+                // the previous step's still-live working set, or the load
+                // serializes behind the previous compute.
                 let can_prefetch =
-                    prev_occupancy + outcome.cost.loaded_elements <= acc.size_mem;
-                t.push(
-                    outcome.cost.loaded_elements * acc.t_l,
-                    outcome.cost.written_elements * acc.t_w,
-                    outcome.cost.compute_cycles(acc),
-                    can_prefetch,
-                )
+                    prev_occupancy + outcome.cost.loaded_elements <= effective_mem;
+                t.push(load_cycles, write_cycles, compute_cycles, can_prefetch)
             });
             prev_occupancy = outcome.occupancy;
             report.push_step(StepRecord {
                 index: i,
-                duration: outcome.cost.duration(acc),
+                duration: outcome.cost.faulted_duration(acc, &fx, retry_penalty),
                 cost: outcome.cost,
                 occupancy: outcome.occupancy,
                 resident_input_elements: (mem.inp.len() * self.layer.c_in) as u64,
@@ -181,12 +226,29 @@ impl Simulator {
         }
         // Resource busy totals hold in either mode; the double-buffered
         // duration is the critical-path makespan instead of the sum.
-        report.dma_busy = report.totals.total.dma_cycles(acc);
-        report.compute_busy = report.totals.n_compute_steps * acc.t_acc;
+        report.dma_busy = dma_busy;
+        report.compute_busy = compute_busy;
         if let Some(t) = timeline {
             debug_assert_eq!(t.dma_busy(), report.dma_busy);
             debug_assert_eq!(t.compute_busy(), report.compute_busy);
             report.duration = t.makespan();
+        }
+        if let Some(m) = fm {
+            report.fault_retries = total_retries;
+            report.mem_shrink_events = shrink_events;
+            // The analytic k-fault worst case at the trace's own k — the
+            // bound every simulated trace with ≤ k retries must respect.
+            report.wcet_bound = Some(m.makespan_under_k_faults(
+                report.totals.duration(acc),
+                report.totals.n_steps,
+                report.totals.n_compute_steps,
+                max_load_cycles,
+                total_retries,
+            ));
+            debug_assert!(
+                report.wcet_bound.unwrap() >= report.duration,
+                "WCET bound below a simulated trace"
+            );
         }
         Ok(())
     }
@@ -526,6 +588,91 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Fault injection contract on the hand-computed chain: the zero model
+    /// (and an attached-but-inactive model) is bit-identical to the
+    /// fault-free run; an active model inflates the makespan, never deflates
+    /// it, stays deterministic, and respects its own WCET bound.
+    #[test]
+    fn fault_injection_identity_and_inflation() {
+        use crate::platform::FaultModel;
+        let l = ConvLayer::new(1, 3, 12, 3, 3, 1, 1, 1).unwrap();
+        let s = strategy::row_by_row(&l, 4);
+        let base = Accelerator { t_acc: 4, t_w: 1, ..Accelerator::paper_eval(36, 64) };
+        for acc in [base, base.with_overlap(OverlapMode::DoubleBuffered)] {
+            let clean = Simulator::new(l, Platform::new(acc)).run(&s).unwrap();
+            let zero = Simulator::new(l, Platform::new(acc))
+                .with_faults(FaultModel::none().with_seed(99))
+                .run(&s)
+                .unwrap();
+            assert_eq!(zero.duration, clean.duration, "{}", acc.overlap.as_str());
+            assert_eq!(zero.sequential_duration, clean.sequential_duration);
+            assert_eq!(zero.dma_busy, clean.dma_busy);
+            assert_eq!(zero.compute_busy, clean.compute_busy);
+            assert_eq!(zero.wcet_bound, None, "inactive model reports no bound");
+
+            let m = FaultModel {
+                seed: 7,
+                dma_fail_rate: 0.5,
+                max_retries: 3,
+                retry_penalty: 5,
+                dma_jitter: 4,
+                t_acc_jitter: 2,
+                shrink_rate: 0.3,
+                shrink_elements: 16,
+            };
+            let a = Simulator::new(l, Platform::new(acc)).with_faults(m).run(&s).unwrap();
+            let b = Simulator::new(l, Platform::new(acc)).with_faults(m).run(&s).unwrap();
+            assert_eq!(a.duration, b.duration, "same seed, same trace");
+            assert_eq!(a.fault_retries, b.fault_retries);
+            assert_eq!(a.mem_shrink_events, b.mem_shrink_events);
+            assert!(a.duration >= clean.duration, "faults never speed a run up");
+            assert!(a.fault_retries > 0, "rate 0.5 over 4 steps must retry");
+            let wcet = a.wcet_bound.expect("active model reports the bound");
+            assert!(wcet >= a.duration, "bound must dominate the trace");
+            // A different seed gives a different (but still bounded) trace.
+            let c = Simulator::new(l, Platform::new(acc))
+                .with_faults(m.with_seed(8))
+                .run(&s)
+                .unwrap();
+            assert!(c.wcet_bound.unwrap() >= c.duration);
+        }
+    }
+
+    /// A shrink-only model leaves sequential runs untouched (shrink affects
+    /// only the residency condition) but forces the tight double buffer to
+    /// serialize more — duration rises toward, never past, the sequential
+    /// sum.
+    #[test]
+    fn shrink_only_faults_degrade_overlap_not_sequential() {
+        use crate::platform::FaultModel;
+        let l = ConvLayer::new(1, 3, 12, 3, 3, 1, 1, 1).unwrap();
+        let s = strategy::row_by_row(&l, 4);
+        let m = FaultModel {
+            seed: 3,
+            shrink_rate: 1.0, // every step shrinks
+            shrink_elements: 20,
+            ..FaultModel::none()
+        };
+        let seq = Accelerator { t_acc: 4, t_w: 1, ..Accelerator::paper_eval(36, 64) };
+        let clean_seq = Simulator::new(l, Platform::new(seq)).run(&s).unwrap();
+        let fault_seq =
+            Simulator::new(l, Platform::new(seq)).with_faults(m).run(&s).unwrap();
+        assert_eq!(fault_seq.duration, clean_seq.duration);
+        assert!(fault_seq.mem_shrink_events > 0);
+
+        let db = seq.with_overlap(OverlapMode::DoubleBuffered);
+        let clean_db = Simulator::new(l, Platform::new(db)).run(&s).unwrap();
+        let fault_db =
+            Simulator::new(l, Platform::new(db)).with_faults(m).run(&s).unwrap();
+        assert!(fault_db.duration >= clean_db.duration);
+        assert!(fault_db.duration <= fault_db.sequential_duration);
+        assert!(
+            fault_db.steps.iter().filter(|st| st.timing.is_some_and(|t| t.prefetched)).count()
+                < clean_db.steps.iter().filter(|st| st.timing.is_some_and(|t| t.prefetched)).count(),
+            "an exhausted budget must deny prefetches the clean run allowed"
+        );
     }
 
     #[test]

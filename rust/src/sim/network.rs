@@ -9,7 +9,7 @@
 //! activations through every layer's stepwise offload.
 
 use crate::conv::ConvLayer;
-use crate::platform::{Accelerator, Platform};
+use crate::platform::{Accelerator, FaultModel, Platform};
 use crate::sim::{ComputeBackend, SimError, Simulator};
 use crate::strategy::GroupedStrategy;
 
@@ -54,6 +54,13 @@ pub struct NetworkReport {
     pub total_sequential_duration: u64,
     /// Largest on-chip occupancy over all stages (elements).
     pub peak_occupancy: u64,
+    /// DMA retries injected across all stages (0 without a fault model).
+    pub fault_retries: u64,
+    /// `MemoryShrink` events across all stages (0 without a fault model).
+    pub mem_shrink_events: u64,
+    /// Sum of the per-stage analytic k-fault WCET bounds — present only for
+    /// fault-injected runs; dominates `total_duration` whenever present.
+    pub wcet_bound: Option<u64>,
     /// Final activation tensor (functional mode).
     pub output: Option<Vec<f32>>,
     /// Worst per-stage functional error vs. the reference chain.
@@ -76,6 +83,13 @@ pub struct StageReport {
     pub peak_occupancy: u64,
     /// Steps executed (compute steps + terminal flush).
     pub n_steps: u64,
+    /// DMA retries injected into this stage (0 without a fault model).
+    pub fault_retries: u64,
+    /// `MemoryShrink` events that fired in this stage.
+    pub mem_shrink_events: u64,
+    /// Per-stage analytic k-fault WCET bound at the trace's own retry count
+    /// (fault-injected runs only; always ≥ `duration`).
+    pub wcet_bound: Option<u64>,
 }
 
 /// Input dimensions the stage *after* `layer` sees, given the plumbing
@@ -114,23 +128,47 @@ impl Network {
         Ok(())
     }
 
-    /// Logical pipeline simulation.
+    /// Logical pipeline simulation (fault-free).
     pub fn run(&self) -> Result<NetworkReport, SimError> {
+        self.run_with_faults(None)
+    }
+
+    /// Logical pipeline simulation under an optional [`FaultModel`].
+    ///
+    /// Each stage replays the *same* seeded stream (fault draws are keyed by
+    /// step index within the stage), so a network trace is as replayable as
+    /// a single-stage one. Without a model — or with an inactive one — this
+    /// is bit-identical to [`Network::run`].
+    pub fn run_with_faults(
+        &self,
+        faults: Option<&FaultModel>,
+    ) -> Result<NetworkReport, SimError> {
         let mut report = NetworkReport {
             per_stage: Vec::new(),
             total_duration: 0,
             total_sequential_duration: 0,
             peak_occupancy: 0,
+            fault_retries: 0,
+            mem_shrink_events: 0,
+            wcet_bound: None,
             output: None,
             max_abs_error: None,
         };
         for stage in &self.stages {
-            let sim =
+            let mut sim =
                 Simulator::new(stage.layer, Platform::new(stage.accelerator));
+            if let Some(m) = faults {
+                sim = sim.with_faults(*m);
+            }
             let r = sim.run(&stage.strategy)?;
             report.total_duration += r.duration;
             report.total_sequential_duration += r.sequential_duration;
             report.peak_occupancy = report.peak_occupancy.max(r.peak_occupancy);
+            report.fault_retries += r.fault_retries;
+            report.mem_shrink_events += r.mem_shrink_events;
+            if let Some(w) = r.wcet_bound {
+                *report.wcet_bound.get_or_insert(0) += w;
+            }
             report.per_stage.push(StageReport {
                 name: stage.name.clone(),
                 duration: r.duration,
@@ -138,6 +176,9 @@ impl Network {
                 loaded_elements: r.total_loaded(),
                 peak_occupancy: r.peak_occupancy,
                 n_steps: r.totals.n_steps,
+                fault_retries: r.fault_retries,
+                mem_shrink_events: r.mem_shrink_events,
+                wcet_bound: r.wcet_bound,
             });
         }
         Ok(report)
@@ -164,6 +205,9 @@ impl Network {
             total_duration: 0,
             total_sequential_duration: 0,
             peak_occupancy: 0,
+            fault_retries: 0,
+            mem_shrink_events: 0,
+            wcet_bound: None,
             output: None,
             max_abs_error: Some(0.0),
         };
@@ -185,6 +229,9 @@ impl Network {
                 loaded_elements: r.total_loaded(),
                 peak_occupancy: r.peak_occupancy,
                 n_steps: r.totals.n_steps,
+                fault_retries: 0,
+                mem_shrink_events: 0,
+                wcet_bound: None,
             });
             activation = r.output.expect("functional mode fills output");
             let mut dims = stage.layer.output_dims();
@@ -473,6 +520,44 @@ mod tests {
         for s in &db.per_stage {
             assert!(s.duration <= s.sequential_duration, "{}", s.name);
         }
+    }
+
+    /// Fault-injected pipelines: zero faults are the identity, an active
+    /// model is deterministic, inflates totals monotonically, and the summed
+    /// per-stage WCET bound dominates the whole trace.
+    #[test]
+    fn fault_injected_pipeline_is_bounded_and_deterministic() {
+        let net = lenet5_trunk(|l, g| strategy::zigzag(l, g), 4);
+        let clean = net.run().unwrap();
+        let zero = net.run_with_faults(Some(&FaultModel::none())).unwrap();
+        assert_eq!(zero.total_duration, clean.total_duration);
+        assert_eq!(zero.wcet_bound, None);
+
+        let m = FaultModel {
+            seed: 11,
+            dma_fail_rate: 0.2,
+            max_retries: 2,
+            retry_penalty: 4,
+            dma_jitter: 2,
+            t_acc_jitter: 1,
+            shrink_rate: 0.05,
+            shrink_elements: 8,
+        };
+        let a = net.run_with_faults(Some(&m)).unwrap();
+        let b = net.run_with_faults(Some(&m)).unwrap();
+        assert_eq!(a.total_duration, b.total_duration);
+        assert_eq!(a.fault_retries, b.fault_retries);
+        assert!(a.total_duration >= clean.total_duration);
+        assert!(a.fault_retries > 0, "rate 0.2 across the trunk must retry");
+        let wcet = a.wcet_bound.expect("bound present under faults");
+        assert!(wcet >= a.total_duration);
+        for s in &a.per_stage {
+            assert!(s.wcet_bound.unwrap() >= s.duration, "{}", s.name);
+        }
+        assert_eq!(
+            a.fault_retries,
+            a.per_stage.iter().map(|s| s.fault_retries).sum::<u64>()
+        );
     }
 
     #[test]

@@ -49,6 +49,16 @@ pub struct SimReport {
     pub compute_busy: u64,
     /// Peak element occupancy across steps.
     pub peak_occupancy: u64,
+    /// DMA retries injected by the run's [`crate::platform::FaultModel`]
+    /// (0 without one).
+    pub fault_retries: u64,
+    /// `MemoryShrink` events that fired during the run (0 without faults).
+    pub mem_shrink_events: u64,
+    /// Analytic k-fault worst case
+    /// ([`crate::platform::FaultModel::makespan_under_k_faults`]) evaluated
+    /// at `k = fault_retries` — present only for fault-injected runs, and
+    /// always ≥ `duration`.
+    pub wcet_bound: Option<u64>,
     /// Output of the functional simulation (present in functional mode).
     pub output: Option<Vec<f32>>,
     /// Max |output - reference| from the functional check (if run).
@@ -69,6 +79,9 @@ impl SimReport {
             dma_busy: 0,
             compute_busy: 0,
             peak_occupancy: 0,
+            fault_retries: 0,
+            mem_shrink_events: 0,
+            wcet_bound: None,
             output: None,
             max_abs_error: None,
         }
@@ -121,6 +134,11 @@ impl SimReport {
             .set("n_steps", self.totals.n_steps)
             .set("n_compute_steps", self.totals.n_compute_steps)
             .set("peak_occupancy", self.peak_occupancy);
+        if let Some(wcet) = self.wcet_bound {
+            o.set("fault_retries", self.fault_retries)
+                .set("mem_shrink_events", self.mem_shrink_events)
+                .set("wcet_bound", wcet);
+        }
         if let Some(err) = self.max_abs_error {
             o.set("max_abs_error", err as f64);
         }
@@ -168,6 +186,15 @@ pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
             report.hidden_cycles(),
             report.dma_busy,
             report.compute_busy,
+        ));
+    }
+    if let Some(wcet) = report.wcet_bound {
+        line.push_str(&format!(
+            "  [faults: {} retries | {} shrink events | WCET({}) = {} cycles]",
+            report.fault_retries,
+            report.mem_shrink_events,
+            report.fault_retries,
+            wcet,
         ));
     }
     line

@@ -2,7 +2,7 @@
 //! overlapped timeline ([`OverlapTimeline`]) behind
 //! [`crate::platform::OverlapMode::DoubleBuffered`].
 
-use crate::platform::Accelerator;
+use crate::platform::{Accelerator, StepFaults};
 
 /// Cost of one step, broken into the terms of Definition 3:
 /// `δ(s_i) = (|I^slice| + |K^sub|)·t_l + |W|·t_w + t_acc`.
@@ -32,6 +32,47 @@ impl StepCost {
     /// Cycles this step occupies the compute unit (`t_acc` or 0).
     pub fn compute_cycles(&self, acc: &Accelerator) -> u64 {
         if self.computed { acc.t_acc } else { 0 }
+    }
+
+    /// Cycles of the load phase alone: `|I|·t_l` (the quantity a DMA retry
+    /// replays).
+    pub fn load_cycles(&self, acc: &Accelerator) -> u64 {
+        self.loaded_elements * acc.t_l
+    }
+
+    /// The retry-aware load phase: each failed attempt replays the load at
+    /// full cost plus `retry_penalty`, and the drawn DMA jitter lands here
+    /// (the phase that owns the bus first). With clean faults this is
+    /// exactly [`StepCost::load_cycles`].
+    pub fn faulted_load_cycles(
+        &self,
+        acc: &Accelerator,
+        faults: &StepFaults,
+        retry_penalty: u64,
+    ) -> u64 {
+        let load = self.load_cycles(acc);
+        load + (faults.load_retries as u64) * (load + retry_penalty) + faults.dma_jitter
+    }
+
+    /// The jitter-aware compute phase (clean faults ⇒
+    /// [`StepCost::compute_cycles`]).
+    pub fn faulted_compute_cycles(&self, acc: &Accelerator, faults: &StepFaults) -> u64 {
+        self.compute_cycles(acc) + faults.compute_jitter
+    }
+
+    /// Retry-aware Definition-3 step duration: faulted load phase + writes +
+    /// faulted compute. The sequential recurrence under faults is the sum of
+    /// these, and the double-buffered one places the same three phases on
+    /// the [`OverlapTimeline`] — so the two semantics degrade consistently.
+    pub fn faulted_duration(
+        &self,
+        acc: &Accelerator,
+        faults: &StepFaults,
+        retry_penalty: u64,
+    ) -> u64 {
+        self.faulted_load_cycles(acc, faults, retry_penalty)
+            + self.written_elements * acc.t_w
+            + self.faulted_compute_cycles(acc, faults)
     }
 
     /// Accumulate another step's cost (for strategy totals).
@@ -285,6 +326,27 @@ mod tests {
         }
         assert!(t.makespan() <= sequential);
         assert!(t.makespan() >= t.dma_busy().max(t.compute_busy()));
+    }
+
+    /// The retry recurrence: clean faults are the identity, each retry
+    /// replays the full load + penalty, jitter adds linearly on both units.
+    #[test]
+    fn faulted_costs_reduce_to_clean_and_charge_retries() {
+        let c = StepCost { loaded_elements: 10, written_elements: 4, computed: true, macs: 9 };
+        let a = acc();
+        let clean = StepFaults::default();
+        assert_eq!(c.faulted_load_cycles(&a, &clean, 7), c.load_cycles(&a));
+        assert_eq!(c.faulted_compute_cycles(&a, &clean), c.compute_cycles(&a));
+        assert_eq!(c.faulted_duration(&a, &clean, 7), c.duration(&a));
+
+        let f = StepFaults { load_retries: 2, dma_jitter: 3, compute_jitter: 5, shrink: false };
+        // load 20 cycles, 2 replays of (20 + penalty 7), + 3 jitter
+        assert_eq!(c.faulted_load_cycles(&a, &f, 7), 20 + 2 * 27 + 3);
+        assert_eq!(c.faulted_compute_cycles(&a, &f), 3 + 5);
+        assert_eq!(
+            c.faulted_duration(&a, &f, 7),
+            (20 + 54 + 3) + 4 * 5 + (3 + 5)
+        );
     }
 
     #[test]

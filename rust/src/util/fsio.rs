@@ -58,6 +58,62 @@ pub fn atomic_write(path: &Path, contents: &str) -> Result<(), String> {
     })
 }
 
+/// Remove orphaned `.{name}.tmp-{pid}-{seq}` siblings left in `dir` by
+/// writers that died between `File::create` and the cleanup in
+/// [`atomic_write`] — i.e. processes killed mid-write. Returns how many
+/// temps were deleted.
+///
+/// A temp is an orphan when its embedded pid is not this process and (on
+/// systems with `/proc`) that pid is no longer alive. Temps owned by the
+/// current process are always kept: another thread may be mid-write.
+/// Deletion failures are ignored — a concurrent sweeper may have won the
+/// race, and a stale temp is harmless until the next sweep.
+pub fn sweep_orphan_temps(dir: &Path) -> usize {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return 0,
+    };
+    let own_pid = std::process::id();
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(pid) = temp_owner_pid(&name) else { continue };
+        if pid == own_pid || pid_is_alive(pid) {
+            continue;
+        }
+        if std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Parse the owner pid out of a `.{name}.tmp-{pid}-{seq}` temp file name;
+/// `None` for anything that is not one of our temps.
+fn temp_owner_pid(name: &str) -> Option<u32> {
+    if !name.starts_with('.') {
+        return None;
+    }
+    let tail = name.rsplit(".tmp-").next().filter(|t| *t != name)?;
+    let (pid, seq) = tail.split_once('-')?;
+    if seq.is_empty() || !seq.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    pid.parse::<u32>().ok()
+}
+
+/// Is `pid` a live process? Uses `/proc` where available; on systems
+/// without it, conservatively reports alive (never delete a temp whose
+/// owner we cannot rule out).
+fn pid_is_alive(pid: u32) -> bool {
+    let proc_root = Path::new("/proc");
+    if !proc_root.is_dir() {
+        return true;
+    }
+    proc_root.join(pid.to_string()).exists()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +177,46 @@ mod tests {
         assert!(text.starts_with("writer-"));
         assert!(text.ends_with(&"y".repeat(64)));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression for crash-orphaned temps: a temp planted with a dead
+    /// foreign pid is swept; temps owned by this process and ordinary files
+    /// survive.
+    #[test]
+    fn sweep_removes_only_dead_foreign_temps() {
+        let dir = tmp_dir("sweep");
+        std::fs::write(dir.join("shard-000.json"), "{}").unwrap();
+        // Dead foreign writer: pid 4e6+ is far above any default pid_max.
+        let stale = dir.join(".shard-000.json.tmp-4099999-0");
+        std::fs::write(&stale, "truncat").unwrap();
+        // Live local writer (this process): must be kept.
+        let own = dir.join(format!(
+            ".shard-001.json.tmp-{}-7",
+            std::process::id()
+        ));
+        std::fs::write(&own, "mid-write").unwrap();
+        // Not one of our temps: must be kept.
+        std::fs::write(dir.join(".hidden.tmp-notapid-x"), "?").unwrap();
+
+        assert_eq!(sweep_orphan_temps(&dir), 1);
+        assert!(!stale.exists(), "dead-owner temp should be swept");
+        assert!(own.exists(), "own temp must survive");
+        assert!(dir.join("shard-000.json").exists());
+        assert!(dir.join(".hidden.tmp-notapid-x").exists());
+        // Idempotent.
+        assert_eq!(sweep_orphan_temps(&dir), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn temp_name_parsing_is_strict() {
+        assert_eq!(temp_owner_pid(".x.json.tmp-123-4"), Some(123));
+        assert_eq!(temp_owner_pid(".x.json.tmp-123-45"), Some(123));
+        assert_eq!(temp_owner_pid("x.json.tmp-123-4"), None, "no leading dot");
+        assert_eq!(temp_owner_pid(".x.json"), None, "no temp marker");
+        assert_eq!(temp_owner_pid(".x.json.tmp-abc-4"), None, "non-numeric pid");
+        assert_eq!(temp_owner_pid(".x.json.tmp-123-"), None, "empty seq");
+        assert_eq!(temp_owner_pid(".x.json.tmp-123-4x"), None, "bad seq");
     }
 
     #[test]

@@ -3,7 +3,17 @@
 //! The figure grids (Fig. 12/13) are embarrassingly parallel across cells;
 //! [`parallel_map`] fans work out over `std::thread::scope` with a shared
 //! atomic work index, preserving input order in the output.
+//!
+//! Both entry points are **panic-hardened**: a panic inside `f` is caught at
+//! the item that raised it, so one poisoned work item can never tear down
+//! the scope and take every other item's result with it (the failure mode
+//! that used to abort a whole `plan-batch` when a single portfolio lane
+//! crashed). [`parallel_map`] preserves its historical contract by re-raising
+//! the first panic *after* the scope joins cleanly; [`parallel_map_catch`]
+//! converts panics into `None` slots for supervisors (the planner's recovery
+//! layer) that want to keep the survivors.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -20,11 +30,51 @@ pub fn default_threads() -> usize {
         .min(16)
 }
 
+/// Lock a pool-internal mutex even if a previous holder panicked while it
+/// held the guard: every value behind these locks is written in a single
+/// assignment or push, so a poisoned lock still guards structurally sound
+/// data — recover the guard and keep going.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Apply `f` to every item in parallel, returning results in input order.
 ///
 /// `f` must be `Sync` (called concurrently from many threads); items are
 /// claimed with an atomic cursor so imbalanced work self-balances.
+///
+/// Panic semantics: if any `f(item)` panics, every *other* item still runs
+/// to completion, the scope joins, and the first panic payload is re-raised
+/// on the caller's thread — same observable contract as before hardening,
+/// minus the collateral loss of sibling work (and of any unrelated caller
+/// sharing the scope).
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let (results, mut panics) = parallel_map_catch(items, threads, f);
+    if let Some(payload) = panics.pop() {
+        resume_unwind(payload);
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("no panic implies every slot is filled"))
+        .collect()
+}
+
+/// Panic-tolerant parallel map: apply `f` to every item, catching panics
+/// per item. Returns the results in input order (`None` where `f` panicked)
+/// plus the captured panic payloads in claim order.
+///
+/// This is the supervision primitive behind the planner's recovery layer: a
+/// crashed portfolio lane costs one lane, not the batch.
+pub fn parallel_map_catch<T, R, F>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> (Vec<Option<R>>, Vec<Box<dyn std::any::Any + Send>>)
 where
     T: Sync,
     R: Send,
@@ -32,33 +82,42 @@ where
 {
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     let threads = threads.clamp(1, n);
-    if threads == 1 {
-        return items.iter().map(|x| f(x)).collect();
-    }
-    let cursor = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> =
-        (0..n).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
+    let panics: Mutex<Vec<Box<dyn std::any::Any + Send>>> = Mutex::new(Vec::new());
+    let run_one = |i: usize, out: &Mutex<Option<R>>| {
+        match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
+            Ok(r) => *lock_ignore_poison(out) = Some(r),
+            Err(payload) => lock_ignore_poison(&panics).push(payload),
         }
-    });
-
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
-        .collect()
+    };
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    if threads == 1 {
+        for (i, slot) in results.iter().enumerate() {
+            run_one(i, slot);
+        }
+    } else {
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    run_one(i, &results[i]);
+                });
+            }
+        });
+    }
+    (
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap_or_else(|p| p.into_inner()))
+            .collect(),
+        panics.into_inner().unwrap_or_else(|p| p.into_inner()),
+    )
 }
 
 #[cfg(test)]
@@ -102,5 +161,67 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    /// One panicking item loses exactly its own slot; all survivors land in
+    /// order, and the payload is reported — on every thread-count path.
+    #[test]
+    fn catch_isolates_a_panicking_item() {
+        let items: Vec<u64> = (0..32).collect();
+        for threads in [1usize, 2, 8] {
+            let (out, panics) = parallel_map_catch(&items, threads, |&x| {
+                if x == 13 {
+                    panic!("lane 13 crashed");
+                }
+                x * 10
+            });
+            assert_eq!(out.len(), 32, "threads={threads}");
+            assert_eq!(panics.len(), 1, "threads={threads}");
+            for (i, slot) in out.iter().enumerate() {
+                if i == 13 {
+                    assert!(slot.is_none(), "threads={threads}");
+                } else {
+                    assert_eq!(*slot, Some(i as u64 * 10), "threads={threads}");
+                }
+            }
+            let msg = panics[0].downcast_ref::<&str>().copied().unwrap_or("");
+            assert_eq!(msg, "lane 13 crashed");
+        }
+    }
+
+    /// `parallel_map` still surfaces the panic to its caller — but only
+    /// after every sibling item has completed (the scope joins cleanly).
+    #[test]
+    fn map_still_propagates_the_panic() {
+        let items: Vec<u64> = (0..8).collect();
+        let completed = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |&x| {
+                if x == 3 {
+                    panic!("boom");
+                }
+                completed.fetch_add(1, Ordering::Relaxed);
+                x
+            })
+        }));
+        assert!(caught.is_err());
+        assert_eq!(completed.load(Ordering::Relaxed), 7, "survivors ran to completion");
+    }
+
+    /// Many panics at once: every payload is captured, every survivor kept.
+    #[test]
+    fn catch_collects_multiple_panics() {
+        let items: Vec<u64> = (0..64).collect();
+        let (out, panics) = parallel_map_catch(&items, 8, |&x| {
+            if x % 2 == 1 {
+                panic!("odd lane");
+            }
+            x
+        });
+        assert_eq!(panics.len(), 32);
+        assert_eq!(out.iter().filter(|s| s.is_some()).count(), 32);
+        for (i, slot) in out.iter().enumerate() {
+            assert_eq!(slot.is_some(), i % 2 == 0);
+        }
     }
 }

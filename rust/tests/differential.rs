@@ -3,16 +3,21 @@
 //! Simulates a fixed set of fuzz networks (`config::fuzz::random_network`,
 //! seeds 1..=24 — asserted below to cover stride > 1, dilation > 1,
 //! groups > 1 and pooling) and writes the interchange file
-//! `target/differential_cases.json` (version 2): every case carries the
+//! `target/differential_cases.json` (version 3): every case carries the
 //! full network spec (layers with dilation/groups, accelerators, explicit
 //! strategy groups, plumbing flags) plus the Rust simulator's results under
 //! **both** duration semantics — the sequential Definition-3 sums and the
 //! §3.7 double-buffered makespans (on the case's own accelerator *and* on a
 //! 2× memory "roomy" variant, where most residency checks pass so real
-//! overlap is exercised). The Python oracle (`python/oracle_sim.py`,
-//! exercised by `python/tests/test_differential.py`) replays the specs
-//! independently and asserts bit-equal durations, loaded elements, step
-//! counts and makespans.
+//! overlap is exercised) — and, new in v3, a **fault-injected** replay of
+//! the same network under a per-case [`FaultModel`] (DMA retries, timing
+//! jitter, memory shrink), in both modes, with retry / shrink counts and
+//! the analytic k-fault WCET bound. The Python oracle
+//! (`python/oracle_sim.py`, exercised by
+//! `python/tests/test_differential.py`) replays the specs — including the
+//! seeded fault streams, via its own xoshiro256** port — independently and
+//! asserts bit-equal durations, loaded elements, step counts, makespans and
+//! fault accounting.
 //!
 //! CI runs this as part of tier-1 `cargo test`, uploads the JSON as an
 //! artifact, and a dependent job replays it under pytest.
@@ -20,7 +25,7 @@
 use std::path::PathBuf;
 
 use convoffload::config::fuzz::{network_to_json, random_network, FuzzNetwork};
-use convoffload::platform::{Accelerator, OverlapMode, Platform};
+use convoffload::platform::{Accelerator, FaultModel, OverlapMode, Platform};
 use convoffload::sim::Simulator;
 use convoffload::util::json::Json;
 
@@ -83,6 +88,109 @@ fn overlapped_expectations(net: &FuzzNetwork, mem_factor: u64) -> Json {
     o
 }
 
+/// The per-case fault model: every axis live (retries, both jitters,
+/// shrink), seeded per network so the 24 cases pin 24 distinct streams.
+fn case_fault_model(net_seed: u64) -> FaultModel {
+    FaultModel {
+        dma_fail_rate: 0.35,
+        max_retries: 3,
+        retry_penalty: 9,
+        dma_jitter: 4,
+        t_acc_jitter: 3,
+        shrink_rate: 0.15,
+        shrink_elements: 32,
+        ..FaultModel::none()
+    }
+    .with_seed(1_000 + net_seed)
+}
+
+/// JSON form of a fault model — field names match the `[faults]` TOML keys,
+/// which is also what the Python oracle's `FaultModel.from_json` reads.
+fn fault_model_to_json(m: &FaultModel) -> Json {
+    let mut o = Json::obj();
+    o.set("seed", m.seed)
+        .set("dma_fail_rate", m.dma_fail_rate)
+        .set("max_retries", m.max_retries as u64)
+        .set("retry_penalty", m.retry_penalty)
+        .set("dma_jitter", m.dma_jitter)
+        .set("t_acc_jitter", m.t_acc_jitter)
+        .set("shrink_rate", m.shrink_rate)
+        .set("shrink_elements", m.shrink_elements);
+    o
+}
+
+/// Fault-injected expectations (v3): the whole network replayed under
+/// `model` in sequential mode, plus every stage replayed double-buffered on
+/// its own accelerator — durations, retry / shrink counts and the analytic
+/// WCET bound, all of which the Python oracle must reproduce bit-exactly
+/// from the seeded stream alone.
+fn faulted_expectations(net: &FuzzNetwork, model: &FaultModel) -> Json {
+    let seq = net
+        .to_network()
+        .run_with_faults(Some(model))
+        .unwrap_or_else(|e| {
+            panic!("seed {}: faulted sequential sim failed: {e}", net.seed)
+        });
+    let seq_stages: Vec<Json> = seq
+        .per_stage
+        .iter()
+        .map(|sr| {
+            let mut o = Json::obj();
+            o.set("name", sr.name.as_str())
+                .set("duration", sr.duration)
+                .set("fault_retries", sr.fault_retries)
+                .set("mem_shrink_events", sr.mem_shrink_events)
+                .set("wcet_bound", sr.wcet_bound.expect("active model"));
+            o
+        })
+        .collect();
+
+    let mut ovl_stages: Vec<Json> = Vec::new();
+    let mut ovl_total = 0u64;
+    for s in &net.stages {
+        let acc = s.accelerator.with_overlap(OverlapMode::DoubleBuffered);
+        let r = Simulator::new(s.layer, Platform::new(acc))
+            .with_faults(*model)
+            .run(&s.strategy)
+            .unwrap_or_else(|e| {
+                panic!("seed {} stage {}: faulted overlapped sim failed: {e}", net.seed, s.name)
+            });
+        assert!(
+            r.duration <= r.sequential_duration,
+            "seed {} stage {}: faulted makespan above the faulted sum",
+            net.seed,
+            s.name
+        );
+        assert!(r.wcet_bound.unwrap() >= r.duration);
+        ovl_total += r.duration;
+        let mut o = Json::obj();
+        o.set("name", s.name.as_str())
+            .set("makespan", r.duration)
+            .set("sequential_duration", r.sequential_duration)
+            .set("fault_retries", r.fault_retries)
+            .set("mem_shrink_events", r.mem_shrink_events)
+            .set("wcet_bound", r.wcet_bound.unwrap());
+        ovl_stages.push(o);
+    }
+
+    let mut sequential = Json::obj();
+    sequential
+        .set("total_duration", seq.total_duration)
+        .set("fault_retries", seq.fault_retries)
+        .set("mem_shrink_events", seq.mem_shrink_events)
+        .set("wcet_bound", seq.wcet_bound.expect("active model"))
+        .set("per_stage", Json::Arr(seq_stages));
+    let mut overlapped = Json::obj();
+    overlapped
+        .set("total_makespan", ovl_total)
+        .set("per_stage", Json::Arr(ovl_stages));
+    let mut o = Json::obj();
+    o.set("model", fault_model_to_json(model))
+        .set("sequential", sequential)
+        .set("overlapped", overlapped);
+    o
+}
+
 #[test]
 fn emit_differential_cases() {
     let mut cases: Vec<Json> = Vec::new();
@@ -119,7 +227,8 @@ fn emit_differential_cases() {
             .set("total_duration", report.total_duration)
             .set("per_stage", Json::Arr(per_stage))
             .set("overlapped", overlapped_expectations(&net, 1))
-            .set("overlapped_roomy", overlapped_expectations(&net, 2));
+            .set("overlapped_roomy", overlapped_expectations(&net, 2))
+            .set("faulted", faulted_expectations(&net, &case_fault_model(seed)));
         case.set("expected", expected);
         cases.push(case);
     }
@@ -132,8 +241,9 @@ fn emit_differential_cases() {
     assert!(cases.len() >= 20, "need ≥ 20 cases, got {}", cases.len());
 
     let mut doc = Json::obj();
-    // v2: per-case overlapped + overlapped_roomy makespan expectations.
-    doc.set("version", 2u64)
+    // v3: v2's overlapped expectations plus per-case fault-injected replays
+    // (seeded fault model, retry/shrink accounting, WCET bounds).
+    doc.set("version", 3u64)
         .set("generator", "config::fuzz::random_network")
         .set("cases", Json::Arr(cases));
 

@@ -1,0 +1,292 @@
+//! Integration tests for deterministic fault injection: zero-fault
+//! bit-identity against every clean baseline, fault-stream determinism
+//! across seeds / thread counts / overlap modes, and the analytic k-fault
+//! WCET bound holding over hundreds of simulated traces.
+
+use convoffload::config::fuzz::random_network;
+use convoffload::config::network_preset;
+use convoffload::planner::{AcceleratorSpec, BatchPlanner, PlanOptions};
+use convoffload::platform::{Accelerator, FaultModel, OverlapMode, Platform};
+use convoffload::sim::Simulator;
+
+/// The differential harness's seed range — reused so the fault properties
+/// cover the same stride/dilation/groups/pooling feature axes.
+const SEEDS: std::ops::RangeInclusive<u64> = 1..=24;
+
+fn quick_options() -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 1_500,
+        anneal_starts: 2,
+        threads: 0,
+        overlap: OverlapMode::Sequential,
+    }
+}
+
+/// A live model exercising every fault axis at once.
+fn storm(seed: u64) -> FaultModel {
+    FaultModel {
+        dma_fail_rate: 0.35,
+        max_retries: 3,
+        retry_penalty: 9,
+        dma_jitter: 4,
+        t_acc_jitter: 3,
+        shrink_rate: 0.15,
+        shrink_elements: 32,
+        ..FaultModel::none()
+    }
+    .with_seed(seed)
+}
+
+/// Zero-fault bit-identity: attaching an *inactive* model (any seed) to
+/// every fuzz network, under both duration semantics, reproduces the clean
+/// run bit-exactly and reports no fault fields at all.
+#[test]
+fn inert_fault_model_is_bit_identical_to_clean_runs() {
+    for seed in SEEDS {
+        let net = random_network(seed).to_network();
+        let clean = net.run().unwrap();
+        let inert = net
+            .run_with_faults(Some(&FaultModel::none().with_seed(seed)))
+            .unwrap();
+        assert_eq!(inert.total_duration, clean.total_duration, "seed {seed}");
+        assert_eq!(inert.fault_retries, 0);
+        assert_eq!(inert.mem_shrink_events, 0);
+        assert_eq!(inert.wcet_bound, None, "inactive model reports no bound");
+        for (a, b) in inert.per_stage.iter().zip(&clean.per_stage) {
+            assert_eq!(a.duration, b.duration, "seed {seed} stage {}", a.name);
+            assert_eq!(a.loaded_elements, b.loaded_elements);
+            assert_eq!(a.n_steps, b.n_steps);
+        }
+
+        // Same identity under the double-buffered timeline, per stage.
+        for s in &random_network(seed).stages {
+            let acc = s.accelerator.with_overlap(OverlapMode::DoubleBuffered);
+            let clean = Simulator::new(s.layer, Platform::new(acc))
+                .run(&s.strategy)
+                .unwrap();
+            let inert = Simulator::new(s.layer, Platform::new(acc))
+                .with_faults(FaultModel::none().with_seed(seed ^ 0xABCD))
+                .run(&s.strategy)
+                .unwrap();
+            assert_eq!(inert.duration, clean.duration, "seed {seed} {}", s.name);
+            assert_eq!(inert.dma_busy, clean.dma_busy);
+            assert_eq!(inert.compute_busy, clean.compute_busy);
+            assert_eq!(inert.wcet_bound, None);
+        }
+    }
+}
+
+/// Zero-fault planning identity: a batch planner carrying an inert fault
+/// model reproduces the pinned sequential and double-buffered baselines
+/// bit-exactly (same durations, strategies and counters as no model at all).
+#[test]
+fn inert_fault_model_reproduces_the_pinned_planner_baselines() {
+    let nets = vec![
+        network_preset("lenet5").unwrap(),
+        network_preset("resnet8").unwrap(),
+        network_preset("mobilenet_slim").unwrap(),
+    ];
+    for (overlap, totals) in [
+        (OverlapMode::Sequential, [7100u64, 27644, 3568]),
+        (OverlapMode::DoubleBuffered, [6883, 27272, 3554]),
+    ] {
+        let mut opts = quick_options();
+        opts.overlap = overlap;
+        let clean = BatchPlanner::new(opts.clone()).plan_batch(&nets).unwrap();
+        let inert = BatchPlanner::new(opts)
+            .with_faults(FaultModel::none().with_seed(7))
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(inert.stats, clean.stats, "{overlap:?}");
+        for ((a, b), &pin) in clean.plans.iter().zip(&inert.plans).zip(&totals) {
+            assert_eq!(a.total_duration, b.total_duration, "{overlap:?}");
+            assert!(b.total_duration <= pin, "{}: above pinned {pin}", b.network);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy);
+                assert_eq!(la.winner, lb.winner);
+                assert_eq!(la.duration, lb.duration);
+            }
+        }
+    }
+}
+
+/// Fault-seed determinism: the same (model, seed) yields the same report
+/// however often it runs, different seeds genuinely vary the trace, and the
+/// retry stream is a function of the step shapes alone — so Sequential and
+/// DoubleBuffered runs of one strategy draw identical retries and shrinks.
+#[test]
+fn fault_streams_are_deterministic_and_mode_agnostic() {
+    let mut seeds_varied = false;
+    for seed in SEEDS {
+        let net = random_network(seed).to_network();
+        let m = storm(1000 + seed);
+        let a = net.run_with_faults(Some(&m)).unwrap();
+        let b = net.run_with_faults(Some(&m)).unwrap();
+        assert_eq!(a.total_duration, b.total_duration, "seed {seed}");
+        assert_eq!(a.fault_retries, b.fault_retries);
+        assert_eq!(a.mem_shrink_events, b.mem_shrink_events);
+        assert_eq!(a.wcet_bound, b.wcet_bound);
+        let other = net.run_with_faults(Some(&m.with_seed(9_999))).unwrap();
+        seeds_varied |= other.total_duration != a.total_duration;
+
+        for s in &random_network(seed).stages {
+            let seq = Simulator::new(s.layer, Platform::new(s.accelerator))
+                .with_faults(m)
+                .run(&s.strategy)
+                .unwrap();
+            let db = Simulator::new(
+                s.layer,
+                Platform::new(s.accelerator.with_overlap(OverlapMode::DoubleBuffered)),
+            )
+            .with_faults(m)
+            .run(&s.strategy)
+            .unwrap();
+            assert_eq!(seq.fault_retries, db.fault_retries, "seed {seed} {}", s.name);
+            assert_eq!(seq.mem_shrink_events, db.mem_shrink_events);
+            assert!(db.duration <= seq.duration, "timeline beats the faulted sum");
+            assert!(db.duration >= db.dma_busy.max(db.compute_busy));
+        }
+    }
+    assert!(seeds_varied, "distinct fault seeds never changed any trace");
+}
+
+/// A fault-injected *batch* is deterministic across worker-pool sizes: the
+/// race pool changes scheduling, never the per-network faulted durations or
+/// the degraded-stage accounting.
+#[test]
+fn faulted_batch_is_deterministic_across_thread_counts() {
+    let nets = vec![
+        network_preset("lenet5").unwrap(),
+        network_preset("resnet8").unwrap(),
+    ];
+    let m = FaultModel {
+        dma_fail_rate: 0.4,
+        max_retries: 3,
+        retry_penalty: 6,
+        dma_jitter: 2,
+        ..FaultModel::none()
+    }
+    .with_seed(13);
+    let mut opts = quick_options();
+    let base = BatchPlanner::new(opts.clone())
+        .with_faults(m)
+        .plan_batch(&nets)
+        .unwrap();
+    for threads in [1usize, 2, 8] {
+        opts.threads = threads;
+        let again = BatchPlanner::new(opts.clone())
+            .with_faults(m)
+            .plan_batch(&nets)
+            .unwrap();
+        assert_eq!(again.stats, base.stats, "threads={threads}");
+        for (a, b) in base.plans.iter().zip(&again.plans) {
+            assert_eq!(a.total_duration, b.total_duration, "threads={threads}");
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy, "threads={threads}");
+                assert_eq!(la.duration, lb.duration, "threads={threads}");
+            }
+        }
+    }
+}
+
+/// The analytic bound: monotone in `k`, and it dominates every one of the
+/// hundreds of simulated traces produced by sweeping fault seeds over the
+/// fuzz networks — per stage and summed at the network level.
+#[test]
+fn wcet_bound_is_monotone_and_dominates_every_simulated_trace() {
+    // Monotonicity, directly on the closed form.
+    let m = storm(0);
+    let mut prev = 0;
+    for k in 0..64u64 {
+        let w = m.makespan_under_k_faults(10_000, 50, 40, 120, k);
+        assert!(w >= prev, "WCET bound must be monotone in k");
+        prev = w;
+    }
+
+    // Dominance over simulated traces: 24 networks x 10 fault seeds, both
+    // overlap modes = several hundred independent traces.
+    let mut traces = 0u32;
+    for seed in SEEDS {
+        let fuzz = random_network(seed);
+        let net = fuzz.to_network();
+        for fault_seed in 0..10u64 {
+            let m = storm(seed.wrapping_mul(31) ^ fault_seed);
+            let r = net.run_with_faults(Some(&m)).unwrap();
+            let wcet = r.wcet_bound.expect("active model must report a bound");
+            assert!(
+                wcet >= r.total_duration,
+                "seed {seed}/{fault_seed}: network WCET {wcet} < {}",
+                r.total_duration
+            );
+            for s in &r.per_stage {
+                assert!(
+                    s.wcet_bound.unwrap() >= s.duration,
+                    "seed {seed}/{fault_seed} stage {}",
+                    s.name
+                );
+                traces += 1;
+            }
+            for s in &fuzz.stages {
+                let db = Simulator::new(
+                    s.layer,
+                    Platform::new(
+                        s.accelerator.with_overlap(OverlapMode::DoubleBuffered),
+                    ),
+                )
+                .with_faults(m)
+                .run(&s.strategy)
+                .unwrap();
+                assert!(
+                    db.wcet_bound.unwrap() >= db.duration,
+                    "seed {seed}/{fault_seed} stage {} (overlapped)",
+                    s.name
+                );
+                traces += 1;
+            }
+        }
+    }
+    assert!(traces >= 400, "expected hundreds of traces, got {traces}");
+}
+
+/// Memory-shrink faults serialize prefetches but never touch functional
+/// semantics: a shrink-heavy model leaves the sequential duration equal to
+/// the jitter-free sum and only stretches the overlapped makespan.
+#[test]
+fn shrink_storms_degrade_only_the_overlapped_makespan() {
+    let m = FaultModel {
+        shrink_rate: 1.0,
+        shrink_elements: 64,
+        ..FaultModel::none()
+    }
+    .with_seed(3);
+    let mut stretched = 0u32;
+    for seed in SEEDS {
+        for s in &random_network(seed).stages {
+            let clean_seq = Simulator::new(s.layer, Platform::new(s.accelerator))
+                .run(&s.strategy)
+                .unwrap();
+            let fault_seq = Simulator::new(s.layer, Platform::new(s.accelerator))
+                .with_faults(m)
+                .run(&s.strategy)
+                .unwrap();
+            // No retries, no jitter: the Definition-3 sum is untouched.
+            assert_eq!(fault_seq.duration, clean_seq.duration, "seed {seed}");
+            assert!(fault_seq.mem_shrink_events > 0, "rate-1.0 must fire");
+
+            let db_acc = s.accelerator.with_overlap(OverlapMode::DoubleBuffered);
+            let clean_db = Simulator::new(s.layer, Platform::new(db_acc))
+                .run(&s.strategy)
+                .unwrap();
+            let fault_db = Simulator::new(s.layer, Platform::new(db_acc))
+                .with_faults(m)
+                .run(&s.strategy)
+                .unwrap();
+            assert!(fault_db.duration >= clean_db.duration, "seed {seed}");
+            assert!(fault_db.duration <= fault_seq.duration);
+            stretched += u32::from(fault_db.duration > clean_db.duration);
+        }
+    }
+    assert!(stretched > 0, "shrink storm never forced a serialization");
+}

@@ -1,0 +1,232 @@
+//! Integration tests for degraded-mode planning: batches that survive
+//! crashing portfolio lanes, poisoned cache shards, and memory-shrink fault
+//! storms — always returning a complete, deterministic set of plans with
+//! the damage surfaced in the batch counters.
+
+use std::path::PathBuf;
+
+use convoffload::config::network_preset;
+use convoffload::planner::{
+    AcceleratorSpec, BatchPlanner, ChaosSpec, PlanOptions, ShardedStrategyCache,
+};
+use convoffload::platform::{FaultModel, OverlapMode};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convoffload-recovery-it-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_options() -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 1_500,
+        anneal_starts: 2,
+        threads: 0,
+        overlap: OverlapMode::Sequential,
+    }
+}
+
+fn zoo() -> Vec<convoffload::config::NetworkPreset> {
+    vec![
+        network_preset("lenet5").unwrap(),
+        network_preset("lenet5").unwrap(),
+        network_preset("resnet8").unwrap(),
+        network_preset("mobilenet_slim").unwrap(),
+    ]
+}
+
+/// The acceptance scenario: one deliberately panicking portfolio lane *and*
+/// one poisoned cache shard, in the same batch. Every network still gets a
+/// plan, the winners avoid the crashed lane, and both kinds of damage are
+/// surfaced (`panicked_lanes`, `quarantined_shards`) rather than swallowed.
+#[test]
+fn chaotic_batch_with_poisoned_shard_still_plans_every_network() {
+    let dir = tmp_dir("chaos");
+    let nets = zoo();
+    // One shard so the poison provably sits on the path of every lookup.
+    let cache = ShardedStrategyCache::open_with(&dir, 1, 64).unwrap();
+    cache.chaos_poison_shard(0);
+
+    let report = BatchPlanner::with_cache(quick_options(), cache)
+        .with_chaos(ChaosSpec { panic_lane: Some("greedy".into()) })
+        .plan_batch(&nets)
+        .unwrap();
+
+    assert_eq!(report.plans.len(), nets.len(), "every network got a plan");
+    for plan in &report.plans {
+        assert!(!plan.layers.is_empty(), "{}", plan.network);
+        assert!(plan.total_duration > 0);
+        for lp in &plan.layers {
+            assert!(
+                !lp.winner.starts_with("greedy"),
+                "{}/{}: crashed lane won its race",
+                plan.network,
+                lp.stage
+            );
+        }
+    }
+    // One panic per unique problem raced (7 in the zoo batch).
+    assert_eq!(report.stats.panicked_lanes, 7);
+    assert!(
+        report.stats.cache.quarantined_shards >= 1,
+        "the poisoned shard must be quarantined, not hidden"
+    );
+
+    // The damaged batch still warmed the store: a clean planner over the
+    // same directory replays everything with zero annealing.
+    let warm = BatchPlanner::with_cache(
+        quick_options(),
+        ShardedStrategyCache::open_with(&dir, 1, 64).unwrap(),
+    )
+    .plan_batch(&nets)
+    .unwrap();
+    assert_eq!(warm.stats.store_hits, 7);
+    assert_eq!(warm.stats.anneal_iters_run, 0);
+    assert_eq!(warm.stats.panicked_lanes, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Chaos is deterministic: two identical chaotic batches agree on every
+/// duration, winner and counter — losing a lane must not introduce any
+/// scheduling-dependent tie-breaks.
+#[test]
+fn chaotic_batches_are_deterministic() {
+    let nets = zoo();
+    let chaos = ChaosSpec { panic_lane: Some("zigzag".into()) };
+    let a = BatchPlanner::new(quick_options())
+        .with_chaos(chaos.clone())
+        .plan_batch(&nets)
+        .unwrap();
+    let b = BatchPlanner::new(quick_options())
+        .with_chaos(chaos)
+        .plan_batch(&nets)
+        .unwrap();
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.stats.panicked_lanes, 7);
+    for (pa, pb) in a.plans.iter().zip(&b.plans) {
+        assert_eq!(pa.total_duration, pb.total_duration);
+        for (la, lb) in pa.layers.iter().zip(&pb.layers) {
+            assert_eq!(la.winner, lb.winner);
+            assert_eq!(la.strategy, lb.strategy);
+        }
+    }
+}
+
+/// A crashed lane costs only that lane: the chaotic batch's plans are no
+/// worse than the clean batch's wherever another lane had already tied the
+/// winner, and never better (losing a candidate cannot improve a race).
+#[test]
+fn losing_a_lane_never_improves_a_plan() {
+    let nets = zoo();
+    let clean = BatchPlanner::new(quick_options()).plan_batch(&nets).unwrap();
+    let chaotic = BatchPlanner::new(quick_options())
+        .with_chaos(ChaosSpec { panic_lane: Some("greedy".into()) })
+        .plan_batch(&nets)
+        .unwrap();
+    for (c, x) in clean.plans.iter().zip(&chaotic.plans) {
+        assert!(
+            x.total_duration >= c.total_duration,
+            "{}: chaos improved the plan ({} < {})",
+            c.network,
+            x.total_duration,
+            c.total_duration
+        );
+    }
+}
+
+/// Concurrent chaotic clients over one shared cache converge: every thread
+/// suffers its own lane crashes and shard quarantines yet lands on the same
+/// plans, and the directory ends warm and complete.
+#[test]
+fn concurrent_chaotic_clients_converge() {
+    let dir = tmp_dir("concurrent-chaos");
+    let nets = zoo();
+    let cache = ShardedStrategyCache::open_with(&dir, 1, 64).unwrap();
+    cache.chaos_poison_shard(0);
+    let mut opts = quick_options();
+    opts.threads = 2;
+
+    let totals: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = cache.clone();
+                let opts = opts.clone();
+                let nets = &nets;
+                scope.spawn(move || {
+                    let report = BatchPlanner::with_cache(opts, cache)
+                        .with_chaos(ChaosSpec {
+                            panic_lane: Some("diagonal".into()),
+                        })
+                        .plan_batch(nets)
+                        .unwrap();
+                    report.plans.iter().map(|p| p.total_duration).collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for t in &totals[1..] {
+        assert_eq!(t, &totals[0], "all chaotic clients must converge");
+    }
+    let warm = BatchPlanner::with_cache(
+        quick_options(),
+        ShardedStrategyCache::open_with(&dir, 1, 64).unwrap(),
+    )
+    .plan_batch(&nets)
+    .unwrap();
+    assert_eq!(warm.stats.store_hits, 7);
+    assert_eq!(warm.stats.anneal_iters_run, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The full degraded-mode pipeline: a shrink-storm fault model forces
+/// mid-execution memory loss, the planner re-validates every affected stage
+/// against the reduced budget and degrades it (re-group, re-race or
+/// serialize) — and the batch still returns a complete plan for every
+/// network, deterministically, with `degraded_stages` surfaced.
+#[test]
+fn shrink_storm_batch_degrades_gracefully_and_deterministically() {
+    let nets = zoo();
+    let m = FaultModel {
+        shrink_rate: 1.0,
+        shrink_elements: 8,
+        ..FaultModel::none()
+    }
+    .with_seed(7);
+    let mut opts = quick_options();
+    opts.overlap = OverlapMode::DoubleBuffered;
+    let a = BatchPlanner::new(opts.clone())
+        .with_faults(m)
+        .plan_batch(&nets)
+        .unwrap();
+    assert_eq!(a.plans.len(), nets.len());
+    assert!(a.stats.degraded_stages > 0, "a rate-1.0 storm must degrade");
+    let mut saw_degraded_winner = false;
+    for plan in &a.plans {
+        assert!(plan.total_duration > 0, "{}", plan.network);
+        for lp in &plan.layers {
+            saw_degraded_winner |= lp.winner.contains("+regroup")
+                || lp.winner.contains("+rerace")
+                || lp.winner.contains("+serialize");
+        }
+    }
+    assert!(saw_degraded_winner, "degraded stages must mark their winners");
+
+    let b = BatchPlanner::new(opts)
+        .with_faults(m)
+        .plan_batch(&nets)
+        .unwrap();
+    assert_eq!(a.stats, b.stats);
+    for (pa, pb) in a.plans.iter().zip(&b.plans) {
+        assert_eq!(pa.total_duration, pb.total_duration);
+        for (la, lb) in pa.layers.iter().zip(&pb.layers) {
+            assert_eq!(la.winner, lb.winner);
+            assert_eq!(la.strategy, lb.strategy);
+        }
+    }
+}
