@@ -124,6 +124,8 @@ class Accelerator:
     t_l: int
     t_w: int
     overlap: str = "sequential"  # or "double-buffered"
+    dma_channels: int = 1
+    compute_units: int = 1
 
 
 def accelerator_from_json(d: dict) -> Accelerator:
@@ -134,6 +136,8 @@ def accelerator_from_json(d: dict) -> Accelerator:
         t_l=d["t_l"],
         t_w=d["t_w"],
         overlap=d.get("overlap", "sequential"),
+        dma_channels=d.get("dma_channels", 1),
+        compute_units=d.get("compute_units", 1),
     )
 
 
@@ -324,6 +328,124 @@ def simulate_stage_overlapped(
     )
 
 
+@dataclass
+class MultiOverlapResult:
+    makespan: int
+    sequential_duration: int
+    dma_busy: int
+    compute_busy: int
+    dma_busy_per: list
+    compute_busy_per: list
+    n_prefetched: int
+
+
+class MultiResourceTimeline:
+    """The generalized §3.10 timeline: k DMA channels x m compute units.
+
+    List scheduling on the §3.7 (max,+) recurrence — each phase grabs the
+    earliest-free resource of its class (lowest index on ties), dependencies
+    unchanged. The write gate is anchored on ``prev_comp_end``, the compute
+    frontier of the *producing* (previous in issue order) step, so the
+    dependency survives m > 1 where "the busy compute unit" and "the unit
+    that produced the outputs" stop coinciding. At k = m = 1 this collapses
+    bit-exactly to :class:`OverlapTimeline`. Mirrors the generalized
+    ``rust/src/step/cost.rs``.
+    """
+
+    def __init__(self, dma_channels: int = 1, compute_units: int = 1):
+        assert dma_channels >= 1 and compute_units >= 1
+        self.dma_free = [0] * dma_channels
+        self.comp_free = [0] * compute_units
+        self.prev_comp_end = 0
+        self.dma_busy_per = [0] * dma_channels
+        self.compute_busy_per = [0] * compute_units
+
+    def begin_image(self):
+        """Start the next image of a batch: steps of different images carry
+        no data dependency, so only the issue-order compute gate resets —
+        resource frontiers persist (the hardware is still busy)."""
+        self.prev_comp_end = 0
+
+    def push(self, load, write, compute, can_prefetch):
+        gate = 0 if can_prefetch else self.prev_comp_end
+        cl = min(range(len(self.dma_free)), key=self.dma_free.__getitem__)
+        load_end = max(self.dma_free[cl], gate) + load
+        self.dma_free[cl] = load_end
+        self.dma_busy_per[cl] += load
+        # The write drains outputs produced by the previous compute step:
+        # re-pick the channel after the load so it lands on a free one.
+        cw = min(range(len(self.dma_free)), key=self.dma_free.__getitem__)
+        write_end = max(self.dma_free[cw], self.prev_comp_end) + write
+        self.dma_free[cw] = write_end
+        self.dma_busy_per[cw] += write
+        u = min(range(len(self.comp_free)), key=self.comp_free.__getitem__)
+        comp_end = max(self.comp_free[u], load_end, self.prev_comp_end) + compute
+        self.comp_free[u] = comp_end
+        self.compute_busy_per[u] += compute
+        self.prev_comp_end = comp_end
+        return cl, cw, u
+
+    @property
+    def dma_busy(self):
+        return sum(self.dma_busy_per)
+
+    @property
+    def compute_busy(self):
+        return sum(self.compute_busy_per)
+
+    def makespan(self):
+        return max(self.dma_free + self.comp_free)
+
+
+def simulate_stage_multi(
+    layer: Layer,
+    acc: Accelerator,
+    groups,
+    writeback: str = "every_step",
+    batch: int = 1,
+) -> MultiOverlapResult:
+    """Multi-resource double-buffered replay of one grouped strategy over a
+    batch of ``batch`` images.
+
+    Same Definition-16 lowering as :func:`simulate_stage_overlapped`, placed
+    on the k x m :class:`MultiResourceTimeline`. Kernels load once: images
+    after the first subtract the kernel elements from step 0's load (the
+    weights stay resident across the flush in the cost model). The terminal
+    flush leaves on-chip memory empty, so each image replays the identical
+    step stream; ``begin_image`` resets only the issue-order compute gate,
+    letting the next image's phases pipeline onto free units.
+    """
+    assert batch >= 1
+    shapes = _stage_step_shapes(layer, groups, writeback)
+    timeline = MultiResourceTimeline(acc.dma_channels, acc.compute_units)
+    sequential = 0
+    prev_occ = 0
+    n_prefetched = 0
+    for b in range(batch):
+        if b > 0:
+            timeline.begin_image()
+        for i, (loaded, written, computed, occ) in enumerate(shapes):
+            if b > 0 and i == 0:
+                loaded -= layer.kernel_elements
+            compute = acc.t_acc if computed else 0
+            can_prefetch = prev_occ + loaded <= acc.size_mem
+            n_prefetched += int(can_prefetch and computed and (i > 0 or b > 0))
+            timeline.push(
+                loaded * acc.t_l, written * acc.t_w, compute, can_prefetch
+            )
+            sequential += loaded * acc.t_l + written * acc.t_w + compute
+            prev_occ = occ
+    return MultiOverlapResult(
+        makespan=timeline.makespan(),
+        sequential_duration=sequential,
+        dma_busy=timeline.dma_busy,
+        compute_busy=timeline.compute_busy,
+        dma_busy_per=list(timeline.dma_busy_per),
+        compute_busy_per=list(timeline.compute_busy_per),
+        n_prefetched=n_prefetched,
+    )
+
+
 def analytic_portfolio_overlapped(layer: Layer, group_size: int):
     """The planner's anneal-free lanes raced under the double-buffered
     makespan on the ``for_group_size`` machine — winner by
@@ -369,14 +491,21 @@ def replay_case(case: dict) -> dict:
 
     Returns the oracle's per-stage results — sequential, double-buffered,
     and double-buffered with a 2x memory ("roomy": most prefetches succeed,
-    so real overlap is exercised) — plus the chained-dimension check; raises
-    AssertionError on any structural violation.
+    so real overlap is exercised) — plus, when the case carries sampled
+    ``dma_channels`` / ``compute_units`` / ``batch`` fields (interchange
+    v4), the multi-resource batched replay on the roomy variant — plus the
+    chained-dimension check; raises AssertionError on any structural
+    violation.
     """
     from dataclasses import replace
 
     per_stage = []
     overlapped = []
     overlapped_roomy = []
+    multi = []
+    kch = case.get("dma_channels", 0)
+    mcu = case.get("compute_units", 0)
+    batch = case.get("batch", 1)
     prev = None
     for st in case["stages"]:
         layer = layer_from_json(st["layer"])
@@ -400,6 +529,24 @@ def replay_case(case: dict) -> dict:
         for r in (ovl, roomy):
             assert r.makespan <= res.duration
             assert r.makespan >= max(r.dma_busy, r.compute_busy)
+        if kch and mcu:
+            mr = simulate_stage_multi(
+                layer,
+                replace(
+                    acc,
+                    size_mem=acc.size_mem * 2,
+                    dma_channels=kch,
+                    compute_units=mcu,
+                ),
+                st["strategy_groups"],
+                writeback,
+                batch=batch,
+            )
+            assert mr.makespan <= mr.sequential_duration
+            assert mr.makespan >= max(
+                -(-mr.dma_busy // kch), -(-mr.compute_busy // mcu)
+            )
+            multi.append(mr)
         per_stage.append(res)
         overlapped.append(ovl)
         overlapped_roomy.append(roomy)
@@ -411,6 +558,8 @@ def replay_case(case: dict) -> dict:
         "overlapped_total": sum(r.makespan for r in overlapped),
         "overlapped_roomy": overlapped_roomy,
         "overlapped_roomy_total": sum(r.makespan for r in overlapped_roomy),
+        "multi": multi,
+        "multi_total": sum(r.makespan for r in multi),
     }
 
 
@@ -554,20 +703,22 @@ def cache_key(
     anneal_iters: int,
     anneal_starts: int,
 ) -> str:
-    """Mirror of the Rust planner's ``CacheKey`` v3 canonical string
+    """Mirror of the Rust planner's ``CacheKey`` v4 canonical string
     (``rust/src/planner/cache.rs``): everything a planned strategy depends
-    on — layer geometry, accelerator parameters, overlap mode, grouping
-    bounds and the portfolio configuration. The differential suite uses it
-    to reproduce the batch planner's cross-network dedup accounting from an
-    independent code base."""
+    on — layer geometry, accelerator parameters, overlap mode, resource
+    shape (DMA channels x compute units), grouping bounds and the portfolio
+    configuration. The differential suite uses it to reproduce the batch
+    planner's cross-network dedup accounting from an independent code
+    base."""
     return (
-        f"v3|in:{layer.c_in}x{layer.h_in}x{layer.w_in}"
+        f"v4|in:{layer.c_in}x{layer.h_in}x{layer.w_in}"
         f"|ker:{layer.n_kernels}x{layer.h_k}x{layer.w_k}"
         f"|stride:{layer.s_h}x{layer.s_w}"
         f"|dil:{layer.d_h}x{layer.d_w}"
         f"|grp:{layer.groups}"
         f"|acc:{acc.nbop_pe},{acc.t_acc},{acc.size_mem},{acc.t_l},{acc.t_w}"
         f"|ovl:{acc.overlap}"
+        f"|ch:{acc.dma_channels}x{acc.compute_units}"
         f"|g:{group_size}"
         f"|k:{k}"
         f"|anneal:{anneal_starts}x{anneal_iters}@{seed}"
@@ -714,6 +865,18 @@ class FaultModel:
             or self.dma_jitter > 0
             or self.t_acc_jitter > 0
             or (self.shrink_rate > 0.0 and self.shrink_elements > 0)
+        )
+
+    def for_stage(self, stage: int) -> "FaultModel":
+        """The stage-``stage`` view of this model: the same axes with the
+        stage index golden-ratio-mixed into the seed (wrapping add, distinct
+        from the per-step xor spreading), so different pipeline stages draw
+        decorrelated streams. Stage 0 is the identity — single-stage traces
+        are unchanged. Mirror of ``platform::FaultModel::for_stage``."""
+        from dataclasses import replace
+
+        return replace(
+            self, seed=(self.seed + ((stage * GOLDEN) & _M64)) & _M64
         )
 
     def step_faults(
@@ -943,21 +1106,26 @@ def simulate_stage_overlapped_faulted(
 
 def replay_case_faulted(case: dict, model: FaultModel) -> dict:
     """Replay one differential case under fault injection: every stage of
-    the network sequentially (the per-stage fault streams restart at step 0,
-    as in ``Network::run_with_faults``) and double-buffered on its own
-    accelerator. Returns the per-stage results plus network totals."""
+    the network sequentially and double-buffered on its own accelerator.
+    Stage ``i`` draws from ``model.for_stage(i)`` — stage-decorrelated
+    streams, as in ``Network::run_with_faults`` — so step 0 of different
+    stages no longer shares a stream (stage 0 keeps the bare model).
+    Returns the per-stage results plus network totals."""
     per_stage = []
     overlapped = []
-    for st in case["stages"]:
+    for i, st in enumerate(case["stages"]):
         layer = layer_from_json(st["layer"])
         acc = accelerator_from_json(st["accelerator"])
         writeback = st.get("writeback", "every_step")
+        stage_model = model.for_stage(i)
         per_stage.append(
-            simulate_stage_faulted(layer, acc, st["strategy_groups"], model, writeback)
+            simulate_stage_faulted(
+                layer, acc, st["strategy_groups"], stage_model, writeback
+            )
         )
         overlapped.append(
             simulate_stage_overlapped_faulted(
-                layer, acc, st["strategy_groups"], model, writeback
+                layer, acc, st["strategy_groups"], stage_model, writeback
             )
         )
     return {

@@ -39,11 +39,13 @@ def _load_cases():
         )
     with open(path) as f:
         doc = json.load(f)
-    # v3 added the fault-injected expectations (seeded fault model, retry /
-    # shrink accounting, WCET bounds) on top of v2's overlapped makespans; an
-    # older file is a stale artifact from before the fault-injection PR.
-    assert doc.get("version") == 3, (
-        f"interchange version {doc.get('version')} != 3 - stale "
+    # v4 adds the multi-resource expectations (sampled k DMA channels x m
+    # compute units, image batching, per-resource busy totals) and switches
+    # the faulted replays to stage-decorrelated streams, on top of v3's
+    # fault-injected expectations; an older file is a stale artifact from
+    # before the multi-channel PR.
+    assert doc.get("version") == 4, (
+        f"interchange version {doc.get('version')} != 4 - stale "
         f"{path}; re-run `cargo test` to regenerate it"
     )
     # Provenance gate: a green differential signal must mean the *Rust
@@ -130,13 +132,58 @@ def test_python_oracle_matches_rust_overlapped_makespans():
     assert not mismatches, "\n".join(mismatches)
 
 
+def test_python_oracle_matches_rust_multi_resource():
+    """The v4 gate: every case carries a sampled resource shape (k DMA
+    channels x m compute units, batch of N images) replayed double-buffered
+    on the 2x-memory variant. The oracle's independent k x m list scheduler
+    must land on bit-equal makespans, batched sequential sums and
+    *per-resource* busy totals."""
+    mismatches = []
+    sampled_shapes = set()
+    for case in _load_cases():
+        got = o.replay_case(case)
+        want = case["expected"]["multi"]
+        seed = case["seed"]
+        shape = (case["dma_channels"], case["compute_units"], case["batch"])
+        sampled_shapes.add(shape)
+        assert (want["dma_channels"], want["compute_units"], want["batch"]) == shape
+        if got["multi_total"] != want["total_makespan"]:
+            mismatches.append(
+                f"seed {seed} multi: total makespan {got['multi_total']} != "
+                f"{want['total_makespan']}"
+            )
+        for res, stage in zip(got["multi"], want["per_stage"]):
+            for field in (
+                "makespan",
+                "sequential_duration",
+                "dma_busy",
+                "compute_busy",
+                "dma_busy_per",
+                "compute_busy_per",
+            ):
+                g = getattr(res, field)
+                if g != stage[field]:
+                    mismatches.append(
+                        f"seed {seed} multi stage {stage['name']}: "
+                        f"{field} {g} != {stage[field]}"
+                    )
+    assert not mismatches, "\n".join(mismatches)
+    # The sampler must actually exercise the generalization: some case needs
+    # more than one channel, more than one unit, and a real batch.
+    assert any(k > 1 for k, _, _ in sampled_shapes), "no case sampled k > 1"
+    assert any(m > 1 for _, m, _ in sampled_shapes), "no case sampled m > 1"
+    assert any(n > 1 for _, _, n in sampled_shapes), "no case sampled batch > 1"
+
+
 def test_python_oracle_matches_rust_fault_injection():
-    """The v3 gate: the oracle replays each case's seeded fault streams
+    """The fault gate: the oracle replays each case's seeded fault streams
     through its own xoshiro256** port and must land on bit-equal faulted
     durations, retry and shrink counts, and WCET bounds — in both duration
-    semantics. This is the cross-language contract for the whole fault
-    subsystem (RNG, per-step draw order, retry/jitter cost recurrences, the
-    sticky memory-shrink residency fallback, the analytic bound)."""
+    semantics. Since v4 stage ``i`` draws from ``model.for_stage(i)`` on
+    both sides. This is the cross-language contract for the whole fault
+    subsystem (RNG, stage seed mixing, per-step draw order, retry/jitter
+    cost recurrences, the sticky memory-shrink residency fallback, the
+    analytic bound)."""
     mismatches = []
     for case in _load_cases():
         want = case["expected"]["faulted"]

@@ -95,6 +95,38 @@ class TestRngCrossLanguagePins:
             assert [r.next_u64() for _ in range(2)] == want, f"step {index}"
 
 
+class TestStageDecorrelation:
+    """`FaultModel.for_stage` — the stage index golden-ratio-*added* into
+    the seed (the per-step spreading xors, so the two mixes cannot cancel),
+    pinned to the same values as `platform::fault::stage_seed_mixing_pins`
+    on the Rust side."""
+
+    def test_stage_seed_pins(self):
+        m = storm(13)
+        assert [m.for_stage(i).seed for i in range(4)] == [
+            13,
+            11400714819323198498,
+            4354685564936845367,
+            15755400384260043852,
+        ]
+
+    def test_stage0_keeps_single_stage_traces_stable(self):
+        m = storm(13)
+        assert m.for_stage(0) == m
+        for layer, acc, groups in sample_problems()[:3]:
+            a = o.simulate_stage_faulted(layer, acc, groups, m)
+            b = o.simulate_stage_faulted(layer, acc, groups, m.for_stage(0))
+            assert a == b
+
+    def test_stages_no_longer_share_step0_draws(self):
+        m = storm(13)
+        step0 = [
+            m.for_stage(i).step_faults(0, 500, 50, True) for i in range(8)
+        ]
+        assert len({(f.load_retries, f.dma_jitter, f.compute_jitter, f.shrink)
+                    for f in step0}) > 1
+
+
 class TestZeroFaultIdentity:
     def test_inactive_model_is_bit_identical_sequentially(self):
         inert = o.FaultModel(seed=99)

@@ -1,0 +1,198 @@
+"""Property and pin tests for the generalized k x m overlap timeline.
+
+The §3.10 multi-resource timeline (``oracle_sim.MultiResourceTimeline``)
+must (a) collapse bit-exactly to the §3.7 two-resource recurrence at
+k = m = 1, (b) reproduce a hand-computed (k=2, m=1) schedule — the same
+pin the Rust side carries in ``step::cost`` — (c) be monotone
+non-increasing in k and m, and (d) never beat the resource floor
+``max(ceil(total_dma/k), ceil(total_compute/m))``.  The fuzz-seed half of
+the collapse property (all 24 seeds x both overlap modes) lives in
+``rust/tests/invariants.rs`` and in ``test_differential.py``'s v4 replay;
+here the same properties run over the preset zoo, which needs no Rust
+artifact.
+"""
+
+import itertools
+
+from dataclasses import replace
+
+import oracle_sim as o
+
+
+def _zoo():
+    """Every preset-zoo layer with its default planner grouping."""
+    layers = [
+        o.Layer(1, 32, 32, 5, 5, 6),
+        o.Layer(6, 14, 14, 5, 5, 16),
+        o.Layer(3, 34, 34, 3, 3, 16),
+        o.Layer(16, 18, 18, 3, 3, 16),
+        o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4),
+        o.Layer(4, 8, 8, 1, 1, 8),
+        o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2),
+    ]
+    for layer in layers:
+        groups = o.order_to_groups(o.row_major_order(layer), 4)
+        yield layer, o.for_group_size(layer, 4), groups
+
+
+class TestHandComputedPin:
+    """The 3-step (k=2, m=1) schedule, phase instant by phase instant —
+    mirrored verbatim by ``overlap_timeline_multi_hand_computed_k2`` in
+    ``rust/src/step/cost.rs``."""
+
+    PUSHES = [(10, 0, 5, True), (6, 2, 5, True), (6, 2, 5, False), (0, 2, 0, True)]
+
+    def test_k1_m1_baseline_is_the_legacy_chain(self):
+        # The same pushes on the scalar timeline pin makespan 34 (the Rust
+        # ``overlap_timeline_hand_computed_chain`` values).
+        t = o.OverlapTimeline()
+        for p in self.PUSHES:
+            t.push(*p)
+        assert t.makespan() == 34
+        assert (t.dma_busy, t.compute_busy) == (28, 15)
+
+    def test_k2_m1_schedule(self):
+        t = o.MultiResourceTimeline(2, 1)
+        placements = [t.push(*p) for p in self.PUSHES]
+        # load channel, write channel, compute unit per step:
+        assert placements == [(0, 1, 0), (1, 1, 0), (0, 1, 0), (1, 1, 0)]
+        # s2's write waits for compute 1 (ends 15) even though channel 1 is
+        # free at 6 — the producer gate; s3 serializes (no prefetch) behind
+        # compute 2 (ends 20); the flush write drains compute 3 (ends 31).
+        assert t.dma_free == [26, 33]
+        assert t.comp_free == [31]
+        assert t.makespan() == 33
+        assert t.dma_busy_per == [16, 12]
+        assert t.compute_busy_per == [15]
+
+    def test_second_channel_helps_this_chain(self):
+        t1 = o.OverlapTimeline()
+        t2 = o.MultiResourceTimeline(2, 1)
+        for p in self.PUSHES:
+            t1.push(*p)
+            t2.push(*p)
+        assert t2.makespan() < t1.makespan()
+
+
+class TestCollapseToLegacy:
+    """(k=1, m=1, batch=1) is bit-identical to the §3.7 recurrence — the
+    generalized code path must not perturb a single pinned baseline."""
+
+    def test_zoo_collapse_both_memory_variants(self):
+        for layer, acc, groups in _zoo():
+            for mem_factor in (1, 2):
+                a = replace(acc, size_mem=acc.size_mem * mem_factor)
+                legacy = o.simulate_stage_overlapped(layer, a, groups)
+                multi = o.simulate_stage_multi(layer, a, groups)
+                assert multi.makespan == legacy.makespan
+                assert multi.sequential_duration == legacy.sequential_duration
+                assert multi.dma_busy == legacy.dma_busy
+                assert multi.compute_busy == legacy.compute_busy
+                assert multi.n_prefetched == legacy.n_prefetched
+                assert multi.dma_busy_per == [legacy.dma_busy]
+                assert multi.compute_busy_per == [legacy.compute_busy]
+
+    def test_extra_units_without_batching_change_nothing(self):
+        # Within one image the compute steps form a dependency chain, so
+        # extra compute units cannot change the makespan at batch=1.
+        for layer, acc, groups in _zoo():
+            base = o.simulate_stage_multi(layer, acc, groups)
+            more = o.simulate_stage_multi(
+                layer, replace(acc, compute_units=3), groups
+            )
+            assert more.makespan == base.makespan
+
+
+class TestMonotonicityAndFloor:
+    GRID = [1, 2, 3]
+
+    def test_monotone_non_increasing_in_k_and_m(self):
+        for layer, acc, groups in _zoo():
+            for batch in (1, 4):
+                span = {}
+                for k, m in itertools.product(self.GRID, self.GRID):
+                    a = replace(acc, dma_channels=k, compute_units=m)
+                    span[(k, m)] = o.simulate_stage_multi(
+                        layer, a, groups, batch=batch
+                    ).makespan
+                for k, m in itertools.product(self.GRID, self.GRID):
+                    if k > 1:
+                        assert span[(k, m)] <= span[(k - 1, m)], (layer, k, m, batch)
+                    if m > 1:
+                        assert span[(k, m)] <= span[(k, m - 1)], (layer, k, m, batch)
+
+    def test_resource_floor(self):
+        for layer, acc, groups in _zoo():
+            for k, m, batch in itertools.product(self.GRID, self.GRID, (1, 4)):
+                a = replace(acc, dma_channels=k, compute_units=m)
+                r = o.simulate_stage_multi(layer, a, groups, batch=batch)
+                floor = max(-(-r.dma_busy // k), -(-r.compute_busy // m))
+                assert r.makespan >= floor, (layer, k, m, batch)
+                assert r.makespan <= r.sequential_duration, (layer, k, m, batch)
+
+
+class TestBatching:
+    def test_batch_amortizes_kernel_loads(self):
+        # N images cost less than N independent runs: kernels load once.
+        for layer, acc, groups in _zoo():
+            one = o.simulate_stage_multi(layer, acc, groups, batch=1)
+            four = o.simulate_stage_multi(layer, acc, groups, batch=4)
+            saved = 3 * layer.kernel_elements * acc.t_l
+            assert four.sequential_duration == 4 * one.sequential_duration - saved
+            assert four.makespan <= 4 * one.makespan
+
+    def test_batch_pipelines_across_compute_units(self):
+        # On a compute-bound machine (t_acc dominates the transfers) extra
+        # units let consecutive images' compute chains overlap. The
+        # for_group_size zoo machines are DMA-bound (t_l = t_acc = 1), so
+        # the probe raises t_acc; m=2 alone may not help — round-robin
+        # earliest-free placement leaves the "free" unit carrying the
+        # previous image's middle compute — but the unit grid must.
+        layer = o.Layer(1, 3, 12, 3, 3, 1)
+        groups = o.order_to_groups(o.row_major_order(layer), 4)
+        acc = o.Accelerator(
+            nbop_pe=36, t_acc=100, size_mem=256, t_l=1, t_w=1, dma_channels=2
+        )
+        spans = [
+            o.simulate_stage_multi(
+                layer, replace(acc, compute_units=m), groups, batch=4
+            ).makespan
+            for m in (1, 2, 3)
+        ]
+        assert spans == sorted(spans, reverse=True)
+        assert spans[2] < spans[0], "extra compute units never overlapped images"
+
+    def test_batch_images_are_identical_after_the_first(self):
+        # Sequential duration: image 0 pays kernels, images 1..N-1 are
+        # identical — so durations grow affinely in N.
+        layer, acc, groups = next(iter(_zoo()))
+        seq = [
+            o.simulate_stage_multi(layer, acc, groups, batch=n).sequential_duration
+            for n in (1, 2, 3)
+        ]
+        assert seq[2] - seq[1] == seq[1] - seq[0]
+
+
+class TestFaultStreamDecorrelation:
+    """Satellite: ``FaultModel.for_stage`` — stage-mixed seeds, stage 0
+    stable. (The cross-language pin lives in ``test_fault_oracle.py``.)"""
+
+    MODEL = o.FaultModel(
+        seed=77, dma_fail_rate=0.4, max_retries=3, retry_penalty=5,
+        dma_jitter=3, t_acc_jitter=2, shrink_rate=0.1, shrink_elements=8,
+    )
+
+    def test_stage0_is_identity(self):
+        assert self.MODEL.for_stage(0) == self.MODEL
+
+    def test_stages_draw_distinct_streams(self):
+        draws = {
+            self.MODEL.for_stage(i).step_faults(0, 100, 10, True).dma_jitter
+            for i in range(16)
+        }
+        assert len(draws) > 1, "stage mixing left step-0 streams identical"
+
+    def test_stage_mixing_is_deterministic(self):
+        a = self.MODEL.for_stage(3).step_faults(5, 100, 10, True)
+        b = self.MODEL.for_stage(3).step_faults(5, 100, 10, True)
+        assert a == b

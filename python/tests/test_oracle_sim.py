@@ -260,7 +260,7 @@ class TestNetworkChaining:
 
 class TestBatchPlanner:
     """The batch planner's cross-network dedup accounting, reproduced from
-    the independent code base via the ``CacheKey`` v3 mirror. Pins the Rust
+    the independent code base via the ``CacheKey`` v4 mirror. Pins the Rust
     acceptance batch ``[lenet5, lenet5, resnet8, mobilenet_slim]``:
     10 stages -> 7 unique planning problems, 3 dedup hits of which 2 are
     cross-network (``rust/tests/integration_batch.rs``)."""
@@ -292,11 +292,16 @@ class TestBatchPlanner:
         acc = o.for_group_size(layer, 4)
         k = -(-layer.n_patches // 4)
         base = o.cache_key(layer, acc, 4, k, 2026, 50_000, 3)
-        assert base.startswith("v3|") and "|ovl:sequential|" in base
+        assert base.startswith("v4|") and "|ovl:sequential|" in base
+        assert "|ch:1x1|" in base
         # overlap mode is part of the planning problem
         db = o.Accelerator(acc.nbop_pe, acc.t_acc, acc.size_mem, acc.t_l,
                            acc.t_w, overlap="double-buffered")
         assert o.cache_key(layer, db, 4, k, 2026, 50_000, 3) != base
+        # so is the resource shape (k DMA channels x m compute units)
+        from dataclasses import replace
+        wide = replace(acc, dma_channels=2, compute_units=3)
+        assert o.cache_key(layer, wide, 4, k, 2026, 50_000, 3) != base
         # dilation and channel groups are layer geometry
         dil = o.Layer(4, 12, 12, 3, 3, 4, d_h=2, d_w=2)
         grp = o.Layer(4, 12, 12, 3, 3, 4, groups=4)

@@ -39,6 +39,8 @@ fn quick_plan_options() -> PlanOptions {
         anneal_starts: 1,
         threads: 0,
         overlap: convoffload::platform::OverlapMode::Sequential,
+        dma_channels: 1,
+        compute_units: 1,
     }
 }
 

@@ -54,6 +54,15 @@ pub struct FuzzNetwork {
     pub seed: u64,
     /// The sampled stages, dimensionally chained.
     pub stages: Vec<FuzzStage>,
+    /// DMA channels (k ∈ 1..=3) for the §3.10 multi-resource replay of this
+    /// network. The per-stage accelerators stay at 1×1 so every historical
+    /// baseline is untouched; the differential harness applies this shape to
+    /// its own roomy variants.
+    pub dma_channels: usize,
+    /// Compute units (m ∈ 1..=3) for the multi-resource replay.
+    pub compute_units: usize,
+    /// Images per run (1 or 4) for the multi-resource replay.
+    pub batch: usize,
 }
 
 impl FuzzNetwork {
@@ -158,7 +167,13 @@ pub fn random_network(seed: u64) -> FuzzNetwork {
         }
         (c, h, w) = (dims.c, dims.h, dims.w);
     }
-    FuzzNetwork { seed, stages }
+    // Resource shape + batch for the §3.10 replay — drawn AFTER the stage
+    // loop so every pre-existing draw (and therefore every pinned layer,
+    // strategy and baseline) stays bit-stable.
+    let dma_channels = 1 + rng.index(3);
+    let compute_units = 1 + rng.index(3);
+    let batch = if rng.chance(0.5) { 4 } else { 1 };
+    FuzzNetwork { seed, stages, dma_channels, compute_units, batch }
 }
 
 // ------------------------------------------------------------ interchange
@@ -214,7 +229,11 @@ pub fn network_to_json(n: &FuzzNetwork) -> Json {
         })
         .collect();
     let mut o = Json::obj();
-    o.set("seed", n.seed).set("stages", Json::Arr(stages));
+    o.set("seed", n.seed)
+        .set("dma_channels", n.dma_channels)
+        .set("compute_units", n.compute_units)
+        .set("batch", n.batch)
+        .set("stages", Json::Arr(stages));
     o
 }
 
@@ -289,6 +308,27 @@ mod tests {
         assert!(po, "no pooled case in the seed range");
     }
 
+    /// The same seed range must also exercise every §3.10 resource axis:
+    /// multiple DMA channels, multiple compute units and a real batch
+    /// (the Python differential suite asserts the same of the emitted
+    /// cases). Shapes stay within the sampled bounds.
+    #[test]
+    fn seed_range_covers_the_resource_axes() {
+        let (mut multi_k, mut multi_m, mut batched) = (false, false, false);
+        for seed in 1..=24u64 {
+            let net = random_network(seed);
+            assert!((1..=3).contains(&net.dma_channels), "seed {seed}");
+            assert!((1..=3).contains(&net.compute_units), "seed {seed}");
+            assert!(net.batch == 1 || net.batch == 4, "seed {seed}");
+            multi_k |= net.dma_channels > 1;
+            multi_m |= net.compute_units > 1;
+            batched |= net.batch > 1;
+        }
+        assert!(multi_k, "no multi-channel case in the seed range");
+        assert!(multi_m, "no multi-unit case in the seed range");
+        assert!(batched, "no batched case in the seed range");
+    }
+
     #[test]
     fn json_interchange_is_parseable_and_complete() {
         let net = random_network(3);
@@ -296,6 +336,15 @@ mod tests {
         let text = j.to_string_pretty();
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.get("seed").and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            back.get("dma_channels").and_then(Json::as_usize),
+            Some(net.dma_channels)
+        );
+        assert_eq!(
+            back.get("compute_units").and_then(Json::as_usize),
+            Some(net.compute_units)
+        );
+        assert_eq!(back.get("batch").and_then(Json::as_usize), Some(net.batch));
         let stages = back.get("stages").and_then(Json::as_arr).unwrap();
         assert_eq!(stages.len(), net.stages.len());
         for (js, s) in stages.iter().zip(&net.stages) {

@@ -176,6 +176,18 @@ impl ExperimentConfig {
         if let Some(s) = doc.get_str("accelerator", "overlap") {
             accelerator.overlap = crate::platform::OverlapMode::from_str(s)?;
         }
+        if let Some(v) = doc.get_int("accelerator", "dma_channels") {
+            if v < 1 {
+                return Err(format!("[accelerator] dma_channels: {v} < 1"));
+            }
+            accelerator.dma_channels = v as usize;
+        }
+        if let Some(v) = doc.get_int("accelerator", "compute_units") {
+            if v < 1 {
+                return Err(format!("[accelerator] compute_units: {v} < 1"));
+            }
+            accelerator.compute_units = v as usize;
+        }
 
         let nb_data_reload =
             doc.get_int("strategy", "nb_data_reload").unwrap_or(2) as u32;
@@ -232,6 +244,30 @@ t_w = 1
         );
         let bad = text.replace("double-buffered", "triple-buffered");
         assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    /// `[accelerator] dma_channels`/`compute_units` set the §3.10 resource
+    /// shape; both default to 1 and reject values below 1.
+    #[test]
+    fn parses_resource_shape() {
+        let base = "[layer]\npreset = \"example1\"\n[accelerator]\n";
+        let cfg = ExperimentConfig::from_toml(base).unwrap();
+        assert_eq!(
+            (cfg.accelerator.dma_channels, cfg.accelerator.compute_units),
+            (1, 1)
+        );
+        let text = format!("{base}dma_channels = 2\ncompute_units = 3\n");
+        let cfg = ExperimentConfig::from_toml(&text).unwrap();
+        assert_eq!(
+            (cfg.accelerator.dma_channels, cfg.accelerator.compute_units),
+            (2, 3)
+        );
+        assert!(
+            ExperimentConfig::from_toml(&format!("{base}dma_channels = 0\n")).is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml(&format!("{base}compute_units = -1\n")).is_err()
+        );
     }
 
     #[test]

@@ -89,6 +89,8 @@ fn layer_flags() -> Vec<FlagSpec> {
         FlagSpec { name: "config", help: "TOML experiment file (overrides --layer)", takes_value: true, default: None },
         FlagSpec { name: "group", help: "group size (nb_patches_max_S1)", takes_value: true, default: Some("2") },
         FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential (default) or double-buffered", takes_value: true, default: None },
+        FlagSpec { name: "dma-channels", help: "DMA channels k for the double-buffered timeline (default 1)", takes_value: true, default: None },
+        FlagSpec { name: "compute-units", help: "compute units m for the double-buffered timeline (default 1)", takes_value: true, default: None },
         FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
     ]
 }
@@ -126,33 +128,42 @@ fn faults_from_args(
 }
 
 fn setup_from(args: &cli::Args) -> Result<Setup, String> {
-    // `--overlap` applies on top of either source (preset or TOML); the
-    // TOML file may also set `[accelerator] overlap = "double-buffered"`.
+    // `--overlap`, `--dma-channels` and `--compute-units` apply on top of
+    // either source (preset or TOML); the TOML file may also set the same
+    // keys in its `[accelerator]` section.
     let overlap = match args.get("overlap") {
         Some(s) => Some(OverlapMode::from_str(s)?),
         None => None,
     };
-    if let Some(path) = args.get("config") {
+    let mut setup = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let cfg = ExperimentConfig::from_toml(&text)?;
         let acc = match overlap {
             Some(o) => cfg.accelerator.with_overlap(o),
             None => cfg.accelerator,
         };
-        return Ok(Setup {
+        Setup {
             layer: cfg.layer,
             acc,
             group: cfg.group_size,
             faults: cfg.faults,
-        });
+        }
+    } else {
+        let name = args.get("layer").unwrap_or("example1");
+        let preset = layer_preset(name)
+            .ok_or_else(|| format!("unknown preset '{name}' (see `convoffload presets`)"))?;
+        let group = args.get_usize("group")?.unwrap_or(2).max(1);
+        let acc = Accelerator::for_group_size(&preset.layer, group)
+            .with_overlap(overlap.unwrap_or_default());
+        Setup { layer: preset.layer, acc, group, faults: None }
+    };
+    if let Some(k) = args.get_usize("dma-channels")? {
+        setup.acc.dma_channels = k.max(1);
     }
-    let name = args.get("layer").unwrap_or("example1");
-    let preset = layer_preset(name)
-        .ok_or_else(|| format!("unknown preset '{name}' (see `convoffload presets`)"))?;
-    let group = args.get_usize("group")?.unwrap_or(2).max(1);
-    let acc = Accelerator::for_group_size(&preset.layer, group)
-        .with_overlap(overlap.unwrap_or_default());
-    Ok(Setup { layer: preset.layer, acc, group, faults: None })
+    if let Some(m) = args.get_usize("compute-units")? {
+        setup.acc.compute_units = m.max(1);
+    }
+    Ok(setup)
 }
 
 fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<GroupedStrategy, String> {
@@ -181,6 +192,7 @@ fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<Grouped
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "strategy", help: "strategy name or CSV/JSON file", takes_value: true, default: Some("zigzag") });
+    specs.push(FlagSpec { name: "batch", help: "images to stream through the strategy (kernels load once)", takes_value: true, default: Some("1") });
     specs.push(FlagSpec { name: "steps", help: "print the per-step table", takes_value: false, default: None });
     specs.extend(fault_flags());
     let args = cli::parse(argv, &specs)?;
@@ -191,7 +203,8 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let setup = setup_from(&args)?;
     let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
     let faults = faults_from_args(&args, setup.faults)?;
-    let mut sim = Simulator::new(setup.layer, Platform::new(setup.acc));
+    let mut sim = Simulator::new(setup.layer, Platform::new(setup.acc))
+        .with_batch(args.get_usize("batch")?.unwrap_or(1).max(1));
     if let Some(m) = faults {
         sim = sim.with_faults(m);
     }
@@ -275,6 +288,8 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "thorough", help: "3x the anneal budget (delta evaluation makes it ~the old wall time; changes results, opt-in)", takes_value: false, default: None },
         FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
         FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered (races the makespan objective)", takes_value: true, default: Some("sequential") },
+        FlagSpec { name: "dma-channels", help: "DMA channels k for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
+        FlagSpec { name: "compute-units", help: "compute units m for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
         FlagSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: Some("0") },
         FlagSpec { name: "cache-dir", help: "strategy cache directory", takes_value: true, default: Some(".strategy-cache") },
         FlagSpec { name: "no-cache", help: "disable the strategy cache", takes_value: false, default: None },
@@ -319,6 +334,8 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
         threads: args.get_usize("threads")?.unwrap_or(0),
         overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
+        dma_channels: args.get_usize("dma-channels")?.unwrap_or(1).max(1),
+        compute_units: args.get_usize("compute-units")?.unwrap_or(1).max(1),
     };
     let planner = if args.get_bool("no-cache") {
         NetworkPlanner::new(options)
@@ -372,6 +389,8 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
         FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
         FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered", takes_value: true, default: Some("sequential") },
+        FlagSpec { name: "dma-channels", help: "DMA channels k for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
+        FlagSpec { name: "compute-units", help: "compute units m for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
         FlagSpec { name: "threads", help: "worker threads shared by the whole batch (0 = auto)", takes_value: true, default: Some("0") },
         FlagSpec { name: "cache-dir", help: "sharded strategy cache directory", takes_value: true, default: Some(".strategy-cache-sharded") },
         FlagSpec { name: "shards", help: "lock stripes / shard files (existing dirs keep their count)", takes_value: true, default: Some("16") },
@@ -416,6 +435,8 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
         threads: args.get_usize("threads")?.unwrap_or(0),
         overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
+        dma_channels: args.get_usize("dma-channels")?.unwrap_or(1).max(1),
+        compute_units: args.get_usize("compute-units")?.unwrap_or(1).max(1),
     };
     let mut planner = if args.get_bool("no-cache") {
         BatchPlanner::new(options)

@@ -1,16 +1,18 @@
-//! Delta-evaluated duration-domain objective: the §3.7 overlapped makespan
-//! as an annealing objective.
+//! Delta-evaluated duration-domain objective: the §3.7/§3.10 overlapped
+//! makespan as an annealing objective.
 //!
 //! [`MakespanEval`] mirrors [`crate::optimizer::objective::GroupingEval`]'s
-//! propose-score-commit contract (§3.5) for the two-resource timeline: it
-//! keeps the per-position step parameters (footprint sizes, boundary
-//! overlaps, group lengths — everything the §3.7 recurrence consumes) plus
-//! the timeline state *after every position*, so scoring a move replays the
-//! recurrence only from the first affected position and stops as soon as
-//! both resource frontiers have shifted by one uniform offset — the (max, +)
-//! recurrence is translation-equivariant, so from that point the whole
-//! suffix (and the makespan) shifts by the same offset. Most annealing moves
-//! touch 1–2 boundary entries and converge within a few positions.
+//! propose-score-commit contract (§3.5) for the multi-resource timeline
+//! (k DMA channels × m compute units; 1×1 is the paper's two-resource
+//! recurrence): it keeps the per-position step parameters (footprint sizes,
+//! boundary overlaps, group lengths — everything the recurrence consumes)
+//! plus the flattened timeline state *after every position*, so scoring a
+//! move replays the recurrence only from the first affected position and
+//! stops as soon as every resource frontier has shifted by one uniform
+//! offset — the (max, +) recurrence is translation-equivariant, so from
+//! that point the whole suffix (and the makespan) shifts by the same
+//! offset. Most annealing moves touch 1–2 boundary entries and converge
+//! within a few positions.
 //!
 //! The caller drives both evaluators in lock-step: `GroupingEval` scores the
 //! footprint math and stages its edits; [`MakespanEval::score`] restages the
@@ -37,9 +39,9 @@ struct PendingTimeline {
     glens: [Option<GlenEdit>; 2],
     /// First recomputed position.
     first: usize,
-    /// Last recomputed position (inclusive; states live in the scratch).
+    /// Last recomputed position (inclusive; state rows live in the scratch).
     end: usize,
-    /// Uniform shift of every state after `end`.
+    /// Uniform shift of every state row after `end`.
     shift: i64,
     new_makespan: u64,
 }
@@ -65,13 +67,20 @@ pub struct MakespanEval {
     ov: Vec<u64>,
     /// Group lengths in visit order.
     glen: Vec<u64>,
-    /// DMA frontier after each position (`dma[k]` = after the flush).
-    dma: Vec<u64>,
-    /// Compute frontier after each position.
-    comp: Vec<u64>,
+    /// Number of DMA channels (the leading `dma_channels` entries of a
+    /// state row are their frontiers).
+    dma_channels: usize,
+    /// Row width of the flattened timeline state:
+    /// [`OverlapTimeline::state_len`] of the accelerator's resource shape.
+    stride: usize,
+    /// Flattened timeline state after each position, `stride` entries per
+    /// row (row `k` = after the flush).
+    state: Vec<u64>,
     makespan: u64,
-    scratch_dma: Vec<u64>,
-    scratch_comp: Vec<u64>,
+    /// Running state row reused across [`MakespanEval::score`] calls.
+    cur: Vec<u64>,
+    /// Recomputed state rows of the staged move (flattened, like `state`).
+    scratch: Vec<u64>,
     pending: Option<PendingTimeline>,
 }
 
@@ -92,6 +101,9 @@ impl MakespanEval {
             glen.push(g.len() as u64);
             prev = Some(f);
         }
+        let dma_channels = acc.dma_channels.max(1);
+        let stride =
+            OverlapTimeline::state_len(dma_channels, acc.compute_units.max(1));
         let mut eval = MakespanEval {
             t_l: acc.t_l,
             t_w: acc.t_w,
@@ -103,20 +115,20 @@ impl MakespanEval {
             fp,
             ov,
             glen,
-            dma: Vec::with_capacity(k + 1),
-            comp: Vec::with_capacity(k + 1),
+            dma_channels,
+            stride,
+            state: Vec::with_capacity((k + 1) * stride),
             makespan: 0,
-            scratch_dma: Vec::with_capacity(k + 1),
-            scratch_comp: Vec::with_capacity(k + 1),
+            cur: vec![0; stride],
+            scratch: Vec::with_capacity((k + 1) * stride),
             pending: None,
         };
-        let (mut d, mut c) = (0u64, 0u64);
+        let mut cur = vec![0u64; stride];
         for p in 0..=k {
-            (d, c) = eval.advance(p, d, c, None, &[None, None]);
-            eval.dma.push(d);
-            eval.comp.push(c);
+            eval.advance(p, &mut cur, None, &[None, None]);
+            eval.state.extend_from_slice(&cur);
         }
-        eval.makespan = d.max(c);
+        eval.makespan = cur[..stride - 1].iter().copied().max().unwrap_or(0);
         eval
     }
 
@@ -228,19 +240,18 @@ impl MakespanEval {
         }
     }
 
-    /// One step of the §3.7 recurrence: position `p`'s (load, write,
-    /// compute, residency) under the staged view, advanced from the
-    /// `(dma, comp)` frontiers through the shared
-    /// [`OverlapTimeline::place`] rules. Position `k` is the terminal
-    /// flush.
+    /// One step of the recurrence: position `p`'s (load, write, compute,
+    /// residency) under the staged view, advanced in place on the flattened
+    /// `state` row through the shared [`OverlapTimeline::place_on`] rules
+    /// (the k×m list scheduler; 1×1 is the §3.7 recurrence). Position `k`
+    /// is the terminal flush.
     fn advance(
         &self,
         p: usize,
-        dma: u64,
-        comp: u64,
+        state: &mut [u64],
         effect: Option<&StagedEffect>,
         glens: &[Option<GlenEdit>; 2],
-    ) -> (u64, u64) {
+    ) {
         let k = self.k();
         let (loaded, written, compute, prev_occ) = if p < k {
             let load_px = self.view_fp(p, effect).saturating_sub(self.view_ov(p, effect));
@@ -267,15 +278,14 @@ impl MakespanEval {
             (0, self.view_glen(k - 1, effect, glens) * self.c_out, 0, prev_occ)
         };
         let can_prefetch = prev_occ + loaded <= self.size_mem;
-        let t = OverlapTimeline::place(
-            dma,
-            comp,
+        OverlapTimeline::place_on(
+            state,
+            self.dma_channels,
             loaded * self.t_l,
             written * self.t_w,
             compute,
             can_prefetch,
         );
-        (t.write_end, t.compute_end)
     }
 
     // ------------------------------------------------------- score / commit
@@ -319,21 +329,27 @@ impl MakespanEval {
         }
         let hi = hi.min(k);
 
-        let (mut dma, mut comp) =
-            if lo == 0 { (0, 0) } else { (self.dma[lo - 1], self.comp[lo - 1]) };
-        self.scratch_dma.clear();
-        self.scratch_comp.clear();
+        let stride = self.stride;
+        let mut cur = std::mem::take(&mut self.cur);
+        if lo == 0 {
+            cur.fill(0);
+        } else {
+            cur.copy_from_slice(&self.state[(lo - 1) * stride..lo * stride]);
+        }
+        self.scratch.clear();
         let mut end = k;
         let mut shift = 0i64;
         let mut converged = false;
         for p in lo..=k {
-            (dma, comp) = self.advance(p, dma, comp, Some(&effect), &glens);
-            self.scratch_dma.push(dma);
-            self.scratch_comp.push(comp);
+            self.advance(p, &mut cur, Some(&effect), &glens);
+            self.scratch.extend_from_slice(&cur);
             if p >= hi && p < k {
-                let sd = dma as i64 - self.dma[p] as i64;
-                let sc = comp as i64 - self.comp[p] as i64;
-                if sd == sc {
+                // Uniform-shift early exit: every resource frontier (and the
+                // issue-order gate) moved by one common offset, so the whole
+                // suffix translates — the recurrence is (max, +).
+                let old = &self.state[p * stride..(p + 1) * stride];
+                let sd = cur[0] as i64 - old[0] as i64;
+                if cur.iter().zip(old).all(|(n, o)| *n as i64 - *o as i64 == sd) {
                     end = p;
                     shift = sd;
                     converged = true;
@@ -344,8 +360,9 @@ impl MakespanEval {
         let new_makespan = if converged {
             (self.makespan as i64 + shift) as u64
         } else {
-            dma.max(comp)
+            cur[..stride - 1].iter().copied().max().unwrap_or(0)
         };
+        self.cur = cur;
         let delta = new_makespan as i64 - self.makespan as i64;
         self.pending = Some(PendingTimeline {
             effect,
@@ -397,14 +414,14 @@ impl MakespanEval {
         for ge in pend.glens.iter().flatten() {
             self.glen[ge.pos] = ge.new_len;
         }
+        let stride = self.stride;
         for (off, p) in (pend.first..=pend.end).enumerate() {
-            self.dma[p] = self.scratch_dma[off];
-            self.comp[p] = self.scratch_comp[off];
+            self.state[p * stride..(p + 1) * stride]
+                .copy_from_slice(&self.scratch[off * stride..(off + 1) * stride]);
         }
         if pend.shift != 0 {
-            for p in pend.end + 1..self.dma.len() {
-                self.dma[p] = (self.dma[p] as i64 + pend.shift) as u64;
-                self.comp[p] = (self.comp[p] as i64 + pend.shift) as u64;
+            for v in &mut self.state[(pend.end + 1) * stride..] {
+                *v = (*v as i64 + pend.shift) as u64;
             }
         }
         self.makespan = pend.new_makespan;
@@ -444,6 +461,29 @@ mod tests {
                     eval.makespan(),
                     sim.run(&s).unwrap().duration,
                     "{}",
+                    s.name
+                );
+            }
+        }
+    }
+
+    /// The generalized evaluator must agree with the engine's timeline on
+    /// multi-resource accelerators too — same list scheduler, two codepaths.
+    #[test]
+    fn new_matches_the_simulator_multi_resource() {
+        let l = ConvLayer::square(1, 8, 3, 1);
+        let g = 4usize;
+        for (k, m) in [(2, 1), (1, 2), (3, 2)] {
+            let acc = acc_for(&l, g)
+                .with_overlap(OverlapMode::DoubleBuffered)
+                .with_channels(k, m);
+            let sim = Simulator::new(l, Platform::new(acc));
+            for s in [strategy::row_by_row(&l, g), strategy::zigzag(&l, g)] {
+                let eval = MakespanEval::new(&l, &acc, &s.groups);
+                assert_eq!(
+                    eval.makespan(),
+                    sim.run(&s).unwrap().duration,
+                    "{} {k}x{m}",
                     s.name
                 );
             }

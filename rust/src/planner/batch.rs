@@ -73,7 +73,10 @@ pub(crate) fn stage_accelerator(
             (acc, acc.max_patches_per_step(layer).max(1))
         }
     };
-    (acc.with_overlap(o.overlap), group)
+    (
+        acc.with_overlap(o.overlap).with_channels(o.dma_channels, o.compute_units),
+        group,
+    )
 }
 
 /// Canonicalize every stage of every request into a flat, batch-ordered
@@ -686,6 +689,8 @@ mod tests {
             anneal_starts: 2,
             threads: 0,
             overlap: OverlapMode::Sequential,
+            dma_channels: 1,
+            compute_units: 1,
         }
     }
 

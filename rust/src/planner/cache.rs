@@ -57,12 +57,13 @@ impl CacheKey {
         anneal_iters: u64,
         anneal_starts: usize,
     ) -> CacheKey {
-        // v3: the accelerator's overlap mode joined the key — a strategy
-        // raced under the makespan objective is a different planning
-        // problem than one raced under loaded pixels (v2 added
-        // dilation + channel groups).
+        // v4: the accelerator's resource shape (k DMA channels × m compute
+        // units) joined the key — the makespan objective replays the
+        // generalized timeline, so a strategy raced on a 2×1 machine is a
+        // different planning problem than on 1×1 (v3 added the overlap
+        // mode, v2 dilation + channel groups).
         let canonical = format!(
-            "v3|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|dil:{}x{}|grp:{}|acc:{},{},{},{},{}|ovl:{}|g:{}|k:{}|anneal:{}x{}@{}",
+            "v4|in:{}x{}x{}|ker:{}x{}x{}|stride:{}x{}|dil:{}x{}|grp:{}|acc:{},{},{},{},{}|ovl:{}|ch:{}x{}|g:{}|k:{}|anneal:{}x{}@{}",
             layer.c_in,
             layer.h_in,
             layer.w_in,
@@ -80,6 +81,8 @@ impl CacheKey {
             acc.t_l,
             acc.t_w,
             acc.overlap.as_str(),
+            acc.dma_channels,
+            acc.compute_units,
             group_size,
             k,
             anneal_starts,
@@ -279,7 +282,7 @@ mod tests {
         cache.put(&key, &entry).unwrap();
         // same filename, different stored key → treated as a miss
         let text = std::fs::read_to_string(dir.join(key.filename())).unwrap();
-        let tampered = text.replace("v3|", "v0|");
+        let tampered = text.replace("v4|", "v0|");
         std::fs::write(dir.join(key.filename()), tampered).unwrap();
         assert!(cache.get(&key).is_none());
         let _ = std::fs::remove_dir_all(&dir);
@@ -316,11 +319,12 @@ mod tests {
         assert_ne!(dilated.canonical(), grouped.canonical());
     }
 
-    /// The overlap mode is part of the planning problem: the same shape on
-    /// the same machine under the other duration semantics must be a
-    /// different key (CacheKey v3).
+    /// The overlap mode and the resource shape are part of the planning
+    /// problem: the same shape on the same machine under other duration
+    /// semantics — or with more channels/units — must be a different key
+    /// (CacheKey v4).
     #[test]
-    fn overlap_mode_is_part_of_the_key() {
+    fn overlap_mode_and_resource_shape_are_part_of_the_key() {
         let l = ConvLayer::square(1, 6, 3, 1);
         let acc = Accelerator::for_group_size(&l, 2);
         let seq = CacheKey::new(&l, &acc, 2, 8, 1, 100, 1);
@@ -335,9 +339,13 @@ mod tests {
         );
         assert_ne!(seq.canonical(), db.canonical());
         assert_ne!(seq.filename(), db.filename());
-        assert!(seq.canonical().starts_with("v3|"));
+        assert!(seq.canonical().starts_with("v4|"));
         assert!(seq.canonical().contains("|ovl:sequential|"));
+        assert!(seq.canonical().contains("|ch:1x1|"));
         assert!(db.canonical().contains("|ovl:double-buffered|"));
+        let wide = CacheKey::new(&l, &acc.with_channels(2, 3), 2, 8, 1, 100, 1);
+        assert_ne!(seq.canonical(), wide.canonical());
+        assert!(wide.canonical().contains("|ch:2x3|"));
     }
 
     #[test]

@@ -84,6 +84,13 @@ pub struct PlanOptions {
     /// bit-stable; double-buffered races the §3.7 overlapped makespan
     /// (`plan-network --overlap double-buffered`). Part of the cache key.
     pub overlap: OverlapMode,
+    /// DMA channels every stage accelerator gets (k ≥ 1; the default 1
+    /// reproduces the two-resource recurrence and keeps historical plans
+    /// bit-stable). Part of the cache key (v4).
+    pub dma_channels: usize,
+    /// Compute units every stage accelerator gets (m ≥ 1; see
+    /// `dma_channels`). Part of the cache key (v4).
+    pub compute_units: usize,
 }
 
 impl Default for PlanOptions {
@@ -95,6 +102,8 @@ impl Default for PlanOptions {
             anneal_starts: 3,
             threads: 0,
             overlap: OverlapMode::Sequential,
+            dma_channels: 1,
+            compute_units: 1,
         }
     }
 }
@@ -242,6 +251,8 @@ mod tests {
             anneal_starts: 2,
             threads: 0,
             overlap: OverlapMode::Sequential,
+            dma_channels: 1,
+            compute_units: 1,
         }
     }
 

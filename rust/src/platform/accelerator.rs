@@ -70,6 +70,13 @@ pub struct Accelerator {
     pub t_w: u64,
     /// DMA/compute overlap semantics (`Sequential` reproduces Definition 3).
     pub overlap: OverlapMode,
+    /// Number of DMA channels available to the overlap timeline (k ≥ 1;
+    /// 1 reproduces the §3.7 recurrence bit-exactly).
+    pub dma_channels: usize,
+    /// Number of compute units available to the overlap timeline (m ≥ 1;
+    /// extra units only pay off across batched images — within one image
+    /// the steps form a dependency chain).
+    pub compute_units: usize,
 }
 
 impl Accelerator {
@@ -83,12 +90,24 @@ impl Accelerator {
             t_l: 1,
             t_w: 0,
             overlap: OverlapMode::Sequential,
+            dma_channels: 1,
+            compute_units: 1,
         }
     }
 
     /// The same machine with a different [`OverlapMode`] (builder-style).
     pub fn with_overlap(self, overlap: OverlapMode) -> Self {
         Accelerator { overlap, ..self }
+    }
+
+    /// The same machine with a different resource shape (builder-style):
+    /// `dma_channels` × `compute_units`, each clamped to ≥ 1.
+    pub fn with_channels(self, dma_channels: usize, compute_units: usize) -> Self {
+        Accelerator {
+            dma_channels: dma_channels.max(1),
+            compute_units: compute_units.max(1),
+            ..self
+        }
     }
 
     /// Maximum number of S1 patches processable in one step:
@@ -116,6 +135,8 @@ impl Accelerator {
             t_l: 1,
             t_w: 0,
             overlap: OverlapMode::Sequential,
+            dma_channels: 1,
+            compute_units: 1,
         }
     }
 
@@ -224,6 +245,18 @@ mod tests {
         let acc = Accelerator::paper_eval(1, 1).with_overlap(OverlapMode::DoubleBuffered);
         assert_eq!(acc.overlap, OverlapMode::DoubleBuffered);
         assert_eq!(acc.t_l, 1);
+    }
+
+    #[test]
+    fn channel_defaults_and_builder() {
+        let acc = Accelerator::paper_eval(1, 1);
+        assert_eq!((acc.dma_channels, acc.compute_units), (1, 1));
+        let wide = acc.with_channels(3, 2);
+        assert_eq!((wide.dma_channels, wide.compute_units), (3, 2));
+        assert_eq!(wide.t_l, acc.t_l);
+        // degenerate shapes clamp to the §3.7 pair
+        let clamped = acc.with_channels(0, 0);
+        assert_eq!((clamped.dma_channels, clamped.compute_units), (1, 1));
     }
 
     #[test]

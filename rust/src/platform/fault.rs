@@ -18,8 +18,11 @@
 //! Faults are drawn from a **stateless per-step stream**: step `i` seeds its
 //! own [`Rng`] as `seed ^ i·GOLDEN`, so the fault sequence is a pure function
 //! of `(fault seed, step index, step shape)` — independent of thread count,
-//! replay order, or how many steps were simulated before. The Python oracle
-//! (`python/oracle_sim.py`) mirrors the construction bit-exactly.
+//! replay order, or how many steps were simulated before. Multi-stage runs
+//! additionally decorrelate stages through [`FaultModel::for_stage`], which
+//! golden-ratio-*adds* the stage index into the seed (stage 0 is the
+//! identity, so single-stage traces stay pinned). The Python oracle
+//! (`python/oracle_sim.py`) mirrors both constructions bit-exactly.
 //!
 //! The zero model ([`FaultModel::none`]) is the *structural identity*: every
 //! injected quantity is zero and every timeline recurrence reduces to the
@@ -105,6 +108,17 @@ impl FaultModel {
     /// `--fault-seed` applies on top of `--faults`).
     pub fn with_seed(self, seed: u64) -> Self {
         FaultModel { seed, ..self }
+    }
+
+    /// The stage-`stage` view of this model: the same axes with the stage
+    /// index golden-ratio-mixed into the seed, so different pipeline stages
+    /// draw decorrelated streams (step 0 of every stage used to share one).
+    /// The mix is a wrapping *add* — distinct from the per-step *xor*
+    /// spreading in [`FaultModel::step_faults`], so the two cannot cancel.
+    /// Stage 0 is the identity: single-stage traces are unchanged. The
+    /// Python oracle mirrors this in `FaultModel.for_stage`.
+    pub fn for_stage(self, stage: usize) -> Self {
+        self.with_seed(self.seed.wrapping_add((stage as u64).wrapping_mul(GOLDEN)))
     }
 
     /// True when this model can inject anything at all.
@@ -352,6 +366,44 @@ mod tests {
         let mut r = Rng::new(13 ^ 1u64.wrapping_mul(GOLDEN));
         assert_eq!(r.next_u64(), 13543073186684114632);
         assert_eq!(r.next_u64(), 8432558809597263448);
+    }
+
+    /// Cross-language pin for the stage decorrelation mix: the Python
+    /// oracle's `TestStageDecorrelation.test_stage_seed_pins` asserts the
+    /// same four seeds, so both sides route stage `i` through the same
+    /// derived stream. Stage 0 must be the identity — single-stage traces
+    /// (and every pinned baseline) are unchanged by the mixing.
+    #[test]
+    fn stage_seed_mixing_pins() {
+        let m = FaultModel {
+            seed: 13,
+            dma_fail_rate: 0.35,
+            max_retries: 3,
+            retry_penalty: 9,
+            dma_jitter: 4,
+            t_acc_jitter: 3,
+            shrink_rate: 0.15,
+            shrink_elements: 32,
+        };
+        let seeds: Vec<u64> = (0..4).map(|i| m.for_stage(i).seed).collect();
+        assert_eq!(
+            seeds,
+            vec![
+                13,
+                11400714819323198498,
+                4354685564936845367,
+                15755400384260043852,
+            ]
+        );
+        assert_eq!(m.for_stage(0), m, "stage 0 must keep traces stable");
+        // The fix this pin guards: step 0 of different stages used to draw
+        // from one shared stream. Under the mix the draws diverge.
+        let step0: Vec<StepFaults> =
+            (0..8).map(|i| m.for_stage(i).step_faults(0, 500, 50, true)).collect();
+        assert!(
+            step0.iter().any(|f| f != &step0[0]),
+            "stage mixing left every stage's step-0 draw identical"
+        );
     }
 
     #[test]

@@ -41,12 +41,29 @@ pub struct Simulator {
     /// Optional deterministic fault injection (None = fault-free; an
     /// inactive model is treated identically to None).
     pub faults: Option<FaultModel>,
+    /// Number of images the strategy processes back to back (≥ 1; the cost
+    /// model only — kernels stay resident across images, so images after the
+    /// first skip the kernel reload, and on a multi-resource accelerator
+    /// consecutive images pipeline onto free units).
+    pub batch: usize,
 }
 
 impl Simulator {
-    /// A strict-mode, fault-free simulator for `layer` on `platform`.
+    /// A strict-mode, fault-free, single-image simulator for `layer` on
+    /// `platform`.
     pub fn new(layer: ConvLayer, platform: Platform) -> Self {
-        Simulator { layer, platform, strict: true, faults: None }
+        Simulator { layer, platform, strict: true, faults: None, batch: 1 }
+    }
+
+    /// The same simulator batched over `batch` images (builder-style;
+    /// clamped to ≥ 1). The strategy's step stream replays once per image:
+    /// the terminal flush leaves on-chip memory empty, so every image sees
+    /// identical residency, and only step 0's kernel load drops out after
+    /// the first image. Logical mode only — [`Simulator::run_functional`]
+    /// rejects batches, since it moves one image's real values.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
     }
 
     /// The same simulator with a [`FaultModel`] injected (builder-style).
@@ -120,6 +137,12 @@ impl Simulator {
                 self.layer.kernel_elements()
             )));
         }
+        if self.batch > 1 {
+            return Err(SimError::BadTensors(format!(
+                "functional mode simulates one image, not a batch of {}",
+                self.batch
+            )));
+        }
         if !self.platform.dram_fits(&self.layer) {
             return Err(SimError::DramTooSmall);
         }
@@ -153,10 +176,12 @@ impl Simulator {
     ) -> Result<(), SimError> {
         let acc = &self.platform.accelerator;
         report.overlap = acc.overlap;
-        // Two-resource schedule, built alongside the sequential accounting
-        // when the accelerator overlaps DMA with compute.
-        let mut timeline =
-            (acc.overlap == OverlapMode::DoubleBuffered).then(OverlapTimeline::new);
+        // Multi-resource schedule (k DMA channels × m compute units; 1×1
+        // reproduces the §3.7 two-resource recurrence bit-exactly), built
+        // alongside the sequential accounting when the accelerator overlaps
+        // DMA with compute.
+        let mut timeline = (acc.overlap == OverlapMode::DoubleBuffered)
+            .then(|| OverlapTimeline::with_resources(acc.dma_channels, acc.compute_units));
         // Occupancy at the end of the previous step — the left-hand side of
         // the §3.7 double-buffer residency condition.
         let mut prev_occupancy = 0u64;
@@ -224,15 +249,84 @@ impl Simulator {
                 timing,
             });
         }
+        // Images 1.. of a batch replay the recorded step shapes: the flush
+        // left on-chip memory empty, so residency repeats verbatim except
+        // that step 0 keeps the already-resident kernels. Fault draws use
+        // the *global* step index `b·n_steps + i`, so a batched trace is as
+        // replayable as a single-image one.
+        let n_steps = steps.len();
+        if self.batch > 1 {
+            let base: Vec<StepRecord> = report.steps.clone();
+            let kernel_elements = self.layer.kernel_elements() as u64;
+            for b in 1..self.batch {
+                if let Some(t) = timeline.as_mut() {
+                    t.begin_image();
+                }
+                for (i, rec0) in base.iter().enumerate() {
+                    let mut cost = rec0.cost;
+                    if i == 0 {
+                        debug_assert!(cost.loaded_elements >= kernel_elements);
+                        cost.loaded_elements =
+                            cost.loaded_elements.saturating_sub(kernel_elements);
+                    }
+                    let index = b * n_steps + i;
+                    let fx = fm
+                        .map(|m| {
+                            m.step_faults(
+                                index as u64,
+                                cost.loaded_elements,
+                                cost.written_elements,
+                                cost.computed,
+                            )
+                        })
+                        .unwrap_or_default();
+                    if fx.shrink {
+                        shrink_events += 1;
+                        effective_mem = effective_mem.saturating_sub(
+                            fm.expect("shrink implies model").shrink_elements,
+                        );
+                    }
+                    total_retries += fx.load_retries as u64;
+                    max_load_cycles = max_load_cycles.max(cost.load_cycles(acc));
+                    let load_cycles = cost.faulted_load_cycles(acc, &fx, retry_penalty);
+                    let write_cycles = cost.written_elements * acc.t_w;
+                    let compute_cycles = cost.faulted_compute_cycles(acc, &fx);
+                    dma_busy += load_cycles + write_cycles;
+                    compute_busy += compute_cycles;
+                    let timing = timeline.as_mut().map(|t| {
+                        let can_prefetch =
+                            prev_occupancy + cost.loaded_elements <= effective_mem;
+                        t.push(load_cycles, write_cycles, compute_cycles, can_prefetch)
+                    });
+                    prev_occupancy = rec0.occupancy;
+                    report.push_step(StepRecord {
+                        index,
+                        duration: cost.faulted_duration(acc, &fx, retry_penalty),
+                        cost,
+                        occupancy: rec0.occupancy,
+                        resident_input_elements: rec0.resident_input_elements,
+                        group_len: rec0.group_len,
+                        timing,
+                    });
+                }
+            }
+        }
         // Resource busy totals hold in either mode; the double-buffered
         // duration is the critical-path makespan instead of the sum.
         report.dma_busy = dma_busy;
         report.compute_busy = compute_busy;
-        if let Some(t) = timeline {
+        if let Some(t) = &timeline {
             debug_assert_eq!(t.dma_busy(), report.dma_busy);
             debug_assert_eq!(t.compute_busy(), report.compute_busy);
             report.duration = t.makespan();
         }
+        // Per-resource busy splits: real assignments from the timeline when
+        // one exists, otherwise the single-resource totals (sequential mode
+        // has exactly one DMA channel and one compute unit by construction).
+        (report.dma_busy_per, report.compute_busy_per) = match &timeline {
+            Some(t) => (t.dma_busy_per().to_vec(), t.compute_busy_per().to_vec()),
+            None => (vec![dma_busy], vec![compute_busy]),
+        };
         if let Some(m) = fm {
             report.fault_retries = total_retries;
             report.mem_shrink_events = shrink_events;
@@ -673,6 +767,46 @@ mod tests {
                 < clean_db.steps.iter().filter(|st| st.timing.is_some_and(|t| t.prefetched)).count(),
             "an exhausted budget must deny prefetches the clean run allowed"
         );
+    }
+
+    /// Image batching: the flush leaves on-chip memory empty, so a batch of
+    /// N replays the same step stream with step 0's kernel reload dropped —
+    /// the sequential duration is affine in N, and the multi-resource double
+    /// buffer pipelines consecutive images onto free units.
+    #[test]
+    fn batched_runs_are_affine_and_pipeline() {
+        let l = ConvLayer::new(1, 3, 12, 3, 3, 1, 1, 1).unwrap();
+        let s = strategy::row_by_row(&l, 4);
+        let base = Accelerator { t_acc: 4, t_w: 1, ..Accelerator::paper_eval(36, 64) };
+        let one = Simulator::new(l, Platform::new(base)).run(&s).unwrap();
+        assert_eq!(one.duration, 67);
+        let four =
+            Simulator::new(l, Platform::new(base)).with_batch(4).run(&s).unwrap();
+        let kernel_reload = l.kernel_elements() as u64 * base.t_l; // 9 cycles
+        assert_eq!(four.sequential_duration, 4 * 67 - 3 * kernel_reload);
+        assert_eq!(four.duration, four.sequential_duration);
+        assert_eq!(four.steps.len(), 4 * one.steps.len());
+
+        let db = base.with_overlap(OverlapMode::DoubleBuffered).with_channels(2, 2);
+        let r = Simulator::new(l, Platform::new(db)).with_batch(4).run(&s).unwrap();
+        assert_eq!(r.sequential_duration, four.sequential_duration);
+        assert!(r.duration <= four.duration);
+        assert!(r.duration >= r.dma_busy.div_ceil(2).max(r.compute_busy.div_ceil(2)));
+        assert_eq!(r.dma_busy_per.len(), 2);
+        assert_eq!(r.compute_busy_per.len(), 2);
+        assert_eq!(r.dma_busy_per.iter().sum::<u64>(), r.dma_busy);
+        assert_eq!(r.compute_busy_per.iter().sum::<u64>(), r.compute_busy);
+
+        // Functional mode moves one image's real values: batches are logical.
+        let input = reference::synth_tensor(l.input_dims().len(), 1);
+        let kernels = reference::synth_tensor(l.kernel_elements(), 2);
+        let mut backend = RustOracleBackend;
+        assert!(matches!(
+            Simulator::new(l, Platform::new(base))
+                .with_batch(2)
+                .run_functional(&s, &input, &kernels, &mut backend),
+            Err(SimError::BadTensors(_))
+        ));
     }
 
     #[test]

@@ -135,10 +135,12 @@ impl Network {
 
     /// Logical pipeline simulation under an optional [`FaultModel`].
     ///
-    /// Each stage replays the *same* seeded stream (fault draws are keyed by
-    /// step index within the stage), so a network trace is as replayable as
-    /// a single-stage one. Without a model — or with an inactive one — this
-    /// is bit-identical to [`Network::run`].
+    /// Stage `i` draws from `model.for_stage(i)` — the same axes with the
+    /// stage index mixed into the seed — so stages no longer replay one
+    /// shared stream (step 0 of every stage used to draw identical faults).
+    /// Stage 0 is the identity mix, keeping single-stage traces and their
+    /// pinned baselines stable. Without a model — or with an inactive one —
+    /// this is bit-identical to [`Network::run`].
     pub fn run_with_faults(
         &self,
         faults: Option<&FaultModel>,
@@ -154,11 +156,11 @@ impl Network {
             output: None,
             max_abs_error: None,
         };
-        for stage in &self.stages {
+        for (i, stage) in self.stages.iter().enumerate() {
             let mut sim =
                 Simulator::new(stage.layer, Platform::new(stage.accelerator));
             if let Some(m) = faults {
-                sim = sim.with_faults(*m);
+                sim = sim.with_faults(m.for_stage(i));
             }
             let r = sim.run(&stage.strategy)?;
             report.total_duration += r.duration;
@@ -558,6 +560,37 @@ mod tests {
             a.fault_retries,
             a.per_stage.iter().map(|s| s.fault_retries).sum::<u64>()
         );
+    }
+
+    /// Stage `i` of a faulted pipeline must be reproducible standalone under
+    /// `model.for_stage(i)` — the decorrelation is a seed transform, not a
+    /// hidden pipeline state.
+    #[test]
+    fn faulted_stages_replay_standalone_under_the_mixed_seed() {
+        let net = lenet5_trunk(|l, g| strategy::zigzag(l, g), 4);
+        let m = FaultModel {
+            seed: 13,
+            dma_fail_rate: 0.35,
+            max_retries: 3,
+            retry_penalty: 9,
+            dma_jitter: 4,
+            t_acc_jitter: 3,
+            shrink_rate: 0.15,
+            shrink_elements: 32,
+        };
+        let r = net.run_with_faults(Some(&m)).unwrap();
+        for (i, stage) in net.stages.iter().enumerate() {
+            let solo = Simulator::new(stage.layer, Platform::new(stage.accelerator))
+                .with_faults(m.for_stage(i))
+                .run(&stage.strategy)
+                .unwrap();
+            assert_eq!(solo.duration, r.per_stage[i].duration, "stage {i}");
+            assert_eq!(solo.fault_retries, r.per_stage[i].fault_retries, "stage {i}");
+            assert_eq!(
+                solo.mem_shrink_events, r.per_stage[i].mem_shrink_events,
+                "stage {i}"
+            );
+        }
     }
 
     #[test]

@@ -43,10 +43,17 @@ pub struct SimReport {
     pub sequential_duration: u64,
     /// Which overlap semantics produced `duration`.
     pub overlap: OverlapMode,
-    /// Total cycles the DMA channel was busy (loads + writes).
+    /// Total cycles the DMA channels were busy (loads + writes, all
+    /// channels summed).
     pub dma_busy: u64,
-    /// Total cycles the compute unit was busy.
+    /// Total cycles the compute units were busy (all units summed).
     pub compute_busy: u64,
+    /// Busy cycles per DMA channel, indexed by channel — the timeline's
+    /// actual assignments in double-buffered mode, a single-entry vector in
+    /// sequential mode (one channel by construction). Sums to `dma_busy`.
+    pub dma_busy_per: Vec<u64>,
+    /// Busy cycles per compute unit; sums to `compute_busy`.
+    pub compute_busy_per: Vec<u64>,
     /// Peak element occupancy across steps.
     pub peak_occupancy: u64,
     /// DMA retries injected by the run's [`crate::platform::FaultModel`]
@@ -78,6 +85,8 @@ impl SimReport {
             overlap: OverlapMode::Sequential,
             dma_busy: 0,
             compute_busy: 0,
+            dma_busy_per: Vec::new(),
+            compute_busy_per: Vec::new(),
             peak_occupancy: 0,
             fault_retries: 0,
             mem_shrink_events: 0,
@@ -128,6 +137,14 @@ impl SimReport {
             .set("overlap", self.overlap.as_str())
             .set("dma_busy", self.dma_busy)
             .set("compute_busy", self.compute_busy)
+            .set(
+                "dma_busy_per",
+                Json::Arr(self.dma_busy_per.iter().map(|&v| v.into()).collect()),
+            )
+            .set(
+                "compute_busy_per",
+                Json::Arr(self.compute_busy_per.iter().map(|&v| v.into()).collect()),
+            )
             .set("loaded_elements", self.total_loaded())
             .set("written_elements", self.totals.total.written_elements)
             .set("macs", self.totals.total.macs)
@@ -155,6 +172,11 @@ impl SimReport {
                     .set("occupancy", s.occupancy)
                     .set("resident_input", s.resident_input_elements)
                     .set("group_len", s.group_len);
+                if let Some(t) = &s.timing {
+                    so.set("load_channel", t.load_channel)
+                        .set("write_channel", t.write_channel)
+                        .set("compute_unit", t.compute_unit);
+                }
                 so
             })
             .collect();
@@ -187,6 +209,12 @@ pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
             report.dma_busy,
             report.compute_busy,
         ));
+        if report.dma_busy_per.len() > 1 || report.compute_busy_per.len() > 1 {
+            line.push_str(&format!(
+                "  [per-resource busy: dma {:?} | compute {:?}]",
+                report.dma_busy_per, report.compute_busy_per,
+            ));
+        }
     }
     if let Some(wcet) = report.wcet_bound {
         line.push_str(&format!(

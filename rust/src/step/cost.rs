@@ -1,6 +1,8 @@
-//! Step duration (Definition 3), its decomposition, and the two-resource
+//! Step duration (Definition 3), its decomposition, and the multi-resource
 //! overlapped timeline ([`OverlapTimeline`]) behind
-//! [`crate::platform::OverlapMode::DoubleBuffered`].
+//! [`crate::platform::OverlapMode::DoubleBuffered`] — k DMA channels ×
+//! m compute units (§3.10), collapsing bit-exactly to the §3.7
+//! two-resource recurrence at k = m = 1.
 
 use crate::platform::{Accelerator, StepFaults};
 
@@ -115,8 +117,9 @@ impl StrategyCost {
     }
 }
 
-/// Start/end instants of one step's phases on the two-resource timeline
-/// (cycles since the start of the strategy).
+/// Start/end instants of one step's phases on the overlap timeline
+/// (cycles since the start of the strategy), plus the resource each phase
+/// was assigned to by the list scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct StepTiming {
     /// DMA: input/kernel load phase.
@@ -135,45 +138,105 @@ pub struct StepTiming {
     /// Whether the load phase was allowed to prefetch during the previous
     /// step's compute (the double-buffer residency condition held).
     pub prefetched: bool,
+    /// DMA channel the load phase ran on (0 at k = 1).
+    pub load_channel: usize,
+    /// DMA channel the write phase ran on (0 at k = 1).
+    pub write_channel: usize,
+    /// Compute unit the compute phase ran on (0 at m = 1).
+    pub compute_unit: usize,
 }
 
-/// The §3.7 two-resource timeline: one DMA channel, one compute unit, steps
-/// issued in order on both.
+/// Index of the earliest-free resource (lowest index on ties) — the list
+/// scheduler's only placement rule.
+fn earliest(frontiers: &[u64]) -> usize {
+    let mut best = 0;
+    for (i, &f) in frontiers.iter().enumerate().skip(1) {
+        if f < frontiers[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The §3.10 multi-resource timeline: k DMA channels × m compute units,
+/// steps issued in order, each phase list-scheduled onto the earliest-free
+/// resource of its class (lowest index on ties).
 ///
-/// Per step, the DMA channel runs the load phase then the write phase; the
-/// compute unit runs the compute phase. Dependencies:
+/// Per step, a DMA channel runs the load phase, a DMA channel (re-picked
+/// after the load is placed) runs the write phase, and a compute unit runs
+/// the compute phase. Dependencies — identical to §3.7, anchored on the
+/// *issue-order previous* compute (`prev_comp_end`, the step that produced
+/// the outputs in flight):
 ///
-/// * **load** waits for the channel; when the double-buffer residency
+/// * **load** waits for its channel; when the double-buffer residency
 ///   condition fails (`can_prefetch = false`) it additionally waits for the
 ///   previous step's compute (serialization fallback — the previous working
 ///   set must be released before the new inputs can be staged);
-/// * **write** waits for the channel after the load phase *and* for the
-///   previous step's compute (it drains outputs that compute produced);
-/// * **compute** waits for this step's loads and the previous compute.
+/// * **write** waits for its channel *and* for the previous step's compute
+///   (it drains outputs that compute produced — at m > 1 the producing
+///   step's frontier and "the busy unit" stop coinciding, which is why the
+///   gate is `prev_comp_end` and not a unit frontier);
+/// * **compute** waits for its unit, this step's loads and the previous
+///   compute (within one image the steps form a dependency chain; extra
+///   units only pay off across batched images, see
+///   [`OverlapTimeline::begin_image`]).
 ///
-/// The makespan is the later of the two resource frontiers. It is always
-/// ≤ the sequential (Definition 3) duration and ≥ `max(dma_busy,
-/// compute_busy)` — both bounds are pinned by tests here, by the fuzz
+/// Channels are in-order queues: a gated phase stalls its channel (the
+/// frontier advances through the wait), exactly as the §3.7 single channel
+/// does — so at k = m = 1 every placement is bit-identical to
+/// [`OverlapTimeline::place`], the legacy scalar recurrence kept as the
+/// collapse reference.
+///
+/// The makespan is the latest resource frontier. It is always ≤ the
+/// sequential (Definition 3) duration and ≥ `max(⌈dma_busy/k⌉,
+/// ⌈compute_busy/m⌉)` — both bounds are pinned by tests here, by the fuzz
 /// property suite and by the Python oracle.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone)]
 pub struct OverlapTimeline {
-    dma_free: u64,
-    comp_end: u64,
-    dma_busy: u64,
-    compute_busy: u64,
+    /// Flattened frontiers: `k` DMA channels, `m` compute units, then the
+    /// previous step's compute end (see [`OverlapTimeline::state_len`]).
+    state: Vec<u64>,
+    dma_channels: usize,
+    dma_busy_per: Vec<u64>,
+    compute_busy_per: Vec<u64>,
+}
+
+impl Default for OverlapTimeline {
+    fn default() -> Self {
+        OverlapTimeline::new()
+    }
 }
 
 impl OverlapTimeline {
-    /// An empty timeline (both resources free at cycle 0).
+    /// An empty §3.7 timeline (1 DMA channel, 1 compute unit, free at 0).
     pub fn new() -> Self {
-        OverlapTimeline::default()
+        OverlapTimeline::with_resources(1, 1)
     }
 
-    /// One step of the §3.7 recurrence as a **pure function** of the two
-    /// resource frontiers — the single implementation of the dependency
-    /// rules, shared by [`OverlapTimeline::push`] (simulator side) and the
-    /// incremental duration objective
-    /// ([`crate::optimizer::MakespanEval`]).
+    /// An empty timeline over `dma_channels` × `compute_units` resources
+    /// (each clamped to ≥ 1).
+    pub fn with_resources(dma_channels: usize, compute_units: usize) -> Self {
+        let k = dma_channels.max(1);
+        let m = compute_units.max(1);
+        OverlapTimeline {
+            state: vec![0; Self::state_len(k, m)],
+            dma_channels: k,
+            dma_busy_per: vec![0; k],
+            compute_busy_per: vec![0; m],
+        }
+    }
+
+    /// Length of the flattened state vector for a k × m timeline:
+    /// `k` channel frontiers + `m` unit frontiers + the previous compute
+    /// end.
+    pub fn state_len(dma_channels: usize, compute_units: usize) -> usize {
+        dma_channels + compute_units + 1
+    }
+
+    /// One step of the §3.7 two-resource recurrence as a **pure function**
+    /// of the two scalar frontiers — kept as the documented k = m = 1
+    /// reference; the collapse property tests replay strategies through
+    /// both this and [`OverlapTimeline::place_on`] and assert bit-equality.
     pub fn place(
         dma_free: u64,
         comp_end: u64,
@@ -197,6 +260,55 @@ impl OverlapTimeline {
             compute_start,
             compute_end,
             prefetched: can_prefetch,
+            ..StepTiming::default()
+        }
+    }
+
+    /// One step of the generalized recurrence as a **pure function** of a
+    /// flattened state slice (`dma_channels` channel frontiers, then the
+    /// unit frontiers, then the previous compute end) — the single
+    /// implementation of the dependency rules, shared by
+    /// [`OverlapTimeline::push`] (simulator side) and the incremental
+    /// duration objective ([`crate::optimizer::MakespanEval`]). Mutates
+    /// `state` in place and returns the placed phases.
+    pub fn place_on(
+        state: &mut [u64],
+        dma_channels: usize,
+        load_cycles: u64,
+        write_cycles: u64,
+        compute_cycles: u64,
+        can_prefetch: bool,
+    ) -> StepTiming {
+        let k = dma_channels;
+        let m = state.len() - k - 1;
+        debug_assert!(k >= 1 && m >= 1, "state slice too short for k={k}");
+        let prev_comp_end = state[k + m];
+        let gate = if can_prefetch { 0 } else { prev_comp_end };
+        let (dma, comp) = state.split_at_mut(k);
+        let load_channel = earliest(dma);
+        let load_start = dma[load_channel].max(gate);
+        let load_end = load_start + load_cycles;
+        dma[load_channel] = load_end;
+        let write_channel = earliest(dma);
+        let write_start = dma[write_channel].max(prev_comp_end);
+        let write_end = write_start + write_cycles;
+        dma[write_channel] = write_end;
+        let compute_unit = earliest(&comp[..m]);
+        let compute_start = comp[compute_unit].max(load_end).max(prev_comp_end);
+        let compute_end = compute_start + compute_cycles;
+        comp[compute_unit] = compute_end;
+        comp[m] = compute_end;
+        StepTiming {
+            load_start,
+            load_end,
+            write_start,
+            write_end,
+            compute_start,
+            compute_end,
+            prefetched: can_prefetch,
+            load_channel,
+            write_channel,
+            compute_unit,
         }
     }
 
@@ -209,34 +321,53 @@ impl OverlapTimeline {
         compute_cycles: u64,
         can_prefetch: bool,
     ) -> StepTiming {
-        let t = Self::place(
-            self.dma_free,
-            self.comp_end,
+        let t = Self::place_on(
+            &mut self.state,
+            self.dma_channels,
             load_cycles,
             write_cycles,
             compute_cycles,
             can_prefetch,
         );
-        self.dma_free = t.write_end;
-        self.comp_end = t.compute_end;
-        self.dma_busy += load_cycles + write_cycles;
-        self.compute_busy += compute_cycles;
+        self.dma_busy_per[t.load_channel] += load_cycles;
+        self.dma_busy_per[t.write_channel] += write_cycles;
+        self.compute_busy_per[t.compute_unit] += compute_cycles;
         t
     }
 
-    /// Critical-path makespan so far: the later resource frontier.
+    /// Start the next image of a batch: steps of different images carry no
+    /// data dependency, so only the issue-order compute gate resets —
+    /// resource frontiers persist (the hardware is still busy), which is
+    /// what lets consecutive images' phases pipeline onto free units.
+    pub fn begin_image(&mut self) {
+        let last = self.state.len() - 1;
+        self.state[last] = 0;
+    }
+
+    /// Critical-path makespan so far: the latest resource frontier.
     pub fn makespan(&self) -> u64 {
-        self.dma_free.max(self.comp_end)
+        let n = self.state.len() - 1;
+        self.state[..n].iter().copied().max().unwrap_or(0)
     }
 
-    /// Total cycles the DMA channel was busy (loads + writes).
+    /// Total cycles all DMA channels were busy (loads + writes).
     pub fn dma_busy(&self) -> u64 {
-        self.dma_busy
+        self.dma_busy_per.iter().sum()
     }
 
-    /// Total cycles the compute unit was busy.
+    /// Total cycles all compute units were busy.
     pub fn compute_busy(&self) -> u64 {
-        self.compute_busy
+        self.compute_busy_per.iter().sum()
+    }
+
+    /// Per-channel DMA busy cycles (length k).
+    pub fn dma_busy_per(&self) -> &[u64] {
+        &self.dma_busy_per
+    }
+
+    /// Per-unit compute busy cycles (length m).
+    pub fn compute_busy_per(&self) -> &[u64] {
+        &self.compute_busy_per
     }
 }
 
@@ -326,6 +457,81 @@ mod tests {
         }
         assert!(t.makespan() <= sequential);
         assert!(t.makespan() >= t.dma_busy().max(t.compute_busy()));
+    }
+
+    /// The same four pushes as `overlap_timeline_hand_computed_chain`, on
+    /// (k=2, m=1) — every phase instant hand-computed, mirrored verbatim by
+    /// `TestHandComputedPin::test_k2_m1_schedule` in
+    /// `python/tests/test_multi_resource.py`.
+    #[test]
+    fn overlap_timeline_multi_hand_computed_k2() {
+        let mut t = OverlapTimeline::with_resources(2, 1);
+        let s1 = t.push(10, 0, 5, true);
+        assert_eq!((s1.load_channel, s1.load_start, s1.load_end), (0, 0, 10));
+        assert_eq!((s1.write_channel, s1.write_end), (1, 0));
+        assert_eq!((s1.compute_start, s1.compute_end), (10, 15));
+        let s2 = t.push(6, 2, 5, true);
+        // channel 1 is free at 0: the load prefetches there immediately,
+        // but the write still waits for compute 1 — the producer gate.
+        assert_eq!((s2.load_channel, s2.load_start, s2.load_end), (1, 0, 6));
+        assert_eq!((s2.write_channel, s2.write_start, s2.write_end), (1, 15, 17));
+        assert_eq!((s2.compute_start, s2.compute_end), (15, 20));
+        let s3 = t.push(6, 2, 5, false);
+        // serialization fallback: the load waits for compute 2 (ends 20)
+        // even though channel 0 frees at 10.
+        assert_eq!((s3.load_channel, s3.load_start, s3.load_end), (0, 20, 26));
+        assert_eq!((s3.write_channel, s3.write_start, s3.write_end), (1, 20, 22));
+        assert_eq!((s3.compute_start, s3.compute_end), (26, 31));
+        let flush = t.push(0, 2, 0, true);
+        assert_eq!((flush.write_channel, flush.write_start, flush.write_end), (1, 31, 33));
+
+        assert_eq!(t.makespan(), 33); // vs 34 on the single channel
+        assert_eq!(t.dma_busy_per(), &[16, 12]);
+        assert_eq!(t.compute_busy_per(), &[15]);
+        assert_eq!(t.dma_busy(), 28);
+        assert_eq!(t.compute_busy(), 15);
+    }
+
+    /// k = m = 1 collapse: `place_on` must reproduce the legacy scalar
+    /// `place` recurrence bit-exactly, phase instant by phase instant,
+    /// across a serialization-heavy mixed chain.
+    #[test]
+    fn multi_place_collapses_to_legacy_at_1x1() {
+        let pushes = [
+            (10u64, 0u64, 5u64, true),
+            (6, 2, 5, true),
+            (6, 2, 5, false),
+            (3, 1, 4, false),
+            (0, 0, 2, true),
+            (0, 2, 0, true),
+        ];
+        let mut state = vec![0u64; OverlapTimeline::state_len(1, 1)];
+        let (mut dma_free, mut comp_end) = (0u64, 0u64);
+        for &(l, w, c, p) in &pushes {
+            let legacy = OverlapTimeline::place(dma_free, comp_end, l, w, c, p);
+            dma_free = legacy.write_end;
+            comp_end = legacy.compute_end;
+            let multi = OverlapTimeline::place_on(&mut state, 1, l, w, c, p);
+            assert_eq!(multi, legacy);
+            assert_eq!(state, vec![dma_free, comp_end, comp_end]);
+        }
+    }
+
+    /// Batched images on one unit serialize; `begin_image` only resets the
+    /// issue-order gate, so frontiers (and busy totals) accumulate.
+    #[test]
+    fn begin_image_resets_only_the_compute_gate() {
+        let mut t = OverlapTimeline::with_resources(1, 1);
+        t.push(10, 0, 5, true);
+        let before = t.makespan();
+        t.begin_image();
+        assert_eq!(t.makespan(), before);
+        // The next image's load prefetches (gate reset), so it starts at
+        // the channel frontier, not after the previous compute.
+        let s = t.push(4, 0, 5, true);
+        assert_eq!((s.load_start, s.load_end), (10, 14));
+        assert_eq!((s.compute_start, s.compute_end), (15, 20));
+        assert_eq!(t.dma_busy(), 14);
     }
 
     /// The retry recurrence: clean faults are the identity, each retry

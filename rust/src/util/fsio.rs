@@ -55,7 +55,17 @@ pub fn atomic_write(path: &Path, contents: &str) -> Result<(), String> {
     std::fs::rename(&tmp, path).map_err(|e| {
         let _ = std::fs::remove_file(&tmp);
         format!("rename {} -> {}: {e}", tmp.display(), path.display())
-    })
+    })?;
+    // The rename made the new name visible, but the *directory entry* itself
+    // is not durable until the directory is synced: a crash here could roll
+    // the rename back and resurface the old file (or none). Best-effort —
+    // some filesystems refuse fsync on directories, and a lost rename is a
+    // stale-cache problem, not a corruption one, so errors are ignored.
+    let dir_path = dir.map(Path::to_path_buf).unwrap_or_else(|| ".".into());
+    if let Ok(d) = std::fs::File::open(&dir_path) {
+        let _ = d.sync_all();
+    }
+    Ok(())
 }
 
 /// Remove orphaned `.{name}.tmp-{pid}-{seq}` siblings left in `dir` by
@@ -217,6 +227,29 @@ mod tests {
         assert_eq!(temp_owner_pid(".x.json.tmp-abc-4"), None, "non-numeric pid");
         assert_eq!(temp_owner_pid(".x.json.tmp-123-"), None, "empty seq");
         assert_eq!(temp_owner_pid(".x.json.tmp-123-4x"), None, "bad seq");
+    }
+
+    /// Regression for the missing parent-directory fsync after the rename:
+    /// the write must still succeed (the sync is best-effort) on explicit
+    /// parents, bare file names (implicit `.` parent), and read-only
+    /// directories where opening for sync may be refused.
+    #[test]
+    fn rename_survives_unsyncable_and_implicit_parents() {
+        let dir = tmp_dir("dirsync");
+        atomic_write(&dir.join("a.json"), "with parent").unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("a.json")).unwrap(), "with parent");
+
+        // Bare relative name: parent is the implicit current directory.
+        let old_cwd = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let res = atomic_write(Path::new("bare.json"), "no parent component");
+        std::env::set_current_dir(old_cwd).unwrap();
+        res.unwrap();
+        assert_eq!(
+            std::fs::read_to_string(dir.join("bare.json")).unwrap(),
+            "no parent component"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

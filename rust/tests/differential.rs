@@ -3,16 +3,20 @@
 //! Simulates a fixed set of fuzz networks (`config::fuzz::random_network`,
 //! seeds 1..=24 — asserted below to cover stride > 1, dilation > 1,
 //! groups > 1 and pooling) and writes the interchange file
-//! `target/differential_cases.json` (version 3): every case carries the
+//! `target/differential_cases.json` (version 4): every case carries the
 //! full network spec (layers with dilation/groups, accelerators, explicit
 //! strategy groups, plumbing flags) plus the Rust simulator's results under
 //! **both** duration semantics — the sequential Definition-3 sums and the
 //! §3.7 double-buffered makespans (on the case's own accelerator *and* on a
 //! 2× memory "roomy" variant, where most residency checks pass so real
-//! overlap is exercised) — and, new in v3, a **fault-injected** replay of
+//! overlap is exercised) — plus a **fault-injected** replay of
 //! the same network under a per-case [`FaultModel`] (DMA retries, timing
 //! jitter, memory shrink), in both modes, with retry / shrink counts and
-//! the analytic k-fault WCET bound. The Python oracle
+//! the analytic k-fault WCET bound. New in v4: each case samples a §3.10
+//! resource shape (k DMA channels × m compute units) and an image batch and
+//! records the multi-resource makespans with per-resource busy vectors, and
+//! the faulted double-buffered replay of stage `i` draws from
+//! `model.for_stage(i)` (stage-decorrelated streams). The Python oracle
 //! (`python/oracle_sim.py`, exercised by
 //! `python/tests/test_differential.py`) replays the specs — including the
 //! seeded fault streams, via its own xoshiro256** port — independently and
@@ -88,6 +92,69 @@ fn overlapped_expectations(net: &FuzzNetwork, mem_factor: u64) -> Json {
     o
 }
 
+/// The §3.10 multi-resource expectations (v4): every stage replayed
+/// double-buffered on the 2× memory "roomy" variant with the network's
+/// sampled resource shape (k × m) and image batch — makespans, batched
+/// sequential sums and per-resource busy vectors, all of which the Python
+/// oracle's independent k × m list scheduler must reproduce bit-exactly.
+fn multi_expectations(net: &FuzzNetwork) -> Json {
+    let (k, m) = (net.dma_channels, net.compute_units);
+    let mut per_stage: Vec<Json> = Vec::new();
+    let mut total = 0u64;
+    for s in &net.stages {
+        let acc = Accelerator {
+            size_mem: s.accelerator.size_mem * 2,
+            ..s.accelerator
+        }
+        .with_overlap(OverlapMode::DoubleBuffered)
+        .with_channels(k, m);
+        let r = Simulator::new(s.layer, Platform::new(acc))
+            .with_batch(net.batch)
+            .run(&s.strategy)
+            .unwrap_or_else(|e| {
+                panic!("seed {} stage {}: multi-resource sim failed: {e}", net.seed, s.name)
+            });
+        assert!(
+            r.duration <= r.sequential_duration,
+            "seed {} stage {}: {k}x{m} makespan above the batched sequential sum",
+            net.seed,
+            s.name
+        );
+        assert!(
+            r.duration
+                >= r.dma_busy
+                    .div_ceil(k as u64)
+                    .max(r.compute_busy.div_ceil(m as u64)),
+            "seed {} stage {}: {k}x{m} makespan below the resource floor",
+            net.seed,
+            s.name
+        );
+        total += r.duration;
+        let mut o = Json::obj();
+        o.set("name", s.name.as_str())
+            .set("makespan", r.duration)
+            .set("sequential_duration", r.sequential_duration)
+            .set("dma_busy", r.dma_busy)
+            .set("compute_busy", r.compute_busy)
+            .set(
+                "dma_busy_per",
+                Json::Arr(r.dma_busy_per.iter().map(|&v| v.into()).collect()),
+            )
+            .set(
+                "compute_busy_per",
+                Json::Arr(r.compute_busy_per.iter().map(|&v| v.into()).collect()),
+            );
+        per_stage.push(o);
+    }
+    let mut o = Json::obj();
+    o.set("dma_channels", k)
+        .set("compute_units", m)
+        .set("batch", net.batch)
+        .set("total_makespan", total)
+        .set("per_stage", Json::Arr(per_stage));
+    o
+}
+
 /// The per-case fault model: every axis live (retries, both jitters,
 /// shrink), seeded per network so the 24 cases pin 24 distinct streams.
 fn case_fault_model(net_seed: u64) -> FaultModel {
@@ -119,11 +186,13 @@ fn fault_model_to_json(m: &FaultModel) -> Json {
     o
 }
 
-/// Fault-injected expectations (v3): the whole network replayed under
-/// `model` in sequential mode, plus every stage replayed double-buffered on
-/// its own accelerator — durations, retry / shrink counts and the analytic
-/// WCET bound, all of which the Python oracle must reproduce bit-exactly
-/// from the seeded stream alone.
+/// Fault-injected expectations: the whole network replayed under `model`
+/// in sequential mode, plus every stage replayed double-buffered on its own
+/// accelerator — durations, retry / shrink counts and the analytic WCET
+/// bound, all of which the Python oracle must reproduce bit-exactly from
+/// the seeded stream alone. Since v4, stage `i` draws from
+/// `model.for_stage(i)` on both codepaths (the pipeline runner does the
+/// same mixing internally), so stages no longer share step-aligned draws.
 fn faulted_expectations(net: &FuzzNetwork, model: &FaultModel) -> Json {
     let seq = net
         .to_network()
@@ -147,10 +216,10 @@ fn faulted_expectations(net: &FuzzNetwork, model: &FaultModel) -> Json {
 
     let mut ovl_stages: Vec<Json> = Vec::new();
     let mut ovl_total = 0u64;
-    for s in &net.stages {
+    for (i, s) in net.stages.iter().enumerate() {
         let acc = s.accelerator.with_overlap(OverlapMode::DoubleBuffered);
         let r = Simulator::new(s.layer, Platform::new(acc))
-            .with_faults(*model)
+            .with_faults(model.for_stage(i))
             .run(&s.strategy)
             .unwrap_or_else(|e| {
                 panic!("seed {} stage {}: faulted overlapped sim failed: {e}", net.seed, s.name)
@@ -228,6 +297,7 @@ fn emit_differential_cases() {
             .set("per_stage", Json::Arr(per_stage))
             .set("overlapped", overlapped_expectations(&net, 1))
             .set("overlapped_roomy", overlapped_expectations(&net, 2))
+            .set("multi", multi_expectations(&net))
             .set("faulted", faulted_expectations(&net, &case_fault_model(seed)));
         case.set("expected", expected);
         cases.push(case);
@@ -241,9 +311,10 @@ fn emit_differential_cases() {
     assert!(cases.len() >= 20, "need ≥ 20 cases, got {}", cases.len());
 
     let mut doc = Json::obj();
-    // v3: v2's overlapped expectations plus per-case fault-injected replays
-    // (seeded fault model, retry/shrink accounting, WCET bounds).
-    doc.set("version", 3u64)
+    // v4: v3's fault-injected replays now stage-decorrelated
+    // (`FaultModel::for_stage`), plus per-case §3.10 multi-resource
+    // expectations (sampled k × m shape, image batch, per-resource busy).
+    doc.set("version", 4u64)
         .set("generator", "config::fuzz::random_network")
         .set("cases", Json::Arr(cases));
 

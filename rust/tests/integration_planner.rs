@@ -25,6 +25,8 @@ fn quick_options() -> PlanOptions {
         anneal_starts: 2,
         threads: 0,
         overlap: OverlapMode::Sequential,
+        dma_channels: 1,
+        compute_units: 1,
     }
 }
 

@@ -9,7 +9,10 @@
 //! 3. the memory is empty after the final step, all outputs written;
 //! 4. the functional simulation reproduces the reference convolution;
 //! 5. simulator duration == fast-objective duration (+ kernel-load term);
-//! 6. strategy CSV/JSON round-trips preserve semantics.
+//! 6. strategy CSV/JSON round-trips preserve semantics;
+//! 7. the §3.10 multi-resource timeline collapses bit-exactly to the scalar
+//!    §3.7 recurrence at k = m = 1, is monotone non-increasing in both k
+//!    and m, and stays within the resource-floor/sequential envelope.
 
 use convoffload::config::fuzz;
 use convoffload::conv::ConvLayer;
@@ -17,6 +20,7 @@ use convoffload::optimizer::overlap::OverlapGraph;
 use convoffload::optimizer::{grouping_duration, grouping_loads};
 use convoffload::platform::{Accelerator, OverlapMode, Platform};
 use convoffload::sim::{RustOracleBackend, Simulator};
+use convoffload::step::OverlapTimeline;
 use convoffload::strategy::{
     self, strategy_from_csv, strategy_from_json, strategy_to_csv, strategy_to_json,
     GroupedStrategy,
@@ -112,6 +116,8 @@ fn accelerator_for(s: &Scenario) -> Accelerator {
         t_l: 1,
         t_w: 1,
         overlap: OverlapMode::Sequential,
+        dma_channels: 1,
+        compute_units: 1,
     }
 }
 
@@ -191,6 +197,144 @@ fn overlapped_fuzz_networks_respect_the_bounds() {
                     "seed {seed} stage {}: makespan below the resource floor",
                     stage.name
                 );
+            }
+        }
+    }
+}
+
+/// §3.10 collapse: at k = m = 1 the generalized list scheduler must be
+/// bit-identical to the legacy scalar §3.7 recurrence. Every double-buffered
+/// fuzz stage is replayed step by step through the scalar
+/// [`OverlapTimeline::place`] reference and every phase instant compared;
+/// under the sequential mode the duration must ignore the resource shape
+/// entirely. All 24 differential seeds, both overlap modes.
+#[test]
+fn multi_resource_collapses_to_scalar_on_fuzz_networks() {
+    for seed in 1..=24u64 {
+        let net = fuzz::random_network(seed);
+        for stage in &net.stages {
+            let seq = Simulator::new(stage.layer, Platform::new(stage.accelerator))
+                .run(&stage.strategy)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            for (k, m) in [(2, 1), (1, 2), (3, 3)] {
+                let acc = stage.accelerator.with_channels(k, m);
+                let r = Simulator::new(stage.layer, Platform::new(acc))
+                    .run(&stage.strategy)
+                    .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert_eq!(
+                    r.duration, seq.duration,
+                    "seed {seed} stage {}: sequential duration depends on {k}x{m}",
+                    stage.name
+                );
+            }
+            let db = stage.accelerator.with_overlap(OverlapMode::DoubleBuffered);
+            let ovl = Simulator::new(stage.layer, Platform::new(db))
+                .run(&stage.strategy)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let (mut dma_free, mut comp_end, mut prev_occ) = (0u64, 0u64, 0u64);
+            for st in &ovl.steps {
+                let can_prefetch = prev_occ + st.cost.loaded_elements <= db.size_mem;
+                let t = OverlapTimeline::place(
+                    dma_free,
+                    comp_end,
+                    st.cost.load_cycles(&db),
+                    st.cost.written_elements * db.t_w,
+                    st.cost.compute_cycles(&db),
+                    can_prefetch,
+                );
+                assert_eq!(
+                    st.timing,
+                    Some(t),
+                    "seed {seed} stage {} step {}: 1x1 placement diverged from \
+                     the scalar recurrence",
+                    stage.name,
+                    st.index
+                );
+                dma_free = t.write_end;
+                comp_end = t.compute_end;
+                prev_occ = st.occupancy;
+            }
+            assert_eq!(
+                ovl.duration,
+                dma_free.max(comp_end),
+                "seed {seed} stage {}: makespan is not the latest frontier",
+                stage.name
+            );
+        }
+    }
+}
+
+/// §3.10 monotonicity and resource floor over the fuzz networks: adding DMA
+/// channels or compute units never increases the double-buffered makespan
+/// (at batch 1 and batch 4), every makespan stays within
+/// `[max(⌈dma_busy/k⌉, ⌈compute_busy/m⌉), δ_sequential]`, and the
+/// per-resource busy vectors account for the class totals exactly.
+#[test]
+fn multi_resource_makespans_are_monotone_and_floored() {
+    for seed in 1..=24u64 {
+        let net = fuzz::random_network(seed);
+        for stage in &net.stages {
+            let db = stage.accelerator.with_overlap(OverlapMode::DoubleBuffered);
+            for batch in [1usize, 4] {
+                let mut grid = [[0u64; 3]; 3];
+                for k in 1..=3usize {
+                    for m in 1..=3usize {
+                        let acc = db.with_channels(k, m);
+                        let r = Simulator::new(stage.layer, Platform::new(acc))
+                            .with_batch(batch)
+                            .run(&stage.strategy)
+                            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                        assert_eq!(r.dma_busy_per.len(), k);
+                        assert_eq!(r.compute_busy_per.len(), m);
+                        assert_eq!(r.dma_busy_per.iter().sum::<u64>(), r.dma_busy);
+                        assert_eq!(
+                            r.compute_busy_per.iter().sum::<u64>(),
+                            r.compute_busy
+                        );
+                        let floor = r
+                            .dma_busy
+                            .div_ceil(k as u64)
+                            .max(r.compute_busy.div_ceil(m as u64));
+                        assert!(
+                            r.duration >= floor,
+                            "seed {seed} stage {} {k}x{m} batch {batch}: \
+                             makespan {} below floor {floor}",
+                            stage.name,
+                            r.duration
+                        );
+                        assert!(
+                            r.duration <= r.sequential_duration,
+                            "seed {seed} stage {} {k}x{m} batch {batch}: \
+                             makespan {} above sequential {}",
+                            stage.name,
+                            r.duration,
+                            r.sequential_duration
+                        );
+                        grid[k - 1][m - 1] = r.duration;
+                    }
+                }
+                for k in 1..=3usize {
+                    for m in 1..=3usize {
+                        if k > 1 {
+                            assert!(
+                                grid[k - 1][m - 1] <= grid[k - 2][m - 1],
+                                "seed {seed} stage {} batch {batch}: \
+                                 makespan rose {}x{m} -> {k}x{m}",
+                                stage.name,
+                                k - 1
+                            );
+                        }
+                        if m > 1 {
+                            assert!(
+                                grid[k - 1][m - 1] <= grid[k - 1][m - 2],
+                                "seed {seed} stage {} batch {batch}: \
+                                 makespan rose {k}x{} -> {k}x{m}",
+                                stage.name,
+                                m - 1
+                            );
+                        }
+                    }
+                }
             }
         }
     }
