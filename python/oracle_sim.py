@@ -26,6 +26,7 @@ which is the point: an oracle should be obviously right, not fast).
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 
 
@@ -1137,3 +1138,146 @@ def replay_case_faulted(case: dict, model: FaultModel) -> dict:
         "overlapped": overlapped,
         "overlapped_total": sum(r.makespan for r in overlapped),
     }
+
+
+# ------------------------------------------------- plan-server decision logic
+
+# The plan-server's load-shedding and crash-recovery decisions are pure
+# functions in Rust (``server::admission``, ``server::journal::replay_lines``)
+# precisely so this oracle can reproduce them bit-exactly without a Rust
+# toolchain.  ``python/tests/test_server_oracle.py`` pins the identical
+# decision tables as the Rust unit tests.
+
+RUNGS = ("full", "reduced", "heuristic", "cache-only")
+"""Degradation ladder, least to most degraded (``server::admission::Rung``)."""
+
+JOURNAL_VERSION = 1
+"""Journal record version (``server::journal::JOURNAL_VERSION``)."""
+
+
+def select_rung(queue_depth: int, queue_capacity: int, budget_ms):
+    """Mirror of ``server::admission::select_rung``.
+
+    Combines queue pressure and the request's time budget; the more
+    degraded signal wins.  Returns one of ``RUNGS``.
+    """
+    if queue_depth == 0:
+        by_queue = "full"
+    elif queue_depth * 2 <= queue_capacity:
+        by_queue = "reduced"
+    elif queue_depth < queue_capacity:
+        by_queue = "heuristic"
+    else:
+        by_queue = "cache-only"
+    if budget_ms is None or budget_ms >= 1_000:
+        by_budget = "full"
+    elif budget_ms >= 100:
+        by_budget = "reduced"
+    elif budget_ms >= 10:
+        by_budget = "heuristic"
+    else:
+        by_budget = "cache-only"
+    return max(by_queue, by_budget, key=RUNGS.index)
+
+
+def rung_budgets(rung: str, starts: int, iters: int):
+    """Mirror of ``server::admission::rung_budgets``: the portfolio budget
+    ``(anneal_starts, anneal_iters)`` a rung runs, or ``None`` for the
+    cache-only rung (no race admitted at all)."""
+    if rung == "full":
+        return (starts, iters)
+    if rung == "reduced":
+        return (1, iters // 4)
+    if rung == "heuristic":
+        return (0, 0)
+    if rung == "cache-only":
+        return None
+    raise ValueError(f"unknown rung {rung!r}")
+
+
+def _journal_u64(v):
+    """The Rust ``Json::as_u64``: a non-negative integer-valued number
+    (booleans are a distinct JSON type and never numbers)."""
+    if isinstance(v, bool):
+        return None
+    if isinstance(v, int):
+        return v if v >= 0 else None
+    if isinstance(v, float) and v.is_integer() and v >= 0:
+        return int(v)
+    return None
+
+
+def _journal_record(line: str):
+    """Parse one journal line into ``(event, id, req)``; raises on any
+    malformation (mirror of ``server::journal::parse_record``)."""
+    v = json.loads(line)
+    if not isinstance(v, dict):
+        raise ValueError("record is not an object")
+    if _journal_u64(v.get("v")) != JOURNAL_VERSION:
+        raise ValueError("bad or missing journal version")
+    rec_id = _journal_u64(v.get("id"))
+    if rec_id is None:
+        raise ValueError("bad or missing record id")
+    event = v.get("e")
+    if event == "recv":
+        req = v.get("req")
+        if req is None:
+            raise ValueError("recv record without req")
+        if not isinstance(req, dict):
+            raise ValueError("recv req is not an object")
+        return ("recv", rec_id, req)
+    if event == "done":
+        return ("done", rec_id, None)
+    raise ValueError("unknown record event")
+
+
+def journal_replay(lines):
+    """Mirror of ``server::journal::replay_lines``: pair ``recv`` records
+    with their ``done`` records.
+
+    Returns ``{"pending": [(id, req), ...], "torn_tail": bool,
+    "next_id": int}``.  Blank lines are skipped; a malformed **last** line
+    is dropped as a torn tail; a malformed interior line or a duplicate
+    pending ``recv`` id raises ``ValueError`` (the Rust caller quarantines
+    the file); a ``done`` without a matching ``recv`` is ignored.
+    """
+    pending = []
+    torn_tail = False
+    next_id = 0
+    last = max(len(lines) - 1, 0)
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            event, rec_id, req = _journal_record(line)
+        except (ValueError, json.JSONDecodeError) as e:
+            if i == last:
+                torn_tail = True
+                continue
+            raise ValueError(f"journal corrupt at line {i + 1}: {e}") from None
+        next_id = max(next_id, rec_id + 1)
+        if event == "recv":
+            if any(p == rec_id for p, _ in pending):
+                raise ValueError(
+                    f"journal corrupt at line {i + 1}: duplicate recv id {rec_id}"
+                )
+            pending.append((rec_id, req))
+        else:
+            pending = [(p, r) for p, r in pending if p != rec_id]
+    return {"pending": pending, "torn_tail": torn_tail, "next_id": next_id}
+
+
+def backoff_schedule(attempts: int, base_delay_us: int, seed: int):
+    """Mirror of ``planner::recovery::backoff_schedule``, in microseconds:
+    for each of the ``attempts - 1`` waits, the exponential base delay plus
+    a seeded uniform jitter in ``[0, base * 2**i]`` drawn from the shared
+    xoshiro256** stream via Lemire ``below``."""
+    attempts = max(attempts, 1)
+    rng = Rng(seed)
+    delay = base_delay_us
+    schedule = []
+    for _ in range(1, attempts):
+        span = min(delay, _M64 - 1)
+        schedule.append(delay + rng.below(span + 1))
+        delay = min(delay * 2, _M64)
+    return schedule

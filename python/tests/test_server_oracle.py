@@ -1,0 +1,167 @@
+"""Pins for the plan-server's pure decision logic, mirrored from Rust.
+
+The server's load-shedding ladder (``server::admission::select_rung`` /
+``rung_budgets``), its journal-replay semantics
+(``server::journal::replay_lines``) and the retry backoff schedule
+(``planner::recovery::backoff_schedule``) are pure functions on both sides
+of the language boundary.  This file pins the *same decision tables* as the
+Rust unit tests (``rung_decision_table_is_pinned``,
+``rung_budgets_are_pinned``, the ``journal.rs`` replay tests and
+``backoff_schedule_is_pinned_per_seed``), so a drift in either
+implementation fails one suite even without a Rust toolchain present.
+"""
+
+import json
+
+import pytest
+
+import oracle_sim as o
+
+
+# ------------------------------------------------------- degradation ladder
+
+
+def test_rung_decision_table_is_pinned():
+    # queue pressure alone (no deadline) — same table as admission.rs
+    assert o.select_rung(0, 16, None) == "full"
+    assert o.select_rung(1, 16, None) == "reduced"
+    assert o.select_rung(8, 16, None) == "reduced"
+    assert o.select_rung(9, 16, None) == "heuristic"
+    assert o.select_rung(15, 16, None) == "heuristic"
+    assert o.select_rung(16, 16, None) == "cache-only"
+    assert o.select_rung(40, 16, None) == "cache-only"
+    # budget pressure alone (idle queue)
+    assert o.select_rung(0, 16, 5_000) == "full"
+    assert o.select_rung(0, 16, 1_000) == "full"
+    assert o.select_rung(0, 16, 999) == "reduced"
+    assert o.select_rung(0, 16, 100) == "reduced"
+    assert o.select_rung(0, 16, 99) == "heuristic"
+    assert o.select_rung(0, 16, 10) == "heuristic"
+    assert o.select_rung(0, 16, 9) == "cache-only"
+    assert o.select_rung(0, 16, 0) == "cache-only"
+    # combination: the more degraded signal wins
+    assert o.select_rung(8, 16, 5) == "cache-only"
+    assert o.select_rung(16, 16, 5_000) == "cache-only"
+    assert o.select_rung(1, 16, 50) == "heuristic"
+    # tiny capacity: any backlog is already at capacity
+    assert o.select_rung(1, 1, None) == "cache-only"
+
+
+def test_rung_is_monotone_in_both_pressure_signals():
+    """More backlog or less budget never *increases* effort."""
+    budgets = [None, 5_000, 999, 100, 50, 10, 5, 0]
+    for cap in (1, 2, 16):
+        for b in budgets:
+            rungs = [o.select_rung(d, cap, b) for d in range(0, cap + 3)]
+            idx = [o.RUNGS.index(r) for r in rungs]
+            assert idx == sorted(idx), (cap, b, rungs)
+    for depth in (0, 1, 8, 16):
+        idx = [
+            o.RUNGS.index(o.select_rung(depth, 16, b))
+            for b in [None, 5_000, 999, 100, 50, 10, 5, 0]
+        ]
+        assert idx == sorted(idx), (depth, idx)
+
+
+def test_rung_budgets_are_pinned():
+    assert o.rung_budgets("full", 3, 50_000) == (3, 50_000)
+    assert o.rung_budgets("reduced", 3, 50_000) == (1, 12_500)
+    assert o.rung_budgets("heuristic", 3, 50_000) == (0, 0)
+    assert o.rung_budgets("cache-only", 3, 50_000) is None
+    with pytest.raises(ValueError):
+        o.rung_budgets("turbo", 3, 50_000)
+
+
+# ----------------------------------------------------------- journal replay
+
+
+def recv(rec_id, req=None):
+    body = {"v": 1, "e": "recv", "id": rec_id, "req": req or {"op": "plan"}}
+    return json.dumps(body, sort_keys=True, separators=(",", ":"))
+
+
+def done(rec_id):
+    body = {"v": 1, "e": "done", "id": rec_id}
+    return json.dumps(body, sort_keys=True, separators=(",", ":"))
+
+
+def test_replay_pairs_recv_with_done():
+    r = o.journal_replay([recv(0), recv(1), done(0)])
+    assert r["pending"] == [(1, {"op": "plan"})]
+    assert not r["torn_tail"]
+    assert r["next_id"] == 2
+
+
+def test_replay_of_empty_and_blank_journals():
+    assert o.journal_replay([]) == {
+        "pending": [],
+        "torn_tail": False,
+        "next_id": 0,
+    }
+    r = o.journal_replay(["", "   ", recv(3), ""])
+    assert r["pending"] == [(3, {"op": "plan"})]
+    assert r["next_id"] == 4
+
+
+def test_torn_tail_is_dropped_but_interior_corruption_raises():
+    # a crash mid-append: the malformed *last* line is dropped and flagged
+    r = o.journal_replay([recv(3), '{"v":1,"e":"recv","id":4,"req":{"op"'])
+    assert r["torn_tail"]
+    assert r["pending"] == [(3, {"op": "plan"})]
+    assert r["next_id"] == 4
+
+    with pytest.raises(ValueError, match="line 1"):
+        o.journal_replay(["garbage", recv(3)])
+    with pytest.raises(ValueError, match="duplicate"):
+        o.journal_replay([recv(5), recv(5), done(9)])
+
+    # a done whose recv was compacted away is harmless
+    r = o.journal_replay([done(7)])
+    assert r["pending"] == []
+    assert r["next_id"] == 8
+
+
+def test_replay_rejects_bad_versions_and_ids_strictly():
+    # wrong version, missing id, negative id, fractional id, bool id — all
+    # malformed; interior position makes each fatal
+    bad = [
+        '{"v":2,"e":"done","id":0}',
+        '{"v":1,"e":"done"}',
+        '{"v":1,"e":"done","id":-1}',
+        '{"v":1,"e":"done","id":1.5}',
+        '{"v":1,"e":"done","id":true}',
+        '{"v":1,"e":"boom","id":0}',
+        '{"v":1,"e":"recv","id":0}',
+        '{"v":1,"e":"recv","id":0,"req":[1]}',
+        "[1,2,3]",
+    ]
+    for line in bad:
+        with pytest.raises(ValueError, match="line 1"):
+            o.journal_replay([line, recv(3)])
+        # the same malformation in last position is a tolerated torn tail
+        r = o.journal_replay([recv(3), line])
+        assert r["torn_tail"] and r["pending"] == [(3, {"op": "plan"})]
+
+
+def test_replay_preserves_receive_order():
+    lines = [recv(i, {"op": "plan", "n": i}) for i in range(5)]
+    lines.append(done(2))
+    r = o.journal_replay(lines)
+    assert [p for p, _ in r["pending"]] == [0, 1, 3, 4]
+    assert r["next_id"] == 5
+
+
+# --------------------------------------------------------- backoff schedule
+
+
+def test_backoff_schedule_matches_the_rust_pins():
+    # identical to planner/recovery.rs backoff_schedule_is_pinned_per_seed
+    assert o.backoff_schedule(4, 2000, 42) == [2167, 5516, 13441]
+    assert o.backoff_schedule(3, 500, 7) == [850, 1279]
+    for i, d in enumerate(o.backoff_schedule(6, 100, 99)):
+        lo = 100 * (1 << i)
+        assert lo <= d <= 2 * lo
+    assert o.backoff_schedule(4, 2000, 1) != o.backoff_schedule(4, 2000, 2)
+    assert o.backoff_schedule(1, 2000, 42) == []
+    assert o.backoff_schedule(0, 2000, 42) == []
+    assert o.backoff_schedule(4, 0, 42) == [0, 0, 0]

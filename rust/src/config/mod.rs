@@ -122,15 +122,37 @@ impl ExperimentConfig {
             .unwrap_or("unnamed-experiment")
             .to_string();
 
+        // Checked `[section] key` integer reads. TOML integers arrive as
+        // i64; a plain `as usize`/`as u64` cast would wrap a negative value
+        // to a huge unsigned and sail through every later bound check, so
+        // geometry and platform fields reject non-positive (or, where zero
+        // is meaningful, negative) values with a structured error instead.
+        let positive = |section: &str, key: &str| -> Result<Option<usize>, String> {
+            match doc.get_int(section, key) {
+                None => Ok(None),
+                Some(v) if v >= 1 => Ok(Some(v as usize)),
+                Some(v) => Err(format!(
+                    "[{section}] {key}: expected a positive integer, got {v}"
+                )),
+            }
+        };
+        let non_negative = |section: &str, key: &str| -> Result<Option<u64>, String> {
+            match doc.get_int(section, key) {
+                None => Ok(None),
+                Some(v) if v >= 0 => Ok(Some(v as u64)),
+                Some(v) => Err(format!(
+                    "[{section}] {key}: expected a non-negative integer, got {v}"
+                )),
+            }
+        };
+
         let base = if let Some(preset) = doc.get_str("layer", "preset") {
             layer_preset(preset)
                 .ok_or_else(|| format!("unknown layer preset '{preset}'"))?
                 .layer
         } else {
             let g = |k: &str| -> Result<usize, String> {
-                doc.get_int("layer", k)
-                    .map(|v| v as usize)
-                    .ok_or_else(|| format!("[layer] missing '{k}'"))
+                positive("layer", k)?.ok_or_else(|| format!("[layer] missing '{k}'"))
             };
             ConvLayer::new(
                 g("c_in")?,
@@ -139,58 +161,49 @@ impl ExperimentConfig {
                 g("h_k")?,
                 g("w_k")?,
                 g("n")?,
-                doc.get_int("layer", "s_h").unwrap_or(1) as usize,
-                doc.get_int("layer", "s_w").unwrap_or(1) as usize,
+                positive("layer", "s_h")?.unwrap_or(1),
+                positive("layer", "s_w")?.unwrap_or(1),
             )?
         };
         // Optional generalization keys apply to both branches, so
         // `preset = …` + `groups = …` overrides the preset instead of being
         // silently ignored (validated against the resulting geometry).
-        let opt = |k: &str, default: usize| -> usize {
-            doc.get_int("layer", k).map(|v| v as usize).unwrap_or(default)
-        };
         let layer = base
-            .with_dilation(opt("d_h", base.d_h), opt("d_w", base.d_w))?
-            .with_groups(opt("groups", base.groups))?;
+            .with_dilation(
+                positive("layer", "d_h")?.unwrap_or(base.d_h),
+                positive("layer", "d_w")?.unwrap_or(base.d_w),
+            )?
+            .with_groups(positive("layer", "groups")?.unwrap_or(base.groups))?;
 
-        let group_size = doc
-            .get_int("accelerator", "group_size")
-            .map(|v| v as usize)
-            .unwrap_or(4);
+        let group_size = positive("accelerator", "group_size")?.unwrap_or(4);
         let mut accelerator = Accelerator::for_group_size(&layer, group_size);
-        if let Some(v) = doc.get_int("accelerator", "t_l") {
-            accelerator.t_l = v as u64;
+        if let Some(v) = non_negative("accelerator", "t_l")? {
+            accelerator.t_l = v;
         }
-        if let Some(v) = doc.get_int("accelerator", "t_w") {
-            accelerator.t_w = v as u64;
+        if let Some(v) = non_negative("accelerator", "t_w")? {
+            accelerator.t_w = v;
         }
-        if let Some(v) = doc.get_int("accelerator", "t_acc") {
-            accelerator.t_acc = v as u64;
+        if let Some(v) = non_negative("accelerator", "t_acc")? {
+            accelerator.t_acc = v;
         }
-        if let Some(v) = doc.get_int("accelerator", "nbop_pe") {
+        if let Some(v) = positive("accelerator", "nbop_pe")? {
             accelerator.nbop_pe = v as u64;
         }
-        if let Some(v) = doc.get_int("accelerator", "size_mem") {
+        if let Some(v) = positive("accelerator", "size_mem")? {
             accelerator.size_mem = v as u64;
         }
         if let Some(s) = doc.get_str("accelerator", "overlap") {
             accelerator.overlap = crate::platform::OverlapMode::from_str(s)?;
         }
-        if let Some(v) = doc.get_int("accelerator", "dma_channels") {
-            if v < 1 {
-                return Err(format!("[accelerator] dma_channels: {v} < 1"));
-            }
-            accelerator.dma_channels = v as usize;
+        if let Some(v) = positive("accelerator", "dma_channels")? {
+            accelerator.dma_channels = v;
         }
-        if let Some(v) = doc.get_int("accelerator", "compute_units") {
-            if v < 1 {
-                return Err(format!("[accelerator] compute_units: {v} < 1"));
-            }
-            accelerator.compute_units = v as usize;
+        if let Some(v) = positive("accelerator", "compute_units")? {
+            accelerator.compute_units = v;
         }
 
         let nb_data_reload =
-            doc.get_int("strategy", "nb_data_reload").unwrap_or(2) as u32;
+            non_negative("strategy", "nb_data_reload")?.unwrap_or(2) as u32;
 
         let faults = fault_model_from_doc(&doc)?;
 
@@ -337,6 +350,51 @@ groups = 4
     fn rejects_bad_configs() {
         assert!(ExperimentConfig::from_toml("[layer]\npreset = \"nope\"\n").is_err());
         assert!(ExperimentConfig::from_toml("[layer]\nc_in = 1\n").is_err());
+    }
+
+    /// Regression for the negative-integer wrap: `-3 as usize` is a huge
+    /// number that used to sail through every later bound check. Zero and
+    /// negative geometry/platform integers must be structured errors that
+    /// name the offending key — never a wrap, never a panic.
+    #[test]
+    fn rejects_zero_and_negative_integers_loudly() {
+        let dims = "[layer]\nc_in = 1\nh_in = 8\nw_in = 8\nh_k = 3\nw_k = 3\nn = 4\n";
+        for bad in [
+            "[layer]\nc_in = -3\nh_in = 8\nw_in = 8\nh_k = 3\nw_k = 3\nn = 4\n",
+            "[layer]\nc_in = 0\nh_in = 8\nw_in = 8\nh_k = 3\nw_k = 3\nn = 4\n",
+            "[layer]\nc_in = 1\nh_in = 8\nw_in = 8\nh_k = 3\nw_k = 3\nn = -1\n",
+        ] {
+            let err = ExperimentConfig::from_toml(bad).unwrap_err();
+            assert!(err.contains("[layer]"), "error must name the section: {err}");
+        }
+        for (suffix, key) in [
+            ("s_h = 0\n", "s_h"),
+            ("s_w = -2\n", "s_w"),
+            ("d_h = 0\n", "d_h"),
+            ("groups = -1\n", "groups"),
+        ] {
+            let err = ExperimentConfig::from_toml(&format!("{dims}{suffix}")).unwrap_err();
+            assert!(err.contains(key), "error must name '{key}': {err}");
+        }
+        for acc in [
+            "[accelerator]\ngroup_size = -4\n",
+            "[accelerator]\nt_l = -1\n",
+            "[accelerator]\nsize_mem = 0\n",
+            "[accelerator]\nnbop_pe = -8\n",
+        ] {
+            let text = format!("[layer]\npreset = \"example1\"\n{acc}");
+            assert!(
+                ExperimentConfig::from_toml(&text).is_err(),
+                "must reject: {acc}"
+            );
+        }
+        // Zero stays legal where it is meaningful (t_w = 0 is the paper's
+        // own example platform).
+        let ok = ExperimentConfig::from_toml(
+            "[layer]\npreset = \"example1\"\n[accelerator]\nt_w = 0\n",
+        )
+        .unwrap();
+        assert_eq!(ok.accelerator.t_w, 0);
     }
 
     /// `[faults]` parses into a live model; absence means `None`; bad keys

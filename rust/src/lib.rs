@@ -100,6 +100,7 @@ pub mod optimizer;
 pub mod planner;
 pub mod platform;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod solver;
 pub mod step;
@@ -119,6 +120,7 @@ pub mod prelude {
     pub use crate::platform::{
         Accelerator, FaultModel, OnChipMemory, OverlapMode, Platform, StepFaults,
     };
+    pub use crate::server::{PlanServer, ServerConfig};
     pub use crate::sim::{FunctionalBackend, SimReport, Simulator};
     pub use crate::step::{OverlapTimeline, Step, StepCost, StepTiming};
     pub use crate::strategy::{

@@ -11,9 +11,16 @@
 //!   persistent strategy cache;
 //! * `figures`       — regenerate the paper's Figures 11/12/13 into `figures/`;
 //! * `viz`           — render a strategy's step grids (ASCII or SVG);
+//! * `plan-server`   — long-lived planning service over TCP: one warm
+//!   strategy cache, admission control, per-request deadlines, crash-safe
+//!   request journal;
 //! * `e2e`           — functional end-to-end run through the PJRT runtime;
 //! * `perf`          — print the L1 kernel VMEM/MXU estimates;
 //! * `presets`       — list layer and network presets.
+//!
+//! Exit codes: 0 success, 1 runtime failure, 2 malformed invocation
+//! (unknown flags/commands, unparseable values, invalid geometry or spec
+//! files — see [`cli::CliError`]).
 
 use std::process::ExitCode;
 
@@ -30,8 +37,9 @@ use convoffload::planner::{
 use convoffload::planner::ChaosSpec;
 use convoffload::platform::{Accelerator, FaultModel, OverlapMode, Platform};
 use convoffload::sim::{FunctionalBackend, RustOracleBackend, Simulator};
+use convoffload::server::{PlanServer, ServerConfig};
 use convoffload::strategy::{self, GroupedStrategy};
-use convoffload::util::cli::{self, FlagSpec};
+use convoffload::util::cli::{self, invalid, CliError, FlagSpec};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -44,6 +52,7 @@ fn main() -> ExitCode {
         "optimize" => cmd_optimize(rest),
         "plan-network" => cmd_plan_network(rest),
         "plan-batch" => cmd_plan_batch(rest),
+        "plan-server" => cmd_plan_server(rest),
         "figures" => cmd_figures(rest),
         "viz" => cmd_viz(rest),
         "e2e" => cmd_e2e(rest),
@@ -53,13 +62,15 @@ fn main() -> ExitCode {
             print_usage();
             Ok(())
         }
-        other => Err(format!("unknown command '{other}' (try `convoffload help`)")),
+        other => Err(CliError::Invalid(format!(
+            "unknown command '{other}' (try `convoffload help`)"
+        ))),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e}");
-            ExitCode::FAILURE
+            ExitCode::from(e.exit_code())
         }
     }
 }
@@ -72,6 +83,7 @@ fn print_usage() {
          \x20 optimize      search for an optimal strategy (§5 problem)\n\
          \x20 plan-network  plan every layer of a network preset (cached portfolio race)\n\
          \x20 plan-batch    plan several networks at once (dedup + sharded strategy cache)\n\
+         \x20 plan-server   long-lived planning service (warm cache, deadlines, crash-safe journal)\n\
          \x20 figures       regenerate the paper's Figures 11/12/13 under figures/\n\
          \x20 viz           render a strategy step by step (ascii/svg)\n\
          \x20 e2e           functional end-to-end run (PJRT or rust oracle)\n\
@@ -115,29 +127,29 @@ fn fault_flags() -> Vec<FlagSpec> {
 fn faults_from_args(
     args: &cli::Args,
     base: Option<FaultModel>,
-) -> Result<Option<FaultModel>, String> {
+) -> Result<Option<FaultModel>, CliError> {
     let mut faults = base;
     if let Some(spec) = args.get("faults") {
-        faults = Some(FaultModel::from_spec(spec)?);
+        faults = Some(invalid(FaultModel::from_spec(spec))?);
     }
-    if let Some(seed) = args.get_u64("fault-seed")? {
+    if let Some(seed) = invalid(args.get_u64("fault-seed"))? {
         let m = faults.unwrap_or_else(|| FaultModel { max_retries: 3, ..FaultModel::none() });
         faults = Some(m.with_seed(seed));
     }
     Ok(faults)
 }
 
-fn setup_from(args: &cli::Args) -> Result<Setup, String> {
+fn setup_from(args: &cli::Args) -> Result<Setup, CliError> {
     // `--overlap`, `--dma-channels` and `--compute-units` apply on top of
     // either source (preset or TOML); the TOML file may also set the same
     // keys in its `[accelerator]` section.
     let overlap = match args.get("overlap") {
-        Some(s) => Some(OverlapMode::from_str(s)?),
+        Some(s) => Some(invalid(OverlapMode::from_str(s))?),
         None => None,
     };
     let mut setup = if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        let cfg = ExperimentConfig::from_toml(&text)?;
+        let cfg = invalid(ExperimentConfig::from_toml(&text))?;
         let acc = match overlap {
             Some(o) => cfg.accelerator.with_overlap(o),
             None => cfg.accelerator,
@@ -150,23 +162,28 @@ fn setup_from(args: &cli::Args) -> Result<Setup, String> {
         }
     } else {
         let name = args.get("layer").unwrap_or("example1");
-        let preset = layer_preset(name)
-            .ok_or_else(|| format!("unknown preset '{name}' (see `convoffload presets`)"))?;
-        let group = args.get_usize("group")?.unwrap_or(2).max(1);
+        let preset = layer_preset(name).ok_or_else(|| {
+            CliError::Invalid(format!("unknown preset '{name}' (see `convoffload presets`)"))
+        })?;
+        let group = invalid(args.get_usize("group"))?.unwrap_or(2).max(1);
         let acc = Accelerator::for_group_size(&preset.layer, group)
             .with_overlap(overlap.unwrap_or_default());
         Setup { layer: preset.layer, acc, group, faults: None }
     };
-    if let Some(k) = args.get_usize("dma-channels")? {
+    if let Some(k) = invalid(args.get_usize("dma-channels"))? {
         setup.acc.dma_channels = k.max(1);
     }
-    if let Some(m) = args.get_usize("compute-units")? {
+    if let Some(m) = invalid(args.get_usize("compute-units"))? {
         setup.acc.compute_units = m.max(1);
     }
     Ok(setup)
 }
 
-fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<GroupedStrategy, String> {
+fn build_strategy(
+    name: &str,
+    layer: &ConvLayer,
+    group: usize,
+) -> Result<GroupedStrategy, CliError> {
     match name {
         "s1-baseline" => Ok(strategy::s1_baseline(layer)),
         "row-by-row" | "row" => Ok(strategy::row_by_row(layer, group)),
@@ -175,27 +192,27 @@ fn build_strategy(name: &str, layer: &ConvLayer, group: usize) -> Result<Grouped
         "diagonal" => Ok(strategy::diagonal(layer, group)),
         path if path.ends_with(".csv") => {
             let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            strategy::strategy_from_csv(path, &text)
+            invalid(strategy::strategy_from_csv(path, &text))
         }
         path if path.ends_with(".json") => {
             let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            strategy::strategy_from_json(&text)
+            invalid(strategy::strategy_from_json(&text))
         }
-        other => Err(format!(
+        other => Err(CliError::Invalid(format!(
             "unknown strategy '{other}' (builtin: s1-baseline, row-by-row, zigzag, hilbert, diagonal; or a .csv/.json file)"
-        )),
+        ))),
     }
 }
 
 // ---------------------------------------------------------------- simulate
 
-fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+fn cmd_simulate(argv: &[String]) -> Result<(), CliError> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "strategy", help: "strategy name or CSV/JSON file", takes_value: true, default: Some("zigzag") });
     specs.push(FlagSpec { name: "batch", help: "images to stream through the strategy (kernels load once)", takes_value: true, default: Some("1") });
     specs.push(FlagSpec { name: "steps", help: "print the per-step table", takes_value: false, default: None });
     specs.extend(fault_flags());
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("simulate", "run a strategy on a layer", &specs));
         return Ok(());
@@ -204,7 +221,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
     let faults = faults_from_args(&args, setup.faults)?;
     let mut sim = Simulator::new(setup.layer, Platform::new(setup.acc))
-        .with_batch(args.get_usize("batch")?.unwrap_or(1).max(1));
+        .with_batch(invalid(args.get_usize("batch"))?.unwrap_or(1).max(1));
     if let Some(m) = faults {
         sim = sim.with_faults(m);
     }
@@ -235,32 +252,34 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- optimize
 
-fn cmd_optimize(argv: &[String]) -> Result<(), String> {
+fn cmd_optimize(argv: &[String]) -> Result<(), CliError> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "seed", help: "polish RNG seed", takes_value: true, default: Some("2026") });
     specs.push(FlagSpec { name: "iters", help: "polish iterations", takes_value: true, default: Some("200000") });
     specs.push(FlagSpec { name: "neighbor-bias", help: "probability of overlap-graph-guided anneal proposals (0 = legacy stream)", takes_value: true, default: Some("0") });
     specs.push(FlagSpec { name: "out", help: "write the strategy CSV here", takes_value: true, default: None });
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("optimize", "search for an optimal strategy", &specs));
         return Ok(());
     }
     let setup = setup_from(&args)?;
-    let neighbor_bias = args.get_f64("neighbor-bias")?.unwrap_or(0.0).clamp(0.0, 1.0);
+    let neighbor_bias = invalid(args.get_f64("neighbor-bias"))?
+        .unwrap_or(0.0)
+        .clamp(0.0, 1.0);
     // Loud rather than silent: the duration-domain annealer has no
     // graph-guided proposal path, so the flag would be a no-op.
     if neighbor_bias > 0.0 && setup.acc.overlap == OverlapMode::DoubleBuffered {
-        return Err(
+        return Err(CliError::Invalid(
             "--neighbor-bias applies to the sequential objective only; \
              the double-buffered annealer does not support graph-guided proposals"
                 .into(),
-        );
+        ));
     }
     let opt = Optimizer::new(OptimizeOptions {
         group_size: setup.group,
-        seed: args.get_u64("seed")?.unwrap_or(2026),
-        anneal_iters: args.get_u64("iters")?.unwrap_or(200_000),
+        seed: invalid(args.get_u64("seed"))?.unwrap_or(2026),
+        anneal_iters: invalid(args.get_u64("iters"))?.unwrap_or(200_000),
         neighbor_bias,
         ..Default::default()
     });
@@ -280,7 +299,7 @@ fn cmd_optimize(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- plan-network
 
-fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
+fn cmd_plan_network(argv: &[String]) -> Result<(), CliError> {
     let specs = vec![
         FlagSpec { name: "group", help: "per-layer group size bound", takes_value: true, default: Some("4") },
         FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
@@ -296,7 +315,7 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "json", help: "emit the plan as JSON instead of a table", takes_value: false, default: None },
         FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") || args.positional.is_empty() {
         println!(
             "{}",
@@ -313,12 +332,16 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
         return if args.get_bool("help") {
             Ok(())
         } else {
-            Err("missing network name (e.g. `plan-network lenet5`)".into())
+            Err(CliError::Invalid(
+                "missing network name (e.g. `plan-network lenet5`)".into(),
+            ))
         };
     }
     let name = &args.positional[0];
     let preset = network_preset(name).ok_or_else(|| {
-        format!("unknown network '{name}' (see `convoffload plan-network --help`)")
+        CliError::Invalid(format!(
+            "unknown network '{name}' (see `convoffload plan-network --help`)"
+        ))
     })?;
     // `--thorough` spends the delta-evaluation speedup on search quality:
     // 3× the per-lane budget at roughly the old wall time. It is opt-in
@@ -327,15 +350,15 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
     let budget_scale = if args.get_bool("thorough") { 3 } else { 1 };
     let options = PlanOptions {
         accelerator: AcceleratorSpec::PerLayerGroup(
-            args.get_usize("group")?.unwrap_or(4).max(1),
+            invalid(args.get_usize("group"))?.unwrap_or(4).max(1),
         ),
-        seed: args.get_u64("seed")?.unwrap_or(2026),
-        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000) * budget_scale,
-        anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
-        threads: args.get_usize("threads")?.unwrap_or(0),
-        overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
-        dma_channels: args.get_usize("dma-channels")?.unwrap_or(1).max(1),
-        compute_units: args.get_usize("compute-units")?.unwrap_or(1).max(1),
+        seed: invalid(args.get_u64("seed"))?.unwrap_or(2026),
+        anneal_iters: invalid(args.get_u64("iters"))?.unwrap_or(50_000) * budget_scale,
+        anneal_starts: invalid(args.get_usize("starts"))?.unwrap_or(3).max(1),
+        threads: invalid(args.get_usize("threads"))?.unwrap_or(0),
+        overlap: invalid(OverlapMode::from_str(args.get("overlap").unwrap_or("sequential")))?,
+        dma_channels: invalid(args.get_usize("dma-channels"))?.unwrap_or(1).max(1),
+        compute_units: invalid(args.get_usize("compute-units"))?.unwrap_or(1).max(1),
     };
     let planner = if args.get_bool("no-cache") {
         NetworkPlanner::new(options)
@@ -358,10 +381,10 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), String> {
 /// single-layer TOML experiment file (wrapped as a one-stage network — the
 /// geometry comes from the file; the platform derivation stays batch-wide so
 /// every request shares one cache-key convention).
-fn batch_request(arg: &str) -> Result<NetworkPreset, String> {
+fn batch_request(arg: &str) -> Result<NetworkPreset, CliError> {
     if arg.ends_with(".toml") {
         let text = std::fs::read_to_string(arg).map_err(|e| format!("{arg}: {e}"))?;
-        let cfg = ExperimentConfig::from_toml(&text)?;
+        let cfg = invalid(ExperimentConfig::from_toml(&text))?;
         let stem = std::path::Path::new(arg)
             .file_stem()
             .map(|s| s.to_string_lossy().into_owned())
@@ -378,11 +401,13 @@ fn batch_request(arg: &str) -> Result<NetworkPreset, String> {
         });
     }
     network_preset(arg).ok_or_else(|| {
-        format!("unknown network '{arg}' (preset name or a .toml file; see `convoffload presets`)")
+        CliError::Invalid(format!(
+            "unknown network '{arg}' (preset name or a .toml file; see `convoffload presets`)"
+        ))
     })
 }
 
-fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
+fn cmd_plan_batch(argv: &[String]) -> Result<(), CliError> {
     let specs = vec![
         FlagSpec { name: "group", help: "per-layer group size bound (batch-wide)", takes_value: true, default: Some("4") },
         FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
@@ -401,7 +426,7 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
     ];
     let mut specs = specs;
     specs.extend(fault_flags());
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") || args.positional.is_empty() {
         println!(
             "{}",
@@ -418,7 +443,9 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         return if args.get_bool("help") {
             Ok(())
         } else {
-            Err("missing requests (e.g. `plan-batch lenet5 lenet5 resnet8`)".into())
+            Err(CliError::Invalid(
+                "missing requests (e.g. `plan-batch lenet5 lenet5 resnet8`)".into(),
+            ))
         };
     }
     let presets = args
@@ -428,21 +455,21 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
         .collect::<Result<Vec<_>, _>>()?;
     let options = PlanOptions {
         accelerator: AcceleratorSpec::PerLayerGroup(
-            args.get_usize("group")?.unwrap_or(4).max(1),
+            invalid(args.get_usize("group"))?.unwrap_or(4).max(1),
         ),
-        seed: args.get_u64("seed")?.unwrap_or(2026),
-        anneal_iters: args.get_u64("iters")?.unwrap_or(50_000),
-        anneal_starts: args.get_usize("starts")?.unwrap_or(3).max(1),
-        threads: args.get_usize("threads")?.unwrap_or(0),
-        overlap: OverlapMode::from_str(args.get("overlap").unwrap_or("sequential"))?,
-        dma_channels: args.get_usize("dma-channels")?.unwrap_or(1).max(1),
-        compute_units: args.get_usize("compute-units")?.unwrap_or(1).max(1),
+        seed: invalid(args.get_u64("seed"))?.unwrap_or(2026),
+        anneal_iters: invalid(args.get_u64("iters"))?.unwrap_or(50_000),
+        anneal_starts: invalid(args.get_usize("starts"))?.unwrap_or(3).max(1),
+        threads: invalid(args.get_usize("threads"))?.unwrap_or(0),
+        overlap: invalid(OverlapMode::from_str(args.get("overlap").unwrap_or("sequential")))?,
+        dma_channels: invalid(args.get_usize("dma-channels"))?.unwrap_or(1).max(1),
+        compute_units: invalid(args.get_usize("compute-units"))?.unwrap_or(1).max(1),
     };
     let mut planner = if args.get_bool("no-cache") {
         BatchPlanner::new(options)
     } else {
         let dir = std::path::Path::new(args.get("cache-dir").unwrap());
-        let shards = args.get_usize("shards")?.unwrap_or(16).max(1);
+        let shards = invalid(args.get_usize("shards"))?.unwrap_or(16).max(1);
         BatchPlanner::with_cache(
             options,
             ShardedStrategyCache::open_with(
@@ -471,9 +498,68 @@ fn cmd_plan_batch(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+// ---------------------------------------------------------------- plan-server
+
+fn cmd_plan_server(argv: &[String]) -> Result<(), CliError> {
+    let specs = vec![
+        FlagSpec { name: "addr", help: "bind address (port 0 picks a free port)", takes_value: true, default: Some("127.0.0.1:7461") },
+        FlagSpec { name: "queue-depth", help: "bounded request-queue capacity (beyond it: overloaded)", takes_value: true, default: Some("16") },
+        FlagSpec { name: "max-request-kb", help: "maximum request line size in KiB", takes_value: true, default: Some("64") },
+        FlagSpec { name: "read-timeout-ms", help: "per-connection read/idle timeout", takes_value: true, default: Some("5000") },
+        FlagSpec { name: "state-dir", help: "journal + warm strategy cache directory", takes_value: true, default: Some(".plan-server") },
+        FlagSpec { name: "shards", help: "strategy cache shard count", takes_value: true, default: Some("16") },
+        FlagSpec { name: "group", help: "per-layer group size bound", takes_value: true, default: Some("4") },
+        FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
+        FlagSpec { name: "iters", help: "anneal iterations per lane (full rung)", takes_value: true, default: Some("50000") },
+        FlagSpec { name: "starts", help: "number of anneal lanes (full rung)", takes_value: true, default: Some("3") },
+        FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered", takes_value: true, default: Some("sequential") },
+        FlagSpec { name: "threads", help: "race worker threads (0 = auto)", takes_value: true, default: Some("0") },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = invalid(cli::parse(argv, &specs))?;
+    if args.get_bool("help") {
+        println!(
+            "{}",
+            cli::help(
+                "plan-server",
+                "long-lived planning service: line-delimited JSON over TCP \
+                 (ops: plan, simulate, health, stats, shutdown)",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let options = PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(
+            invalid(args.get_usize("group"))?.unwrap_or(4).max(1),
+        ),
+        seed: invalid(args.get_u64("seed"))?.unwrap_or(2026),
+        anneal_iters: invalid(args.get_u64("iters"))?.unwrap_or(50_000),
+        anneal_starts: invalid(args.get_usize("starts"))?.unwrap_or(3).max(1),
+        threads: invalid(args.get_usize("threads"))?.unwrap_or(0),
+        overlap: invalid(OverlapMode::from_str(args.get("overlap").unwrap_or("sequential")))?,
+        dma_channels: 1,
+        compute_units: 1,
+    };
+    let config = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7461").to_string(),
+        queue_capacity: invalid(args.get_usize("queue-depth"))?.unwrap_or(16).max(1),
+        max_request_bytes: invalid(args.get_usize("max-request-kb"))?.unwrap_or(64).max(1) * 1024,
+        read_timeout_ms: invalid(args.get_u64("read-timeout-ms"))?.unwrap_or(5_000).max(1),
+        state_dir: std::path::PathBuf::from(args.get("state-dir").unwrap_or(".plan-server")),
+        shards: invalid(args.get_usize("shards"))?.unwrap_or(16).max(1),
+        options,
+    };
+    let handle = PlanServer::start(config)?;
+    println!("plan-server listening on {}", handle.local_addr);
+    handle.wait();
+    println!("plan-server stopped (cache flushed, journal compacted)");
+    Ok(())
+}
+
 // ---------------------------------------------------------------- figures
 
-fn cmd_figures(argv: &[String]) -> Result<(), String> {
+fn cmd_figures(argv: &[String]) -> Result<(), CliError> {
     let specs = vec![
         FlagSpec { name: "fig", help: "which figure: 11, 12, 13 or all", takes_value: true, default: Some("all") },
         FlagSpec { name: "out-dir", help: "output directory", takes_value: true, default: Some("figures") },
@@ -481,14 +567,14 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         FlagSpec { name: "quick", help: "smaller grids (CI mode)", takes_value: false, default: None },
         FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
     ];
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("figures", "regenerate the paper's figures", &specs));
         return Ok(());
     }
     let out_dir = std::path::PathBuf::from(args.get("out-dir").unwrap());
     let which = args.get("fig").unwrap().to_string();
-    let seed = args.get_u64("seed")?.unwrap_or(2026);
+    let seed = invalid(args.get_u64("seed"))?.unwrap_or(2026);
     let quick = args.get_bool("quick");
 
     use convoffload::bench_harness as bh;
@@ -527,11 +613,11 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- viz
 
-fn cmd_viz(argv: &[String]) -> Result<(), String> {
+fn cmd_viz(argv: &[String]) -> Result<(), CliError> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "strategy", help: "strategy name or file", takes_value: true, default: Some("zigzag") });
     specs.push(FlagSpec { name: "svg", help: "write an SVG here instead of ASCII", takes_value: true, default: None });
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("viz", "render a strategy step by step", &specs));
         return Ok(());
@@ -561,26 +647,26 @@ fn cmd_viz(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- e2e
 
-fn cmd_e2e(argv: &[String]) -> Result<(), String> {
+fn cmd_e2e(argv: &[String]) -> Result<(), CliError> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "strategy", help: "strategy name or file", takes_value: true, default: Some("zigzag") });
     specs.push(FlagSpec { name: "backend", help: "rust-oracle or pjrt", takes_value: true, default: Some("pjrt") });
     specs.push(FlagSpec { name: "seed", help: "tensor seed", takes_value: true, default: Some("7") });
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("e2e", "functional end-to-end run", &specs));
         return Ok(());
     }
     let setup = setup_from(&args)?;
     let s = build_strategy(args.get("strategy").unwrap(), &setup.layer, setup.group)?;
-    let seed = args.get_u64("seed")?.unwrap_or(7);
+    let seed = invalid(args.get_u64("seed"))?.unwrap_or(7);
     let input =
         convoffload::conv::reference::synth_tensor(setup.layer.input_dims().len(), seed);
     let kernels =
         convoffload::conv::reference::synth_tensor(setup.layer.kernel_elements(), seed + 1);
     let sim = Simulator::new(setup.layer, Platform::new(setup.acc));
 
-    let backend = FunctionalBackend::from_str(args.get("backend").unwrap())?;
+    let backend = invalid(FunctionalBackend::from_str(args.get("backend").unwrap()))?;
     let report = match backend {
         FunctionalBackend::RustOracle => {
             let mut b = RustOracleBackend;
@@ -608,16 +694,16 @@ fn cmd_e2e(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- perf
 
-fn cmd_perf(argv: &[String]) -> Result<(), String> {
+fn cmd_perf(argv: &[String]) -> Result<(), CliError> {
     let mut specs = layer_flags();
     specs.push(FlagSpec { name: "tile", help: "group tile size", takes_value: true, default: Some("8") });
-    let args = cli::parse(argv, &specs)?;
+    let args = invalid(cli::parse(argv, &specs))?;
     if args.get_bool("help") {
         println!("{}", cli::help("perf", "L1 kernel VMEM/MXU estimates", &specs));
         return Ok(());
     }
     let setup = setup_from(&args)?;
-    let tile = args.get_usize("tile")?.unwrap_or(8);
+    let tile = invalid(args.get_usize("tile"))?.unwrap_or(8);
     let tpu = convoffload::metrics::TpuModel::default();
     let est = convoffload::metrics::estimate_step_kernel(&setup.layer, tile, &tpu);
     println!("{}", convoffload::metrics::format_estimate(&setup.layer, tile, &est));
@@ -626,7 +712,7 @@ fn cmd_perf(argv: &[String]) -> Result<(), String> {
 
 // ---------------------------------------------------------------- presets
 
-fn cmd_presets() -> Result<(), String> {
+fn cmd_presets() -> Result<(), CliError> {
     println!("layers:");
     for p in list_presets() {
         println!("  {:<16} {}  [{}]", p.name, p.layer, p.description);

@@ -90,6 +90,79 @@ impl CacheCounterSnapshot {
     }
 }
 
+/// Live request tallies of one `plan-server` process.
+///
+/// One instance per server, shared by the acceptor, admission queue and
+/// worker behind an `Arc`; surfaced verbatim by the `stats` protocol verb.
+/// Same discipline as [`CacheCounters`]: relaxed monotonic tallies.
+#[derive(Debug, Default)]
+pub struct ServerCounters {
+    /// Requests admitted into the bounded queue.
+    pub accepted: AtomicU64,
+    /// Requests rejected because the queue was full (`overloaded`).
+    pub rejected_overloaded: AtomicU64,
+    /// Requests rejected at validation (malformed, oversized, unknown op).
+    pub rejected_malformed: AtomicU64,
+    /// Requests whose deadline expired while they executed (served
+    /// best-so-far, tagged `degraded: deadline`).
+    pub deadline_expired: AtomicU64,
+    /// Requests answered below the full-portfolio ladder rung (any cause:
+    /// queue pressure or deadline budget).
+    pub degraded: AtomicU64,
+    /// Journal entries replayed on warm restart.
+    pub journal_replayed: AtomicU64,
+}
+
+impl ServerCounters {
+    /// A fresh zeroed counter set.
+    pub fn new() -> Self {
+        ServerCounters::default()
+    }
+
+    /// Point-in-time copy for the `stats` verb.
+    pub fn snapshot(&self) -> ServerCounterSnapshot {
+        ServerCounterSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected_overloaded: self.rejected_overloaded.load(Ordering::Relaxed),
+            rejected_malformed: self.rejected_malformed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            journal_replayed: self.journal_replayed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServerCounters`] for `stats` responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerCounterSnapshot {
+    /// Requests admitted into the bounded queue.
+    pub accepted: u64,
+    /// Requests rejected because the queue was full.
+    pub rejected_overloaded: u64,
+    /// Requests rejected at validation.
+    pub rejected_malformed: u64,
+    /// Requests whose deadline expired mid-execution.
+    pub deadline_expired: u64,
+    /// Requests answered below the full-portfolio rung.
+    pub degraded: u64,
+    /// Journal entries replayed on warm restart.
+    pub journal_replayed: u64,
+}
+
+impl ServerCounterSnapshot {
+    /// JSON form (canonical field order) for the `stats` verb.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("accepted", self.accepted)
+            .set("rejected_overloaded", self.rejected_overloaded)
+            .set("rejected_malformed", self.rejected_malformed)
+            .set("deadline_expired", self.deadline_expired)
+            .set("degraded", self.degraded)
+            .set("journal_replayed", self.journal_replayed);
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +195,22 @@ mod tests {
         assert!(!s.summary_line().contains("quarantined"), "quiet when zero");
         let q = CacheCounterSnapshot { quarantined_shards: 3, ..s };
         assert!(q.summary_line().contains("3 quarantined shards"));
+    }
+
+    #[test]
+    fn server_counters_snapshot_and_json() {
+        let c = ServerCounters::new();
+        c.accepted.fetch_add(5, Ordering::Relaxed);
+        c.rejected_overloaded.fetch_add(2, Ordering::Relaxed);
+        c.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert_eq!(s.accepted, 5);
+        assert_eq!(s.rejected_overloaded, 2);
+        assert_eq!(s.rejected_malformed, 0);
+        assert_eq!(s.deadline_expired, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("accepted").unwrap().as_u64(), Some(5));
+        assert_eq!(j.get("journal_replayed").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -12,7 +12,9 @@
 
 pub mod counters;
 
-pub use counters::{CacheCounterSnapshot, CacheCounters};
+pub use counters::{
+    CacheCounterSnapshot, CacheCounters, ServerCounterSnapshot, ServerCounters,
+};
 
 use crate::conv::ConvLayer;
 

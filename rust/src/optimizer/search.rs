@@ -27,12 +27,29 @@
 //! tentative-apply-then-undo implementation (deltas are exact integers), so
 //! per-seed results are unchanged; see EXPERIMENTS.md §Perf.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::conv::{ConvLayer, PatchId};
 use crate::optimizer::makespan::MakespanEval;
 use crate::optimizer::objective::{GroupEdit, GroupingEval};
 use crate::optimizer::overlap::OverlapGraph;
 use crate::platform::Accelerator;
 use crate::util::rng::Rng;
+
+/// How often the annealing loops poll their cancel flag: every
+/// `CANCEL_CHECK_PERIOD` iterations (a power of two so the check is a mask).
+/// The poll happens *before* any RNG draw of that iteration, so a run that is
+/// never cancelled consumes exactly the same draw sequence as the plain
+/// annealers — per-seed bit-identity is preserved by construction.
+pub const CANCEL_CHECK_PERIOD: u64 = 1024;
+
+#[inline]
+fn cancelled_at(it: u64, cancel: Option<&AtomicBool>) -> bool {
+    match cancel {
+        Some(flag) => it & (CANCEL_CHECK_PERIOD - 1) == 0 && flag.load(Ordering::Relaxed),
+        None => false,
+    }
+}
 
 /// Knobs for [`anneal_with`]. The default reproduces [`anneal`] exactly.
 #[derive(Debug, Clone)]
@@ -77,6 +94,37 @@ pub fn anneal_with(
     seed: u64,
     opts: &AnnealOptions,
 ) -> Vec<Vec<PatchId>> {
+    anneal_with_cancel(layer, g, k, start, iters, seed, opts, None).0
+}
+
+/// Cooperatively-cancellable [`anneal`]: identical search, but a shared
+/// `cancel` flag is polled every [`CANCEL_CHECK_PERIOD`] iterations and the
+/// best-so-far grouping is returned as soon as it is observed set. Returns
+/// `(best, iterations_run)`; an uncancelled run is bit-identical to
+/// [`anneal`] and reports `iterations_run == iters`.
+pub fn anneal_cancellable(
+    layer: &ConvLayer,
+    g: usize,
+    k: usize,
+    start: &[Vec<PatchId>],
+    iters: u64,
+    seed: u64,
+    cancel: &AtomicBool,
+) -> (Vec<Vec<PatchId>>, u64) {
+    anneal_with_cancel(layer, g, k, start, iters, seed, &AnnealOptions::default(), Some(cancel))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn anneal_with_cancel(
+    layer: &ConvLayer,
+    g: usize,
+    k: usize,
+    start: &[Vec<PatchId>],
+    iters: u64,
+    seed: u64,
+    opts: &AnnealOptions,
+    cancel: Option<&AtomicBool>,
+) -> (Vec<Vec<PatchId>>, u64) {
     let mut state = State::new(layer, normalize(start, g, k));
     let mut best = state.materialize();
     let mut best_cost = state.cost();
@@ -92,6 +140,9 @@ pub fn anneal_with(
     let t_end = 0.05;
 
     for it in 0..iters {
+        if cancelled_at(it, cancel) {
+            return (best, it);
+        }
         let progress = it as f64 / iters.max(1) as f64;
         let temp = t0 * (t_end / t0).powf(progress);
 
@@ -122,7 +173,7 @@ pub fn anneal_with(
         }
         // Rejected: nothing was mutated, nothing to undo.
     }
-    best
+    (best, iters)
 }
 
 /// Anneal from `start` against the **duration-domain objective**: the §3.7
@@ -145,6 +196,38 @@ pub fn anneal_duration(
     iters: u64,
     seed: u64,
 ) -> Vec<Vec<PatchId>> {
+    anneal_duration_cancel(layer, acc, g, k, start, iters, seed, None).0
+}
+
+/// Cooperatively-cancellable [`anneal_duration`]: same search, polling a
+/// shared `cancel` flag every [`CANCEL_CHECK_PERIOD`] iterations (before any
+/// RNG draw, so uncancelled runs stay bit-identical). Returns
+/// `(best, iterations_run)`.
+#[allow(clippy::too_many_arguments)]
+pub fn anneal_duration_cancellable(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    g: usize,
+    k: usize,
+    start: &[Vec<PatchId>],
+    iters: u64,
+    seed: u64,
+    cancel: &AtomicBool,
+) -> (Vec<Vec<PatchId>>, u64) {
+    anneal_duration_cancel(layer, acc, g, k, start, iters, seed, Some(cancel))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn anneal_duration_cancel(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    g: usize,
+    k: usize,
+    start: &[Vec<PatchId>],
+    iters: u64,
+    seed: u64,
+    cancel: Option<&AtomicBool>,
+) -> (Vec<Vec<PatchId>>, u64) {
     let mut state = State::new(layer, normalize(start, g, k));
     let mut mk = MakespanEval::new(layer, acc, &state.materialize());
     let mut best = state.materialize();
@@ -159,6 +242,9 @@ pub fn anneal_duration(
     let t_end = 0.05;
 
     for it in 0..iters {
+        if cancelled_at(it, cancel) {
+            return (best, it);
+        }
         let progress = it as f64 / iters.max(1) as f64;
         let temp = t0 * (t_end / t0).powf(progress);
 
@@ -197,7 +283,7 @@ pub fn anneal_duration(
         }
         // Rejected: both evaluators left untouched, nothing to undo.
     }
-    best
+    (best, iters)
 }
 
 /// Greedy construction: repeatedly extend the current group with the
@@ -635,6 +721,47 @@ mod tests {
         let a = anneal(&l, 2, 13, &start, 6_000, 5);
         let b = anneal_with(&l, 2, 13, &start, 6_000, 5, &AnnealOptions::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uncancelled_cancellable_anneal_is_bit_identical() {
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let start = strategy::zigzag(&l, 2).groups;
+        let flag = AtomicBool::new(false);
+        let (a, ran) = anneal_cancellable(&l, 2, 13, &start, 6_000, 5, &flag);
+        assert_eq!(ran, 6_000);
+        assert_eq!(a, anneal(&l, 2, 13, &start, 6_000, 5));
+    }
+
+    #[test]
+    fn pre_cancelled_anneal_returns_normalized_start_after_zero_iters() {
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let start = strategy::zigzag(&l, 2).groups;
+        let flag = AtomicBool::new(true);
+        let (a, ran) = anneal_cancellable(&l, 2, 13, &start, 6_000, 5, &flag);
+        assert_eq!(ran, 0, "flag was set before the first iteration");
+        assert_eq!(a, normalize(&start, 2, 13), "best-so-far is the start");
+        // The degraded result is still a complete, valid partition.
+        let mut all: Vec<u32> = a.iter().flatten().copied().collect();
+        all.sort();
+        assert_eq!(all, l.all_patches().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pre_cancelled_anneal_duration_returns_start() {
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let acc = crate::platform::Accelerator::for_group_size(&l, 3);
+        let start = strategy::row_by_row(&l, 3).groups;
+        let flag = AtomicBool::new(true);
+        let (a, ran) =
+            anneal_duration_cancellable(&l, &acc, 3, 9, &start, 5_000, 7, &flag);
+        assert_eq!(ran, 0);
+        assert_eq!(a, normalize(&start, 3, 9));
+        let flag = AtomicBool::new(false);
+        let (b, ran) =
+            anneal_duration_cancellable(&l, &acc, 3, 9, &start, 5_000, 7, &flag);
+        assert_eq!(ran, 5_000);
+        assert_eq!(b, anneal_duration(&l, &acc, 3, 9, &start, 5_000, 7));
     }
 
     #[test]

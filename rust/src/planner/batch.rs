@@ -25,6 +25,7 @@
 //! paths cannot drift.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 
 use crate::config::NetworkPreset;
 use crate::conv::ConvLayer;
@@ -35,7 +36,7 @@ use crate::sim::{Network, Stage};
 use crate::util::pool;
 
 use super::cache::{CacheKey, CachedStrategy, StrategyStore};
-use super::portfolio::{portfolio_entries, run_entry};
+use super::portfolio::{portfolio_entries, run_entry_cancel, PortfolioEntry};
 use super::recovery::{degrade_for_shrink, ChaosSpec, DegradeOutcome};
 use super::shard::ShardedStrategyCache;
 use super::{LayerPlan, NetworkPlan, PlanOptions};
@@ -127,6 +128,11 @@ pub(crate) struct Resolution {
     /// Portfolio lanes that panicked during the race (each lost exactly its
     /// own result; the reduction skipped them).
     pub panicked_lanes: usize,
+    /// Problems whose *every* lane was skipped by a fired cancel flag and
+    /// that were therefore served by the inline deterministic fallback
+    /// (first-ordering lane, winner tagged `+deadline`). Always 0 without a
+    /// cancel flag.
+    pub deadline_starved: usize,
 }
 
 /// [`resolve_chaos`] without chaos — the production path.
@@ -139,6 +145,17 @@ pub(crate) fn resolve(
     resolve_chaos(presets, ctxs, o, store, &ChaosSpec::default())
 }
 
+/// [`resolve_chaos_cancel`] without a cancel flag.
+pub(crate) fn resolve_chaos(
+    presets: &[&NetworkPreset],
+    ctxs: &[StageCtx],
+    o: &PlanOptions,
+    store: Option<&dyn StrategyStore>,
+    chaos: &ChaosSpec,
+) -> Result<Resolution, String> {
+    resolve_chaos_cancel(presets, ctxs, o, store, chaos, None)
+}
+
 /// Resolve every distinct planning problem in the batch: dedupe by canonical
 /// key across all requests, consult the store once per unique problem, then
 /// race the residual (problem × portfolio-lane) set on one shared pool.
@@ -147,12 +164,42 @@ pub(crate) fn resolve(
 /// [`ChaosSpec`] injection) loses exactly its own result; the deterministic
 /// reduction runs over the surviving lanes. Only when **every** lane of a
 /// problem is lost does the batch fail.
-pub(crate) fn resolve_chaos(
+///
+/// The race is also deadline-tolerant when `cancel` is supplied: annealing
+/// lanes return best-so-far when the flag fires, unclaimed (problem, lane)
+/// pairs are skipped entirely, and a problem that lost *all* its lanes to
+/// the skip is served by an inline deterministic fallback (the first
+/// ordering lane, winner tagged `+deadline`) instead of failing the batch.
+/// Results computed under a fired flag are never written back to the store —
+/// a cut-short anneal must not pollute the full-budget entry for its key.
+/// With `cancel == None` (or an unfired flag) this path is bit-identical to
+/// the historical race.
+/// A store hit must survive structural validation against the layer it will
+/// drive, and its stored objectives must match the recomputed ones (cheap
+/// next to a race); anything stale re-races and overwrites. Shared by the
+/// batch resolution and [`BatchPlanner::fully_cached`] so the two can never
+/// drift.
+fn validated_hit(
+    store: &dyn StrategyStore,
+    ctx: &StageCtx,
+    layer: &ConvLayer,
+    o: &PlanOptions,
+) -> Option<CachedStrategy> {
+    store.load(&ctx.key).filter(|h| {
+        h.validate_for(layer, ctx.group)
+            && h.loaded_pixels == grouping_loads(layer, &h.strategy.groups)
+            && (o.overlap == OverlapMode::Sequential
+                || h.makespan == Some(grouping_makespan(layer, &ctx.acc, &h.strategy.groups)))
+    })
+}
+
+pub(crate) fn resolve_chaos_cancel(
     presets: &[&NetworkPreset],
     ctxs: &[StageCtx],
     o: &PlanOptions,
     store: Option<&dyn StrategyStore>,
     chaos: &ChaosSpec,
+    cancel: Option<&AtomicBool>,
 ) -> Result<Resolution, String> {
     let mut resolved: BTreeMap<String, CachedStrategy> = BTreeMap::new();
     let mut jobs: Vec<usize> = Vec::new(); // ctx index of each racing representative
@@ -172,18 +219,8 @@ pub(crate) fn resolve_chaos(
         }
         first_net.insert(ctx.key.canonical(), ctx.net);
         if let Some(store) = store {
-            // A hit must survive structural validation against the layer it
-            // will drive, and its stored objectives must match the
-            // recomputed ones (cheap next to a race); anything stale
-            // re-races and overwrites.
             let layer = &presets[ctx.net].stages[ctx.stage].layer;
-            if let Some(hit) = store.load(&ctx.key).filter(|h| {
-                h.validate_for(layer, ctx.group)
-                    && h.loaded_pixels == grouping_loads(layer, &h.strategy.groups)
-                    && (o.overlap == OverlapMode::Sequential
-                        || h.makespan
-                            == Some(grouping_makespan(layer, &ctx.acc, &h.strategy.groups)))
-            }) {
+            if let Some(hit) = validated_hit(store, ctx, layer, o) {
                 resolved.insert(ctx.key.canonical().to_string(), hit);
                 store_hits += 1;
                 continue;
@@ -200,27 +237,31 @@ pub(crate) fn resolve_chaos(
     let entries = portfolio_entries(o.seed, o.anneal_iters, o.anneal_starts);
     let mut anneal_per_net = vec![0u64; presets.len()];
     let mut panicked_lanes = 0usize;
+    let mut deadline_starved = 0usize;
     if !jobs.is_empty() {
         let work: Vec<(usize, usize)> = jobs
             .iter()
             .flat_map(|&ci| (0..entries.len()).map(move |ei| (ci, ei)))
             .collect();
         let threads = if o.threads == 0 { pool::default_threads() } else { o.threads };
-        let (results, panics) = pool::parallel_map_catch(&work, threads, |&(ci, ei)| {
-            let ctx = &ctxs[ci];
-            let entry = &entries[ei];
-            if chaos.panic_lane.as_deref() == Some(entry.label().as_str()) {
-                panic!("chaos: portfolio lane {} crashed", entry.label());
-            }
-            run_entry(
-                &presets[ctx.net].stages[ctx.stage].layer,
-                &ctx.acc,
-                ctx.group,
-                ctx.k,
-                entry,
-            )
-        });
+        let (results, panics) =
+            pool::parallel_map_catch_cancel(&work, threads, cancel, |&(ci, ei)| {
+                let ctx = &ctxs[ci];
+                let entry = &entries[ei];
+                if chaos.panic_lane.as_deref() == Some(entry.label().as_str()) {
+                    panic!("chaos: portfolio lane {} crashed", entry.label());
+                }
+                run_entry_cancel(
+                    &presets[ctx.net].stages[ctx.stage].layer,
+                    &ctx.acc,
+                    ctx.group,
+                    ctx.k,
+                    entry,
+                    cancel,
+                )
+            });
         panicked_lanes = panics.len();
+        let fired = cancel.is_some_and(|flag| flag.load(AtomicOrdering::Relaxed));
 
         for (ji, &ci) in jobs.iter().enumerate() {
             let ctx = &ctxs[ci];
@@ -247,23 +288,65 @@ pub(crate) fn resolve_chaos(
                     best = Some(lane);
                 }
             }
-            let best = best.ok_or_else(|| {
-                format!(
-                    "all portfolio lanes failed for problem {}",
-                    ctx.key.canonical()
-                )
-            })?;
             anneal_per_net[ctx.net] +=
                 lanes.iter().flatten().map(|l| l.anneal_iters).sum::<u64>();
-            let entry = CachedStrategy {
-                strategy: best.strategy.clone(),
-                loaded_pixels: best.loaded_pixels,
-                makespan: best.makespan,
-                winner: best.label.clone(),
+            let entry = match best {
+                Some(best) => {
+                    // Write back only results whose every lane ran to its full
+                    // budget: a fired flag may have cut an anneal short, and a
+                    // reduced-effort winner stored under the full-budget key
+                    // would poison every future lookup. Unreachable when
+                    // `cancel` is None (the historical path always stores).
+                    let complete = cancel.is_none()
+                        || lanes.iter().zip(&entries).all(|(lane, e)| {
+                            lane.as_ref().is_some_and(|l| match e {
+                                PortfolioEntry::Anneal { iters, .. } => l.anneal_iters == *iters,
+                                _ => true,
+                            })
+                        });
+                    let entry = CachedStrategy {
+                        strategy: best.strategy.clone(),
+                        loaded_pixels: best.loaded_pixels,
+                        makespan: best.makespan,
+                        winner: best.label.clone(),
+                    };
+                    if complete {
+                        if let Some(store) = store {
+                            store.store(&ctx.key, &entry)?;
+                        }
+                    }
+                    entry
+                }
+                None if fired => {
+                    // Every lane of this problem was skipped by the deadline:
+                    // serve the cheapest deterministic lane inline (the first
+                    // portfolio entry — row-by-row ordering, no annealing) and
+                    // tag the winner so the degradation is visible in every
+                    // report. Never stored: it is a property of this request's
+                    // deadline, not of the planning problem.
+                    deadline_starved += 1;
+                    let fb = run_entry_cancel(
+                        &presets[ctx.net].stages[ctx.stage].layer,
+                        &ctx.acc,
+                        ctx.group,
+                        ctx.k,
+                        &entries[0],
+                        None,
+                    );
+                    CachedStrategy {
+                        strategy: fb.strategy,
+                        loaded_pixels: fb.loaded_pixels,
+                        makespan: fb.makespan,
+                        winner: format!("{}+deadline", fb.label),
+                    }
+                }
+                None => {
+                    return Err(format!(
+                        "all portfolio lanes failed for problem {}",
+                        ctx.key.canonical()
+                    ));
+                }
             };
-            if let Some(store) = store {
-                store.store(&ctx.key, &entry)?;
-            }
             resolved.insert(ctx.key.canonical().to_string(), entry);
         }
     }
@@ -276,6 +359,7 @@ pub(crate) fn resolve_chaos(
         cross_network_dedup_hits,
         anneal_per_net,
         panicked_lanes,
+        deadline_starved,
     })
 }
 
@@ -507,6 +591,10 @@ pub struct BatchStats {
     /// `MemoryShrink` fault verdict — always 0 without an active fault
     /// model.
     pub degraded_stages: usize,
+    /// Unique problems served by the inline deadline fallback because a
+    /// fired cancel flag skipped *every* portfolio lane (winner tagged
+    /// `+deadline`) — always 0 without a cancel flag.
+    pub deadline_starved: usize,
 }
 
 /// The result of one batch: per-request plans (input order) plus the
@@ -570,6 +658,30 @@ impl BatchPlanner {
         self.cache.as_ref()
     }
 
+    /// True when **every** unique planning problem of `presets` would be a
+    /// validated store hit — i.e. a subsequent [`plan_batch`](Self::plan_batch)
+    /// runs zero portfolio races. The cache-only rung of a loaded planning
+    /// service uses this to decide between serving warm and rejecting
+    /// `overloaded`; it shares the hit-validation predicate with the batch
+    /// resolution, so the answer cannot drift from what `plan_batch` does.
+    /// Always false without a backing cache.
+    pub fn fully_cached(&self, presets: &[NetworkPreset]) -> bool {
+        let Some(cache) = self.cache.as_ref() else {
+            return false;
+        };
+        let o = &self.options;
+        let refs: Vec<&NetworkPreset> = presets.iter().collect();
+        let ctxs = stage_contexts(o, &refs);
+        let mut seen: BTreeSet<&str> = BTreeSet::new();
+        ctxs.iter().all(|ctx| {
+            if !seen.insert(ctx.key.canonical()) {
+                return true; // dedup hit: planned once for the batch
+            }
+            let layer = &refs[ctx.net].stages[ctx.stage].layer;
+            validated_hit(cache, ctx, layer, o).is_some()
+        })
+    }
+
     /// Plan every network of the batch.
     ///
     /// Identical problems are planned **once** for the whole batch; the
@@ -596,11 +708,28 @@ impl BatchPlanner {
     /// assert_eq!(report.stats.cross_network_dedup_hits, 2);
     /// ```
     pub fn plan_batch(&self, presets: &[NetworkPreset]) -> Result<BatchReport, String> {
+        self.plan_batch_cancellable(presets, None)
+    }
+
+    /// [`plan_batch`](Self::plan_batch) with a cooperative cancel flag — the
+    /// deadline token a planning service threads into a request.
+    ///
+    /// While the flag is unset this is bit-identical to `plan_batch` (the
+    /// polls sit before any RNG draw). Once it fires, running annealing
+    /// lanes return best-so-far, unclaimed lanes are skipped, problems that
+    /// lost every lane are served by the deterministic `+deadline` fallback
+    /// (counted in [`BatchStats::deadline_starved`]), and nothing computed
+    /// under the fired flag is written back to the persistent store.
+    pub fn plan_batch_cancellable(
+        &self,
+        presets: &[NetworkPreset],
+        cancel: Option<&AtomicBool>,
+    ) -> Result<BatchReport, String> {
         let o = &self.options;
         let refs: Vec<&NetworkPreset> = presets.iter().collect();
         let ctxs = stage_contexts(o, &refs);
         let store = self.cache.as_ref().map(|c| c as &dyn StrategyStore);
-        let res = resolve_chaos(&refs, &ctxs, o, store, &self.chaos)?;
+        let res = resolve_chaos_cancel(&refs, &ctxs, o, store, &self.chaos, cancel)?;
 
         let faults = self.faults.as_ref().filter(|f| f.is_active());
         let mut plans = Vec::with_capacity(presets.len());
@@ -636,6 +765,7 @@ impl BatchPlanner {
             shard_count: self.cache.as_ref().map_or(0, |c| c.shard_count()),
             panicked_lanes: res.panicked_lanes,
             degraded_stages,
+            deadline_starved: res.deadline_starved,
         };
         Ok(BatchReport { plans, stats })
     }
@@ -823,6 +953,106 @@ mod tests {
         for plan in &db.plans {
             assert!(plan.total_duration <= plan.total_sequential_duration);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An unfired cancel flag is invisible: the batch is bit-identical to
+    /// the plain path, stats included.
+    #[test]
+    fn unfired_cancel_flag_is_bit_identical() {
+        let nets = [tiny("a"), other()];
+        let planner = BatchPlanner::new(quick_options());
+        let base = planner.plan_batch(&nets).unwrap();
+        let flag = AtomicBool::new(false);
+        let same = planner.plan_batch_cancellable(&nets, Some(&flag)).unwrap();
+        assert_eq!(same.stats, base.stats);
+        assert_eq!(same.stats.deadline_starved, 0);
+        for (a, b) in base.plans.iter().zip(&same.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(la.strategy, lb.strategy);
+                assert_eq!(la.winner, lb.winner);
+            }
+        }
+    }
+
+    /// A pre-fired cancel flag (deadline already blown on entry) starves
+    /// every unique problem: each is served by the deterministic `+deadline`
+    /// fallback, zero annealing iterations run, every plan stays complete
+    /// and valid, and nothing is written to the persistent store.
+    #[test]
+    fn pre_fired_cancel_serves_deadline_fallbacks() {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-batch-deadline-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nets = [tiny("a"), other()];
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let planner = BatchPlanner::with_cache(quick_options(), cache);
+
+        let flag = AtomicBool::new(true);
+        let starved = planner.plan_batch_cancellable(&nets, Some(&flag)).unwrap();
+        assert_eq!(starved.stats.deadline_starved, 3, "all unique problems starved");
+        assert_eq!(starved.stats.anneal_iters_run, 0, "no budget left to spend");
+        for (plan, preset) in starved.plans.iter().zip(&nets) {
+            assert_eq!(plan.layers.len(), preset.stages.len(), "no stage lost");
+            for lp in &plan.layers {
+                assert!(lp.winner.ends_with("+deadline"), "winner: {}", lp.winner);
+                let mut all: Vec<u32> =
+                    lp.strategy.groups.iter().flatten().copied().collect();
+                all.sort();
+                assert_eq!(all, lp.layer.all_patches().collect::<Vec<_>>());
+            }
+        }
+        // deterministic: the same starved batch twice
+        let again = planner.plan_batch_cancellable(&nets, Some(&flag)).unwrap();
+        assert_eq!(again.stats.deadline_starved, 3);
+        for (a, b) in starved.plans.iter().zip(&again.plans) {
+            assert_eq!(a.total_duration, b.total_duration);
+        }
+        // fallbacks were never stored: a later full-budget batch misses cold
+        let cold = planner.plan_batch(&nets).unwrap();
+        assert_eq!(cold.stats.store_hits, 0, "deadline fallbacks must not be cached");
+        assert_eq!(cold.stats.store_misses, 3);
+        assert_eq!(cold.stats.deadline_starved, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `fully_cached` agrees with what `plan_batch` actually does: false on
+    /// a cold cache (a batch would race), true after warming (a batch would
+    /// run zero anneal iterations), and always false without persistence.
+    #[test]
+    fn fully_cached_tracks_the_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-batch-fullycached-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let nets = [tiny("a"), tiny("b"), other()];
+        let cache = ShardedStrategyCache::open(&dir).unwrap();
+        let planner = BatchPlanner::with_cache(quick_options(), cache);
+
+        assert!(!planner.fully_cached(&nets), "cold cache would race");
+        planner.plan_batch(&nets).unwrap();
+        assert!(planner.fully_cached(&nets), "warm cache serves without racing");
+        // a shape the cache has never seen flips the answer back
+        let more = [tiny("a"), NetworkPreset {
+            name: "fresh".into(),
+            description: "unseen shape".into(),
+            stages: vec![NetworkStagePreset {
+                name: "c1".into(),
+                layer: ConvLayer::new(1, 12, 12, 3, 3, 1, 1, 1).unwrap(),
+                pool_after: false,
+                pad_after: 0,
+            }],
+        }];
+        assert!(!planner.fully_cached(&more));
+        assert!(
+            !BatchPlanner::new(quick_options()).fully_cached(&nets),
+            "no persistence, nothing is cached"
+        );
+        assert!(planner.fully_cached(&[]), "an empty batch needs nothing");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -37,9 +37,12 @@ mod shard;
 
 pub use batch::{BatchPlanner, BatchReport, BatchStats};
 pub use cache::{CacheKey, CachedStrategy, StrategyCache, StrategyStore};
-pub use portfolio::{portfolio_entries, run_entry, PortfolioEntry, PortfolioResult};
+pub use portfolio::{
+    portfolio_entries, run_entry, run_entry_cancel, PortfolioEntry, PortfolioResult,
+};
 pub use recovery::{
-    degrade_for_shrink, memory_group_bound, retry_io, ChaosSpec, DegradeOutcome,
+    backoff_schedule, degrade_for_shrink, memory_group_bound, retry_io,
+    retry_io_jittered, ChaosSpec, DegradeOutcome,
 };
 pub use report::{batch_to_json, format_batch_table, format_plan_table, plan_to_json};
 pub use shard::{ShardedStrategyCache, DEFAULT_SHARDS, DEFAULT_SHARD_CAPACITY};

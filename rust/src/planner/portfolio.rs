@@ -16,6 +16,8 @@
 //! and the determinism contract survive the engine swap. Spend the speedup
 //! on search quality by raising `iters` (`plan-network --thorough` = 3×).
 
+use std::sync::atomic::AtomicBool;
+
 use crate::conv::ConvLayer;
 use crate::optimizer::{grouping_loads, grouping_makespan, search};
 use crate::platform::{Accelerator, OverlapMode};
@@ -96,6 +98,25 @@ pub fn run_entry(
     k: usize,
     entry: &PortfolioEntry,
 ) -> PortfolioResult {
+    run_entry_cancel(layer, acc, group_size, k, entry, None)
+}
+
+/// [`run_entry`] with a cooperative cancel flag (a deadline token).
+///
+/// Annealing lanes poll the flag every [`search::CANCEL_CHECK_PERIOD`]
+/// iterations and return their best-so-far grouping when it fires, with
+/// `anneal_iters` reporting the iterations actually executed. The polls sit
+/// *before* any RNG draw, so a lane whose flag never fires is bit-identical
+/// to [`run_entry`] — including its RNG stream. Heuristic lanes are cheap
+/// and always run to completion.
+pub fn run_entry_cancel(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    group_size: usize,
+    k: usize,
+    entry: &PortfolioEntry,
+    cancel: Option<&AtomicBool>,
+) -> PortfolioResult {
     let overlapped = acc.overlap == OverlapMode::DoubleBuffered;
     let (strategy, anneal_iters) = match entry {
         PortfolioEntry::Ordering(o) => (strategy::from_ordering(layer, *o, group_size), 0),
@@ -117,8 +138,8 @@ pub fn run_entry(
                 })
                 .min_by_key(|&(_, d)| d)
                 .expect("at least one ordering");
-            let groups = if overlapped {
-                search::anneal_duration(
+            let (groups, ran) = match (overlapped, cancel) {
+                (true, Some(flag)) => search::anneal_duration_cancellable(
                     layer,
                     acc,
                     group_size,
@@ -126,14 +147,35 @@ pub fn run_entry(
                     &start.0.groups,
                     *iters,
                     *seed,
-                )
-            } else {
-                search::anneal(layer, group_size, k, &start.0.groups, *iters, *seed)
+                    flag,
+                ),
+                (true, None) => (
+                    search::anneal_duration(
+                        layer,
+                        acc,
+                        group_size,
+                        k,
+                        &start.0.groups,
+                        *iters,
+                        *seed,
+                    ),
+                    *iters,
+                ),
+                (false, Some(flag)) => search::anneal_cancellable(
+                    layer,
+                    group_size,
+                    k,
+                    &start.0.groups,
+                    *iters,
+                    *seed,
+                    flag,
+                ),
+                (false, None) => (
+                    search::anneal(layer, group_size, k, &start.0.groups, *iters, *seed),
+                    *iters,
+                ),
             };
-            (
-                GroupedStrategy::new(format!("anneal-s{seed}"), groups),
-                *iters,
-            )
+            (GroupedStrategy::new(format!("anneal-s{seed}"), groups), ran)
         }
     };
     let loaded_pixels = grouping_loads(layer, &strategy.groups);
@@ -231,6 +273,38 @@ mod tests {
         for (e, want) in entries.iter().zip(&pool) {
             assert_eq!(&run_entry(&l, &acc, g, k, e).strategy, want, "{}", e.label());
         }
+    }
+
+    /// An unfired cancel flag leaves every lane bit-identical to the plain
+    /// path; a pre-fired flag cuts the annealing lanes to zero iterations
+    /// while still returning a valid (normalized-start) strategy.
+    #[test]
+    fn cancel_flag_degrades_anneal_lanes_gracefully() {
+        use std::sync::atomic::Ordering as AtomicOrdering;
+        let l = ConvLayer::square(1, 7, 3, 1);
+        let g = 3;
+        let k = l.n_patches().div_ceil(g);
+        let acc = Accelerator::for_group_size(&l, g);
+        let unfired = AtomicBool::new(false);
+        let fired = AtomicBool::new(true);
+        for entry in portfolio_entries(7, 3_000, 2) {
+            let plain = run_entry(&l, &acc, g, k, &entry);
+            let same = run_entry_cancel(&l, &acc, g, k, &entry, Some(&unfired));
+            assert_eq!(plain.strategy, same.strategy, "{}", plain.label);
+            assert_eq!(plain.anneal_iters, same.anneal_iters);
+
+            let cut = run_entry_cancel(&l, &acc, g, k, &entry, Some(&fired));
+            if matches!(entry, PortfolioEntry::Anneal { .. }) {
+                assert_eq!(cut.anneal_iters, 0, "{}", cut.label);
+            } else {
+                assert_eq!(cut.strategy, plain.strategy, "{}", cut.label);
+            }
+            let mut all: Vec<u32> = cut.strategy.groups.iter().flatten().copied().collect();
+            all.sort();
+            assert_eq!(all, l.all_patches().collect::<Vec<_>>(), "{}", cut.label);
+            assert_eq!(cut.loaded_pixels, grouping_loads(&l, &cut.strategy.groups));
+        }
+        assert!(!unfired.load(AtomicOrdering::Relaxed), "lanes never set the flag");
     }
 
     #[test]

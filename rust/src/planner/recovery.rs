@@ -101,6 +101,55 @@ pub fn retry_io<T>(
     Err(format!("after {attempts} attempts: {last_err}"))
 }
 
+/// The sleep schedule [`retry_io_jittered`] follows: for each of the
+/// `attempts - 1` possible waits, the exponential base delay
+/// (`base_delay · 2^i`) plus a seeded uniform jitter in `[0, base·2^i]`
+/// drawn from [`crate::util::rng::Rng`] via Lemire `below`. Pure — the
+/// schedule is a function of `(attempts, base_delay, seed)` alone, so tests
+/// (and the Python oracle) can pin it bit-exactly while production callers
+/// seeded differently (e.g. per shard index) desynchronize instead of
+/// thundering-herding a contended shard file.
+pub fn backoff_schedule(attempts: u32, base_delay: Duration, seed: u64) -> Vec<Duration> {
+    let attempts = attempts.max(1);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut delay = base_delay;
+    let mut schedule = Vec::with_capacity(attempts.saturating_sub(1) as usize);
+    for _ in 1..attempts {
+        let span = delay.as_micros().min(u128::from(u64::MAX - 1)) as u64;
+        let jitter = Duration::from_micros(rng.below(span + 1));
+        schedule.push(delay + jitter);
+        delay = delay.saturating_mul(2);
+    }
+    schedule
+}
+
+/// [`retry_io`] with seeded backoff jitter: sleeps follow
+/// [`backoff_schedule`]`(attempts, base_delay, seed)` exactly. Deterministic
+/// under a fixed seed; a zero `base_delay` never sleeps (the schedule is all
+/// zeros because the jitter span collapses too).
+pub fn retry_io_jittered<T>(
+    attempts: u32,
+    base_delay: Duration,
+    seed: u64,
+    mut op: impl FnMut() -> Result<T, String>,
+) -> Result<T, String> {
+    let attempts = attempts.max(1);
+    let schedule = backoff_schedule(attempts, base_delay, seed);
+    let mut last_err = String::new();
+    for attempt in 0..attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => last_err = e,
+        }
+        if let Some(delay) = schedule.get(attempt as usize) {
+            if !delay.is_zero() {
+                std::thread::sleep(*delay);
+            }
+        }
+    }
+    Err(format!("after {attempts} attempts: {last_err}"))
+}
+
 /// Would `strategy` execute on `acc` under the strict step semantics
 /// (including the `MemoryOverflow` check)? Errors — not just overflow —
 /// all read as "does not fit"; the caller degrades further.
@@ -264,6 +313,57 @@ mod tests {
             Err("x".into())
         });
         assert_eq!(calls, 1);
+    }
+
+    /// The jittered schedule is a pure function of (attempts, base, seed) —
+    /// pinned bit-exactly here and in the Python oracle
+    /// (`test_server_oracle.py`), so concurrent clients seeded differently
+    /// provably desynchronize while any one client stays deterministic.
+    #[test]
+    fn backoff_schedule_is_pinned_per_seed() {
+        let s = backoff_schedule(4, Duration::from_micros(2000), 42);
+        assert_eq!(
+            s,
+            vec![
+                Duration::from_micros(2167),
+                Duration::from_micros(5516),
+                Duration::from_micros(13441),
+            ]
+        );
+        let s = backoff_schedule(3, Duration::from_micros(500), 7);
+        assert_eq!(s, vec![Duration::from_micros(850), Duration::from_micros(1279)]);
+        // Jitter is bounded by one extra base step: base·2^i ≤ d_i ≤ base·2^(i+1).
+        for (i, d) in backoff_schedule(6, Duration::from_micros(100), 99)
+            .iter()
+            .enumerate()
+        {
+            let lo = 100u64 << i;
+            assert!(d.as_micros() as u64 >= lo && d.as_micros() as u64 <= 2 * lo);
+        }
+        // Different seeds give different schedules (the whole point).
+        assert_ne!(
+            backoff_schedule(4, Duration::from_micros(2000), 1),
+            backoff_schedule(4, Duration::from_micros(2000), 2)
+        );
+        // Zero base delay never sleeps.
+        assert!(backoff_schedule(4, Duration::ZERO, 42).iter().all(Duration::is_zero));
+    }
+
+    #[test]
+    fn retry_io_jittered_retries_and_surfaces_errors() {
+        let mut calls = 0;
+        let r = retry_io_jittered(5, Duration::ZERO, 42, || {
+            calls += 1;
+            if calls < 3 { Err(format!("transient {calls}")) } else { Ok(calls) }
+        });
+        assert_eq!(r, Ok(3));
+        let mut calls = 0;
+        let r: Result<(), String> = retry_io_jittered(3, Duration::ZERO, 42, || {
+            calls += 1;
+            Err(format!("fail {calls}"))
+        });
+        assert_eq!(calls, 3);
+        assert!(r.unwrap_err().contains("after 3 attempts"));
     }
 
     #[test]

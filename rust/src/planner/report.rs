@@ -113,6 +113,12 @@ pub fn format_batch_table(report: &BatchReport) -> String {
             s.panicked_lanes, s.degraded_stages,
         ));
     }
+    if s.deadline_starved > 0 {
+        out.push_str(&format!(
+            "deadline: {} problems served by the inline fallback (+deadline winners)\n",
+            s.deadline_starved,
+        ));
+    }
     out
 }
 
@@ -133,6 +139,7 @@ pub fn batch_to_json(report: &BatchReport) -> Json {
         .set("shard_count", s.shard_count)
         .set("panicked_lanes", s.panicked_lanes)
         .set("degraded_stages", s.degraded_stages)
+        .set("deadline_starved", s.deadline_starved)
         .set("cache", s.cache.to_json());
     let mut o = Json::obj();
     o.set(

@@ -42,7 +42,7 @@ use crate::util::hash::fnv1a64;
 use crate::util::json::{self, Json};
 
 use super::cache::{entry_from_json, entry_to_json, CacheKey, CachedStrategy, StrategyStore};
-use super::recovery::retry_io;
+use super::recovery::retry_io_jittered;
 
 /// Default number of lock stripes / shard files.
 pub const DEFAULT_SHARDS: usize = 16;
@@ -254,8 +254,11 @@ impl ShardedStrategyCache {
 
     /// Serialize `state` (entries in insertion order, so FIFO age survives a
     /// round-trip) and persist it atomically. The write is retried with
-    /// bounded backoff ([`retry_io`]) — shard files sit on real filesystems
-    /// where transient `EAGAIN`-class failures are a fact of life.
+    /// bounded backoff plus seeded jitter ([`retry_io_jittered`], seeded by
+    /// the shard index) — shard files sit on real filesystems where transient
+    /// `EAGAIN`-class failures are a fact of life, and concurrent clients
+    /// retrying the *same* contended shard back off on the same (replayable)
+    /// schedule instead of thundering-herding in lock-step.
     fn persist(&self, index: usize, state: &ShardState) -> Result<(), String> {
         let mut ordered: Vec<(&String, &Stored)> = state.entries.iter().collect();
         ordered.sort_by_key(|(_, s)| s.seq);
@@ -269,9 +272,34 @@ impl ShardedStrategyCache {
             .set("entries", Json::Arr(rows));
         let text = doc.to_string_pretty();
         let path = self.shard_path(index);
-        retry_io(3, std::time::Duration::from_millis(2), || {
+        retry_io_jittered(3, std::time::Duration::from_millis(2), index as u64, || {
             atomic_write(&path, &text)
         })
+    }
+
+    /// Force every shard to load from disk now (a warm reopen): the
+    /// long-lived server calls this once at startup so the first request
+    /// after a restart pays no lazy-load latency and `stats` reflects the
+    /// persisted population. Returns the number of resident entries.
+    pub fn warm_load(&self) -> usize {
+        self.len()
+    }
+
+    /// Persist every *loaded* shard to disk and report how many were
+    /// written. Every `put` already writes through, so under normal
+    /// operation this is a re-assertion of durability, not a correctness
+    /// requirement — the server runs it on `shutdown` (and after journal
+    /// replay) so a following crash cannot lose the warm state.
+    pub fn flush(&self) -> Result<usize, String> {
+        let mut written = 0;
+        for i in 0..self.shard_count() {
+            let state = self.lock_shard(i);
+            if state.loaded && !state.entries.is_empty() {
+                self.persist(i, &state)?;
+                written += 1;
+            }
+        }
+        Ok(written)
     }
 
     /// Look up a key; any unreadable state degrades to a miss.

@@ -1,0 +1,290 @@
+//! Admission control: the bounded request queue and the graceful-degradation
+//! ladder.
+//!
+//! Both halves are deliberately small and deterministic. The queue is a
+//! mutex-guarded ring with a hard capacity — `try_enqueue` never blocks and
+//! never grows the queue past its bound, so an overloaded server says
+//! `overloaded` instead of accumulating unbounded latency. The ladder is a
+//! **pure function** from measured pressure (queue backlog, per-request time
+//! budget) to a portfolio effort level; it is mirrored bit-exactly by the
+//! Python oracle (`oracle_sim.select_rung`), so the server's load-shedding
+//! decisions are cross-checkable without a Rust toolchain.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// One level of the graceful-degradation ladder, ordered from full effort to
+/// cache-only. `Ord` follows degradation: `Full < Reduced < Heuristic <
+/// CacheOnly`, so combining two pressure signals is `max`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// The full configured portfolio (all anneal lanes, full budget).
+    Full,
+    /// One annealing lane at a quarter of the budget.
+    Reduced,
+    /// Heuristic lanes only (orderings + greedy, zero annealing).
+    Heuristic,
+    /// No race at all: serve only if every stage hits the cache at the
+    /// originally-requested key, else reject `overloaded`.
+    CacheOnly,
+}
+
+impl Rung {
+    /// Stable wire name (used in `degraded` response tags).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Rung::Full => "full",
+            Rung::Reduced => "reduced",
+            Rung::Heuristic => "heuristic",
+            Rung::CacheOnly => "cache-only",
+        }
+    }
+}
+
+/// Select the ladder rung for a request, from the measured queue backlog and
+/// the request's remaining time budget.
+///
+/// Queue pressure: an idle queue runs the full portfolio; a backlog at or
+/// below half capacity drops to one reduced anneal lane; below capacity,
+/// heuristics only; at capacity, cache-only. Budget pressure: no deadline or
+/// ≥ 1 s runs full; ≥ 100 ms reduced; ≥ 10 ms heuristics; under 10 ms
+/// cache-only. The final rung is the **more degraded** of the two signals.
+///
+/// Pure and total — mirrored bit-exactly by `python/oracle_sim.py`.
+pub fn select_rung(
+    queue_depth: usize,
+    queue_capacity: usize,
+    budget_ms: Option<u64>,
+) -> Rung {
+    let by_queue = if queue_depth == 0 {
+        Rung::Full
+    } else if queue_depth * 2 <= queue_capacity {
+        Rung::Reduced
+    } else if queue_depth < queue_capacity {
+        Rung::Heuristic
+    } else {
+        Rung::CacheOnly
+    };
+    let by_budget = match budget_ms {
+        None => Rung::Full,
+        Some(ms) if ms >= 1_000 => Rung::Full,
+        Some(ms) if ms >= 100 => Rung::Reduced,
+        Some(ms) if ms >= 10 => Rung::Heuristic,
+        Some(_) => Rung::CacheOnly,
+    };
+    by_queue.max(by_budget)
+}
+
+/// The portfolio budget a rung runs: `Some((anneal_starts, anneal_iters))`
+/// for the racing rungs, `None` for [`Rung::CacheOnly`] (no race is
+/// admitted at all). Pure — mirrored by `python/oracle_sim.py`.
+pub fn rung_budgets(rung: Rung, starts: usize, iters: u64) -> Option<(usize, u64)> {
+    match rung {
+        Rung::Full => Some((starts, iters)),
+        Rung::Reduced => Some((1, iters / 4)),
+        Rung::Heuristic => Some((0, 0)),
+        Rung::CacheOnly => None,
+    }
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// While set, [`AdmissionQueue::dequeue`] withholds items (admission
+    /// still runs) — the deterministic backlog hook for overload tests.
+    /// Ignored once the queue is closed, so shutdown always drains.
+    paused: bool,
+}
+
+/// A bounded MPSC request queue: producers `try_enqueue` (never blocking,
+/// rejecting at capacity), the single worker blocks on [`dequeue`].
+///
+/// [`dequeue`]: AdmissionQueue::dequeue
+pub struct AdmissionQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// An empty queue holding at most `capacity` requests (clamped ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        AdmissionQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+                paused: false,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The hard capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Requests currently waiting.
+    pub fn depth(&self) -> usize {
+        self.state.lock().map(|s| s.items.len()).unwrap_or(0)
+    }
+
+    /// Admit a request, or hand it back when the queue is full or closed.
+    pub fn try_enqueue(&self, item: T) -> Result<(), T> {
+        let mut s = match self.state.lock() {
+            Ok(s) => s,
+            Err(_) => return Err(item),
+        };
+        if s.closed || s.items.len() >= self.capacity {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until a request is available (FIFO) or the queue is closed and
+    /// drained; `None` means "no more work, ever". While paused (and not
+    /// closed), items are withheld even when present.
+    pub fn dequeue(&self) -> Option<T> {
+        let mut s = self.state.lock().ok()?;
+        loop {
+            if s.closed || !s.paused {
+                if let Some(item) = s.items.pop_front() {
+                    return Some(item);
+                }
+                if s.closed {
+                    return None;
+                }
+            }
+            s = self.ready.wait(s).ok()?;
+        }
+    }
+
+    /// Withhold items from [`dequeue`](Self::dequeue) while still admitting
+    /// — backlog builds deterministically (overload tests; a real operator
+    /// pausing a worker for maintenance).
+    pub fn pause(&self) {
+        if let Ok(mut s) = self.state.lock() {
+            s.paused = true;
+        }
+        self.ready.notify_all();
+    }
+
+    /// Release a [`pause`](Self::pause).
+    pub fn resume(&self) {
+        if let Ok(mut s) = self.state.lock() {
+            s.paused = false;
+        }
+        self.ready.notify_all();
+    }
+
+    /// Close the queue: no further admissions; the worker drains what is
+    /// left (a pause no longer withholds) and then sees `None`.
+    pub fn close(&self) {
+        if let Ok(mut s) = self.state.lock() {
+            s.closed = true;
+        }
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full decision table of the ladder — every threshold edge, both
+    /// pressure signals, and the max-combination. Pinned against the Python
+    /// oracle mirror (`test_server_oracle.py` pins the same table).
+    #[test]
+    fn rung_decision_table_is_pinned() {
+        // queue pressure alone (no deadline)
+        assert_eq!(select_rung(0, 16, None), Rung::Full);
+        assert_eq!(select_rung(1, 16, None), Rung::Reduced);
+        assert_eq!(select_rung(8, 16, None), Rung::Reduced);
+        assert_eq!(select_rung(9, 16, None), Rung::Heuristic);
+        assert_eq!(select_rung(15, 16, None), Rung::Heuristic);
+        assert_eq!(select_rung(16, 16, None), Rung::CacheOnly);
+        assert_eq!(select_rung(40, 16, None), Rung::CacheOnly);
+        // budget pressure alone (idle queue)
+        assert_eq!(select_rung(0, 16, Some(5_000)), Rung::Full);
+        assert_eq!(select_rung(0, 16, Some(1_000)), Rung::Full);
+        assert_eq!(select_rung(0, 16, Some(999)), Rung::Reduced);
+        assert_eq!(select_rung(0, 16, Some(100)), Rung::Reduced);
+        assert_eq!(select_rung(0, 16, Some(99)), Rung::Heuristic);
+        assert_eq!(select_rung(0, 16, Some(10)), Rung::Heuristic);
+        assert_eq!(select_rung(0, 16, Some(9)), Rung::CacheOnly);
+        assert_eq!(select_rung(0, 16, Some(0)), Rung::CacheOnly);
+        // combination: the more degraded signal wins
+        assert_eq!(select_rung(8, 16, Some(5)), Rung::CacheOnly);
+        assert_eq!(select_rung(16, 16, Some(5_000)), Rung::CacheOnly);
+        assert_eq!(select_rung(1, 16, Some(50)), Rung::Heuristic);
+        // tiny capacity: any backlog is already at capacity
+        assert_eq!(select_rung(1, 1, None), Rung::CacheOnly);
+    }
+
+    #[test]
+    fn rung_budgets_are_pinned() {
+        assert_eq!(rung_budgets(Rung::Full, 3, 50_000), Some((3, 50_000)));
+        assert_eq!(rung_budgets(Rung::Reduced, 3, 50_000), Some((1, 12_500)));
+        assert_eq!(rung_budgets(Rung::Heuristic, 3, 50_000), Some((0, 0)));
+        assert_eq!(rung_budgets(Rung::CacheOnly, 3, 50_000), None);
+    }
+
+    #[test]
+    fn queue_admits_to_capacity_and_rejects_past_it() {
+        let q = AdmissionQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.try_enqueue(1).is_ok());
+        assert!(q.try_enqueue(2).is_ok());
+        assert_eq!(q.try_enqueue(3), Err(3), "full queue hands the item back");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.dequeue(), Some(1), "FIFO");
+        assert!(q.try_enqueue(4).is_ok(), "freed slot re-admits");
+        assert_eq!(q.dequeue(), Some(2));
+        assert_eq!(q.dequeue(), Some(4));
+    }
+
+    #[test]
+    fn closed_queue_drains_then_ends() {
+        let q = AdmissionQueue::new(4);
+        q.try_enqueue(1).unwrap();
+        q.close();
+        assert_eq!(q.try_enqueue(2), Err(2), "closed queue admits nothing");
+        assert_eq!(q.dequeue(), Some(1), "but drains what it holds");
+        assert_eq!(q.dequeue(), None);
+    }
+
+    #[test]
+    fn paused_queue_admits_but_withholds_until_resume() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(2));
+        q.pause();
+        q.try_enqueue(1).unwrap();
+        q.try_enqueue(2).unwrap();
+        assert_eq!(q.try_enqueue(3), Err(3), "capacity still enforced");
+        assert_eq!(q.depth(), 2, "admission unaffected by pause");
+        let q2 = std::sync::Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.dequeue());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.depth(), 2, "paused dequeue must withhold");
+        q.resume();
+        assert_eq!(t.join().unwrap(), Some(1));
+        // close overrides pause: shutdown always drains
+        q.pause();
+        q.close();
+        assert_eq!(q.dequeue(), Some(2));
+        assert_eq!(q.dequeue(), None);
+    }
+
+    #[test]
+    fn dequeue_blocks_until_an_item_arrives() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(1));
+        let q2 = std::sync::Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.dequeue());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.try_enqueue(7usize).unwrap();
+        assert_eq!(t.join().unwrap(), Some(7));
+    }
+}

@@ -1,0 +1,156 @@
+//! Per-request deadlines: one watcher thread flips cancel flags on expiry.
+//!
+//! A request's deadline becomes a plain `Arc<AtomicBool>` — the same shape
+//! the planner and optimizer accept
+//! ([`crate::planner::BatchPlanner::plan_batch_cancellable`],
+//! [`crate::optimizer::search::anneal_cancellable`]) — so the lower layers
+//! stay free of any server dependency. The watcher is a single thread
+//! sleeping until the earliest armed deadline; arming is O(n) in the number
+//! of in-flight deadlines, which for a single-worker server is at most the
+//! queue capacity.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct WatchState {
+    /// Armed deadlines still pending: (expiry, flag to set).
+    pending: Vec<(Instant, Arc<AtomicBool>)>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<WatchState>,
+    changed: Condvar,
+}
+
+/// The deadline watcher service. Dropping it (or calling
+/// [`shutdown`](DeadlineWatcher::shutdown)) stops the thread; flags already
+/// armed but not yet expired are simply never set, which fails safe — the
+/// request runs to completion.
+pub struct DeadlineWatcher {
+    inner: Arc<Inner>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl DeadlineWatcher {
+    /// Start the watcher thread.
+    pub fn start() -> Self {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(WatchState { pending: Vec::new(), shutdown: false }),
+            changed: Condvar::new(),
+        });
+        let run = Arc::clone(&inner);
+        let thread = std::thread::Builder::new()
+            .name("deadline-watcher".into())
+            .spawn(move || watcher_loop(&run))
+            .expect("spawn deadline watcher");
+        DeadlineWatcher { inner, thread: Some(thread) }
+    }
+
+    /// Arm a deadline `timeout` from now; the returned flag flips to `true`
+    /// when it expires. A zero timeout fires on the watcher's next wakeup
+    /// (effectively immediately).
+    pub fn arm(&self, timeout: Duration) -> Arc<AtomicBool> {
+        let flag = Arc::new(AtomicBool::new(false));
+        let expires = Instant::now() + timeout;
+        if let Ok(mut s) = self.inner.state.lock() {
+            s.pending.push((expires, Arc::clone(&flag)));
+        }
+        self.inner.changed.notify_all();
+        flag
+    }
+
+    /// Stop the watcher thread and join it.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Ok(mut s) = self.inner.state.lock() {
+            s.shutdown = true;
+        }
+        self.inner.changed.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for DeadlineWatcher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn watcher_loop(inner: &Inner) {
+    let mut s = match inner.state.lock() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    loop {
+        // Fire everything already expired.
+        let now = Instant::now();
+        s.pending.retain(|(expiry, flag)| {
+            if *expiry <= now {
+                flag.store(true, Ordering::Relaxed);
+                false
+            } else {
+                true
+            }
+        });
+        if s.shutdown {
+            return;
+        }
+        // Sleep until the earliest pending expiry (or until armed/shutdown).
+        let next = s.pending.iter().map(|(e, _)| *e).min();
+        s = match next {
+            Some(e) => {
+                let wait = e.saturating_duration_since(Instant::now());
+                match inner.changed.wait_timeout(s, wait) {
+                    Ok((s, _)) => s,
+                    Err(_) => return,
+                }
+            }
+            None => match inner.changed.wait(s) {
+                Ok(s) => s,
+                Err(_) => return,
+            },
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wait_for(flag: &AtomicBool, limit: Duration) -> bool {
+        let start = Instant::now();
+        while start.elapsed() < limit {
+            if flag.load(Ordering::Relaxed) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        flag.load(Ordering::Relaxed)
+    }
+
+    #[test]
+    fn short_deadline_fires_and_long_one_does_not() {
+        let w = DeadlineWatcher::start();
+        let soon = w.arm(Duration::from_millis(10));
+        let later = w.arm(Duration::from_secs(3600));
+        assert!(wait_for(&soon, Duration::from_secs(5)), "10ms deadline must fire");
+        assert!(!later.load(Ordering::Relaxed), "distant deadline must not fire");
+        w.shutdown();
+        assert!(!later.load(Ordering::Relaxed), "shutdown fails safe: flag stays unset");
+    }
+
+    #[test]
+    fn zero_timeout_fires_immediately() {
+        let w = DeadlineWatcher::start();
+        let flag = w.arm(Duration::ZERO);
+        assert!(wait_for(&flag, Duration::from_secs(5)));
+    }
+}

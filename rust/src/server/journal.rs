@@ -1,0 +1,337 @@
+//! The crash-safe request journal: append-only JSON lines, fsync'd per
+//! record, replayed on warm restart.
+//!
+//! Every admitted `plan` request appends a `recv` record *before* execution
+//! and a `done` record after its response is complete; a crash between the
+//! two leaves a recv-without-done pair that the next start replays (the
+//! replay re-runs the plan, warming the strategy cache — responses went to a
+//! connection that no longer exists, so the *cache effect* is what restart
+//! recovers). Record grammar, one JSON object per line:
+//!
+//! ```text
+//! {"e":"recv","id":N,"req":{...},"v":1}
+//! {"e":"done","id":N,"v":1}
+//! ```
+//!
+//! Torn-write tolerance: a malformed **last** line (the classic torn tail of
+//! a crash mid-append) is dropped and counted; a malformed *interior* line
+//! means the file cannot be trusted and the whole journal is quarantined
+//! (renamed aside) — the server starts cold rather than replaying garbage.
+//! The replay decision logic ([`replay_lines`]) is pure and mirrored
+//! bit-exactly by `python/oracle_sim.py`.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::fsio::atomic_write;
+use crate::util::json::{self, Json};
+
+/// Journal format version stamped on every record.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// The outcome of replaying a journal's lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalReplay {
+    /// Requests received but never completed, in receive order.
+    pub pending: Vec<(u64, Json)>,
+    /// True when a malformed final line (torn append) was dropped.
+    pub torn_tail: bool,
+    /// One past the highest request id seen (0 on an empty journal) — the
+    /// restarted server continues ids from here.
+    pub next_id: u64,
+}
+
+/// Replay journal lines: pair `recv` records with their `done` records and
+/// return what is still pending. Pure — mirrored by the Python oracle.
+///
+/// Rules: blank lines are skipped; a malformed last line is dropped as a
+/// torn tail; a malformed interior line is an error (the caller
+/// quarantines); a duplicate `recv` id is an error; a `done` without a
+/// matching `recv` is ignored (its `recv` was compacted away).
+pub fn replay_lines(lines: &[&str]) -> Result<JournalReplay, String> {
+    let mut pending: Vec<(u64, Json)> = Vec::new();
+    let mut torn_tail = false;
+    let mut next_id = 0u64;
+    let last = lines.len().saturating_sub(1);
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = parse_record(line);
+        let (event, id, req) = match parsed {
+            Ok(rec) => rec,
+            Err(e) => {
+                if i == last {
+                    torn_tail = true;
+                    continue;
+                }
+                return Err(format!("journal corrupt at line {}: {e}", i + 1));
+            }
+        };
+        next_id = next_id.max(id + 1);
+        match event {
+            Event::Recv => {
+                if pending.iter().any(|(p, _)| *p == id) {
+                    return Err(format!("journal corrupt at line {}: duplicate recv id {id}", i + 1));
+                }
+                pending.push((id, req.expect("recv carries req")));
+            }
+            Event::Done => {
+                pending.retain(|(p, _)| *p != id);
+            }
+        }
+    }
+    Ok(JournalReplay { pending, torn_tail, next_id })
+}
+
+enum Event {
+    Recv,
+    Done,
+}
+
+fn parse_record(line: &str) -> Result<(Event, u64, Option<Json>), String> {
+    let v = json::parse(line).map_err(|e| e.to_string())?;
+    if v.get("v").and_then(Json::as_u64) != Some(JOURNAL_VERSION) {
+        return Err("bad or missing journal version".into());
+    }
+    let id = v
+        .get("id")
+        .and_then(Json::as_u64)
+        .ok_or("bad or missing record id")?;
+    match v.get("e").and_then(Json::as_str) {
+        Some("recv") => {
+            let req = v.get("req").ok_or("recv record without req")?;
+            if !matches!(req, Json::Obj(_)) {
+                return Err("recv req is not an object".into());
+            }
+            Ok((Event::Recv, id, Some(req.clone())))
+        }
+        Some("done") => Ok((Event::Done, id, None)),
+        _ => Err("unknown record event".into()),
+    }
+}
+
+fn recv_line(id: u64, req: &Json) -> String {
+    let mut o = Json::obj();
+    o.set("v", JOURNAL_VERSION).set("e", "recv").set("id", id).set("req", req.clone());
+    o.to_string_compact()
+}
+
+fn done_line(id: u64) -> String {
+    let mut o = Json::obj();
+    o.set("v", JOURNAL_VERSION).set("e", "done").set("id", id);
+    o.to_string_compact()
+}
+
+/// The result of [`Journal::open`]: the writable journal plus everything the
+/// replay learned.
+pub struct JournalOpen {
+    /// The journal, positioned for appending.
+    pub journal: Journal,
+    /// Requests to replay (recv without done), in receive order.
+    pub pending: Vec<(u64, Json)>,
+    /// A torn final line was dropped.
+    pub torn_tail: bool,
+    /// The previous journal was unreadable and was renamed aside.
+    pub quarantined: bool,
+    /// First request id the restarted server should issue.
+    pub next_id: u64,
+}
+
+/// The append-only journal file.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Journal {
+    /// Open (or create) the journal at `path`, replaying whatever a prior
+    /// process left behind. An unreadable journal (interior corruption) is
+    /// renamed to `<path>.quarantined` and the server starts cold — losing
+    /// warm state is recoverable, replaying garbage is not.
+    pub fn open(path: &Path) -> Result<JournalOpen, String> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("{}: {e}", parent.display()))?;
+        }
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(format!("{}: {e}", path.display())),
+        };
+        let lines: Vec<&str> = if text.is_empty() { Vec::new() } else { text.lines().collect() };
+        let (replay, quarantined) = match replay_lines(&lines) {
+            Ok(r) => (r, false),
+            Err(_) => {
+                let aside = path.with_extension("quarantined");
+                std::fs::rename(path, &aside)
+                    .map_err(|e| format!("quarantine {}: {e}", path.display()))?;
+                (JournalReplay { pending: Vec::new(), torn_tail: false, next_id: 0 }, true)
+            }
+        };
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(JournalOpen {
+            journal: Journal { path: path.to_path_buf(), file },
+            pending: replay.pending,
+            torn_tail: replay.torn_tail,
+            quarantined,
+            next_id: replay.next_id,
+        })
+    }
+
+    /// Append a `recv` record and fsync it — once this returns, a crash
+    /// before the matching [`record_done`](Self::record_done) will replay
+    /// the request.
+    pub fn record_recv(&mut self, id: u64, req: &Json) -> Result<(), String> {
+        self.append(&recv_line(id, req))
+    }
+
+    /// Append a `done` record and fsync it.
+    pub fn record_done(&mut self, id: u64) -> Result<(), String> {
+        self.append(&done_line(id))
+    }
+
+    fn append(&mut self, line: &str) -> Result<(), String> {
+        self.file
+            .write_all(format!("{line}\n").as_bytes())
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| format!("{}: {e}", self.path.display()))
+    }
+
+    /// Rewrite the journal to hold exactly `pending` (as fresh `recv`
+    /// records), dropping completed pairs. Atomic (temp + rename + dir
+    /// fsync); run after replay and on clean shutdown so the journal stays
+    /// proportional to in-flight work, not to history.
+    pub fn compact(&mut self, pending: &[(u64, Json)]) -> Result<(), String> {
+        let mut text = String::new();
+        for (id, req) in pending {
+            text.push_str(&recv_line(*id, req));
+            text.push('\n');
+        }
+        atomic_write(&self.path, &text)?;
+        self.file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| format!("{}: {e}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "convoffload-journal-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.join("journal.jsonl")
+    }
+
+    fn req(n: u64) -> Json {
+        let mut o = Json::obj();
+        o.set("op", "plan").set("n", n);
+        o
+    }
+
+    #[test]
+    fn replay_pairs_recv_with_done() {
+        let l1 = recv_line(0, &req(0));
+        let l2 = recv_line(1, &req(1));
+        let l3 = done_line(0);
+        let lines = [l1.as_str(), l2.as_str(), l3.as_str()];
+        let r = replay_lines(&lines).unwrap();
+        assert_eq!(r.pending.len(), 1);
+        assert_eq!(r.pending[0].0, 1);
+        assert!(!r.torn_tail);
+        assert_eq!(r.next_id, 2);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_but_interior_corruption_is_fatal() {
+        let l1 = recv_line(3, &req(3));
+        let torn = [l1.as_str(), r#"{"v":1,"e":"recv","id":4,"req":{"op""#];
+        let r = replay_lines(&torn).unwrap();
+        assert!(r.torn_tail);
+        assert_eq!(r.pending.len(), 1, "only the intact record replays");
+        assert_eq!(r.next_id, 4);
+
+        let interior = ["garbage", l1.as_str()];
+        let err = replay_lines(&interior).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+
+        let dup = [l1.as_str(), l1.as_str(), done_line(9).as_str()];
+        assert!(replay_lines(&dup).unwrap_err().contains("duplicate"));
+
+        // a done whose recv was compacted away is harmless
+        let orphan_done = [done_line(7).as_str()];
+        let r = replay_lines(&orphan_done).unwrap();
+        assert!(r.pending.is_empty());
+        assert_eq!(r.next_id, 8);
+    }
+
+    #[test]
+    fn journal_survives_reopen_and_compacts() {
+        let path = tmp("roundtrip");
+        let mut open = Journal::open(&path).unwrap();
+        assert_eq!(open.next_id, 0);
+        assert!(open.pending.is_empty());
+        open.journal.record_recv(0, &req(0)).unwrap();
+        open.journal.record_done(0).unwrap();
+        open.journal.record_recv(1, &req(1)).unwrap();
+        drop(open);
+
+        let mut again = Journal::open(&path).unwrap();
+        assert_eq!(again.next_id, 2);
+        assert_eq!(again.pending.len(), 1, "request 1 was in flight");
+        assert_eq!(again.pending[0].0, 1);
+        assert!(!again.quarantined);
+
+        let pending = again.pending.clone();
+        again.journal.compact(&pending).unwrap();
+        again.journal.record_done(1).unwrap();
+        drop(again);
+
+        let clean = Journal::open(&path).unwrap();
+        assert!(clean.pending.is_empty());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn corrupt_journal_is_quarantined_not_replayed() {
+        let path = tmp("quarantine");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("not json at all\n{}\n", recv_line(5, &req(5)))).unwrap();
+        let open = Journal::open(&path).unwrap();
+        assert!(open.quarantined);
+        assert!(open.pending.is_empty(), "cold start, no garbage replay");
+        assert_eq!(open.next_id, 0);
+        assert!(path.with_extension("quarantined").exists());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn torn_tail_file_replays_the_intact_prefix() {
+        let path = tmp("torn");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        // a crash mid-append: intact recv, then half a record with no newline
+        std::fs::write(
+            &path,
+            format!("{}\n{}", recv_line(2, &req(2)), r#"{"v":1,"e":"do"#),
+        )
+        .unwrap();
+        let open = Journal::open(&path).unwrap();
+        assert!(!open.quarantined);
+        assert!(open.torn_tail);
+        assert_eq!(open.pending.len(), 1);
+        assert_eq!(open.pending[0].0, 2);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+}

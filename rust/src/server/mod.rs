@@ -1,0 +1,580 @@
+//! The hardened plan-server: a long-lived planning service over TCP.
+//!
+//! `convoffload plan-server` keeps **one** warm [`ShardedStrategyCache`]
+//! across requests, so a fleet of clients shares every strategy any of them
+//! ever raced. The protocol is line-delimited JSON
+//! ([`protocol`]); robustness is layered:
+//!
+//! - **Admission control** ([`admission`]): a bounded queue that rejects
+//!   with an explicit `overloaded` error instead of queueing unbounded
+//!   latency; per-connection read timeouts and a max request size, so a
+//!   stalled or hostile client cannot wedge the acceptor.
+//! - **Deadlines** ([`deadline`]): a per-request time budget becomes a
+//!   cooperative cancel flag threaded down to the annealing inner loops
+//!   ([`BatchPlanner::plan_batch_cancellable`]); an expired request returns
+//!   best-so-far, tagged `degraded`.
+//! - **Load shedding** ([`admission::select_rung`]): measured queue depth
+//!   and the request's budget select a rung of the degradation ladder
+//!   (full portfolio → one reduced anneal lane → heuristics only →
+//!   cache-only), so the server sheds *effort* before it sheds requests.
+//! - **Crash safety** ([`journal`]): every admitted request is journaled
+//!   (fsync before execution); a restart replays requests that were in
+//!   flight when the process died — re-warming the cache they would have
+//!   filled — and reopens the shards warm.
+//!
+//! Zero-pressure identity: a `plan` with no deadline on an idle queue runs
+//! the **exact** batch the `plan-batch` CLI runs — same options, same cache
+//! keys, bit-identical report.
+//!
+//! Threading: connection threads validate, journal and enqueue; **one**
+//! worker executes requests serially (determinism needs no further
+//! argument: one warm planner, FIFO order); `health`/`stats`/`shutdown`
+//! are answered inline so they work even when the queue is full.
+
+pub mod admission;
+pub mod deadline;
+pub mod journal;
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::{layer_preset, network_preset, NetworkPreset};
+use crate::metrics::ServerCounters;
+use crate::planner::{
+    batch_to_json, BatchPlanner, PlanOptions, ShardedStrategyCache, DEFAULT_SHARD_CAPACITY,
+};
+use crate::platform::{Accelerator, Platform};
+use crate::sim::Simulator;
+use crate::strategy;
+use crate::util::json::Json;
+
+use admission::{rung_budgets, select_rung, AdmissionQueue, Rung};
+use deadline::DeadlineWatcher;
+use journal::Journal;
+use protocol::{
+    error_line, ok_line, parse_request, request_from_json, request_to_json, ErrorKind, Request,
+};
+
+/// Server configuration (the `plan-server` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// Bounded request-queue capacity.
+    pub queue_capacity: usize,
+    /// Maximum request line size in bytes.
+    pub max_request_bytes: usize,
+    /// Per-connection read/idle timeout in milliseconds.
+    pub read_timeout_ms: u64,
+    /// Directory holding the journal and the sharded strategy cache.
+    pub state_dir: PathBuf,
+    /// Shard count for the strategy cache.
+    pub shards: usize,
+    /// Planner options (the zero-pressure request runs exactly these).
+    pub options: PlanOptions,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7461".into(),
+            queue_capacity: 16,
+            max_request_bytes: 64 * 1024,
+            read_timeout_ms: 5_000,
+            state_dir: PathBuf::from(".plan-server"),
+            shards: crate::planner::DEFAULT_SHARDS,
+            options: PlanOptions::default(),
+        }
+    }
+}
+
+/// One admitted unit of work: journaled id, validated request, reply slot.
+struct Job {
+    id: u64,
+    request: Request,
+    reply: mpsc::Sender<String>,
+}
+
+/// Everything the threads share.
+struct Shared {
+    config: ServerConfig,
+    queue: AdmissionQueue<Job>,
+    journal: Mutex<Journal>,
+    next_id: AtomicU64,
+    counters: ServerCounters,
+    stopping: AtomicBool,
+}
+
+/// The running server.
+pub struct PlanServer;
+
+/// Handle to a started server: address, lifecycle, test hooks.
+pub struct Handle {
+    /// The bound address (resolves port 0).
+    pub local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+    worker: JoinHandle<()>,
+}
+
+impl Handle {
+    /// Withhold queued work from the worker while still admitting — backlog
+    /// builds deterministically (overload tests, operator maintenance).
+    pub fn pause(&self) {
+        self.shared.queue.pause();
+    }
+
+    /// Release a [`pause`](Self::pause).
+    pub fn resume(&self) {
+        self.shared.queue.resume();
+    }
+
+    /// Request shutdown from outside the protocol (Ctrl-C path).
+    pub fn shutdown(&self) {
+        initiate_shutdown(&self.shared, self.local_addr);
+    }
+
+    /// Block until the acceptor and worker exit (clean shutdown: cache
+    /// flushed, journal compacted).
+    pub fn wait(self) {
+        let _ = self.acceptor.join();
+        let _ = self.worker.join();
+    }
+}
+
+fn initiate_shutdown(shared: &Arc<Shared>, addr: SocketAddr) {
+    shared.stopping.store(true, Ordering::SeqCst);
+    // Close overrides any pause: the worker drains and exits.
+    shared.queue.close();
+    // The acceptor blocks in `accept`; a throwaway connection wakes it so
+    // it can observe `stopping` and exit.
+    let _ = TcpStream::connect(addr);
+}
+
+impl PlanServer {
+    /// Start the server: open (and replay) the journal, reopen the cache
+    /// warm, bind the listener, spawn acceptor + worker.
+    pub fn start(config: ServerConfig) -> Result<Handle, String> {
+        std::fs::create_dir_all(&config.state_dir)
+            .map_err(|e| format!("{}: {e}", config.state_dir.display()))?;
+        let opened = Journal::open(&config.state_dir.join("journal.jsonl"))?;
+        let cache = ShardedStrategyCache::open_with(
+            &config.state_dir.join("cache"),
+            config.shards,
+            DEFAULT_SHARD_CAPACITY,
+        )?;
+        cache.warm_load();
+        let planner = BatchPlanner::with_cache(config.options.clone(), cache);
+        let counters = ServerCounters::new();
+
+        // Replay before accepting traffic: requests that were in flight at
+        // the crash re-run at full effort (their responses have no reader —
+        // the *cache fill* is what restart recovers), then the journal is
+        // compacted to empty.
+        let mut journal = opened.journal;
+        for (_id, req_json) in &opened.pending {
+            if let Ok(req) = request_from_json(req_json) {
+                counters.journal_replayed.fetch_add(1, Ordering::Relaxed);
+                let _ = execute(&planner, &config, &req, Rung::Full, None);
+            }
+        }
+        journal.compact(&[])?;
+
+        let listener = TcpListener::bind(&config.addr)
+            .map_err(|e| format!("bind {}: {e}", config.addr))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+
+        let queue_capacity = config.queue_capacity;
+        let shared = Arc::new(Shared {
+            config,
+            queue: AdmissionQueue::new(queue_capacity),
+            journal: Mutex::new(journal),
+            next_id: AtomicU64::new(opened.next_id),
+            counters,
+            stopping: AtomicBool::new(false),
+        });
+
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("plan-worker".into())
+                .spawn(move || worker_loop(&shared, planner))
+                .map_err(|e| format!("spawn worker: {e}"))?
+        };
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("plan-acceptor".into())
+                .spawn(move || acceptor_loop(&shared, &listener, local_addr))
+                .map_err(|e| format!("spawn acceptor: {e}"))?
+        };
+        Ok(Handle { local_addr, shared, acceptor, worker })
+    }
+}
+
+// ------------------------------------------------------------- acceptor
+
+fn acceptor_loop(shared: &Arc<Shared>, listener: &TcpListener, local_addr: SocketAddr) {
+    for stream in listener.incoming() {
+        if shared.stopping.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let shared = Arc::clone(shared);
+        let _ = std::thread::Builder::new()
+            .name("plan-conn".into())
+            .spawn(move || connection_loop(&shared, stream, local_addr));
+    }
+}
+
+enum ReadOutcome {
+    Line(String),
+    Eof,
+    TooLarge,
+    Err,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than `max`
+/// bytes — an unbounded line is reported as [`ReadOutcome::TooLarge`]
+/// instead of exhausting memory.
+fn read_line_limited(reader: &mut BufReader<TcpStream>, max: usize) -> ReadOutcome {
+    let mut line = Vec::new();
+    loop {
+        let available = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(_) => return ReadOutcome::Err, // timeout or reset
+        };
+        if available.is_empty() {
+            return if line.is_empty() {
+                ReadOutcome::Eof
+            } else {
+                // final line without a newline: still a request
+                match String::from_utf8(line) {
+                    Ok(s) => ReadOutcome::Line(s),
+                    Err(_) => ReadOutcome::Err,
+                }
+            };
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if line.len() + pos > max {
+                    reader.consume(pos + 1);
+                    return ReadOutcome::TooLarge;
+                }
+                line.extend_from_slice(&available[..pos]);
+                reader.consume(pos + 1);
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => ReadOutcome::Line(s),
+                    Err(_) => ReadOutcome::Err,
+                };
+            }
+            None => {
+                let n = available.len();
+                if line.len() + n > max {
+                    reader.consume(n);
+                    return ReadOutcome::TooLarge;
+                }
+                line.extend_from_slice(available);
+                reader.consume(n);
+            }
+        }
+    }
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) -> bool {
+    stream.write_all(line.as_bytes()).is_ok() && stream.write_all(b"\n").is_ok()
+}
+
+fn connection_loop(shared: &Arc<Shared>, stream: TcpStream, local_addr: SocketAddr) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        shared.config.read_timeout_ms.max(1),
+    )));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_limited(&mut reader, shared.config.max_request_bytes) {
+            ReadOutcome::Line(l) => l,
+            ReadOutcome::Eof | ReadOutcome::Err => return,
+            ReadOutcome::TooLarge => {
+                shared.counters.rejected_malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = send_line(
+                    &mut writer,
+                    &error_line(ErrorKind::TooLarge, "request exceeds size bound"),
+                );
+                return; // framing is lost; drop the connection
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let request = match parse_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                shared.counters.rejected_malformed.fetch_add(1, Ordering::Relaxed);
+                if !send_line(&mut writer, &error_line(e.kind, &e.message)) {
+                    return;
+                }
+                continue;
+            }
+        };
+        match request {
+            // Control ops answer inline: they must work under full load.
+            Request::Health => {
+                let mut body = Json::obj();
+                body.set("alive", true)
+                    .set("queue_depth", shared.queue.depth())
+                    .set("queue_capacity", shared.queue.capacity());
+                if !send_line(&mut writer, &ok_line(body)) {
+                    return;
+                }
+            }
+            Request::Stats => {
+                let mut body = Json::obj();
+                body.set("stats", shared.counters.snapshot().to_json())
+                    .set("queue_depth", shared.queue.depth())
+                    .set("queue_capacity", shared.queue.capacity());
+                if !send_line(&mut writer, &ok_line(body)) {
+                    return;
+                }
+            }
+            Request::Shutdown => {
+                let mut body = Json::obj();
+                body.set("stopping", true);
+                let _ = send_line(&mut writer, &ok_line(body));
+                initiate_shutdown(shared, local_addr);
+                return;
+            }
+            req @ (Request::Plan { .. } | Request::Simulate { .. }) => {
+                let (tx, rx) = mpsc::channel();
+                // The journal lock is held across record + enqueue so the
+                // journal's recv order equals the queue's FIFO order.
+                let admitted = {
+                    let mut journal = match shared.journal.lock() {
+                        Ok(j) => j,
+                        Err(_) => return,
+                    };
+                    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+                    if journal.record_recv(id, &request_to_json(&req)).is_err() {
+                        let _ = send_line(
+                            &mut writer,
+                            &error_line(ErrorKind::Internal, "journal write failed"),
+                        );
+                        continue;
+                    }
+                    match shared.queue.try_enqueue(Job { id, request: req, reply: tx }) {
+                        Ok(()) => {
+                            shared.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                            true
+                        }
+                        Err(_) => {
+                            // Never admitted — retire the journal entry so a
+                            // crash does not replay a request we rejected.
+                            let _ = journal.record_done(id);
+                            false
+                        }
+                    }
+                };
+                if !admitted {
+                    shared
+                        .counters
+                        .rejected_overloaded
+                        .fetch_add(1, Ordering::Relaxed);
+                    if !send_line(
+                        &mut writer,
+                        &error_line(ErrorKind::Overloaded, "request queue is full"),
+                    ) {
+                        return;
+                    }
+                    continue;
+                }
+                // The worker always replies exactly once per admitted job.
+                match rx.recv() {
+                    Ok(response) => {
+                        if !send_line(&mut writer, &response) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- worker
+
+fn worker_loop(shared: &Arc<Shared>, planner: BatchPlanner) {
+    let watcher = DeadlineWatcher::start();
+    loop {
+        let Some(job) = shared.queue.dequeue() else { break };
+        // Pressure is measured *now*: the backlog behind this request.
+        let depth = shared.queue.depth();
+        let budget_ms = match &job.request {
+            Request::Plan { deadline_ms, .. } => *deadline_ms,
+            _ => None,
+        };
+        let rung = select_rung(depth, shared.queue.capacity(), budget_ms);
+        let flag = budget_ms.map(|ms| watcher.arm(Duration::from_millis(ms)));
+        let response = match execute(&planner, &shared.config, &job.request, rung, flag.as_deref())
+        {
+            Ok(mut body) => {
+                let fired = flag
+                    .as_ref()
+                    .is_some_and(|f| f.load(Ordering::Relaxed));
+                if fired {
+                    shared.counters.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                }
+                if rung != Rung::Full || fired {
+                    shared.counters.degraded.fetch_add(1, Ordering::Relaxed);
+                    let mut tag = Json::obj();
+                    tag.set("cause", if fired { "deadline" } else { "load" })
+                        .set("rung", rung.as_str());
+                    body.set("degraded", tag);
+                }
+                ok_line(body)
+            }
+            Err(e) => {
+                if e.kind == ErrorKind::Overloaded {
+                    shared
+                        .counters
+                        .rejected_overloaded
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                error_line(e.kind, &e.message)
+            }
+        };
+        let _ = job.reply.send(response);
+        if let Ok(mut journal) = shared.journal.lock() {
+            let _ = journal.record_done(job.id);
+        }
+    }
+    // Clean exit: everything admitted has been answered and marked done —
+    // flush the cache to disk and shrink the journal to empty.
+    if let Some(cache) = planner.cache() {
+        let _ = cache.flush();
+    }
+    if let Ok(mut journal) = shared.journal.lock() {
+        let _ = journal.compact(&[]);
+    }
+    watcher.shutdown();
+}
+
+/// Execute one validated request at one ladder rung. Pure with respect to
+/// the server state (counters and tagging stay in the caller); also the
+/// journal-replay entry point.
+fn execute(
+    planner: &BatchPlanner,
+    config: &ServerConfig,
+    request: &Request,
+    rung: Rung,
+    cancel: Option<&std::sync::atomic::AtomicBool>,
+) -> Result<Json, protocol::ProtoError> {
+    match request {
+        Request::Plan { networks, .. } => {
+            let presets: Vec<NetworkPreset> = networks
+                .iter()
+                .map(|n| {
+                    network_preset(n).ok_or_else(|| {
+                        protocol::ProtoError::malformed(format!("unknown network preset '{n}'"))
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            let report = match rung_budgets(
+                rung,
+                config.options.anneal_starts,
+                config.options.anneal_iters,
+            ) {
+                Some((starts, iters))
+                    if starts == config.options.anneal_starts
+                        && iters == config.options.anneal_iters =>
+                {
+                    // Full rung: the zero-pressure path — exactly the CLI's
+                    // batch, bit-identical report.
+                    planner.plan_batch_cancellable(&presets, cancel)
+                }
+                Some((starts, iters)) => {
+                    let mut options = config.options.clone();
+                    options.anneal_starts = starts;
+                    options.anneal_iters = iters;
+                    let reduced = match planner.cache() {
+                        Some(c) => BatchPlanner::with_cache(options, c.clone()),
+                        None => BatchPlanner::new(options),
+                    };
+                    reduced.plan_batch_cancellable(&presets, cancel)
+                }
+                None => {
+                    // Cache-only: serve if (and only if) zero races needed.
+                    if !planner.fully_cached(&presets) {
+                        return Err(protocol::ProtoError {
+                            kind: ErrorKind::Overloaded,
+                            message: "cache-only rung: not fully cached, try later".into(),
+                        });
+                    }
+                    planner.plan_batch(&presets)
+                }
+            }
+            .map_err(|e| protocol::ProtoError {
+                kind: ErrorKind::Internal,
+                message: e,
+            })?;
+            let mut body = Json::obj();
+            body.set("report", batch_to_json(&report));
+            Ok(body)
+        }
+        Request::Simulate { layer, strategy: strat, group, batch } => {
+            let preset = layer_preset(layer).ok_or_else(|| {
+                protocol::ProtoError::malformed(format!("unknown preset '{layer}'"))
+            })?;
+            let l = preset.layer;
+            let s = match strat.as_str() {
+                "s1-baseline" => strategy::s1_baseline(&l),
+                "row-by-row" | "row" => strategy::row_by_row(&l, *group),
+                "zigzag" => strategy::zigzag(&l, *group),
+                "hilbert" => strategy::hilbert(&l, *group),
+                "diagonal" => strategy::diagonal(&l, *group),
+                other => {
+                    return Err(protocol::ProtoError::malformed(format!(
+                        "unknown strategy '{other}'"
+                    )))
+                }
+            };
+            let acc = Accelerator::for_group_size(&l, *group);
+            let report = Simulator::new(l, Platform::new(acc))
+                .with_batch(*batch)
+                .run(&s)
+                .map_err(|e| protocol::ProtoError {
+                    kind: ErrorKind::Internal,
+                    message: e.to_string(),
+                })?;
+            let mut body = Json::obj();
+            body.set("layer", layer.as_str())
+                .set("strategy", report.strategy_name.as_str())
+                .set("n_steps", report.steps.len())
+                .set("duration", report.duration)
+                .set("sequential_duration", report.sequential_duration)
+                .set("loaded_elements", report.totals.loaded_elements)
+                .set("peak_occupancy", report.peak_occupancy);
+            Ok(body)
+        }
+        // Control ops never reach the worker.
+        Request::Health | Request::Stats | Request::Shutdown => Err(protocol::ProtoError {
+            kind: ErrorKind::Internal,
+            message: "control op routed to worker".into(),
+        }),
+    }
+}

@@ -1,0 +1,313 @@
+//! The plan-server wire protocol: line-delimited JSON, strictly validated.
+//!
+//! One request per line, one response per line. Every request is an object
+//! with an `"op"` field; every response is an object with `"ok"`. Errors
+//! carry a machine-readable kind:
+//!
+//! ```text
+//! -> {"op":"plan","networks":["lenet5","resnet8"],"deadline_ms":500}
+//! <- {"ok":true,"report":{...},"degraded":{"cause":"load","rung":"reduced"}}
+//! -> {"op":"nope"}
+//! <- {"ok":false,"error":{"kind":"malformed","message":"unknown op 'nope'"}}
+//! ```
+//!
+//! Validation is strict and happens **before** admission: unknown ops,
+//! unknown preset names, non-builtin strategies, and zero/absurd integers
+//! are all `malformed` — a request that is admitted can always be executed.
+//! The same preset/strategy validators back the CLI (`util::cli` callers),
+//! so a name the CLI rejects is rejected here with the same message.
+
+use crate::config::{layer_preset, network_preset};
+use crate::util::json::{self, Json};
+
+/// Machine-readable error class of a failed request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The request line is not valid JSON or fails schema validation.
+    Malformed,
+    /// The request line exceeds the configured size bound.
+    TooLarge,
+    /// The server shed the request (queue full, or cache-only rung missed).
+    Overloaded,
+    /// The server failed while executing a valid request.
+    Internal,
+}
+
+impl ErrorKind {
+    /// Stable wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::Malformed => "malformed",
+            ErrorKind::TooLarge => "too-large",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+/// A rejected request: its class plus a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError {
+    /// Machine-readable class.
+    pub kind: ErrorKind,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl ProtoError {
+    /// A `malformed` error.
+    pub fn malformed(message: impl Into<String>) -> Self {
+        ProtoError { kind: ErrorKind::Malformed, message: message.into() }
+    }
+}
+
+/// A validated request — everything in here is guaranteed executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Plan a batch of networks, optionally under a deadline.
+    Plan {
+        /// Network preset names (validated against the preset table).
+        networks: Vec<String>,
+        /// Time budget in milliseconds; `None` means no deadline.
+        deadline_ms: Option<u64>,
+    },
+    /// Simulate one builtin strategy on one layer preset.
+    Simulate {
+        /// Layer preset name (validated).
+        layer: String,
+        /// Builtin strategy name (validated; file paths are refused — the
+        /// server never reads client-named paths).
+        strategy: String,
+        /// Group-size bound (≥ 1).
+        group: usize,
+        /// Images streamed through the strategy (≥ 1).
+        batch: usize,
+    },
+    /// Liveness probe.
+    Health,
+    /// Counter snapshot.
+    Stats,
+    /// Graceful shutdown (flush cache, compact journal, exit).
+    Shutdown,
+}
+
+/// The builtin strategy names `simulate` accepts over the wire (the CLI's
+/// set minus file paths).
+pub const WIRE_STRATEGIES: [&str; 6] =
+    ["s1-baseline", "row-by-row", "row", "zigzag", "hilbert", "diagonal"];
+
+/// Parse and validate one request line.
+pub fn parse_request(line: &str) -> Result<Request, ProtoError> {
+    let v = json::parse(line)
+        .map_err(|e| ProtoError::malformed(format!("invalid JSON: {e}")))?;
+    request_from_json(&v)
+}
+
+/// Validate an already-parsed request object (the journal replay path).
+pub fn request_from_json(v: &Json) -> Result<Request, ProtoError> {
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ProtoError::malformed("request must be a JSON object"));
+    }
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ProtoError::malformed("missing string field 'op'"))?;
+    match op {
+        "plan" => {
+            let arr = v
+                .get("networks")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ProtoError::malformed("'plan' needs an array field 'networks'"))?;
+            if arr.is_empty() {
+                return Err(ProtoError::malformed("'networks' must not be empty"));
+            }
+            let mut networks = Vec::with_capacity(arr.len());
+            for n in arr {
+                let name = n
+                    .as_str()
+                    .ok_or_else(|| ProtoError::malformed("'networks' entries must be strings"))?;
+                if network_preset(name).is_none() {
+                    return Err(ProtoError::malformed(format!(
+                        "unknown network preset '{name}' (see `convoffload presets`)"
+                    )));
+                }
+                networks.push(name.to_string());
+            }
+            let deadline_ms = match v.get("deadline_ms") {
+                None | Some(Json::Null) => None,
+                Some(d) => Some(d.as_u64().ok_or_else(|| {
+                    ProtoError::malformed("'deadline_ms' must be a non-negative integer")
+                })?),
+            };
+            Ok(Request::Plan { networks, deadline_ms })
+        }
+        "simulate" => {
+            let layer = v
+                .get("layer")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ProtoError::malformed("'simulate' needs a string field 'layer'"))?;
+            if layer_preset(layer).is_none() {
+                return Err(ProtoError::malformed(format!(
+                    "unknown preset '{layer}' (see `convoffload presets`)"
+                )));
+            }
+            let strategy = v
+                .get("strategy")
+                .and_then(Json::as_str)
+                .unwrap_or("zigzag");
+            if !WIRE_STRATEGIES.contains(&strategy) {
+                return Err(ProtoError::malformed(format!(
+                    "unknown strategy '{strategy}' (wire accepts: {})",
+                    WIRE_STRATEGIES.join(", ")
+                )));
+            }
+            let group = positive_usize(v, "group", 2)?;
+            let batch = positive_usize(v, "batch", 1)?;
+            Ok(Request::Simulate {
+                layer: layer.to_string(),
+                strategy: strategy.to_string(),
+                group,
+                batch,
+            })
+        }
+        "health" => Ok(Request::Health),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(ProtoError::malformed(format!("unknown op '{other}'"))),
+    }
+}
+
+fn positive_usize(v: &Json, field: &str, default: usize) -> Result<usize, ProtoError> {
+    match v.get(field) {
+        None | Some(Json::Null) => Ok(default),
+        Some(n) => match n.as_usize() {
+            Some(u) if u >= 1 => Ok(u),
+            _ => Err(ProtoError::malformed(format!(
+                "'{field}' must be a positive integer"
+            ))),
+        },
+    }
+}
+
+/// Serialize a request back to its canonical JSON object — the journal
+/// records this form, so replay goes through [`request_from_json`] and a
+/// journaled request round-trips exactly.
+pub fn request_to_json(req: &Request) -> Json {
+    let mut o = Json::obj();
+    match req {
+        Request::Plan { networks, deadline_ms } => {
+            o.set("op", "plan").set(
+                "networks",
+                Json::Arr(networks.iter().map(|n| Json::Str(n.clone())).collect()),
+            );
+            if let Some(ms) = deadline_ms {
+                o.set("deadline_ms", *ms);
+            }
+        }
+        Request::Simulate { layer, strategy, group, batch } => {
+            o.set("op", "simulate")
+                .set("layer", layer.as_str())
+                .set("strategy", strategy.as_str())
+                .set("group", *group)
+                .set("batch", *batch);
+        }
+        Request::Health => {
+            o.set("op", "health");
+        }
+        Request::Stats => {
+            o.set("op", "stats");
+        }
+        Request::Shutdown => {
+            o.set("op", "shutdown");
+        }
+    }
+    o
+}
+
+/// Render an error response line.
+pub fn error_line(kind: ErrorKind, message: &str) -> String {
+    let mut err = Json::obj();
+    err.set("kind", kind.as_str()).set("message", message);
+    let mut o = Json::obj();
+    o.set("ok", false).set("error", err);
+    o.to_string_compact()
+}
+
+/// Render a success response line: `{"ok":true, ...body fields...}`.
+pub fn ok_line(body: Json) -> String {
+    let mut o = body;
+    o.set("ok", true);
+    o.to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_requests_parse_and_round_trip() {
+        let cases = [
+            r#"{"op":"plan","networks":["lenet5","resnet8"]}"#,
+            r#"{"op":"plan","networks":["mobilenet_slim"],"deadline_ms":500}"#,
+            r#"{"op":"simulate","layer":"example1","strategy":"zigzag","group":2,"batch":4}"#,
+            r#"{"op":"health"}"#,
+            r#"{"op":"stats"}"#,
+            r#"{"op":"shutdown"}"#,
+        ];
+        for line in cases {
+            let req = parse_request(line).unwrap_or_else(|e| panic!("{line}: {e:?}"));
+            let back = request_from_json(&request_to_json(&req)).unwrap();
+            assert_eq!(back, req, "journal round-trip must be exact: {line}");
+        }
+    }
+
+    #[test]
+    fn simulate_defaults_are_filled_in() {
+        let req = parse_request(r#"{"op":"simulate","layer":"example1"}"#).unwrap();
+        assert_eq!(
+            req,
+            Request::Simulate {
+                layer: "example1".into(),
+                strategy: "zigzag".into(),
+                group: 2,
+                batch: 1,
+            }
+        );
+    }
+
+    /// The malformed-input regression table: every rejected shape, with its
+    /// error kind pinned. Shared intent with the CLI validation tests —
+    /// same unknown-preset message text.
+    #[test]
+    fn malformed_requests_are_rejected_with_reasons() {
+        let cases: [(&str, &str); 10] = [
+            ("not json at all", "invalid JSON"),
+            (r#"[1,2,3]"#, "must be a JSON object"),
+            (r#"{"networks":["lenet5"]}"#, "missing string field 'op'"),
+            (r#"{"op":"conquer"}"#, "unknown op 'conquer'"),
+            (r#"{"op":"plan"}"#, "needs an array field 'networks'"),
+            (r#"{"op":"plan","networks":[]}"#, "must not be empty"),
+            (r#"{"op":"plan","networks":["vgg99"]}"#, "unknown network preset 'vgg99'"),
+            (r#"{"op":"plan","networks":["lenet5"],"deadline_ms":-5}"#, "non-negative integer"),
+            (r#"{"op":"simulate","layer":"example1","strategy":"../../etc/passwd"}"#, "unknown strategy"),
+            (r#"{"op":"simulate","layer":"example1","group":0}"#, "positive integer"),
+        ];
+        for (line, want) in cases {
+            let err = parse_request(line).expect_err(line);
+            assert_eq!(err.kind, ErrorKind::Malformed, "{line}");
+            assert!(err.message.contains(want), "{line}: got '{}'", err.message);
+        }
+    }
+
+    #[test]
+    fn response_lines_have_the_documented_shape() {
+        let e = error_line(ErrorKind::Overloaded, "queue full");
+        assert_eq!(
+            e,
+            r#"{"error":{"kind":"overloaded","message":"queue full"},"ok":false}"#
+        );
+        let mut body = Json::obj();
+        body.set("alive", true);
+        assert_eq!(ok_line(body), r#"{"alive":true,"ok":true}"#);
+    }
+}

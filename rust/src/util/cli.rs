@@ -120,6 +120,66 @@ pub fn parse(
     Ok(args)
 }
 
+/// Structured CLI failure, split by *whose fault it was* so `main` can map
+/// each class to a distinct process exit code: malformed input (unknown
+/// flags, unparseable values, invalid geometry/spec files — the caller can
+/// fix the invocation) exits 2; runtime failures (I/O, simulation errors —
+/// retrying the same invocation might work) exit 1. Every constructor site
+/// is explicit: the blanket `From<String>` conversion used by `?` defaults
+/// to [`CliError::Failure`], and input-validation sites opt in to
+/// [`CliError::Invalid`] via [`invalid`] / `map_err(CliError::Invalid)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CliError {
+    /// The invocation itself was malformed — bad flag, bad value, bad
+    /// config/spec file contents. Maps to exit code 2.
+    Invalid(String),
+    /// The invocation was well-formed but the work failed. Exit code 1.
+    Failure(String),
+}
+
+impl CliError {
+    /// The process exit code this error class maps to.
+    pub fn exit_code(&self) -> u8 {
+        match self {
+            CliError::Invalid(_) => 2,
+            CliError::Failure(_) => 1,
+        }
+    }
+
+    /// The human-readable message.
+    pub fn message(&self) -> &str {
+        match self {
+            CliError::Invalid(m) | CliError::Failure(m) => m,
+        }
+    }
+}
+
+impl From<String> for CliError {
+    fn from(m: String) -> Self {
+        CliError::Failure(m)
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(m: &str) -> Self {
+        CliError::Failure(m.to_string())
+    }
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Invalid(m) => write!(f, "invalid input: {m}"),
+            CliError::Failure(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+/// Shorthand for tagging a `Result<_, String>` as malformed input.
+pub fn invalid<T>(r: Result<T, String>) -> Result<T, CliError> {
+    r.map_err(CliError::Invalid)
+}
+
 /// Render a help block for a command.
 pub fn help(command: &str, about: &str, specs: &[FlagSpec]) -> String {
     let mut out = format!("{command} — {about}\n\nFlags:\n");
@@ -186,5 +246,17 @@ mod tests {
         let h = help("simulate", "run a strategy", &specs());
         assert!(h.contains("--layer"));
         assert!(h.contains("default: lenet5-conv1"));
+    }
+
+    #[test]
+    fn cli_error_classes_map_to_exit_codes() {
+        let bad = CliError::Invalid("bad flag".into());
+        assert_eq!(bad.exit_code(), 2);
+        assert_eq!(bad.to_string(), "invalid input: bad flag");
+        let fail: CliError = String::from("disk on fire").into();
+        assert_eq!(fail.exit_code(), 1);
+        assert_eq!(fail, CliError::Failure("disk on fire".into()));
+        assert_eq!(invalid::<()>(Err("x".into())), Err(CliError::Invalid("x".into())));
+        assert_eq!(invalid(Ok(3)), Ok(3));
     }
 }

@@ -14,7 +14,7 @@
 //! layer) that want to keep the survivors.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of worker threads to use (`CONVOFFLOAD_THREADS` override).
@@ -80,11 +80,35 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    parallel_map_catch_cancel(items, threads, None, f)
+}
+
+/// [`parallel_map_catch`] with cooperative cancellation: when `cancel` is
+/// `Some` and the flag is observed set, workers stop *claiming* new items —
+/// unclaimed items are left as `None` slots. Items already running are not
+/// interrupted here (long-running item bodies are expected to poll the same
+/// flag themselves, as the annealers do), so a cancelled map still joins
+/// cleanly and returns every result that finished.
+///
+/// With `cancel: None` (or a flag that never fires) the behaviour — claim
+/// order, result order, panic capture — is exactly [`parallel_map_catch`].
+pub fn parallel_map_catch_cancel<T, R, F>(
+    items: &[T],
+    threads: usize,
+    cancel: Option<&AtomicBool>,
+    f: F,
+) -> (Vec<Option<R>>, Vec<Box<dyn std::any::Any + Send>>)
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return (Vec::new(), Vec::new());
     }
     let threads = threads.clamp(1, n);
+    let cancelled = || cancel.is_some_and(|flag| flag.load(Ordering::Relaxed));
     let panics: Mutex<Vec<Box<dyn std::any::Any + Send>>> = Mutex::new(Vec::new());
     let run_one = |i: usize, out: &Mutex<Option<R>>| {
         match catch_unwind(AssertUnwindSafe(|| f(&items[i]))) {
@@ -95,6 +119,9 @@ where
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     if threads == 1 {
         for (i, slot) in results.iter().enumerate() {
+            if cancelled() {
+                break;
+            }
             run_one(i, slot);
         }
     } else {
@@ -102,6 +129,9 @@ where
         std::thread::scope(|scope| {
             for _ in 0..threads {
                 scope.spawn(|| loop {
+                    if cancelled() {
+                        break;
+                    }
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
@@ -206,6 +236,54 @@ mod tests {
         }));
         assert!(caught.is_err());
         assert_eq!(completed.load(Ordering::Relaxed), 7, "survivors ran to completion");
+    }
+
+    /// A pre-set cancel flag means no item is ever claimed; a `None` flag
+    /// leaves the historical contract untouched.
+    #[test]
+    fn cancel_flag_skips_unclaimed_items() {
+        let items: Vec<u64> = (0..16).collect();
+        for threads in [1usize, 4] {
+            let flag = AtomicBool::new(true);
+            let (out, panics) =
+                parallel_map_catch_cancel(&items, threads, Some(&flag), |&x| x * 2);
+            assert!(panics.is_empty(), "threads={threads}");
+            assert!(
+                out.iter().all(Option::is_none),
+                "pre-cancelled map must not claim work (threads={threads})"
+            );
+
+            let flag = AtomicBool::new(false);
+            let (out, _) =
+                parallel_map_catch_cancel(&items, threads, Some(&flag), |&x| x * 2);
+            assert_eq!(
+                out,
+                (0..16).map(|x| Some(x * 2)).collect::<Vec<_>>(),
+                "unfired flag must change nothing (threads={threads})"
+            );
+        }
+    }
+
+    /// A flag fired mid-run stops claims but keeps every finished result.
+    /// Single-thread path so the cut point is exact and the test cannot race.
+    #[test]
+    fn cancel_mid_run_keeps_finished_results() {
+        let items: Vec<u64> = (0..16).collect();
+        let flag = AtomicBool::new(false);
+        let (out, panics) = parallel_map_catch_cancel(&items, 1, Some(&flag), |&x| {
+            if x == 3 {
+                flag.store(true, Ordering::Relaxed);
+            }
+            x
+        });
+        assert!(panics.is_empty());
+        for (i, slot) in out.iter().enumerate() {
+            if i <= 3 {
+                assert_eq!(*slot, Some(i as u64), "items before the cut finished");
+            } else {
+                assert!(slot.is_none(), "items after the cut were never claimed");
+            }
+        }
     }
 
     /// Many panics at once: every payload is captured, every survivor kept.

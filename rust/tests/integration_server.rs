@@ -1,0 +1,409 @@
+//! Integration tests for the hardened plan-server: protocol errors,
+//! admission control, deadlines, crash-safe warm restart, determinism.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use convoffload::config::network_preset;
+use convoffload::planner::{batch_to_json, AcceleratorSpec, BatchPlanner, PlanOptions};
+use convoffload::server::{Handle, PlanServer, ServerConfig};
+use convoffload::util::json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "convoffload-server-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_options(threads: usize) -> PlanOptions {
+    PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(4),
+        seed: 2026,
+        anneal_iters: 1_500,
+        anneal_starts: 2,
+        threads,
+        ..PlanOptions::default()
+    }
+}
+
+fn start(state_dir: &Path, queue_capacity: usize, threads: usize) -> Handle {
+    PlanServer::start(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        queue_capacity,
+        max_request_bytes: 16 * 1024,
+        read_timeout_ms: 30_000,
+        state_dir: state_dir.to_path_buf(),
+        shards: 4,
+        options: quick_options(0),
+    })
+    .expect("server starts")
+}
+
+/// One client connection: send a line, read the reply line.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { writer: stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("read response");
+        line.trim_end().to_string()
+    }
+
+    fn roundtrip(&mut self, line: &str) -> json::Json {
+        self.send(line);
+        json::parse(&self.recv()).expect("response is JSON")
+    }
+}
+
+fn error_kind(resp: &json::Json) -> &str {
+    assert_eq!(resp.get("ok").and_then(json::Json::as_bool), Some(false));
+    resp.get("error")
+        .and_then(|e| e.get("kind"))
+        .and_then(json::Json::as_str)
+        .expect("error kind")
+}
+
+#[test]
+fn malformed_requests_get_structured_errors_and_the_connection_survives() {
+    let dir = tmp_dir("malformed");
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    // The malformed-input regression set, server side — the same shapes the
+    // CLI rejects with exit code 2 (see `cli_and_server_reject_the_same_inputs`).
+    for bad in [
+        "this is not json",
+        r#"{"op":"conquer"}"#,
+        r#"{"op":"plan","networks":[]}"#,
+        r#"{"op":"plan","networks":["vgg99"]}"#,
+        r#"{"op":"simulate","layer":"nope"}"#,
+        r#"{"op":"simulate","layer":"example1","strategy":"../../etc/passwd"}"#,
+        r#"{"op":"simulate","layer":"example1","group":0}"#,
+    ] {
+        let resp = c.roundtrip(bad);
+        assert_eq!(error_kind(&resp), "malformed", "{bad}");
+    }
+    // after seven rejections the same connection still serves
+    let health = c.roundtrip(r#"{"op":"health"}"#);
+    assert_eq!(health.get("ok").and_then(json::Json::as_bool), Some(true));
+    assert_eq!(health.get("alive").and_then(json::Json::as_bool), Some(true));
+
+    let stats = c.roundtrip(r#"{"op":"stats"}"#);
+    let malformed = stats
+        .get("stats")
+        .and_then(|s| s.get("rejected_malformed"))
+        .and_then(json::Json::as_u64);
+    assert_eq!(malformed, Some(7));
+
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn oversized_request_is_rejected_without_buffering_it() {
+    let dir = tmp_dir("oversized");
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    // 20 KiB of JSON against a 16 KiB bound (small enough to sit in the
+    // socket buffers, so the client's write cannot block on a dead reader)
+    let huge = format!(
+        r#"{{"op":"plan","networks":["{}"]}}"#,
+        "x".repeat(20 * 1024)
+    );
+    let resp = c.roundtrip(&huge);
+    assert_eq!(error_kind(&resp), "too-large");
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn full_queue_sheds_with_an_explicit_overloaded_error() {
+    let dir = tmp_dir("overload");
+    let server = start(&dir, 1, 0);
+    // Hold the worker so nothing drains: admission is all that acts.
+    server.pause();
+    let mut first = Client::connect(server.local_addr);
+    first.send(r#"{"op":"plan","networks":["lenet5"]}"#);
+    // wait until the first request occupies the queue's only slot
+    let mut probe = Client::connect(server.local_addr);
+    let mut admitted = false;
+    for _ in 0..100 {
+        let h = probe.roundtrip(r#"{"op":"health"}"#);
+        if h.get("queue_depth").and_then(json::Json::as_u64) == Some(1) {
+            admitted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(admitted, "first request must reach the queue");
+    // the second plan finds the queue full -> overloaded, immediately
+    let resp = probe.roundtrip(r#"{"op":"plan","networks":["lenet5"]}"#);
+    assert_eq!(error_kind(&resp), "overloaded");
+    // releasing the worker serves the queued request normally
+    server.resume();
+    let ok = json::parse(&first.recv()).unwrap();
+    assert_eq!(ok.get("ok").and_then(json::Json::as_bool), Some(true));
+    assert!(ok.get("report").is_some());
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_pressure_plan_is_bit_identical_to_the_batch_planner() {
+    let dir = tmp_dir("identity");
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    let resp = c.roundtrip(r#"{"op":"plan","networks":["lenet5","lenet5"]}"#);
+    assert_eq!(resp.get("ok").and_then(json::Json::as_bool), Some(true));
+    assert!(
+        resp.get("degraded").is_none(),
+        "idle queue + no deadline must not degrade"
+    );
+    // the same batch through the library, cold cache, same options
+    let lenet = network_preset("lenet5").unwrap();
+    let oracle = BatchPlanner::new(quick_options(0))
+        .plan_batch(&[lenet.clone(), lenet])
+        .unwrap();
+    let served = resp.get("report").expect("report");
+    let expect = batch_to_json(&oracle);
+    assert_eq!(
+        served.get("plans"),
+        expect.get("plans"),
+        "plans must be bit-identical to plan-batch"
+    );
+    // stats differ only in persistence fields (the server has a cache);
+    // the planning outcome fields must agree exactly
+    for field in ["networks", "stages_total", "unique_problems", "dedup_hits", "anneal_iters_run"] {
+        assert_eq!(
+            served.get("stats").unwrap().get(field),
+            expect.get("stats").unwrap().get(field),
+            "{field}"
+        );
+    }
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tight_deadline_returns_a_tagged_degraded_plan_that_still_validates() {
+    let dir = tmp_dir("deadline");
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    // 50 ms budget -> heuristic rung by the ladder, regardless of timing
+    let resp = c.roundtrip(r#"{"op":"plan","networks":["lenet5"],"deadline_ms":50}"#);
+    assert_eq!(resp.get("ok").and_then(json::Json::as_bool), Some(true));
+    let tag = resp.get("degraded").expect("tight deadline must tag degraded");
+    assert_eq!(
+        tag.get("rung").and_then(json::Json::as_str),
+        Some("heuristic")
+    );
+    let cause = tag.get("cause").and_then(json::Json::as_str).unwrap();
+    assert!(cause == "deadline" || cause == "load", "cause: {cause}");
+    // the degraded plan is still a complete, simulable plan
+    let report = resp.get("report").unwrap();
+    let plans = report.get("plans").and_then(json::Json::as_arr).unwrap();
+    assert_eq!(plans.len(), 1);
+    for plan in plans {
+        assert!(plan.get("total_duration").and_then(json::Json::as_u64).unwrap() > 0);
+        for layer in plan.get("layers").and_then(json::Json::as_arr).unwrap() {
+            assert!(layer.get("n_steps").and_then(json::Json::as_u64).unwrap() > 0);
+        }
+    }
+    // heuristic rung ran zero annealing iterations
+    assert_eq!(
+        report
+            .get("stats")
+            .and_then(|s| s.get("anneal_iters_run"))
+            .and_then(json::Json::as_u64),
+        Some(0)
+    );
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restart_replays_the_journal_and_serves_the_second_request_fully_cached() {
+    let dir = tmp_dir("restart");
+    // Fabricate a crash: a journal holding a recv with no matching done —
+    // exactly what a kill between admission and completion leaves behind.
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("journal.jsonl"),
+        r#"{"e":"recv","id":0,"req":{"networks":["lenet5"],"op":"plan"},"v":1}"#.to_string() + "\n",
+    )
+    .unwrap();
+
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    let stats = c.roundtrip(r#"{"op":"stats"}"#);
+    assert_eq!(
+        stats
+            .get("stats")
+            .and_then(|s| s.get("journal_replayed"))
+            .and_then(json::Json::as_u64),
+        Some(1),
+        "the in-flight request must replay on startup"
+    );
+    // replay warmed the cache: the same request is now a pure cache serve
+    let resp = c.roundtrip(r#"{"op":"plan","networks":["lenet5"]}"#);
+    let report_stats = resp.get("report").unwrap().get("stats").unwrap();
+    assert_eq!(
+        report_stats.get("anneal_iters_run").and_then(json::Json::as_u64),
+        Some(0),
+        "warm restart: zero anneal iterations"
+    );
+    assert_eq!(
+        report_stats.get("store_misses").and_then(json::Json::as_u64),
+        Some(0)
+    );
+    server.shutdown();
+    server.wait();
+    // clean shutdown compacts the journal to empty
+    let journal = std::fs::read_to_string(dir.join("journal.jsonl")).unwrap();
+    assert!(journal.is_empty(), "journal after clean shutdown: {journal:?}");
+
+    // and a plain restart on the clean state dir reopens the shards warm
+    let again = start(&dir, 4, 0);
+    let mut c2 = Client::connect(again.local_addr);
+    let resp2 = c2.roundtrip(r#"{"op":"plan","networks":["lenet5"]}"#);
+    assert_eq!(
+        resp2
+            .get("report")
+            .and_then(|r| r.get("stats"))
+            .and_then(|s| s.get("anneal_iters_run"))
+            .and_then(json::Json::as_u64),
+        Some(0)
+    );
+    again.shutdown();
+    again.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quarantined_journal_starts_cold_instead_of_replaying_garbage() {
+    let dir = tmp_dir("quarantine");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("journal.jsonl"),
+        "garbage line\n{\"e\":\"recv\",\"id\":1,\"req\":{\"networks\":[\"lenet5\"],\"op\":\"plan\"},\"v\":1}\n",
+    )
+    .unwrap();
+    let server = start(&dir, 4, 0);
+    assert!(
+        dir.join("journal.quarantined").exists(),
+        "corrupt journal must be set aside"
+    );
+    let mut c = Client::connect(server.local_addr);
+    let stats = c.roundtrip(r#"{"op":"stats"}"#);
+    assert_eq!(
+        stats
+            .get("stats")
+            .and_then(|s| s.get("journal_replayed"))
+            .and_then(json::Json::as_u64),
+        Some(0)
+    );
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn simulate_op_answers_over_the_wire() {
+    let dir = tmp_dir("simulate");
+    let server = start(&dir, 4, 0);
+    let mut c = Client::connect(server.local_addr);
+    let resp = c.roundtrip(
+        r#"{"op":"simulate","layer":"example1","strategy":"zigzag","group":2,"batch":1}"#,
+    );
+    assert_eq!(resp.get("ok").and_then(json::Json::as_bool), Some(true));
+    assert!(resp.get("duration").and_then(json::Json::as_u64).unwrap() > 0);
+    assert!(resp.get("n_steps").and_then(json::Json::as_u64).unwrap() > 0);
+    server.shutdown();
+    server.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Determinism under concurrency: two servers differing only in race thread
+/// count produce byte-identical plan responses from equally-cold caches.
+#[test]
+fn plan_responses_are_identical_across_race_thread_counts() {
+    let mut responses = Vec::new();
+    for threads in [1usize, 8] {
+        let dir = tmp_dir(&format!("threads{threads}"));
+        let server = PlanServer::start(ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_capacity: 4,
+            max_request_bytes: 16 * 1024,
+            read_timeout_ms: 30_000,
+            state_dir: dir.clone(),
+            shards: 4,
+            options: quick_options(threads),
+        })
+        .unwrap();
+        let mut c = Client::connect(server.local_addr);
+        c.send(r#"{"op":"plan","networks":["lenet5","resnet8"]}"#);
+        responses.push(c.recv());
+        server.shutdown();
+        server.wait();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert_eq!(
+        responses[0], responses[1],
+        "thread count must not change a single byte of the response"
+    );
+}
+
+/// The CLI and the server reject the same malformed inputs — the shared
+/// validators (`config::from_toml`, `FaultModel::from_spec`, preset lookups)
+/// fail loudly in both surfaces.
+#[test]
+fn cli_and_server_reject_the_same_inputs() {
+    use convoffload::config::ExperimentConfig;
+    use convoffload::platform::FaultModel;
+    use convoffload::server::protocol::{parse_request, ErrorKind};
+
+    // zero / negative dims in a TOML layer file fail loudly
+    let bad_toml =
+        "[layer]\nc_in = 0\nh_in = 8\nw_in = 8\nh_k = 3\nw_k = 3\nn = 1\n";
+    let err = ExperimentConfig::from_toml(bad_toml).unwrap_err();
+    assert!(err.contains("positive integer"), "{err}");
+    let neg_toml =
+        "[layer]\nc_in = 1\nh_in = -8\nw_in = 8\nh_k = 3\nw_k = 3\nn = 1\n";
+    let err = ExperimentConfig::from_toml(neg_toml).unwrap_err();
+    assert!(err.contains("got -8"), "{err}");
+    // malformed --faults spec
+    assert!(FaultModel::from_spec("dma=not-a-rate").is_err());
+    assert!(FaultModel::from_spec("bogus-key=1").is_err());
+    // unknown preset: same name rejected by the wire with the same class
+    let err = parse_request(r#"{"op":"plan","networks":["vgg99"]}"#).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::Malformed);
+    assert!(err.message.contains("vgg99"));
+    let err = parse_request(r#"{"op":"simulate","layer":"vgg99"}"#).unwrap_err();
+    assert_eq!(err.kind, ErrorKind::Malformed);
+}

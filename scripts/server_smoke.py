@@ -1,0 +1,219 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the `plan-server` subcommand (stdlib only).
+
+Drives a release binary over loopback TCP through the whole protocol
+surface and the robustness contract:
+
+1. health / plan / simulate / stats / shutdown round-trips;
+2. malformed and oversized requests get structured errors while the
+   process keeps serving;
+3. a tight deadline yields a tagged `degraded` response whose plans are
+   still complete;
+4. kill-free warm restart: a second process on the same `--state-dir`
+   answers the same plan fully from the strategy cache (zero anneal
+   iterations, zero store misses);
+5. determinism: a cold plan on a fresh state dir is byte-identical to the
+   first process's cold plan.
+
+Exit code 0 on success, 1 with a diagnostic on the first violated check.
+
+Usage: python scripts/server_smoke.py [--binary target/release/convoffload]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+
+class Client:
+    """One line-delimited JSON connection."""
+
+    def __init__(self, addr):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=120)
+        self.rfile = self.sock.makefile("rb")
+
+    def send_raw(self, line: bytes):
+        self.sock.sendall(line + b"\n")
+
+    def recv_raw(self) -> bytes:
+        line = self.rfile.readline()
+        if not line:
+            raise AssertionError("server closed the connection unexpectedly")
+        return line.rstrip(b"\n")
+
+    def roundtrip(self, request: dict) -> dict:
+        self.send_raw(json.dumps(request).encode())
+        return json.loads(self.recv_raw())
+
+    def close(self):
+        self.rfile.close()
+        self.sock.close()
+
+
+class Server:
+    """A plan-server subprocess bound to an ephemeral port."""
+
+    def __init__(self, binary, state_dir, extra=()):
+        self.proc = subprocess.Popen(
+            [
+                binary, "plan-server",
+                "--addr", "127.0.0.1:0",
+                "--state-dir", state_dir,
+                "--iters", "2000",
+                "--starts", "2",
+                "--group", "4",
+                "--seed", "2026",
+                "--max-request-kb", "16",
+                *extra,
+            ],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT,
+            text=True,
+        )
+        banner = self.proc.stdout.readline().strip()
+        prefix = "plan-server listening on "
+        if not banner.startswith(prefix):
+            self.proc.kill()
+            raise AssertionError(f"unexpected banner: {banner!r}")
+        self.addr = banner[len(prefix):]
+
+    def shutdown(self):
+        c = Client(self.addr)
+        resp = c.roundtrip({"op": "shutdown"})
+        check(resp.get("ok") is True and resp.get("stopping") is True,
+              f"shutdown response: {resp}")
+        c.close()
+        code = self.proc.wait(timeout=120)
+        check(code == 0, f"server exited with code {code}")
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def plan_stats(resp):
+    return resp["report"]["stats"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--binary", default="target/release/convoffload")
+    args = ap.parse_args()
+    if shutil.which(args.binary) is None and not os.path.exists(args.binary):
+        print(f"FAIL: binary not found: {args.binary}", file=sys.stderr)
+        return 1
+
+    tmp = tempfile.mkdtemp(prefix="plan-server-smoke-")
+    warm_dir = f"{tmp}/warm"
+    fresh_dir = f"{tmp}/fresh"
+
+    # --- process 1: cold start, full protocol surface -------------------
+    srv = Server(args.binary, warm_dir)
+    print(f"[smoke] server 1 on {srv.addr}")
+    c = Client(srv.addr)
+
+    resp = c.roundtrip({"op": "health"})
+    check(resp.get("ok") is True and resp.get("queue_depth") == 0,
+          f"health: {resp}")
+
+    c.send_raw(json.dumps({"op": "plan", "networks": ["lenet5"]}).encode())
+    cold_plan_bytes = c.recv_raw()
+    cold = json.loads(cold_plan_bytes)
+    check(cold.get("ok") is True and "degraded" not in cold,
+          f"cold plan must be ok and untagged: {list(cold)}")
+    check(plan_stats(cold)["anneal_iters_run"] > 0,
+          "cold plan must actually search")
+    print("[smoke] cold plan ok "
+          f"(anneal_iters_run={plan_stats(cold)['anneal_iters_run']})")
+
+    resp = c.roundtrip(
+        {"op": "simulate", "layer": "lenet5-conv1", "strategy": "zigzag"}
+    )
+    check(resp.get("ok") is True and resp.get("n_steps", 0) > 0,
+          f"simulate: {resp}")
+
+    # malformed requests: structured error, connection survives
+    for bad in (b"not json", b'{"op":"warp"}', b'{"networks":["lenet5"]}',
+                b'{"op":"plan","networks":[]}',
+                b'{"op":"plan","networks":["vgg99"]}'):
+        c.send_raw(bad)
+        resp = json.loads(c.recv_raw())
+        check(resp.get("ok") is False
+              and resp["error"]["kind"] == "malformed",
+              f"malformed {bad!r}: {resp}")
+    print("[smoke] malformed inputs rejected, connection survives")
+
+    # oversized request: too-large, connection is dropped (framing lost)
+    big = Client(srv.addr)
+    big.send_raw(b'{"op":"health","pad":"' + b"x" * (20 * 1024) + b'"}')
+    resp = json.loads(big.recv_raw())
+    check(resp.get("ok") is False and resp["error"]["kind"] == "too-large",
+          f"oversized: {resp}")
+    big.close()
+
+    # tight deadline: degraded tag, plans still complete
+    resp = c.roundtrip(
+        {"op": "plan", "networks": ["lenet5"], "deadline_ms": 50}
+    )
+    check(resp.get("ok") is True, f"deadline plan: {resp}")
+    tag = resp.get("degraded")
+    check(tag is not None and tag["rung"] in
+          ("reduced", "heuristic", "cache-only"),
+          f"deadline plan must be tagged degraded: {resp.get('degraded')}")
+    check(all(p["layers"] for p in resp["report"]["plans"]),
+          "degraded plan must still cover every stage")
+    print(f"[smoke] deadline plan degraded to rung={tag['rung']}")
+
+    resp = c.roundtrip({"op": "stats"})
+    counters = resp["stats"]
+    check(counters["rejected_malformed"] >= 6, f"stats counters: {counters}")
+    check(counters["accepted"] >= 2, f"stats counters: {counters}")
+    c.close()
+    srv.shutdown()
+    print("[smoke] clean shutdown (cache flushed, journal compacted)")
+
+    # --- process 2: warm restart on the same state dir ------------------
+    srv = Server(args.binary, warm_dir)
+    print(f"[smoke] server 2 (warm) on {srv.addr}")
+    c = Client(srv.addr)
+    warm = c.roundtrip({"op": "plan", "networks": ["lenet5"]})
+    check(warm.get("ok") is True, f"warm plan: {warm}")
+    check(plan_stats(warm)["anneal_iters_run"] == 0,
+          f"warm plan must not search: {plan_stats(warm)}")
+    check(plan_stats(warm)["store_misses"] == 0,
+          f"warm plan must hit the cache: {plan_stats(warm)}")
+    c.close()
+    srv.shutdown()
+    print("[smoke] warm restart served the plan fully from cache")
+
+    # --- process 3: fresh state dir, cold-plan determinism --------------
+    srv = Server(args.binary, fresh_dir)
+    print(f"[smoke] server 3 (fresh) on {srv.addr}")
+    c = Client(srv.addr)
+    c.send_raw(json.dumps({"op": "plan", "networks": ["lenet5"]}).encode())
+    fresh_bytes = c.recv_raw()
+    check(fresh_bytes == cold_plan_bytes,
+          "cold plans must be byte-identical across fresh processes")
+    c.close()
+    srv.shutdown()
+    print("[smoke] cold plan byte-identical across processes")
+
+    shutil.rmtree(tmp, ignore_errors=True)
+    print("[smoke] all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    start = time.monotonic()
+    rc = main()
+    print(f"[smoke] {time.monotonic() - start:.1f}s")
+    sys.exit(rc)
