@@ -1267,6 +1267,141 @@ def journal_replay(lines):
     return {"pending": pending, "torn_tail": torn_tail, "next_id": next_id}
 
 
+# ------------------------------------------- optimality certification (§3.12)
+#
+# Mirror of ``rust/src/planner/certify.rs``: the analytic per-layer
+# communication lower bound (arxiv 1911.05662 adapted to the patch/grouping
+# model) plus a tiny brute-force exact grouping solve. The bound is
+# deliberately derived twice — here from the paper's formulas on Python
+# sets, in Rust on ``PixelSet`` bitsets — so the gap pins in CI are
+# cross-language evidence, not one implementation checking itself.
+
+
+def layer_union_pixels(layer: Layer) -> int:
+    """``|U|``: distinct input pixels tapped by any patch — the cold-load
+    floor. Exact under stride / dilation / channel groups because it is
+    computed from the actual dilated tap lattices, not a closed form."""
+    seen: set = set()
+    for p in range(layer.n_patches):
+        seen |= layer.patch_pixels(p)
+    return len(seen)
+
+
+def comm_lower_bound(layer: Layer, acc: Accelerator) -> dict:
+    """Floor on the traffic of *any* valid grouped strategy (DESIGN.md §3.12).
+
+    Pixel domain: ``bound_pixels = max(cold_pixels, memory_pixels)`` where
+
+    * ``cold_pixels = |U|`` — every used pixel is loaded at least once
+      (consecutive-group reuse frees everything else, so this is exact);
+    * ``memory_pixels`` — the 1911.05662-style memory-dependent term: with
+      at most ``P_cap = (size_mem - kernel_elements) / c_in`` resident
+      pixels, reloads are forced once the per-patch private area
+      ``a x b`` (``a = min(s_h, h_span)``, ``b = min(s_w, w_span)``)
+      summed over patches exceeds capacity. Conservative divisor 2 keeps
+      it a true floor for every grouping; it is monotone non-increasing
+      in ``size_mem`` (the property the test suite pins).
+
+    Element domain: input floor ``bound_pixels * c_in`` plus the one-time
+    kernel load; write floor ``n_patches * n_kernels`` (every output leaves
+    exactly once); step floor ``ceil(n_patches / max_patches_per_step)``.
+    """
+    n = layer.n_patches
+    cold = layer_union_pixels(layer)
+    a = min(layer.s_h, layer.h_span)
+    b = min(layer.s_w, layer.w_span)
+    cap_el = max(acc.size_mem - layer.kernel_elements, 0)
+    p_cap = cap_el // layer.c_in if layer.c_in else cap_el
+    memory_px = max(n * a * b - p_cap, 0) // 2
+    bound_px = max(cold, memory_px)
+    input_floor = bound_px * layer.c_in
+    ops_per_patch = layer.kernel_dims_len * layer.n_kernels
+    max_pps = max(acc.nbop_pe // ops_per_patch, 1) if ops_per_patch else max(n, 1)
+    return {
+        "cold_pixels": cold,
+        "memory_pixels": memory_px,
+        "bound_pixels": bound_px,
+        "input_element_floor": input_floor,
+        "kernel_elements": layer.kernel_elements,
+        "load_element_floor": input_floor + layer.kernel_elements,
+        "write_element_floor": n * layer.n_kernels,
+        "min_compute_steps": -(-n // max_pps),
+    }
+
+
+def optimality_gap(achieved: int, bound: int) -> float:
+    """``(achieved - bound) / bound`` as an IEEE double, 0.0 when the bound
+    is zero or already met. Both languages divide the same two exact
+    integers, so the value is bit-identical cross-language."""
+    if bound == 0:
+        return 0.0
+    return max(achieved - bound, 0) / bound
+
+
+def exact_min_loaded_pixels(layer: Layer, g: int, k: int):
+    """Brute-force exact optimum of the grouping problem: the minimum
+    ``grouping_loaded_pixels`` over all ordered partitions of the patch set
+    into exactly ``k`` non-empty groups of size <= ``g`` (the same space
+    ``optimizer::exact::solve_exact`` searches). Returns
+    ``(best_cost, best_groups)`` or ``None`` if the shape is infeasible.
+
+    Exponential and meant for micro instances only (n <= ~8); within-group
+    order is quotiented out because a group's footprint is order-free.
+    """
+    from itertools import combinations
+
+    n = layer.n_patches
+    if k * g < n or k > n or n == 0:
+        return None
+    pix = [layer.patch_pixels(p) for p in range(n)]
+    best_cost = None
+    best_groups = None
+
+    def dfs(remaining, groups, prev_fp, cost):
+        nonlocal best_cost, best_groups
+        if best_cost is not None and cost >= best_cost:
+            return
+        slots_left = k - len(groups)
+        if slots_left == 0:
+            if not remaining:
+                best_cost, best_groups = cost, [list(gr) for gr in groups]
+            return
+        rem = sorted(remaining)
+        lo = max(1, len(rem) - (slots_left - 1) * g)
+        hi = min(g, len(rem) - (slots_left - 1))
+        for size in range(lo, hi + 1):
+            for combo in combinations(rem, size):
+                fp = set()
+                for p in combo:
+                    fp |= pix[p]
+                dfs(
+                    remaining - set(combo),
+                    groups + [combo],
+                    fp,
+                    cost + len(fp - prev_fp),
+                )
+
+    dfs(frozenset(range(n)), [], set(), 0)
+    if best_cost is None:
+        return None
+    return best_cost, best_groups
+
+
+def certify_stage(layer: Layer, acc: Accelerator, group_size: int) -> dict:
+    """Bound + portfolio replay for one planning problem: what the Rust
+    ``certify`` CLI reports per stage, re-derived independently. Gap is in
+    the pixel domain (the planner's race objective)."""
+    winner, achieved_px, _ = analytic_portfolio(layer, group_size)
+    bound = comm_lower_bound(layer, acc)
+    return {
+        "winner": winner,
+        "achieved_pixels": achieved_px,
+        "bound_pixels": bound["bound_pixels"],
+        "optimality_gap": optimality_gap(achieved_px, bound["bound_pixels"]),
+        "bound": bound,
+    }
+
+
 def backoff_schedule(attempts: int, base_delay_us: int, seed: int):
     """Mirror of ``planner::recovery::backoff_schedule``, in microseconds:
     for each of the ``attempts - 1`` waits, the exponential base delay plus

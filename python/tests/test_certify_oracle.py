@@ -1,0 +1,234 @@
+"""Certification oracle suite — the Python half of the cross-language gap
+gate (mirrors ``rust/tests/certify.rs``).
+
+Pins the analytic communication floor, the portfolio winner and the exact
+``optimality_gap`` (IEEE-double, bit-identical across languages because both
+sides divide the same two integers) for every stage of the preset zoo, and
+proves both lenet5-scale micro stages optimal by brute force. These are the
+CI regression pins: a gap that drifts above its recorded value fails here
+even on a checkout with no Rust toolchain.
+"""
+
+import pytest
+
+import oracle_sim as o
+
+# The preset zoo, mirrored from ``rust/src/config/presets.rs``.
+LENET5 = [
+    o.Layer(1, 32, 32, 5, 5, 6),
+    o.Layer(6, 14, 14, 5, 5, 16),
+]
+RESNET8 = [
+    o.Layer(3, 34, 34, 3, 3, 16),
+    o.Layer(16, 18, 18, 3, 3, 16),
+    o.Layer(16, 18, 18, 3, 3, 16),
+]
+MOBILENET_SLIM = [
+    o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4),
+    o.Layer(4, 8, 8, 1, 1, 8),
+    o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2),
+]
+LENET5_MICRO = [
+    o.Layer(1, 6, 6, 5, 5, 6),
+    o.Layer(6, 4, 4, 3, 3, 16),
+]
+
+# Pinned certification results at the planner's default group size (4):
+# (stage, bound_pixels, winner, achieved_pixels, optimality_gap). The gap
+# floats are exact quotients of the pinned integers — any change to the
+# bound, the portfolio, or the orderings shows up here as a regression.
+ZOO_PINS = {
+    "lenet5": [
+        ("conv1", 1024, "greedy", 2385, 1.3291015625),
+        ("conv2", 196, "hilbert", 324, 0.6530612244897959),
+    ],
+    "resnet8": [
+        ("conv1", 1156, "greedy", 1988, 0.7197231833910035),
+        ("conv2a", 324, "greedy", 508, 0.5679012345679012),
+        ("conv2b", 324, "greedy", 508, 0.5679012345679012),
+    ],
+    "mobilenet_slim": [
+        ("dw3", 289, "hilbert", 325, 0.1245674740484429),
+        ("pw1", 64, "row-by-row", 64, 0.0),
+        ("dil3", 144, "greedy", 165, 0.14583333333333334),
+    ],
+}
+ZOO = {"lenet5": LENET5, "resnet8": RESNET8, "mobilenet_slim": MOBILENET_SLIM}
+
+
+def test_zoo_gap_pins_hold():
+    for net, layers in ZOO.items():
+        for layer, (stage, bound, winner, achieved, gap) in zip(
+            layers, ZOO_PINS[net]
+        ):
+            acc = o.for_group_size(layer, 4)
+            cert = o.certify_stage(layer, acc, 4)
+            assert cert["bound_pixels"] == bound, f"{net}/{stage}"
+            assert cert["winner"] == winner, f"{net}/{stage}"
+            assert cert["achieved_pixels"] == achieved, f"{net}/{stage}"
+            # Exact float equality is intentional: the gap is a quotient of
+            # the two pinned integers, deterministic on both sides.
+            assert cert["optimality_gap"] == gap, f"{net}/{stage}"
+
+
+def test_zoo_memory_terms_pinned():
+    """The memory-dependent half of the bound, pinned so a silent change to
+    the capacity model cannot hide behind a cold term that still dominates."""
+    memory_pins = {
+        "lenet5": [330, 0],
+        "resnet8": [483, 108, 108],
+        "mobilenet_slim": [108, 26, 12],
+    }
+    for net, layers in ZOO.items():
+        for layer, mem_px in zip(layers, memory_pins[net]):
+            b = o.comm_lower_bound(layer, o.for_group_size(layer, 4))
+            assert b["memory_pixels"] == mem_px, f"{net}: {b['memory_pixels']}"
+            assert b["bound_pixels"] == max(b["cold_pixels"], mem_px)
+
+
+def test_bound_is_a_true_floor_for_every_ordering():
+    """Property: the pixel floor never exceeds the loads of *any* grouped
+    ordering, on every zoo layer at several group sizes."""
+    for layers in ZOO.values():
+        for layer in layers:
+            for g in (1, 2, 4, 8):
+                bound = o.comm_lower_bound(layer, o.for_group_size(layer, g))
+                for name, order_fn in o.ORDERINGS.items():
+                    groups = o.order_to_groups(order_fn(layer), g)
+                    loads = o.grouping_loaded_pixels(layer, groups)
+                    assert bound["bound_pixels"] <= loads, (
+                        f"{name} g={g}: floor {bound['bound_pixels']} "
+                        f"above {loads}"
+                    )
+                greedy = o.greedy_groups(layer, g)
+                loads = o.grouping_loaded_pixels(layer, greedy)
+                assert bound["bound_pixels"] <= loads
+
+
+def test_bound_is_monotone_non_increasing_in_size_mem():
+    for layers in ZOO.values():
+        for layer in layers:
+            base = o.for_group_size(layer, 4)
+            prev = None
+            for mem in (0, 16, 64, 256, 1024, base.size_mem, 1 << 20):
+                acc = o.Accelerator(
+                    nbop_pe=base.nbop_pe,
+                    t_acc=base.t_acc,
+                    size_mem=mem,
+                    t_l=base.t_l,
+                    t_w=base.t_w,
+                )
+                b = o.comm_lower_bound(layer, acc)["bound_pixels"]
+                if prev is not None:
+                    assert b <= prev, f"bound grew at size_mem={mem}"
+                prev = b
+            # With unbounded memory only the cold floor remains.
+            assert prev == o.layer_union_pixels(layer)
+
+
+def test_element_floors_follow_the_pixel_bound():
+    layer = o.Layer(2, 6, 6, 3, 3, 3)
+    acc = o.for_group_size(layer, 4)
+    b = o.comm_lower_bound(layer, acc)
+    assert b["input_element_floor"] == b["bound_pixels"] * layer.c_in
+    assert b["load_element_floor"] == b["input_element_floor"] + layer.kernel_elements
+    assert b["write_element_floor"] == layer.n_patches * layer.n_kernels
+    assert b["min_compute_steps"] == -(-layer.n_patches // 4)
+
+
+def test_optimality_gap_edge_cases():
+    assert o.optimality_gap(0, 0) == 0.0
+    assert o.optimality_gap(10, 0) == 0.0
+    assert o.optimality_gap(10, 10) == 0.0
+    assert o.optimality_gap(15, 10) == 0.5
+    # A bound above the achieved value (impossible for a true floor, but the
+    # function must stay total) clamps to zero rather than going negative.
+    assert o.optimality_gap(5, 10) == 0.0
+
+
+def test_lenet5_micro_certifies_exactly_at_group_two():
+    """The acceptance pin: both micro stages are provably optimal at g=2 —
+    the exact optimum equals both the analytic floor and the portfolio
+    winner, so the gap is exactly zero."""
+    pins = [(36, [[0, 1], [2, 3]]), (16, None)]
+    for layer, (opt, want_groups) in zip(LENET5_MICRO, pins):
+        assert layer.n_patches == 4
+        acc = o.for_group_size(layer, 2)
+        cert = o.certify_stage(layer, acc, 2)
+        exact = o.exact_min_loaded_pixels(layer, 2, 2)
+        assert exact is not None
+        best_cost, best_groups = exact
+        assert best_cost == opt
+        assert cert["bound_pixels"] == opt, "the floor is tight here"
+        assert cert["achieved_pixels"] == opt, "the portfolio finds it"
+        assert cert["optimality_gap"] == 0.0
+        if want_groups is not None:
+            assert best_groups == want_groups
+        # The exact groups must be a valid partition achieving the cost.
+        flat = sorted(p for gr in best_groups for p in gr)
+        assert flat == list(range(layer.n_patches))
+        assert o.grouping_loaded_pixels(layer, best_groups) == opt
+
+
+def test_exact_search_matches_enumeration_on_a_tiny_instance():
+    """The pruned DFS agrees with dumb enumeration over every ordering of a
+    small patch set — guards the branch-and-bound pruning logic."""
+    from itertools import permutations
+
+    layer = o.Layer(1, 4, 5, 3, 3, 2)  # 2x3 = 6 patches
+    assert layer.n_patches == 6
+    g, k = 2, 3
+    exact = o.exact_min_loaded_pixels(layer, g, k)
+    assert exact is not None
+    best = None
+    for perm in permutations(range(layer.n_patches)):
+        groups = [list(perm[i : i + g]) for i in range(0, len(perm), g)]
+        cost = o.grouping_loaded_pixels(layer, groups)
+        best = cost if best is None else min(best, cost)
+    assert exact[0] == best
+
+
+def test_exact_search_reports_infeasible_shapes():
+    layer = o.Layer(1, 4, 4, 3, 3, 2)  # 4 patches
+    assert o.exact_min_loaded_pixels(layer, 1, 3) is None  # k*g < n
+    assert o.exact_min_loaded_pixels(layer, 2, 5) is None  # k > n
+    # Exactly-covering shapes are feasible.
+    assert o.exact_min_loaded_pixels(layer, 2, 2) is not None
+    assert o.exact_min_loaded_pixels(layer, 4, 1) is not None
+
+
+def test_exact_optimum_is_bracketed_by_bound_and_portfolio():
+    """bound <= exact <= portfolio winner, for assorted micro layers — the
+    ordering that makes a certificate meaningful."""
+    micro_layers = [
+        o.Layer(1, 4, 4, 3, 3, 2),  # 4 patches
+        o.Layer(2, 5, 4, 3, 3, 4),  # 3x2 = 6 patches
+        o.Layer(1, 6, 6, 4, 4, 3, s_h=2, s_w=2),  # 2x2 = 4 patches
+    ]
+    for layer in micro_layers:
+        g = 2
+        k = -(-layer.n_patches // g)
+        acc = o.for_group_size(layer, g)
+        bound = o.comm_lower_bound(layer, acc)["bound_pixels"]
+        exact = o.exact_min_loaded_pixels(layer, g, k)
+        assert exact is not None
+        winner, achieved, _ = o.analytic_portfolio(layer, g)
+        assert bound <= exact[0] <= achieved, (
+            f"{layer}: bound {bound}, exact {exact[0]}, achieved {achieved}"
+        )
+
+
+def test_cold_floor_matches_hand_computed_unions():
+    # Dense 5x5 kernel, stride 1 on 32x32: every input pixel is tapped.
+    assert o.layer_union_pixels(o.Layer(1, 32, 32, 5, 5, 6)) == 1024
+    # Stride-2 depthwise 3x3 on 18x18: the 17x17 reachable prefix.
+    assert (
+        o.layer_union_pixels(
+            o.Layer(4, 18, 18, 3, 3, 4, s_h=2, s_w=2, groups=4)
+        )
+        == 289
+    )
+    # Dilation-2 3x3 on 12x12: the taps cover all 144 pixels.
+    assert (
+        o.layer_union_pixels(o.Layer(8, 12, 12, 3, 3, 8, d_h=2, d_w=2)) == 144
+    )

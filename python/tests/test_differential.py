@@ -39,13 +39,15 @@ def _load_cases():
         )
     with open(path) as f:
         doc = json.load(f)
-    # v4 adds the multi-resource expectations (sampled k DMA channels x m
-    # compute units, image batching, per-resource busy totals) and switches
-    # the faulted replays to stage-decorrelated streams, on top of v3's
-    # fault-injected expectations; an older file is a stale artifact from
-    # before the multi-channel PR.
-    assert doc.get("version") == 4, (
-        f"interchange version {doc.get('version')} != 4 - stale "
+    # v5 adds per-stage certification expectations — the element-domain
+    # communication floor (`comm_lower_bound`) and `optimality_gap`, both
+    # replayed bit-exactly by the oracle's independent bound — on top of
+    # v4's multi-resource expectations (sampled k DMA channels x m compute
+    # units, image batching, per-resource busy totals) and stage-decorrelated
+    # fault streams; an older file is a stale artifact from before the
+    # certification PR.
+    assert doc.get("version") == 5, (
+        f"interchange version {doc.get('version')} != 5 - stale "
         f"{path}; re-run `cargo test` to regenerate it"
     )
     # Provenance gate: a green differential signal must mean the *Rust
@@ -85,13 +87,36 @@ def test_python_oracle_matches_rust_simulator():
                 f"seed {seed}: total duration {got['total_duration']} != "
                 f"{want['total_duration']}"
             )
-        for res, exp in zip(got["per_stage"], want["per_stage"]):
+        for st, res, exp in zip(case["stages"], got["per_stage"], want["per_stage"]):
             for field in ("duration", "loaded_elements", "n_steps"):
                 g = getattr(res, field)
                 if g != exp[field]:
                     mismatches.append(
                         f"seed {seed} stage {exp['name']}: {field} {g} != {exp[field]}"
                     )
+            # v5 certification expectations: the oracle's independent bound
+            # must reproduce the Rust floor and gap bit-exactly (the gap is a
+            # quotient of the same two integers on both sides, so float
+            # equality is deterministic).
+            layer = o.layer_from_json(st["layer"])
+            acc = o.accelerator_from_json(st["accelerator"])
+            floor = o.comm_lower_bound(layer, acc)["load_element_floor"]
+            if exp["comm_lower_bound"] != floor:
+                mismatches.append(
+                    f"seed {seed} stage {exp['name']}: comm_lower_bound "
+                    f"{exp['comm_lower_bound']} != oracle {floor}"
+                )
+            gap = o.optimality_gap(exp["loaded_elements"], floor)
+            if exp["optimality_gap"] != gap:
+                mismatches.append(
+                    f"seed {seed} stage {exp['name']}: optimality_gap "
+                    f"{exp['optimality_gap']} != oracle {gap}"
+                )
+            if floor > exp["loaded_elements"]:
+                mismatches.append(
+                    f"seed {seed} stage {exp['name']}: floor {floor} above "
+                    f"simulated loads {exp['loaded_elements']}"
+                )
     assert not mismatches, "\n".join(mismatches)
 
 

@@ -214,10 +214,31 @@ fn all_networks() -> Vec<NetworkPreset> {
                 },
             ],
         },
+        NetworkPreset {
+            name: "lenet5_micro".into(),
+            description:
+                "LeNet-5 trunk at micro scale (4-patch stages) for exact certification"
+                    .into(),
+            stages: vec![
+                NetworkStagePreset {
+                    name: "c1".into(),
+                    layer: ConvLayer::new(1, 6, 6, 5, 5, 6, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 1,
+                },
+                NetworkStagePreset {
+                    name: "c2".into(),
+                    layer: ConvLayer::new(6, 4, 4, 3, 3, 16, 1, 1).unwrap(),
+                    pool_after: false,
+                    pad_after: 0,
+                },
+            ],
+        },
     ]
 }
 
-/// Look up a network preset by name (`lenet5`, `resnet8`, `mobilenet_slim`).
+/// Look up a network preset by name (`lenet5`, `resnet8`, `mobilenet_slim`,
+/// `lenet5_micro`).
 pub fn network_preset(name: &str) -> Option<NetworkPreset> {
     all_networks().into_iter().find(|p| p.name == name)
 }

@@ -6,6 +6,9 @@
 //! * `optimize`      — find an optimized strategy (exact / polished), export CSV;
 //! * `plan-network`  — plan every layer of a network preset (portfolio race
 //!   + strategy cache) and report the end-to-end simulated duration;
+//! * `certify`       — analytic communication lower bounds and per-stage
+//!   optimality gaps for a planned network; `--exact` adds budgeted exact
+//!   solves (node-capped, clean `unsolved` on exhaustion — never hangs);
 //! * `plan-batch`    — plan several networks (presets and/or TOML layer
 //!   files) in one call: cross-network dedup, one shared race pool, sharded
 //!   persistent strategy cache;
@@ -51,6 +54,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(rest),
         "optimize" => cmd_optimize(rest),
         "plan-network" => cmd_plan_network(rest),
+        "certify" => cmd_certify(rest),
         "plan-batch" => cmd_plan_batch(rest),
         "plan-server" => cmd_plan_server(rest),
         "figures" => cmd_figures(rest),
@@ -82,6 +86,7 @@ fn print_usage() {
          \x20 simulate      run a strategy on a layer and report δ / memory\n\
          \x20 optimize      search for an optimal strategy (§5 problem)\n\
          \x20 plan-network  plan every layer of a network preset (cached portfolio race)\n\
+         \x20 certify       communication lower bounds + optimality gaps for a plan (--exact: budgeted proofs)\n\
          \x20 plan-batch    plan several networks at once (dedup + sharded strategy cache)\n\
          \x20 plan-server   long-lived planning service (warm cache, deadlines, crash-safe journal)\n\
          \x20 figures       regenerate the paper's Figures 11/12/13 under figures/\n\
@@ -371,6 +376,83 @@ fn cmd_plan_network(argv: &[String]) -> Result<(), CliError> {
         println!("{}", plan_to_json(&plan).to_string_pretty());
     } else {
         print!("{}", format_plan_table(&plan));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- certify
+
+fn cmd_certify(argv: &[String]) -> Result<(), CliError> {
+    use convoffload::planner::{certify_network, certify_to_json, format_certify_table, CertifyOptions};
+    let specs = vec![
+        FlagSpec { name: "group", help: "per-layer group size bound", takes_value: true, default: Some("4") },
+        FlagSpec { name: "seed", help: "portfolio base seed", takes_value: true, default: Some("2026") },
+        FlagSpec { name: "iters", help: "anneal iterations per lane", takes_value: true, default: Some("50000") },
+        FlagSpec { name: "starts", help: "number of anneal lanes", takes_value: true, default: Some("3") },
+        FlagSpec { name: "overlap", help: "DMA/compute overlap: sequential or double-buffered", takes_value: true, default: Some("sequential") },
+        FlagSpec { name: "dma-channels", help: "DMA channels k for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
+        FlagSpec { name: "compute-units", help: "compute units m for the double-buffered objective (default 1)", takes_value: true, default: Some("1") },
+        FlagSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: Some("0") },
+        FlagSpec { name: "exact", help: "attempt budgeted exact solves on small stages (clean 'unsolved' on budget exhaustion)", takes_value: false, default: None },
+        FlagSpec { name: "max-patches", help: "largest n_patches the exact search is attempted on", takes_value: true, default: Some("12") },
+        FlagSpec { name: "nodes", help: "deterministic node budget for the exact search", takes_value: true, default: Some("2000000") },
+        FlagSpec { name: "json", help: "emit the certification report as JSON", takes_value: false, default: None },
+        FlagSpec { name: "help", help: "show help", takes_value: false, default: None },
+    ];
+    let args = invalid(cli::parse(argv, &specs))?;
+    if args.get_bool("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            cli::help(
+                "certify <network>",
+                "communication lower bounds and optimality gaps for a planned network",
+                &specs
+            )
+        );
+        println!("networks:");
+        for p in list_network_presets() {
+            println!("  {:<14} {} ({} stages)", p.name, p.description, p.stages.len());
+        }
+        return if args.get_bool("help") {
+            Ok(())
+        } else {
+            Err(CliError::Invalid(
+                "missing network name (e.g. `certify lenet5_micro --exact --group 2`)".into(),
+            ))
+        };
+    }
+    let name = &args.positional[0];
+    let preset = network_preset(name).ok_or_else(|| {
+        CliError::Invalid(format!(
+            "unknown network '{name}' (see `convoffload certify --help`)"
+        ))
+    })?;
+    let options = PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(
+            invalid(args.get_usize("group"))?.unwrap_or(4).max(1),
+        ),
+        seed: invalid(args.get_u64("seed"))?.unwrap_or(2026),
+        anneal_iters: invalid(args.get_u64("iters"))?.unwrap_or(50_000),
+        anneal_starts: invalid(args.get_usize("starts"))?.unwrap_or(3).max(1),
+        threads: invalid(args.get_usize("threads"))?.unwrap_or(0),
+        overlap: invalid(OverlapMode::from_str(args.get("overlap").unwrap_or("sequential")))?,
+        dma_channels: invalid(args.get_usize("dma-channels"))?.unwrap_or(1).max(1),
+        compute_units: invalid(args.get_usize("compute-units"))?.unwrap_or(1).max(1),
+    };
+    // Certification is read-only w.r.t. search: plan fresh (no cache), then
+    // bound / prove the winners.
+    let plan = NetworkPlanner::new(options).plan(&preset)?;
+    let certify_options = CertifyOptions {
+        exact: args.get_bool("exact"),
+        exact_max_patches: invalid(args.get_usize("max-patches"))?.unwrap_or(12),
+        node_budget: invalid(args.get_u64("nodes"))?.unwrap_or(2_000_000),
+        ..CertifyOptions::default()
+    };
+    let report = certify_network(&plan, &certify_options);
+    if args.get_bool("json") {
+        println!("{}", certify_to_json(&report).to_string_pretty());
+    } else {
+        print!("{}", format_certify_table(&report));
     }
     Ok(())
 }

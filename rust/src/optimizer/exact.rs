@@ -20,6 +20,37 @@ use std::time::{Duration, Instant};
 use crate::conv::{ConvLayer, PatchId};
 use crate::tensor::PixelSet;
 
+/// Budget for [`solve_exact_with`]: a deterministic node cap (checked every
+/// node, so two runs with the same cap visit the same prefix of the search
+/// tree) plus a wall-clock safety net (checked sparsely).
+#[derive(Debug, Clone, Copy)]
+pub struct ExactLimits {
+    /// Wall-clock safety net (coarse; the node cap is the reproducible one).
+    pub time: Duration,
+    /// Maximum DFS nodes to expand before giving up.
+    pub nodes: u64,
+}
+
+impl Default for ExactLimits {
+    fn default() -> Self {
+        ExactLimits { time: Duration::from_secs(30), nodes: 2_000_000 }
+    }
+}
+
+/// Outcome of a budgeted exact search.
+#[derive(Debug, Clone)]
+pub struct ExactSearch {
+    /// Best grouping found (`None` when there is no incumbent: no MIP start
+    /// and the budget expired before the first leaf, or the shape is
+    /// infeasible).
+    pub groups: Option<Vec<Vec<PatchId>>>,
+    /// True iff the search space was exhausted — the result is *proven*
+    /// optimal (or proven infeasible when `groups` is `None`).
+    pub complete: bool,
+    /// DFS nodes expanded.
+    pub nodes: u64,
+}
+
 /// Exact solve. Returns `None` if the wall-clock budget is exhausted before
 /// the search completes (caller falls back to polish).
 pub fn solve_exact(
@@ -29,9 +60,30 @@ pub fn solve_exact(
     budget: Duration,
     mip_start: Option<&[Vec<PatchId>]>,
 ) -> Option<Vec<Vec<PatchId>>> {
+    let limits = ExactLimits { time: budget, nodes: u64::MAX };
+    let r = solve_exact_with(layer, g, k, limits, mip_start);
+    if r.complete {
+        r.groups
+    } else {
+        None
+    }
+}
+
+/// Budgeted exact solve: like [`solve_exact`] but with a deterministic node
+/// cap and a result that distinguishes "proven optimal" (`complete`) from
+/// "best incumbent when the budget ran out". The certification path
+/// ([`crate::planner::certify`]) only trusts `complete` results.
+pub fn solve_exact_with(
+    layer: &ConvLayer,
+    g: usize,
+    k: usize,
+    limits: ExactLimits,
+    mip_start: Option<&[Vec<PatchId>]>,
+) -> ExactSearch {
     let n = layer.n_patches();
     if k * g < n || k > n {
-        return None;
+        // Trivially exhausted: no ordered partition of this shape exists.
+        return ExactSearch { groups: None, complete: true, nodes: 0 };
     }
     let patch_pixels: Vec<PixelSet> =
         (0..n as u32).map(|p| layer.patch_pixels(p)).collect();
@@ -53,7 +105,8 @@ pub fn solve_exact(
         k,
         best_cost,
         best: best.clone(),
-        deadline: Instant::now() + budget,
+        deadline: Instant::now() + limits.time,
+        node_budget: limits.nodes,
         timed_out: false,
         nodes: 0,
     };
@@ -75,10 +128,7 @@ pub fn solve_exact(
         0,
     );
 
-    if dfs.timed_out {
-        return None;
-    }
-    dfs.best
+    ExactSearch { groups: dfs.best, complete: !dfs.timed_out, nodes: dfs.nodes }
 }
 
 /// Cost of a complete grouping (duplicated from `objective` on raw sets to
@@ -109,6 +159,7 @@ struct Dfs {
     best_cost: usize,
     best: Option<Vec<Vec<PatchId>>>,
     deadline: Instant,
+    node_budget: u64,
     timed_out: bool,
     nodes: u64,
 }
@@ -135,7 +186,11 @@ impl Dfs {
         cur_len: usize,
     ) {
         self.nodes += 1;
-        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
+        // Node cap first (checked every node: reproducible across machines),
+        // wall clock as a sparse safety net.
+        if self.nodes > self.node_budget
+            || (self.nodes % 4096 == 0 && Instant::now() > self.deadline)
+        {
             self.timed_out = true;
         }
         if self.timed_out {
@@ -377,5 +432,39 @@ mod tests {
         let l = ConvLayer::square(1, 8, 3, 1); // 36 patches — way too big
         let got = solve_exact(&l, 4, 9, Duration::from_millis(10), None);
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn node_budget_is_deterministic_and_keeps_the_incumbent() {
+        let l = ConvLayer::square(1, 6, 3, 1); // 16 patches — needs pruning
+        let start = strategy::row_by_row(&l, 4).groups;
+        let limits = ExactLimits { time: Duration::from_secs(120), nodes: 500 };
+        let a = solve_exact_with(&l, 4, 4, limits, Some(&start));
+        let b = solve_exact_with(&l, 4, 4, limits, Some(&start));
+        assert!(!a.complete, "500 nodes cannot exhaust 16 patches");
+        assert_eq!(a.nodes, b.nodes, "node-capped search must be reproducible");
+        assert_eq!(a.groups, b.groups);
+        let got = a.groups.expect("MIP start guarantees an incumbent");
+        assert!(grouping_loads(&l, &got) <= grouping_loads(&l, &start));
+    }
+
+    #[test]
+    fn infeasible_shape_is_proven_complete() {
+        let l = ConvLayer::square(1, 5, 3, 1); // 9 patches
+        let r = solve_exact_with(&l, 2, 2, ExactLimits::default(), None);
+        assert!(r.complete && r.groups.is_none());
+        assert_eq!(r.nodes, 0);
+    }
+
+    #[test]
+    fn budgeted_complete_run_matches_the_unbudgeted_path() {
+        let l = ConvLayer::square(1, 4, 3, 1); // 4 patches
+        let r = solve_exact_with(&l, 2, 2, ExactLimits::default(), None);
+        assert!(r.complete);
+        let plain = solve_exact(&l, 2, 2, Duration::from_secs(30), None).unwrap();
+        assert_eq!(
+            grouping_loads(&l, r.groups.as_ref().unwrap()),
+            grouping_loads(&l, &plain)
+        );
     }
 }

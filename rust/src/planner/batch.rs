@@ -36,6 +36,7 @@ use crate::sim::{Network, Stage};
 use crate::util::pool;
 
 use super::cache::{CacheKey, CachedStrategy, StrategyStore};
+use super::certify;
 use super::portfolio::{portfolio_entries, run_entry_cancel, PortfolioEntry};
 use super::recovery::{degrade_for_shrink, ChaosSpec, DegradeOutcome};
 use super::shard::ShardedStrategyCache;
@@ -405,6 +406,7 @@ pub(crate) fn assemble_network(
             pool_after: sp.pool_after,
             pad_after: sp.pad_after,
         })?;
+        let lb = certify::comm_lower_bound(&sp.layer, &ctx.acc);
         layers.push(LayerPlan {
             stage: sp.name.to_string(),
             layer: sp.layer,
@@ -413,6 +415,11 @@ pub(crate) fn assemble_network(
             strategy: entry.strategy.clone(),
             winner: entry.winner.clone(),
             loaded_pixels: entry.loaded_pixels,
+            comm_lower_bound: lb.bound_pixels,
+            optimality_gap: certify::optimality_gap(
+                entry.loaded_pixels,
+                lb.bound_pixels,
+            ),
             duration: 0, // filled from the simulation below
             sequential_duration: 0,
             cache_hit: hit,
@@ -425,6 +432,11 @@ pub(crate) fn assemble_network(
     }
     Ok(NetworkPlan {
         network: preset.name.to_string(),
+        total_comm_lower_bound: layers.iter().map(|l| l.comm_lower_bound).sum(),
+        worst_optimality_gap: layers
+            .iter()
+            .map(|l| l.optimality_gap)
+            .fold(0.0, f64::max),
         layers,
         total_duration: report.total_duration,
         total_sequential_duration: report.total_sequential_duration,
@@ -529,6 +541,7 @@ pub(crate) fn assemble_network_faulted(
         } else {
             cache_misses += 1;
         }
+        let lb = certify::comm_lower_bound(&sp.layer, &ctx.acc);
         layers.push(LayerPlan {
             stage: sp.name.to_string(),
             layer: sp.layer,
@@ -537,6 +550,11 @@ pub(crate) fn assemble_network_faulted(
             strategy: entry.strategy.clone(),
             winner: entry.winner.clone(),
             loaded_pixels: entry.loaded_pixels,
+            comm_lower_bound: lb.bound_pixels,
+            optimality_gap: certify::optimality_gap(
+                entry.loaded_pixels,
+                lb.bound_pixels,
+            ),
             duration: sr.duration,
             sequential_duration: sr.sequential_duration,
             cache_hit: *hit,
@@ -545,6 +563,14 @@ pub(crate) fn assemble_network_faulted(
     Ok((
         NetworkPlan {
             network: preset.name.to_string(),
+            total_comm_lower_bound: layers
+                .iter()
+                .map(|l| l.comm_lower_bound)
+                .sum(),
+            worst_optimality_gap: layers
+                .iter()
+                .map(|l| l.optimality_gap)
+                .fold(0.0, f64::max),
             layers,
             total_duration: report.total_duration,
             total_sequential_duration: report.total_sequential_duration,
@@ -603,6 +629,9 @@ pub struct BatchStats {
 pub struct BatchReport {
     /// One plan per request, in input order.
     pub plans: Vec<NetworkPlan>,
+    /// Largest per-stage pixel-domain optimality gap across every plan
+    /// (0.0 for an empty batch) — the batch-level certification headline.
+    pub worst_gap: f64,
     /// Batch-level dedup / cache / effort accounting.
     pub stats: BatchStats,
 }
@@ -767,7 +796,11 @@ impl BatchPlanner {
             degraded_stages,
             deadline_starved: res.deadline_starved,
         };
-        Ok(BatchReport { plans, stats })
+        let worst_gap = plans
+            .iter()
+            .map(|p| p.worst_optimality_gap)
+            .fold(0.0, f64::max);
+        Ok(BatchReport { plans, worst_gap, stats })
     }
 }
 

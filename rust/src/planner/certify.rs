@@ -1,0 +1,531 @@
+//! Optimality certification (DESIGN.md §3.12): analytic communication lower
+//! bounds plus budgeted exact solves over a finished plan.
+//!
+//! Two independent certificates, both **read-only with respect to search**
+//! (they never influence which portfolio lane wins, so every pinned
+//! baseline stays bit-identical):
+//!
+//! * [`comm_lower_bound`] — the layer-level memory-traffic floor of
+//!   *Communication Lower Bound in Convolution Accelerators* (arxiv
+//!   1911.05662), adapted to this codebase's patch/grouping model. In the
+//!   Eq. 15 cost model (`Σ_k |pix(g_k) ∖ pix(g_{k−1})|`) the floor has two
+//!   terms: the exact **cold floor** `|U|` (every pixel tapped by some
+//!   patch is loaded at least once — consecutive-group reuse frees
+//!   everything else) and the paper's **memory-dependent** term (forced
+//!   reloads once the per-patch private areas exceed the on-chip pixel
+//!   capacity), kept in its conservative variant so it degrades gracefully
+//!   under stride / dilation / channel groups. The bound is monotone
+//!   non-increasing in `size_MEM`, as the property suites in both languages
+//!   pin.
+//! * [`certify_network`] — for small stages, a **proven optimum**: the
+//!   specialized branch & bound ([`crate::optimizer::exact`]) run to
+//!   completion under a deterministic node budget, cross-checked on micro
+//!   instances by the generic §5 MILP
+//!   ([`crate::optimizer::model_builder`] + [`crate::solver`]) with a
+//!   vacuous reload bound (`nb_data_reload = k`), so the two encodings
+//!   search the same space and must land on the same optimum.
+//!
+//! Budget discipline: the exact path is bounded by **nodes first** (checked
+//! every node, so runs are reproducible across machines) with wall-clock as
+//! a coarse safety net; an exhausted budget is a clean
+//! [`ExactStatus::Unsolved`], never a hang — CI can run `certify --exact`
+//! unconditionally.
+
+use std::time::Duration;
+
+use crate::conv::ConvLayer;
+use crate::ilp::SolveStatus;
+use crate::optimizer::exact::{solve_exact_with, ExactLimits};
+use crate::optimizer::model_builder::{build_s1_model, encode_mip_start};
+use crate::optimizer::objective::grouping_loads;
+use crate::platform::Accelerator;
+use crate::solver::{solve_milp, BranchBoundOptions};
+use crate::tensor::PixelSet;
+use crate::util::json::Json;
+
+use super::{LayerPlan, NetworkPlan};
+
+/// The analytic per-layer communication floor, in both domains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommLowerBound {
+    /// `|U|`: distinct input pixels tapped by any patch — exact under
+    /// stride / dilation / groups because it is computed from the actual
+    /// dilated tap lattices, not a closed form.
+    pub cold_pixels: u64,
+    /// The 1911.05662-style memory-dependent term: with at most
+    /// `P_cap = (size_MEM − kernel_elements) / C_in` resident pixels,
+    /// reloads are forced once the per-patch private areas
+    /// (`min(s_h, h_span) × min(s_w, w_span)` each) exceed capacity;
+    /// conservative divisor 2 keeps it a true floor for every grouping.
+    pub memory_pixels: u64,
+    /// `max(cold_pixels, memory_pixels)` — the pixel-domain floor on the
+    /// planner's race objective (`loaded_pixels`).
+    pub bound_pixels: u64,
+    /// `bound_pixels × C_in` — input element traffic floor.
+    pub input_element_floor: u64,
+    /// One-time kernel load (step 1 of any strategy).
+    pub kernel_elements: u64,
+    /// `input_element_floor + kernel_elements` — floor on a stage's
+    /// `loaded_elements` (the simulator's element-domain load counter).
+    pub load_element_floor: u64,
+    /// `n_patches × C_out` — every output value leaves the chip exactly
+    /// once.
+    pub write_element_floor: u64,
+    /// `⌈n_patches / max_patches_per_step⌉` — no strategy computes in fewer
+    /// steps than the PE budget admits.
+    pub min_compute_steps: u64,
+}
+
+/// Compute the communication floor of `layer` on `acc`.
+pub fn comm_lower_bound(layer: &ConvLayer, acc: &Accelerator) -> CommLowerBound {
+    let n = layer.n_patches() as u64;
+    let mut union = PixelSet::empty(layer.n_pixels());
+    for p in layer.all_patches() {
+        layer.add_patch_pixels(&mut union, p);
+    }
+    let cold = union.len() as u64;
+
+    let a = layer.s_h.min(layer.h_span()) as u64;
+    let b = layer.s_w.min(layer.w_span()) as u64;
+    let kernel_elements = layer.kernel_elements() as u64;
+    let cap_el = acc.size_mem.saturating_sub(kernel_elements);
+    let p_cap = if layer.c_in > 0 { cap_el / layer.c_in as u64 } else { cap_el };
+    let memory_px = (n * a * b).saturating_sub(p_cap) / 2;
+
+    let bound_px = cold.max(memory_px);
+    let input_floor = bound_px * layer.c_in as u64;
+    let max_pps = acc.max_patches_per_step(layer).max(1) as u64;
+    CommLowerBound {
+        cold_pixels: cold,
+        memory_pixels: memory_px,
+        bound_pixels: bound_px,
+        input_element_floor: input_floor,
+        kernel_elements,
+        load_element_floor: input_floor + kernel_elements,
+        write_element_floor: n * layer.c_out() as u64,
+        min_compute_steps: n.div_ceil(max_pps),
+    }
+}
+
+/// `(achieved − bound) / bound` as an IEEE double; `0.0` when the bound is
+/// zero or already met. Both languages divide the same two exact integers,
+/// so the value is bit-identical cross-language.
+pub fn optimality_gap(achieved: u64, bound: u64) -> f64 {
+    if bound == 0 {
+        return 0.0;
+    }
+    achieved.saturating_sub(bound) as f64 / bound as f64
+}
+
+/// What the exact path concluded for one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExactStatus {
+    /// Exact solve not attempted (bound-only run, or the stage is above
+    /// `exact_max_patches`).
+    Skipped,
+    /// Budget exhausted before the search space was proven empty — the
+    /// stage carries no exact certificate (and never hangs CI).
+    Unsolved,
+    /// The search completed: `exact_optimum` is the proven minimum.
+    Certified,
+}
+
+impl ExactStatus {
+    /// Stable lower-case label (JSON / tables).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExactStatus::Skipped => "skipped",
+            ExactStatus::Unsolved => "unsolved",
+            ExactStatus::Certified => "certified",
+        }
+    }
+}
+
+/// Knobs for [`certify_network`].
+#[derive(Debug, Clone)]
+pub struct CertifyOptions {
+    /// Attempt exact solves (bound-only otherwise).
+    pub exact: bool,
+    /// Largest `n_patches` the specialized branch & bound is attempted on.
+    pub exact_max_patches: usize,
+    /// Largest `n_patches` the generic §5 MILP cross-check is attempted on
+    /// (its variable count grows as `k·(3·n_pixels + n)`).
+    pub ilp_max_patches: usize,
+    /// Largest `n_pixels` for the MILP cross-check.
+    pub ilp_max_pixels: usize,
+    /// Deterministic node cap for the specialized exact search.
+    pub node_budget: u64,
+    /// Node cap for the MILP branch & bound.
+    pub ilp_node_budget: u64,
+    /// Wall-clock safety net for either solver.
+    pub time_budget: Duration,
+}
+
+impl Default for CertifyOptions {
+    fn default() -> Self {
+        CertifyOptions {
+            exact: false,
+            exact_max_patches: 12,
+            ilp_max_patches: 4,
+            ilp_max_pixels: 40,
+            node_budget: 2_000_000,
+            ilp_node_budget: 50_000,
+            time_budget: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Certificate for one planned stage.
+#[derive(Debug, Clone)]
+pub struct StageCertificate {
+    /// Stage name within the network.
+    pub stage: String,
+    /// `|X|` of the stage's layer.
+    pub n_patches: usize,
+    /// Group-size bound the plan used.
+    pub group_size: usize,
+    /// The portfolio lane that won the race.
+    pub winner: String,
+    /// The winner's loaded pixels (the race objective).
+    pub achieved_pixels: u64,
+    /// The analytic floor.
+    pub bound: CommLowerBound,
+    /// `(achieved_pixels − bound_pixels) / bound_pixels`.
+    pub optimality_gap: f64,
+    /// What the exact path concluded.
+    pub exact_status: ExactStatus,
+    /// Proven minimum loaded pixels over every valid grouping (set iff
+    /// `Certified`).
+    pub exact_optimum: Option<u64>,
+    /// True iff the portfolio winner achieves the proven optimum.
+    pub exact_matches_winner: Option<bool>,
+    /// Micro instances only: whether the independent §5 MILP landed on the
+    /// same optimum (`None` when the cross-check was out of scope or hit
+    /// its budget).
+    pub ilp_agrees: Option<bool>,
+    /// Nodes the specialized exact search expanded.
+    pub exact_nodes: u64,
+}
+
+/// Certification of a whole [`NetworkPlan`].
+#[derive(Debug, Clone)]
+pub struct CertifyReport {
+    /// The plan's network name.
+    pub network: String,
+    /// Per-stage certificates in pipeline order.
+    pub stages: Vec<StageCertificate>,
+    /// Largest per-stage gap (0.0 for an empty network).
+    pub worst_gap: f64,
+    /// Stages whose exact status is `Certified`.
+    pub certified_exactly: usize,
+}
+
+/// Certify every stage of `plan`: bounds always, exact solves when
+/// `opts.exact` and the stage is small enough.
+pub fn certify_network(plan: &NetworkPlan, opts: &CertifyOptions) -> CertifyReport {
+    let stages: Vec<StageCertificate> =
+        plan.layers.iter().map(|lp| certify_stage(lp, opts)).collect();
+    CertifyReport {
+        network: plan.network.clone(),
+        worst_gap: stages.iter().map(|s| s.optimality_gap).fold(0.0, f64::max),
+        certified_exactly: stages
+            .iter()
+            .filter(|s| s.exact_status == ExactStatus::Certified)
+            .count(),
+        stages,
+    }
+}
+
+fn certify_stage(lp: &LayerPlan, opts: &CertifyOptions) -> StageCertificate {
+    let bound = comm_lower_bound(&lp.layer, &lp.accelerator);
+    let mut cert = StageCertificate {
+        stage: lp.stage.clone(),
+        n_patches: lp.layer.n_patches(),
+        group_size: lp.group_size,
+        winner: lp.winner.clone(),
+        achieved_pixels: lp.loaded_pixels,
+        optimality_gap: optimality_gap(lp.loaded_pixels, bound.bound_pixels),
+        bound,
+        exact_status: ExactStatus::Skipped,
+        exact_optimum: None,
+        exact_matches_winner: None,
+        ilp_agrees: None,
+        exact_nodes: 0,
+    };
+    if opts.exact && lp.layer.n_patches() <= opts.exact_max_patches {
+        certify_exact(lp, opts, &mut cert);
+    }
+    cert
+}
+
+/// The exact ladder: specialized branch & bound first (the certifying
+/// engine), then — on micro instances — the generic §5 MILP as an
+/// independent cross-check of the encoding.
+fn certify_exact(lp: &LayerPlan, opts: &CertifyOptions, cert: &mut StageCertificate) {
+    let g = lp.group_size.max(1);
+    let k = lp.strategy.groups.len();
+    let limits = ExactLimits { time: opts.time_budget, nodes: opts.node_budget };
+    let r = solve_exact_with(&lp.layer, g, k, limits, Some(&lp.strategy.groups));
+    cert.exact_nodes = r.nodes;
+    let best = match (r.complete, r.groups) {
+        (true, Some(best)) => best,
+        // Budget hit, or (unreachable with a valid winner) proven empty.
+        _ => {
+            cert.exact_status = ExactStatus::Unsolved;
+            return;
+        }
+    };
+    let exact_px = grouping_loads(&lp.layer, &best);
+    cert.exact_optimum = Some(exact_px);
+    cert.exact_matches_winner = Some(exact_px == lp.loaded_pixels);
+    cert.exact_status = ExactStatus::Certified;
+
+    // MILP cross-check. Scope guards: (a) model size, (b) the §5 memory
+    // constraint (Eq. 12) must admit every ≤ g group — true by construction
+    // for `for_group_size` machines — otherwise the MILP searches a strict
+    // subset of the DFS space and a mismatch would be scope, not a bug.
+    let micro = lp.layer.n_patches() <= opts.ilp_max_patches
+        && lp.layer.n_pixels() <= opts.ilp_max_pixels;
+    let mem_admits_any_group =
+        Accelerator::for_group_size(&lp.layer, g).size_mem <= lp.accelerator.size_mem;
+    if micro && mem_admits_any_group {
+        // `nb_data_reload = k` makes Eq. 9 vacuous (a pixel cannot load
+        // more than once per step), so both encodings minimize the same
+        // objective over the same groupings.
+        let (model, info) = build_s1_model(&lp.layer, &lp.accelerator, k, k as u32);
+        let start = encode_mip_start(&lp.layer, &info, &best, model.n_vars());
+        let sol = solve_milp(
+            &model,
+            &BranchBoundOptions {
+                time_budget: opts.time_budget,
+                node_budget: opts.ilp_node_budget,
+                mip_start: Some(start),
+                gap_tolerance: 1e-6,
+            },
+        );
+        if sol.status == SolveStatus::Optimal {
+            let expect =
+                (lp.accelerator.t_l * lp.layer.c_in as u64) as f64 * exact_px as f64;
+            cert.ilp_agrees = Some((sol.objective - expect).abs() < 1e-6);
+        }
+    }
+}
+
+/// JSON form of a [`CertifyReport`] (the `certify --json` payload).
+pub fn certify_to_json(report: &CertifyReport) -> Json {
+    let stages: Vec<Json> = report
+        .stages
+        .iter()
+        .map(|s| {
+            let mut o = Json::obj();
+            o.set("stage", s.stage.as_str())
+                .set("n_patches", s.n_patches)
+                .set("group_size", s.group_size)
+                .set("winner", s.winner.as_str())
+                .set("achieved_pixels", s.achieved_pixels)
+                .set("comm_lower_bound", s.bound.bound_pixels)
+                .set("cold_pixels", s.bound.cold_pixels)
+                .set("memory_pixels", s.bound.memory_pixels)
+                .set("load_element_floor", s.bound.load_element_floor)
+                .set("write_element_floor", s.bound.write_element_floor)
+                .set("min_compute_steps", s.bound.min_compute_steps)
+                .set("optimality_gap", s.optimality_gap)
+                .set("exact_status", s.exact_status.as_str())
+                .set("exact_nodes", s.exact_nodes);
+            if let Some(opt) = s.exact_optimum {
+                o.set("exact_optimum", opt);
+            }
+            if let Some(m) = s.exact_matches_winner {
+                o.set("exact_matches_winner", m);
+            }
+            if let Some(a) = s.ilp_agrees {
+                o.set("ilp_agrees", a);
+            }
+            o
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("network", report.network.as_str())
+        .set("worst_gap", report.worst_gap)
+        .set("certified_exactly", report.certified_exactly)
+        .set("stages", Json::Arr(stages));
+    o
+}
+
+/// Human-readable table form of a [`CertifyReport`].
+pub fn format_certify_table(report: &CertifyReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("network: {}\n", report.network));
+    out.push_str(
+        " stage    | patches |  g | bound px | achieved |    gap | exact\n",
+    );
+    out.push_str(
+        "----------+---------+----+----------+----------+--------+-------------------\n",
+    );
+    for s in &report.stages {
+        let exact = match s.exact_status {
+            ExactStatus::Skipped => "skipped".to_string(),
+            ExactStatus::Unsolved => {
+                format!("unsolved ({} nodes)", s.exact_nodes)
+            }
+            ExactStatus::Certified => {
+                let mut t = format!(
+                    "certified (opt {}{})",
+                    s.exact_optimum.unwrap_or(0),
+                    if s.exact_matches_winner == Some(true) {
+                        ", winner optimal"
+                    } else {
+                        ", winner above optimum"
+                    }
+                );
+                match s.ilp_agrees {
+                    Some(true) => t.push_str(" [ilp ok]"),
+                    Some(false) => t.push_str(" [ILP DISAGREES]"),
+                    None => {}
+                }
+                t
+            }
+        };
+        out.push_str(&format!(
+            " {:<8} | {:>7} | {:>2} | {:>8} | {:>8} | {:>6.4} | {}\n",
+            s.stage,
+            s.n_patches,
+            s.group_size,
+            s.bound.bound_pixels,
+            s.achieved_pixels,
+            s.optimality_gap,
+            exact
+        ));
+    }
+    out.push_str(&format!(
+        "worst gap: {:.4} | certified exactly: {}/{}\n",
+        report.worst_gap,
+        report.certified_exactly,
+        report.stages.len()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy;
+
+    #[test]
+    fn cold_floor_matches_hand_computed_unions() {
+        // Dense 5x5 kernel on 32x32: every input pixel is tapped.
+        let l = ConvLayer::square(1, 32, 5, 6);
+        let b = comm_lower_bound(&l, &Accelerator::for_group_size(&l, 4));
+        assert_eq!(b.cold_pixels, 1024);
+        assert_eq!(b.bound_pixels, 1024);
+
+        // Stride-2 depthwise 3x3 on 18x18: patch origins 0,2,..,14, span 3
+        // → rows/cols 0..=16 tapped, row/col 17 never → 17×17.
+        let dw = ConvLayer::new(4, 18, 18, 3, 3, 4, 2, 2)
+            .unwrap()
+            .with_groups(4)
+            .unwrap();
+        let b = comm_lower_bound(&dw, &Accelerator::for_group_size(&dw, 4));
+        assert_eq!(b.cold_pixels, 289);
+
+        // Dilated 3x3 (d = 2) on 12x12: span 5, origins 0..=7 — the dilated
+        // lattices of the patch *set* still tap every pixel.
+        let dil = ConvLayer::new(8, 12, 12, 3, 3, 8, 1, 1)
+            .unwrap()
+            .with_dilation(2, 2)
+            .unwrap();
+        let b = comm_lower_bound(&dil, &Accelerator::for_group_size(&dil, 4));
+        assert_eq!(b.cold_pixels, 144);
+    }
+
+    #[test]
+    fn element_floors_follow_the_pixel_bound() {
+        let l = ConvLayer::square(2, 6, 3, 3); // 16 patches, c_in = 2
+        let acc = Accelerator::for_group_size(&l, 4);
+        let b = comm_lower_bound(&l, &acc);
+        assert_eq!(b.input_element_floor, b.bound_pixels * 2);
+        assert_eq!(b.load_element_floor, b.input_element_floor + b.kernel_elements);
+        assert_eq!(b.write_element_floor, 16 * 3);
+        assert_eq!(b.min_compute_steps, 4); // ceil(16 / 4)
+    }
+
+    #[test]
+    fn bound_is_monotone_non_increasing_in_memory() {
+        let l = ConvLayer::square(1, 8, 3, 2);
+        let base = Accelerator::for_group_size(&l, 2);
+        let mut prev = u64::MAX;
+        for mem in [0u64, 16, 64, 256, 1024, 1 << 20] {
+            let b = comm_lower_bound(&l, &Accelerator { size_mem: mem, ..base });
+            assert!(b.bound_pixels <= prev, "bound grew at size_mem={mem}");
+            prev = b.bound_pixels;
+        }
+    }
+
+    #[test]
+    fn bound_never_exceeds_any_ordering() {
+        let layers = [
+            ConvLayer::square(1, 6, 3, 2),
+            ConvLayer::new(2, 8, 6, 3, 3, 2, 2, 1).unwrap(),
+            ConvLayer::new(1, 9, 9, 3, 3, 1, 1, 1)
+                .unwrap()
+                .with_dilation(2, 2)
+                .unwrap(),
+        ];
+        for l in layers {
+            let acc = Accelerator::for_group_size(&l, 3);
+            let b = comm_lower_bound(&l, &acc);
+            for o in strategy::Ordering::all() {
+                let s = strategy::from_ordering(&l, o, 3);
+                let achieved = grouping_loads(&l, &s.groups);
+                assert!(
+                    b.bound_pixels <= achieved,
+                    "{}: bound {} above achieved {}",
+                    o.as_str(),
+                    b.bound_pixels,
+                    achieved
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gap_edge_cases() {
+        assert_eq!(optimality_gap(10, 0), 0.0);
+        assert_eq!(optimality_gap(5, 10), 0.0); // saturates, never negative
+        assert_eq!(optimality_gap(10, 10), 0.0);
+        assert_eq!(optimality_gap(15, 10), 0.5);
+    }
+
+    #[test]
+    fn certify_report_renders_both_forms() {
+        use crate::config::network_preset;
+        use crate::planner::{NetworkPlanner, PlanOptions};
+
+        let preset = network_preset("lenet5_micro").unwrap();
+        let planner = NetworkPlanner::new(PlanOptions {
+            accelerator: crate::planner::AcceleratorSpec::PerLayerGroup(2),
+            anneal_iters: 200,
+            anneal_starts: 1,
+            ..PlanOptions::default()
+        });
+        let plan = planner.plan(&preset).unwrap();
+        let report = certify_network(
+            &plan,
+            &CertifyOptions { exact: true, ..CertifyOptions::default() },
+        );
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(report.certified_exactly, 2);
+        for s in &report.stages {
+            assert_eq!(s.exact_status, ExactStatus::Certified);
+            let opt = s.exact_optimum.unwrap();
+            assert!(opt >= s.bound.bound_pixels);
+            assert!(opt <= s.achieved_pixels);
+        }
+        let j = certify_to_json(&report);
+        assert_eq!(j.get("network").and_then(Json::as_str), Some("lenet5_micro"));
+        assert_eq!(j.get("certified_exactly").and_then(Json::as_u64), Some(2));
+        let table = format_certify_table(&report);
+        assert!(table.contains("certified"));
+        assert!(table.contains("worst gap"));
+    }
+}

@@ -30,12 +30,18 @@
 
 mod batch;
 mod cache;
+pub mod certify;
 mod portfolio;
 mod recovery;
 mod report;
 mod shard;
 
 pub use batch::{BatchPlanner, BatchReport, BatchStats};
+pub use certify::{
+    certify_network, certify_to_json, comm_lower_bound, format_certify_table,
+    optimality_gap, CertifyOptions, CertifyReport, CommLowerBound, ExactStatus,
+    StageCertificate,
+};
 pub use cache::{CacheKey, CachedStrategy, StrategyCache, StrategyStore};
 pub use portfolio::{
     portfolio_entries, run_entry, run_entry_cancel, PortfolioEntry, PortfolioResult,
@@ -128,6 +134,14 @@ pub struct LayerPlan {
     pub winner: String,
     /// The sequential race objective achieved (spatial input pixels loaded).
     pub loaded_pixels: u64,
+    /// Analytic floor on `loaded_pixels` for *any* valid grouping of this
+    /// stage ([`certify::comm_lower_bound`], pixel domain). Certification is
+    /// read-only with respect to the race: the bound never influences which
+    /// lane wins.
+    pub comm_lower_bound: u64,
+    /// `(loaded_pixels − comm_lower_bound) / comm_lower_bound` — how far the
+    /// winner provably is from communication-optimal (0.0 = bound met).
+    pub optimality_gap: f64,
     /// Simulated stage duration in cycles (from the network run; the
     /// overlapped makespan when the accelerator is double-buffered).
     pub duration: u64,
@@ -163,6 +177,11 @@ pub struct NetworkPlan {
     /// Annealing iterations actually executed while planning — 0 when every
     /// layer came from the cache.
     pub anneal_iters_run: u64,
+    /// Sum of the per-stage communication lower bounds (pixel domain).
+    pub total_comm_lower_bound: u64,
+    /// Largest per-stage `optimality_gap` in the plan (0.0 for an empty
+    /// network).
+    pub worst_optimality_gap: f64,
 }
 
 /// The planner facade.
@@ -297,6 +316,33 @@ mod tests {
             }
             assert_eq!(base.total_duration, plan.total_duration);
         }
+    }
+
+    #[test]
+    fn plan_carries_a_true_lower_bound_per_stage() {
+        let plan = NetworkPlanner::new(quick_options())
+            .plan(&tiny_preset())
+            .unwrap();
+        let mut total = 0u64;
+        let mut worst = 0.0f64;
+        for lp in &plan.layers {
+            assert!(lp.comm_lower_bound > 0, "{}", lp.stage);
+            assert!(
+                lp.comm_lower_bound <= lp.loaded_pixels,
+                "{}: bound {} above achieved {}",
+                lp.stage,
+                lp.comm_lower_bound,
+                lp.loaded_pixels
+            );
+            assert_eq!(
+                lp.optimality_gap,
+                certify::optimality_gap(lp.loaded_pixels, lp.comm_lower_bound)
+            );
+            total += lp.comm_lower_bound;
+            worst = worst.max(lp.optimality_gap);
+        }
+        assert_eq!(plan.total_comm_lower_bound, total);
+        assert_eq!(plan.worst_optimality_gap, worst);
     }
 
     #[test]

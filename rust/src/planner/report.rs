@@ -10,21 +10,23 @@ use crate::util::json::Json;
 pub fn format_plan_table(plan: &NetworkPlan) -> String {
     let mut out = format!("network: {}\n\n", plan.network);
     out.push_str(
-        " stage    | layer                                     |  g | steps | winner        | loaded px | duration | cache\n",
+        " stage    | layer                                     |  g | steps | winner        | loaded px | bound px |    gap | duration | cache\n",
     );
     out.push_str(
-        "----------+-------------------------------------------+----+-------+---------------+-----------+----------+------\n",
+        "----------+-------------------------------------------+----+-------+---------------+-----------+----------+--------+----------+------\n",
     );
     for lp in &plan.layers {
         let layer = lp.layer.to_string();
         out.push_str(&format!(
-            " {:<8} | {:<41} | {:>2} | {:>5} | {:<13} | {:>9} | {:>8} | {}\n",
+            " {:<8} | {:<41} | {:>2} | {:>5} | {:<13} | {:>9} | {:>8} | {:>6.4} | {:>8} | {}\n",
             lp.stage,
             layer,
             lp.group_size,
             lp.strategy.n_steps(),
             lp.winner,
             lp.loaded_pixels,
+            lp.comm_lower_bound,
+            lp.optimality_gap,
             lp.duration,
             if lp.cache_hit { "hit" } else { "miss" },
         ));
@@ -32,6 +34,10 @@ pub fn format_plan_table(plan: &NetworkPlan) -> String {
     out.push_str(&format!(
         "\ntotal simulated duration: {} cycles  (peak on-chip occupancy {} elements)\n",
         plan.total_duration, plan.peak_occupancy,
+    ));
+    out.push_str(&format!(
+        "certified floor: {} pixels  |  worst stage gap: {:.4}\n",
+        plan.total_comm_lower_bound, plan.worst_optimality_gap,
     ));
     if plan.overlap == OverlapMode::DoubleBuffered {
         out.push_str(&format!(
@@ -55,6 +61,8 @@ fn layer_to_json(lp: &LayerPlan) -> Json {
         .set("n_steps", lp.strategy.n_steps())
         .set("winner", lp.winner.as_str())
         .set("loaded_pixels", lp.loaded_pixels)
+        .set("comm_lower_bound", lp.comm_lower_bound)
+        .set("optimality_gap", lp.optimality_gap)
         .set("duration", lp.duration)
         .set("sequential_duration", lp.sequential_duration)
         .set("cache_hit", lp.cache_hit);
@@ -72,6 +80,8 @@ pub fn plan_to_json(plan: &NetworkPlan) -> Json {
         .set("cache_hits", plan.cache_hits)
         .set("cache_misses", plan.cache_misses)
         .set("anneal_iters_run", plan.anneal_iters_run)
+        .set("total_comm_lower_bound", plan.total_comm_lower_bound)
+        .set("worst_optimality_gap", plan.worst_optimality_gap)
         .set(
             "layers",
             Json::Arr(plan.layers.iter().map(layer_to_json).collect()),
@@ -99,6 +109,10 @@ pub fn format_batch_table(report: &BatchReport) -> String {
     out.push_str(&format!(
         "anneal iterations run: {}\n",
         s.anneal_iters_run,
+    ));
+    out.push_str(&format!(
+        "worst optimality gap: {:.4}\n",
+        report.worst_gap,
     ));
     if s.shard_count > 0 {
         out.push_str(&format!(
@@ -140,6 +154,7 @@ pub fn batch_to_json(report: &BatchReport) -> Json {
         .set("panicked_lanes", s.panicked_lanes)
         .set("degraded_stages", s.degraded_stages)
         .set("deadline_starved", s.deadline_starved)
+        .set("worst_gap", report.worst_gap)
         .set("cache", s.cache.to_json());
     let mut o = Json::obj();
     o.set(
@@ -186,6 +201,20 @@ mod tests {
         assert_eq!(stats.get("panicked_lanes").unwrap().as_u64(), Some(0));
         assert_eq!(stats.get("degraded_stages").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("plans").unwrap().as_arr().unwrap().len(), 2);
+
+        // Certification threads through both forms.
+        assert!(table.contains("worst optimality gap:"));
+        assert_eq!(
+            stats.get("worst_gap").unwrap().as_f64(),
+            Some(report.worst_gap)
+        );
+        let plan0 = &j.get("plans").unwrap().as_arr().unwrap()[0];
+        let layer0 = &plan0.get("layers").unwrap().as_arr().unwrap()[0];
+        let bound = layer0.get("comm_lower_bound").unwrap().as_u64().unwrap();
+        let loaded = layer0.get("loaded_pixels").unwrap().as_u64().unwrap();
+        assert!(bound > 0 && bound <= loaded);
+        assert!(layer0.get("optimality_gap").unwrap().as_f64().is_some());
+        assert!(plan0.get("total_comm_lower_bound").unwrap().as_u64().unwrap() > 0);
     }
 
     #[test]

@@ -344,6 +344,17 @@ impl Simulator {
                 "WCET bound below a simulated trace"
             );
         }
+        // Certification floor (read-only w.r.t. the run itself): the
+        // element-domain load floor for this batched trace. Kernels load
+        // once per run, inputs at best once per image; fault effects are
+        // cycles-only, so the floor holds for fault-injected runs too.
+        let lb = crate::planner::certify::comm_lower_bound(&self.layer, acc);
+        report.comm_lower_bound =
+            self.batch as u64 * lb.input_element_floor + lb.kernel_elements;
+        report.optimality_gap = crate::planner::certify::optimality_gap(
+            report.totals.total.loaded_elements,
+            report.comm_lower_bound,
+        );
         Ok(())
     }
 }

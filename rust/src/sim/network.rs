@@ -61,6 +61,11 @@ pub struct NetworkReport {
     /// Sum of the per-stage analytic k-fault WCET bounds — present only for
     /// fault-injected runs; dominates `total_duration` whenever present.
     pub wcet_bound: Option<u64>,
+    /// Sum of the per-stage element-domain communication floors
+    /// ([`StageReport::comm_lower_bound`]).
+    pub total_comm_lower_bound: u64,
+    /// Largest per-stage element-domain optimality gap.
+    pub worst_optimality_gap: f64,
     /// Final activation tensor (functional mode).
     pub output: Option<Vec<f32>>,
     /// Worst per-stage functional error vs. the reference chain.
@@ -90,6 +95,13 @@ pub struct StageReport {
     /// Per-stage analytic k-fault WCET bound at the trace's own retry count
     /// (fault-injected runs only; always ≥ `duration`).
     pub wcet_bound: Option<u64>,
+    /// Element-domain communication floor on `loaded_elements`
+    /// ([`crate::planner::certify::comm_lower_bound`]'s
+    /// `load_element_floor`).
+    pub comm_lower_bound: u64,
+    /// `(loaded_elements − comm_lower_bound) / comm_lower_bound` (0.0 when
+    /// the floor is zero).
+    pub optimality_gap: f64,
 }
 
 /// Input dimensions the stage *after* `layer` sees, given the plumbing
@@ -153,6 +165,8 @@ impl Network {
             fault_retries: 0,
             mem_shrink_events: 0,
             wcet_bound: None,
+            total_comm_lower_bound: 0,
+            worst_optimality_gap: 0.0,
             output: None,
             max_abs_error: None,
         };
@@ -171,6 +185,9 @@ impl Network {
             if let Some(w) = r.wcet_bound {
                 *report.wcet_bound.get_or_insert(0) += w;
             }
+            report.total_comm_lower_bound += r.comm_lower_bound;
+            report.worst_optimality_gap =
+                report.worst_optimality_gap.max(r.optimality_gap);
             report.per_stage.push(StageReport {
                 name: stage.name.clone(),
                 duration: r.duration,
@@ -181,6 +198,8 @@ impl Network {
                 fault_retries: r.fault_retries,
                 mem_shrink_events: r.mem_shrink_events,
                 wcet_bound: r.wcet_bound,
+                comm_lower_bound: r.comm_lower_bound,
+                optimality_gap: r.optimality_gap,
             });
         }
         Ok(report)
@@ -210,6 +229,8 @@ impl Network {
             fault_retries: 0,
             mem_shrink_events: 0,
             wcet_bound: None,
+            total_comm_lower_bound: 0,
+            worst_optimality_gap: 0.0,
             output: None,
             max_abs_error: Some(0.0),
         };
@@ -224,6 +245,9 @@ impl Network {
             report.total_duration += r.duration;
             report.total_sequential_duration += r.sequential_duration;
             report.peak_occupancy = report.peak_occupancy.max(r.peak_occupancy);
+            report.total_comm_lower_bound += r.comm_lower_bound;
+            report.worst_optimality_gap =
+                report.worst_optimality_gap.max(r.optimality_gap);
             report.per_stage.push(StageReport {
                 name: stage.name.clone(),
                 duration: r.duration,
@@ -234,6 +258,8 @@ impl Network {
                 fault_retries: 0,
                 mem_shrink_events: 0,
                 wcet_bound: None,
+                comm_lower_bound: r.comm_lower_bound,
+                optimality_gap: r.optimality_gap,
             });
             activation = r.output.expect("functional mode fills output");
             let mut dims = stage.layer.output_dims();
@@ -603,6 +629,24 @@ mod tests {
             r.per_stage.iter().map(|s| s.duration).sum::<u64>()
         );
         assert!(r.per_stage[0].n_steps > r.per_stage[1].n_steps);
+    }
+
+    /// Every simulated stage respects its element-domain communication
+    /// floor, and the report aggregates are the sum / max of the stages.
+    #[test]
+    fn stage_floors_bound_the_loads() {
+        let net = lenet5_trunk(|l, g| strategy::zigzag(l, g), 4);
+        let r = net.run().unwrap();
+        let mut total = 0u64;
+        let mut worst = 0.0f64;
+        for s in &r.per_stage {
+            assert!(s.comm_lower_bound > 0, "{}", s.name);
+            assert!(s.comm_lower_bound <= s.loaded_elements, "{}", s.name);
+            total += s.comm_lower_bound;
+            worst = worst.max(s.optimality_gap);
+        }
+        assert_eq!(r.total_comm_lower_bound, total);
+        assert_eq!(r.worst_optimality_gap, worst);
     }
 
     #[test]

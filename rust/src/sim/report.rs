@@ -66,6 +66,15 @@ pub struct SimReport {
     /// at `k = fault_retries` — present only for fault-injected runs, and
     /// always ≥ `duration`.
     pub wcet_bound: Option<u64>,
+    /// Element-domain communication floor on `loaded_elements`
+    /// ([`crate::planner::certify::comm_lower_bound`]'s
+    /// `load_element_floor`, batch-aware: kernels amortize across images).
+    /// Filled by the engine; 0 until a run completes.
+    pub comm_lower_bound: u64,
+    /// `(loaded_elements − comm_lower_bound) / comm_lower_bound` — the
+    /// certified element-domain optimality gap of this run (0.0 when the
+    /// floor is zero).
+    pub optimality_gap: f64,
     /// Output of the functional simulation (present in functional mode).
     pub output: Option<Vec<f32>>,
     /// Max |output - reference| from the functional check (if run).
@@ -91,6 +100,8 @@ impl SimReport {
             fault_retries: 0,
             mem_shrink_events: 0,
             wcet_bound: None,
+            comm_lower_bound: 0,
+            optimality_gap: 0.0,
             output: None,
             max_abs_error: None,
         }
@@ -150,7 +161,9 @@ impl SimReport {
             .set("macs", self.totals.total.macs)
             .set("n_steps", self.totals.n_steps)
             .set("n_compute_steps", self.totals.n_compute_steps)
-            .set("peak_occupancy", self.peak_occupancy);
+            .set("peak_occupancy", self.peak_occupancy)
+            .set("comm_lower_bound", self.comm_lower_bound)
+            .set("optimality_gap", self.optimality_gap);
         if let Some(wcet) = self.wcet_bound {
             o.set("fault_retries", self.fault_retries)
                 .set("mem_shrink_events", self.mem_shrink_events)
@@ -223,6 +236,12 @@ pub fn summary_line(report: &SimReport, acc: &Accelerator) -> String {
             report.mem_shrink_events,
             report.fault_retries,
             wcet,
+        ));
+    }
+    if report.comm_lower_bound > 0 {
+        line.push_str(&format!(
+            "  [certify: load floor {} el | gap {:.4}]",
+            report.comm_lower_bound, report.optimality_gap,
         ));
     }
     line

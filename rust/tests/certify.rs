@@ -1,0 +1,227 @@
+//! Certification property suite (mirrored in Python by
+//! `python/tests/test_certify_oracle.py`):
+//!
+//! * the analytic communication floor never exceeds what any simulated run
+//!   actually loads — across all 24 differential fuzz seeds, both overlap
+//!   modes, every (k, m) ∈ {1, 2}² resource shape and the sampled image
+//!   batches;
+//! * the floor is monotone non-increasing in `size_MEM`;
+//! * planner winners respect the pixel-domain floor on the preset zoo;
+//! * both lenet5-scale micro stages certify **exactly** at group 2: the
+//!   budgeted branch & bound proves the portfolio winner optimal (gap 0)
+//!   and the independent §5 MILP lands on the same optimum.
+
+use convoffload::config::fuzz::random_network;
+use convoffload::config::network_preset;
+use convoffload::planner::{
+    certify_network, comm_lower_bound, optimality_gap, AcceleratorSpec, CertifyOptions,
+    ExactStatus, NetworkPlanner, PlanOptions,
+};
+use convoffload::platform::{Accelerator, OverlapMode, Platform};
+use convoffload::sim::Simulator;
+
+/// The fuzz seeds shared with the differential harness.
+const SEEDS: std::ops::RangeInclusive<u64> = 1..=24;
+
+/// Element-domain floor ≤ simulated loads, for every fuzz stage under every
+/// overlap mode × resource shape × the network's sampled batch.
+#[test]
+fn bound_is_a_true_floor_across_the_fuzz_corpus() {
+    for seed in SEEDS {
+        let net = random_network(seed);
+        for overlap in [OverlapMode::Sequential, OverlapMode::DoubleBuffered] {
+            for (k, m) in [(1, 1), (1, 2), (2, 1), (2, 2)] {
+                for batch in [1, net.batch] {
+                    for s in &net.stages {
+                        let acc = s
+                            .accelerator
+                            .with_overlap(overlap)
+                            .with_channels(k, m);
+                        let r = Simulator::new(s.layer, Platform::new(acc))
+                            .with_batch(batch)
+                            .run(&s.strategy)
+                            .unwrap_or_else(|e| {
+                                panic!("seed {seed} stage {}: {e}", s.name)
+                            });
+                        assert!(
+                            r.comm_lower_bound <= r.totals.total.loaded_elements,
+                            "seed {seed} stage {} ({overlap:?} {k}x{m} b{batch}): \
+                             floor {} above loads {}",
+                            s.name,
+                            r.comm_lower_bound,
+                            r.totals.total.loaded_elements,
+                        );
+                        assert!(r.comm_lower_bound > 0, "floor must be nontrivial");
+                        assert_eq!(
+                            r.optimality_gap,
+                            optimality_gap(
+                                r.totals.total.loaded_elements,
+                                r.comm_lower_bound
+                            )
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// More memory can only lower (never raise) the floor — the 1911.05662
+/// monotonicity property, checked on every fuzz layer.
+#[test]
+fn bound_is_monotone_non_increasing_in_size_mem() {
+    for seed in SEEDS {
+        let net = random_network(seed);
+        for s in &net.stages {
+            let mut prev = u64::MAX;
+            for scale in [0u64, 1, 2, 4, 16, 1024] {
+                let acc = Accelerator {
+                    size_mem: s.accelerator.size_mem.saturating_mul(scale),
+                    ..s.accelerator
+                };
+                let b = comm_lower_bound(&s.layer, &acc);
+                assert!(
+                    b.bound_pixels <= prev,
+                    "seed {seed} stage {}: bound grew at scale {scale}",
+                    s.name
+                );
+                prev = b.bound_pixels;
+            }
+        }
+    }
+}
+
+/// Planner winners respect the pixel-domain floor on the whole preset zoo,
+/// in both overlap modes, and the plan-level aggregates are consistent.
+#[test]
+fn planner_winners_respect_the_floor_on_the_preset_zoo() {
+    for name in ["lenet5", "resnet8", "mobilenet_slim"] {
+        let preset = network_preset(name).unwrap();
+        for overlap in [OverlapMode::Sequential, OverlapMode::DoubleBuffered] {
+            let planner = NetworkPlanner::new(PlanOptions {
+                anneal_iters: 500,
+                anneal_starts: 1,
+                overlap,
+                ..PlanOptions::default()
+            });
+            let plan = planner.plan(&preset).unwrap();
+            let mut total = 0u64;
+            let mut worst = 0.0f64;
+            for lp in &plan.layers {
+                assert!(lp.comm_lower_bound > 0, "{name}/{}", lp.stage);
+                assert!(
+                    lp.comm_lower_bound <= lp.loaded_pixels,
+                    "{name}/{}: floor {} above winner {}",
+                    lp.stage,
+                    lp.comm_lower_bound,
+                    lp.loaded_pixels
+                );
+                assert_eq!(
+                    lp.optimality_gap,
+                    optimality_gap(lp.loaded_pixels, lp.comm_lower_bound),
+                    "{name}/{}",
+                    lp.stage
+                );
+                total += lp.comm_lower_bound;
+                worst = worst.max(lp.optimality_gap);
+            }
+            assert_eq!(plan.total_comm_lower_bound, total, "{name}");
+            assert_eq!(plan.worst_optimality_gap, worst, "{name}");
+        }
+    }
+}
+
+/// The acceptance-bar certification: both lenet5_micro stages (the LeNet-5
+/// trunk at 4-patch scale) are proven optimal at group 2 — the specialized
+/// search completes, the winner matches the exact optimum (gap 0 against
+/// the achieved loads), and the independent §5 MILP agrees on stage shapes
+/// small enough for it.
+#[test]
+fn lenet5_micro_certifies_exactly_at_group_two() {
+    let preset = network_preset("lenet5_micro").unwrap();
+    let planner = NetworkPlanner::new(PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(2),
+        anneal_iters: 500,
+        anneal_starts: 1,
+        ..PlanOptions::default()
+    });
+    let plan = planner.plan(&preset).unwrap();
+    let report = certify_network(
+        &plan,
+        &CertifyOptions { exact: true, ..CertifyOptions::default() },
+    );
+    assert_eq!(report.stages.len(), 2);
+    assert_eq!(report.certified_exactly, 2, "both stages must certify");
+
+    // Pinned floors: c1 = |U| of a 5x5 kernel on 6x6 (all 36 pixels);
+    // c2 = |U| of a 3x3 kernel on 4x4 (all 16 pixels).
+    let pinned = [("c1", 36u64), ("c2", 16u64)];
+    for (s, (name, bound)) in report.stages.iter().zip(pinned) {
+        assert_eq!(s.stage, name);
+        assert_eq!(s.bound.bound_pixels, bound, "{name}");
+        assert_eq!(s.exact_status, ExactStatus::Certified, "{name}");
+        assert_eq!(s.exact_optimum, Some(bound), "{name}: optimum is the floor");
+        assert_eq!(s.achieved_pixels, bound, "{name}: winner achieves it");
+        assert_eq!(s.optimality_gap, 0.0, "{name}");
+        assert_eq!(s.exact_matches_winner, Some(true), "{name}");
+        assert_eq!(
+            s.ilp_agrees,
+            Some(true),
+            "{name}: the independent MILP must land on the same optimum"
+        );
+        assert!(s.exact_nodes > 0, "{name}: the search actually ran");
+    }
+    assert_eq!(report.worst_gap, 0.0);
+}
+
+/// An exhausted node budget yields a clean `Unsolved` — the certify path
+/// can never hang CI — while bound-only certification still stands.
+#[test]
+fn exhausted_budget_is_a_clean_unsolved() {
+    let preset = network_preset("lenet5_micro").unwrap();
+    let planner = NetworkPlanner::new(PlanOptions {
+        accelerator: AcceleratorSpec::PerLayerGroup(2),
+        anneal_iters: 500,
+        anneal_starts: 1,
+        ..PlanOptions::default()
+    });
+    let plan = planner.plan(&preset).unwrap();
+    let report = certify_network(
+        &plan,
+        &CertifyOptions { exact: true, node_budget: 0, ..CertifyOptions::default() },
+    );
+    for s in &report.stages {
+        assert_eq!(s.exact_status, ExactStatus::Unsolved, "{}", s.stage);
+        assert_eq!(s.exact_optimum, None, "{}", s.stage);
+        assert!(s.bound.bound_pixels > 0, "bound-only result survives");
+    }
+    assert_eq!(report.certified_exactly, 0);
+
+    // Bound-only mode (the default) skips the exact path entirely.
+    let bound_only = certify_network(&plan, &CertifyOptions::default());
+    for s in &bound_only.stages {
+        assert_eq!(s.exact_status, ExactStatus::Skipped, "{}", s.stage);
+    }
+}
+
+/// Certification is read-only with respect to search: certifying a plan
+/// leaves the plan bit-identical (same winners, loads, durations) to an
+/// uncertified planning run with the same options.
+#[test]
+fn certification_does_not_perturb_the_plan() {
+    let preset = network_preset("lenet5").unwrap();
+    let options = || PlanOptions {
+        anneal_iters: 500,
+        anneal_starts: 1,
+        ..PlanOptions::default()
+    };
+    let a = NetworkPlanner::new(options()).plan(&preset).unwrap();
+    let _ = certify_network(&a, &CertifyOptions { exact: true, ..CertifyOptions::default() });
+    let b = NetworkPlanner::new(options()).plan(&preset).unwrap();
+    assert_eq!(a.total_duration, b.total_duration);
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.winner, lb.winner);
+        assert_eq!(la.loaded_pixels, lb.loaded_pixels);
+        assert_eq!(la.duration, lb.duration);
+    }
+}

@@ -3,7 +3,7 @@
 //! Simulates a fixed set of fuzz networks (`config::fuzz::random_network`,
 //! seeds 1..=24 — asserted below to cover stride > 1, dilation > 1,
 //! groups > 1 and pooling) and writes the interchange file
-//! `target/differential_cases.json` (version 4): every case carries the
+//! `target/differential_cases.json` (version 5): every case carries the
 //! full network spec (layers with dilation/groups, accelerators, explicit
 //! strategy groups, plumbing flags) plus the Rust simulator's results under
 //! **both** duration semantics — the sequential Definition-3 sums and the
@@ -283,11 +283,18 @@ fn emit_differential_cases() {
             .per_stage
             .iter()
             .map(|sr| {
+                assert!(
+                    sr.comm_lower_bound <= sr.loaded_elements,
+                    "seed {seed} stage {}: floor above the simulated loads",
+                    sr.name
+                );
                 let mut o = Json::obj();
                 o.set("name", sr.name.as_str())
                     .set("duration", sr.duration)
                     .set("loaded_elements", sr.loaded_elements)
-                    .set("n_steps", sr.n_steps);
+                    .set("n_steps", sr.n_steps)
+                    .set("comm_lower_bound", sr.comm_lower_bound)
+                    .set("optimality_gap", sr.optimality_gap);
                 o
             })
             .collect();
@@ -311,10 +318,10 @@ fn emit_differential_cases() {
     assert!(cases.len() >= 20, "need ≥ 20 cases, got {}", cases.len());
 
     let mut doc = Json::obj();
-    // v4: v3's fault-injected replays now stage-decorrelated
-    // (`FaultModel::for_stage`), plus per-case §3.10 multi-resource
-    // expectations (sampled k × m shape, image batch, per-resource busy).
-    doc.set("version", 4u64)
+    // v5: v4 plus per-stage certification expectations — the element-domain
+    // communication floor (`comm_lower_bound`) and `optimality_gap`, both
+    // replayed bit-exactly by the Python oracle's independent bound.
+    doc.set("version", 5u64)
         .set("generator", "config::fuzz::random_network")
         .set("cases", Json::Arr(cases));
 

@@ -230,8 +230,19 @@ fn tight_deadline_returns_a_tagged_degraded_plan_that_still_validates() {
     assert_eq!(plans.len(), 1);
     for plan in plans {
         assert!(plan.get("total_duration").and_then(json::Json::as_u64).unwrap() > 0);
+        // certification fields ride along on every served plan
+        assert!(
+            plan.get("total_comm_lower_bound")
+                .and_then(json::Json::as_u64)
+                .unwrap()
+                > 0
+        );
+        assert!(plan.get("worst_optimality_gap").and_then(json::Json::as_f64).is_some());
         for layer in plan.get("layers").and_then(json::Json::as_arr).unwrap() {
             assert!(layer.get("n_steps").and_then(json::Json::as_u64).unwrap() > 0);
+            let bound = layer.get("comm_lower_bound").and_then(json::Json::as_u64).unwrap();
+            let loaded = layer.get("loaded_pixels").and_then(json::Json::as_u64).unwrap();
+            assert!(bound > 0 && bound <= loaded, "floor must bound the winner");
         }
     }
     // heuristic rung ran zero annealing iterations

@@ -1,0 +1,350 @@
+//! Pinned end-to-end tests for the solving substrate: `solver::simplex` on
+//! hand-computed LPs (optimal / degenerate / infeasible / unbounded),
+//! `solver::branch_bound` on hand-solved 0-1 programs, and the boolean
+//! linearization gadgets of `ilp` driven through a real MILP solve rather
+//! than feasibility checks alone.
+
+use std::time::Duration;
+
+use convoffload::ilp::{
+    linearize_and, linearize_and_not, linearize_or, BoolVar, Cmp, LinExpr, Model,
+    SolveStatus, VarKind,
+};
+use convoffload::solver::{solve_lp, solve_milp, BranchBoundOptions, LpOutcome};
+
+// ---------------------------------------------------------------- simplex
+
+/// The Dantzig textbook LP: max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18.
+/// Optimum (2, 6) with value 36 — minimized here as −3x − 5y = −36.
+#[test]
+fn simplex_pins_the_textbook_optimum() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, f64::INFINITY, VarKind::Continuous);
+    let y = m.var("y", 0.0, f64::INFINITY, VarKind::Continuous);
+    m.constrain(LinExpr::term(x, 1.0), Cmp::Le, 4.0);
+    m.constrain(LinExpr::term(y, 2.0), Cmp::Le, 12.0);
+    let mut row = LinExpr::new();
+    row.add(x, 3.0).add(y, 2.0);
+    m.constrain(row, Cmp::Le, 18.0);
+    let mut obj = LinExpr::new();
+    obj.add(x, -3.0).add(y, -5.0);
+    m.set_objective(obj);
+
+    match solve_lp(&m, &[]) {
+        LpOutcome::Optimal { assignment, objective } => {
+            assert!((objective + 36.0).abs() < 1e-9, "{objective}");
+            assert!((assignment[x.0] - 2.0).abs() < 1e-9);
+            assert!((assignment[y.0] - 6.0).abs() < 1e-9);
+        }
+        other => panic!("expected optimal, got {other:?}"),
+    }
+}
+
+/// Mixed `=` / `≥` rows exercise the phase-1 artificial machinery:
+/// min 2x + 3y s.t. x + y = 4, x ≤ 1 → (1, 3) with value 11.
+#[test]
+fn simplex_handles_equality_and_bound_rows() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, f64::INFINITY, VarKind::Continuous);
+    let y = m.var("y", 0.0, f64::INFINITY, VarKind::Continuous);
+    let mut eq = LinExpr::new();
+    eq.add(x, 1.0).add(y, 1.0);
+    m.constrain(eq, Cmp::Eq, 4.0);
+    m.constrain(LinExpr::term(x, 1.0), Cmp::Le, 1.0);
+    let mut obj = LinExpr::new();
+    obj.add(x, 2.0).add(y, 3.0);
+    m.set_objective(obj);
+
+    match solve_lp(&m, &[]) {
+        LpOutcome::Optimal { assignment, objective } => {
+            assert!((objective - 11.0).abs() < 1e-9, "{objective}");
+            assert!((assignment[x.0] - 1.0).abs() < 1e-9);
+            assert!((assignment[y.0] - 3.0).abs() < 1e-9);
+        }
+        other => panic!("expected optimal, got {other:?}"),
+    }
+}
+
+/// A degenerate vertex (more tight rows than dimensions at the optimum):
+/// the Bland's-rule fallback must still terminate at −2 on (1, 1).
+#[test]
+fn simplex_terminates_on_a_degenerate_vertex() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, f64::INFINITY, VarKind::Continuous);
+    let y = m.var("y", 0.0, f64::INFINITY, VarKind::Continuous);
+    m.constrain(LinExpr::term(x, 1.0), Cmp::Le, 1.0);
+    m.constrain(LinExpr::term(y, 1.0), Cmp::Le, 1.0);
+    // Redundant rows all tight at the optimum (1, 1).
+    for _ in 0..3 {
+        let mut row = LinExpr::new();
+        row.add(x, 1.0).add(y, 1.0);
+        m.constrain(row, Cmp::Le, 2.0);
+    }
+    let mut obj = LinExpr::new();
+    obj.add(x, -1.0).add(y, -1.0);
+    m.set_objective(obj);
+
+    match solve_lp(&m, &[]) {
+        LpOutcome::Optimal { objective, .. } => {
+            assert!((objective + 2.0).abs() < 1e-9, "{objective}");
+        }
+        other => panic!("expected optimal, got {other:?}"),
+    }
+}
+
+#[test]
+fn simplex_detects_infeasibility() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, 1.0, VarKind::Continuous);
+    let y = m.var("y", 0.0, 1.0, VarKind::Continuous);
+    let mut row = LinExpr::new();
+    row.add(x, 1.0).add(y, 1.0);
+    m.constrain(row, Cmp::Ge, 3.0); // x + y ≤ 2 by bounds
+    m.set_objective(LinExpr::term(x, 1.0));
+    assert_eq!(solve_lp(&m, &[]), LpOutcome::Infeasible);
+}
+
+#[test]
+fn simplex_detects_unboundedness() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, f64::INFINITY, VarKind::Continuous);
+    m.constrain(LinExpr::term(x, 1.0), Cmp::Ge, 1.0);
+    m.set_objective(LinExpr::term(x, -1.0)); // −x → −∞ as x grows
+    assert_eq!(solve_lp(&m, &[]), LpOutcome::Unbounded);
+}
+
+/// Bound overrides (the branch & bound fixing mechanism) restrict the same
+/// model without rebuilding it.
+#[test]
+fn simplex_bound_overrides_fix_variables() {
+    let mut m = Model::minimize();
+    let x = m.var("x", 0.0, 10.0, VarKind::Continuous);
+    let y = m.var("y", 0.0, 10.0, VarKind::Continuous);
+    let mut row = LinExpr::new();
+    row.add(x, 1.0).add(y, 1.0);
+    m.constrain(row, Cmp::Le, 10.0);
+    let mut obj = LinExpr::new();
+    obj.add(x, -1.0).add(y, -2.0);
+    m.set_objective(obj);
+    // Free: all budget on y → −20. With y fixed to 3: x = 7 → −13.
+    match solve_lp(&m, &[]) {
+        LpOutcome::Optimal { objective, .. } => assert!((objective + 20.0).abs() < 1e-9),
+        other => panic!("{other:?}"),
+    }
+    match solve_lp(&m, &[None, Some((3.0, 3.0))]) {
+        LpOutcome::Optimal { assignment, objective } => {
+            assert!((objective + 13.0).abs() < 1e-9, "{objective}");
+            assert!((assignment[y.0] - 3.0).abs() < 1e-9);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------- branch & bound
+
+/// 0-1 knapsack with values (8, 11, 6, 4), weights (5, 7, 4, 3), capacity
+/// 14. Hand enumeration: {b, c, d} fits exactly (7+4+3 = 14) at value 21;
+/// every other feasible subset is worth less.
+fn knapsack_8_11_6_4() -> (Model, Vec<BoolVar>) {
+    let values = [8.0, 11.0, 6.0, 4.0];
+    let weights = [5.0, 7.0, 4.0, 3.0];
+    let mut m = Model::minimize();
+    let vars: Vec<BoolVar> =
+        (0..4).map(|i| m.bool_var(&format!("x{i}"))).collect();
+    let mut w = LinExpr::new();
+    let mut obj = LinExpr::new();
+    for (i, v) in vars.iter().enumerate() {
+        w.add(v.0, weights[i]);
+        obj.add(v.0, -values[i]);
+    }
+    m.constrain(w, Cmp::Le, 14.0);
+    m.set_objective(obj);
+    (m, vars)
+}
+
+#[test]
+fn branch_bound_pins_a_hand_solved_knapsack() {
+    let (m, vars) = knapsack_8_11_6_4();
+    let sol = solve_milp(&m, &BranchBoundOptions::default());
+    assert_eq!(sol.status, SolveStatus::Optimal);
+    assert!((sol.objective + 21.0).abs() < 1e-6, "{}", sol.objective);
+    assert!(sol.lower_bound <= sol.objective + 1e-6);
+    let picks: Vec<bool> =
+        vars.iter().map(|v| sol.assignment[v.0 .0] > 0.5).collect();
+    assert_eq!(picks, vec![false, true, true, true]);
+}
+
+/// 3×3 assignment problem with cost matrix rows (4,2,8), (4,3,7), (3,1,6).
+/// The six permutations cost 13, 12, 12, 12, 13, 14 — optimum 12.
+#[test]
+fn branch_bound_pins_a_hand_solved_assignment() {
+    let cost = [[4.0, 2.0, 8.0], [4.0, 3.0, 7.0], [3.0, 1.0, 6.0]];
+    let mut m = Model::minimize();
+    let mut x = Vec::new();
+    for i in 0..3 {
+        let row: Vec<BoolVar> =
+            (0..3).map(|j| m.bool_var(&format!("x{i}{j}"))).collect();
+        x.push(row);
+    }
+    let mut obj = LinExpr::new();
+    for i in 0..3 {
+        for j in 0..3 {
+            obj.add(x[i][j].0, cost[i][j]);
+        }
+    }
+    m.set_objective(obj);
+    for i in 0..3 {
+        let mut row = LinExpr::new();
+        let mut col = LinExpr::new();
+        for j in 0..3 {
+            row.add(x[i][j].0, 1.0);
+            col.add(x[j][i].0, 1.0);
+        }
+        m.constrain(row, Cmp::Eq, 1.0);
+        m.constrain(col, Cmp::Eq, 1.0);
+    }
+    let sol = solve_milp(&m, &BranchBoundOptions::default());
+    assert_eq!(sol.status, SolveStatus::Optimal);
+    assert!((sol.objective - 12.0).abs() < 1e-6, "{}", sol.objective);
+}
+
+#[test]
+fn branch_bound_reports_infeasible_binary_models() {
+    let mut m = Model::minimize();
+    let a = m.bool_var("a");
+    let b = m.bool_var("b");
+    let mut row = LinExpr::new();
+    row.add(a.0, 1.0).add(b.0, 1.0);
+    m.constrain(row, Cmp::Ge, 3.0);
+    m.set_objective(LinExpr::term(a.0, 1.0));
+    let sol = solve_milp(&m, &BranchBoundOptions::default());
+    assert_eq!(sol.status, SolveStatus::Infeasible);
+    assert!(sol.assignment.is_empty());
+}
+
+/// An exhausted node budget returns the MIP-start incumbent as `Feasible` —
+/// never a hang, never a false `Optimal`.
+#[test]
+fn branch_bound_budget_exhaustion_keeps_the_incumbent() {
+    let (m, _) = knapsack_8_11_6_4();
+    let start = vec![1.0, 0.0, 0.0, 0.0]; // greedy pick: value 8, weight 5
+    let sol = solve_milp(
+        &m,
+        &BranchBoundOptions {
+            node_budget: 0,
+            mip_start: Some(start.clone()),
+            ..BranchBoundOptions::default()
+        },
+    );
+    assert_eq!(sol.status, SolveStatus::Feasible);
+    assert_eq!(sol.nodes, 0);
+    assert!((sol.objective + 8.0).abs() < 1e-6, "{}", sol.objective);
+    assert_eq!(sol.assignment, start);
+}
+
+/// An infeasible MIP start is ignored rather than trusted.
+#[test]
+fn branch_bound_rejects_an_infeasible_mip_start() {
+    let (m, _) = knapsack_8_11_6_4();
+    let sol = solve_milp(
+        &m,
+        &BranchBoundOptions {
+            mip_start: Some(vec![1.0, 1.0, 1.0, 1.0]), // weight 19 > 14
+            ..BranchBoundOptions::default()
+        },
+    );
+    assert_eq!(sol.status, SolveStatus::Optimal);
+    assert!((sol.objective + 21.0).abs() < 1e-6);
+}
+
+/// A zero time budget with no start yields a clean `Unknown`, not a panic
+/// or a bogus answer.
+#[test]
+fn branch_bound_zero_budget_without_start_is_unknown() {
+    let (m, _) = knapsack_8_11_6_4();
+    let sol = solve_milp(
+        &m,
+        &BranchBoundOptions {
+            time_budget: Duration::from_secs(0),
+            node_budget: 0,
+            ..BranchBoundOptions::default()
+        },
+    );
+    assert_eq!(sol.status, SolveStatus::Unknown);
+    assert!(sol.assignment.is_empty());
+}
+
+// ---------------------------------------------------------------- gadgets
+
+/// Drive each boolean gadget through a real MILP solve: force the inputs
+/// with equality constraints, minimize ±out, and check the solved value
+/// equals the gate — the linearizations must pin `out` exactly, not merely
+/// admit it.
+fn solved_gate_value(
+    build: impl Fn(&mut Model, BoolVar, &[BoolVar]),
+    inputs: &[f64],
+    maximize_out: bool,
+) -> f64 {
+    let mut m = Model::minimize();
+    let ins: Vec<BoolVar> = (0..inputs.len())
+        .map(|i| m.bool_var(&format!("v{i}")))
+        .collect();
+    let out = m.bool_var("out");
+    build(&mut m, out, &ins);
+    for (v, &val) in ins.iter().zip(inputs) {
+        m.constrain(LinExpr::term(v.0, 1.0), Cmp::Eq, val);
+    }
+    let sign = if maximize_out { -1.0 } else { 1.0 };
+    m.set_objective(LinExpr::term(out.0, sign));
+    let sol = solve_milp(&m, &BranchBoundOptions::default());
+    assert_eq!(sol.status, SolveStatus::Optimal);
+    sol.assignment[out.0 .0]
+}
+
+#[test]
+fn linearize_or_pins_out_under_milp() {
+    for mask in 0..8u32 {
+        let inputs: Vec<f64> = (0..3).map(|i| ((mask >> i) & 1) as f64).collect();
+        let expect = if mask != 0 { 1.0 } else { 0.0 };
+        for maximize in [false, true] {
+            let got = solved_gate_value(
+                |m, out, ins| linearize_or(m, out, ins),
+                &inputs,
+                maximize,
+            );
+            assert!((got - expect).abs() < 1e-6, "mask {mask:b}, max {maximize}");
+        }
+    }
+}
+
+#[test]
+fn linearize_and_pins_out_under_milp() {
+    for mask in 0..4u32 {
+        let inputs: Vec<f64> = (0..2).map(|i| ((mask >> i) & 1) as f64).collect();
+        let expect = if mask == 3 { 1.0 } else { 0.0 };
+        for maximize in [false, true] {
+            let got = solved_gate_value(
+                |m, out, ins| linearize_and(m, out, ins[0], ins[1]),
+                &inputs,
+                maximize,
+            );
+            assert!((got - expect).abs() < 1e-6, "mask {mask:b}, max {maximize}");
+        }
+    }
+}
+
+#[test]
+fn linearize_and_not_pins_out_under_milp() {
+    for mask in 0..4u32 {
+        let inputs: Vec<f64> = (0..2).map(|i| ((mask >> i) & 1) as f64).collect();
+        let expect = if mask == 1 { 1.0 } else { 0.0 }; // a ∧ ¬b
+        for maximize in [false, true] {
+            let got = solved_gate_value(
+                |m, out, ins| linearize_and_not(m, out, ins[0], ins[1]),
+                &inputs,
+                maximize,
+            );
+            assert!((got - expect).abs() < 1e-6, "mask {mask:b}, max {maximize}");
+        }
+    }
+}
